@@ -1,0 +1,75 @@
+//! The end-to-end driver (DESIGN.md deliverable (b) / EXPERIMENTS.md §E2E):
+//! pretrain a base model, then run the FULL decentralized stack — protocol
+//! (ledger, discovery, signed invites, heartbeats), SHARDCAST relays,
+//! TOPLOC validation, permissionless inference workers over HTTP — for a
+//! real GRPO training run, logging the loss curve and reward trajectory.
+//!
+//!   cargo run --release --example e2e_train -- --rl-steps 12 --workers 3
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::Swarm;
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::{render_table, sparkline};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig {
+        rl_steps: 10,
+        prompts_per_step: 6,
+        group_size: 4,
+        micro_steps: 3,
+        max_new_tokens: 16,
+        pretrain_steps: 120,
+        n_workers: 3,
+        n_relays: 2,
+        ..Default::default()
+    }
+    .apply_args(&args);
+    let pretrain_steps = cfg.pretrain_steps;
+
+    println!("== INTELLECT-2 e2e: decentralized GRPO over a {}-worker swarm ==", cfg.n_workers);
+    let swarm = Swarm::new(cfg.clone())?;
+    println!(
+        "model {} ({} params) | {} relays | group {} x {} prompts/step | async via SHARDCAST",
+        cfg.model,
+        swarm.host.spec().n_params,
+        cfg.n_relays,
+        cfg.group_size,
+        cfg.prompts_per_step
+    );
+    let t0 = std::time::Instant::now();
+    let result = swarm.run(pretrain_steps, false)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let curve = |name: &str| -> Vec<f64> {
+        result.series.get(name).iter().map(|x| x.1).collect()
+    };
+    let pre = curve("pretrain_loss");
+    let reward = curve("task_reward");
+    println!("\npretrain loss   {}  {:.3} -> {:.3}", sparkline(&pre), pre.first().unwrap_or(&0.0), pre.last().unwrap_or(&0.0));
+    println!("task reward     {}  {:.3} -> {:.3}", sparkline(&reward), reward.first().unwrap_or(&0.0), reward.last().unwrap_or(&0.0));
+
+    let rows: Vec<Vec<String>> = result
+        .step_timings
+        .iter()
+        .enumerate()
+        .map(|(i, (b, w, t))| {
+            vec![i.to_string(), format!("{b:.2}"), format!("{w:.2}"), format!("{t:.2}")]
+        })
+        .collect();
+    println!("\n{}", render_table(&["step", "broadcast_s", "batch_wait_s", "train_s"], &rows));
+
+    println!(
+        "submissions: {} received, {} accepted, {} rejected | rollouts verified: {} | tokens decoded: {} | slashed: {} | wall {wall:.0}s",
+        result.stats.submissions_received.get(),
+        result.stats.submissions_accepted.get(),
+        result.stats.submissions_rejected.get(),
+        result.stats.rollouts_verified.get(),
+        result.stats.decode_tokens.get(),
+        result.stats.nodes_slashed.get(),
+    );
+    assert!(result.ledger.verify_chain(), "ledger audit failed");
+    result.series.save("runs/e2e_train.jsonl")?;
+    println!("series written to runs/e2e_train.jsonl");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Length-controlled reasoning (paper §3.1.2): train with the discrete
+//! thinking-budget rewards (TARGET-SHORT analogue) and show the length
+//! penalty trending down while task reward climbs.
+//!
+//!   cargo run --release --example length_control -- --rl-steps 12
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::SyncPipeline;
+use intellect2::rl::reward::RewardConfig;
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::sparkline;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig {
+        rl_steps: 10,
+        pretrain_steps: 80,
+        prompts_per_step: 4,
+        group_size: 4,
+        micro_steps: 2,
+        max_new_tokens: 72,
+        reward: RewardConfig::target_short(),
+        ..Default::default()
+    }
+    .apply_args(&args);
+
+    println!(
+        "== length control: targets {:?}, alpha {} ==",
+        cfg.reward.targets, cfg.reward.alpha
+    );
+    let pipeline = SyncPipeline::new(cfg.clone())?;
+    let state = pipeline.bootstrap()?;
+    let _state = pipeline.run_rl(state, cfg.rl_steps, "", false)?;
+
+    for name in ["task_reward", "length_penalty", "completion_len"] {
+        let xs: Vec<f64> = pipeline.series.smoothed(name, 3).iter().map(|x| x.1).collect();
+        println!(
+            "{name:<16} {}  {:.3} -> {:.3}",
+            sparkline(&xs),
+            xs.first().unwrap_or(&0.0),
+            xs.last().unwrap_or(&0.0)
+        );
+    }
+    pipeline.series.save("runs/length_control.jsonl")?;
+    println!("series written to runs/length_control.jsonl");
+    Ok(())
+}

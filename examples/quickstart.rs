@@ -1,0 +1,67 @@
+//! Quickstart: the smallest end-to-end tour of the stack — load the AOT
+//! artifacts, pretrain a base model, run a few GRPO steps (deterministic
+//! async-2 pipeline), evaluate on a held-out suite.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::SyncPipeline;
+use intellect2::tasks::eval::Suite;
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::sparkline;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig {
+        rl_steps: 8,
+        pretrain_steps: 60,
+        prompts_per_step: 4,
+        group_size: 4,
+        micro_steps: 2,
+        max_new_tokens: 16,
+        ..Default::default()
+    }
+    .apply_args(&args);
+
+    println!("== INTELLECT-2 quickstart ({} model, async-{}) ==", cfg.model, cfg.async_level);
+    let pipeline = SyncPipeline::new(cfg.clone())?;
+    println!(
+        "dataset: {} math + {} code tasks | model: {} params",
+        pipeline.dataset.count_kind(intellect2::tasks::TaskKind::Math),
+        pipeline.dataset.count_kind(intellect2::tasks::TaskKind::Code),
+        pipeline.host.spec().n_params,
+    );
+
+    println!("\n-- pretraining base model ({} steps) --", cfg.pretrain_steps);
+    let state = pipeline.bootstrap()?;
+    let pre = pipeline.series.get("pretrain_loss");
+    println!(
+        "loss {:.3} -> {:.3}  {}",
+        pre.first().map(|x| x.1).unwrap_or(0.0),
+        pre.last().map(|x| x.1).unwrap_or(0.0),
+        sparkline(&pre.iter().map(|x| x.1).collect::<Vec<_>>())
+    );
+
+    let base = Arc::new(state.params.clone());
+    println!("\n-- GRPO reinforcement learning ({} steps) --", cfg.rl_steps);
+    let state = pipeline.run_rl(state, cfg.rl_steps, "", false)?;
+    let rewards = pipeline.series.get("task_reward");
+    println!(
+        "task reward {:.3} -> {:.3}  {}",
+        rewards.first().map(|x| x.1).unwrap_or(0.0),
+        rewards.last().map(|x| x.1).unwrap_or(0.0),
+        sparkline(&rewards.iter().map(|x| x.1).collect::<Vec<_>>())
+    );
+
+    println!("\n-- held-out evaluation (MATH-HARD suite) --");
+    let tuned = Arc::new(state.params.clone());
+    let before = pipeline.evaluate_suite(&base, Suite::MathHard, 16)?;
+    let after = pipeline.evaluate_suite(&tuned, Suite::MathHard, 16)?;
+    println!("base: {before:.1}%   RL-trained: {after:.1}%");
+
+    pipeline.series.save("runs/quickstart.jsonl")?;
+    println!("\nseries written to runs/quickstart.jsonl");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Protocol + trust demo: a permissionless swarm with one adversarial
+//! worker. Shows discovery -> signed invite -> heartbeats, SHARDCAST
+//! distribution, and TOPLOC catching the cheater (reward tampering),
+//! slashing it on the ledger and evicting it from the pool.
+//!
+//!   cargo run --release --example swarm_demo
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::Swarm;
+use intellect2::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig {
+        rl_steps: 3,
+        prompts_per_step: 3,
+        group_size: 3,
+        micro_steps: 1,
+        max_new_tokens: 12,
+        pretrain_steps: 40,
+        n_workers: 2,
+        n_relays: 2,
+        ..Default::default()
+    }
+    .apply_args(&args);
+
+    println!("== swarm demo: 2 honest workers + 1 reward-tampering worker ==");
+    let swarm = Swarm::new(cfg)?;
+    let result = swarm.run(40, /*evil_worker=*/ true)?;
+
+    println!("\nledger audit: chain valid = {}", result.ledger.verify_chain());
+    println!("entries on ledger: {}", result.ledger.len());
+    let slashed: Vec<String> = result
+        .ledger
+        .entries()
+        .iter()
+        .filter_map(|e| match &e.tx {
+            intellect2::protocol::Tx::Slash { node, reason, .. } => {
+                Some(format!("  node {node:#x} slashed: {reason}"))
+            }
+            _ => None,
+        })
+        .collect();
+    println!("slash events ({}):", slashed.len());
+    for s in &slashed {
+        println!("{s}");
+    }
+    assert!(
+        result.stats.nodes_slashed.get() >= 1,
+        "the adversarial worker should have been slashed"
+    );
+    println!(
+        "\nhonest pipeline unaffected: {} rollouts verified, {} submissions rejected",
+        result.stats.rollouts_verified.get(),
+        result.stats.submissions_rejected.get()
+    );
+    Ok(())
+}

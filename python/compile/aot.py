@@ -1,0 +1,226 @@
+"""AOT entrypoint: lower every L2 computation to HLO text + emit spec.json.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg):
+    return [_spec(s) for _, s in cfg.param_specs()]
+
+
+def _sig(names_shapes):
+    return [
+        {"name": n, "shape": list(s), "dtype": d}
+        for (n, s, d) in names_shapes
+    ]
+
+
+def artifact_defs(cfg: C.ModelConfig):
+    """(name, fn, example_args, input_signature, output_signature) tuples."""
+    bt, bi, t, v, d = (cfg.batch_train, cfg.batch_infer, cfg.max_seq,
+                       cfg.vocab, cfg.d_model)
+    pspecs = _param_specs(cfg)
+    pnames = [n for n, _ in cfg.param_specs()]
+    psig = [(f"param:{n}", s, "f32") for n, s in cfg.param_specs()]
+    msig = [(f"adam_m:{n}", s, "f32") for n, s in cfg.param_specs()]
+    vsig = [(f"adam_v:{n}", s, "f32") for n, s in cfg.param_specs()]
+
+    defs = []
+
+    # --- init ---
+    defs.append((
+        "init",
+        lambda seed: tuple(M.init_params(cfg, seed)),
+        [_spec((), jnp.uint32)],
+        _sig([("seed", (), "u32")]),
+        _sig(psig),
+    ))
+
+    # --- pretrain_step ---
+    def pre_fn(*args):
+        n = len(pspecs)
+        params, m, v_ = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        step, tokens, segs, hp = args[3 * n:]
+        return M.pretrain_step(cfg, list(params), list(m), list(v_), step,
+                               tokens, segs, hp)
+
+    pre_args = (pspecs * 3) + [
+        _spec(()), _spec((bt, t), jnp.int32), _spec((bt, t), jnp.int32),
+        _spec((C.PRETRAIN_HP_LEN,)),
+    ]
+    defs.append((
+        "pretrain_step", pre_fn, pre_args,
+        _sig(psig + msig + vsig + [
+            ("step", (), "f32"), ("tokens", (bt, t), "i32"),
+            ("segs", (bt, t), "i32"), ("hp", (C.PRETRAIN_HP_LEN,), "f32"),
+        ]),
+        _sig(psig + msig + vsig + [("loss", (), "f32"), ("gnorm", (), "f32")]),
+    ))
+
+    # --- grpo_step (+ fault-injected variant for Fig 11) ---
+    def grpo_fn(faulty, *args):
+        n = len(pspecs)
+        params, m, v_ = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        step, tokens, segs, loss_mask, adv, old_lp, hp = args[3 * n:]
+        return M.grpo_step(cfg, list(params), list(m), list(v_), step, tokens,
+                           segs, loss_mask, adv, old_lp, hp, faulty=faulty)
+
+    grpo_args = (pspecs * 3) + [
+        _spec(()), _spec((bt, t), jnp.int32), _spec((bt, t), jnp.int32),
+        _spec((bt, t)), _spec((bt, t)), _spec((bt, t)), _spec((C.HP_LEN,)),
+    ]
+    grpo_in = _sig(psig + msig + vsig + [
+        ("step", (), "f32"), ("tokens", (bt, t), "i32"),
+        ("segs", (bt, t), "i32"), ("loss_mask", (bt, t), "f32"),
+        ("advantages", (bt, t), "f32"), ("old_logprobs", (bt, t), "f32"),
+        ("hp", (C.HP_LEN,), "f32"),
+    ])
+    grpo_out = _sig(psig + msig + vsig + [("metrics", (7,), "f32")])
+    defs.append(("grpo_step", functools.partial(grpo_fn, False), grpo_args,
+                 grpo_in, grpo_out))
+    if cfg.name == "nano":
+        defs.append(("grpo_step_faulty", functools.partial(grpo_fn, True),
+                     grpo_args, grpo_in, grpo_out))
+
+    # --- logprobs ---
+    def lp_fn(*args):
+        n = len(pspecs)
+        params = list(args[:n])
+        tokens, segs = args[n:]
+        lp, ent, valid = M.token_logprobs(cfg, params, tokens, segs)
+        return lp, ent, valid.astype(jnp.float32)
+
+    defs.append((
+        "logprobs", lp_fn,
+        pspecs + [_spec((bt, t), jnp.int32), _spec((bt, t), jnp.int32)],
+        _sig(psig + [("tokens", (bt, t), "i32"), ("segs", (bt, t), "i32")]),
+        _sig([("logprobs", (bt, t), "f32"), ("entropy", (bt, t), "f32"),
+              ("valid", (bt, t), "f32")]),
+    ))
+
+    # --- prefill (validator; inference-batch shaped) ---
+    def prefill_fn(*args):
+        n = len(pspecs)
+        params = list(args[:n])
+        (tokens,) = args[n:]
+        return M.prefill(cfg, params, tokens)
+
+    defs.append((
+        "prefill", prefill_fn,
+        pspecs + [_spec((bi, t), jnp.int32)],
+        _sig(psig + [("tokens", (bi, t), "i32")]),
+        _sig([("logits", (bi, t, v), "f32"), ("hidden", (bi, t, d), "f32")]),
+    ))
+
+    # --- decode_step ---
+    def dec_fn(*args):
+        n = len(pspecs)
+        params = list(args[:n])
+        kv, tok, pos = args[n:]
+        return M.decode_step(cfg, params, kv, tok, pos)
+
+    kvs = M.kv_shape(cfg)
+    defs.append((
+        "decode_step", dec_fn,
+        pspecs + [_spec(kvs), _spec((bi,), jnp.int32), _spec((), jnp.int32)],
+        _sig(psig + [("kv", kvs, "f32"), ("tok", (bi,), "i32"),
+                     ("pos", (), "i32")]),
+        _sig([("logits", (bi, v), "f32"), ("hidden", (bi, d), "f32"),
+              ("kv", kvs, "f32")]),
+    ))
+
+    # --- standalone Pallas attention demo (composability proof) ---
+    if cfg.name == "nano":
+        qs = (2, cfg.n_heads, t, cfg.d_head)
+        defs.append((
+            "attn_demo",
+            lambda q, k, v_: (M.attn_demo(cfg, q, k, v_),),
+            [_spec(qs)] * 3,
+            _sig([("q", qs, "f32"), ("k", qs, "f32"), ("v", qs, "f32")]),
+            _sig([("out", qs, "f32")]),
+        ))
+
+    return defs
+
+
+def lower_size(cfg: C.ModelConfig, out_dir: str, skip_existing: bool):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": cfg.to_dict(),
+        "n_params": cfg.n_params(),
+        "param_specs": [{"name": n, "shape": list(s)}
+                        for n, s in cfg.param_specs()],
+        "special_tokens": {"pad": C.PAD_ID, "bos": C.BOS_ID, "eos": C.EOS_ID},
+        "adam": {"b1": C.ADAM_B1, "b2": C.ADAM_B2, "eps": C.ADAM_EPS},
+        "hp_layout": ["lr", "grad_clip", "eps", "delta", "kl_coef",
+                      "ent_coef", "reserved0", "reserved1"],
+        "toploc": {"interval": C.TOPLOC_INTERVAL, "topk": C.TOPLOC_TOPK},
+        "metrics_layout": ["loss", "gnorm", "clipfrac", "entropy", "kl",
+                           "ratio_max", "obj_mean"],
+        "artifacts": {},
+    }
+    for name, fn, args, in_sig, out_sig in artifact_defs(cfg):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt", "inputs": in_sig, "outputs": out_sig,
+        }
+        if skip_existing and os.path.exists(path):
+            print(f"  [skip] {cfg.name}/{name}")
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok] {cfg.name}/{name}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+    with open(os.path.join(out_dir, "spec.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="nano,micro,small")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    for size in args.sizes.split(","):
+        cfg = C.SIZES[size]
+        print(f"[aot] lowering {size} "
+              f"({cfg.n_params() / 1e6:.2f}M params)")
+        lower_size(cfg, os.path.join(args.out_dir, size), args.skip_existing)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Model/compile-time configuration shared across L1/L2 and exported to L3.
+
+The Rust coordinator never imports this; `aot.py` serializes every field it
+needs into `artifacts/<size>/spec.json`.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+# Token vocabulary. The authoritative tokenizer lives in the Rust layer
+# (rust/src/data/tokenizer.rs); python only needs the size and the ids of
+# the special tokens used inside lowered computations.
+VOCAB_SIZE = 64
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+
+@dataclass
+class ModelConfig:
+    """GPT-style decoder-only transformer (pre-LN, tied embeddings)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    max_seq: int = 256
+    vocab: int = VOCAB_SIZE
+    # Static batch shapes baked into the AOT artifacts.
+    batch_train: int = 8
+    batch_infer: int = 16
+    # L1 kernel block schedule (see DESIGN.md §Perf / EXPERIMENTS.md §Perf).
+    grpo_block_rows: int = 8
+    attn_block_q: int = 64
+    attn_block_k: int = 128
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_specs(self):
+        """Flat parameter list: (name, shape) in the canonical order used by
+        every lowered artifact and by the Rust ParamStore."""
+        d, v, t = self.d_model, self.vocab, self.max_seq
+        specs = [("tok_emb", (v, d)), ("pos_emb", (t, d))]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            specs += [
+                (p + "ln1_g", (d,)),
+                (p + "ln1_b", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2_g", (d,)),
+                (p + "ln2_b", (d,)),
+                (p + "w1", (d, 4 * d)),
+                (p + "b1", (4 * d,)),
+                (p + "w2", (4 * d, d)),
+                (p + "b2", (d,)),
+            ]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+        return specs
+
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_specs():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# Size registry. The paper trains a 32 B model on an H100 cluster plus a
+# permissionless GPU swarm; on this 1-CPU testbed we reproduce the *system*
+# with scaled-down models (DESIGN.md §Hardware-Adaptation). `xl` documents
+# the 100M-class configuration; it lowers fine but is not run by default.
+SIZES = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=2),
+    "micro": ModelConfig("micro", d_model=128, n_layers=4, n_heads=4),
+    "small": ModelConfig("small", d_model=192, n_layers=6, n_heads=6, batch_train=4, batch_infer=8),
+    "medium": ModelConfig("medium", d_model=320, n_layers=8, n_heads=8, batch_train=4, batch_infer=8),
+    "xl": ModelConfig("xl", d_model=768, n_layers=12, n_heads=12, batch_train=2, batch_infer=4),
+}
+
+# Adam hyperparameters baked into the lowered optimizer (paper §4.1 uses
+# standard Adam; lr / grad-clip / GRPO hps stay *runtime inputs*).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+# Runtime-supplied hyperparameter vector layout for grpo_step (f32[8]):
+#   [0] lr  [1] grad_clip  [2] eps (GRPO clip)  [3] delta (two-sided cap)
+#   [4] kl_coef  [5] ent_coef  [6..7] reserved
+HP_LEN = 8
+# pretrain_step hp vector (f32[2]): [0] lr  [1] grad_clip
+PRETRAIN_HP_LEN = 2
+
+# TOPLOC commitment interval in tokens (paper §2.1.2: hash every 32 tokens).
+TOPLOC_INTERVAL = 32
+TOPLOC_TOPK = 8

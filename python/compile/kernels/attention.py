@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: blocked causal multi-head attention (flash-style).
+
+This is the TPU re-think of the paper's GPU inference hot path (vLLM paged
+attention / FlashAttention on the rollout workers): instead of threadblocks
+and shared memory, the HBM<->VMEM schedule is expressed with BlockSpecs — a
+(block_q, d_head) query tile streams against (block_k, d_head) KV tiles with
+an online-softmax accumulator carried in registers/VMEM.
+
+VMEM budget per grid step (DESIGN.md §Hardware-Adaptation):
+  q tile      block_q * d_head * 4 B
+  k/v tiles   2 * T * d_head * 4 B        (full-T resident at T=256; for
+                                            longer T shrink the KV BlockSpec)
+  accumulator block_q * d_head * 4 B
+At the default nano/micro shapes this is < 200 KiB, i.e. deeply
+double-bufferable against the ~16 MiB VMEM of a TPU core.
+
+interpret=True (CPU PJRT cannot run Mosaic); validated against
+kernels/ref.py:attention_ref by pytest, including a lowered-artifact round
+trip executed from Rust (rust/tests/runtime_attn.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int,
+                 causal: bool):
+    block_q, d_head = q_ref.shape
+    qblk = pl.program_id(1)
+    q = q_ref[...] * (1.0 / jnp.sqrt(jnp.asarray(d_head, jnp.float32)))
+    q_idx = qblk * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    n_kblocks = seq_len // block_k
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (pl.dslice(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(i * block_k, block_k), slice(None)))
+        s = q @ k.T  # [block_q, block_k]
+        if causal:
+            k_idx = i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d_head), jnp.float32)
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_kblocks, body, (acc0, m0, l0))
+    o_ref[...] = acc / jnp.maximum(l_i, 1e-30)
+
+
+def mha(q, k, v, *, block_q: int = 64, block_k: int = 128, causal: bool = True):
+    """Blocked causal attention. q,k,v: [B, H, T, Dh] (f32). Returns [B,H,T,Dh].
+
+    T must be divisible by block_q and block_k (pad upstream if not).
+    """
+    b, h, t, dh = q.shape
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    qf = q.reshape(b * h, t, dh).astype(jnp.float32)
+    kf = k.reshape(b * h, t, dh).astype(jnp.float32)
+    vf = v.reshape(b * h, t, dh).astype(jnp.float32)
+
+    grid = (b * h, t // block_q)
+    kern = functools.partial(_attn_kernel, block_k=block_k, seq_len=t,
+                             causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((None, t, dh), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh).astype(q.dtype)

@@ -1,0 +1,322 @@
+"""L2: the policy model and its training/inference computations, in JAX.
+
+Everything in this file is *build-time only*: `aot.py` lowers the jitted
+entrypoints to HLO text once, and the Rust coordinator executes the artifacts
+via PJRT. No Python runs on any request or training path.
+
+Computations exported (see aot.py / DESIGN.md for the artifact table):
+  init_params     seed -> params
+  pretrain_step   next-token CE + Adam (e2e pretraining of the base model)
+  grpo_step       the paper's GRPO recipe: token-level two-sided-clip loss
+                  (L1 Pallas kernel), KL + entropy aux losses, global-norm
+                  gradient clipping, Adam — one fused optimizer step
+  logprobs        per-token logprobs + entropy under the current policy
+                  (the trainer recomputes old_lp at optimization start,
+                  paper §2.1.1)
+  prefill         full-sequence logits + final hidden states (TOPLOC
+                  validator prefill, sampling checks)
+  decode_step     single-token KV-cache decode (rollout generation)
+
+Sequence packing (paper §4.1): every train-path computation takes a
+`segs [B,T] i32` array; attention is block-diagonal over segments
+(seg id 0 = padding), which is exactly the paper's "adapting the attention
+mask and collating samples into the sequence dimension".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .kernels import grpo_loss
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def unflatten(cfg: C.ModelConfig, flat):
+    """Flat list (canonical order, cfg.param_specs) -> name->array dict."""
+    specs = cfg.param_specs()
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: x for (name, _), x in zip(specs, flat)}
+
+
+def init_params(cfg: C.ModelConfig, seed):
+    """Deterministic init from a u32 seed (lowered into init.hlo.txt)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    resid_scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        k = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            x = jnp.ones(shape, jnp.float32)
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            x = jnp.zeros(shape, jnp.float32)
+        elif base in ("wo", "w2"):
+            x = jax.random.normal(k, shape, jnp.float32) * resid_scale
+        elif base == "pos_emb":
+            x = jax.random.normal(k, shape, jnp.float32) * 0.01
+        else:
+            x = jax.random.normal(k, shape, jnp.float32) * 0.02
+        out.append(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward(cfg: C.ModelConfig, flat_params, tokens, segs,
+            use_pallas_attention: bool = False):
+    """Returns (logits [B,T,V], hidden [B,T,D]).
+
+    Attention mask: causal AND same-segment (block-diagonal packing mask).
+    seg id 0 marks padding: those keys are masked out everywhere.
+    """
+    p = unflatten(cfg, flat_params)
+    b, t = tokens.shape
+    # Position ids reset at every segment boundary so a packed sample sees
+    # the same positions it would unpacked (paper §4.1 packing integrity).
+    t_idx = jnp.arange(t, dtype=jnp.int32)
+    change = jnp.concatenate(
+        [jnp.ones((b, 1), bool), segs[:, 1:] != segs[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(
+        jnp.where(change, t_idx[None, :], 0), axis=1)
+    pos = t_idx[None, :] - seg_start
+    x = p["tok_emb"][tokens] + p["pos_emb"][pos]
+
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    same_seg = (segs[:, :, None] == segs[:, None, :]) & (segs[:, None, :] != 0)
+    mask = causal[None] & same_seg  # [B,T,T]
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        q = _heads(h @ p[pre + "wq"], cfg.n_heads)
+        k = _heads(h @ p[pre + "wk"], cfg.n_heads)
+        v = _heads(h @ p[pre + "wv"], cfg.n_heads)
+        if use_pallas_attention:
+            # Packing mask unsupported in the blocked kernel: callers lower
+            # this variant only for unpacked (single-segment) batches.
+            from .kernels import attention as attn_k
+            o = attn_k.mha(q, k, v, block_q=cfg.attn_block_q,
+                           block_k=cfg.attn_block_k)
+        else:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+            s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+            s = jnp.where(mask[:, None], s, neg)
+            o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, axis=-1), v)
+        x = x + _unheads(o) @ p[pre + "wo"]
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        h = jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + h @ p[pre + "w2"] + p[pre + "b2"]
+
+    hidden = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = hidden @ p["tok_emb"].T  # tied embeddings
+    return logits, hidden
+
+
+def token_logprobs(cfg, flat_params, tokens, segs):
+    """lp[b,t] = log p(tokens[t] | tokens[<t]) for t>=1 (0 at t=0), plus the
+    per-position predictive entropy (aligned like lp) and validity mask."""
+    logits, _ = forward(cfg, flat_params, tokens, segs)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predicts t=1..T-1
+    tgt = tokens[:, 1:]
+    lp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    probs = jnp.exp(logp)
+    ent = -jnp.sum(probs * logp, axis=-1)
+    zero = jnp.zeros((tokens.shape[0], 1), jnp.float32)
+    lp = jnp.concatenate([zero, lp], axis=1)
+    ent = jnp.concatenate([zero, ent], axis=1)
+    valid = (segs[:, 1:] != 0) & (segs[:, 1:] == segs[:, :-1])
+    valid = jnp.concatenate([jnp.zeros_like(zero, bool), valid], axis=1)
+    return lp, ent, valid
+
+
+# ---------------------------------------------------------------------------
+# Adam + gradient clipping
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+
+
+def adam_update(params, m, v, grads, step, lr, grad_clip):
+    """Global-norm clip (paper §3.5: aggressive thresholds 0.05-0.1) + Adam."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+    t = step + 1.0
+    bc1 = 1.0 - C.ADAM_B1 ** t
+    bc2 = 1.0 - C.ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for pp, mm, vv, gg in zip(params, m, v, grads):
+        gg = gg * scale
+        mm = C.ADAM_B1 * mm + (1.0 - C.ADAM_B1) * gg
+        vv = C.ADAM_B2 * vv + (1.0 - C.ADAM_B2) * gg * gg
+        upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + C.ADAM_EPS)
+        new_p.append(pp - lr * upd)
+        new_m.append(mm)
+        new_v.append(vv)
+    return new_p, new_m, new_v, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Pretraining step (next-token CE)
+
+
+def pretrain_step(cfg, params, m, v, step, tokens, segs, hp):
+    """hp: f32[2] = [lr, grad_clip]. Returns (params', m', v', loss, gnorm)."""
+
+    def loss_fn(ps):
+        lp, _, valid = token_logprobs(cfg, ps, tokens, segs)
+        w = valid.astype(jnp.float32)
+        return -jnp.sum(lp * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_p, new_m, new_v, gnorm = adam_update(
+        params, m, v, grads, step, hp[0], hp[1])
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, gnorm)
+
+
+# ---------------------------------------------------------------------------
+# GRPO step (the paper's recipe, §3.4 + §4.1)
+
+
+def grpo_step(cfg, params, m, v, step, tokens, segs, loss_mask, adv, old_lp,
+              hp, faulty: bool = False):
+    """One fused GRPO optimizer micro-step.
+
+    tokens/segs/loss_mask/adv/old_lp: [B,T] (packed rollouts; adv already
+    broadcast per-token by the Rust batcher). hp: f32[8], see config.HP_LEN.
+
+    Loss = -(token-level two-sided-clip objective)            (Pallas kernel)
+           + kl_coef * KL(pi_theta || pi_old)  (k3 estimator)
+           - ent_coef * entropy
+    Token-level normalization (DAPO / Dr. GRPO): sum over tokens / n_tokens,
+    not per-sample means.
+
+    Returns params' + m' + v' + metrics f32[7]:
+      [loss, gnorm, clipfrac, entropy, kl, ratio_max, obj_mean]
+    """
+    lr, grad_clip = hp[0], hp[1]
+    eps, delta = hp[2], hp[3]
+    kl_coef, ent_coef = hp[4], hp[5]
+    wsum = jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+    def loss_fn(ps):
+        lp, ent, _ = token_logprobs(cfg, ps, tokens, segs)
+        obj = grpo_loss.grpo_objective(
+            lp, old_lp, adv, loss_mask, eps, delta,
+            block_rows=cfg.grpo_block_rows, faulty=faulty)
+        pg_loss = -jnp.sum(obj) / wsum
+        # k3 KL estimator vs the rollout policy (paper adds an auxiliary KL).
+        logr = (old_lp - lp) * loss_mask
+        kl = jnp.sum((jnp.exp(logr) - 1.0 - logr) * loss_mask) / wsum
+        ent_mean = jnp.sum(ent * loss_mask) / wsum
+        total = pg_loss + kl_coef * kl - ent_coef * ent_mean
+        return total, (lp, kl, ent_mean)
+
+    (loss, (lp, kl, ent_mean)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v, gnorm = adam_update(
+        params, m, v, grads, step, lr, grad_clip)
+
+    obj, clip_ind, ratio = grpo_loss.grpo_stats(
+        lp, old_lp, adv, loss_mask, eps, delta,
+        block_rows=cfg.grpo_block_rows)
+    clipfrac = jnp.sum(clip_ind) / wsum
+    ratio_max = jnp.max(ratio)
+    obj_mean = jnp.sum(obj) / wsum
+    metrics = jnp.stack([loss, gnorm, clipfrac, ent_mean, kl, ratio_max,
+                         obj_mean])
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (metrics,)
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill + single-token KV-cache decode
+
+
+def prefill(cfg, params, tokens):
+    """Unpacked full-sequence forward for the TOPLOC validator: logits +
+    final hidden states for every position. PAD (id 0) tokens are masked."""
+    segs = (tokens != C.PAD_ID).astype(jnp.int32)
+    logits, hidden = forward(cfg, params, tokens, segs)
+    return logits, hidden
+
+
+def kv_shape(cfg):
+    return (cfg.n_layers, 2, cfg.batch_infer, cfg.max_seq, cfg.d_model)
+
+
+def decode_step(cfg, flat_params, kv, tok, pos):
+    """One autoregressive step with a KV cache.
+
+    kv: f32[L,2,B,T,D]; tok: i32[B] (token at position `pos`); pos: i32 scalar.
+    Returns (logits [B,V], hidden [B,D], kv').
+
+    The Rust SampleEngine feeds PJRT buffers back in without host round trips
+    (runtime/engine.rs), so the cache never leaves the device.
+    """
+    p = unflatten(cfg, flat_params)
+    b = tok.shape[0]
+    t = cfg.max_seq
+    x = p["tok_emb"][tok] + jnp.take(p["pos_emb"], pos, axis=0)[None, :]
+
+    pos_mask = (jnp.arange(t) <= pos)[None, None, :]  # [1,1,T]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        q = h @ p[pre + "wq"]  # [B,D]
+        k = h @ p[pre + "wk"]
+        vv = h @ p[pre + "wv"]
+        kv = jax.lax.dynamic_update_slice(
+            kv, k[None, None, :, None, :], (i, 0, 0, pos, 0))
+        kv = jax.lax.dynamic_update_slice(
+            kv, vv[None, None, :, None, :], (i, 1, 0, pos, 0))
+        keys = kv[i, 0]  # [B,T,D]
+        vals = kv[i, 1]
+        qh = q.reshape(b, cfg.n_heads, cfg.d_head)
+        kh = keys.reshape(b, t, cfg.n_heads, cfg.d_head)
+        vh = vals.reshape(b, t, cfg.n_heads, cfg.d_head)
+        s = jnp.einsum("bhd,bthd->bht", qh, kh) * scale
+        s = jnp.where(pos_mask, s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bht,bthd->bhd", probs, vh).reshape(b, cfg.d_model)
+        x = x + o @ p[pre + "wo"]
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        h = jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + h @ p[pre + "w2"] + p[pre + "b2"]
+
+    hidden = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = hidden @ p["tok_emb"].T
+    return logits, hidden, kv
+
+
+def attn_demo(cfg, q, k, v):
+    """Standalone lowering of the Pallas attention kernel (composability
+    proof executed from Rust; see rust/tests/runtime_attn.rs)."""
+    from .kernels import attention as attn_k
+    return attn_k.mha(q, k, v, block_q=cfg.attn_block_q,
+                      block_k=cfg.attn_block_k)

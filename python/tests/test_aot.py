@@ -1,0 +1,59 @@
+"""AOT pipeline: lowering produces parseable HLO text and a consistent
+spec.json; the artifact signatures match what the Rust runtime will bind."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, config as C
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_defs_cover_all_entrypoints():
+    names = {d[0] for d in aot.artifact_defs(C.SIZES["nano"])}
+    assert {"init", "pretrain_step", "grpo_step", "grpo_step_faulty",
+            "logprobs", "prefill", "decode_step", "attn_demo"} <= names
+    micro = {d[0] for d in aot.artifact_defs(C.SIZES["micro"])}
+    assert "grpo_step_faulty" not in micro  # fault variant is nano-only
+
+
+def test_signatures_are_complete():
+    cfg = C.SIZES["nano"]
+    n = len(cfg.param_specs())
+    for name, fn, args, in_sig, out_sig in aot.artifact_defs(cfg):
+        assert len(in_sig) == len(args), name
+        for entry in in_sig + out_sig:
+            assert set(entry) == {"name", "shape", "dtype"}
+        if name in ("pretrain_step", "grpo_step", "grpo_step_faulty"):
+            assert len(in_sig) > 3 * n
+            assert [e["name"] for e in out_sig[:n]] == \
+                   [f"param:{pn}" for pn, _ in cfg.param_specs()]
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "nano")),
+                    reason="run `make artifacts` first")
+def test_emitted_artifacts_match_spec():
+    with open(os.path.join(ART, "nano", "spec.json")) as f:
+        spec = json.load(f)
+    assert spec["model"]["name"] == "nano"
+    assert spec["toploc"] == {"interval": 32, "topk": 8}
+    assert spec["hp_layout"][2:4] == ["eps", "delta"]
+    for name, meta in spec["artifacts"].items():
+        path = os.path.join(ART, "nano", meta["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, name
+
+
+def test_hlo_text_is_reparseable():
+    """Round-trip the smallest artifact through the HLO text emitter."""
+    import jax
+    cfg = C.SIZES["nano"]
+    defs = {d[0]: d for d in aot.artifact_defs(cfg)}
+    name, fn, args, _, _ = defs["logprobs"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule")
+    assert "ROOT" in text

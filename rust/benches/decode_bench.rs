@@ -1,0 +1,57 @@
+//! Rollout-generation throughput (the inference-worker hot path): batched
+//! KV-cache decode tokens/sec, plus prefill latency for the validator.
+//!
+//!   cargo bench --bench decode_bench
+
+use std::sync::Arc;
+
+use intellect2::runtime::{EngineHost, GenOpts, Runtime};
+use intellect2::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    for size in ["nano", "micro"] {
+        if !Runtime::artifacts_dir(size).join("spec.json").exists() {
+            eprintln!("skipping {size}: run `make artifacts`");
+            continue;
+        }
+        let host = Arc::new(EngineHost::spawn_size(size)?);
+        let spec = host.spec().clone();
+        let params = Arc::new(host.init_params(1)?);
+        let b = Bencher::quick();
+
+        for batch in [1usize, 4, spec.batch_infer] {
+            let prompts: Vec<Vec<i32>> = (0..batch)
+                .map(|i| {
+                    let mut p = vec![1i32];
+                    p.extend((0..8).map(|j| 3 + ((i + j) % 10) as i32));
+                    p
+                })
+                .collect();
+            let max_new = 48;
+            let opts = GenOpts { max_new, temperature: 1.0, commit_interval: 32 };
+            let mut produced = 0usize;
+            let r = b.run(&format!("{size}: generate B={batch} x {max_new} new tokens"), || {
+                let gens =
+                    host.generate(Arc::clone(&params), prompts.clone(), opts, 7).unwrap();
+                produced = gens.iter().map(|g| g.completion_len()).sum();
+            });
+            println!(
+                "  -> {:.0} tokens/s (batch {batch})",
+                produced as f64 / (r.mean_ns / 1e9)
+            );
+        }
+
+        // Validator prefill (full [B,T] in one call).
+        let padded = vec![spec.pad_id; spec.batch_infer * spec.max_seq];
+        let toks = (spec.batch_infer * spec.max_seq) as f64;
+        b.run_throughput(
+            &format!("{size}: prefill B={} T={}", spec.batch_infer, spec.max_seq),
+            toks,
+            "tok",
+            || {
+                host.prefill(Arc::clone(&params), padded.clone()).unwrap();
+            },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! GRPO trainer-step latency end-to-end (the L2/L1 hot path as executed by
+//! the L3 trainer): packed micro-batch GRPO step, logprobs recompute, and
+//! the pretrain step, per model size.
+//!
+//!   cargo bench --bench grpo_bench
+
+use std::sync::Arc;
+
+use intellect2::runtime::{EngineHost, GrpoHp, MicroBatch, Runtime};
+use intellect2::util::bench::Bencher;
+use intellect2::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    for size in ["nano", "micro"] {
+        if !Runtime::artifacts_dir(size).join("spec.json").exists() {
+            eprintln!("skipping {size}: run `make artifacts`");
+            continue;
+        }
+        let host = Arc::new(EngineHost::spawn_size(size)?);
+        let spec = host.spec().clone();
+        let (bt, t) = (spec.batch_train, spec.max_seq);
+        let mut rng = Rng::new(1);
+        let tokens: Vec<i32> = (0..bt * t).map(|_| 3 + rng.usize(60) as i32).collect();
+        let segs = vec![1i32; bt * t];
+        let mut loss_mask = vec![1.0f32; bt * t];
+        for r in 0..bt {
+            loss_mask[r * t] = 0.0;
+        }
+        let adv: Vec<f32> = (0..bt * t).map(|_| rng.normal() as f32).collect();
+
+        let mut state = host.fresh_train_state(1)?;
+        let (lp, _, _) =
+            host.logprobs(Arc::new(state.params.clone()), tokens.clone(), segs.clone())?;
+        let mb = MicroBatch {
+            tokens: tokens.clone(),
+            segs: segs.clone(),
+            loss_mask,
+            advantages: adv,
+            old_logprobs: lp,
+        };
+        let hp = GrpoHp::default();
+        let b = Bencher::quick();
+        let tokens_per_step = (bt * t) as f64;
+
+        b.run_throughput(
+            &format!("{size}: grpo_step (fwd+bwd+Adam, fused Pallas loss)"),
+            tokens_per_step,
+            "tok",
+            || {
+                let (st, m) = host.grpo_step(state.clone(), mb.clone(), hp).unwrap();
+                state = st;
+                assert!(m.loss.is_finite());
+            },
+        );
+        b.run_throughput(
+            &format!("{size}: logprobs recompute (fwd only)"),
+            tokens_per_step,
+            "tok",
+            || {
+                host.logprobs(Arc::new(state.params.clone()), tokens.clone(), segs.clone())
+                    .unwrap();
+            },
+        );
+        let mut pre_state = host.fresh_train_state(2)?;
+        b.run_throughput(
+            &format!("{size}: pretrain_step (next-token CE + Adam)"),
+            tokens_per_step,
+            "tok",
+            || {
+                let (st, loss, _) = host
+                    .pretrain_step(pre_state.clone(), tokens.clone(), segs.clone(), 1e-3, 1.0)
+                    .unwrap();
+                pre_state = st;
+                assert!(loss.is_finite());
+            },
+        );
+        // Model FLOPs utilization estimate: 6 * P * tokens per train step.
+        let p = spec.n_params as f64;
+        println!(
+            "  ({size}: {:.0}M params, {:.2} GFLOP per grpo_step)",
+            p / 1e6,
+            6.0 * p * tokens_per_step / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Fig 9a/9b: gradient norms and token-probability clip ratios escalate
+//! with model scale. We sweep model sizes under a deliberately unstable
+//! regime (high lr, clipping disabled à la the paper's unmitigated runs)
+//! and report the growth of both curves.
+//!
+//!   cargo run --release --bin fig9_instability -- --rl-steps 12 --sizes nano,micro
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::SyncPipeline;
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::{render_table, sparkline, Series};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let sizes = args.str_or("sizes", "nano,micro");
+    let base = RunConfig {
+        rl_steps: 12,
+        pretrain_steps: 60,
+        prompts_per_step: 4,
+        group_size: 4,
+        micro_steps: 2,
+        max_new_tokens: 12,
+        ..Default::default()
+    }
+    .apply_args(&args);
+
+    println!("== Fig 9: instability escalation across model scale ==");
+    println!("(unmitigated regime: lr x30, grad clip off, delta cap off)\n");
+    let out = Series::default();
+    let mut rows = Vec::new();
+    for size in sizes.split(',') {
+        let mut cfg = RunConfig { model: size.into(), ..base.clone() };
+        // The unmitigated recipe (what the paper observed before §3.4/§3.5):
+        cfg.hp.lr *= 30.0;
+        cfg.hp.grad_clip = 1e9; // no aggressive clipping
+        cfg.hp.delta = 1e9; // effectively one-sided clipping
+        let pipeline = match SyncPipeline::new(cfg.clone()) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("[skip {size}: {e}]");
+                continue;
+            }
+        };
+        let state = pipeline.bootstrap()?;
+        pipeline.run_rl(state, cfg.rl_steps, "", false)?;
+        let gnorm: Vec<f64> = pipeline.series.get("gnorm").iter().map(|x| x.1).collect();
+        let clip: Vec<f64> = pipeline.series.get("clipfrac").iter().map(|x| x.1).collect();
+        for (i, (g, c)) in gnorm.iter().zip(&clip).enumerate() {
+            out.push(i as u64, &format!("{size}_gnorm"), *g);
+            out.push(i as u64, &format!("{size}_clipfrac"), *c);
+        }
+        let half = gnorm.len() / 2;
+        let early = gnorm[..half].iter().sum::<f64>() / half.max(1) as f64;
+        let late = gnorm[half..].iter().sum::<f64>() / (gnorm.len() - half).max(1) as f64;
+        rows.push(vec![
+            size.to_string(),
+            format!("{early:.3}"),
+            format!("{late:.3}"),
+            format!("{:.2}x", late / early.max(1e-9)),
+            sparkline(&gnorm),
+            sparkline(&clip),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "gnorm early", "gnorm late", "growth", "gnorm traj", "clipfrac traj"],
+            &rows
+        )
+    );
+    println!("(paper: larger models show earlier/steeper gnorm + clip-ratio escalation)");
+    out.save("runs/fig9_instability.jsonl")?;
+    println!("series written to runs/fig9_instability.jsonl");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Table 1: benchmark comparison. Paper: INTELLECT-2 vs QwQ-32B (its base)
+//! on AIME24/25, LiveCodeBench, GPQA-Diamond, IFEval. Here: RL-trained
+//! model vs its pretrained base on the five suite analogues — the shape to
+//! reproduce is "RL improves math+code, instruction-following may dip
+//! slightly" (the paper trains only on math/code).
+//!
+//!   cargo run --release --bin table1_benchmarks -- --rl-steps 12 --eval-n 24
+
+use std::sync::Arc;
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::SyncPipeline;
+use intellect2::rl::reward::RewardConfig;
+use intellect2::tasks::eval::ALL_SUITES;
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::{render_table, Series};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let eval_n = args.usize_or("eval-n", 24);
+    let cfg = RunConfig {
+        rl_steps: 12,
+        pretrain_steps: 120,
+        prompts_per_step: 4,
+        group_size: 4,
+        micro_steps: 2,
+        max_new_tokens: 48,
+        reward: RewardConfig::target_short(),
+        ..Default::default()
+    }
+    .apply_args(&args);
+
+    println!("== Table 1: held-out benchmark suites, base vs RL-trained ==");
+    let pipeline = SyncPipeline::new(cfg.clone())?;
+    let base_state = pipeline.bootstrap()?;
+    let base = Arc::new(base_state.params.clone());
+    let tuned_state = pipeline.run_rl(base_state, cfg.rl_steps, "", false)?;
+    let tuned = Arc::new(tuned_state.params.clone());
+
+    let out = Series::default();
+    let mut rows = Vec::new();
+    for suite in ALL_SUITES {
+        let b = pipeline.evaluate_suite(&base, suite, eval_n)?;
+        let t = pipeline.evaluate_suite(&tuned, suite, eval_n)?;
+        out.push(0, &format!("base {}", suite.name()), b);
+        out.push(0, &format!("tuned {}", suite.name()), t);
+        rows.push(vec![
+            suite.name().to_string(),
+            format!("{b:.1}"),
+            format!("{t:.1}"),
+            format!("{:+.1}", t - b),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["suite", "base model", "INTELLECT-2 (RL)", "delta"], &rows)
+    );
+    println!(
+        "(paper shape: math/code up vs the base model, IFEval slightly down — \
+         RL trains only math+code)"
+    );
+    out.save("runs/table1_benchmarks.jsonl")?;
+    println!("series written to runs/table1_benchmarks.jsonl");
+    Ok(())
+}

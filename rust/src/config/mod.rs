@@ -1,0 +1,173 @@
+//! Run configuration: typed defaults + `key = value` config files +
+//! `--key value` CLI overrides (the launcher surface, see README).
+
+use crate::rl::reward::RewardConfig;
+use crate::runtime::GrpoHp;
+use crate::util::cli::Args;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Model size key under artifacts/ ("nano", "micro", "small", ...).
+    pub model: String,
+    pub seed: u64,
+    /// GRPO group size (completions per prompt; paper: 16).
+    pub group_size: usize,
+    /// Prompt groups per RL step (paper: 256 prompts x 16 = 4096 samples).
+    pub prompts_per_step: usize,
+    /// Optimizer micro-steps per rollout step (paper: 8).
+    pub micro_steps: usize,
+    /// Asynchrony level k: rollouts for step s use the policy from s-k
+    /// (0 = synchronous, 2 = the paper's decentralized setting; §3.2).
+    pub async_level: u64,
+    pub rl_steps: u64,
+    pub pretrain_steps: u64,
+    pub pretrain_lr: f32,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub hp: GrpoHp,
+    pub reward: RewardConfig,
+    pub n_math: usize,
+    pub n_code: usize,
+    /// Swarm shape (threaded e2e driver).
+    pub n_workers: usize,
+    pub n_relays: usize,
+    /// Simulated per-worker downlink in bytes/sec (0 = unshaped).
+    pub worker_ingress_bps: u64,
+    pub lr_warmup_steps: u64,
+    /// Offline difficulty filter (pass@k band) applied before training.
+    pub offline_filter: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "nano".into(),
+            seed: 1337,
+            group_size: 4,
+            prompts_per_step: 8,
+            micro_steps: 4,
+            async_level: 2,
+            rl_steps: 30,
+            pretrain_steps: 150,
+            pretrain_lr: 3e-3,
+            max_new_tokens: 24,
+            temperature: 1.0,
+            hp: GrpoHp::default(),
+            reward: RewardConfig::default(),
+            n_math: 400,
+            n_code: 60,
+            n_workers: 3,
+            n_relays: 2,
+            worker_ingress_bps: 0,
+            lr_warmup_steps: 5,
+            offline_filter: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `--key value` CLI overrides (unknown keys are ignored so
+    /// harness-specific flags can coexist).
+    pub fn apply_args(mut self, a: &Args) -> RunConfig {
+        self.model = a.str_or("model", &self.model);
+        self.seed = a.u64_or("seed", self.seed);
+        self.group_size = a.usize_or("group-size", self.group_size);
+        self.prompts_per_step = a.usize_or("prompts-per-step", self.prompts_per_step);
+        self.micro_steps = a.usize_or("micro-steps", self.micro_steps);
+        self.async_level = a.u64_or("async-level", self.async_level);
+        self.rl_steps = a.u64_or("rl-steps", self.rl_steps);
+        self.pretrain_steps = a.u64_or("pretrain-steps", self.pretrain_steps);
+        self.pretrain_lr = a.f32_or("pretrain-lr", self.pretrain_lr);
+        self.max_new_tokens = a.usize_or("max-new", self.max_new_tokens);
+        self.temperature = a.f32_or("temperature", self.temperature);
+        self.hp.lr = a.f32_or("lr", self.hp.lr);
+        self.hp.grad_clip = a.f32_or("grad-clip", self.hp.grad_clip);
+        self.hp.eps = a.f32_or("eps", self.hp.eps);
+        self.hp.delta = a.f32_or("delta", self.hp.delta);
+        self.hp.kl_coef = a.f32_or("kl-coef", self.hp.kl_coef);
+        self.hp.ent_coef = a.f32_or("ent-coef", self.hp.ent_coef);
+        self.n_workers = a.usize_or("workers", self.n_workers);
+        self.n_relays = a.usize_or("relays", self.n_relays);
+        self.n_math = a.usize_or("n-math", self.n_math);
+        self.n_code = a.usize_or("n-code", self.n_code);
+        self.worker_ingress_bps = a.u64_or("worker-ingress-bps", self.worker_ingress_bps);
+        if a.has_flag("offline-filter") {
+            self.offline_filter = true;
+        }
+        if a.has_flag("target-short") {
+            self.reward = RewardConfig::target_short();
+        }
+        if a.has_flag("target-long") {
+            self.reward = RewardConfig::target_long();
+        }
+        self
+    }
+
+    /// Learning rate with linear warmup (paper: 25 warmup steps).
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if step < self.lr_warmup_steps {
+            self.hp.lr * (step + 1) as f32 / self.lr_warmup_steps as f32
+        } else {
+            self.hp.lr
+        }
+    }
+
+    /// Load `key = value` lines from a config file, then CLI on top.
+    pub fn from_file(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let mut argv = Vec::new();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad config line: {line:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            if v == "true" {
+                argv.push(format!("--{k}"));
+            } else {
+                argv.push(format!("--{k}"));
+                argv.push(v.to_string());
+            }
+        }
+        Ok(RunConfig::default().apply_args(&Args::parse(argv)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_overrides() {
+        let a = Args::parse(
+            "--model micro --async-level 4 --lr 0.001 --target-short"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let c = RunConfig::default().apply_args(&a);
+        assert_eq!(c.model, "micro");
+        assert_eq!(c.async_level, 4);
+        assert!((c.hp.lr - 0.001).abs() < 1e-9);
+        assert_eq!(c.reward.targets, vec![16, 32, 48, 64]);
+    }
+
+    #[test]
+    fn warmup_schedule() {
+        let c = RunConfig { lr_warmup_steps: 4, ..Default::default() };
+        assert!(c.lr_at(0) < c.lr_at(3));
+        assert_eq!(c.lr_at(10), c.hp.lr);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let path = "/tmp/i2_test_cfg.txt";
+        std::fs::write(path, "model = micro\nrl-steps = 5\noffline-filter = true\n# comment\n").unwrap();
+        let c = RunConfig::from_file(path).unwrap();
+        assert_eq!(c.model, "micro");
+        assert_eq!(c.rl_steps, 5);
+        assert!(c.offline_filter);
+    }
+}

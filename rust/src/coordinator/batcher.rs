@@ -1,0 +1,164 @@
+//! Trainer-side batching (§2.1.1, §3.3.2, §4.1): online-filter rollouts,
+//! compute group advantages, pack into `[B,T]` micro-batches, recompute
+//! old logprobs under the current policy, run GRPO micro-steps.
+
+use std::sync::Arc;
+
+use crate::rl::advantage;
+use crate::rl::packing;
+use crate::rl::Rollout;
+use crate::runtime::{EngineHost, GrpoHp, GrpoMetrics, HostTrainState};
+
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    pub metrics: GrpoMetrics,
+    pub n_rollouts: usize,
+    pub n_micro_steps: usize,
+    pub discarded_groups: usize,
+    pub mean_task_reward: f64,
+    pub mean_length_penalty: f64,
+    pub mean_reward: f64,
+    pub mean_completion_len: f64,
+    pub padding_fraction: f64,
+}
+
+/// One full trainer rollout-step: filter → advantages → pack → old-lp
+/// recompute → `micro_steps` GRPO updates (cycling through the packed
+/// batches). Returns the new state + aggregated metrics.
+pub fn train_on_rollouts(
+    host: &Arc<EngineHost>,
+    mut state: Box<HostTrainState>,
+    rollouts: Vec<Rollout>,
+    hp: &GrpoHp,
+    micro_steps: usize,
+    faulty: bool,
+) -> anyhow::Result<(Box<HostTrainState>, StepReport)> {
+    let spec = host.spec().clone();
+    let mut report = StepReport::default();
+    let n0 = rollouts.len();
+    report.mean_task_reward =
+        rollouts.iter().map(|r| r.task_reward as f64).sum::<f64>() / n0.max(1) as f64;
+    report.mean_length_penalty =
+        rollouts.iter().map(|r| r.length_penalty as f64).sum::<f64>() / n0.max(1) as f64;
+    report.mean_reward = rollouts.iter().map(|r| r.reward as f64).sum::<f64>() / n0.max(1) as f64;
+    report.mean_completion_len =
+        rollouts.iter().map(|r| r.completion_len() as f64).sum::<f64>() / n0.max(1) as f64;
+
+    // Online filtering (§3.3.2): drop zero-advantage groups.
+    let (kept, discarded) = advantage::online_filter(rollouts);
+    report.discarded_groups = discarded;
+    report.n_rollouts = kept.len();
+    if kept.is_empty() {
+        return Ok((state, report));
+    }
+
+    // Cross-sample packing (§4.1).
+    let packed = packing::pack(&kept, spec.batch_train, spec.max_seq);
+    report.padding_fraction = packed.padding_fraction;
+
+    // Old logprobs are recomputed with the *current* policy at optimization
+    // start (§2.1.1) — one logprobs call per packed batch.
+    let mut batches = packed.batches;
+    for mb in &mut batches {
+        let (lp, _ent, _valid) = host.logprobs(
+            Arc::new(state.params.clone()),
+            mb.tokens.clone(),
+            mb.segs.clone(),
+        )?;
+        mb.old_logprobs = lp;
+    }
+
+    // Micro-steps cycle over the packed batches (paper: 8 optimizer steps
+    // per rollout step over the 4096-sample batch).
+    let artifact = if faulty { "grpo_step_faulty" } else { "grpo_step" };
+    let n_micro = micro_steps.max(1);
+    let mut agg = GrpoMetrics::default();
+    for i in 0..n_micro {
+        let mb = batches[i % batches.len()].clone();
+        let (st, m) = host.grpo_step_with(artifact, state, mb, *hp)?;
+        state = st;
+        agg.loss += m.loss / n_micro as f32;
+        agg.gnorm += m.gnorm / n_micro as f32;
+        agg.clipfrac += m.clipfrac / n_micro as f32;
+        agg.entropy += m.entropy / n_micro as f32;
+        agg.kl += m.kl / n_micro as f32;
+        agg.ratio_max = agg.ratio_max.max(m.ratio_max);
+        agg.obj_mean += m.obj_mean / n_micro as f32;
+    }
+    report.metrics = agg;
+    report.n_micro_steps = n_micro;
+    Ok((state, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer;
+
+    fn artifacts_ready() -> bool {
+        crate::runtime::Runtime::artifacts_dir("nano").join("spec.json").exists()
+    }
+
+    fn mk_rollout(group: u64, reward: f32, len: usize) -> Rollout {
+        let mut tokens = vec![tokenizer::BOS];
+        tokens.extend((0..len as i32).map(|i| 3 + (i % 40)));
+        tokens.push(tokenizer::EOS);
+        Rollout {
+            task_id: 0,
+            group_id: group,
+            policy_step: 0,
+            prompt_len: 4,
+            target_len: None,
+            task_reward: reward,
+            length_penalty: 0.0,
+            reward,
+            advantage: 0.0,
+            sampled_probs: vec![0.2; tokens.len() - 4],
+            node_address: 1,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn full_train_step_runs_and_updates_params() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let host = Arc::new(EngineHost::spawn_size("nano").unwrap());
+        let state = host.fresh_train_state(1).unwrap();
+        let before = state.params.checksum();
+        let mut rollouts = Vec::new();
+        for g in 0..4u64 {
+            rollouts.push(mk_rollout(g, 1.0, 10 + g as usize * 3));
+            rollouts.push(mk_rollout(g, 0.0, 12 + g as usize * 2));
+            rollouts.push(mk_rollout(g, if g == 0 { 1.0 } else { 0.0 }, 9));
+        }
+        let hp = GrpoHp::default();
+        let (state, report) = train_on_rollouts(&host, state, rollouts, &hp, 3, false).unwrap();
+        assert_eq!(report.n_micro_steps, 3);
+        assert!(report.n_rollouts > 0);
+        assert!(report.metrics.loss.is_finite());
+        assert!(report.metrics.gnorm > 0.0);
+        assert_ne!(state.params.checksum(), before);
+        assert_eq!(state.step, 3);
+        assert!(report.padding_fraction < 1.0);
+    }
+
+    #[test]
+    fn all_degenerate_groups_is_a_noop() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let host = Arc::new(EngineHost::spawn_size("nano").unwrap());
+        let state = host.fresh_train_state(1).unwrap();
+        let before = state.params.checksum();
+        let rollouts = vec![mk_rollout(0, 1.0, 8), mk_rollout(0, 1.0, 9)];
+        let (state, report) =
+            train_on_rollouts(&host, state, rollouts, &GrpoHp::default(), 2, false).unwrap();
+        assert_eq!(report.n_rollouts, 0);
+        assert_eq!(report.discarded_groups, 1);
+        assert_eq!(state.params.checksum(), before);
+    }
+}

@@ -1,0 +1,178 @@
+//! Rollout generation (§2.1.2): what an inference worker does for one
+//! submission — deterministic task sampling (seed formula), batched
+//! KV-cache generation, on-node reward computation (sandboxed verifiers),
+//! TOPLOC commitments — producing an `rpq` submission file.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::data::tokenizer;
+use crate::rl::reward::{self, RewardConfig};
+use crate::rl::rollout_file::{Submission, WireRollout};
+use crate::rl::Rollout;
+use crate::runtime::{EngineHost, Finish, GenOpts, ParamSet};
+use crate::tasks::dataset::{node_sample_seed, Dataset};
+use crate::toploc::Commitment;
+use crate::util::rng::Rng;
+use crate::verifier::Registry;
+
+pub struct RolloutGenerator {
+    pub host: Arc<EngineHost>,
+    pub dataset: Arc<Dataset>,
+    pub reward_cfg: RewardConfig,
+    pub registry: Registry,
+    pub max_new: usize,
+    pub temperature: f32,
+}
+
+impl RolloutGenerator {
+    pub fn from_config(host: Arc<EngineHost>, dataset: Arc<Dataset>, cfg: &RunConfig) -> Self {
+        RolloutGenerator {
+            host,
+            dataset,
+            reward_cfg: cfg.reward.clone(),
+            registry: Registry::default(),
+            max_new: cfg.max_new_tokens,
+            temperature: cfg.temperature,
+        }
+    }
+
+    /// Generate one submission: `n_prompts` tasks drawn from the fixed
+    /// seed, `group_size` completions each (§3.4 groups), with rewards,
+    /// probs and TOPLOC commitments attached. `group_base` offsets group
+    /// ids so batches from different nodes stay distinct.
+    pub fn generate_submission(
+        &self,
+        params: &Arc<ParamSet>,
+        node_address: u64,
+        policy_step: u64,
+        submission_idx: u64,
+        n_prompts: usize,
+        group_size: usize,
+        group_base: u64,
+    ) -> anyhow::Result<Submission> {
+        let spec = self.host.spec();
+        let seed = node_sample_seed(node_address, policy_step, submission_idx);
+        let task_ids = self.dataset.sample_for(seed, n_prompts);
+        // Target lengths are drawn from the same deterministic stream.
+        let mut target_rng = Rng::new(seed ^ 0x7A36_22);
+
+        // Build the prompt batch: each task repeated group_size times.
+        let mut prompts = Vec::with_capacity(n_prompts * group_size);
+        let mut metas = Vec::with_capacity(n_prompts * group_size);
+        for (pi, id) in task_ids.iter().enumerate() {
+            let task = self
+                .dataset
+                .get(*id)
+                .ok_or_else(|| anyhow::anyhow!("task {id} missing"))?;
+            let target = self.reward_cfg.sample_target(&mut target_rng);
+            let text = task.prompt_with_budget(target);
+            let toks = tokenizer::encode_prompt(&text);
+            for g in 0..group_size {
+                prompts.push(toks.clone());
+                metas.push((*id, group_base + pi as u64, target, g));
+            }
+        }
+
+        let opts = GenOpts {
+            max_new: self.max_new,
+            temperature: self.temperature,
+            commit_interval: spec.toploc_interval,
+        };
+        // Generation seed: deterministic in (node, step, submission) so the
+        // validator's recomputation narrative holds.
+        let gen_seed = seed ^ 0x5EED;
+        let mut rollouts = Vec::with_capacity(prompts.len());
+        let b = spec.batch_infer;
+        for (chunk_idx, chunk) in prompts.chunks(b).enumerate() {
+            let gens = self.host.generate(
+                Arc::clone(params),
+                chunk.to_vec(),
+                opts,
+                gen_seed.wrapping_add(chunk_idx as u64),
+            )?;
+            for (j, g) in gens.iter().enumerate() {
+                let (task_id, group_id, target, _) = metas[chunk_idx * b + j];
+                let task = self.dataset.get(task_id).unwrap();
+                let completion = tokenizer::decode_clean(&g.tokens[g.prompt_len..]);
+                // Rewards are computed on the inference node (§2.1.3).
+                let task_r = reward::task_reward(&self.registry, task, &completion);
+                let pen = reward::length_penalty(
+                    self.reward_cfg.alpha,
+                    g.completion_len(),
+                    target,
+                );
+                let (finish_eos, eos_prob) = match g.finish {
+                    Finish::Eos { prob } => (true, prob),
+                    Finish::MaxLen => (false, 0.0),
+                };
+                rollouts.push(WireRollout {
+                    rollout: Rollout {
+                        task_id,
+                        group_id,
+                        policy_step,
+                        tokens: g.tokens.clone(),
+                        prompt_len: g.prompt_len,
+                        target_len: target,
+                        task_reward: task_r,
+                        length_penalty: pen,
+                        reward: task_r - pen,
+                        advantage: 0.0,
+                        sampled_probs: g.sampled_probs.clone(),
+                        node_address,
+                    },
+                    commitment: Commitment::build(&g.hidden_rows, spec.toploc_topk).encode(),
+                    finish_eos,
+                    eos_prob,
+                });
+            }
+        }
+        Ok(Submission { node_address, step: policy_step, submission_idx, rollouts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::dataset::DatasetConfig;
+
+    fn artifacts_ready() -> bool {
+        crate::runtime::Runtime::artifacts_dir("nano").join("spec.json").exists()
+    }
+
+    #[test]
+    fn submission_is_deterministic_and_grouped() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let host = Arc::new(EngineHost::spawn_size("nano").unwrap());
+        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
+            n_math: 50,
+            n_code: 10,
+            ..Default::default()
+        }));
+        let cfg = RunConfig { max_new_tokens: 12, ..Default::default() };
+        let generator = RolloutGenerator::from_config(Arc::clone(&host), dataset, &cfg);
+        let params = Arc::new(host.init_params(3).unwrap());
+
+        let a = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+        let b = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+        assert_eq!(a.rollouts.len(), 6);
+        for (x, y) in a.rollouts.iter().zip(&b.rollouts) {
+            assert_eq!(x.rollout.tokens, y.rollout.tokens);
+            assert_eq!(x.rollout.reward, y.rollout.reward);
+        }
+        // Groups: 2 groups of 3, same task within group.
+        assert_eq!(a.rollouts[0].rollout.group_id, 100);
+        assert_eq!(a.rollouts[3].rollout.group_id, 101);
+        assert_eq!(a.rollouts[0].rollout.task_id, a.rollouts[1].rollout.task_id);
+        // Commitments decode.
+        for w in &a.rollouts {
+            Commitment::decode(&w.commitment).unwrap();
+        }
+        // Encodes to a valid submission file.
+        let decoded = Submission::decode(&a.encode()).unwrap();
+        assert_eq!(decoded.rollouts.len(), 6);
+    }
+}

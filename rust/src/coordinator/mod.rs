@@ -1,0 +1,14 @@
+//! PRIME-RL (paper §2.1, §3.2): the asynchronous RL coordination layer —
+//! rollout generation, trainer batching, the deterministic async-k
+//! pipeline driver, and the full free-running decentralized swarm.
+
+pub mod batcher;
+pub mod gen;
+pub mod pretrain;
+pub mod swarm;
+pub mod sync_driver;
+
+pub use batcher::{train_on_rollouts, StepReport};
+pub use gen::RolloutGenerator;
+pub use swarm::{Swarm, SwarmResult, SwarmStats};
+pub use sync_driver::SyncPipeline;

@@ -1,0 +1,169 @@
+//! Base-model pretraining on a synthetic "worked solutions" corpus — the
+//! QwQ-32B stand-in (DESIGN.md substitutions). The corpus is noisy on
+//! purpose (a fraction of wrong answers, sloppy thinking-budget filler) so
+//! the base model lands at mid-range task accuracy and RL has signal to
+//! improve, mirroring the paper's base-model starting point.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::data::tokenizer;
+use crate::runtime::{EngineHost, HostTrainState};
+use crate::tasks::dataset::Dataset;
+use crate::util::metrics::Series;
+use crate::util::rng::Rng;
+
+/// Fraction of corpus samples with a corrupted answer.
+pub const NOISE_FRAC: f64 = 0.25;
+/// Fraction of samples rendered with a thinking-budget prefix + filler.
+pub const BUDGET_FRAC: f64 = 0.4;
+
+/// Render one corpus sample: `prompt>answer$` (optionally with `<N|` budget
+/// prefix and `~` filler of roughly N tokens before the answer).
+pub fn render_sample(
+    dataset: &Dataset,
+    rng: &mut Rng,
+    targets: &[usize],
+) -> Vec<i32> {
+    let task = &dataset.tasks[rng.usize(dataset.len())];
+    let corrupt = rng.bool(NOISE_FRAC);
+    let answer = if corrupt {
+        match task.answer.parse::<i64>() {
+            Ok(v) => (v + 1 + rng.range(0, 9) as i64).to_string(),
+            Err(_) => {
+                // Code task: swap in a random (likely wrong) op word.
+                crate::tasks::dsl::OPS[rng.usize(crate::tasks::dsl::OPS.len())].to_string()
+            }
+        }
+    } else {
+        task.answer.clone()
+    };
+    let mut text = String::new();
+    if !targets.is_empty() && rng.bool(BUDGET_FRAC) {
+        let target = *rng.choice(targets);
+        // Filler length is only roughly on-target: RL must tighten it.
+        let lo = (target / 2).max(1);
+        let hi = target + target / 2;
+        let fill = rng.range(lo as u64, hi as u64 + 1) as usize;
+        text.push_str(&format!("<{target}|{}", task.prompt));
+        text.push('>');
+        for _ in 0..fill.saturating_sub(answer.len() + 1) {
+            text.push('~');
+        }
+    } else {
+        text.push_str(&task.prompt);
+        text.push('>');
+    }
+    text.push_str(&answer);
+    let mut toks = tokenizer::encode_prompt(&text);
+    toks.push(tokenizer::EOS);
+    toks
+}
+
+/// Build one packed `[B,T]` pretraining batch (greedy row fill).
+pub fn corpus_batch(
+    dataset: &Dataset,
+    rng: &mut Rng,
+    b: usize,
+    t: usize,
+    targets: &[usize],
+) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = vec![0i32; b * t];
+    let mut segs = vec![0i32; b * t];
+    for row in 0..b {
+        let mut pos = 0usize;
+        let mut seg = 1i32;
+        loop {
+            let sample = render_sample(dataset, rng, targets);
+            if pos + sample.len() > t {
+                break;
+            }
+            for (j, &tok) in sample.iter().enumerate() {
+                tokens[row * t + pos + j] = tok;
+                segs[row * t + pos + j] = seg;
+            }
+            pos += sample.len();
+            seg += 1;
+            if pos >= t.saturating_sub(8) {
+                break;
+            }
+        }
+    }
+    (tokens, segs)
+}
+
+/// Pretrain for `steps` steps, logging the loss curve to `series`.
+pub fn pretrain(
+    host: &Arc<EngineHost>,
+    mut state: Box<HostTrainState>,
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    steps: u64,
+    series: &Series,
+) -> anyhow::Result<Box<HostTrainState>> {
+    let spec = host.spec().clone();
+    let mut rng = Rng::new(cfg.seed ^ 0x9E7A);
+    for step in 0..steps {
+        let (tokens, segs) = corpus_batch(
+            dataset,
+            &mut rng,
+            spec.batch_train,
+            spec.max_seq,
+            &cfg.reward.targets,
+        );
+        let (st, loss, gnorm) =
+            host.pretrain_step(state, tokens, segs, cfg.pretrain_lr, 1.0)?;
+        state = st;
+        series.push(step, "pretrain_loss", loss as f64);
+        series.push(step, "pretrain_gnorm", gnorm as f64);
+        if step % 20 == 0 {
+            crate::info!("pretrain", "step {step}: loss {loss:.4} gnorm {gnorm:.3}");
+        }
+    }
+    Ok(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::dataset::DatasetConfig;
+
+    #[test]
+    fn corpus_batch_shape_and_segments() {
+        let dataset = Dataset::generate(&DatasetConfig { n_math: 30, n_code: 5, ..Default::default() });
+        let mut rng = Rng::new(1);
+        let (tokens, segs) = corpus_batch(&dataset, &mut rng, 4, 128, &[16, 32]);
+        assert_eq!(tokens.len(), 4 * 128);
+        // Every row has at least one sample; segments are contiguous runs.
+        for row in 0..4 {
+            let s = &segs[row * 128..(row + 1) * 128];
+            assert!(s[0] == 1, "row {row} starts with a sample");
+            for w in s.windows(2) {
+                assert!(w[1] == w[0] || w[1] == w[0] + 1 || w[1] == 0);
+            }
+        }
+        // EOS tokens present.
+        assert!(tokens.iter().any(|&t| t == tokenizer::EOS));
+    }
+
+    #[test]
+    fn render_sample_formats() {
+        let dataset = Dataset::generate(&DatasetConfig { n_math: 20, n_code: 0, ..Default::default() });
+        let mut rng = Rng::new(2);
+        let mut saw_budget = false;
+        let mut saw_plain = false;
+        for _ in 0..50 {
+            let toks = render_sample(&dataset, &mut rng, &[16, 32]);
+            assert_eq!(toks[0], tokenizer::BOS);
+            assert_eq!(*toks.last().unwrap(), tokenizer::EOS);
+            let text = tokenizer::decode_clean(&toks);
+            assert!(text.contains('>'), "{text}");
+            if text.starts_with('<') {
+                saw_budget = true;
+            } else {
+                saw_plain = true;
+            }
+        }
+        assert!(saw_budget && saw_plain);
+    }
+}

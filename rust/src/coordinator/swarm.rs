@@ -1,0 +1,469 @@
+//! The full decentralized swarm (Fig 1): trainer + SHARDCAST origin/relays
+//! + TOPLOC validator + permissionless inference workers (protocol
+//! lifecycle: discovery, signed invites, heartbeats, slashing) — all
+//! free-running threads talking real HTTP over loopback, with optional
+//! bandwidth shaping. Used by the e2e example, the §4.2 utilization table
+//! and the swarm demo.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher::train_on_rollouts;
+use crate::coordinator::gen::RolloutGenerator;
+use crate::coordinator::pretrain;
+use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
+use crate::protocol::{DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker};
+use crate::rl::rollout_file::Submission;
+use crate::rl::Rollout;
+use crate::runtime::{EngineHost, HostTrainState, ModelSpec, ParamSet};
+use crate::shardcast::{Origin, Relay, ShardcastClient};
+use crate::tasks::dataset::{Dataset, DatasetConfig};
+use crate::toploc::{Validator, ValidatorConfig};
+use crate::util::json::Json;
+use crate::util::metrics::{Counter, Series};
+
+/// Shared swarm state.
+struct Shared {
+    verified: Mutex<Vec<Rollout>>,
+    /// Policy versions the trusted side knows (validator prefill).
+    versions: Mutex<std::collections::BTreeMap<u64, Arc<ParamSet>>>,
+    submissions: Mutex<Vec<Vec<u8>>>,
+    current_step: AtomicU64,
+    stop: AtomicBool,
+    pub stats: SwarmStats,
+}
+
+#[derive(Default)]
+pub struct SwarmStats {
+    pub submissions_received: Counter,
+    pub submissions_accepted: Counter,
+    pub submissions_rejected: Counter,
+    pub rollouts_verified: Counter,
+    pub nodes_slashed: Counter,
+    pub broadcast_bytes: Counter,
+    pub decode_tokens: Counter,
+}
+
+pub struct SwarmResult {
+    pub series: Series,
+    pub final_state: Box<HostTrainState>,
+    pub stats: Arc<SwarmStats>,
+    pub ledger: Ledger,
+    /// (broadcast_secs, batch_ready_secs, train_secs) per RL step.
+    pub step_timings: Vec<(f64, f64, f64)>,
+}
+
+pub struct Swarm {
+    pub cfg: RunConfig,
+    pub host: Arc<EngineHost>,
+    pub dataset: Arc<Dataset>,
+}
+
+impl Swarm {
+    pub fn new(cfg: RunConfig) -> anyhow::Result<Swarm> {
+        let host = Arc::new(EngineHost::spawn_size(&cfg.model)?);
+        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
+            seed: cfg.seed,
+            n_math: cfg.n_math,
+            n_code: cfg.n_code,
+            ..Default::default()
+        }));
+        Ok(Swarm { cfg, host, dataset })
+    }
+
+    /// Run the full decentralized pipeline for `cfg.rl_steps` steps.
+    /// `evil_worker`: if true, one worker submits tampered rollouts and
+    /// must get slashed (swarm_demo uses this).
+    pub fn run(&self, pretrain_steps: u64, evil_worker: bool) -> anyhow::Result<SwarmResult> {
+        let cfg = &self.cfg;
+        let spec = self.host.spec().clone();
+        let series = Series::default();
+        let shared = Arc::new(Shared {
+            verified: Mutex::new(Vec::new()),
+            versions: Mutex::new(Default::default()),
+            submissions: Mutex::new(Vec::new()),
+            current_step: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            stats: SwarmStats::default(),
+        });
+
+        // --- protocol substrate ---
+        let ledger = Ledger::new();
+        let owner = Identity::from_seed(cfg.seed ^ 0x0FF1CE);
+        ledger.register_key(&owner);
+        ledger.submit(
+            Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address },
+            &owner,
+        )?;
+        let discovery = DiscoveryServer::start("pool-token", 600_000)?;
+        let orch = Orchestrator::new(owner, ledger.clone(), 1, 2_000);
+        let _orch_srv = OrchestratorServer::start(orch.clone())?;
+
+        // --- shardcast tier ---
+        let origin = Origin::start(ServerConfig::default())?;
+        let relays: Vec<Relay> = (0..cfg.n_relays.max(1))
+            .map(|i| {
+                Relay::start(
+                    &format!("relay-{i}"),
+                    origin.url(),
+                    ServerConfig { rate_limit_rps: 200.0, rate_limit_burst: 100.0, ..Default::default() },
+                    Duration::from_millis(20),
+                )
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let relay_urls: Vec<String> = relays.iter().map(Relay::url).collect();
+
+        // --- step/submission service (the PRIME-RL API the workers poll) ---
+        let svc = Arc::clone(&shared);
+        let step_srv = HttpServer::start(ServerConfig::default(), move |req| {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/step") => Response::json(&Json::obj(vec![(
+                    "step",
+                    svc.current_step.load(Ordering::SeqCst).into(),
+                )])),
+                ("POST", "/submit") => {
+                    svc.stats.submissions_received.inc();
+                    svc.submissions.lock().unwrap().push(req.body.clone());
+                    Response::ok("accepted for validation")
+                }
+                _ => Response::error(404, "x"),
+            }
+        })?;
+
+        // --- trainer bootstrap ---
+        let t_boot = Instant::now();
+        let mut state = self.host.fresh_train_state(cfg.seed as u32)?;
+        state = pretrain::pretrain(&self.host, state, &self.dataset, cfg, pretrain_steps, &series)?;
+        crate::info!("swarm", "bootstrap done in {:.1}s", t_boot.elapsed().as_secs_f64());
+
+        // Publish checkpoint 0.
+        let payload = state.params.to_bytes();
+        shared.stats.broadcast_bytes.add(payload.len() as u64);
+        origin.publish(0, &payload, 64 * 1024);
+        shared.versions.lock().unwrap().insert(0, Arc::new(state.params.clone()));
+
+        // --- validator thread ---
+        let validator_handle = {
+            let shared = Arc::clone(&shared);
+            let host = Arc::clone(&self.host);
+            let dataset = Arc::clone(&self.dataset);
+            let orch = orch.clone();
+            let reward_cfg = cfg.reward.clone();
+            let vcfg = ValidatorConfig {
+                expected_group: cfg.group_size,
+                ..Default::default()
+            };
+            let max_new = cfg.max_new_tokens;
+            let spec = spec.clone();
+            std::thread::Builder::new().name("i2-validator".into()).spawn(move || {
+                let validator = Validator::new(vcfg);
+                while !shared.stop.load(Ordering::SeqCst) {
+                    let next = shared.submissions.lock().unwrap().pop();
+                    let Some(bytes) = next else {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    };
+                    let verdict = validate_submission(
+                        &validator, &bytes, &dataset, &reward_cfg, &host, &shared, &spec, max_new,
+                    );
+                    match verdict {
+                        Ok(sub) => {
+                            shared.stats.submissions_accepted.inc();
+                            shared.stats.rollouts_verified.add(sub.rollouts.len() as u64);
+                            let mut v = shared.verified.lock().unwrap();
+                            v.extend(sub.rollouts.into_iter().map(|w| w.rollout));
+                        }
+                        Err((node, why)) => {
+                            shared.stats.submissions_rejected.inc();
+                            shared.stats.nodes_slashed.inc();
+                            crate::warn!("validator", "rejecting node {node}: {why}");
+                            orch.slash(node, &why);
+                        }
+                    }
+                }
+            })?
+        };
+
+        // --- inference worker threads (protocol lifecycle + rollouts) ---
+        let mut worker_threads = Vec::new();
+        let n_workers = cfg.n_workers + usize::from(evil_worker);
+        for wi in 0..n_workers {
+            let is_evil = evil_worker && wi == n_workers - 1;
+            let identity = Identity::from_seed(cfg.seed ^ (0xBEEF + wi as u64));
+            let mut worker = Worker::boot(identity, &ledger, 1, &discovery.url(), 8)?;
+            orch.sweep_discovery(&discovery.url(), "pool-token");
+            anyhow::ensure!(worker.is_invited(), "worker {wi} not invited");
+            // Heartbeat loop (health only; rollout work is the main loop).
+            worker.start_heartbeat(
+                _orch_srv.url(),
+                Duration::from_millis(300),
+                Arc::new(|_, _| Ok("hb".into())),
+            );
+
+            let shared = Arc::clone(&shared);
+            let host = Arc::clone(&self.host);
+            let dataset = Arc::clone(&self.dataset);
+            let generator_cfg = cfg.clone();
+            let relay_urls = relay_urls.clone();
+            let step_url = step_srv.url();
+            let ingress = cfg.worker_ingress_bps;
+            let t = std::thread::Builder::new()
+                .name(format!("i2-infer-{wi}"))
+                .spawn(move || {
+                    let address = worker.identity.address;
+                    let generator = RolloutGenerator::from_config(
+                        Arc::clone(&host),
+                        dataset,
+                        &generator_cfg,
+                    );
+                    let sc = ShardcastClient::new(
+                        &format!("worker-{address}"),
+                        &relay_urls,
+                        address,
+                        true,
+                    )
+                    .with_ingress(ingress);
+                    let http = HttpClient::new(&format!("worker-{address}"));
+                    let mut held_version: Option<(u64, Arc<ParamSet>)> = None;
+                    let mut submission_counter: std::collections::BTreeMap<u64, u64> =
+                        Default::default();
+                    while !shared.stop.load(Ordering::SeqCst) {
+                        // Fetch newer weights when available (shared volume
+                        // caching: only on version change).
+                        if let Some(latest) = sc.latest_step() {
+                            if held_version.as_ref().map(|(v, _)| *v) != Some(latest) {
+                                match sc.fetch_checkpoint(latest) {
+                                    Ok((bytes, report)) => {
+                                        match ParamSet::from_bytes_spec(host.spec(), &bytes) {
+                                            Ok(p) => {
+                                                worker.volume.put("weights", bytes);
+                                                crate::debug!(
+                                                    "worker",
+                                                    "node {address}: checkpoint {latest} in {:.2}s",
+                                                    report.seconds
+                                                );
+                                                held_version = Some((latest, Arc::new(p)));
+                                            }
+                                            Err(e) => crate::warn!("worker", "bad params: {e}"),
+                                        }
+                                    }
+                                    Err(e) => {
+                                        crate::debug!("worker", "fetch {latest}: {e}");
+                                        std::thread::sleep(Duration::from_millis(50));
+                                    }
+                                }
+                            }
+                        }
+                        let Some((version, params)) = held_version.clone() else {
+                            std::thread::sleep(Duration::from_millis(20));
+                            continue;
+                        };
+                        let idx = submission_counter.entry(version).or_insert(0);
+                        let sub = generator.generate_submission(
+                            &params,
+                            address,
+                            version,
+                            *idx,
+                            generator_cfg.prompts_per_step.div_ceil(generator_cfg.n_workers),
+                            generator_cfg.group_size,
+                            // Group-id base unique per (node, version, idx).
+                            (address << 20) ^ (version << 10) ^ (*idx << 4),
+                        );
+                        *idx += 1;
+                        match sub {
+                            Ok(mut sub) => {
+                                shared.stats.decode_tokens.add(
+                                    sub.rollouts
+                                        .iter()
+                                        .map(|r| r.rollout.completion_len() as u64)
+                                        .sum(),
+                                );
+                                if is_evil {
+                                    // Tamper: claim every rollout solved the
+                                    // task (reward hacking attempt).
+                                    for w in &mut sub.rollouts {
+                                        w.rollout.task_reward = 1.0;
+                                        w.rollout.reward = 1.0;
+                                    }
+                                }
+                                let _ = http.post(&format!("{step_url}/submit"), sub.encode());
+                            }
+                            Err(e) => {
+                                crate::warn!("worker", "generate: {e}");
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                        }
+                    }
+                    worker.shutdown();
+                })?;
+            worker_threads.push(t);
+        }
+
+        // --- trainer loop ---
+        let need = cfg.prompts_per_step * cfg.group_size;
+        let mut step_timings = Vec::new();
+        for step in 0..cfg.rl_steps {
+            shared.current_step.store(step, Ordering::SeqCst);
+            let t_wait = Instant::now();
+            loop {
+                let n = shared.verified.lock().unwrap().len();
+                if n >= need || t_wait.elapsed() > Duration::from_secs(120) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let batch_ready_secs = t_wait.elapsed().as_secs_f64();
+            let rollouts: Vec<Rollout> = {
+                let mut v = shared.verified.lock().unwrap();
+                std::mem::take(&mut *v)
+            };
+            anyhow::ensure!(!rollouts.is_empty(), "no verified rollouts arrived (step {step})");
+
+            let t_train = Instant::now();
+            let hp = crate::runtime::GrpoHp { lr: cfg.lr_at(step), ..cfg.hp };
+            let (st, report) =
+                train_on_rollouts(&self.host, state, rollouts, &hp, cfg.micro_steps, false)?;
+            state = st;
+            let train_secs = t_train.elapsed().as_secs_f64();
+
+            // Broadcast the new checkpoint (overlapped with ongoing
+            // inference on the workers — they keep generating with the old
+            // version until the new one lands).
+            let t_bcast = Instant::now();
+            let payload = state.params.to_bytes();
+            shared.stats.broadcast_bytes.add(payload.len() as u64);
+            origin.publish(step + 1, &payload, 64 * 1024);
+            shared.versions.lock().unwrap().insert(step + 1, Arc::new(state.params.clone()));
+            // Wait for the relay tier to finish mirroring (broadcast time).
+            let deadline = Instant::now() + Duration::from_secs(60);
+            while !relays.iter().all(|r| r.store.is_complete(step + 1)) {
+                if Instant::now() > deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let broadcast_secs = t_bcast.elapsed().as_secs_f64();
+            step_timings.push((broadcast_secs, batch_ready_secs, train_secs));
+
+            series.push(step, "task_reward", report.mean_task_reward);
+            series.push(step, "length_penalty", report.mean_length_penalty);
+            series.push(step, "reward", report.mean_reward);
+            series.push(step, "loss", report.metrics.loss as f64);
+            series.push(step, "gnorm", report.metrics.gnorm as f64);
+            series.push(step, "entropy", report.metrics.entropy as f64);
+            series.push(step, "completion_len", report.mean_completion_len);
+            series.push(step, "batch_ready_secs", batch_ready_secs);
+            series.push(step, "train_secs", train_secs);
+            series.push(step, "broadcast_secs", broadcast_secs);
+            orch.health_sweep();
+            crate::info!(
+                "swarm",
+                "step {step}: task_r {:.3} wait {batch_ready_secs:.1}s train {train_secs:.1}s bcast {broadcast_secs:.1}s verified {} slashed {}",
+                report.mean_task_reward,
+                shared.stats.rollouts_verified.get(),
+                shared.stats.nodes_slashed.get()
+            );
+        }
+
+        shared.stop.store(true, Ordering::SeqCst);
+        for t in worker_threads {
+            let _ = t.join();
+        }
+        let _ = validator_handle.join();
+
+        Ok(SwarmResult {
+            series,
+            final_state: state,
+            stats: shared.stats_arc(),
+            ledger,
+            step_timings,
+        })
+    }
+}
+
+impl Shared {
+    fn stats_arc(self: &Arc<Self>) -> Arc<SwarmStats> {
+        // Project the stats out of the shared block (cheap counters only).
+        let s = SwarmStats::default();
+        s.submissions_received.add(self.stats.submissions_received.get());
+        s.submissions_accepted.add(self.stats.submissions_accepted.get());
+        s.submissions_rejected.add(self.stats.submissions_rejected.get());
+        s.rollouts_verified.add(self.stats.rollouts_verified.get());
+        s.nodes_slashed.add(self.stats.nodes_slashed.get());
+        s.broadcast_bytes.add(self.stats.broadcast_bytes.get());
+        s.decode_tokens.add(self.stats.decode_tokens.get());
+        Arc::new(s)
+    }
+}
+
+/// Full validation of one submission (all five TOPLOC stages). Returns the
+/// submission on success or (node, reason) for slashing.
+#[allow(clippy::too_many_arguments)]
+fn validate_submission(
+    validator: &Validator,
+    bytes: &[u8],
+    dataset: &Dataset,
+    reward_cfg: &crate::rl::reward::RewardConfig,
+    host: &Arc<EngineHost>,
+    shared: &Arc<Shared>,
+    spec: &ModelSpec,
+    max_new: usize,
+) -> Result<Submission, (u64, String)> {
+    let mut sub = validator
+        .check_file(bytes)
+        .map_err(|e| (0u64, format!("{e:?}")))?;
+    let node = sub.node_address;
+    let current = shared.current_step.load(Ordering::SeqCst);
+    validator
+        .check_sanity(&sub, dataset, reward_cfg, current, max_new)
+        .map_err(|e| (node, format!("{e:?}")))?;
+    // Termination failures on individual rollouts are *soft*: an honest
+    // sampler occasionally draws a low-probability EOS, so those rollouts
+    // are discarded (their whole group with them) rather than slashing the
+    // node. Systematic early truncation still surfaces as the node's
+    // contributions evaporating.
+    let mut bad_groups: Vec<u64> = Vec::new();
+    for w in &sub.rollouts {
+        if validator.check_termination(w, max_new, spec.max_seq).is_err() {
+            bad_groups.push(w.rollout.group_id);
+        }
+    }
+    sub.rollouts.retain(|w| !bad_groups.contains(&w.rollout.group_id));
+    if sub.rollouts.is_empty() {
+        // Nothing usable, but not evidence of cheating — discard quietly.
+        return Ok(sub);
+    }
+    // Computation + sampling checks need prefill under the claimed policy.
+    let params = shared
+        .versions
+        .lock()
+        .unwrap()
+        .get(&sub.step)
+        .cloned()
+        .ok_or((node, format!("unknown policy version {}", sub.step)))?;
+    let (b, t, d, v) = (spec.batch_infer, spec.max_seq, spec.d_model, spec.vocab);
+    for chunk in sub.rollouts.chunks(b) {
+        let mut padded = vec![spec.pad_id; b * t];
+        for (i, w) in chunk.iter().enumerate() {
+            for (j, &tok) in w.rollout.tokens.iter().enumerate() {
+                padded[i * t + j] = tok;
+            }
+        }
+        let (logits, hidden) = host
+            .prefill(Arc::clone(&params), padded)
+            .map_err(|e| (node, format!("prefill: {e}")))?;
+        for (i, w) in chunk.iter().enumerate() {
+            let h = &hidden[i * t * d..(i + 1) * t * d];
+            let l = &logits[i * t * v..(i + 1) * t * v];
+            validator
+                .check_computation(w, h, d)
+                .map_err(|e| (node, format!("{e:?}")))?;
+            validator
+                .check_sampling(w, l, v)
+                .map_err(|e| (node, format!("{e:?}")))?;
+        }
+    }
+    Ok(sub)
+}

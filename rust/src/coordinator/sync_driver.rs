@@ -1,0 +1,240 @@
+//! Deterministic async-k RL pipeline (§3.2, Fig 6/7): the trainer loop with
+//! an explicit policy-version queue. Rollouts for step s are generated
+//! with the policy from step s-k (k=0 sync, k=1 centralized one-step,
+//! k>=2 decentralized SHARDCAST-delay) — in-process and fully reproducible,
+//! used by every recipe experiment (Figs 7-12). The free-running threaded
+//! swarm with real HTTP lives in coordinator::swarm.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher::{train_on_rollouts, StepReport};
+use crate::coordinator::gen::RolloutGenerator;
+use crate::coordinator::pretrain;
+use crate::rl::advantage;
+use crate::runtime::{EngineHost, HostTrainState, ParamSet};
+use crate::tasks::dataset::{Dataset, DatasetConfig};
+use crate::util::metrics::Series;
+
+pub struct SyncPipeline {
+    pub cfg: RunConfig,
+    pub host: Arc<EngineHost>,
+    pub dataset: Arc<Dataset>,
+    pub generator: RolloutGenerator,
+    pub series: Series,
+}
+
+impl SyncPipeline {
+    pub fn new(cfg: RunConfig) -> anyhow::Result<SyncPipeline> {
+        let host = Arc::new(EngineHost::spawn_size(&cfg.model)?);
+        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
+            seed: cfg.seed,
+            n_math: cfg.n_math,
+            n_code: cfg.n_code,
+            ..Default::default()
+        }));
+        let generator = RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg);
+        Ok(SyncPipeline { cfg, host, dataset, generator, series: Series::default() })
+    }
+
+    /// Replace the dataset (offline filtering experiments).
+    pub fn set_dataset(&mut self, dataset: Dataset) {
+        let d = Arc::new(dataset);
+        self.dataset = Arc::clone(&d);
+        self.generator.dataset = d;
+    }
+
+    /// Init + pretrain the base model.
+    pub fn bootstrap(&self) -> anyhow::Result<Box<HostTrainState>> {
+        let state = self.host.fresh_train_state(self.cfg.seed as u32)?;
+        pretrain::pretrain(
+            &self.host,
+            state,
+            &self.dataset,
+            &self.cfg,
+            self.cfg.pretrain_steps,
+            &self.series,
+        )
+    }
+
+    /// Estimate pass@k for every task with the given policy (offline
+    /// filtering, §3.3.1). Returns (task_id, passes) stats.
+    pub fn estimate_pass_at_k(
+        &self,
+        params: &Arc<ParamSet>,
+        k: usize,
+        task_limit: usize,
+    ) -> anyhow::Result<crate::rl::filtering::PassStats> {
+        let mut stats = crate::rl::filtering::PassStats::default();
+        let spec = self.host.spec().clone();
+        let ids: Vec<u64> = self.dataset.tasks.iter().map(|t| t.id).take(task_limit).collect();
+        let opts = crate::runtime::GenOpts {
+            max_new: self.cfg.max_new_tokens,
+            temperature: self.cfg.temperature,
+            commit_interval: spec.toploc_interval,
+        };
+        for chunk in ids.chunks(spec.batch_infer / k.max(1)) {
+            let mut prompts = Vec::new();
+            for id in chunk {
+                let task = self.dataset.get(*id).unwrap();
+                let toks = crate::data::tokenizer::encode_prompt(&task.prompt);
+                for _ in 0..k {
+                    prompts.push(toks.clone());
+                }
+            }
+            if prompts.is_empty() {
+                continue;
+            }
+            let gens = self.host.generate(Arc::clone(params), prompts, opts, 0xF117 ^ chunk[0])?;
+            for (i, id) in chunk.iter().enumerate() {
+                let task = self.dataset.get(*id).unwrap();
+                let passes = (0..k)
+                    .filter(|&g| {
+                        let gen = &gens[i * k + g];
+                        let completion = crate::data::tokenizer::decode_clean(
+                            &gen.tokens[gen.prompt_len..],
+                        );
+                        crate::rl::reward::task_reward(&self.generator.registry, task, &completion)
+                            > 0.5
+                    })
+                    .count();
+                stats.record(*id, passes);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Run `steps` RL steps at asynchrony level `cfg.async_level`.
+    /// `series_prefix` namespaces the recorded curves; `faulty` selects the
+    /// Fig 11 fault-injected kernel.
+    pub fn run_rl(
+        &self,
+        mut state: Box<HostTrainState>,
+        steps: u64,
+        series_prefix: &str,
+        faulty: bool,
+    ) -> anyhow::Result<Box<HostTrainState>> {
+        let k = self.cfg.async_level;
+        // Policy-version queue: published[i] = params after step i; the
+        // generator for step s uses published[s.saturating_sub(k)].
+        let mut published: VecDeque<Arc<ParamSet>> = VecDeque::new();
+        published.push_back(Arc::new(state.params.clone()));
+
+        for step in 0..steps {
+            let gen_version = step.saturating_sub(k) as usize;
+            let gen_params = Arc::clone(&published[gen_version.min(published.len() - 1)]);
+
+            // Online filtering loop (§3.3.2): keep sampling submissions
+            // until we have enough non-degenerate groups.
+            let mut rollouts = Vec::new();
+            let mut groups_kept = 0usize;
+            let mut submission_idx = 0u64;
+            let mut extra_inference = 0usize;
+            while groups_kept < self.cfg.prompts_per_step && submission_idx < 6 {
+                let sub = self.generator.generate_submission(
+                    &gen_params,
+                    /*node=*/ 0xA11CE,
+                    step,
+                    submission_idx,
+                    self.cfg.prompts_per_step,
+                    self.cfg.group_size,
+                    step * 1000 + submission_idx * 100,
+                )?;
+                let mut batch: Vec<crate::rl::Rollout> =
+                    sub.rollouts.into_iter().map(|w| w.rollout).collect();
+                let stats = advantage::compute_group_advantages(&mut batch);
+                let kept_groups: Vec<u64> = stats
+                    .iter()
+                    .filter(|(_, _, _, d)| !d)
+                    .map(|(g, ..)| *g)
+                    .collect();
+                groups_kept += kept_groups.len();
+                if submission_idx > 0 {
+                    extra_inference += batch.len();
+                }
+                rollouts.extend(batch.into_iter().filter(|r| kept_groups.contains(&r.group_id)));
+                submission_idx += 1;
+            }
+
+            let hp = crate::runtime::GrpoHp { lr: self.cfg.lr_at(step), ..self.cfg.hp };
+            let (st, report) = train_on_rollouts(
+                &self.host,
+                state,
+                rollouts,
+                &hp,
+                self.cfg.micro_steps,
+                faulty,
+            )?;
+            state = st;
+            published.push_back(Arc::new(state.params.clone()));
+            self.record(series_prefix, step, &report, extra_inference);
+            crate::info!(
+                "rl",
+                "[{series_prefix}] step {step}: task_r {:.3} len_pen {:.3} loss {:.4} gnorm {:.3} clip {:.3} ent {:.3}",
+                report.mean_task_reward,
+                report.mean_length_penalty,
+                report.metrics.loss,
+                report.metrics.gnorm,
+                report.metrics.clipfrac,
+                report.metrics.entropy
+            );
+        }
+        Ok(state)
+    }
+
+    fn record(&self, prefix: &str, step: u64, r: &StepReport, extra_inference: usize) {
+        let p = |name: &str| format!("{prefix}{name}");
+        self.series.push(step, &p("task_reward"), r.mean_task_reward);
+        self.series.push(step, &p("length_penalty"), r.mean_length_penalty);
+        self.series.push(step, &p("reward"), r.mean_reward);
+        self.series.push(step, &p("completion_len"), r.mean_completion_len);
+        self.series.push(step, &p("loss"), r.metrics.loss as f64);
+        self.series.push(step, &p("gnorm"), r.metrics.gnorm as f64);
+        self.series.push(step, &p("clipfrac"), r.metrics.clipfrac as f64);
+        self.series.push(step, &p("entropy"), r.metrics.entropy as f64);
+        self.series.push(step, &p("kl"), r.metrics.kl as f64);
+        self.series.push(step, &p("ratio_max"), r.metrics.ratio_max as f64);
+        self.series.push(step, &p("discarded_groups"), r.discarded_groups as f64);
+        self.series.push(step, &p("padding_fraction"), r.padding_fraction);
+        self.series.push(step, &p("extra_inference_samples"), extra_inference as f64);
+    }
+
+    /// Evaluate a policy on a held-out suite (Table 1). Returns the mean
+    /// score in percent.
+    pub fn evaluate_suite(
+        &self,
+        params: &Arc<ParamSet>,
+        suite: crate::tasks::eval::Suite,
+        n_tasks: usize,
+    ) -> anyhow::Result<f64> {
+        use crate::tasks::eval::Suite;
+        let spec = self.host.spec().clone();
+        let tasks = suite.tasks(n_tasks);
+        let target = match suite {
+            Suite::LengthFollow => self.cfg.reward.targets.last().copied().or(Some(32)),
+            _ => None,
+        };
+        let opts = crate::runtime::GenOpts {
+            max_new: self.cfg.max_new_tokens.max(target.unwrap_or(0) + 16),
+            temperature: 0.7,
+            commit_interval: spec.toploc_interval,
+        };
+        let mut total = 0.0;
+        let mut count = 0.0f64;
+        for chunk in tasks.chunks(spec.batch_infer) {
+            let prompts: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|t| crate::data::tokenizer::encode_prompt(&t.prompt_with_budget(target)))
+                .collect();
+            let gens = self.host.generate(Arc::clone(params), prompts, opts, 0xE7A1)?;
+            for (t, g) in chunk.iter().zip(&gens) {
+                let completion =
+                    crate::data::tokenizer::decode_clean(&g.tokens[g.prompt_len..]);
+                total += suite.score(t, &completion, g.completion_len(), target);
+                count += 1.0;
+            }
+        }
+        Ok(100.0 * total / count.max(1.0))
+    }
+}

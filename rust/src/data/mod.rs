@@ -1,0 +1,6 @@
+//! Data plane substrates: the tokenizer (authoritative vocab shared with
+//! the L2 model via vocab size), and `rpq`, the from-scratch columnar
+//! rollout-file format standing in for Parquet (§2.1.1, §2.3.3).
+
+pub mod rpq;
+pub mod tokenizer;

@@ -1,0 +1,399 @@
+//! `rpq` — a from-scratch columnar rollout-file format.
+//!
+//! Plays the role Parquet plays in the paper: inference workers serialize
+//! rollout batches to a typed columnar file, upload it, and the trainer's
+//! dataloader reads it back. The validator's "parquet formatting check"
+//! (§2.3.3) maps to [`RpqFile::validate_schema`]: a file that does not
+//! parse, fails its checksums, or deviates from the expected schema is
+//! rejected before it can throw inside the trainer.
+//!
+//! Layout (little-endian):
+//!   magic "RPQ1" | u32 n_cols | u32 n_rows
+//!   per column: u16 name_len | name | u8 dtype | u64 data_len | data
+//!               | 32-byte SHA-256 of data
+//!   footer: 32-byte SHA-256 over everything before it
+
+use sha2::{Digest, Sha256};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    U64 = 0,
+    F32 = 1,
+    I32List = 2,
+    F32List = 3,
+    Bytes = 4,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Option<DType> {
+        Some(match v {
+            0 => DType::U64,
+            1 => DType::F32,
+            2 => DType::I32List,
+            3 => DType::F32List,
+            4 => DType::Bytes,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Column {
+    U64(Vec<u64>),
+    F32(Vec<f32>),
+    I32List(Vec<Vec<i32>>),
+    F32List(Vec<Vec<f32>>),
+    Bytes(Vec<Vec<u8>>),
+}
+
+impl Column {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::U64(_) => DType::U64,
+            Column::F32(_) => DType::F32,
+            Column::I32List(_) => DType::I32List,
+            Column::F32List(_) => DType::F32List,
+            Column::Bytes(_) => DType::Bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::U64(v) => v.len(),
+            Column::F32(v) => v.len(),
+            Column::I32List(v) => v.len(),
+            Column::F32List(v) => v.len(),
+            Column::Bytes(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_u64(&self) -> Option<&[u64]> {
+        match self {
+            Column::U64(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Column::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32_list(&self) -> Option<&[Vec<i32>]> {
+        match self {
+            Column::I32List(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_f32_list(&self) -> Option<&[Vec<f32>]> {
+        match self {
+            Column::F32List(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_bytes(&self) -> Option<&[Vec<u8>]> {
+        match self {
+            Column::Bytes(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Column::U64(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Column::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Column::I32List(v) => {
+                encode_offsets(v.iter().map(|x| x.len()), &mut out);
+                for row in v {
+                    for x in row {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+            Column::F32List(v) => {
+                encode_offsets(v.iter().map(|x| x.len()), &mut out);
+                for row in v {
+                    for x in row {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+            Column::Bytes(v) => {
+                encode_offsets(v.iter().map(|x| x.len()), &mut out);
+                for row in v {
+                    out.extend_from_slice(row);
+                }
+            }
+        }
+        out
+    }
+
+    fn decode(dtype: DType, n_rows: usize, data: &[u8]) -> anyhow::Result<Column> {
+        Ok(match dtype {
+            DType::U64 => {
+                anyhow::ensure!(data.len() == n_rows * 8, "u64 column size");
+                Column::U64(data.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+            }
+            DType::F32 => {
+                anyhow::ensure!(data.len() == n_rows * 4, "f32 column size");
+                Column::F32(data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+            }
+            DType::I32List => {
+                let (lens, rest) = decode_offsets(n_rows, data)?;
+                let total: usize = lens.iter().sum();
+                anyhow::ensure!(rest.len() == total * 4, "i32list column size");
+                let mut vals = rest.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap()));
+                Column::I32List(lens.iter().map(|&l| (0..l).map(|_| vals.next().unwrap()).collect()).collect())
+            }
+            DType::F32List => {
+                let (lens, rest) = decode_offsets(n_rows, data)?;
+                let total: usize = lens.iter().sum();
+                anyhow::ensure!(rest.len() == total * 4, "f32list column size");
+                let mut vals = rest.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+                Column::F32List(lens.iter().map(|&l| (0..l).map(|_| vals.next().unwrap()).collect()).collect())
+            }
+            DType::Bytes => {
+                let (lens, rest) = decode_offsets(n_rows, data)?;
+                let total: usize = lens.iter().sum();
+                anyhow::ensure!(rest.len() == total, "bytes column size");
+                let mut pos = 0;
+                Column::Bytes(
+                    lens.iter()
+                        .map(|&l| {
+                            let row = rest[pos..pos + l].to_vec();
+                            pos += l;
+                            row
+                        })
+                        .collect(),
+                )
+            }
+        })
+    }
+}
+
+fn encode_offsets(lens: impl Iterator<Item = usize>, out: &mut Vec<u8>) {
+    for l in lens {
+        out.extend_from_slice(&(l as u32).to_le_bytes());
+    }
+}
+
+fn decode_offsets(n_rows: usize, data: &[u8]) -> anyhow::Result<(Vec<usize>, &[u8])> {
+    anyhow::ensure!(data.len() >= n_rows * 4, "offsets truncated");
+    let lens = data[..n_rows * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect();
+    Ok((lens, &data[n_rows * 4..]))
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RpqFile {
+    pub columns: Vec<(String, Column)>,
+}
+
+pub type Schema = Vec<(&'static str, DType)>;
+
+impl RpqFile {
+    pub fn new() -> RpqFile {
+        RpqFile::default()
+    }
+
+    pub fn push(&mut self, name: &str, col: Column) -> &mut Self {
+        self.columns.push((name.to_string(), col));
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.columns.first().map(|(_, c)| c.len()).unwrap_or(0)
+    }
+
+    pub fn col(&self, name: &str) -> Option<&Column> {
+        self.columns.iter().find(|(n, _)| n == name).map(|(_, c)| c)
+    }
+
+    /// The validator's "formatting check": schema (names, dtypes, order)
+    /// must match exactly and all columns must have the same row count.
+    pub fn validate_schema(&self, schema: &Schema) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.columns.len() == schema.len(),
+            "column count {} != {}",
+            self.columns.len(),
+            schema.len()
+        );
+        let n = self.n_rows();
+        for ((name, col), (want_name, want_dt)) in self.columns.iter().zip(schema) {
+            anyhow::ensure!(name == want_name, "column name {name:?} != {want_name:?}");
+            anyhow::ensure!(col.dtype() == *want_dt, "column {name}: dtype mismatch");
+            anyhow::ensure!(col.len() == n, "column {name}: ragged row count");
+        }
+        Ok(())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"RPQ1");
+        out.extend_from_slice(&(self.columns.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n_rows() as u32).to_le_bytes());
+        for (name, col) in &self.columns {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(col.dtype() as u8);
+            let data = col.encode();
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            let digest = Sha256::digest(&data);
+            out.extend_from_slice(&data);
+            out.extend_from_slice(&digest);
+        }
+        let footer = Sha256::digest(&out);
+        out.extend_from_slice(&footer);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<RpqFile> {
+        anyhow::ensure!(bytes.len() >= 44, "file truncated");
+        let (body, footer) = bytes.split_at(bytes.len() - 32);
+        anyhow::ensure!(
+            Sha256::digest(body).as_slice() == footer,
+            "file checksum mismatch"
+        );
+        anyhow::ensure!(&body[..4] == b"RPQ1", "bad magic");
+        let n_cols = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+        let n_rows = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+        let mut pos = 12;
+        let mut columns = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            anyhow::ensure!(pos + 2 <= body.len(), "truncated column header");
+            let name_len = u16::from_le_bytes(body[pos..pos + 2].try_into().unwrap()) as usize;
+            pos += 2;
+            anyhow::ensure!(pos + name_len + 9 <= body.len(), "truncated column header");
+            let name = String::from_utf8(body[pos..pos + name_len].to_vec())?;
+            pos += name_len;
+            let dtype = DType::from_u8(body[pos]).ok_or_else(|| anyhow::anyhow!("bad dtype"))?;
+            pos += 1;
+            let data_len = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap()) as usize;
+            pos += 8;
+            anyhow::ensure!(pos + data_len + 32 <= body.len(), "truncated column data");
+            let data = &body[pos..pos + data_len];
+            pos += data_len;
+            let digest = &body[pos..pos + 32];
+            pos += 32;
+            anyhow::ensure!(
+                Sha256::digest(data).as_slice() == digest,
+                "column {name}: checksum mismatch"
+            );
+            columns.push((name, Column::decode(dtype, n_rows, data)?));
+        }
+        anyhow::ensure!(pos == body.len(), "trailing bytes");
+        Ok(RpqFile { columns })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn sample_file() -> RpqFile {
+        let mut f = RpqFile::new();
+        f.push("task_id", Column::U64(vec![1, 2, 3]))
+            .push("reward", Column::F32(vec![1.0, 0.0, 1.0]))
+            .push("tokens", Column::I32List(vec![vec![1, 5, 2], vec![], vec![9]]))
+            .push("probs", Column::F32List(vec![vec![0.5], vec![0.1, 0.9], vec![]]))
+            .push("commit", Column::Bytes(vec![b"abc".to_vec(), vec![], b"zz".to_vec()]));
+        f
+    }
+
+    #[test]
+    fn roundtrip() {
+        let f = sample_file();
+        let bytes = f.encode();
+        let g = RpqFile::decode(&bytes).unwrap();
+        assert_eq!(f.columns, g.columns);
+        assert_eq!(g.n_rows(), 3);
+        assert_eq!(g.col("reward").unwrap().as_f32().unwrap()[2], 1.0);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = sample_file().encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(RpqFile::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample_file().encode();
+        for cut in [0, 10, bytes.len() - 1] {
+            assert!(RpqFile::decode(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn schema_validation() {
+        let f = sample_file();
+        let good: Schema = vec![
+            ("task_id", DType::U64),
+            ("reward", DType::F32),
+            ("tokens", DType::I32List),
+            ("probs", DType::F32List),
+            ("commit", DType::Bytes),
+        ];
+        f.validate_schema(&good).unwrap();
+        let wrong_order: Schema = {
+            let mut s = good.clone();
+            s.swap(0, 1);
+            s
+        };
+        assert!(f.validate_schema(&wrong_order).is_err());
+        let wrong_type: Schema = {
+            let mut s = good.clone();
+            s[1].1 = DType::U64;
+            s
+        };
+        assert!(f.validate_schema(&wrong_type).is_err());
+        assert!(f.validate_schema(&good[..4].to_vec()).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_files() {
+        prop::check("rpq roundtrip", 48, |rng: &mut Rng, size| {
+            let rows = rng.usize(size as usize + 1);
+            let mut f = RpqFile::new();
+            f.push("ids", Column::U64((0..rows).map(|_| rng.next_u64()).collect()));
+            f.push(
+                "lists",
+                Column::I32List(
+                    (0..rows)
+                        .map(|_| (0..rng.usize(8)).map(|_| rng.next_u32() as i32).collect())
+                        .collect(),
+                ),
+            );
+            f.push(
+                "blobs",
+                Column::Bytes(
+                    (0..rows)
+                        .map(|_| (0..rng.usize(16)).map(|_| rng.next_u32() as u8).collect())
+                        .collect(),
+                ),
+            );
+            f.encode()
+        }, |bytes| {
+            let f = RpqFile::decode(bytes).map_err(|e| e.to_string())?;
+            prop::ensure_eq(f.encode(), bytes.clone(), "re-encode identical")
+        });
+    }
+}

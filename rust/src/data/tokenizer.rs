@@ -1,0 +1,139 @@
+//! Character-level tokenizer over the fixed 64-symbol vocabulary baked into
+//! the L2 model artifacts. The Rust side is authoritative: Python only ever
+//! sees token ids (`compile/config.py` pins `VOCAB_SIZE`/special ids).
+
+pub const VOCAB_SIZE: usize = 64;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Filler token the model emits to pad its "thinking" to a target length
+/// (length-reward experiments, §3.1.2).
+pub const FILL: i32 = 55;
+
+const PUNCT: &[(u8, i32)] = &[
+    (b'+', 13),
+    (b'-', 14),
+    (b'*', 15),
+    (b'=', 16),
+    (b'(', 17),
+    (b')', 18),
+    (b' ', 19),
+    (b'?', 20),
+    (b':', 21),
+    (b',', 22),
+    (b'[', 23),
+    (b']', 24),
+    (b'|', 25),
+    (b'#', 26),
+    (b'>', 27),
+    (b'.', 28),
+    (b'~', 55),
+    (b'<', 56),
+    (b'_', 57),
+];
+
+/// char -> token id (digits 3..=12, letters 29..=54, punctuation above).
+pub fn encode_char(c: u8) -> i32 {
+    match c {
+        b'0'..=b'9' => 3 + (c - b'0') as i32,
+        b'a'..=b'z' => 29 + (c - b'a') as i32,
+        _ => PUNCT.iter().find(|(p, _)| *p == c).map(|(_, id)| *id).unwrap_or(20),
+    }
+}
+
+pub fn decode_char(id: i32) -> char {
+    match id {
+        PAD => '∅',
+        BOS => '^',
+        EOS => '$',
+        3..=12 => (b'0' + (id - 3) as u8) as char,
+        29..=54 => (b'a' + (id - 29) as u8) as char,
+        _ => PUNCT
+            .iter()
+            .find(|(_, i)| *i == id)
+            .map(|(p, _)| *p as char)
+            .unwrap_or('?'),
+    }
+}
+
+pub fn encode(s: &str) -> Vec<i32> {
+    s.bytes().map(encode_char).collect()
+}
+
+/// Encode with BOS prefix (prompt convention used by the rollout workers).
+pub fn encode_prompt(s: &str) -> Vec<i32> {
+    let mut out = vec![BOS];
+    out.extend(encode(s));
+    out
+}
+
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter().map(|&i| decode_char(i)).collect()
+}
+
+/// Decode, stopping at EOS and skipping PAD/BOS (what verifiers see).
+pub fn decode_clean(ids: &[i32]) -> String {
+    let mut out = String::new();
+    for &id in ids {
+        if id == EOS {
+            break;
+        }
+        if id == PAD || id == BOS {
+            continue;
+        }
+        out.push(decode_char(id));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "12+34=46 sort([3,1,2])>123.";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for c in 0u8..=255 {
+            let id = encode_char(c);
+            assert!((0..VOCAB_SIZE as i32).contains(&id), "{c} -> {id}");
+        }
+    }
+
+    #[test]
+    fn specials_distinct() {
+        let mut ids: Vec<i32> = (b'a'..=b'z').map(encode_char).collect();
+        ids.extend((b'0'..=b'9').map(encode_char));
+        ids.extend(PUNCT.iter().map(|(_, i)| *i));
+        ids.push(PAD);
+        ids.push(BOS);
+        ids.push(EOS);
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "vocabulary collision");
+    }
+
+    #[test]
+    fn decode_clean_stops_at_eos() {
+        let ids = vec![BOS, encode_char(b'4'), encode_char(b'2'), EOS, encode_char(b'9')];
+        assert_eq!(decode_clean(&ids), "42");
+    }
+
+    #[test]
+    fn prop_roundtrip_random_strings() {
+        prop::check("tokenizer roundtrip", 64, |rng, size| {
+            let alphabet = "abcdefghijklmnopqrstuvwxyz0123456789+-*=() ?:,[]|#>.~<_";
+            (0..size)
+                .map(|_| alphabet.as_bytes()[rng.usize(alphabet.len())] as char)
+                .collect::<String>()
+        }, |s| {
+            prop::ensure_eq(decode(&encode(s)), s.clone(), "roundtrip")
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Blocking HTTP/1.1 client. Every request carries an `x-node-id` header —
+//! the identity the relay firewall / rate limiter keys on (loopback peers
+//! all share 127.0.0.1, so the node id plays the role of the source IP).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::Response;
+
+#[derive(Clone)]
+pub struct HttpClient {
+    pub node_id: String,
+    pub timeout: Duration,
+    /// Simulated ingress bandwidth in bytes/sec (0 = unshaped); models a
+    /// heterogeneous worker's downlink (§4.2).
+    pub ingress_bytes_per_sec: u64,
+}
+
+impl HttpClient {
+    pub fn new(node_id: &str) -> HttpClient {
+        HttpClient {
+            node_id: node_id.to_string(),
+            timeout: Duration::from_secs(30),
+            ingress_bytes_per_sec: 0,
+        }
+    }
+
+    pub fn with_ingress(mut self, bps: u64) -> HttpClient {
+        self.ingress_bytes_per_sec = bps;
+        self
+    }
+
+    pub fn get(&self, url: &str) -> anyhow::Result<Response> {
+        self.request("GET", url, Vec::new())
+    }
+
+    pub fn post(&self, url: &str, body: Vec<u8>) -> anyhow::Result<Response> {
+        self.request("POST", url, body)
+    }
+
+    pub fn post_json(&self, url: &str, v: &crate::util::json::Json) -> anyhow::Result<Response> {
+        self.request("POST", url, v.to_string().into_bytes())
+    }
+
+    pub fn request(&self, method: &str, url: &str, body: Vec<u8>) -> anyhow::Result<Response> {
+        let rest = url.strip_prefix("http://").ok_or_else(|| anyhow::anyhow!("bad url: {url}"))?;
+        let (host, path) = match rest.split_once('/') {
+            Some((h, p)) => (h, format!("/{p}")),
+            None => (rest, "/".to_string()),
+        };
+        let mut stream = TcpStream::connect(host)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {host}\r\nx-node-id: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.node_id,
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&body)?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad status line: {status_line:?}"))?;
+
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_length = v.parse().unwrap_or(0);
+                }
+                headers.push((k, v));
+            }
+        }
+
+        let body = if self.ingress_bytes_per_sec == 0 {
+            let mut b = vec![0u8; content_length];
+            reader.read_exact(&mut b)?;
+            b
+        } else {
+            // Shaped read: consume in chunks, pacing to the downlink rate.
+            let mut b = Vec::with_capacity(content_length);
+            let start = std::time::Instant::now();
+            let mut chunk = vec![0u8; 64 * 1024];
+            while b.len() < content_length {
+                let want = chunk.len().min(content_length - b.len());
+                reader.read_exact(&mut chunk[..want])?;
+                b.extend_from_slice(&chunk[..want]);
+                let target = b.len() as f64 / self.ingress_bytes_per_sec as f64;
+                let actual = start.elapsed().as_secs_f64();
+                if target > actual {
+                    std::thread::sleep(Duration::from_secs_f64(target - actual));
+                }
+            }
+            b
+        };
+        Ok(Response { status, headers, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{HttpServer, ServerConfig};
+
+    #[test]
+    fn client_ingress_shaping() {
+        let body = vec![1u8; 256 * 1024];
+        let srv = HttpServer::start(ServerConfig::default(), move |_| super::Response::ok(body.clone())).unwrap();
+        let fast = HttpClient::new("fast");
+        let slow = HttpClient::new("slow").with_ingress(1024 * 1024);
+        let t0 = std::time::Instant::now();
+        fast.get(&srv.url()).unwrap();
+        let t_fast = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        slow.get(&srv.url()).unwrap();
+        let t_slow = t0.elapsed();
+        assert!(t_slow > t_fast, "{t_slow:?} vs {t_fast:?}");
+        assert!(t_slow.as_secs_f64() > 0.15);
+    }
+
+    #[test]
+    fn error_status_propagates() {
+        let srv = HttpServer::start(ServerConfig::default(), |_| super::Response::error(404, "nope")).unwrap();
+        let c = HttpClient::new("x");
+        let r = c.get(&format!("{}/missing", srv.url())).unwrap();
+        assert_eq!(r.status, 404);
+        assert_eq!(r.body, b"nope");
+    }
+}

@@ -1,0 +1,205 @@
+//! From-scratch HTTP/1.1 (the offline crate set has no hyper/tokio).
+//!
+//! Serves three roles in the reproduction:
+//! - SHARDCAST relay servers (§2.2) — shard uploads/downloads with
+//!   bandwidth shaping, per-IP rate limiting and an allowlist firewall;
+//! - the orchestrator / discovery-service APIs (§2.4);
+//! - the PRIME-RL step-counter endpoint inference workers poll (§2.1.2).
+
+pub mod client;
+pub mod server;
+
+pub use client::HttpClient;
+pub use server::{HttpServer, ServerConfig};
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Peer address as seen by the server (firewall / rate-limit key).
+    pub peer: String,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn query_u64(&self, key: &str, default: u64) -> u64 {
+        self.query.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn json(&self) -> anyhow::Result<crate::util::json::Json> {
+        Ok(crate::util::json::Json::parse(std::str::from_utf8(&self.body)?)?)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn ok(body: impl Into<Vec<u8>>) -> Response {
+        Response { status: 200, headers: Vec::new(), body: body.into() }
+    }
+
+    pub fn json(v: &crate::util::json::Json) -> Response {
+        let mut r = Response::ok(v.to_string().into_bytes());
+        r.headers.push(("content-type".into(), "application/json".into()));
+        r
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response { status, headers: Vec::new(), body: msg.as_bytes().to_vec() }
+    }
+
+    pub fn with_header(mut self, k: &str, v: &str) -> Response {
+        self.headers.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn status_text(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            403 => "Forbidden",
+            404 => "Not Found",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+pub(crate) fn parse_request(stream: &mut TcpStream, max_body: usize) -> anyhow::Result<Request> {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        anyhow::bail!("empty request line");
+    }
+
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(urldecode(k), urldecode(v));
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+    if len > max_body {
+        anyhow::bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, query, headers, body, peer })
+}
+
+pub(crate) fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-length: {}\r\nconnection: close\r\n",
+        resp.status,
+        Response::status_text(resp.status),
+        resp.body.len()
+    );
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+pub fn urlencode(s: &str) -> String {
+    let mut out = String::new();
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' | b'/' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+pub fn urldecode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' && i + 2 < b.len() + 1 && i + 2 < b.len() {
+            if let Ok(v) = u8::from_str_radix(&s[i + 1..i + 3], 16) {
+                out.push(v);
+                i += 3;
+                continue;
+            }
+        }
+        if b[i] == b'+' {
+            out.push(b' ');
+        } else {
+            out.push(b[i]);
+        }
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_roundtrip() {
+        let s = "a b/c?d=1&e=ü";
+        let enc = urlencode(s);
+        assert!(!enc.contains(' '));
+        assert_eq!(urldecode(&enc), s);
+    }
+
+    #[test]
+    fn status_text_known() {
+        assert_eq!(Response::status_text(429), "Too Many Requests");
+    }
+}

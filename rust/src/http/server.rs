@@ -1,0 +1,310 @@
+//! Threaded HTTP/1.1 server with the protections the paper configures on
+//! its nginx relays (§2.2.1): per-peer token-bucket rate limiting and a
+//! dynamic allowlist firewall (the UFW analogue), plus optional bandwidth
+//! shaping to emulate WAN links on loopback.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{parse_request, write_response, Request, Response};
+use crate::util::metrics::Counter;
+
+pub type Handler = dyn Fn(&Request) -> Response + Send + Sync + 'static;
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Requests per second allowed per peer key (0 = unlimited). The paper
+    /// rate-limits per IP on nginx; loopback peers all share an IP, so the
+    /// key is the `x-node-id` header when present, else the peer address.
+    pub rate_limit_rps: f64,
+    pub rate_limit_burst: f64,
+    /// When non-empty, only these node ids / peers may connect (UFW-style
+    /// dynamic firewall, §2.2.1).
+    pub firewall_enabled: bool,
+    /// Simulated egress bandwidth in bytes/sec (0 = unshaped). Applied per
+    /// response to emulate the 590 Mb/s-class WAN links of §4.2.
+    pub egress_bytes_per_sec: u64,
+    pub max_body: usize,
+    pub worker_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            rate_limit_rps: 0.0,
+            rate_limit_burst: 20.0,
+            firewall_enabled: false,
+            egress_bytes_per_sec: 0,
+            max_body: 256 << 20,
+            worker_threads: 4,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: Counter,
+    pub rejected_rate: Counter,
+    pub rejected_firewall: Counter,
+    pub bytes_out: Counter,
+}
+
+pub struct HttpServer {
+    pub addr: String,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    allowlist: Arc<RwLock<Vec<String>>>,
+    pub stats: Arc<ServerStats>,
+    /// Dynamically adjustable egress shaping (perf experiments tune this).
+    egress: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind to `127.0.0.1:0` (ephemeral port) and serve `handler`.
+    pub fn start<H>(cfg: ServerConfig, handler: H) -> anyhow::Result<HttpServer>
+    where
+        H: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let allowlist: Arc<RwLock<Vec<String>>> = Arc::new(RwLock::new(Vec::new()));
+        let stats = Arc::new(ServerStats::default());
+        let egress = Arc::new(AtomicU64::new(cfg.egress_bytes_per_sec));
+        let handler: Arc<Handler> = Arc::new(handler);
+        let buckets: Arc<Mutex<BTreeMap<String, Bucket>>> = Arc::new(Mutex::new(BTreeMap::new()));
+
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let cfg = cfg.clone();
+            let allowlist = Arc::clone(&allowlist);
+            let stats = Arc::clone(&stats);
+            let egress = Arc::clone(&egress);
+            let pool = crate::util::pool::ThreadPool::new(cfg.worker_threads);
+            std::thread::Builder::new().name("i2-http-accept".into()).spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let handler = Arc::clone(&handler);
+                            let cfg = cfg.clone();
+                            let allowlist = Arc::clone(&allowlist);
+                            let stats = Arc::clone(&stats);
+                            let egress = Arc::clone(&egress);
+                            let buckets = Arc::clone(&buckets);
+                            pool.submit(move || {
+                                handle_conn(stream, &cfg, &handler, &allowlist, &stats, &egress, &buckets);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_micros(300));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?
+        };
+
+        Ok(HttpServer { addr, cfg, stop, accept_thread: Some(accept_thread), allowlist, stats, egress })
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Replace the firewall allowlist with the currently active node set
+    /// (the orchestrator pushes this on pool membership changes, §2.2.1).
+    pub fn set_allowlist(&self, nodes: Vec<String>) {
+        *self.allowlist.write().unwrap() = nodes;
+    }
+
+    pub fn set_egress_bytes_per_sec(&self, bps: u64) {
+        self.egress.store(bps, Ordering::SeqCst);
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    cfg: &ServerConfig,
+    handler: &Arc<Handler>,
+    allowlist: &RwLock<Vec<String>>,
+    stats: &ServerStats,
+    egress: &AtomicU64,
+    buckets: &Mutex<BTreeMap<String, Bucket>>,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(20)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    let req = match parse_request(&mut stream, cfg.max_body) {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    stats.requests.inc();
+    let key = req.header("x-node-id").map(|s| s.to_string()).unwrap_or_else(|| req.peer.clone());
+
+    // Firewall: only currently-active pool members get through.
+    if cfg.firewall_enabled {
+        let allowed = allowlist.read().unwrap().iter().any(|n| *n == key);
+        if !allowed {
+            stats.rejected_firewall.inc();
+            let _ = write_response(&mut stream, &Response::error(403, "firewall: not in compute pool"));
+            return;
+        }
+    }
+
+    // Token-bucket rate limit per node id.
+    if cfg.rate_limit_rps > 0.0 {
+        let mut map = buckets.lock().unwrap();
+        let b = map
+            .entry(key)
+            .or_insert_with(|| Bucket { tokens: cfg.rate_limit_burst, last: Instant::now() });
+        let dt = b.last.elapsed().as_secs_f64();
+        b.last = Instant::now();
+        b.tokens = (b.tokens + dt * cfg.rate_limit_rps).min(cfg.rate_limit_burst);
+        if b.tokens < 1.0 {
+            drop(map);
+            stats.rejected_rate.inc();
+            let _ = write_response(&mut stream, &Response::error(429, "rate limited"));
+            return;
+        }
+        b.tokens -= 1.0;
+    }
+
+    let resp = handler(&req);
+    stats.bytes_out.add(resp.body.len() as u64);
+
+    let bps = egress.load(Ordering::SeqCst);
+    if bps == 0 {
+        let _ = write_response(&mut stream, &resp);
+        return;
+    }
+    // Bandwidth shaping: stream the body in 64 KiB chunks, sleeping to hold
+    // the configured rate (WAN emulation for §4.2 broadcast timing).
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-length: {}\r\nconnection: close\r\n",
+        resp.status,
+        Response::status_text(resp.status),
+        resp.body.len()
+    );
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    if stream.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    let chunk = 64 * 1024usize;
+    let start = Instant::now();
+    let mut sent = 0usize;
+    for part in resp.body.chunks(chunk) {
+        if stream.write_all(part).is_err() {
+            return;
+        }
+        sent += part.len();
+        let target = sent as f64 / bps as f64;
+        let actual = start.elapsed().as_secs_f64();
+        if target > actual {
+            std::thread::sleep(Duration::from_secs_f64(target - actual));
+        }
+    }
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::HttpClient;
+    use crate::util::json::Json;
+
+    fn echo_server(cfg: ServerConfig) -> HttpServer {
+        HttpServer::start(cfg, |req| {
+            Response::json(&Json::obj(vec![
+                ("path", req.path.as_str().into()),
+                ("body_len", req.body.len().into()),
+                ("q", req.query.get("q").cloned().unwrap_or_default().into()),
+            ]))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let srv = echo_server(ServerConfig::default());
+        let client = HttpClient::new("tester");
+        let resp = client.post(&format!("{}/x/y?q=hi%20there", srv.url()), b"abc".to_vec()).unwrap();
+        assert_eq!(resp.status, 200);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("path").unwrap().as_str().unwrap(), "/x/y");
+        assert_eq!(v.get("body_len").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.get("q").unwrap().as_str().unwrap(), "hi there");
+    }
+
+    #[test]
+    fn rate_limit_trips() {
+        let cfg = ServerConfig { rate_limit_rps: 5.0, rate_limit_burst: 3.0, ..Default::default() };
+        let srv = echo_server(cfg);
+        let client = HttpClient::new("flooder");
+        let mut limited = 0;
+        for _ in 0..10 {
+            let r = client.get(&format!("{}/", srv.url())).unwrap();
+            if r.status == 429 {
+                limited += 1;
+            }
+        }
+        assert!(limited >= 4, "{limited}");
+        assert!(srv.stats.rejected_rate.get() >= 4);
+    }
+
+    #[test]
+    fn firewall_blocks_unknown_nodes() {
+        let cfg = ServerConfig { firewall_enabled: true, ..Default::default() };
+        let srv = echo_server(cfg);
+        srv.set_allowlist(vec!["good-node".into()]);
+        let bad = HttpClient::new("evil-node");
+        assert_eq!(bad.get(&format!("{}/", srv.url())).unwrap().status, 403);
+        let good = HttpClient::new("good-node");
+        assert_eq!(good.get(&format!("{}/", srv.url())).unwrap().status, 200);
+        assert_eq!(srv.stats.rejected_firewall.get(), 1);
+    }
+
+    #[test]
+    fn bandwidth_shaping_slows_transfer() {
+        let body = vec![7u8; 512 * 1024];
+        let cfg = ServerConfig { egress_bytes_per_sec: 2 * 1024 * 1024, ..Default::default() };
+        let srv = HttpServer::start(cfg, move |_| Response::ok(body.clone())).unwrap();
+        let client = HttpClient::new("dl");
+        let t0 = Instant::now();
+        let r = client.get(&format!("{}/blob", srv.url())).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(r.body.len(), 512 * 1024);
+        // 512 KiB at 2 MiB/s ≈ 0.25 s.
+        assert!(dt > 0.15, "transfer too fast: {dt}");
+    }
+}

@@ -1,0 +1,34 @@
+//! INTELLECT-2 reproduction: globally decentralized reinforcement learning.
+//!
+//! This crate is Layer 3 of the three-layer stack (see DESIGN.md): the Rust
+//! coordinator owning the event loop, process topology, networking, metrics
+//! and CLI. The policy model itself (Layer 2, JAX) and its compute hot-spots
+//! (Layer 1, Pallas) are AOT-compiled to `artifacts/*.hlo.txt` and executed
+//! through [`runtime`] — Python never runs on any request or training path.
+//!
+//! Subsystems (paper section in parentheses):
+//! - [`util`], [`http`], [`data`]: from-scratch substrates (JSON, HTTP/1.1,
+//!   PRNG, metrics, bench/property harnesses, columnar rollout format,
+//!   tokenizer) — the vendored crate set has no tokio/serde/etc.
+//! - [`runtime`]: PJRT artifact loading + train/sample engines.
+//! - [`tasks`], [`verifier`], [`rl`]: training data, GENESYS-style reward
+//!   environments (§2.1.3, §3.1), GRPO batching/advantages/filtering
+//!   (§3.3), sequence packing (§4.1).
+//! - [`shardcast`]: policy weight broadcast network (§2.2).
+//! - [`toploc`]: trustless inference verification (§2.3).
+//! - [`protocol`]: ledger/discovery/orchestrator/worker lifecycle (§2.4).
+//! - [`coordinator`]: PRIME-RL — the asynchronous RL pipeline itself
+//!   (§2.1, §3.2).
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod http;
+pub mod protocol;
+pub mod rl;
+pub mod runtime;
+pub mod shardcast;
+pub mod tasks;
+pub mod toploc;
+pub mod util;
+pub mod verifier;

@@ -1,0 +1,93 @@
+//! `intellect2` launcher — the leader entrypoint.
+//!
+//!   intellect2 train  [--model nano --rl-steps 20 ...]   deterministic async-k pipeline
+//!   intellect2 swarm  [--workers 3 --relays 2 ...]       full decentralized swarm (HTTP)
+//!   intellect2 eval   [--model nano --eval-n 24]         held-out suite evaluation
+//!   intellect2 info   [--model nano]                     artifact/spec inspection
+//!
+//! Any `RunConfig` field can be overridden with `--key value` (see
+//! config::RunConfig::apply_args); `--config path` loads `key = value`
+//! lines first.
+
+use std::sync::Arc;
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::{Swarm, SyncPipeline};
+use intellect2::util::cli::Args;
+use intellect2::util::metrics::sparkline;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    cfg = cfg.apply_args(&args);
+
+    match cmd {
+        "train" => {
+            let pipeline = SyncPipeline::new(cfg.clone())?;
+            let state = pipeline.bootstrap()?;
+            pipeline.run_rl(state, cfg.rl_steps, "", false)?;
+            let reward: Vec<f64> =
+                pipeline.series.get("task_reward").iter().map(|x| x.1).collect();
+            println!(
+                "task reward {}  {:.3} -> {:.3}",
+                sparkline(&reward),
+                reward.first().unwrap_or(&0.0),
+                reward.last().unwrap_or(&0.0)
+            );
+            let out = args.str_or("out", "runs/train.jsonl");
+            pipeline.series.save(&out)?;
+            println!("series written to {out}");
+        }
+        "swarm" => {
+            let swarm = Swarm::new(cfg.clone())?;
+            let result = swarm.run(cfg.pretrain_steps, args.has_flag("evil-worker"))?;
+            println!(
+                "done: {} rollouts verified, {} submissions rejected, {} nodes slashed",
+                result.stats.rollouts_verified.get(),
+                result.stats.submissions_rejected.get(),
+                result.stats.nodes_slashed.get()
+            );
+            let out = args.str_or("out", "runs/swarm.jsonl");
+            result.series.save(&out)?;
+            println!("series written to {out}");
+        }
+        "eval" => {
+            let pipeline = SyncPipeline::new(cfg.clone())?;
+            let state = pipeline.bootstrap()?;
+            let params = Arc::new(state.params.clone());
+            let n = args.usize_or("eval-n", 24);
+            for suite in intellect2::tasks::eval::ALL_SUITES {
+                let score = pipeline.evaluate_suite(&params, suite, n)?;
+                println!("{:<40} {score:.1}%", suite.name());
+            }
+        }
+        "info" => {
+            let host = intellect2::runtime::EngineHost::spawn_size(&cfg.model)?;
+            let spec = host.spec();
+            println!("model {}: {} params", spec.name, spec.n_params);
+            println!(
+                "  d_model {} | layers {} | heads {} | ctx {} | vocab {}",
+                spec.d_model, spec.n_layers, spec.n_heads, spec.max_seq, spec.vocab
+            );
+            println!("  batch: train {} / infer {}", spec.batch_train, spec.batch_infer);
+            println!("  artifacts:");
+            for (name, meta) in &spec.artifacts {
+                println!(
+                    "    {name:<20} {} inputs, {} outputs ({})",
+                    meta.inputs.len(),
+                    meta.outputs.len(),
+                    meta.file
+                );
+            }
+        }
+        _ => {
+            println!("usage: intellect2 <train|swarm|eval|info> [--key value ...]");
+            println!("see README.md for the full flag reference");
+        }
+    }
+    Ok(())
+}

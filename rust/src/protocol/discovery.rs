@@ -1,0 +1,165 @@
+//! Discovery service (§2.4.1): nodes upload their metadata (hardware,
+//! invite endpoint); only the orchestrator — authenticated by token — can
+//! list them, so worker addresses stay hidden from other workers
+//! (DoS-surface reduction). In-memory store with TTL = the Redis stand-in.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::http::{HttpServer, Request, Response, ServerConfig};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeInfo {
+    pub address: u64,
+    /// Invite endpoint of the worker's webserver.
+    pub endpoint: String,
+    /// Simulated hardware metadata (GPU kind, VRAM GiB, uplink Mb/s).
+    pub gpu: String,
+    pub vram_gb: u64,
+    pub uplink_mbps: u64,
+    pub registered_ms: u64,
+}
+
+struct Inner {
+    nodes: BTreeMap<u64, NodeInfo>,
+    ttl_ms: u64,
+}
+
+#[derive(Clone)]
+pub struct DiscoveryService {
+    inner: Arc<Mutex<Inner>>,
+    pub token: String,
+}
+
+pub struct DiscoveryServer {
+    pub service: DiscoveryService,
+    pub server: HttpServer,
+}
+
+impl DiscoveryService {
+    fn sweep(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let now = crate::util::now_ms();
+        let ttl = inner.ttl_ms;
+        inner.nodes.retain(|_, n| now.saturating_sub(n.registered_ms) < ttl);
+    }
+
+    pub fn register(&self, info: NodeInfo) {
+        self.inner.lock().unwrap().nodes.insert(info.address, info);
+    }
+
+    pub fn list(&self) -> Vec<NodeInfo> {
+        self.sweep();
+        self.inner.lock().unwrap().nodes.values().cloned().collect()
+    }
+
+    pub fn remove(&self, address: u64) {
+        self.inner.lock().unwrap().nodes.remove(&address);
+    }
+}
+
+fn handle(svc: &DiscoveryService, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/register") => {
+            let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+            let g = |k: &str| j.get(k).and_then(Json::as_u64);
+            let (Some(address), Some(endpoint)) =
+                (g("address"), j.get("endpoint").and_then(Json::as_str))
+            else {
+                return Response::error(400, "missing fields");
+            };
+            svc.register(NodeInfo {
+                address,
+                endpoint: endpoint.to_string(),
+                gpu: j.get("gpu").and_then(Json::as_str).unwrap_or("sim").to_string(),
+                vram_gb: g("vram_gb").unwrap_or(24),
+                uplink_mbps: g("uplink_mbps").unwrap_or(100),
+                registered_ms: crate::util::now_ms(),
+            });
+            Response::ok("ok")
+        }
+        ("GET", "/nodes") => {
+            // Authorized components only (the orchestrator).
+            if req.query.get("token").map(String::as_str) != Some(svc.token.as_str()) {
+                return Response::error(401, "unauthorized");
+            }
+            let nodes: Vec<Json> = svc
+                .list()
+                .into_iter()
+                .map(|n| {
+                    Json::obj(vec![
+                        ("address", n.address.into()),
+                        ("endpoint", n.endpoint.into()),
+                        ("gpu", n.gpu.into()),
+                        ("vram_gb", n.vram_gb.into()),
+                        ("uplink_mbps", n.uplink_mbps.into()),
+                    ])
+                })
+                .collect();
+            Response::json(&Json::Arr(nodes))
+        }
+        _ => Response::error(404, "unknown endpoint"),
+    }
+}
+
+impl DiscoveryServer {
+    pub fn start(token: &str, ttl_ms: u64) -> anyhow::Result<DiscoveryServer> {
+        let service = DiscoveryService {
+            inner: Arc::new(Mutex::new(Inner { nodes: BTreeMap::new(), ttl_ms })),
+            token: token.to_string(),
+        };
+        let svc = service.clone();
+        let server = HttpServer::start(
+            ServerConfig { worker_threads: 2, ..Default::default() },
+            move |req| handle(&svc, req),
+        )?;
+        Ok(DiscoveryServer { service, server })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::HttpClient;
+
+    #[test]
+    fn register_list_with_auth() {
+        let d = DiscoveryServer::start("sekrit", 60_000).unwrap();
+        let c = HttpClient::new("n1");
+        let body = Json::obj(vec![
+            ("address", 42u64.into()),
+            ("endpoint", "http://127.0.0.1:9999".into()),
+            ("gpu", "sim-4090".into()),
+            ("vram_gb", 24u64.into()),
+        ]);
+        assert_eq!(c.post_json(&format!("{}/register", d.url()), &body).unwrap().status, 200);
+        // Unauthorized list.
+        assert_eq!(c.get(&format!("{}/nodes", d.url())).unwrap().status, 401);
+        assert_eq!(c.get(&format!("{}/nodes?token=wrong", d.url())).unwrap().status, 401);
+        // Authorized list.
+        let r = c.get(&format!("{}/nodes?token=sekrit", d.url())).unwrap();
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.idx(0).unwrap().get("address").unwrap().as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let d = DiscoveryServer::start("t", 1).unwrap();
+        d.service.register(NodeInfo {
+            address: 1,
+            endpoint: "e".into(),
+            gpu: "g".into(),
+            vram_gb: 8,
+            uplink_mbps: 50,
+            registered_ms: crate::util::now_ms(),
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(d.service.list().is_empty());
+    }
+}

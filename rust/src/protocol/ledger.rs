@@ -1,0 +1,299 @@
+//! The decentralized ledger (§2.4.1): compute domains and pools, worker
+//! registrations, contribution records, slashing — an append-only log of
+//! signed transactions with hash chaining. In-process stand-in for the
+//! paper's on-chain testnet (DESIGN.md substitutions).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use sha2::{Digest, Sha256};
+
+use super::identity::Identity;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tx {
+    CreatePool { domain: String, pool_id: u64, owner: u64 },
+    Register { pool_id: u64, node: u64 },
+    Invite { pool_id: u64, node: u64, orchestrator: u64 },
+    Contribution { pool_id: u64, node: u64, units: u64 },
+    Slash { pool_id: u64, node: u64, reason: String },
+    Evict { pool_id: u64, node: u64 },
+}
+
+impl Tx {
+    fn canonical(&self) -> Vec<u8> {
+        format!("{self:?}").into_bytes()
+    }
+
+    fn signer(&self) -> u64 {
+        match self {
+            Tx::CreatePool { owner, .. } => *owner,
+            Tx::Register { node, .. } => *node,
+            Tx::Invite { orchestrator, .. } => *orchestrator,
+            Tx::Contribution { node, .. } => *node,
+            Tx::Slash { .. } | Tx::Evict { .. } => 0, // pool owner, resolved below
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub seq: u64,
+    pub timestamp_ms: u64,
+    pub tx: Tx,
+    pub signer: u64,
+    pub sig: [u8; 32],
+    pub prev_hash: [u8; 32],
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<Entry>,
+    /// Registered identities (address -> secret), the "public key" registry.
+    keys: BTreeMap<u64, [u8; 32]>,
+    pools: BTreeMap<u64, (String, u64)>, // pool -> (domain, owner)
+    members: BTreeMap<u64, Vec<u64>>,    // pool -> active nodes
+    slashed: BTreeMap<u64, Vec<u64>>,    // pool -> slashed nodes
+    contributions: BTreeMap<(u64, u64), u64>, // (pool, node) -> units
+}
+
+/// Shared-handle ledger.
+#[derive(Clone, Default)]
+pub struct Ledger {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum LedgerError {
+    #[error("unknown signer {0}")]
+    UnknownSigner(u64),
+    #[error("bad signature")]
+    BadSignature,
+    #[error("unknown pool {0}")]
+    UnknownPool(u64),
+    #[error("not pool owner")]
+    NotOwner,
+    #[error("node {0} is slashed from pool")]
+    Slashed(u64),
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    /// Register an identity's key material (account creation).
+    pub fn register_key(&self, id: &Identity) {
+        self.inner.lock().unwrap().keys.insert(id.address, id.secret());
+    }
+
+    /// Submit a signed transaction. `signer_override` lets pool owners sign
+    /// Slash/Evict.
+    pub fn submit(&self, tx: Tx, signer: &Identity) -> Result<u64, LedgerError> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner.keys.get(&signer.address).copied().ok_or(LedgerError::UnknownSigner(signer.address))?;
+        // Verify the signature against the registered key (not the caller's
+        // claim): an imposter with a different secret fails here.
+        let sig = signer.sign(&tx.canonical());
+        {
+            use hmac::{Hmac, Mac};
+            let mut mac = Hmac::<Sha256>::new_from_slice(&key).expect("hmac");
+            mac.update(&tx.canonical());
+            let want: [u8; 32] = mac.finalize().into_bytes().into();
+            if want != sig {
+                return Err(LedgerError::BadSignature);
+            }
+        }
+        // Authorization rules.
+        match &tx {
+            Tx::CreatePool { owner, .. } => {
+                if *owner != signer.address {
+                    return Err(LedgerError::BadSignature);
+                }
+            }
+            Tx::Register { pool_id, node } | Tx::Contribution { pool_id, node, .. } => {
+                if !inner.pools.contains_key(pool_id) {
+                    return Err(LedgerError::UnknownPool(*pool_id));
+                }
+                if *node != signer.address {
+                    return Err(LedgerError::BadSignature);
+                }
+                if inner.slashed.get(pool_id).map(|s| s.contains(node)).unwrap_or(false) {
+                    return Err(LedgerError::Slashed(*node));
+                }
+            }
+            Tx::Invite { pool_id, .. } | Tx::Slash { pool_id, .. } | Tx::Evict { pool_id, .. } => {
+                let (_, owner) =
+                    inner.pools.get(pool_id).ok_or(LedgerError::UnknownPool(*pool_id))?;
+                // Invites come from the orchestrator == pool owner here.
+                if *owner != signer.address {
+                    return Err(LedgerError::NotOwner);
+                }
+            }
+        }
+        // Apply state transition.
+        match &tx {
+            Tx::CreatePool { domain, pool_id, owner } => {
+                inner.pools.insert(*pool_id, (domain.clone(), *owner));
+            }
+            Tx::Register { pool_id, node } => {
+                let members = inner.members.entry(*pool_id).or_default();
+                if !members.contains(node) {
+                    members.push(*node);
+                }
+            }
+            Tx::Invite { .. } => {}
+            Tx::Contribution { pool_id, node, units } => {
+                *inner.contributions.entry((*pool_id, *node)).or_default() += units;
+            }
+            Tx::Slash { pool_id, node, .. } => {
+                inner.slashed.entry(*pool_id).or_default().push(*node);
+                if let Some(m) = inner.members.get_mut(pool_id) {
+                    m.retain(|n| n != node);
+                }
+            }
+            Tx::Evict { pool_id, node } => {
+                if let Some(m) = inner.members.get_mut(pool_id) {
+                    m.retain(|n| n != node);
+                }
+            }
+        }
+        let prev_hash = inner
+            .entries
+            .last()
+            .map(|e| Sha256::digest(format!("{:?}{:?}", e.tx, e.sig)).into())
+            .unwrap_or([0u8; 32]);
+        let seq = inner.entries.len() as u64;
+        let signer_addr = if matches!(tx, Tx::Slash { .. } | Tx::Evict { .. } | Tx::Invite { .. }) {
+            signer.address
+        } else {
+            tx.signer()
+        };
+        inner.entries.push(Entry {
+            seq,
+            timestamp_ms: crate::util::unix_ms(),
+            tx,
+            signer: signer_addr,
+            sig,
+            prev_hash,
+        });
+        Ok(seq)
+    }
+
+    pub fn members(&self, pool_id: u64) -> Vec<u64> {
+        self.inner.lock().unwrap().members.get(&pool_id).cloned().unwrap_or_default()
+    }
+
+    pub fn is_slashed(&self, pool_id: u64, node: u64) -> bool {
+        self.inner.lock().unwrap().slashed.get(&pool_id).map(|s| s.contains(&node)).unwrap_or(false)
+    }
+
+    pub fn contribution(&self, pool_id: u64, node: u64) -> u64 {
+        self.inner.lock().unwrap().contributions.get(&(pool_id, node)).copied().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn entries(&self) -> Vec<Entry> {
+        self.inner.lock().unwrap().entries.clone()
+    }
+
+    /// Verify the hash chain (audit).
+    pub fn verify_chain(&self) -> bool {
+        let entries = self.entries();
+        let mut prev = [0u8; 32];
+        for e in &entries {
+            if e.prev_hash != prev {
+                return false;
+            }
+            prev = Sha256::digest(format!("{:?}{:?}", e.tx, e.sig)).into();
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Ledger, Identity, Identity) {
+        let ledger = Ledger::new();
+        let owner = Identity::from_seed(1);
+        let node = Identity::from_seed(2);
+        ledger.register_key(&owner);
+        ledger.register_key(&node);
+        ledger
+            .submit(Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address }, &owner)
+            .unwrap();
+        (ledger, owner, node)
+    }
+
+    #[test]
+    fn register_and_contribute() {
+        let (ledger, _owner, node) = setup();
+        ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node).unwrap();
+        assert_eq!(ledger.members(1), vec![node.address]);
+        ledger.submit(Tx::Contribution { pool_id: 1, node: node.address, units: 5 }, &node).unwrap();
+        ledger.submit(Tx::Contribution { pool_id: 1, node: node.address, units: 3 }, &node).unwrap();
+        assert_eq!(ledger.contribution(1, node.address), 8);
+        assert!(ledger.verify_chain());
+    }
+
+    #[test]
+    fn unregistered_signer_rejected() {
+        let (ledger, ..) = setup();
+        let stranger = Identity::from_seed(99);
+        assert_eq!(
+            ledger.submit(Tx::Register { pool_id: 1, node: stranger.address }, &stranger),
+            Err(LedgerError::UnknownSigner(stranger.address))
+        );
+    }
+
+    #[test]
+    fn cannot_register_for_someone_else() {
+        let (ledger, _owner, node) = setup();
+        let other = Identity::from_seed(3);
+        ledger.register_key(&other);
+        assert_eq!(
+            ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &other),
+            Err(LedgerError::BadSignature)
+        );
+    }
+
+    #[test]
+    fn slashing_requires_owner_and_blocks_reentry() {
+        let (ledger, owner, node) = setup();
+        ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node).unwrap();
+        // Node cannot slash itself/others.
+        assert_eq!(
+            ledger.submit(Tx::Slash { pool_id: 1, node: node.address, reason: "x".into() }, &node),
+            Err(LedgerError::NotOwner)
+        );
+        ledger
+            .submit(Tx::Slash { pool_id: 1, node: node.address, reason: "toploc".into() }, &owner)
+            .unwrap();
+        assert!(ledger.is_slashed(1, node.address));
+        assert!(ledger.members(1).is_empty());
+        // Slashed node cannot re-register.
+        assert_eq!(
+            ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node),
+            Err(LedgerError::Slashed(node.address))
+        );
+        assert!(ledger.verify_chain());
+    }
+
+    #[test]
+    fn unknown_pool_rejected() {
+        let (ledger, _, node) = setup();
+        assert_eq!(
+            ledger.submit(Tx::Register { pool_id: 7, node: node.address }, &node),
+            Err(LedgerError::UnknownPool(7))
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! The Prime Intellect protocol (paper §2.4): ledger, discovery service,
+//! orchestrator and worker software — permissionless compute coordination
+//! ("a decentralized SLURM").
+
+pub mod discovery;
+pub mod identity;
+pub mod ledger;
+pub mod orchestrator;
+pub mod worker;
+
+pub use discovery::{DiscoveryServer, DiscoveryService, NodeInfo};
+pub use identity::Identity;
+pub use ledger::{Ledger, LedgerError, Tx};
+pub use orchestrator::{NodeStatus, Orchestrator, OrchestratorServer, TaskSpec};
+pub use worker::{HardwareSpec, SharedVolume, TaskHandler, Worker};

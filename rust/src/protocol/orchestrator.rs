@@ -1,0 +1,397 @@
+//! Orchestrator (§2.4.1/§2.4.2): invites discovered nodes into the compute
+//! pool (signed invites validated on the ledger), tracks node health via
+//! heartbeats with missed-count eviction, and distributes tasks *in
+//! response to heartbeats* — the paper's reactive pull-based model.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::identity::Identity;
+use super::ledger::{Ledger, Tx};
+use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    Invited,
+    Active,
+    Dead,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: u64,
+    pub kind: String,
+    pub payload: Json,
+}
+
+#[derive(Clone, Debug)]
+struct NodeState {
+    status: NodeStatus,
+    last_heartbeat_ms: u64,
+    missed: u32,
+    current_task: Option<u64>,
+    logs: VecDeque<String>,
+}
+
+struct Inner {
+    nodes: BTreeMap<u64, NodeState>,
+    queue: VecDeque<TaskSpec>,
+    next_task_id: u64,
+}
+
+#[derive(Clone)]
+pub struct Orchestrator {
+    inner: Arc<Mutex<Inner>>,
+    pub identity: Arc<Identity>,
+    pub ledger: Ledger,
+    pub pool_id: u64,
+    pub heartbeat_timeout_ms: u64,
+    pub max_missed: u32,
+}
+
+pub struct OrchestratorServer {
+    pub orch: Orchestrator,
+    pub server: HttpServer,
+}
+
+impl Orchestrator {
+    pub fn new(identity: Identity, ledger: Ledger, pool_id: u64, heartbeat_timeout_ms: u64) -> Orchestrator {
+        Orchestrator {
+            inner: Arc::new(Mutex::new(Inner {
+                nodes: BTreeMap::new(),
+                queue: VecDeque::new(),
+                next_task_id: 0,
+            })),
+            identity: Arc::new(identity),
+            ledger,
+            pool_id,
+            heartbeat_timeout_ms,
+            max_missed: 3,
+        }
+    }
+
+    /// Periodic discovery sweep: invite any registered node we don't know.
+    /// The invite carries a signature over (node, pool, domain) which the
+    /// worker validates on the ledger (§2.4.2).
+    pub fn sweep_discovery(&self, discovery_url: &str, token: &str) -> usize {
+        let client = HttpClient::new("orchestrator");
+        let Ok(resp) = client.get(&format!("{discovery_url}/nodes?token={token}")) else {
+            return 0;
+        };
+        if resp.status != 200 {
+            return 0;
+        }
+        let Ok(list) = Json::parse(std::str::from_utf8(&resp.body).unwrap_or("")) else {
+            return 0;
+        };
+        let mut invited = 0;
+        for n in list.as_arr().unwrap_or(&[]) {
+            let (Some(addr), Some(endpoint)) = (
+                n.get("address").and_then(Json::as_u64),
+                n.get("endpoint").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            if self.inner.lock().unwrap().nodes.contains_key(&addr) {
+                continue;
+            }
+            if self.ledger.is_slashed(self.pool_id, addr) {
+                continue;
+            }
+            // Signed invite.
+            let msg = format!("invite:{addr}:{}:dist-rl", self.pool_id);
+            let sig = self.identity.sign(msg.as_bytes());
+            let body = Json::obj(vec![
+                ("pool_id", self.pool_id.into()),
+                ("domain", "dist-rl".into()),
+                ("node", addr.into()),
+                ("sig", Json::Str(crate::shardcast::manifest::hex(&sig))),
+            ]);
+            if let Ok(r) = client.post_json(&format!("{endpoint}/invite"), &body) {
+                if r.status == 200 {
+                    let _ = self.ledger.submit(
+                        Tx::Invite { pool_id: self.pool_id, node: addr, orchestrator: self.identity.address },
+                        &self.identity,
+                    );
+                    self.inner.lock().unwrap().nodes.insert(
+                        addr,
+                        NodeState {
+                            status: NodeStatus::Invited,
+                            last_heartbeat_ms: crate::util::now_ms(),
+                            missed: 0,
+                            current_task: None,
+                            logs: VecDeque::new(),
+                        },
+                    );
+                    invited += 1;
+                }
+            }
+        }
+        invited
+    }
+
+    /// Enqueue a task for pull-based distribution.
+    pub fn create_task(&self, kind: &str, payload: Json) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_task_id;
+        inner.next_task_id += 1;
+        inner.queue.push_back(TaskSpec { id, kind: kind.to_string(), payload });
+        id
+    }
+
+    /// Record a heartbeat; hand out a queued task if the node is idle.
+    pub fn heartbeat(&self, node: u64, log: Option<String>, task_done: Option<u64>) -> Option<TaskSpec> {
+        let mut inner = self.inner.lock().unwrap();
+        let state = inner.nodes.entry(node).or_insert_with(|| NodeState {
+            status: NodeStatus::Active,
+            last_heartbeat_ms: 0,
+            missed: 0,
+            current_task: None,
+            logs: VecDeque::new(),
+        });
+        state.status = NodeStatus::Active;
+        state.last_heartbeat_ms = crate::util::now_ms();
+        state.missed = 0;
+        if let Some(l) = log {
+            state.logs.push_back(l);
+            while state.logs.len() > 50 {
+                state.logs.pop_front();
+            }
+        }
+        if let Some(done) = task_done {
+            if state.current_task == Some(done) {
+                state.current_task = None;
+            }
+        }
+        if state.current_task.is_none() {
+            if let Some(task) = inner.queue.pop_front() {
+                inner.nodes.get_mut(&node).unwrap().current_task = Some(task.id);
+                return Some(task);
+            }
+        }
+        None
+    }
+
+    /// Health sweep: count missed heartbeats, mark dead + evict from the
+    /// ledger after `max_missed` (§2.4.2). Returns evicted node addresses.
+    pub fn health_sweep(&self) -> Vec<u64> {
+        let now = crate::util::now_ms();
+        let mut evicted = Vec::new();
+        let mut inner = self.inner.lock().unwrap();
+        for (&addr, st) in inner.nodes.iter_mut() {
+            if st.status == NodeStatus::Dead {
+                continue;
+            }
+            if now.saturating_sub(st.last_heartbeat_ms) > self.heartbeat_timeout_ms {
+                st.missed += 1;
+                st.last_heartbeat_ms = now;
+                if st.missed >= self.max_missed {
+                    st.status = NodeStatus::Dead;
+                    evicted.push(addr);
+                }
+            }
+        }
+        drop(inner);
+        for addr in &evicted {
+            let _ = self
+                .ledger
+                .submit(Tx::Evict { pool_id: self.pool_id, node: *addr }, &self.identity);
+        }
+        evicted
+    }
+
+    /// Slash a node after a TOPLOC rejection (§2.4.2 inference validation).
+    pub fn slash(&self, node: u64, reason: &str) {
+        let _ = self.ledger.submit(
+            Tx::Slash { pool_id: self.pool_id, node, reason: reason.to_string() },
+            &self.identity,
+        );
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(st) = inner.nodes.get_mut(&node) {
+            st.status = NodeStatus::Dead;
+        }
+    }
+
+    pub fn status(&self, node: u64) -> Option<NodeStatus> {
+        self.inner.lock().unwrap().nodes.get(&node).map(|s| s.status)
+    }
+
+    pub fn active_nodes(&self) -> Vec<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .iter()
+            .filter(|(_, s)| s.status == NodeStatus::Active)
+            .map(|(a, _)| *a)
+            .collect()
+    }
+
+    pub fn logs(&self, node: u64) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .get(&node)
+            .map(|s| s.logs.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+fn handle(orch: &Orchestrator, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/heartbeat") => {
+            let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+            let Some(node) = j.get("node").and_then(Json::as_u64) else {
+                return Response::error(400, "missing node");
+            };
+            let log = j.get("log").and_then(Json::as_str).map(str::to_string);
+            let done = j.get("task_done").and_then(Json::as_u64);
+            match orch.heartbeat(node, log, done) {
+                Some(task) => Response::json(&Json::obj(vec![
+                    ("task_id", task.id.into()),
+                    ("kind", task.kind.into()),
+                    ("payload", task.payload),
+                ])),
+                None => Response::json(&Json::obj(vec![("task_id", Json::Null)])),
+            }
+        }
+        ("POST", "/task") => {
+            let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+            let kind = j.get("kind").and_then(Json::as_str).unwrap_or("generic").to_string();
+            let payload = j.get("payload").cloned().unwrap_or(Json::Null);
+            let id = orch.create_task(&kind, payload);
+            Response::json(&Json::obj(vec![("task_id", id.into())]))
+        }
+        ("GET", "/nodes") => {
+            let nodes: Vec<Json> = orch
+                .inner
+                .lock()
+                .unwrap()
+                .nodes
+                .iter()
+                .map(|(a, s)| {
+                    Json::obj(vec![
+                        ("address", (*a).into()),
+                        ("status", format!("{:?}", s.status).into()),
+                        ("missed", (s.missed as u64).into()),
+                    ])
+                })
+                .collect();
+            Response::json(&Json::Arr(nodes))
+        }
+        ("GET", "/logs") => {
+            let node = req.query_u64("node", 0);
+            Response::json(&Json::Arr(orch.logs(node).into_iter().map(Json::Str).collect()))
+        }
+        _ => Response::error(404, "unknown endpoint"),
+    }
+}
+
+impl OrchestratorServer {
+    pub fn start(orch: Orchestrator) -> anyhow::Result<OrchestratorServer> {
+        let o = orch.clone();
+        let server = HttpServer::start(
+            ServerConfig { worker_threads: 2, ..Default::default() },
+            move |req| handle(&o, req),
+        )?;
+        Ok(OrchestratorServer { orch, server })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orch() -> Orchestrator {
+        let ledger = Ledger::new();
+        let owner = Identity::from_seed(1);
+        ledger.register_key(&owner);
+        ledger
+            .submit(Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address }, &owner)
+            .unwrap();
+        Orchestrator::new(owner, ledger, 1, 30)
+    }
+
+    #[test]
+    fn pull_based_task_distribution() {
+        let o = orch();
+        o.create_task("rollout", Json::Null);
+        o.create_task("rollout", Json::Null);
+        // First heartbeat gets task 0.
+        let t = o.heartbeat(10, None, None).unwrap();
+        assert_eq!(t.id, 0);
+        // Same node, still busy: nothing.
+        assert!(o.heartbeat(10, None, None).is_none());
+        // Second node gets task 1.
+        assert_eq!(o.heartbeat(11, None, None).unwrap().id, 1);
+        // Node 10 finishes, queue is empty.
+        assert!(o.heartbeat(10, Some("done".into()), Some(0)).is_none());
+        assert_eq!(o.logs(10), vec!["done".to_string()]);
+        assert_eq!(o.queue_len(), 0);
+    }
+
+    #[test]
+    fn health_sweep_evicts_after_missed_heartbeats() {
+        let o = orch();
+        o.heartbeat(7, None, None);
+        assert_eq!(o.status(7), Some(NodeStatus::Active));
+        // Three sweeps past the timeout -> dead + evicted on the ledger.
+        for _ in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(35));
+            o.health_sweep();
+        }
+        assert_eq!(o.status(7), Some(NodeStatus::Dead));
+        assert!(o.active_nodes().is_empty());
+    }
+
+    #[test]
+    fn heartbeats_keep_node_alive() {
+        let o = orch();
+        for _ in 0..5 {
+            o.heartbeat(7, None, None);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            o.health_sweep();
+        }
+        assert_eq!(o.status(7), Some(NodeStatus::Active));
+    }
+
+    #[test]
+    fn slash_marks_dead_and_ledger() {
+        let o = orch();
+        o.heartbeat(9, None, None);
+        o.slash(9, "toploc rejection");
+        assert_eq!(o.status(9), Some(NodeStatus::Dead));
+        assert!(o.ledger.is_slashed(1, 9));
+    }
+
+    #[test]
+    fn http_surface() {
+        let o = orch();
+        let srv = OrchestratorServer::start(o.clone()).unwrap();
+        let c = HttpClient::new("n");
+        let r = c
+            .post_json(
+                &format!("{}/task", srv.url()),
+                &Json::obj(vec![("kind", "rollout".into()), ("payload", Json::Null)]),
+            )
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let hb = c
+            .post_json(&format!("{}/heartbeat", srv.url()), &Json::obj(vec![("node", 5u64.into())]))
+            .unwrap();
+        let j = Json::parse(std::str::from_utf8(&hb.body).unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "rollout");
+        let nodes = c.get(&format!("{}/nodes", srv.url())).unwrap();
+        assert!(std::str::from_utf8(&nodes.body).unwrap().contains("Active"));
+    }
+}

@@ -1,0 +1,295 @@
+//! Worker software (§2.4.1/§2.4.2): detects (simulated) hardware, registers
+//! with discovery + ledger, starts a webserver and waits for a signed
+//! invite, then heartbeats the orchestrator and executes pulled tasks —
+//! the Docker-container lifecycle is a pluggable task handler, and the
+//! "shared volume" (persistent weights across restarts) is an in-memory
+//! blob store the handler can use.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::identity::Identity;
+use super::ledger::{Ledger, Tx};
+use super::orchestrator::TaskSpec;
+use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct HardwareSpec {
+    pub gpu: String,
+    pub vram_gb: u64,
+    pub uplink_mbps: u64,
+}
+
+impl HardwareSpec {
+    /// "Detect" simulated hardware from the node seed — heterogeneous by
+    /// construction, like the paper's community swarm.
+    pub fn detect(seed: u64) -> HardwareSpec {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x9A9D);
+        let (gpu, vram) = *rng.choice(&[
+            ("sim-3090", 24u64),
+            ("sim-4090", 24),
+            ("sim-a100", 80),
+            ("sim-h100", 80),
+            ("sim-3060", 12),
+        ]);
+        HardwareSpec {
+            gpu: gpu.to_string(),
+            vram_gb: vram,
+            uplink_mbps: 50 + rng.range(0, 950),
+        }
+    }
+
+    /// Compatibility check performed before registration (§2.4.2).
+    pub fn compatible(&self, min_vram_gb: u64) -> bool {
+        self.vram_gb >= min_vram_gb
+    }
+}
+
+/// Shared volume: survives task restarts so checkpoints aren't re-fetched
+/// (the paper's key insight about redundant downloads).
+#[derive(Clone, Default)]
+pub struct SharedVolume {
+    blobs: Arc<Mutex<std::collections::BTreeMap<String, Arc<Vec<u8>>>>>,
+}
+
+impl SharedVolume {
+    pub fn put(&self, key: &str, data: Vec<u8>) {
+        self.blobs.lock().unwrap().insert(key.to_string(), Arc::new(data));
+    }
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.blobs.lock().unwrap().get(key).cloned()
+    }
+    pub fn len(&self) -> usize {
+        self.blobs.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+pub type TaskHandler = dyn Fn(&TaskSpec, &SharedVolume) -> anyhow::Result<String> + Send + Sync;
+
+pub struct Worker {
+    pub identity: Identity,
+    pub hardware: HardwareSpec,
+    pub volume: SharedVolume,
+    invite_server: Option<HttpServer>,
+    invited: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    hb_thread: Option<std::thread::JoinHandle<()>>,
+    pub tasks_completed: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Worker {
+    /// Boot the worker: hardware check, webserver, discovery + ledger
+    /// registration. Returns Err if hardware is incompatible.
+    pub fn boot(
+        identity: Identity,
+        ledger: &Ledger,
+        pool_id: u64,
+        discovery_url: &str,
+        min_vram_gb: u64,
+    ) -> anyhow::Result<Worker> {
+        let hardware = HardwareSpec::detect(identity.address);
+        anyhow::ensure!(
+            hardware.compatible(min_vram_gb),
+            "incompatible hardware: {} ({} GiB VRAM < {min_vram_gb})",
+            hardware.gpu,
+            hardware.vram_gb
+        );
+        let invited = Arc::new(AtomicBool::new(false));
+        // Invite webserver: the worker doesn't know the orchestrator's
+        // endpoint in advance (DoS protection, §2.4.2).
+        let inv = Arc::clone(&invited);
+        let address = identity.address;
+        let invite_server = HttpServer::start(
+            ServerConfig { worker_threads: 1, ..Default::default() },
+            move |req| {
+                if req.method == "POST" && req.path == "/invite" {
+                    let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+                    if j.get("node").and_then(Json::as_u64) == Some(address) {
+                        inv.store(true, Ordering::SeqCst);
+                        return Response::ok("accepted");
+                    }
+                    return Response::error(400, "invite for someone else");
+                }
+                Response::error(404, "x")
+            },
+        )?;
+
+        // Register with discovery.
+        let c = HttpClient::new(&format!("worker-{address}"));
+        let body = Json::obj(vec![
+            ("address", address.into()),
+            ("endpoint", invite_server.url().into()),
+            ("gpu", hardware.gpu.clone().into()),
+            ("vram_gb", hardware.vram_gb.into()),
+            ("uplink_mbps", hardware.uplink_mbps.into()),
+        ]);
+        let r = c.post_json(&format!("{discovery_url}/register"), &body)?;
+        anyhow::ensure!(r.status == 200, "discovery registration failed: {}", r.status);
+
+        // Register on the ledger in parallel.
+        ledger.register_key(&identity);
+        ledger
+            .submit(Tx::Register { pool_id, node: identity.address }, &identity)
+            .map_err(|e| anyhow::anyhow!("ledger: {e}"))?;
+
+        Ok(Worker {
+            identity,
+            hardware,
+            volume: SharedVolume::default(),
+            invite_server: Some(invite_server),
+            invited,
+            stop: Arc::new(AtomicBool::new(false)),
+            hb_thread: None,
+            tasks_completed: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        })
+    }
+
+    pub fn is_invited(&self) -> bool {
+        self.invited.load(Ordering::SeqCst)
+    }
+
+    /// Start the heartbeat loop: poll the orchestrator, execute any pulled
+    /// task with `handler`, report completion + logs.
+    pub fn start_heartbeat(
+        &mut self,
+        orchestrator_url: String,
+        interval: std::time::Duration,
+        handler: Arc<TaskHandler>,
+    ) {
+        let stop = Arc::clone(&self.stop);
+        let address = self.identity.address;
+        let volume = self.volume.clone();
+        let completed = Arc::clone(&self.tasks_completed);
+        let t = std::thread::Builder::new()
+            .name(format!("i2-worker-{address}"))
+            .spawn(move || {
+                let client = HttpClient::new(&format!("worker-{address}"));
+                let mut done: Option<u64> = None;
+                let mut log: Option<String> = None;
+                while !stop.load(Ordering::SeqCst) {
+                    let mut body = vec![("node", Json::from(address))];
+                    if let Some(d) = done.take() {
+                        body.push(("task_done", d.into()));
+                    }
+                    if let Some(l) = log.take() {
+                        body.push(("log", l.into()));
+                    }
+                    let resp = client.post_json(&format!("{orchestrator_url}/heartbeat"), &Json::obj(body));
+                    if let Ok(r) = resp {
+                        if r.status == 200 {
+                            if let Ok(j) = Json::parse(std::str::from_utf8(&r.body).unwrap_or("")) {
+                                if let Some(task_id) = j.get("task_id").and_then(Json::as_u64) {
+                                    let task = TaskSpec {
+                                        id: task_id,
+                                        kind: j.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                                        payload: j.get("payload").cloned().unwrap_or(Json::Null),
+                                    };
+                                    match handler(&task, &volume) {
+                                        Ok(msg) => log = Some(msg),
+                                        Err(e) => log = Some(format!("task {task_id} failed: {e}")),
+                                    }
+                                    done = Some(task_id);
+                                    completed.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn heartbeat thread");
+        self.hb_thread = Some(t);
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.hb_thread.take() {
+            let _ = t.join();
+        }
+        self.invite_server.take();
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::discovery::DiscoveryServer;
+    use crate::protocol::orchestrator::{Orchestrator, OrchestratorServer};
+
+    fn pool() -> (Ledger, Identity) {
+        let ledger = Ledger::new();
+        let owner = Identity::from_seed(1);
+        ledger.register_key(&owner);
+        ledger
+            .submit(Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address }, &owner)
+            .unwrap();
+        (ledger, owner)
+    }
+
+    #[test]
+    fn full_lifecycle_register_invite_task_execute() {
+        let (ledger, owner) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        let orch = Orchestrator::new(owner, ledger.clone(), 1, 5_000);
+        let orch_srv = OrchestratorServer::start(orch.clone()).unwrap();
+
+        let mut worker = Worker::boot(Identity::from_seed(7), &ledger, 1, &discovery.url(), 8).unwrap();
+        assert!(!worker.is_invited());
+        assert_eq!(ledger.members(1), vec![worker.identity.address]);
+
+        // Orchestrator sweeps discovery and invites.
+        assert_eq!(orch.sweep_discovery(&discovery.url(), "tok"), 1);
+        assert!(worker.is_invited());
+
+        // Queue a task; worker pulls and executes it via heartbeats.
+        orch.create_task("echo", Json::Str("payload!".into()));
+        let handler: Arc<TaskHandler> = Arc::new(|task, vol| {
+            vol.put("weights", vec![1, 2, 3]);
+            Ok(format!("ran {} ({})", task.id, task.kind))
+        });
+        worker.start_heartbeat(orch_srv.url(), std::time::Duration::from_millis(10), handler);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while worker.tasks_completed.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "task never ran");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        // Shared volume persisted; logs reached the orchestrator.
+        assert_eq!(worker.volume.get("weights").unwrap().as_ref(), &vec![1, 2, 3]);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(orch.logs(worker.identity.address).iter().any(|l| l.contains("ran 0")));
+        worker.shutdown();
+    }
+
+    #[test]
+    fn incompatible_hardware_rejected() {
+        let (ledger, _) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        // Demand more VRAM than any simulated GPU has.
+        let err = match Worker::boot(Identity::from_seed(2), &ledger, 1, &discovery.url(), 999) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("boot should have failed"),
+        };
+        assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn slashed_node_not_reinvited() {
+        let (ledger, owner) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        let orch = Orchestrator::new(owner, ledger.clone(), 1, 5_000);
+        let worker = Worker::boot(Identity::from_seed(7), &ledger, 1, &discovery.url(), 8).unwrap();
+        orch.slash(worker.identity.address, "toploc");
+        assert_eq!(orch.sweep_discovery(&discovery.url(), "tok"), 0);
+        assert!(!worker.is_invited());
+    }
+}

@@ -1,0 +1,131 @@
+//! Group-relative advantages (GRPO, §3.4) and online filtering (§3.3.2).
+
+use super::Rollout;
+use std::collections::BTreeMap;
+
+/// Compute group-normalized advantages in place:
+/// A_i = (r_i - mean(group)) / (std(group) + eps). Returns per-group stats
+/// (group_id, mean, std, all_same_reward).
+pub fn compute_group_advantages(rollouts: &mut [Rollout]) -> Vec<(u64, f32, f32, bool)> {
+    let mut groups: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, r) in rollouts.iter().enumerate() {
+        groups.entry(r.group_id).or_default().push(i);
+    }
+    let mut stats = Vec::with_capacity(groups.len());
+    for (gid, idxs) in groups {
+        let n = idxs.len() as f32;
+        let mean = idxs.iter().map(|&i| rollouts[i].reward).sum::<f32>() / n;
+        let var = idxs.iter().map(|&i| (rollouts[i].reward - mean).powi(2)).sum::<f32>() / n;
+        let std = var.sqrt();
+        let degenerate = std < 1e-6;
+        for &i in &idxs {
+            rollouts[i].advantage = if degenerate {
+                0.0
+            } else {
+                (rollouts[i].reward - mean) / (std + 1e-4)
+            };
+        }
+        stats.push((gid, mean, std, degenerate));
+    }
+    stats
+}
+
+/// Online filtering (§3.3.2): keep only groups with non-zero advantage
+/// spread; all-same-reward groups contribute no training signal and are
+/// discarded (workers keep sampling until the batch fills). Returns
+/// (kept rollouts, number of discarded groups).
+pub fn online_filter(mut rollouts: Vec<Rollout>) -> (Vec<Rollout>, usize) {
+    let stats = compute_group_advantages(&mut rollouts);
+    let degenerate: Vec<u64> =
+        stats.iter().filter(|(_, _, _, d)| *d).map(|(g, ..)| *g).collect();
+    let n_discarded = degenerate.len();
+    let kept = rollouts
+        .into_iter()
+        .filter(|r| !degenerate.contains(&r.group_id))
+        .collect();
+    (kept, n_discarded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn mk(group: u64, reward: f32) -> Rollout {
+        Rollout {
+            task_id: 0,
+            group_id: group,
+            policy_step: 0,
+            tokens: vec![1, 5, 6, 2],
+            prompt_len: 2,
+            target_len: None,
+            task_reward: reward,
+            length_penalty: 0.0,
+            reward,
+            advantage: 0.0,
+            sampled_probs: vec![0.5, 0.5],
+            node_address: 0,
+        }
+    }
+
+    #[test]
+    fn advantages_zero_mean_within_group() {
+        let mut rs = vec![mk(1, 1.0), mk(1, 0.0), mk(1, 1.0), mk(1, 0.0)];
+        compute_group_advantages(&mut rs);
+        let sum: f32 = rs.iter().map(|r| r.advantage).sum();
+        assert!(sum.abs() < 1e-4);
+        assert!(rs[0].advantage > 0.0 && rs[1].advantage < 0.0);
+    }
+
+    #[test]
+    fn degenerate_groups_get_zero_advantage() {
+        let mut rs = vec![mk(7, 1.0), mk(7, 1.0), mk(8, 0.0), mk(8, 0.0)];
+        let stats = compute_group_advantages(&mut rs);
+        assert!(rs.iter().all(|r| r.advantage == 0.0));
+        assert!(stats.iter().all(|(_, _, _, d)| *d));
+    }
+
+    #[test]
+    fn online_filter_drops_uninformative_groups() {
+        let rs = vec![
+            mk(1, 1.0),
+            mk(1, 0.0),
+            mk(2, 1.0),
+            mk(2, 1.0), // degenerate
+            mk(3, 0.0),
+            mk(3, 0.0), // degenerate
+        ];
+        let (kept, dropped) = online_filter(rs);
+        assert_eq!(dropped, 2);
+        assert_eq!(kept.len(), 2);
+        assert!(kept.iter().all(|r| r.group_id == 1));
+    }
+
+    #[test]
+    fn prop_groups_isolated() {
+        prop::check("advantage group isolation", 48, |rng: &mut Rng, size| {
+            let n_groups = 1 + rng.usize(4);
+            let mut rs = Vec::new();
+            for g in 0..n_groups {
+                for _ in 0..(2 + rng.usize(size as usize % 6 + 1)) {
+                    rs.push(mk(g as u64, if rng.bool(0.5) { 1.0 } else { 0.0 }));
+                }
+            }
+            rs
+        }, |rs| {
+            let mut a = rs.clone();
+            compute_group_advantages(&mut a);
+            // Per-group advantage sums vanish; magnitudes bounded.
+            let mut sums: BTreeMap<u64, f32> = BTreeMap::new();
+            for r in &a {
+                *sums.entry(r.group_id).or_default() += r.advantage;
+                prop::ensure(r.advantage.abs() < 100.0, "bounded")?;
+            }
+            for (_, s) in sums {
+                prop::ensure(s.abs() < 1e-3, "zero mean per group")?;
+            }
+            Ok(())
+        });
+    }
+}

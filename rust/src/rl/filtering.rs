@@ -1,0 +1,76 @@
+//! Offline difficulty filtering (paper §3.3.1): estimate the base model's
+//! pass@k per task, keep tasks inside a difficulty band. The paper filters
+//! Deepscaler math with DeepSeek-R1-Distill-Qwen-7B, keeping pass@8 between
+//! 12.5% and 50% (1..=4 of 8); we reproduce the same band logic.
+
+#[derive(Clone, Copy, Debug)]
+pub struct FilterBand {
+    pub k: usize,
+    /// Keep tasks with at least this many passes out of k...
+    pub min_pass: usize,
+    /// ...and at most this many.
+    pub max_pass: usize,
+}
+
+impl Default for FilterBand {
+    /// The paper's band: pass@8 in [1, 4] (12.5%..50%).
+    fn default() -> Self {
+        FilterBand { k: 8, min_pass: 1, max_pass: 4 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PassStats {
+    /// (task_id, passes out of k).
+    pub per_task: Vec<(u64, usize)>,
+}
+
+impl PassStats {
+    pub fn record(&mut self, task_id: u64, passes: usize) {
+        self.per_task.push((task_id, passes));
+    }
+
+    /// Task ids inside the band (the filtered training set).
+    pub fn keep(&self, band: &FilterBand) -> Vec<u64> {
+        self.per_task
+            .iter()
+            .filter(|(_, p)| *p >= band.min_pass && *p <= band.max_pass)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Fractions (too_easy, in_band, too_hard) for reporting.
+    pub fn band_fractions(&self, band: &FilterBand) -> (f64, f64, f64) {
+        let n = self.per_task.len().max(1) as f64;
+        let easy = self.per_task.iter().filter(|(_, p)| *p > band.max_pass).count() as f64;
+        let hard = self.per_task.iter().filter(|(_, p)| *p < band.min_pass).count() as f64;
+        (easy / n, 1.0 - (easy + hard) / n, hard / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_keeps_middle() {
+        let mut s = PassStats::default();
+        s.record(0, 0); // too hard
+        s.record(1, 1); // keep
+        s.record(2, 4); // keep
+        s.record(3, 5); // too easy
+        s.record(4, 8); // too easy
+        let band = FilterBand::default();
+        assert_eq!(s.keep(&band), vec![1, 2]);
+        let (easy, mid, hard) = s.band_fractions(&band);
+        assert!((easy - 0.4).abs() < 1e-9);
+        assert!((mid - 0.4).abs() < 1e-9);
+        assert!((hard - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let s = PassStats::default();
+        assert!(s.keep(&FilterBand::default()).is_empty());
+    }
+}

@@ -1,0 +1,40 @@
+//! The GRPO training-recipe layer (paper §3): rewards (task + length),
+//! group advantages, online/offline data filtering, sequence packing.
+
+pub mod advantage;
+pub mod filtering;
+pub mod packing;
+pub mod reward;
+pub mod rollout_file;
+
+/// One verified rollout as it flows trainer-ward: produced by an inference
+/// worker, checked by a TOPLOC validator, packed into micro-batches by the
+/// trainer.
+#[derive(Clone, Debug)]
+pub struct Rollout {
+    pub task_id: u64,
+    /// GRPO group: all completions of one prompt instance share this.
+    pub group_id: u64,
+    /// RL step whose policy generated this rollout (async-k bookkeeping).
+    pub policy_step: u64,
+    /// Prompt + completion tokens (BOS-prefixed, EOS-terminated if any).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Thinking-budget target, if the prompt carried one (§3.1.2).
+    pub target_len: Option<usize>,
+    pub task_reward: f32,
+    pub length_penalty: f32,
+    pub reward: f32,
+    /// Filled by group-advantage computation.
+    pub advantage: f32,
+    /// Model probability of each sampled completion token (TOPLOC input).
+    pub sampled_probs: Vec<f32>,
+    /// Producing node (slashing / seed-reproduction bookkeeping).
+    pub node_address: u64,
+}
+
+impl Rollout {
+    pub fn completion_len(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}

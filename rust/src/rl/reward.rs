@@ -1,0 +1,130 @@
+//! Rewards (paper §3.1): binary task reward plus the L1-style length
+//! penalty  r_total = r_task - alpha * |l_target - l_y|.
+
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+use crate::verifier::Registry;
+
+#[derive(Clone, Debug)]
+pub struct RewardConfig {
+    /// Length-penalty weight (paper §4.1 uses 0.0003 at 32K context; our
+    /// sequences are ~100x shorter so the default is scaled up).
+    pub alpha: f32,
+    /// Discrete target-length set sampled per prompt (§3.1.2 — discrete,
+    /// unlike L1's continuous range). Empty = no length rewards.
+    pub targets: Vec<usize>,
+}
+
+impl Default for RewardConfig {
+    fn default() -> Self {
+        RewardConfig { alpha: 0.0, targets: Vec::new() }
+    }
+}
+
+impl RewardConfig {
+    /// TARGET-SHORT analogue (paper: {1000,2000,3000,4000} at 32K ctx;
+    /// scaled to our 256-token context).
+    pub fn target_short() -> RewardConfig {
+        RewardConfig { alpha: 0.01, targets: vec![16, 32, 48, 64] }
+    }
+
+    /// TARGET-LONG analogue (paper: {2000,...,10000}).
+    pub fn target_long() -> RewardConfig {
+        RewardConfig { alpha: 0.01, targets: vec![32, 64, 96, 128, 160] }
+    }
+
+    /// Sample a thinking budget for a prompt (None if length rewards off).
+    pub fn sample_target(&self, rng: &mut Rng) -> Option<usize> {
+        if self.targets.is_empty() {
+            None
+        } else {
+            Some(*rng.choice(&self.targets))
+        }
+    }
+}
+
+/// Task reward: binary verifiable (1 correct / 0 incorrect), §3.1.1.
+pub fn task_reward(reg: &Registry, task: &Task, completion: &str) -> f32 {
+    if reg.verify(task, completion) {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Length penalty term (0 when no target was requested).
+pub fn length_penalty(alpha: f32, completion_len: usize, target: Option<usize>) -> f32 {
+    match target {
+        Some(t) => alpha * (completion_len as f32 - t as f32).abs(),
+        None => 0.0,
+    }
+}
+
+/// Total reward r_task - alpha * |l_target - l_y|.
+pub fn total_reward(task_r: f32, alpha: f32, completion_len: usize, target: Option<usize>) -> f32 {
+    task_r - length_penalty(alpha, completion_len, target)
+}
+
+/// Validator-side value-bounds check (§2.3.3): rewards/advantages reported
+/// by untrusted parties must be plausible.
+pub fn reward_in_bounds(cfg: &RewardConfig, reward: f32, max_completion: usize) -> bool {
+    let max_pen = match cfg.targets.iter().max() {
+        Some(&t) => cfg.alpha * (t.max(max_completion)) as f32,
+        None => 0.0,
+    };
+    reward.is_finite() && reward <= 1.0 + 1e-6 && reward >= -max_pen - 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::math;
+
+    #[test]
+    fn binary_task_reward() {
+        let reg = Registry::default();
+        let mut rng = Rng::new(1);
+        let t = math::generate(0, 0, &mut rng);
+        assert_eq!(task_reward(&reg, &t, &t.answer), 1.0);
+        assert_eq!(task_reward(&reg, &t, "wrong"), 0.0);
+    }
+
+    #[test]
+    fn length_penalty_shape() {
+        assert_eq!(length_penalty(0.01, 64, Some(64)), 0.0);
+        assert!((length_penalty(0.01, 32, Some(64)) - 0.32).abs() < 1e-6);
+        assert_eq!(length_penalty(0.01, 32, None), 0.0);
+        // Penalty symmetric: overshoot == undershoot.
+        assert_eq!(
+            length_penalty(0.01, 96, Some(64)),
+            length_penalty(0.01, 32, Some(64))
+        );
+    }
+
+    #[test]
+    fn totals_combine() {
+        assert!((total_reward(1.0, 0.01, 32, Some(64)) - 0.68).abs() < 1e-6);
+        assert_eq!(total_reward(0.0, 0.0, 100, None), 0.0);
+    }
+
+    #[test]
+    fn bounds_check() {
+        let cfg = RewardConfig::target_short();
+        assert!(reward_in_bounds(&cfg, 1.0, 128));
+        assert!(reward_in_bounds(&cfg, -0.5, 128));
+        assert!(!reward_in_bounds(&cfg, 5.0, 128));
+        assert!(!reward_in_bounds(&cfg, f32::NAN, 128));
+        assert!(!reward_in_bounds(&cfg, -100.0, 128));
+    }
+
+    #[test]
+    fn target_sampling_from_discrete_set() {
+        let cfg = RewardConfig::target_short();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let t = cfg.sample_target(&mut rng).unwrap();
+            assert!(cfg.targets.contains(&t));
+        }
+        assert_eq!(RewardConfig::default().sample_target(&mut rng), None);
+    }
+}

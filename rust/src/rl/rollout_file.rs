@@ -1,0 +1,206 @@
+//! Wire format for rollout submissions: `rpq` files exchanged between
+//! inference workers, TOPLOC validators and the trainer (§2.1.1 uses
+//! Parquet; `rpq` is the from-scratch stand-in — see data::rpq).
+
+use super::Rollout;
+use crate::data::rpq::{Column, DType, RpqFile, Schema};
+
+/// A rollout plus the trust metadata the validator consumes.
+#[derive(Clone, Debug)]
+pub struct WireRollout {
+    pub rollout: Rollout,
+    /// Encoded TOPLOC commitment (toploc::Commitment bytes).
+    pub commitment: Vec<u8>,
+    /// True if the sequence terminated on EOS (else hit max length).
+    pub finish_eos: bool,
+    /// Model probability of EOS at the terminating step (§2.3.2).
+    pub eos_prob: f32,
+}
+
+/// One uploaded file = one batch from one node for one step.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub node_address: u64,
+    pub step: u64,
+    /// Submission index for this node/step (seed formula input, §2.3.3).
+    pub submission_idx: u64,
+    pub rollouts: Vec<WireRollout>,
+}
+
+pub fn schema() -> Schema {
+    vec![
+        ("node", DType::U64),
+        ("step", DType::U64),
+        ("submission_idx", DType::U64),
+        ("task_id", DType::U64),
+        ("group_id", DType::U64),
+        ("prompt_len", DType::U64),
+        ("target_len", DType::U64),
+        ("finish_eos", DType::U64),
+        ("tokens", DType::I32List),
+        ("task_reward", DType::F32),
+        ("length_penalty", DType::F32),
+        ("reward", DType::F32),
+        ("eos_prob", DType::F32),
+        ("sampled_probs", DType::F32List),
+        ("commitment", DType::Bytes),
+    ]
+}
+
+impl Submission {
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.rollouts.len();
+        let rs = &self.rollouts;
+        let mut f = RpqFile::new();
+        f.push("node", Column::U64(vec![self.node_address; n]))
+            .push("step", Column::U64(vec![self.step; n]))
+            .push("submission_idx", Column::U64(vec![self.submission_idx; n]))
+            .push("task_id", Column::U64(rs.iter().map(|r| r.rollout.task_id).collect()))
+            .push("group_id", Column::U64(rs.iter().map(|r| r.rollout.group_id).collect()))
+            .push("prompt_len", Column::U64(rs.iter().map(|r| r.rollout.prompt_len as u64).collect()))
+            .push(
+                "target_len",
+                Column::U64(rs.iter().map(|r| r.rollout.target_len.unwrap_or(0) as u64).collect()),
+            )
+            .push("finish_eos", Column::U64(rs.iter().map(|r| r.finish_eos as u64).collect()))
+            .push("tokens", Column::I32List(rs.iter().map(|r| r.rollout.tokens.clone()).collect()))
+            .push("task_reward", Column::F32(rs.iter().map(|r| r.rollout.task_reward).collect()))
+            .push(
+                "length_penalty",
+                Column::F32(rs.iter().map(|r| r.rollout.length_penalty).collect()),
+            )
+            .push("reward", Column::F32(rs.iter().map(|r| r.rollout.reward).collect()))
+            .push("eos_prob", Column::F32(rs.iter().map(|r| r.eos_prob).collect()))
+            .push(
+                "sampled_probs",
+                Column::F32List(rs.iter().map(|r| r.rollout.sampled_probs.clone()).collect()),
+            )
+            .push("commitment", Column::Bytes(rs.iter().map(|r| r.commitment.clone()).collect()));
+        f.encode()
+    }
+
+    /// Decode + schema-validate (the validator's "parquet formatting
+    /// check": anything that would throw in the trainer dataloader is
+    /// rejected here).
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Submission> {
+        let f = RpqFile::decode(bytes)?;
+        f.validate_schema(&schema())?;
+        let n = f.n_rows();
+        anyhow::ensure!(n > 0, "empty submission");
+        let u64s = |name: &str| f.col(name).unwrap().as_u64().unwrap().to_vec();
+        let f32s = |name: &str| f.col(name).unwrap().as_f32().unwrap().to_vec();
+        let node = u64s("node");
+        let step = u64s("step");
+        let sub = u64s("submission_idx");
+        anyhow::ensure!(
+            node.windows(2).all(|w| w[0] == w[1])
+                && step.windows(2).all(|w| w[0] == w[1])
+                && sub.windows(2).all(|w| w[0] == w[1]),
+            "mixed node/step/submission in one file"
+        );
+        let task_id = u64s("task_id");
+        let group_id = u64s("group_id");
+        let prompt_len = u64s("prompt_len");
+        let target_len = u64s("target_len");
+        let finish = u64s("finish_eos");
+        let tokens = f.col("tokens").unwrap().as_i32_list().unwrap().to_vec();
+        let task_reward = f32s("task_reward");
+        let length_penalty = f32s("length_penalty");
+        let reward = f32s("reward");
+        let eos_prob = f32s("eos_prob");
+        let probs = f.col("sampled_probs").unwrap().as_f32_list().unwrap().to_vec();
+        let commits = f.col("commitment").unwrap().as_bytes().unwrap().to_vec();
+
+        let rollouts = (0..n)
+            .map(|i| {
+                anyhow::ensure!(
+                    (prompt_len[i] as usize) < tokens[i].len().max(1),
+                    "row {i}: prompt_len >= tokens"
+                );
+                Ok(WireRollout {
+                    rollout: Rollout {
+                        task_id: task_id[i],
+                        group_id: group_id[i],
+                        policy_step: step[i],
+                        tokens: tokens[i].clone(),
+                        prompt_len: prompt_len[i] as usize,
+                        target_len: if target_len[i] == 0 { None } else { Some(target_len[i] as usize) },
+                        task_reward: task_reward[i],
+                        length_penalty: length_penalty[i],
+                        reward: reward[i],
+                        advantage: 0.0,
+                        sampled_probs: probs[i].clone(),
+                        node_address: node[i],
+                    },
+                    commitment: commits[i].clone(),
+                    finish_eos: finish[i] != 0,
+                    eos_prob: eos_prob[i],
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Submission { node_address: node[0], step: step[0], submission_idx: sub[0], rollouts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_submission() -> Submission {
+        let mk = |task: u64, group: u64, len: usize| WireRollout {
+            rollout: Rollout {
+                task_id: task,
+                group_id: group,
+                policy_step: 4,
+                tokens: (0..len as i32).map(|i| 1 + i % 60).collect(),
+                prompt_len: 3,
+                target_len: if task % 2 == 0 { Some(32) } else { None },
+                task_reward: (task % 2) as f32,
+                length_penalty: 0.01,
+                reward: (task % 2) as f32 - 0.01,
+                advantage: 0.0,
+                sampled_probs: vec![0.4; len - 3],
+                node_address: 0xAB,
+            },
+            commitment: vec![1, 2, 3, task as u8],
+            finish_eos: task % 2 == 0,
+            eos_prob: 0.5,
+        };
+        Submission {
+            node_address: 0xAB,
+            step: 4,
+            submission_idx: 1,
+            rollouts: vec![mk(0, 0, 10), mk(1, 0, 14), mk(2, 1, 8)],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample_submission();
+        let bytes = s.encode();
+        let d = Submission::decode(&bytes).unwrap();
+        assert_eq!(d.node_address, 0xAB);
+        assert_eq!(d.step, 4);
+        assert_eq!(d.rollouts.len(), 3);
+        assert_eq!(d.rollouts[1].rollout.tokens, s.rollouts[1].rollout.tokens);
+        assert_eq!(d.rollouts[0].rollout.target_len, Some(32));
+        assert_eq!(d.rollouts[1].rollout.target_len, None);
+        assert_eq!(d.rollouts[2].commitment, vec![1, 2, 3, 2]);
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let mut bytes = sample_submission().encode();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0x55;
+        assert!(Submission::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        // A structurally-valid rpq file with the wrong columns.
+        let mut f = RpqFile::new();
+        f.push("whatever", Column::U64(vec![1]));
+        assert!(Submission::decode(&f.encode()).is_err());
+    }
+}

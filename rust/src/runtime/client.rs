@@ -1,0 +1,145 @@
+//! PJRT runtime: load `artifacts/<size>/*.hlo.txt`, compile once per
+//! process, execute from the coordinator hot paths. Mirrors
+//! /opt/xla-example/load_hlo (HLO text -> HloModuleProto -> compile).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::spec::ModelSpec;
+
+/// A PJRT runtime bound to one artifact directory.
+///
+/// NOTE: `xla::PjRtClient` is `Rc`-based and thread-confined, so a
+/// `Runtime` must stay on the thread that created it. Cross-thread access
+/// goes through [`super::host::EngineHost`], which owns a `Runtime` on a
+/// dedicated thread and serves requests over channels — exactly how a real
+/// deployment runs one inference server process per node.
+pub struct Runtime {
+    pub spec: ModelSpec,
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load a model's artifact directory (e.g. `artifacts/nano`).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Rc<Runtime>> {
+        let dir = dir.as_ref().to_path_buf();
+        let spec_text = std::fs::read_to_string(dir.join("spec.json"))
+            .map_err(|e| anyhow::anyhow!("read {}/spec.json: {e} (run `make artifacts`)", dir.display()))?;
+        let spec = ModelSpec::parse(&spec_text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Rc::new(Runtime { spec, client, dir, exes: RefCell::new(HashMap::new()) }))
+    }
+
+    /// Locate the artifacts directory from the repo root (tests/examples).
+    pub fn artifacts_dir(size: &str) -> PathBuf {
+        let base = std::env::var("I2_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        PathBuf::from(base).join(size)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (once) and return the named artifact's executable.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self.spec.artifact(name)?;
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        crate::debug!(
+            "runtime",
+            "compiled {}/{name} in {:.2}s",
+            self.spec.name,
+            t0.elapsed().as_secs_f64()
+        );
+        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host literals; returns the decomposed
+    /// output tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn call(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let meta = self.spec.artifact(name)?;
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: {} inputs supplied, {} expected",
+            inputs.len(),
+            meta.inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let outs = exe.execute::<xla::Literal>(inputs)?;
+        let mut tuple = outs[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+}
+
+// --- literal helpers -------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> xla::Literal {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .expect("create f32 literal")
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> xla::Literal {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .expect("create i32 literal")
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32(l: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn first_f32(l: &xla::Literal) -> anyhow::Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        let ids = vec![1i32, -2, 3];
+        let lit = lit_i32(&ids, &[3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), ids);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(first_f32(&scalar_f32(2.5)).unwrap(), 2.5);
+        assert_eq!(scalar_i32(-7).get_first_element::<i32>().unwrap(), -7);
+    }
+}

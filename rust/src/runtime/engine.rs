@@ -1,0 +1,463 @@
+//! Engines over the AOT artifacts: training (GRPO/pretrain/logprobs),
+//! sampling (batched KV-cache autoregressive generation, §2.1.2) and
+//! validation (prefill recompute for TOPLOC, §2.3.1).
+
+use std::rc::Rc;
+
+use super::client::{first_f32, lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, to_f32, Runtime};
+use sha2::{Digest, Sha256};
+
+/// Host-side parameter set in the canonical order of `spec.param_specs`.
+#[derive(Clone)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    pub fn zeros_like(rt: &Runtime) -> ParamSet {
+        ParamSet {
+            tensors: rt
+                .spec
+                .param_specs
+                .iter()
+                .map(|(_, s)| vec![0.0; s.iter().product()])
+                .collect(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Flat little-endian f32 serialization (the SHARDCAST payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.n_params() * 4);
+        for t in &self.tensors {
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4) };
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    pub fn from_bytes(rt: &Runtime, bytes: &[u8]) -> anyhow::Result<ParamSet> {
+        Self::from_bytes_spec(&rt.spec, bytes)
+    }
+
+    /// Deserialize against a bare spec (no runtime needed — worker threads
+    /// use this on SHARDCAST payloads).
+    pub fn from_bytes_spec(spec: &super::spec::ModelSpec, bytes: &[u8]) -> anyhow::Result<ParamSet> {
+        anyhow::ensure!(
+            bytes.len() == spec.params_bytes(),
+            "param payload {} bytes, expected {}",
+            bytes.len(),
+            spec.params_bytes()
+        );
+        let mut tensors = Vec::with_capacity(spec.param_specs.len());
+        let mut pos = 0;
+        for (_, shape) in &spec.param_specs {
+            let n: usize = shape.iter().product();
+            let mut t = vec![0.0f32; n];
+            let src = &bytes[pos..pos + n * 4];
+            for (i, c) in src.chunks_exact(4).enumerate() {
+                t[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            tensors.push(t);
+            pos += n * 4;
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    /// SHA-256 of the serialized weights (assembled-checkpoint integrity
+    /// check, §2.2.3).
+    pub fn checksum(&self) -> [u8; 32] {
+        Sha256::digest(self.to_bytes()).into()
+    }
+
+    fn literals(&self, rt: &Runtime) -> Vec<xla::Literal> {
+        self.tensors
+            .iter()
+            .zip(&rt.spec.param_specs)
+            .map(|(t, (_, s))| lit_f32(t, s))
+            .collect()
+    }
+}
+
+/// Trainer-side optimizer state.
+pub struct TrainState {
+    pub params: ParamSet,
+    pub m: ParamSet,
+    pub v: ParamSet,
+    pub step: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GrpoHp {
+    pub lr: f32,
+    pub grad_clip: f32,
+    pub eps: f32,
+    pub delta: f32,
+    pub kl_coef: f32,
+    pub ent_coef: f32,
+}
+
+impl Default for GrpoHp {
+    /// Paper §4.1: eps=0.2, delta=4, ent coef 1e-4, KL coef 0.001,
+    /// lr 3e-7 (we scale lr up for tiny models), grad clip 0.1.
+    fn default() -> Self {
+        GrpoHp { lr: 1e-4, grad_clip: 0.1, eps: 0.2, delta: 4.0, kl_coef: 0.001, ent_coef: 1e-4 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GrpoMetrics {
+    pub loss: f32,
+    pub gnorm: f32,
+    pub clipfrac: f32,
+    pub entropy: f32,
+    pub kl: f32,
+    pub ratio_max: f32,
+    pub obj_mean: f32,
+}
+
+/// One packed training micro-batch, shapes `[batch_train, max_seq]` flat.
+#[derive(Clone, Debug, Default)]
+pub struct MicroBatch {
+    pub tokens: Vec<i32>,
+    pub segs: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub advantages: Vec<f32>,
+    pub old_logprobs: Vec<f32>,
+}
+
+pub struct TrainEngine {
+    rt: Rc<Runtime>,
+}
+
+impl TrainEngine {
+    pub fn new(rt: Rc<Runtime>) -> TrainEngine {
+        TrainEngine { rt }
+    }
+
+    pub fn rt(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn init_state(&self, seed: u32) -> anyhow::Result<TrainState> {
+        let outs = self.rt.call("init", &[scalar_u32(seed)])?;
+        let tensors = outs.iter().map(to_f32).collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TrainState {
+            params: ParamSet { tensors },
+            m: ParamSet::zeros_like(&self.rt),
+            v: ParamSet::zeros_like(&self.rt),
+            step: 0,
+        })
+    }
+
+    fn bt_shape(&self) -> [usize; 2] {
+        [self.rt.spec.batch_train, self.rt.spec.max_seq]
+    }
+
+    /// One pretraining step (next-token CE + Adam). tokens/segs are
+    /// `[batch_train * max_seq]`, row-major.
+    pub fn pretrain_step(
+        &self,
+        st: &mut TrainState,
+        tokens: &[i32],
+        segs: &[i32],
+        lr: f32,
+        grad_clip: f32,
+    ) -> anyhow::Result<(f32, f32)> {
+        let shape = self.bt_shape();
+        let mut inputs = st.params.literals(&self.rt);
+        inputs.extend(st.m.literals(&self.rt));
+        inputs.extend(st.v.literals(&self.rt));
+        inputs.push(scalar_f32(st.step as f32));
+        inputs.push(lit_i32(tokens, &shape));
+        inputs.push(lit_i32(segs, &shape));
+        inputs.push(lit_f32(&[lr, grad_clip], &[2]));
+        let outs = self.rt.call("pretrain_step", &inputs)?;
+        let n = st.params.tensors.len();
+        self.unpack_state(st, &outs, n)?;
+        let loss = first_f32(&outs[3 * n])?;
+        let gnorm = first_f32(&outs[3 * n + 1])?;
+        st.step += 1;
+        Ok((loss, gnorm))
+    }
+
+    /// One GRPO optimizer micro-step over a packed batch (paper §3.4/§4.1).
+    /// `artifact` selects "grpo_step" or the Fig 11 "grpo_step_faulty".
+    pub fn grpo_step_with(
+        &self,
+        artifact: &str,
+        st: &mut TrainState,
+        mb: &MicroBatch,
+        hp: &GrpoHp,
+    ) -> anyhow::Result<GrpoMetrics> {
+        let shape = self.bt_shape();
+        let hp_vec = [hp.lr, hp.grad_clip, hp.eps, hp.delta, hp.kl_coef, hp.ent_coef, 0.0, 0.0];
+        let mut inputs = st.params.literals(&self.rt);
+        inputs.extend(st.m.literals(&self.rt));
+        inputs.extend(st.v.literals(&self.rt));
+        inputs.push(scalar_f32(st.step as f32));
+        inputs.push(lit_i32(&mb.tokens, &shape));
+        inputs.push(lit_i32(&mb.segs, &shape));
+        inputs.push(lit_f32(&mb.loss_mask, &shape));
+        inputs.push(lit_f32(&mb.advantages, &shape));
+        inputs.push(lit_f32(&mb.old_logprobs, &shape));
+        inputs.push(lit_f32(&hp_vec, &[8]));
+        let outs = self.rt.call(artifact, &inputs)?;
+        let n = st.params.tensors.len();
+        self.unpack_state(st, &outs, n)?;
+        let m = to_f32(&outs[3 * n])?;
+        st.step += 1;
+        Ok(GrpoMetrics {
+            loss: m[0],
+            gnorm: m[1],
+            clipfrac: m[2],
+            entropy: m[3],
+            kl: m[4],
+            ratio_max: m[5],
+            obj_mean: m[6],
+        })
+    }
+
+    pub fn grpo_step(
+        &self,
+        st: &mut TrainState,
+        mb: &MicroBatch,
+        hp: &GrpoHp,
+    ) -> anyhow::Result<GrpoMetrics> {
+        self.grpo_step_with("grpo_step", st, mb, hp)
+    }
+
+    fn unpack_state(
+        &self,
+        st: &mut TrainState,
+        outs: &[xla::Literal],
+        n: usize,
+    ) -> anyhow::Result<()> {
+        for i in 0..n {
+            st.params.tensors[i] = to_f32(&outs[i])?;
+            st.m.tensors[i] = to_f32(&outs[n + i])?;
+            st.v.tensors[i] = to_f32(&outs[2 * n + i])?;
+        }
+        Ok(())
+    }
+
+    /// Per-token logprobs + entropy under `params` (the trainer recomputes
+    /// old_lp with the *current* policy at optimization start, §2.1.1).
+    pub fn logprobs(
+        &self,
+        params: &ParamSet,
+        tokens: &[i32],
+        segs: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let shape = self.bt_shape();
+        let mut inputs = params.literals(&self.rt);
+        inputs.push(lit_i32(tokens, &shape));
+        inputs.push(lit_i32(segs, &shape));
+        let outs = self.rt.call("logprobs", &inputs)?;
+        Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, to_f32(&outs[2])?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampling (inference workers)
+
+#[derive(Clone, Copy, Debug)]
+pub struct GenOpts {
+    pub max_new: usize,
+    pub temperature: f32,
+    /// TOPLOC hidden-state capture interval (tokens).
+    pub commit_interval: usize,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts { max_new: 128, temperature: 1.0, commit_interval: 32 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Finish {
+    /// Ended on EOS; carries the model probability of EOS at that step.
+    Eos { prob: f32 },
+    MaxLen,
+}
+
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// Prompt + completion tokens (no padding; includes final EOS if any).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Model probability of each sampled completion token (TOPLOC sampling
+    /// check input, §2.3.2).
+    pub sampled_probs: Vec<f32>,
+    /// Hidden-state rows captured every `commit_interval` positions plus at
+    /// the final position: (position, hidden[d_model]).
+    pub hidden_rows: Vec<(usize, Vec<f32>)>,
+    pub finish: Finish,
+}
+
+impl Generation {
+    pub fn completion_len(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
+pub struct SampleEngine {
+    rt: Rc<Runtime>,
+    pub params: ParamSet,
+    /// Count of decode_step invocations (perf accounting).
+    pub steps_executed: std::sync::atomic::AtomicU64,
+}
+
+impl SampleEngine {
+    pub fn new(rt: Rc<Runtime>, params: ParamSet) -> SampleEngine {
+        SampleEngine { rt, params, steps_executed: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    pub fn rt(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn set_params(&mut self, params: ParamSet) {
+        self.params = params;
+    }
+
+    /// Batched autoregressive generation with a device-side KV cache.
+    /// Up to `batch_infer` prompts per call; prompts must start with BOS.
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        opts: &GenOpts,
+        rng: &mut crate::util::rng::Rng,
+    ) -> anyhow::Result<Vec<Generation>> {
+        let spec = &self.rt.spec;
+        let (b, t, d) = (spec.batch_infer, spec.max_seq, spec.d_model);
+        anyhow::ensure!(!prompts.is_empty() && prompts.len() <= b, "bad prompt batch");
+        let n = prompts.len();
+        let max_prompt = prompts.iter().map(Vec::len).max().unwrap();
+        anyhow::ensure!(max_prompt < t, "prompt too long");
+
+        let kv_shape = [spec.n_layers, 2, b, t, d];
+        let mut kv = lit_f32(&vec![0.0f32; kv_shape.iter().product()], &kv_shape);
+        let param_lits = self.params.literals(&self.rt);
+
+        let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
+        let mut done = vec![false; n];
+        let mut finish: Vec<Finish> = vec![Finish::MaxLen; n];
+        let mut probs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut hidden_rows: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+        let limit: Vec<usize> =
+            prompts.iter().map(|p| (p.len() + opts.max_new).min(t)).collect();
+
+        let mut pos = 0usize;
+        loop {
+            // Feed the token at `pos` for every row (PAD once finished).
+            let mut tok = vec![spec.pad_id; b];
+            for i in 0..n {
+                if pos < seqs[i].len() {
+                    tok[i] = seqs[i][pos];
+                }
+            }
+            let mut inputs = param_lits.clone();
+            inputs.push(kv);
+            inputs.push(lit_i32(&tok, &[b]));
+            inputs.push(scalar_i32(pos as i32));
+            let mut outs = self.rt.call("decode_step", &inputs)?;
+            self.steps_executed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            kv = outs.pop().unwrap();
+            let hidden = to_f32(&outs[1])?; // [B, D]
+            let logits = to_f32(&outs[0])?; // [B, V]
+
+            // Capture hidden rows on the commit grid (§2.1.2: every 32
+            // tokens, plus the final position per sequence).
+            let capture = (pos + 1) % opts.commit_interval == 0;
+
+            for i in 0..n {
+                if done[i] || pos >= seqs[i].len() {
+                    continue;
+                }
+                if capture {
+                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
+                }
+                // Only the frontier row (last position) produces a sample.
+                if pos + 1 != seqs[i].len() {
+                    continue;
+                }
+                if seqs[i].len() >= limit[i] {
+                    done[i] = true;
+                    finish[i] = Finish::MaxLen;
+                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
+                    continue;
+                }
+                // Special tokens PAD/BOS are never sampled (a PAD inside a
+                // sequence would corrupt the validator's prefill
+                // segmentation; real tokenizers restrict them too).
+                let full_row = &logits[i * spec.vocab..(i + 1) * spec.vocab];
+                let mut row = full_row.to_vec();
+                row[spec.pad_id as usize] = f32::NEG_INFINITY;
+                row[spec.bos_id as usize] = f32::NEG_INFINITY;
+                let (next, _) = rng.sample_logits(&row, opts.temperature);
+                // Report the probability under the *unmasked* model
+                // distribution — what the TOPLOC validator recomputes.
+                let p = softmax_prob(full_row, next);
+                seqs[i].push(next as i32);
+                probs[i].push(p);
+                if next as i32 == spec.eos_id {
+                    done[i] = true;
+                    finish[i] = Finish::Eos { prob: softmax_prob(full_row, spec.eos_id as usize) };
+                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
+                }
+            }
+
+            pos += 1;
+            if pos >= t - 1 || (0..n).all(|i| done[i] && pos >= seqs[i].len()) {
+                break;
+            }
+        }
+
+        Ok((0..n)
+            .map(|i| Generation {
+                tokens: seqs[i].clone(),
+                prompt_len: prompts[i].len(),
+                sampled_probs: probs[i].clone(),
+                hidden_rows: hidden_rows[i].clone(),
+                finish: finish[i].clone(),
+            })
+            .collect())
+    }
+
+    /// Validator prefill: full-sequence logits + hidden states in one call
+    /// (this is why verification runs ~sequence-length× faster than
+    /// generation, §2.3 / Fig 3). `sequences` are padded to `[B, T]`.
+    pub fn prefill(&self, tokens: &[i32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let spec = &self.rt.spec;
+        let shape = [spec.batch_infer, spec.max_seq];
+        let mut inputs = self.params.literals(&self.rt);
+        inputs.push(lit_i32(tokens, &shape));
+        let outs = self.rt.call("prefill", &inputs)?;
+        Ok((to_f32(&outs[0])?, to_f32(&outs[1])?))
+    }
+}
+
+pub fn softmax_prob(logits: &[f32], idx: usize) -> f32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f64 = logits.iter().map(|&l| ((l - max) as f64).exp()).sum();
+    (((logits[idx] - max) as f64).exp() / z) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_prob_normalizes() {
+        let l = [0.0f32, 1.0, 2.0];
+        let total: f32 = (0..3).map(|i| softmax_prob(&l, i)).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(softmax_prob(&l, 2) > softmax_prob(&l, 0));
+    }
+}

@@ -1,0 +1,272 @@
+//! `EngineHost`: cross-thread facade over a thread-confined [`Runtime`].
+//!
+//! `xla::PjRtClient` is `Rc`-based, so all PJRT objects live on one thread.
+//! The host spawns that thread, compiles artifacts there, and serves
+//! requests over channels. This mirrors the real topology: every node in
+//! the swarm runs its own inference server; simulated nodes here share one
+//! host per model size (same executables, per-request weights) so N
+//! workers with different policy versions don't need N XLA clients.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::engine::{GenOpts, Generation, GrpoHp, GrpoMetrics, MicroBatch, ParamSet, SampleEngine, TrainEngine};
+use super::spec::ModelSpec;
+use crate::util::rng::Rng;
+
+enum Req {
+    Generate {
+        params: Arc<ParamSet>,
+        prompts: Vec<Vec<i32>>,
+        opts: GenOpts,
+        seed: u64,
+        reply: Sender<anyhow::Result<Vec<Generation>>>,
+    },
+    Prefill {
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+        reply: Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Logprobs {
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+        segs: Vec<i32>,
+        reply: Sender<anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    },
+    Init {
+        seed: u32,
+        reply: Sender<anyhow::Result<ParamSet>>,
+    },
+    GrpoStep {
+        artifact: String,
+        state: Box<HostTrainState>,
+        mb: MicroBatch,
+        hp: GrpoHp,
+        reply: Sender<anyhow::Result<(Box<HostTrainState>, GrpoMetrics)>>,
+    },
+    PretrainStep {
+        state: Box<HostTrainState>,
+        tokens: Vec<i32>,
+        segs: Vec<i32>,
+        lr: f32,
+        grad_clip: f32,
+        reply: Sender<anyhow::Result<(Box<HostTrainState>, f32, f32)>>,
+    },
+}
+
+/// Send-able training state (plain host floats).
+#[derive(Clone)]
+pub struct HostTrainState {
+    pub params: ParamSet,
+    pub m: ParamSet,
+    pub v: ParamSet,
+    pub step: u64,
+}
+
+pub struct EngineHost {
+    tx: Sender<Req>,
+    spec: ModelSpec,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl EngineHost {
+    /// Spawn the runtime thread for `artifacts/<size>`.
+    pub fn spawn(dir: PathBuf) -> anyhow::Result<EngineHost> {
+        let (tx, rx) = channel::<Req>();
+        let (spec_tx, spec_rx) = channel::<anyhow::Result<ModelSpec>>();
+        let thread = std::thread::Builder::new().name("i2-engine-host".into()).spawn(move || {
+            let rt = match super::Runtime::load(&dir) {
+                Ok(rt) => {
+                    let _ = spec_tx.send(Ok(rt.spec.clone()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = spec_tx.send(Err(e));
+                    return;
+                }
+            };
+            let train = TrainEngine::new(rt.clone());
+            let mut sample = SampleEngine::new(rt.clone(), ParamSet { tensors: Vec::new() });
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Generate { params, prompts, opts, seed, reply } => {
+                        sample.set_params((*params).clone());
+                        let mut rng = Rng::new(seed);
+                        let _ = reply.send(sample.generate(&prompts, &opts, &mut rng));
+                    }
+                    Req::Prefill { params, tokens, reply } => {
+                        sample.set_params((*params).clone());
+                        let _ = reply.send(sample.prefill(&tokens));
+                    }
+                    Req::Logprobs { params, tokens, segs, reply } => {
+                        let _ = reply.send(train.logprobs(&params, &tokens, &segs));
+                    }
+                    Req::Init { seed, reply } => {
+                        let _ = reply.send(train.init_state(seed).map(|st| st.params));
+                    }
+                    Req::GrpoStep { artifact, state, mb, hp, reply } => {
+                        let mut st = super::engine::TrainState {
+                            params: state.params,
+                            m: state.m,
+                            v: state.v,
+                            step: state.step,
+                        };
+                        let r = train.grpo_step_with(&artifact, &mut st, &mb, &hp).map(|metrics| {
+                            (
+                                Box::new(HostTrainState {
+                                    params: st.params,
+                                    m: st.m,
+                                    v: st.v,
+                                    step: st.step,
+                                }),
+                                metrics,
+                            )
+                        });
+                        let _ = reply.send(r);
+                    }
+                    Req::PretrainStep { state, tokens, segs, lr, grad_clip, reply } => {
+                        let mut st = super::engine::TrainState {
+                            params: state.params,
+                            m: state.m,
+                            v: state.v,
+                            step: state.step,
+                        };
+                        let r = train.pretrain_step(&mut st, &tokens, &segs, lr, grad_clip).map(
+                            |(loss, gnorm)| {
+                                (
+                                    Box::new(HostTrainState {
+                                        params: st.params,
+                                        m: st.m,
+                                        v: st.v,
+                                        step: st.step,
+                                    }),
+                                    loss,
+                                    gnorm,
+                                )
+                            },
+                        );
+                        let _ = reply.send(r);
+                    }
+                }
+            }
+        })?;
+        let spec = spec_rx.recv().map_err(|_| anyhow::anyhow!("engine host died on startup"))??;
+        Ok(EngineHost { tx, spec, thread: Some(thread) })
+    }
+
+    /// Spawn for a model size using the default artifacts dir.
+    pub fn spawn_size(size: &str) -> anyhow::Result<EngineHost> {
+        EngineHost::spawn(super::Runtime::artifacts_dir(size))
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn init_params(&self, seed: u32) -> anyhow::Result<ParamSet> {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Init { seed, reply }).map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn generate(
+        &self,
+        params: Arc<ParamSet>,
+        prompts: Vec<Vec<i32>>,
+        opts: GenOpts,
+        seed: u64,
+    ) -> anyhow::Result<Vec<Generation>> {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Generate { params, prompts, opts, seed, reply }).map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn prefill(
+        &self,
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Prefill { params, tokens, reply }).map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn logprobs(
+        &self,
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+        segs: Vec<i32>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Logprobs { params, tokens, segs, reply }).map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn grpo_step(
+        &self,
+        state: Box<HostTrainState>,
+        mb: MicroBatch,
+        hp: GrpoHp,
+    ) -> anyhow::Result<(Box<HostTrainState>, GrpoMetrics)> {
+        self.grpo_step_with("grpo_step", state, mb, hp)
+    }
+
+    pub fn grpo_step_with(
+        &self,
+        artifact: &str,
+        state: Box<HostTrainState>,
+        mb: MicroBatch,
+        hp: GrpoHp,
+    ) -> anyhow::Result<(Box<HostTrainState>, GrpoMetrics)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::GrpoStep { artifact: artifact.to_string(), state, mb, hp, reply })
+            .map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn pretrain_step(
+        &self,
+        state: Box<HostTrainState>,
+        tokens: Vec<i32>,
+        segs: Vec<i32>,
+        lr: f32,
+        grad_clip: f32,
+    ) -> anyhow::Result<(Box<HostTrainState>, f32, f32)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::PretrainStep { state, tokens, segs, lr, grad_clip, reply })
+            .map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    pub fn fresh_train_state(&self, seed: u32) -> anyhow::Result<Box<HostTrainState>> {
+        let params = self.init_params(seed)?;
+        let zeros = ParamSet {
+            tensors: self
+                .spec
+                .param_specs
+                .iter()
+                .map(|(_, s)| vec![0.0f32; s.iter().product()])
+                .collect(),
+        };
+        Ok(Box::new(HostTrainState { params, m: zeros.clone(), v: zeros, step: 0 }))
+    }
+}
+
+impl Drop for EngineHost {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn closed<E>(_: E) -> anyhow::Error {
+    anyhow::anyhow!("engine host thread terminated")
+}

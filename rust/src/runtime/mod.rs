@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py` and exposes typed engines to the coordinator.
+//! Start-to-finish self-contained: after `make artifacts`, no Python.
+
+pub mod client;
+pub mod engine;
+pub mod host;
+pub mod spec;
+
+pub use client::Runtime;
+pub use engine::{
+    Finish, GenOpts, Generation, GrpoHp, GrpoMetrics, MicroBatch, ParamSet, SampleEngine,
+    TrainEngine, TrainState,
+};
+pub use host::{EngineHost, HostTrainState};
+pub use spec::ModelSpec;

@@ -1,0 +1,187 @@
+//! `artifacts/<size>/spec.json` — the contract between the Python AOT
+//! compiler (L1/L2) and the Rust runtime (L3). Parsed with the in-tree
+//! JSON substrate; no Python anywhere near the request path.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32" | "u32"
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub batch_train: usize,
+    pub batch_infer: usize,
+    pub n_params: usize,
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub hp_layout: Vec<String>,
+    pub metrics_layout: Vec<String>,
+    pub toploc_interval: usize,
+    pub toploc_topk: usize,
+    pub artifacts: Vec<(String, ArtifactMeta)>,
+}
+
+fn sig_list(v: &Json) -> anyhow::Result<Vec<TensorSig>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("signature not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSig {
+                name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: e.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ModelSpec {
+    pub fn parse(text: &str) -> anyhow::Result<ModelSpec> {
+        let j = Json::parse(text)?;
+        let model = j.get("model").ok_or_else(|| anyhow::anyhow!("missing model"))?;
+        let g = |k: &str| -> anyhow::Result<usize> {
+            model.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("missing model.{k}"))
+        };
+        let specials = j.get("special_tokens").ok_or_else(|| anyhow::anyhow!("missing special_tokens"))?;
+        let strs = |k: &str| -> Vec<String> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+                .unwrap_or_default()
+        };
+        let mut artifacts = Vec::new();
+        if let Some(arts) = j.get("artifacts").and_then(Json::as_obj) {
+            for (name, meta) in arts {
+                artifacts.push((
+                    name.clone(),
+                    ArtifactMeta {
+                        file: meta.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                        inputs: sig_list(meta.get("inputs").unwrap_or(&Json::Null))?,
+                        outputs: sig_list(meta.get("outputs").unwrap_or(&Json::Null))?,
+                    },
+                ));
+            }
+        }
+        let param_specs = j
+            .get("param_specs")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|e| {
+                        (
+                            e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                            e.get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default(),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        Ok(ModelSpec {
+            name: model.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            max_seq: g("max_seq")?,
+            vocab: g("vocab")?,
+            batch_train: g("batch_train")?,
+            batch_infer: g("batch_infer")?,
+            n_params: j.get("n_params").and_then(Json::as_usize).unwrap_or(0),
+            param_specs,
+            pad_id: specials.get("pad").and_then(Json::as_f64).unwrap_or(0.0) as i32,
+            bos_id: specials.get("bos").and_then(Json::as_f64).unwrap_or(1.0) as i32,
+            eos_id: specials.get("eos").and_then(Json::as_f64).unwrap_or(2.0) as i32,
+            hp_layout: strs("hp_layout"),
+            metrics_layout: strs("metrics_layout"),
+            toploc_interval: j.path(&["toploc", "interval"]).and_then(Json::as_usize).unwrap_or(32),
+            toploc_topk: j.path(&["toploc", "topk"]).and_then(Json::as_usize).unwrap_or(8),
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in spec"))
+    }
+
+    /// Total bytes of one parameter set (f32) — what SHARDCAST broadcasts.
+    pub fn params_bytes(&self) -> usize {
+        self.n_params * 4
+    }
+
+    /// Index of a named metric in the grpo_step metrics vector.
+    pub fn metric_idx(&self, name: &str) -> usize {
+        self.metrics_layout.iter().position(|m| m == name).expect("unknown metric")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"name": "nano", "d_model": 64, "n_layers": 2, "n_heads": 2,
+                "max_seq": 256, "vocab": 64, "batch_train": 8, "batch_infer": 16,
+                "grpo_block_rows": 8, "attn_block_q": 64, "attn_block_k": 128},
+      "n_params": 120064,
+      "param_specs": [{"name": "tok_emb", "shape": [64, 64]}],
+      "special_tokens": {"pad": 0, "bos": 1, "eos": 2},
+      "adam": {"b1": 0.9, "b2": 0.95, "eps": 1e-8},
+      "hp_layout": ["lr", "grad_clip", "eps", "delta", "kl_coef", "ent_coef", "r0", "r1"],
+      "metrics_layout": ["loss", "gnorm", "clipfrac", "entropy", "kl", "ratio_max", "obj_mean"],
+      "toploc": {"interval": 32, "topk": 8},
+      "artifacts": {
+        "init": {"file": "init.hlo.txt",
+                 "inputs": [{"name": "seed", "shape": [], "dtype": "u32"}],
+                 "outputs": [{"name": "param:tok_emb", "shape": [64, 64], "dtype": "f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let s = ModelSpec::parse(SAMPLE).unwrap();
+        assert_eq!(s.name, "nano");
+        assert_eq!(s.d_model, 64);
+        assert_eq!(s.params_bytes(), 120064 * 4);
+        assert_eq!(s.metric_idx("kl"), 4);
+        let a = s.artifact("init").unwrap();
+        assert_eq!(a.inputs[0].dtype, "u32");
+        assert_eq!(a.outputs[0].numel(), 4096);
+        assert!(s.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! SHARDCAST worker-side client (§2.2.2, §2.2.3).
+//!
+//! Server selection: each client probes every relay once to initialize
+//! bandwidth/success estimates, then samples relays per shard with
+//! probability proportional to  success_rate x bandwidth  (EMA-smoothed,
+//! with a healing factor that re-explores idle relays). Probabilistic
+//! sampling beats greedy-fastest both under contention and without it
+//! (multiple concurrent connections aggregate bandwidth) — reproduced by
+//! `benches/shardcast_bench.rs`.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+use crate::http::HttpClient;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+const EMA_ALPHA: f64 = 0.3;
+/// Healing factor: relative score bonus per second of idleness.
+const HEAL_PER_SEC: f64 = 0.25;
+
+#[derive(Debug, Clone)]
+struct RelayEstimate {
+    url: String,
+    bandwidth: f64, // bytes/sec EMA
+    success: f64,   // EMA of {0,1}
+    last_used: Instant,
+}
+
+impl RelayEstimate {
+    fn score(&self) -> f64 {
+        let idle = self.last_used.elapsed().as_secs_f64();
+        (self.success * self.bandwidth).max(1.0) * (1.0 + HEAL_PER_SEC * idle)
+    }
+}
+
+#[derive(Debug)]
+pub struct DownloadReport {
+    pub step: u64,
+    pub bytes: usize,
+    pub seconds: f64,
+    pub per_relay_shards: Vec<(String, usize)>,
+    pub retries: usize,
+}
+
+pub struct ShardcastClient {
+    pub http: HttpClient,
+    relays: Mutex<Vec<RelayEstimate>>,
+    rng: Mutex<Rng>,
+}
+
+impl ShardcastClient {
+    /// `probe`: request a dummy file from every relay to initialize the
+    /// estimates (the paper's bootstrap step).
+    pub fn new(node_id: &str, relay_urls: &[String], seed: u64, probe: bool) -> ShardcastClient {
+        let http = HttpClient::new(node_id);
+        let mut relays = Vec::new();
+        for url in relay_urls {
+            let bandwidth = if probe {
+                let t0 = Instant::now();
+                match http.get(&format!("{url}/probe")) {
+                    Ok(r) if r.status == 200 => {
+                        r.body.len() as f64 / t0.elapsed().as_secs_f64().max(1e-6)
+                    }
+                    _ => 1.0,
+                }
+            } else {
+                1e6
+            };
+            relays.push(RelayEstimate {
+                url: url.clone(),
+                bandwidth,
+                success: 1.0,
+                last_used: Instant::now(),
+            });
+        }
+        ShardcastClient { http, relays: Mutex::new(relays), rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    pub fn with_ingress(mut self, bps: u64) -> ShardcastClient {
+        self.http.ingress_bytes_per_sec = bps;
+        self
+    }
+
+    fn pick_relay(&self) -> String {
+        let relays = self.relays.lock().unwrap();
+        let weights: Vec<f64> = relays.iter().map(RelayEstimate::score).collect();
+        let idx = self.rng.lock().unwrap().weighted(&weights);
+        relays[idx].url.clone()
+    }
+
+    fn update(&self, url: &str, success: bool, bytes: usize, secs: f64) {
+        let mut relays = self.relays.lock().unwrap();
+        if let Some(r) = relays.iter_mut().find(|r| r.url == url) {
+            r.last_used = Instant::now();
+            r.success = (1.0 - EMA_ALPHA) * r.success + EMA_ALPHA * if success { 1.0 } else { 0.0 };
+            if success && secs > 0.0 {
+                let sample = bytes as f64 / secs;
+                r.bandwidth = (1.0 - EMA_ALPHA) * r.bandwidth + EMA_ALPHA * sample;
+            }
+        }
+    }
+
+    pub fn estimates(&self) -> Vec<(String, f64, f64)> {
+        self.relays
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|r| (r.url.clone(), r.bandwidth, r.success))
+            .collect()
+    }
+
+    /// Latest checkpoint step visible on any relay.
+    pub fn latest_step(&self) -> Option<u64> {
+        let relays: Vec<String> =
+            self.relays.lock().unwrap().iter().map(|r| r.url.clone()).collect();
+        let mut best = None;
+        for url in relays {
+            if let Ok(r) = self.http.get(&format!("{url}/versions")) {
+                if r.status == 200 {
+                    if let Ok(j) = Json::parse(std::str::from_utf8(&r.body).unwrap_or("")) {
+                        for v in j.as_arr().unwrap_or(&[]) {
+                            if let Some(s) = v.as_u64() {
+                                best = Some(best.map_or(s, |b: u64| b.max(s)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Download + verify checkpoint `step`. On integrity failure returns an
+    /// error — per §2.2.3 the worker should move on to the next checkpoint
+    /// instead of retrying the same one.
+    pub fn fetch_checkpoint(&self, step: u64) -> anyhow::Result<(Vec<u8>, DownloadReport)> {
+        let t0 = Instant::now();
+        let url = self.pick_relay();
+        let resp = self.http.get(&format!("{url}/manifest?step={step}"))?;
+        anyhow::ensure!(resp.status == 200, "manifest {step}: status {}", resp.status);
+        let manifest = Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)?;
+
+        let mut shards: Vec<Vec<u8>> = vec![Vec::new(); manifest.n_shards()];
+        let mut per_relay: Vec<(String, usize)> = Vec::new();
+        let mut retries = 0usize;
+        for idx in 0..manifest.n_shards() {
+            let mut attempts = 0;
+            loop {
+                let url = self.pick_relay();
+                let t = Instant::now();
+                let result = self.http.get(&format!("{url}/shard?step={step}&idx={idx}"));
+                match result {
+                    Ok(r) if r.status == 200 => {
+                        self.update(&url, true, r.body.len(), t.elapsed().as_secs_f64());
+                        match per_relay.iter_mut().find(|(u, _)| *u == url) {
+                            Some((_, n)) => *n += 1,
+                            None => per_relay.push((url.clone(), 1)),
+                        }
+                        shards[idx] = r.body;
+                        break;
+                    }
+                    Ok(r) => {
+                        // 503 = still streaming on that relay; 429 = rate
+                        // limited; both count against its estimate.
+                        self.update(&url, false, 0, 0.0);
+                        retries += 1;
+                        attempts += 1;
+                        anyhow::ensure!(
+                            attempts < 200,
+                            "shard {idx}: giving up (last status {})",
+                            r.status
+                        );
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        self.update(&url, false, 0, 0.0);
+                        retries += 1;
+                        attempts += 1;
+                        anyhow::ensure!(attempts < 200, "shard {idx}: {e}");
+                    }
+                }
+            }
+        }
+        let payload = manifest.assemble(&shards)?;
+        let report = DownloadReport {
+            step,
+            bytes: payload.len(),
+            seconds: t0.elapsed().as_secs_f64(),
+            per_relay_shards: per_relay,
+            retries,
+        };
+        Ok((payload, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::ServerConfig;
+    use crate::shardcast::server::{Origin, Relay};
+    use std::time::Duration;
+
+    fn swarm(payload: &[u8]) -> (Origin, Vec<Relay>) {
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, payload, 8 * 1024);
+        let relays: Vec<Relay> = (0..3)
+            .map(|i| {
+                Relay::start(&format!("r{i}"), origin.url(), ServerConfig::default(),
+                             Duration::from_millis(5)).unwrap()
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !relays.iter().all(|r| r.store.is_complete(1)) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        (origin, relays)
+    }
+
+    #[test]
+    fn fetch_verifies_and_spreads_load() {
+        let payload: Vec<u8> = (0..200_000u32).map(|i| (i % 7) as u8).collect();
+        let (_origin, relays) = swarm(&payload);
+        let urls: Vec<String> = relays.iter().map(Relay::url).collect();
+        let client = ShardcastClient::new("worker-1", &urls, 42, true);
+        let (got, report) = client.fetch_checkpoint(1).unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(report.bytes, payload.len());
+        // Probabilistic selection uses more than one relay for 25 shards.
+        assert!(report.per_relay_shards.len() >= 2, "{:?}", report.per_relay_shards);
+    }
+
+    #[test]
+    fn corrupted_relay_detected() {
+        let payload = vec![3u8; 50_000];
+        let (origin, _relays) = swarm(&payload);
+        // A lying relay: serves the manifest but corrupts shard bytes.
+        let evil_store = origin.store.clone();
+        let evil = crate::http::HttpServer::start(ServerConfig::default(), move |req| {
+            let resp = {
+                // Reuse origin handler logic by fetching from the store.
+                if req.path == "/shard" {
+                    let step = req.query_u64("step", 0);
+                    let idx = req.query_u64("idx", 0) as usize;
+                    match evil_store.shard(step, idx) {
+                        Some(d) => {
+                            let mut d = d.as_ref().clone();
+                            if !d.is_empty() {
+                                d[0] ^= 0xFF;
+                            }
+                            crate::http::Response::ok(d)
+                        }
+                        None => crate::http::Response::error(404, "x"),
+                    }
+                } else if req.path == "/manifest" {
+                    match evil_store.manifest(req.query_u64("step", 1)) {
+                        Some(m) => crate::http::Response::json(&m.to_json()),
+                        None => crate::http::Response::error(404, "x"),
+                    }
+                } else {
+                    crate::http::Response::ok(vec![0u8; 128])
+                }
+            };
+            resp
+        })
+        .unwrap();
+        let client = ShardcastClient::new("worker-2", &[evil.url()], 7, false);
+        let err = client.fetch_checkpoint(1).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn ema_prefers_faster_relay_over_time() {
+        let payload = vec![1u8; 400_000];
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &payload, 16 * 1024);
+        // Fast relay unshaped; slow relay heavily shaped.
+        let fast = Relay::start("fast", origin.url(), ServerConfig::default(),
+                                Duration::from_millis(5)).unwrap();
+        let slow_cfg = ServerConfig { egress_bytes_per_sec: 64 * 1024, ..Default::default() };
+        let slow = Relay::start("slow", origin.url(), slow_cfg, Duration::from_millis(5)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !(fast.store.is_complete(1) && slow.store.is_complete(1)) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let client = ShardcastClient::new("worker-3", &[fast.url(), slow.url()], 3, true);
+        let (_, report) = client.fetch_checkpoint(1).unwrap();
+        let fast_n = report.per_relay_shards.iter().find(|(u, _)| *u == fast.url()).map(|(_, n)| *n).unwrap_or(0);
+        let slow_n = report.per_relay_shards.iter().find(|(u, _)| *u == slow.url()).map(|(_, n)| *n).unwrap_or(0);
+        // The EMA must have learned the bandwidth ordering; shard counts
+        // lean fast-ward but keep exploring the slow relay (healing factor),
+        // so we assert the learned estimates rather than exact counts.
+        let est = client.estimates();
+        let bw = |url: &str| est.iter().find(|(u, _, _)| u == url).map(|(_, b, _)| *b).unwrap();
+        assert!(
+            bw(&fast.url()) > bw(&slow.url()),
+            "bandwidth estimates: fast={} slow={} (shards fast={fast_n} slow={slow_n})",
+            bw(&fast.url()),
+            bw(&slow.url())
+        );
+        assert!(fast_n + slow_n > 0);
+    }
+}

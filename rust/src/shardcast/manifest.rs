@@ -1,0 +1,140 @@
+//! Checkpoint manifest: step, shard layout, per-shard + assembled SHA-256.
+//! Broadcast alongside the shards so workers can verify integrity (§2.2.3).
+
+use crate::util::json::Json;
+use sha2::{Digest, Sha256};
+
+pub const DEFAULT_SHARD_BYTES: usize = 64 * 1024;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// RL step this checkpoint belongs to (checkpoint version).
+    pub step: u64,
+    pub total_bytes: usize,
+    pub shard_bytes: usize,
+    pub shard_sha256: Vec<[u8; 32]>,
+    /// Checksum of the assembled checkpoint, produced by the training
+    /// nodes — the reference the workers compare against.
+    pub assembled_sha256: [u8; 32],
+}
+
+impl Manifest {
+    pub fn n_shards(&self) -> usize {
+        self.shard_sha256.len()
+    }
+
+    /// Split a checkpoint payload into shards + manifest.
+    pub fn build(step: u64, payload: &[u8], shard_bytes: usize) -> (Manifest, Vec<Vec<u8>>) {
+        let shards: Vec<Vec<u8>> = payload.chunks(shard_bytes.max(1)).map(<[u8]>::to_vec).collect();
+        let manifest = Manifest {
+            step,
+            total_bytes: payload.len(),
+            shard_bytes,
+            shard_sha256: shards.iter().map(|s| Sha256::digest(s).into()).collect(),
+            assembled_sha256: Sha256::digest(payload).into(),
+        };
+        (manifest, shards)
+    }
+
+    /// Reassemble + verify (§2.2.3). Returns the payload or a description
+    /// of what failed (worker then skips to the next checkpoint rather than
+    /// re-downloading — it would be stale by then).
+    pub fn assemble(&self, shards: &[Vec<u8>]) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(shards.len() == self.n_shards(), "shard count mismatch");
+        let mut out = Vec::with_capacity(self.total_bytes);
+        for (i, s) in shards.iter().enumerate() {
+            let d: [u8; 32] = Sha256::digest(s).into();
+            anyhow::ensure!(d == self.shard_sha256[i], "shard {i} checksum mismatch");
+            out.extend_from_slice(s);
+        }
+        anyhow::ensure!(out.len() == self.total_bytes, "assembled size mismatch");
+        let d: [u8; 32] = Sha256::digest(&out).into();
+        anyhow::ensure!(d == self.assembled_sha256, "assembled checksum mismatch");
+        Ok(out)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", self.step.into()),
+            ("total_bytes", self.total_bytes.into()),
+            ("shard_bytes", self.shard_bytes.into()),
+            ("shards", Json::Arr(self.shard_sha256.iter().map(|d| Json::Str(hex(d))).collect())),
+            ("assembled", Json::Str(hex(&self.assembled_sha256))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let shard_sha256 = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing shards"))?
+            .iter()
+            .map(|s| unhex(s.as_str().unwrap_or("")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            step: j.get("step").and_then(Json::as_u64).ok_or_else(|| anyhow::anyhow!("missing step"))?,
+            total_bytes: j.get("total_bytes").and_then(Json::as_usize).unwrap_or(0),
+            shard_bytes: j.get("shard_bytes").and_then(Json::as_usize).unwrap_or(0),
+            shard_sha256,
+            assembled_sha256: unhex(
+                j.get("assembled").and_then(Json::as_str).unwrap_or(""),
+            )?,
+        })
+    }
+}
+
+pub fn hex(d: &[u8]) -> String {
+    d.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+pub fn unhex(s: &str) -> anyhow::Result<[u8; 32]> {
+    anyhow::ensure!(s.len() == 64, "bad digest length");
+    let mut out = [0u8; 32];
+    for i in 0..32 {
+        out[i] = u8::from_str_radix(&s[2 * i..2 * i + 2], 16)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_assemble_roundtrip() {
+        let payload: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+        let (m, shards) = Manifest::build(3, &payload, DEFAULT_SHARD_BYTES);
+        assert_eq!(m.n_shards(), payload.len().div_ceil(DEFAULT_SHARD_BYTES));
+        assert_eq!(m.assemble(&shards).unwrap(), payload);
+    }
+
+    #[test]
+    fn corrupted_shard_detected() {
+        let payload = vec![9u8; 100_000];
+        let (m, mut shards) = Manifest::build(1, &payload, 32 * 1024);
+        shards[1][5] ^= 1;
+        let err = m.assemble(&shards).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+    }
+
+    #[test]
+    fn wrong_shard_count_detected() {
+        let (m, shards) = Manifest::build(1, &[1, 2, 3], 2);
+        assert!(m.assemble(&shards[..1]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (m, _) = Manifest::build(7, &vec![3u8; 50_000], 8192);
+        let j = m.to_json();
+        let m2 = Manifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let d = [7u8; 32];
+        assert_eq!(unhex(&hex(&d)).unwrap(), d);
+        assert!(unhex("zz").is_err());
+    }
+}

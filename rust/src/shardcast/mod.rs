@@ -1,0 +1,13 @@
+//! SHARDCAST (paper §2.2): HTTP tree-topology broadcast of policy weights
+//! from the training node to decentralized inference workers — sharded,
+//! pipelined, checksummed, rate-limited and firewalled.
+
+pub mod client;
+pub mod manifest;
+pub mod server;
+pub mod store;
+
+pub use client::{DownloadReport, ShardcastClient};
+pub use manifest::Manifest;
+pub use server::{Origin, Relay};
+pub use store::Store;

@@ -1,0 +1,237 @@
+//! SHARDCAST servers: the origin (training side) and relay tier (§2.2).
+//!
+//! HTTP API (served by the in-tree HTTP substrate, which provides the
+//! nginx-role protections: per-node rate limiting, allowlist firewall,
+//! egress shaping):
+//!   GET /probe                 - dummy payload for bandwidth estimation
+//!   GET /versions              - JSON list of stored checkpoint steps
+//!   GET /manifest?step=N       - manifest (or latest when step omitted)
+//!   GET /shard?step=N&idx=I    - shard bytes (503 while still streaming in)
+
+use std::sync::Arc;
+
+use super::manifest::Manifest;
+use super::store::Store;
+use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
+use crate::util::json::Json;
+
+pub const PROBE_BYTES: usize = 16 * 1024;
+
+fn handle(store: &Store, req: &Request) -> Response {
+    match req.path.as_str() {
+        "/probe" => Response::ok(vec![0xAB; PROBE_BYTES]),
+        "/versions" => Response::json(&Json::Arr(
+            store.versions().into_iter().map(Json::from).collect(),
+        )),
+        "/manifest" => {
+            let step = match req.query.get("step") {
+                Some(s) => s.parse::<u64>().ok(),
+                None => store.latest_step(),
+            };
+            match step.and_then(|s| store.manifest(s)) {
+                Some(m) => Response::json(&m.to_json()),
+                None => Response::error(404, "no such checkpoint"),
+            }
+        }
+        "/shard" => {
+            let step = req.query_u64("step", u64::MAX);
+            let idx = req.query_u64("idx", u64::MAX) as usize;
+            match store.manifest(step) {
+                None => Response::error(404, "no such checkpoint"),
+                Some(m) if idx >= m.n_shards() => Response::error(404, "shard index out of range"),
+                Some(_) => match store.shard(step, idx) {
+                    Some(data) => Response::ok(data.as_ref().clone()),
+                    // Pipelined streaming: manifest exists but this shard
+                    // has not arrived at this relay yet.
+                    None => Response::error(503, "shard not yet available"),
+                },
+            }
+        }
+        _ => Response::error(404, "unknown endpoint"),
+    }
+}
+
+/// Origin server owned by the training node: publish checkpoints, serve
+/// the relay tier.
+pub struct Origin {
+    pub store: Store,
+    pub server: HttpServer,
+}
+
+impl Origin {
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Origin> {
+        let store = Store::new();
+        let s = store.clone();
+        let server = HttpServer::start(cfg, move |req| handle(&s, req))?;
+        Ok(Origin { store, server })
+    }
+
+    /// Shard + publish a checkpoint payload (returns its manifest).
+    pub fn publish(&self, step: u64, payload: &[u8], shard_bytes: usize) -> Manifest {
+        let (manifest, shards) = Manifest::build(step, payload, shard_bytes);
+        self.store.publish_full(manifest.clone(), shards);
+        manifest
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+/// Relay server: pulls new checkpoints from a parent (origin or another
+/// relay — tree topology) in a pipelined fashion and serves workers.
+pub struct Relay {
+    pub store: Store,
+    pub server: HttpServer,
+    pub name: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    puller: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Relay {
+    pub fn start(
+        name: &str,
+        parent_url: String,
+        cfg: ServerConfig,
+        poll_interval: std::time::Duration,
+    ) -> anyhow::Result<Relay> {
+        let store = Store::new();
+        let s = store.clone();
+        let server = HttpServer::start(cfg, move |req| handle(&s, req))?;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let puller = {
+            let store = store.clone();
+            let stop = Arc::clone(&stop);
+            let client = HttpClient::new(&format!("relay-{name}"));
+            std::thread::Builder::new().name(format!("i2-relay-{name}")).spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                    if let Err(e) = pull_once(&client, &parent_url, &store) {
+                        crate::debug!("shardcast", "relay pull: {e}");
+                    }
+                    std::thread::sleep(poll_interval);
+                }
+            })?
+        };
+        Ok(Relay { store, server, name: name.to_string(), stop, puller: Some(puller) })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(t) = self.puller.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Relay {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One pull cycle: mirror any parent checkpoint we don't have yet,
+/// publishing the manifest immediately and shards as they arrive so
+/// children can start downloading before we finish (pipelining, §2.2).
+fn pull_once(client: &HttpClient, parent: &str, store: &Store) -> anyhow::Result<()> {
+    let resp = client.get(&format!("{parent}/versions"))?;
+    anyhow::ensure!(resp.status == 200, "versions: {}", resp.status);
+    let versions = Json::parse(std::str::from_utf8(&resp.body)?)?;
+    let steps: Vec<u64> = versions.as_arr().unwrap_or(&[]).iter().filter_map(Json::as_u64).collect();
+    for step in steps {
+        if store.manifest(step).is_some() {
+            continue;
+        }
+        let resp = client.get(&format!("{parent}/manifest?step={step}"))?;
+        if resp.status != 200 {
+            continue;
+        }
+        let manifest = Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)?;
+        let n = manifest.n_shards();
+        store.publish_manifest(manifest);
+        for idx in 0..n {
+            // Parent may itself still be streaming: retry 503s briefly.
+            let mut attempts = 0;
+            loop {
+                let r = client.get(&format!("{parent}/shard?step={step}&idx={idx}"))?;
+                match r.status {
+                    200 => {
+                        store.put_shard(step, idx, Arc::new(r.body));
+                        break;
+                    }
+                    503 if attempts < 50 => {
+                        attempts += 1;
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    _ => anyhow::bail!("shard {step}/{idx}: status {}", r.status),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn origin_serves_manifest_and_shards() {
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 13) as u8).collect();
+        let m = origin.publish(1, &payload, 16 * 1024);
+        let c = HttpClient::new("w1");
+        let r = c.get(&format!("{}/manifest", origin.url())).unwrap();
+        assert_eq!(r.status, 200);
+        let got = Manifest::from_json(&Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap()).unwrap();
+        assert_eq!(got, m);
+        let mut shards = Vec::new();
+        for i in 0..m.n_shards() {
+            let r = c.get(&format!("{}/shard?step=1&idx={i}", origin.url())).unwrap();
+            assert_eq!(r.status, 200);
+            shards.push(r.body);
+        }
+        assert_eq!(m.assemble(&shards).unwrap(), payload);
+        // Unknown checkpoint / shard
+        assert_eq!(c.get(&format!("{}/manifest?step=9", origin.url())).unwrap().status, 404);
+        assert_eq!(c.get(&format!("{}/shard?step=1&idx=999", origin.url())).unwrap().status, 404);
+    }
+
+    #[test]
+    fn relay_mirrors_origin() {
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        let payload = vec![7u8; 64_000];
+        origin.publish(2, &payload, 8 * 1024);
+        let relay = Relay::start("r1", origin.url(), ServerConfig::default(),
+                                 Duration::from_millis(10)).unwrap();
+        // Wait for the mirror.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !relay.store.is_complete(2) {
+            assert!(std::time::Instant::now() < deadline, "relay never completed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let c = HttpClient::new("w2");
+        let r = c.get(&format!("{}/shard?step=2&idx=0", relay.url())).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body.len(), 8 * 1024);
+    }
+
+    #[test]
+    fn two_tier_tree_topology() {
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &vec![1u8; 40_000], 8 * 1024);
+        let tier1 = Relay::start("t1", origin.url(), ServerConfig::default(),
+                                 Duration::from_millis(10)).unwrap();
+        let tier2 = Relay::start("t2", tier1.url(), ServerConfig::default(),
+                                 Duration::from_millis(10)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !tier2.store.is_complete(1) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never completed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}

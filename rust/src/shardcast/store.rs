@@ -1,0 +1,117 @@
+//! Versioned in-memory checkpoint store shared by origin and relay servers.
+//! Shards can be present partially (pipelined streaming: a relay serves
+//! shard i while it is still fetching shard i+1). Only the last
+//! `MAX_VERSIONS` checkpoints are retained (§2.2: relays keep five —
+//! rollouts from older policies would be rejected anyway).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use super::manifest::Manifest;
+
+pub const MAX_VERSIONS: usize = 5;
+
+#[derive(Clone)]
+pub struct Checkpoint {
+    pub manifest: Manifest,
+    pub shards: Vec<Option<Arc<Vec<u8>>>>,
+}
+
+impl Checkpoint {
+    pub fn complete(&self) -> bool {
+        self.shards.iter().all(Option::is_some)
+    }
+}
+
+#[derive(Default, Clone)]
+pub struct Store {
+    inner: Arc<RwLock<BTreeMap<u64, Checkpoint>>>,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    /// Publish a manifest (shards may stream in afterwards).
+    pub fn publish_manifest(&self, manifest: Manifest) {
+        let mut map = self.inner.write().unwrap();
+        let n = manifest.n_shards();
+        map.insert(manifest.step, Checkpoint { manifest, shards: vec![None; n] });
+        while map.len() > MAX_VERSIONS {
+            let oldest = *map.keys().next().unwrap();
+            map.remove(&oldest);
+        }
+    }
+
+    pub fn put_shard(&self, step: u64, idx: usize, data: Arc<Vec<u8>>) {
+        let mut map = self.inner.write().unwrap();
+        if let Some(cp) = map.get_mut(&step) {
+            if idx < cp.shards.len() {
+                cp.shards[idx] = Some(data);
+            }
+        }
+    }
+
+    /// Publish a full checkpoint at once (origin side).
+    pub fn publish_full(&self, manifest: Manifest, shards: Vec<Vec<u8>>) {
+        self.publish_manifest(manifest.clone());
+        for (i, s) in shards.into_iter().enumerate() {
+            self.put_shard(manifest.step, i, Arc::new(s));
+        }
+    }
+
+    pub fn manifest(&self, step: u64) -> Option<Manifest> {
+        self.inner.read().unwrap().get(&step).map(|c| c.manifest.clone())
+    }
+
+    /// Highest version with a published manifest.
+    pub fn latest_step(&self) -> Option<u64> {
+        self.inner.read().unwrap().keys().next_back().copied()
+    }
+
+    pub fn shard(&self, step: u64, idx: usize) -> Option<Arc<Vec<u8>>> {
+        self.inner.read().unwrap().get(&step).and_then(|c| c.shards.get(idx).cloned().flatten())
+    }
+
+    pub fn versions(&self) -> Vec<u64> {
+        self.inner.read().unwrap().keys().copied().collect()
+    }
+
+    pub fn is_complete(&self, step: u64) -> bool {
+        self.inner.read().unwrap().get(&step).map(Checkpoint::complete).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retains_last_five_versions() {
+        let s = Store::new();
+        for step in 0..8u64 {
+            let (m, shards) = Manifest::build(step, &vec![step as u8; 1000], 256);
+            s.publish_full(m, shards);
+        }
+        assert_eq!(s.versions(), vec![3, 4, 5, 6, 7]);
+        assert_eq!(s.latest_step(), Some(7));
+        assert!(s.manifest(2).is_none());
+    }
+
+    #[test]
+    fn partial_availability() {
+        let s = Store::new();
+        let (m, shards) = Manifest::build(1, &vec![5u8; 1000], 256);
+        s.publish_manifest(m.clone());
+        assert!(!s.is_complete(1));
+        assert!(s.shard(1, 0).is_none());
+        s.put_shard(1, 0, Arc::new(shards[0].clone()));
+        assert!(s.shard(1, 0).is_some());
+        assert!(s.shard(1, 1).is_none());
+        for (i, sh) in shards.iter().enumerate().skip(1) {
+            s.put_shard(1, i, Arc::new(sh.clone()));
+        }
+        assert!(s.is_complete(1));
+    }
+}

@@ -1,0 +1,151 @@
+//! Dataset assembly + the paper's deterministic sampling scheme.
+//!
+//! §2.3.3: inference workers must not cherry-pick samples, so each node
+//! derives its batch from `seed = node_address * step + submissions`; the
+//! validator reproduces the draw from the same seed. §3.3.1: offline
+//! difficulty filtering keeps tasks with base-model pass@8 in a band.
+
+use super::{math, dsl, Task, TaskKind};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    pub seed: u64,
+    pub n_math: usize,
+    pub n_code: usize,
+    /// Distribution over difficulties (unnormalized weights by level).
+    pub difficulty_weights: Vec<f64>,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            seed: 1337,
+            n_math: 900,
+            n_code: 100,
+            difficulty_weights: vec![4.0, 3.0, 2.0, 1.0, 0.5, 0.25],
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Dataset {
+    pub tasks: Vec<Task>,
+}
+
+impl Dataset {
+    /// Deterministically generate the full task set (math then code, ids
+    /// are indices).
+    pub fn generate(cfg: &DatasetConfig) -> Dataset {
+        let mut rng = Rng::new(cfg.seed);
+        let mut tasks = Vec::with_capacity(cfg.n_math + cfg.n_code);
+        for i in 0..cfg.n_math {
+            let d = rng.weighted(&cfg.difficulty_weights) as u8;
+            let d = d.min(math::MAX_DIFFICULTY);
+            tasks.push(math::generate(i as u64, d, &mut rng));
+        }
+        for i in 0..cfg.n_code {
+            let d = (rng.weighted(&cfg.difficulty_weights) as u8).min(3);
+            tasks.push(dsl::generate((cfg.n_math + i) as u64, d, &mut rng));
+        }
+        Dataset { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Task> {
+        self.tasks.get(id as usize)
+    }
+
+    /// Retain only the given task ids (offline filtering output, §3.3.1).
+    pub fn filtered(&self, keep: &[u64]) -> Dataset {
+        let mut set = vec![false; self.tasks.len()];
+        for &id in keep {
+            if let Some(s) = set.get_mut(id as usize) {
+                *s = true;
+            }
+        }
+        Dataset {
+            tasks: self
+                .tasks
+                .iter()
+                .filter(|t| set[t.id as usize])
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Draw `k` task indices from the fixed-sampling seed. Both workers and
+    /// validators call this — any divergence is a slashable offence.
+    pub fn sample_for(&self, seed: u64, k: usize) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..k).map(|_| self.tasks[rng.usize(self.tasks.len())].id).collect()
+    }
+
+    pub fn count_kind(&self, kind: TaskKind) -> usize {
+        self.tasks.iter().filter(|t| t.kind == kind).count()
+    }
+}
+
+/// The paper's sampling-seed formula (§2.3.3):
+/// `seed = node_address * step + number_of_submissions_for_this_step`.
+pub fn node_sample_seed(node_address: u64, step: u64, submissions: u64) -> u64 {
+    node_address.wrapping_mul(step.wrapping_add(1)).wrapping_add(submissions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = DatasetConfig { n_math: 50, n_code: 10, ..Default::default() };
+        let a = Dataset::generate(&cfg);
+        let b = Dataset::generate(&cfg);
+        assert_eq!(a.len(), 60);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+        assert_eq!(a.count_kind(TaskKind::Math), 50);
+        assert_eq!(a.count_kind(TaskKind::Code), 10);
+    }
+
+    #[test]
+    fn ids_are_indices() {
+        let d = Dataset::generate(&DatasetConfig { n_math: 20, n_code: 5, ..Default::default() });
+        for (i, t) in d.tasks.iter().enumerate() {
+            assert_eq!(t.id, i as u64);
+            assert_eq!(d.get(t.id).unwrap().prompt, t.prompt);
+        }
+    }
+
+    #[test]
+    fn sample_reproducible_across_parties() {
+        let d = Dataset::generate(&DatasetConfig { n_math: 100, n_code: 20, ..Default::default() });
+        let seed = node_sample_seed(0xABCD, 7, 2);
+        assert_eq!(d.sample_for(seed, 16), d.sample_for(seed, 16));
+        assert_ne!(
+            d.sample_for(node_sample_seed(0xABCD, 7, 2), 16),
+            d.sample_for(node_sample_seed(0xABCD, 7, 3), 16)
+        );
+        assert_ne!(
+            d.sample_for(node_sample_seed(0xABCD, 7, 2), 16),
+            d.sample_for(node_sample_seed(0xABCE, 7, 2), 16)
+        );
+    }
+
+    #[test]
+    fn filtering_keeps_subset() {
+        let d = Dataset::generate(&DatasetConfig { n_math: 30, n_code: 0, ..Default::default() });
+        let f = d.filtered(&[1, 5, 9]);
+        assert_eq!(f.len(), 3);
+        assert!(f.tasks.iter().all(|t| [1, 5, 9].contains(&t.id)));
+    }
+}

@@ -1,0 +1,258 @@
+//! Mini stack DSL — the "python coding competition" stand-in (§2.1.3).
+//!
+//! A program is a sequence of words applied left-to-right to an integer
+//! list (`"sort rev"` sorts then reverses). Tasks show input/output example
+//! pairs; the model writes the program; the verifier *executes* it against
+//! hidden unit tests — sandboxed exactly like the paper sandboxes LLM
+//! code: hard limits on program length, list size and value magnitude,
+//! and binary all-tests-pass rewards to discourage reward hacking.
+
+use super::{Task, TaskKind};
+use crate::util::rng::Rng;
+
+pub const OPS: &[&str] = &[
+    "rev", "sort", "inc", "dec", "dbl", "sum", "max", "min", "len", "head", "tail",
+];
+
+/// Sandbox limits (the "code sanitization" of §2.1.3).
+pub const MAX_PROGRAM_OPS: usize = 8;
+pub const MAX_LIST_LEN: usize = 64;
+pub const MAX_ABS_VALUE: i64 = 1_000_000_000;
+
+#[derive(Clone, Debug, thiserror::Error, PartialEq)]
+pub enum DslError {
+    #[error("unknown op {0:?}")]
+    UnknownOp(String),
+    #[error("program too long")]
+    ProgramTooLong,
+    #[error("empty list for {0}")]
+    EmptyList(&'static str),
+    #[error("value out of sandbox bounds")]
+    ValueOverflow,
+    #[error("empty program")]
+    EmptyProgram,
+}
+
+pub fn apply_op(op: &str, mut xs: Vec<i64>) -> Result<Vec<i64>, DslError> {
+    match op {
+        "rev" => {
+            xs.reverse();
+            Ok(xs)
+        }
+        "sort" => {
+            xs.sort();
+            Ok(xs)
+        }
+        "inc" => xs.into_iter().map(|x| bound(x + 1)).collect(),
+        "dec" => xs.into_iter().map(|x| bound(x - 1)).collect(),
+        "dbl" => xs.into_iter().map(|x| bound(x * 2)).collect(),
+        "sum" => Ok(vec![bound(xs.iter().sum())?]),
+        "max" => xs.iter().max().map(|&m| vec![m]).ok_or(DslError::EmptyList("max")),
+        "min" => xs.iter().min().map(|&m| vec![m]).ok_or(DslError::EmptyList("min")),
+        "len" => Ok(vec![xs.len() as i64]),
+        "head" => xs.first().map(|&h| vec![h]).ok_or(DslError::EmptyList("head")),
+        "tail" => {
+            if xs.is_empty() {
+                Err(DslError::EmptyList("tail"))
+            } else {
+                Ok(xs[1..].to_vec())
+            }
+        }
+        other => Err(DslError::UnknownOp(other.to_string())),
+    }
+}
+
+fn bound(v: i64) -> Result<i64, DslError> {
+    if v.abs() > MAX_ABS_VALUE {
+        Err(DslError::ValueOverflow)
+    } else {
+        Ok(v)
+    }
+}
+
+/// Parse + execute a program text against one input (the unit-test runner).
+pub fn run(program: &str, input: &[i64]) -> Result<Vec<i64>, DslError> {
+    let words: Vec<&str> = program.split_whitespace().collect();
+    if words.is_empty() {
+        return Err(DslError::EmptyProgram);
+    }
+    if words.len() > MAX_PROGRAM_OPS {
+        return Err(DslError::ProgramTooLong);
+    }
+    if input.len() > MAX_LIST_LEN {
+        return Err(DslError::ValueOverflow);
+    }
+    let mut xs = input.to_vec();
+    for w in words {
+        xs = apply_op(w, xs)?;
+    }
+    Ok(xs)
+}
+
+pub fn render_list(xs: &[i64]) -> String {
+    let inner: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+pub fn parse_list(s: &str) -> Option<Vec<i64>> {
+    let s = s.trim();
+    let inner = s.strip_prefix('[')?.strip_suffix(']')?;
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner.split(',').map(|p| p.trim().parse::<i64>().ok()).collect()
+}
+
+/// Generate a code task: sample a secret program (1 op at difficulty 0-1,
+/// 2 ops above), render two example IO pairs in the prompt, keep two more
+/// as hidden unit tests.
+pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+    let n_ops = if difficulty <= 1 { 1 } else { 2 };
+    loop {
+        let mut ops: Vec<&str> = Vec::new();
+        for _ in 0..n_ops {
+            ops.push(OPS[rng.usize(OPS.len())]);
+        }
+        let program = ops.join(" ");
+        // 4 random inputs: 2 shown, 2 hidden.
+        let mut pairs = Vec::new();
+        let mut degenerate = false;
+        for _ in 0..4 {
+            let len = 2 + rng.usize(3 + difficulty as usize);
+            let hi = if difficulty == 0 { 10 } else { 30 };
+            let input: Vec<i64> = (0..len).map(|_| rng.range(0, hi) as i64).collect();
+            match run(&program, &input) {
+                Ok(out) => pairs.push((input, out)),
+                Err(_) => {
+                    degenerate = true;
+                    break;
+                }
+            }
+        }
+        if degenerate {
+            continue;
+        }
+        // Reject programs indistinguishable from identity on the examples
+        // (no learnable signal, and "identity" hacks would pass).
+        if pairs.iter().all(|(i, o)| i == o) {
+            continue;
+        }
+        let prompt = format!(
+            "f{}={} f{}={} f?",
+            render_list(&pairs[0].0),
+            render_list(&pairs[0].1),
+            render_list(&pairs[1].0),
+            render_list(&pairs[1].1),
+        );
+        return Task {
+            id,
+            kind: TaskKind::Code,
+            prompt,
+            answer: program,
+            difficulty,
+            tests: pairs[2..].to_vec(),
+        };
+    }
+}
+
+/// Binary all-tests-pass verification (§3.1.1: deliberately no partial
+/// credit for passing a subset, to discourage reward hacking).
+pub fn verify(task: &Task, completion: &str) -> bool {
+    let program: String = completion.chars().filter(|c| *c != '~').collect();
+    let program = program.trim();
+    if program.is_empty() {
+        return false;
+    }
+    task.tests.iter().all(|(input, want)| match run(program, input) {
+        Ok(got) => &got == want,
+        Err(_) => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ops_semantics() {
+        assert_eq!(run("sort", &[3, 1, 2]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(run("sort rev", &[3, 1, 2]).unwrap(), vec![3, 2, 1]);
+        assert_eq!(run("sum", &[3, 1, 2]).unwrap(), vec![6]);
+        assert_eq!(run("inc dbl", &[1, 2]).unwrap(), vec![4, 6]);
+        assert_eq!(run("tail head", &[9, 8, 7]).unwrap(), vec![8]);
+        assert_eq!(run("len", &[]).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn sandbox_limits() {
+        assert_eq!(run("bad", &[1]), Err(DslError::UnknownOp("bad".into())));
+        assert_eq!(run("", &[1]), Err(DslError::EmptyProgram));
+        let long = vec!["inc"; MAX_PROGRAM_OPS + 1].join(" ");
+        assert_eq!(run(&long, &[1]), Err(DslError::ProgramTooLong));
+        assert_eq!(run("head", &[]), Err(DslError::EmptyList("head")));
+        let big = vec![MAX_ABS_VALUE];
+        assert_eq!(run("dbl", &big), Err(DslError::ValueOverflow));
+    }
+
+    #[test]
+    fn list_roundtrip() {
+        for xs in [vec![], vec![5], vec![1, -2, 30]] {
+            assert_eq!(parse_list(&render_list(&xs)), Some(xs));
+        }
+        assert_eq!(parse_list("[1,,2]"), None);
+        assert_eq!(parse_list("1,2"), None);
+    }
+
+    #[test]
+    fn generated_tasks_verify_with_reference_program() {
+        let mut rng = Rng::new(2);
+        for d in 0..=3u8 {
+            for i in 0..40 {
+                let t = generate(i, d, &mut rng);
+                assert!(verify(&t, &t.answer), "{t:?}");
+                assert_eq!(t.tests.len(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_programs_mostly_fail() {
+        let mut rng = Rng::new(3);
+        let mut wrong_pass = 0;
+        let n = 60;
+        for i in 0..n {
+            let t = generate(i, 2, &mut rng);
+            // A fixed wrong guess.
+            if t.answer != "rev" && verify(&t, "rev") {
+                wrong_pass += 1;
+            }
+        }
+        // Collisions possible (different program, same behaviour on the
+        // hidden tests) but must be rare.
+        assert!(wrong_pass < n / 4, "{wrong_pass}");
+    }
+
+    #[test]
+    fn prop_run_is_deterministic_and_bounded() {
+        prop::check("dsl deterministic", 96, |rng, size| {
+            let n_ops = 1 + rng.usize(3);
+            let prog: Vec<&str> = (0..n_ops).map(|_| OPS[rng.usize(OPS.len())]).collect();
+            let input: Vec<i64> = (0..rng.usize(size as usize % 20 + 2))
+                .map(|_| rng.range(0, 50) as i64)
+                .collect();
+            (prog.join(" "), input)
+        }, |(prog, input)| {
+            let a = run(prog, input);
+            let b = run(prog, input);
+            prop::ensure_eq(a.clone(), b, "deterministic")?;
+            if let Ok(out) = a {
+                prop::ensure(
+                    out.iter().all(|v| v.abs() <= MAX_ABS_VALUE),
+                    "bounded",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Arithmetic task generator — the NuminaMath/Deepscaler stand-in.
+//!
+//! Difficulty ladder (paper §3.3: dataset difficulty drives RL progress):
+//!   0: single-digit addition            "3+4=?"
+//!   1: two-digit addition               "27+58=?"
+//!   2: subtraction (may go negative)    "31-76=?"
+//!   3: single x double digit product    "7*64=?"
+//!   4: two-op expression, precedence    "5+3*12=?"
+//!   5: parenthesized expression         "(14-6)*7=?"
+
+use super::{Task, TaskKind};
+use crate::util::rng::Rng;
+
+pub const MAX_DIFFICULTY: u8 = 5;
+
+pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+    let (prompt, value) = match difficulty {
+        0 => {
+            let a = rng.range(0, 10) as i64;
+            let b = rng.range(0, 10) as i64;
+            (format!("{a}+{b}=?"), a + b)
+        }
+        1 => {
+            let a = rng.range(10, 100) as i64;
+            let b = rng.range(10, 100) as i64;
+            (format!("{a}+{b}=?"), a + b)
+        }
+        2 => {
+            let a = rng.range(10, 100) as i64;
+            let b = rng.range(10, 100) as i64;
+            (format!("{a}-{b}=?"), a - b)
+        }
+        3 => {
+            let a = rng.range(2, 10) as i64;
+            let b = rng.range(10, 100) as i64;
+            (format!("{a}*{b}=?"), a * b)
+        }
+        4 => {
+            let a = rng.range(2, 20) as i64;
+            let b = rng.range(2, 10) as i64;
+            let c = rng.range(2, 20) as i64;
+            (format!("{a}+{b}*{c}=?"), a + b * c)
+        }
+        _ => {
+            let a = rng.range(2, 30) as i64;
+            let b = rng.range(2, 30) as i64;
+            let c = rng.range(2, 10) as i64;
+            if rng.bool(0.5) {
+                (format!("({a}-{b})*{c}=?"), (a - b) * c)
+            } else {
+                (format!("({a}+{b})*{c}=?"), (a + b) * c)
+            }
+        }
+    };
+    Task {
+        id,
+        kind: TaskKind::Math,
+        prompt,
+        answer: value.to_string(),
+        difficulty,
+        tests: Vec::new(),
+    }
+}
+
+/// Symbolic verification: evaluate the prompt expression independently and
+/// compare against the parsed numeric answer (not just string match), so
+/// "046" or "+46" also count — the paper's "symbolic verifiers".
+pub fn verify(task: &Task, completion: &str) -> bool {
+    let got = extract_answer(completion);
+    match (got, eval_expr(task.prompt.trim_end_matches("=?"))) {
+        (Some(g), Some(want)) => g == want,
+        (Some(g), None) => task.answer.parse::<i64>().map(|w| w == g).unwrap_or(false),
+        _ => false,
+    }
+}
+
+/// Pull the final integer out of a completion (filler `~`, whitespace and a
+/// `>` answer marker are tolerated).
+pub fn extract_answer(completion: &str) -> Option<i64> {
+    let cleaned: String = completion
+        .chars()
+        .filter(|c| !matches!(c, '~' | ' '))
+        .collect();
+    let tail = cleaned.rsplit('>').next().unwrap_or(&cleaned);
+    let tail = tail.trim();
+    if tail.is_empty() {
+        return None;
+    }
+    let valid = tail.chars().enumerate().all(|(i, c)| {
+        c.is_ascii_digit() || (i == 0 && (c == '-' || c == '+'))
+    });
+    if !valid {
+        return None;
+    }
+    tail.parse::<i64>().ok()
+}
+
+/// Tiny recursive-descent evaluator for `+ - * ( )` integer expressions.
+pub fn eval_expr(src: &str) -> Option<i64> {
+    let bytes: Vec<u8> = src.bytes().filter(|b| *b != b' ').collect();
+    let mut pos = 0;
+    let v = parse_sum(&bytes, &mut pos)?;
+    if pos == bytes.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+fn parse_sum(b: &[u8], pos: &mut usize) -> Option<i64> {
+    let mut acc = parse_prod(b, pos)?;
+    while *pos < b.len() {
+        match b[*pos] {
+            b'+' => {
+                *pos += 1;
+                acc = acc.checked_add(parse_prod(b, pos)?)?;
+            }
+            b'-' => {
+                *pos += 1;
+                acc = acc.checked_sub(parse_prod(b, pos)?)?;
+            }
+            _ => break,
+        }
+    }
+    Some(acc)
+}
+
+fn parse_prod(b: &[u8], pos: &mut usize) -> Option<i64> {
+    let mut acc = parse_atom(b, pos)?;
+    while *pos < b.len() && b[*pos] == b'*' {
+        *pos += 1;
+        acc = acc.checked_mul(parse_atom(b, pos)?)?;
+    }
+    Some(acc)
+}
+
+fn parse_atom(b: &[u8], pos: &mut usize) -> Option<i64> {
+    if *pos >= b.len() {
+        return None;
+    }
+    if b[*pos] == b'(' {
+        *pos += 1;
+        let v = parse_sum(b, pos)?;
+        if *pos >= b.len() || b[*pos] != b')' {
+            return None;
+        }
+        *pos += 1;
+        return Some(v);
+    }
+    let neg = b[*pos] == b'-';
+    if neg {
+        *pos += 1;
+    }
+    let start = *pos;
+    while *pos < b.len() && b[*pos].is_ascii_digit() {
+        *pos += 1;
+    }
+    if *pos == start {
+        return None;
+    }
+    let v: i64 = std::str::from_utf8(&b[start..*pos]).ok()?.parse().ok()?;
+    Some(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn eval_cases() {
+        assert_eq!(eval_expr("2+3*4"), Some(14));
+        assert_eq!(eval_expr("(2+3)*4"), Some(20));
+        assert_eq!(eval_expr("10-4-3"), Some(3));
+        assert_eq!(eval_expr("7"), Some(7));
+        assert_eq!(eval_expr("2+*3"), None);
+        assert_eq!(eval_expr("(2+3"), None);
+        assert_eq!(eval_expr(""), None);
+    }
+
+    #[test]
+    fn extract_cases() {
+        assert_eq!(extract_answer("46"), Some(46));
+        assert_eq!(extract_answer("~~~ 46"), Some(46));
+        assert_eq!(extract_answer("thinking>-12"), Some(-12));
+        assert_eq!(extract_answer("abc"), None);
+        assert_eq!(extract_answer("4a6"), None);
+        assert_eq!(extract_answer(""), None);
+    }
+
+    #[test]
+    fn generated_tasks_verify_with_reference_answer() {
+        let mut rng = Rng::new(1);
+        for d in 0..=MAX_DIFFICULTY {
+            for i in 0..50 {
+                let t = generate(i, d, &mut rng);
+                assert!(verify(&t, &t.answer), "{t:?}");
+                assert!(!verify(&t, "999999999"), "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_eval_matches_generated_answer() {
+        prop::check("math answers consistent", 128, |rng, _| {
+            let d = rng.usize(6) as u8;
+            generate(0, d, rng)
+        }, |t| {
+            let expr = t.prompt.trim_end_matches("=?");
+            prop::ensure_eq(
+                eval_expr(expr),
+                t.answer.parse::<i64>().ok(),
+                "evaluator vs generator",
+            )
+        });
+    }
+
+    #[test]
+    fn verify_accepts_leading_zeros_via_symbolic_eval() {
+        let mut rng = Rng::new(3);
+        let t = generate(0, 0, &mut rng);
+        let padded = format!("0{}", t.answer);
+        if !t.answer.starts_with('-') {
+            assert!(verify(&t, &padded));
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Training tasks with verifiable rewards (paper §3.1.1).
+//!
+//! The paper curates 285k tasks (259k math from NuminaMath-1.5/Deepscaler,
+//! 26k Python coding problems from SYNTHETIC-1). Substitution (DESIGN.md):
+//! synthetic arithmetic tasks verified symbolically, and list-manipulation
+//! programs in a mini stack DSL verified by hidden unit tests — the same
+//! binary-reward structure at a scale a tiny model can learn.
+
+pub mod dataset;
+pub mod dsl;
+pub mod eval;
+pub mod math;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Math,
+    Code,
+}
+
+/// One verifiable task. `prompt` and `answer` are plain text in the
+/// tokenizer alphabet; code tasks additionally carry hidden unit tests.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub kind: TaskKind,
+    pub prompt: String,
+    /// Reference answer (math) or reference program (code).
+    pub answer: String,
+    /// Difficulty knob used by the generators (0 = easiest).
+    pub difficulty: u8,
+    /// Hidden unit tests for code tasks: (input list, expected output).
+    pub tests: Vec<(Vec<i64>, Vec<i64>)>,
+}
+
+impl Task {
+    /// Render the prompt with an optional thinking-budget prefix
+    /// (paper §3.1.2: "Think for N tokens before giving a response" —
+    /// here `<N|` in the char vocabulary).
+    pub fn prompt_with_budget(&self, target_len: Option<usize>) -> String {
+        match target_len {
+            Some(n) => format!("<{n}|{}", self.prompt),
+            None => self.prompt.clone(),
+        }
+    }
+}

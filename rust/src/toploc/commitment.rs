@@ -1,0 +1,203 @@
+//! TOPLOC commitments (§2.3.1): locality-sensitive digests of the final
+//! hidden states produced during decoding — captured every 32 tokens plus
+//! the final position, as the paper's inference hook does.
+//!
+//! A commitment row is the top-k coordinates of |hidden| with their values.
+//! The validator recomputes hidden states via *prefill* and checks that
+//! (a) most top-k indices coincide and (b) the matched values agree within
+//! a tolerance — robust to GPU nondeterminism / tensor-parallel layout
+//! while reliably detecting different weights or quantized models.
+
+pub const TOPK: usize = 8;
+/// Minimum index overlap (out of TOPK) for a row to match.
+pub const MIN_OVERLAP: usize = 6;
+/// Relative tolerance on matched values.
+pub const VALUE_RTOL: f32 = 5e-2;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommitRow {
+    /// Sequence position this row was captured at.
+    pub pos: u32,
+    /// Top-k coordinates by |value| (descending).
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Commitment {
+    pub rows: Vec<CommitRow>,
+}
+
+/// Top-k coordinates of |x| (descending by magnitude).
+pub fn topk_abs(x: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut order: Vec<usize> = (0..x.len()).collect();
+    order.sort_by(|&a, &b| {
+        x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let top = &order[..k.min(x.len())];
+    (top.iter().map(|&i| i as u32).collect(), top.iter().map(|&i| x[i]).collect())
+}
+
+impl Commitment {
+    /// Build from captured hidden rows `(pos, hidden[d_model])`.
+    pub fn build(hidden_rows: &[(usize, Vec<f32>)], k: usize) -> Commitment {
+        Commitment {
+            rows: hidden_rows
+                .iter()
+                .map(|(pos, h)| {
+                    let (idx, val) = topk_abs(h, k);
+                    CommitRow { pos: *pos as u32, idx, val }
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize: u16 n_rows | per row: u32 pos, u8 k, k*(u32 idx, f32 val).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.rows.len() as u16).to_le_bytes());
+        for r in &self.rows {
+            out.extend_from_slice(&r.pos.to_le_bytes());
+            out.push(r.idx.len() as u8);
+            for (&i, &v) in r.idx.iter().zip(&r.val) {
+                out.extend_from_slice(&i.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Commitment> {
+        anyhow::ensure!(bytes.len() >= 2, "commitment truncated");
+        let n = u16::from_le_bytes(bytes[..2].try_into().unwrap()) as usize;
+        let mut pos = 2;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            anyhow::ensure!(pos + 5 <= bytes.len(), "commitment truncated");
+            let p = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            let k = bytes[pos + 4] as usize;
+            pos += 5;
+            anyhow::ensure!(pos + k * 8 <= bytes.len(), "commitment truncated");
+            let mut idx = Vec::with_capacity(k);
+            let mut val = Vec::with_capacity(k);
+            for _ in 0..k {
+                idx.push(u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+                val.push(f32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap()));
+                pos += 8;
+            }
+            rows.push(CommitRow { pos: p, idx, val });
+        }
+        anyhow::ensure!(pos == bytes.len(), "trailing bytes in commitment");
+        Ok(Commitment { rows })
+    }
+
+    /// Verify against validator-recomputed hidden states (prefill output,
+    /// row-major `[T, d_model]`). Returns Err with the first failing row.
+    pub fn verify_against(
+        &self,
+        hidden: &[f32],
+        d_model: usize,
+        seq_len: usize,
+    ) -> Result<(), String> {
+        if self.rows.is_empty() {
+            return Err("empty commitment".to_string());
+        }
+        for r in &self.rows {
+            let pos = r.pos as usize;
+            if pos >= seq_len {
+                return Err(format!("commit row at pos {pos} beyond sequence ({seq_len})"));
+            }
+            let h = &hidden[pos * d_model..(pos + 1) * d_model];
+            let (want_idx, _) = topk_abs(h, r.idx.len());
+            let overlap = r.idx.iter().filter(|i| want_idx.contains(i)).count();
+            let need = MIN_OVERLAP.min(r.idx.len());
+            if overlap < need {
+                return Err(format!("pos {pos}: top-k overlap {overlap} < {need}"));
+            }
+            for (&i, &v) in r.idx.iter().zip(&r.val) {
+                let actual = h[i as usize];
+                let tol = VALUE_RTOL * actual.abs().max(0.05);
+                if (actual - v).abs() > tol {
+                    return Err(format!(
+                        "pos {pos} coord {i}: committed {v} vs recomputed {actual}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hidden_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<(usize, Vec<f32>)> {
+        (0..n)
+            .map(|i| (i * 32 + 31, (0..d).map(|_| rng.normal() as f32).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(1);
+        let rows = hidden_rows(&mut rng, 4, 64);
+        let c = Commitment::build(&rows, TOPK);
+        let c2 = Commitment::decode(&c.encode()).unwrap();
+        assert_eq!(c, c2);
+        assert!(Commitment::decode(&c.encode()[..5]).is_err());
+    }
+
+    #[test]
+    fn verifies_against_matching_hidden() {
+        let mut rng = Rng::new(2);
+        let d = 64;
+        let t = 160;
+        let hidden: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let rows: Vec<(usize, Vec<f32>)> = [31usize, 63, 127]
+            .iter()
+            .map(|&p| (p, hidden[p * d..(p + 1) * d].to_vec()))
+            .collect();
+        let c = Commitment::build(&rows, TOPK);
+        c.verify_against(&hidden, d, t).unwrap();
+    }
+
+    #[test]
+    fn tolerates_small_numeric_noise() {
+        // GPU nondeterminism: small relative perturbations must pass.
+        let mut rng = Rng::new(3);
+        let d = 64;
+        let hidden: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let c = Commitment::build(&[(0, hidden.clone())], TOPK);
+        let noisy: Vec<f32> = hidden.iter().map(|v| v * 1.005).collect();
+        c.verify_against(&noisy, d, 1).unwrap();
+    }
+
+    #[test]
+    fn detects_different_weights() {
+        let mut rng = Rng::new(4);
+        let d = 64;
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let c = Commitment::build(&[(0, a)], TOPK);
+        assert!(c.verify_against(&b, d, 1).is_err());
+    }
+
+    #[test]
+    fn detects_quantization() {
+        // Coarse quantization (int4-ish) shifts values beyond rtol.
+        let mut rng = Rng::new(5);
+        let d = 64;
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let c = Commitment::build(&[(0, a.clone())], TOPK);
+        let q: Vec<f32> = a.iter().map(|v| v.round()).collect();
+        assert!(c.verify_against(&q, d, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_positions() {
+        let c = Commitment::build(&[(999, vec![1.0; 8])], 4);
+        assert!(c.verify_against(&vec![0.0; 64 * 8], 8, 64).is_err());
+    }
+}

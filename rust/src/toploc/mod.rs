@@ -1,0 +1,10 @@
+//! TOPLOC (paper §2.3): trustless inference verification via
+//! locality-sensitive commitments over final hidden states, plus sampling
+//! and sanity checks. Validators audit submissions far faster than
+//! generation (one prefill vs T decode steps — `benches/toploc_bench.rs`).
+
+pub mod commitment;
+pub mod validator;
+
+pub use commitment::{Commitment, CommitRow};
+pub use validator::{Rejection, Validator, ValidatorConfig};

@@ -1,0 +1,386 @@
+//! The TOPLOC validator (§2.3): computation, sampling and sanity checks
+//! over untrusted rollout submissions. Engine-independent logic lives
+//! here; the validator *node* (coordinator::validator) feeds it prefill
+//! outputs from the runtime.
+
+use super::commitment::Commitment;
+use crate::rl::reward::RewardConfig;
+use crate::rl::rollout_file::{Submission, WireRollout};
+use crate::tasks::dataset::{node_sample_seed, Dataset};
+use crate::verifier::Registry;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rejection {
+    /// rpq parse / schema failure ("parquet formatting check").
+    Schema(String),
+    /// Rollouts generated with a checkpoint outside the accepted window.
+    StalePolicy { submitted: u64, current: u64 },
+    /// Task ids don't reproduce from the fixed sampling seed.
+    SeedMismatch,
+    /// Reported scalars outside plausible bounds.
+    ValueBounds(String),
+    /// Reported reward disagrees with re-verification.
+    RewardMismatch { task_id: u64 },
+    /// Neither max-length nor a plausible EOS termination.
+    Termination { eos_prob: f32 },
+    /// TOPLOC commitment does not match recomputed hidden states.
+    Computation(String),
+    /// Token sampling distribution inconsistent with the claimed model
+    /// (bimodal low-probability mass — §2.3.2).
+    SamplingBimodal { low_frac: f64 },
+    /// Reported per-token probs disagree with recomputed probs.
+    ProbMismatch { median_err: f32 },
+}
+
+#[derive(Clone, Debug)]
+pub struct ValidatorConfig {
+    /// §2.3.2: EOS probability must exceed this at EOS termination.
+    pub eos_prob_min: f32,
+    /// Sampling check: max tolerated fraction of completion tokens whose
+    /// recomputed probability is below `low_prob_threshold`.
+    pub low_prob_frac_max: f64,
+    pub low_prob_threshold: f32,
+    /// Median |reported - recomputed| token probability tolerance.
+    pub prob_median_tol: f32,
+    /// Accept rollouts from checkpoints at most this many steps behind.
+    pub max_policy_lag: u64,
+    /// Group size each submission must carry per prompt.
+    pub expected_group: usize,
+}
+
+impl Default for ValidatorConfig {
+    fn default() -> Self {
+        ValidatorConfig {
+            eos_prob_min: 0.1,
+            low_prob_frac_max: 0.30,
+            // Well below uniform (1/vocab ~ 0.016): honest sampling from a
+            // near-uniform policy stays above this; decode-with-a-different-
+            // model lands orders of magnitude below it.
+            low_prob_threshold: 0.002,
+            prob_median_tol: 0.10,
+            max_policy_lag: 5,
+            expected_group: 4,
+        }
+    }
+}
+
+pub struct Validator {
+    pub cfg: ValidatorConfig,
+    pub registry: Registry,
+}
+
+impl Validator {
+    pub fn new(cfg: ValidatorConfig) -> Validator {
+        Validator { cfg, registry: Registry::default() }
+    }
+
+    /// Stage 1 — file-level checks: decode + schema ("parquet check").
+    pub fn check_file(&self, bytes: &[u8]) -> Result<Submission, Rejection> {
+        Submission::decode(bytes).map_err(|e| Rejection::Schema(e.to_string()))
+    }
+
+    /// Stage 2 — sanity checks (§2.3.3): fixed data sampling, value bounds,
+    /// reward re-verification, staleness.
+    pub fn check_sanity(
+        &self,
+        sub: &Submission,
+        dataset: &Dataset,
+        reward_cfg: &RewardConfig,
+        current_step: u64,
+        max_completion: usize,
+    ) -> Result<(), Rejection> {
+        if sub.step + self.cfg.max_policy_lag < current_step {
+            return Err(Rejection::StalePolicy { submitted: sub.step, current: current_step });
+        }
+        // Fixed data sampling: reproduce the node's draw. Each sampled task
+        // id must appear expected_group times (grouped by prompt).
+        let seed = node_sample_seed(sub.node_address, sub.step, sub.submission_idx);
+        let n_prompts = sub.rollouts.len() / self.cfg.expected_group.max(1);
+        let expect = dataset.sample_for(seed, n_prompts);
+        let mut want = Vec::new();
+        for id in expect {
+            for _ in 0..self.cfg.expected_group {
+                want.push(id);
+            }
+        }
+        let got: Vec<u64> = sub.rollouts.iter().map(|r| r.rollout.task_id).collect();
+        if got != want {
+            return Err(Rejection::SeedMismatch);
+        }
+
+        for w in &sub.rollouts {
+            let r = &w.rollout;
+            if !crate::rl::reward::reward_in_bounds(reward_cfg, r.reward, max_completion) {
+                return Err(Rejection::ValueBounds(format!("reward {}", r.reward)));
+            }
+            if !r.sampled_probs.iter().all(|p| (0.0..=1.0).contains(p) && p.is_finite()) {
+                return Err(Rejection::ValueBounds("sampled prob outside [0,1]".into()));
+            }
+            if r.sampled_probs.len() != r.completion_len() {
+                return Err(Rejection::ValueBounds("probs / completion length mismatch".into()));
+            }
+            // Special tokens must not appear inside the body (a PAD would
+            // corrupt prefill segmentation; BOS only leads).
+            if r.tokens[1..].iter().any(|&t| {
+                t == crate::data::tokenizer::PAD
+                    || t == crate::data::tokenizer::BOS
+                    || !(0..crate::data::tokenizer::VOCAB_SIZE as i32).contains(&t)
+            }) {
+                return Err(Rejection::ValueBounds("illegal token id in sequence".into()));
+            }
+            // Re-verify the claimed task reward against the environment.
+            let task = match dataset.get(r.task_id) {
+                Some(t) => t,
+                None => return Err(Rejection::ValueBounds(format!("unknown task {}", r.task_id))),
+            };
+            let completion = crate::data::tokenizer::decode_clean(&r.tokens[r.prompt_len..]);
+            let want_reward = crate::rl::reward::task_reward(&self.registry, task, &completion);
+            if (want_reward - r.task_reward).abs() > 1e-4 {
+                return Err(Rejection::RewardMismatch { task_id: r.task_id });
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage 3 — termination check (§2.3.2).
+    pub fn check_termination(&self, w: &WireRollout, max_new: usize, max_seq: usize) -> Result<(), Rejection> {
+        if w.finish_eos {
+            let last = *w.rollout.tokens.last().unwrap_or(&-1);
+            if last != crate::data::tokenizer::EOS || w.eos_prob <= self.cfg.eos_prob_min {
+                return Err(Rejection::Termination { eos_prob: w.eos_prob });
+            }
+            Ok(())
+        } else {
+            // Claimed max-length termination must actually be at the limit
+            // (premature truncation saves the provider compute — §2.3.2).
+            let len = w.rollout.completion_len();
+            if len >= max_new || w.rollout.tokens.len() >= max_seq - 1 {
+                Ok(())
+            } else {
+                Err(Rejection::Termination { eos_prob: 0.0 })
+            }
+        }
+    }
+
+    /// Stage 4 — computation check (§2.3.1): TOPLOC commitment vs hidden
+    /// states recomputed by prefill (`hidden` row-major `[T, d_model]`).
+    pub fn check_computation(
+        &self,
+        w: &WireRollout,
+        hidden: &[f32],
+        d_model: usize,
+    ) -> Result<(), Rejection> {
+        let c = Commitment::decode(&w.commitment)
+            .map_err(|e| Rejection::Computation(e.to_string()))?;
+        c.verify_against(hidden, d_model, w.rollout.tokens.len())
+            .map_err(Rejection::Computation)
+    }
+
+    /// Stage 5 — token sampling checks (§2.3.2) from prefill logits
+    /// (`logits` row-major `[T, vocab]`). Detects decode-with-smaller-model
+    /// (bimodal probability of sampled tokens under the claimed model) and
+    /// fabricated probability reports.
+    pub fn check_sampling(
+        &self,
+        w: &WireRollout,
+        logits: &[f32],
+        vocab: usize,
+    ) -> Result<(), Rejection> {
+        let r = &w.rollout;
+        if r.completion_len() == 0 {
+            return Ok(());
+        }
+        // Calibrated bimodality test: under honest sampling, the expected
+        // number of tokens with p < t equals the summed tail mass below t
+        // of the model's own distributions. A worker decoding with a
+        // different (smaller) model lands most tokens in the claimed
+        // model's low tail — observed >> expected.
+        let t = self.cfg.low_prob_threshold;
+        let mut low = 0usize;
+        let mut expected_low = 0.0f64;
+        let mut errs: Vec<f32> = Vec::with_capacity(r.completion_len());
+        for j in 0..r.completion_len() {
+            let pos = r.prompt_len + j; // token index being predicted
+            let row = &logits[(pos - 1) * vocab..pos * vocab];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f64 = row.iter().map(|&l| ((l - max) as f64).exp()).sum();
+            let probs: Vec<f64> = row.iter().map(|&l| ((l - max) as f64).exp() / z).collect();
+            let p = probs[r.tokens[pos] as usize] as f32;
+            expected_low += probs.iter().filter(|&&q| q < t as f64).sum::<f64>();
+            if p < t {
+                low += 1;
+            }
+            errs.push((p - r.sampled_probs[j]).abs());
+        }
+        let n = r.completion_len() as f64;
+        // Slack: 3x the expectation plus an absolute allowance, so short
+        // honest completions with a couple of rare draws pass.
+        if (low as f64) > 3.0 * expected_low + 0.25 * n + 2.0 {
+            return Err(Rejection::SamplingBimodal { low_frac: low as f64 / n });
+        }
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = errs[errs.len() / 2];
+        if median > self.cfg.prob_median_tol {
+            return Err(Rejection::ProbMismatch { median_err: median });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::rollout_file::WireRollout;
+    use crate::rl::Rollout;
+    use crate::tasks::dataset::DatasetConfig;
+
+    fn wire(tokens: Vec<i32>, prompt_len: usize, finish_eos: bool, eos_prob: f32) -> WireRollout {
+        let n = tokens.len() - prompt_len;
+        WireRollout {
+            rollout: Rollout {
+                task_id: 0,
+                group_id: 0,
+                policy_step: 0,
+                tokens,
+                prompt_len,
+                target_len: None,
+                task_reward: 0.0,
+                length_penalty: 0.0,
+                reward: 0.0,
+                advantage: 0.0,
+                sampled_probs: vec![0.3; n],
+                node_address: 1,
+            },
+            commitment: Commitment::default().encode(),
+            finish_eos,
+            eos_prob,
+        }
+    }
+
+    #[test]
+    fn termination_check() {
+        let v = Validator::new(ValidatorConfig::default());
+        let eos = crate::data::tokenizer::EOS;
+        // Good EOS.
+        let w = wire(vec![1, 5, 6, eos], 2, true, 0.6);
+        v.check_termination(&w, 64, 256).unwrap();
+        // EOS with implausible probability.
+        let w = wire(vec![1, 5, 6, eos], 2, true, 0.01);
+        assert!(matches!(v.check_termination(&w, 64, 256), Err(Rejection::Termination { .. })));
+        // Claimed EOS but last token isn't EOS.
+        let w = wire(vec![1, 5, 6, 7], 2, true, 0.9);
+        assert!(v.check_termination(&w, 64, 256).is_err());
+        // Premature "max length" truncation.
+        let w = wire(vec![1, 5, 6, 7], 2, false, 0.0);
+        assert!(v.check_termination(&w, 64, 256).is_err());
+        // Genuine max length.
+        let toks: Vec<i32> = (0..66).map(|i| 3 + i % 50).collect();
+        let w = wire(toks, 2, false, 0.0);
+        v.check_termination(&w, 64, 256).unwrap();
+    }
+
+    #[test]
+    fn sampling_check_accepts_consistent_probs() {
+        let v = Validator::new(ValidatorConfig::default());
+        let vocab = 8;
+        // Logits: uniform, so every token has p = 1/8 = 0.125.
+        let mut w = wire(vec![1, 3, 4, 5, 6], 1, false, 0.0);
+        w.rollout.sampled_probs = vec![0.125; 4];
+        let logits = vec![0.0f32; 5 * vocab];
+        v.check_sampling(&w, &logits, vocab).unwrap();
+    }
+
+    #[test]
+    fn sampling_check_rejects_bimodal() {
+        let mut cfg = ValidatorConfig::default();
+        cfg.prob_median_tol = 10.0; // isolate the bimodality check
+        let v = Validator::new(cfg);
+        let vocab = 8;
+        // Claimed model strongly prefers token 7 everywhere; the submitted
+        // tokens are all token 3 -> recomputed p(sampled) ~ 0.
+        let mut logits = vec![0.0f32; 12 * vocab];
+        for t in 0..12 {
+            logits[t * vocab + 7] = 10.0;
+        }
+        let w = wire(vec![1, 3, 3, 3, 3, 3, 3, 3], 1, false, 0.0);
+        match v.check_sampling(&w, &logits, vocab) {
+            Err(Rejection::SamplingBimodal { low_frac }) => assert!(low_frac > 0.9),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sampling_check_rejects_fabricated_probs() {
+        let v = Validator::new(ValidatorConfig::default());
+        let vocab = 8;
+        let mut w = wire(vec![1, 3, 4, 5, 6], 1, false, 0.0);
+        w.rollout.sampled_probs = vec![0.9; 4]; // actual is 0.125
+        let logits = vec![0.0f32; 5 * vocab];
+        assert!(matches!(
+            v.check_sampling(&w, &logits, vocab),
+            Err(Rejection::ProbMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn sanity_seed_and_reward_checks() {
+        let v = Validator::new(ValidatorConfig { expected_group: 2, ..Default::default() });
+        let dataset = Dataset::generate(&DatasetConfig { n_math: 40, n_code: 0, ..Default::default() });
+        let reward_cfg = RewardConfig::default();
+
+        // Build an honest submission: tasks drawn from the seed formula.
+        let seed = node_sample_seed(9, 3, 0);
+        let ids = dataset.sample_for(seed, 2);
+        let mut rollouts = Vec::new();
+        for id in &ids {
+            let task = dataset.get(*id).unwrap();
+            for _ in 0..2 {
+                let mut tokens = vec![crate::data::tokenizer::BOS];
+                tokens.extend(crate::data::tokenizer::encode(&task.prompt));
+                let plen = tokens.len();
+                tokens.extend(crate::data::tokenizer::encode(&task.answer));
+                tokens.push(crate::data::tokenizer::EOS);
+                let n = tokens.len() - plen;
+                let mut w = wire(tokens, plen, true, 0.9);
+                w.rollout.task_id = *id;
+                w.rollout.task_reward = 1.0;
+                w.rollout.reward = 1.0;
+                w.rollout.sampled_probs = vec![0.5; n];
+                rollouts.push(w);
+            }
+        }
+        let sub = Submission { node_address: 9, step: 3, submission_idx: 0, rollouts };
+        v.check_sanity(&sub, &dataset, &reward_cfg, 3, 128).unwrap();
+
+        // Cherry-picking: swap in a different task id.
+        let mut cheat = sub.clone();
+        cheat.rollouts[0].rollout.task_id = (ids[0] + 1) % dataset.len() as u64;
+        assert_eq!(
+            v.check_sanity(&cheat, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::SeedMismatch)
+        );
+
+        // Lying about rewards.
+        let mut liar = sub.clone();
+        liar.rollouts[0].rollout.task_reward = 0.0;
+        liar.rollouts[0].rollout.reward = 0.0;
+        assert!(matches!(
+            v.check_sanity(&liar, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::RewardMismatch { .. })
+        ));
+
+        // Stale policy.
+        assert!(matches!(
+            v.check_sanity(&sub, &dataset, &reward_cfg, 99, 128),
+            Err(Rejection::StalePolicy { .. })
+        ));
+
+        // Out-of-bounds reward.
+        let mut bounds = sub.clone();
+        bounds.rollouts[1].rollout.reward = 42.0;
+        assert!(matches!(
+            v.check_sanity(&bounds, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::ValueBounds(_))
+        ));
+    }
+}

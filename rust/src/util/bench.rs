@@ -1,0 +1,122 @@
+//! Criterion-style bench harness (criterion itself is not in the offline
+//! crate set). `cargo bench` targets use `harness = false` and drive this.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut s = format!(
+            "{:<44} iters={:<6} mean={:<11} p50={:<11} p95={:<11} min={}",
+            self.name,
+            self.iters,
+            fmt(self.mean_ns),
+            fmt(self.p50_ns),
+            fmt(self.p95_ns),
+            fmt(self.min_ns),
+        );
+        if let Some((v, unit)) = self.throughput {
+            s.push_str(&format!("  [{v:.2} {unit}]"));
+        }
+        s
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub measure_iters: u64,
+    pub max_seconds: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, measure_iters: 30, max_seconds: 10.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, measure_iters: 10, max_seconds: 5.0 }
+    }
+
+    /// Time `f`, printing a criterion-style line. Returns stats for
+    /// throughput post-processing.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters as usize);
+        let start = Instant::now();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if start.elapsed().as_secs_f64() > self.max_seconds && samples.len() >= 5 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples[0],
+            throughput: None,
+        };
+        println!("{}", res.report());
+        res
+    }
+
+    /// Like `run` but annotates items/second computed from `items` per call.
+    pub fn run_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        f: F,
+    ) -> BenchResult {
+        let mut res = self.run(name, f);
+        res.throughput = Some((items / (res.mean_ns / 1e9), unit));
+        println!("  -> {:.2} {}/s", items / (res.mean_ns / 1e9), unit);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let b = Bencher { warmup_iters: 1, measure_iters: 5, max_seconds: 2.0 };
+        let r = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns >= r.min_ns);
+    }
+}

@@ -1,0 +1,75 @@
+//! Leveled, targeted logging to stderr. `I2_LOG=debug` raises verbosity;
+//! `I2_LOG=off` silences (benches do this).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != 255 {
+        return cur;
+    }
+    let lv = match std::env::var("I2_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        Ok("off") => Level::Off,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lv, Ordering::Relaxed);
+    lv
+}
+
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn log(lv: Level, target: &str, msg: &str) {
+    if (lv as u8) < level() {
+        return;
+    }
+    let t = crate::util::now_ms();
+    let tag = match lv {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+        Level::Off => return,
+    };
+    eprintln!("[{:>8.3}s {} {}] {}", t as f64 / 1000.0, tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, $target, &format!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, $target, &format!($($arg)*))
+    };
+}

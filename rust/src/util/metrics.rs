@@ -1,0 +1,283 @@
+//! Metrics: lock-striped counters/gauges for the hot path, plus `Series` —
+//! step-indexed scalar traces that experiment harnesses dump as JSONL/CSV
+//! (every paper figure is regenerated from these).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotone counter (tokens generated, rollouts verified, bytes sent...).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed) + 1
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge (queue depth, in-flight requests).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets (latencies in micros).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        let b = (64 - v.max(1).leading_zeros() as usize).min(63);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Step-indexed scalar traces: `series.push(step, "task_reward", 0.42)`.
+/// One `Series` per run; harnesses write them to `runs/<name>.jsonl`.
+#[derive(Default)]
+pub struct Series {
+    rows: Mutex<Vec<(u64, String, f64)>>,
+}
+
+impl Series {
+    pub fn push(&self, step: u64, name: &str, value: f64) {
+        self.rows.lock().unwrap().push((step, name.to_string(), value));
+    }
+
+    pub fn get(&self, name: &str) -> Vec<(u64, f64)> {
+        self.rows
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, n, _)| n == name)
+            .map(|(s, _, v)| (*s, *v))
+            .collect()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.rows.lock().unwrap().iter().map(|(_, n, _)| n.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Moving average over the trailing `w` points (paper figures smooth
+    /// with a 10-step moving average).
+    pub fn smoothed(&self, name: &str, w: usize) -> Vec<(u64, f64)> {
+        let xs = self.get(name);
+        xs.iter()
+            .enumerate()
+            .map(|(i, (s, _))| {
+                let lo = i.saturating_sub(w.saturating_sub(1));
+                let window = &xs[lo..=i];
+                let mean = window.iter().map(|(_, v)| v).sum::<f64>() / window.len() as f64;
+                (*s, mean)
+            })
+            .collect()
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (step, name, value) in self.rows.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{{\"step\":{step},\"name\":\"{name}\",\"value\":{value}}}\n"
+            ));
+        }
+        out
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl().as_bytes())
+    }
+}
+
+/// Render aligned text columns (experiment harnesses print paper-style
+/// tables with this).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: Vec<String>, widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&line(headers.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Sparkline for quick terminal plots of a series.
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|&v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+/// Registry bundling the standard run counters, shared across subsystems.
+#[derive(Default)]
+pub struct Registry {
+    pub counters: BTreeMap<&'static str, Counter>,
+}
+
+impl Registry {
+    pub fn with(names: &[&'static str]) -> Registry {
+        let mut r = Registry::default();
+        for n in names {
+            r.counters.insert(n, Counter::default());
+        }
+        r
+    }
+
+    pub fn counter(&self, name: &str) -> &Counter {
+        self.counters.get(name).expect("unregistered counter")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for v in [1u64, 2, 4, 8, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.5) <= 8);
+        assert!(h.quantile(1.0) >= 1000);
+        assert!((h.mean() - 203.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn series_smoothing() {
+        let s = Series::default();
+        for i in 0..10 {
+            s.push(i, "x", i as f64);
+        }
+        let sm = s.smoothed("x", 2);
+        assert_eq!(sm[0].1, 0.0);
+        assert_eq!(sm[9].1, 8.5);
+        assert_eq!(s.get("x").len(), 10);
+        assert!(s.to_jsonl().lines().count() == 10);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = render_table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("a  bb"), "{t}");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.chars().count(), 4);
+    }
+}

@@ -1,0 +1,28 @@
+//! From-scratch substrates: deterministic PRNG, JSON, CLI parsing, logging,
+//! metrics, a criterion-style bench harness and a proptest-style property
+//! runner. All std-only (the offline crate set has no tokio/serde/clap/...).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod metrics;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+/// Monotonic milliseconds since process start (cheap wall-clock for logs).
+pub fn now_ms() -> u64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Unix time in milliseconds (for ledger timestamps / heartbeat expiry).
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}

@@ -1,0 +1,139 @@
+//! Minimal thread pool (no rayon/tokio offline). Owns N workers pulling
+//! boxed jobs from a shared queue; `scope`-style join via completion count.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    submitted: Arc<AtomicU64>,
+    completed: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let submitted = Arc::new(AtomicU64::new(0));
+        let completed = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let completed = Arc::clone(&completed);
+                std::thread::Builder::new()
+                    .name(format!("i2-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                completed.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, submitted, completed, shutdown }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        while self.completed.load(Ordering::SeqCst) < self.submitted.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run a batch of closures across a temporary pool and collect results in
+/// input order (fork-join helper used by validators / workload generators).
+pub fn map_parallel<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<R>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    {
+        let pool = ThreadPool::new(threads);
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            pool.submit(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        pool.wait_idle();
+    }
+    Arc::try_unwrap(results)
+        .ok()
+        .expect("pool drained")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_parallel_preserves_order() {
+        let out = map_parallel((0..50).collect::<Vec<u64>>(), 4, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

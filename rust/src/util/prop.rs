@@ -1,0 +1,113 @@
+//! Property-based testing helper (proptest is not in the offline crate set).
+//!
+//! `check(name, cases, |rng| gen, |input| prop)` runs `cases` randomized
+//! trials; on failure it retries with progressively "smaller" regenerations
+//! (halved size hint) and reports the reproducing seed. Seed override:
+//! `I2_PROP_SEED=<n>`.
+
+use crate::util::rng::Rng;
+
+pub struct Config {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("I2_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x17e11ec2u64);
+        Config { cases: 64, seed }
+    }
+}
+
+/// Run a property over randomized inputs. `gen` receives (rng, size_hint in
+/// [1, 100]) so generators can scale their outputs; failures report the
+/// case seed for reproduction.
+pub fn check_sized<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, u64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + (case * 100 / cfg.cases.max(1)).min(99);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink attempt: regenerate at smaller sizes from the same seed
+            // family and report the smallest failing example found.
+            let mut smallest: (u64, T, String) = (size, input, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut r2 = Rng::new(case_seed ^ s);
+                let cand = gen(&mut r2, s);
+                if let Err(m2) = prop(&cand) {
+                    smallest = (s, cand, m2);
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed}, size {}):\n  input: {:?}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    gen: impl FnMut(&mut Rng, u64) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let cfg = Config { cases, ..Config::default() };
+    check_sized(name, &cfg, gen, prop);
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, msg: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse twice is identity", 32, |rng, size| {
+            (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>()
+        }, |xs| {
+            let mut r = xs.clone();
+            r.reverse();
+            r.reverse();
+            ensure_eq(r, xs.clone(), "roundtrip")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |rng, _| rng.next_u32(), |_| {
+            Err("nope".to_string())
+        });
+    }
+}

@@ -1,0 +1,207 @@
+//! Deterministic PRNG (SplitMix64 seeding + xoshiro256++), plus sampling
+//! helpers. Every stochastic decision in the system (task sampling, node
+//! churn, token sampling, network jitter) flows through this so runs are
+//! exactly reproducible from a single seed — the property the paper's
+//! fixed-data-sampling sanity check (§2.3.3) relies on.
+
+/// xoshiro256++ with SplitMix64 initialization.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (paper §2.3.3: `seed = node_address *
+    /// step + submissions` — we fold stream ids the same way).
+    pub fn fold(&self, stream: u64) -> Rng {
+        Rng::new(self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    pub fn usize(&mut self, hi: usize) -> usize {
+        debug_assert!(hi > 0);
+        (self.next_u64() % hi as u64) as usize
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate 1.
+    pub fn exp(&mut self) -> f64 {
+        -self.f64().max(1e-300).ln()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(xs.len())]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.usize(weights.len());
+        }
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Temperature softmax sampling over logits (token sampling on the
+    /// inference workers). Returns (index, probability of that index).
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32) -> (usize, f32) {
+        let t = temperature.max(1e-4);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = logits.iter().map(|&l| (((l - max) / t) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let idx = self.weighted(&exps);
+        // Report the *untempered* model probability (what TOPLOC's sampling
+        // checks reason about).
+        let exps1: Vec<f64> = logits.iter().map(|&l| ((l - max) as f64).exp()).collect();
+        let z1: f64 = exps1.iter().sum();
+        let _ = z;
+        (idx, (exps1[idx] / z1) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fold_streams_differ() {
+        let base = Rng::new(1);
+        let mut a = base.fold(1);
+        let mut b = base.fold(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(5);
+        let mut counts = [0u32; 3];
+        for _ in 0..3000 {
+            counts[r.weighted(&[1.0, 1.0, 8.0])] += 1;
+        }
+        assert!(counts[2] > counts[0] * 4);
+    }
+
+    #[test]
+    fn sample_logits_argmax_at_low_temperature() {
+        let mut r = Rng::new(6);
+        let logits = vec![0.0, 5.0, 1.0];
+        for _ in 0..50 {
+            let (i, p) = r.sample_logits(&logits, 0.01);
+            assert_eq!(i, 1);
+            assert!(p > 0.9);
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+}

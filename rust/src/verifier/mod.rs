@@ -1,0 +1,76 @@
+//! GENESYS-style reward environments (paper §2.1.3): a registry mapping
+//! task kinds to verifiers. Adding an environment = implementing one trait.
+
+use crate::tasks::{dsl, math, Task, TaskKind};
+
+pub trait Environment: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Binary verification of a completion against a task.
+    fn verify(&self, task: &Task, completion: &str) -> bool;
+}
+
+pub struct MathEnv;
+
+impl Environment for MathEnv {
+    fn name(&self) -> &'static str {
+        "math-symbolic"
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        math::verify(task, completion)
+    }
+}
+
+pub struct CodeEnv;
+
+impl Environment for CodeEnv {
+    fn name(&self) -> &'static str {
+        "code-unit-tests"
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        dsl::verify(task, completion)
+    }
+}
+
+/// Registry dispatching tasks to environments.
+pub struct Registry {
+    math: MathEnv,
+    code: CodeEnv,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry { math: MathEnv, code: CodeEnv }
+    }
+}
+
+impl Registry {
+    pub fn env(&self, kind: TaskKind) -> &dyn Environment {
+        match kind {
+            TaskKind::Math => &self.math,
+            TaskKind::Code => &self.code,
+        }
+    }
+
+    pub fn verify(&self, task: &Task, completion: &str) -> bool {
+        self.env(task.kind).verify(task, completion)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn registry_dispatches() {
+        let reg = Registry::default();
+        let mut rng = Rng::new(1);
+        let mt = math::generate(0, 1, &mut rng);
+        let ct = dsl::generate(1, 1, &mut rng);
+        assert!(reg.verify(&mt, &mt.answer));
+        assert!(reg.verify(&ct, &ct.answer));
+        assert!(!reg.verify(&mt, "nonsense"));
+        assert_eq!(reg.env(TaskKind::Math).name(), "math-symbolic");
+        assert_eq!(reg.env(TaskKind::Code).name(), "code-unit-tests");
+    }
+}

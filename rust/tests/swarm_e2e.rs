@@ -1,0 +1,75 @@
+//! End-to-end integration over the full decentralized stack: protocol
+//! lifecycle + SHARDCAST + TOPLOC validation + PRIME-RL training, with an
+//! adversarial worker that must be caught and slashed.
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::Swarm;
+use intellect2::runtime::Runtime;
+
+fn artifacts_ready() -> bool {
+    Runtime::artifacts_dir("nano").join("spec.json").exists()
+}
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        model: "nano".into(),
+        rl_steps: 2,
+        prompts_per_step: 2,
+        group_size: 4,
+        micro_steps: 1,
+        max_new_tokens: 10,
+        n_workers: 2,
+        n_relays: 2,
+        n_math: 40,
+        n_code: 8,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn honest_swarm_trains_and_overlaps() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let swarm = Swarm::new(tiny_cfg()).unwrap();
+    let result = swarm.run(30, false).unwrap();
+    // Both RL steps completed (micro-steps may be skipped when online
+    // filtering discards every group — a valid outcome at this scale, the
+    // curves are still recorded).
+    assert_eq!(result.series.get("task_reward").len(), 2);
+    assert!(result.final_state.step >= 30, "step={}", result.final_state.step);
+    // Submissions flowed through validation.
+    assert!(result.stats.submissions_accepted.get() >= 2);
+    assert!(result.stats.rollouts_verified.get() >= 4);
+    assert_eq!(result.stats.nodes_slashed.get(), 0);
+    // SHARDCAST moved checkpoints (pretrain + 2 steps published).
+    assert!(result.stats.broadcast_bytes.get() >= 3 * 120_064 * 4);
+    // The ledger audit chain holds.
+    assert!(result.ledger.verify_chain());
+    // Per-step timings recorded (broadcast, batch-ready, train).
+    assert_eq!(result.step_timings.len(), 2);
+}
+
+#[test]
+fn evil_worker_is_slashed_and_excluded() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg = tiny_cfg();
+    let swarm = Swarm::new(cfg).unwrap();
+    let result = swarm.run(5, true).unwrap();
+    // The reward-hacking worker's submissions were rejected and the node
+    // slashed on the ledger (RewardMismatch via the validator's
+    // re-verification).
+    assert!(
+        result.stats.submissions_rejected.get() >= 1,
+        "rejected={}",
+        result.stats.submissions_rejected.get()
+    );
+    assert!(result.stats.nodes_slashed.get() >= 1);
+    // Honest training still made progress.
+    assert_eq!(result.series.get("task_reward").len(), 2);
+    assert!(result.ledger.verify_chain());
+}

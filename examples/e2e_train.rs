@@ -49,24 +49,28 @@ fn main() -> anyhow::Result<()> {
     println!("\npretrain loss   {}  {:.3} -> {:.3}", sparkline(&pre), pre.first().unwrap_or(&0.0), pre.last().unwrap_or(&0.0));
     println!("task reward     {}  {:.3} -> {:.3}", sparkline(&reward), reward.first().unwrap_or(&0.0), reward.last().unwrap_or(&0.0));
 
-    let rows: Vec<Vec<String>> = result
-        .step_timings
-        .iter()
-        .enumerate()
-        .map(|(i, (b, w, t))| {
-            vec![i.to_string(), format!("{b:.2}"), format!("{w:.2}"), format!("{t:.2}")]
-        })
-        .collect();
-    println!("\n{}", render_table(&["step", "broadcast_s", "batch_wait_s", "train_s"], &rows));
+    println!(
+        "\n{}",
+        render_table(
+            &["step", "broadcast_s", "batch_ready_s", "train_s", "overlap_s"],
+            &result.timing_rows()
+        )
+    );
 
     println!(
-        "submissions: {} received, {} accepted, {} rejected | rollouts verified: {} | tokens decoded: {} | slashed: {} | wall {wall:.0}s",
+        "submissions: {} received, {} accepted, {} rejected, {} stale | rollouts verified: {} ({} dropped stale) | tokens decoded: {} | slashed: {} | wall {wall:.0}s",
         result.stats.submissions_received.get(),
         result.stats.submissions_accepted.get(),
         result.stats.submissions_rejected.get(),
+        result.stats.submissions_stale.get(),
         result.stats.rollouts_verified.get(),
+        result.stats.rollouts_dropped_stale.get(),
         result.stats.decode_tokens.get(),
         result.stats.nodes_slashed.get(),
+    );
+    println!(
+        "off-policy staleness of trained rollouts: {}",
+        result.stats.staleness_summary()
     );
     assert!(result.ledger.verify_chain(), "ledger audit failed");
     result.series.save("runs/e2e_train.jsonl")?;

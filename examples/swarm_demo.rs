@@ -50,9 +50,18 @@ fn main() -> anyhow::Result<()> {
         "the adversarial worker should have been slashed"
     );
     println!(
-        "\nhonest pipeline unaffected: {} rollouts verified, {} submissions rejected",
+        "\nhonest pipeline unaffected: {} rollouts verified, {} submissions rejected \
+         ({} unattributable, not slashed), {} stale submissions dropped",
         result.stats.rollouts_verified.get(),
-        result.stats.submissions_rejected.get()
+        result.stats.submissions_rejected.get(),
+        result.stats.submissions_unattributed.get(),
+        result.stats.submissions_stale.get()
+    );
+    println!(
+        "staleness of trained rollouts (window k={}): {} | dropped stale: {}",
+        swarm.cfg.async_level,
+        result.stats.staleness_summary(),
+        result.stats.rollouts_dropped_stale.get()
     );
     Ok(())
 }

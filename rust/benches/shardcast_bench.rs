@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use intellect2::http::ServerConfig;
-use intellect2::shardcast::{Origin, Relay, ShardcastClient};
+use intellect2::shardcast::{Broadcaster, Origin, Relay, ShardcastClient};
 use intellect2::util::bench::Bencher;
 
 fn wait_complete(relays: &[Relay], step: u64) {
@@ -76,6 +76,45 @@ fn main() -> anyhow::Result<()> {
          spreading shards across relays; gap grows under contention)",
         r_greedy.mean_ns / r_ema.mean_ns
     );
+
+    // --- background broadcaster: publish latency seen by the trainer ---
+    // The trainer only pays enqueue + serialization; the shard/publish/
+    // mirror pipeline runs on the broadcast thread (two-step async, §3.2).
+    {
+        let origin3 = Origin::start(ServerConfig::default())?;
+        let relays3: Vec<Relay> = (0..2)
+            .map(|i| {
+                Relay::start(
+                    &format!("b{i}"),
+                    origin3.url(),
+                    ServerConfig::default(),
+                    Duration::from_millis(5),
+                )
+                .unwrap()
+            })
+            .collect();
+        let bc = Broadcaster::start(
+            origin3.store.clone(),
+            relays3.iter().map(|r| r.store.clone()).collect(),
+            64 * 1024,
+            Duration::from_secs(20),
+            8,
+        )?;
+        let t0 = std::time::Instant::now();
+        for step in 1..=8u64 {
+            bc.enqueue(step, payload.clone())?;
+        }
+        let enqueue_secs = t0.elapsed().as_secs_f64();
+        let records = bc.finish();
+        let total: f64 = records.iter().map(|r| r.total_secs()).sum();
+        println!(
+            "\nbackground broadcast: 8 x 2 MB enqueued in {:.4}s (trainer-side cost); \
+             {:.2}s of publish+mirror ran off-thread ({} timed out)",
+            enqueue_secs,
+            total,
+            records.iter().filter(|r| r.timed_out).count()
+        );
+    }
 
     // --- contention: 4 clients at once, EMA spreads load ---
     let t0 = std::time::Instant::now();

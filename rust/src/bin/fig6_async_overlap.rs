@@ -6,7 +6,17 @@
 //! communication overhead" claim).
 //!
 //!   cargo run --release --bin fig6_async_overlap -- --steps 8
+//!
+//! With `--real`, it also runs the actual threaded swarm (requires
+//! `make artifacts`) with a shaped origin uplink and prints the *measured*
+//! pipeline — broadcast duration, how much of it was hidden behind the
+//! next step's training, and the off-policy staleness histogram — next to
+//! the analytic prediction:
+//!
+//!   cargo run --release --bin fig6_async_overlap -- --real --rl-steps 3
 
+use intellect2::config::RunConfig;
+use intellect2::coordinator::Swarm;
 use intellect2::util::cli::Args;
 use intellect2::util::metrics::render_table;
 
@@ -58,6 +68,50 @@ fn simulate(mode: u64, n: u64, d: Durations) -> (f64, f64, f64) {
         }
     }
     (t, trainer_busy, inference_busy)
+}
+
+/// Run the real swarm and print measured pipeline overlap (vs the
+/// simulation above, which only *predicts* it).
+fn real_pipeline(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        rl_steps: 3,
+        prompts_per_step: 2,
+        group_size: 4,
+        micro_steps: 2,
+        max_new_tokens: 12,
+        pretrain_steps: 40,
+        n_workers: 2,
+        n_relays: 2,
+        // Shape the origin uplink so the broadcast takes real wall-clock,
+        // like the paper's WAN links — the overlap has to earn its keep.
+        origin_egress_bps: args.u64_or("origin-egress-bps", 200_000),
+        broadcast_timeout_secs: 60,
+        ..Default::default()
+    }
+    .apply_args(args);
+
+    println!("\n== measured two-step-async pipeline (real swarm) ==");
+    let swarm = Swarm::new(cfg.clone())?;
+    let result = swarm.run(cfg.pretrain_steps, false)?;
+
+    println!(
+        "{}",
+        render_table(
+            &["step", "broadcast_s", "batch_ready_s", "train_s", "overlap_s"],
+            &result.timing_rows()
+        )
+    );
+    println!(
+        "staleness of trained rollouts (window k={}): {} | dropped stale: {}",
+        cfg.async_level,
+        result.stats.staleness_summary(),
+        result.stats.rollouts_dropped_stale.get()
+    );
+    println!(
+        "(a synchronous trainer would add the full broadcast_s column to every \
+         step; overlap_s shows how much of it the pipelined trainer hid)"
+    );
+    Ok(())
 }
 
 fn main() {
@@ -116,4 +170,11 @@ fn main() {
          the paper reports near-perfect overlap in §4.2)",
         d.broadcast
     );
+
+    if args.has_flag("real") {
+        if let Err(e) = real_pipeline(&args) {
+            eprintln!("real pipeline failed (run `make artifacts` first?): {e}");
+            std::process::exit(1);
+        }
+    }
 }

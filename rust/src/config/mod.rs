@@ -1,5 +1,16 @@
 //! Run configuration: typed defaults + `key = value` config files +
 //! `--key value` CLI overrides (the launcher surface, see README).
+//!
+//! Swarm pipeline knobs (all overridable as `--knob value`):
+//! - `async-level`: asynchrony k; the trainer accepts rollouts from policy
+//!   versions in `[current - k, current]` and drops older ones (§3.2).
+//! - `batch-timeout-secs`: how long the trainer waits for a full verified
+//!   batch before training on what arrived (previously hard-coded 120 s).
+//! - `broadcast-timeout-secs`: how long the background broadcaster waits
+//!   for the relay tier to mirror a checkpoint before flagging it timed
+//!   out (previously a hard-coded 60 s wait on the trainer thread).
+//! - `origin-egress-bps`: shaped origin uplink in bytes/sec (0 = unshaped)
+//!   so broadcast time is non-trivial like the paper's WAN links (§4.2).
 
 use crate::rl::reward::RewardConfig;
 use crate::runtime::GrpoHp;
@@ -33,6 +44,14 @@ pub struct RunConfig {
     pub n_relays: usize,
     /// Simulated per-worker downlink in bytes/sec (0 = unshaped).
     pub worker_ingress_bps: u64,
+    /// Simulated origin uplink in bytes/sec (0 = unshaped): makes the
+    /// origin -> relay mirror take real time, like the paper's WAN links.
+    pub origin_egress_bps: u64,
+    /// Trainer-side wait for a full verified batch before training on a
+    /// partial one (seconds).
+    pub batch_timeout_secs: u64,
+    /// Background broadcaster's relay-mirror deadline (seconds).
+    pub broadcast_timeout_secs: u64,
     pub lr_warmup_steps: u64,
     /// Offline difficulty filter (pass@k band) applied before training.
     pub offline_filter: bool,
@@ -59,6 +78,9 @@ impl Default for RunConfig {
             n_workers: 3,
             n_relays: 2,
             worker_ingress_bps: 0,
+            origin_egress_bps: 0,
+            batch_timeout_secs: 120,
+            broadcast_timeout_secs: 60,
             lr_warmup_steps: 5,
             offline_filter: false,
         }
@@ -91,6 +113,9 @@ impl RunConfig {
         self.n_math = a.usize_or("n-math", self.n_math);
         self.n_code = a.usize_or("n-code", self.n_code);
         self.worker_ingress_bps = a.u64_or("worker-ingress-bps", self.worker_ingress_bps);
+        self.origin_egress_bps = a.u64_or("origin-egress-bps", self.origin_egress_bps);
+        self.batch_timeout_secs = a.u64_or("batch-timeout-secs", self.batch_timeout_secs);
+        self.broadcast_timeout_secs = a.u64_or("broadcast-timeout-secs", self.broadcast_timeout_secs);
         if a.has_flag("offline-filter") {
             self.offline_filter = true;
         }
@@ -143,7 +168,8 @@ mod tests {
     #[test]
     fn cli_overrides() {
         let a = Args::parse(
-            "--model micro --async-level 4 --lr 0.001 --target-short"
+            "--model micro --async-level 4 --lr 0.001 --target-short \
+             --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000"
                 .split_whitespace()
                 .map(str::to_string),
         );
@@ -152,6 +178,9 @@ mod tests {
         assert_eq!(c.async_level, 4);
         assert!((c.hp.lr - 0.001).abs() < 1e-9);
         assert_eq!(c.reward.targets, vec![16, 32, 48, 64]);
+        assert_eq!(c.batch_timeout_secs, 7);
+        assert_eq!(c.broadcast_timeout_secs, 9);
+        assert_eq!(c.origin_egress_bps, 5000);
     }
 
     #[test]

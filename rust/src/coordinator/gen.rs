@@ -16,6 +16,8 @@ use crate::toploc::Commitment;
 use crate::util::rng::Rng;
 use crate::verifier::Registry;
 
+pub use crate::rl::group_id_base;
+
 pub struct RolloutGenerator {
     pub host: Arc<EngineHost>,
     pub dataset: Arc<Dataset>,
@@ -138,6 +140,37 @@ mod tests {
 
     fn artifacts_ready() -> bool {
         crate::runtime::Runtime::artifacts_dir("nano").join("spec.json").exists()
+    }
+
+    #[test]
+    fn group_id_base_is_collision_resistant() {
+        // Regression: the old `(address << 20) ^ (version << 10) ^ (idx << 4)`
+        // base dropped the high 20 bits of the address, so these two
+        // distinct nodes collided exactly.
+        let a = 0x0000_1234_5678_9ABCu64;
+        let b = a ^ (1u64 << 45); // differs only in a discarded-by-<<20 bit
+        assert_eq!(a << 20, b << 20, "old scheme collides by construction");
+        assert_ne!(group_id_base(a, 3, 1), group_id_base(b, 3, 1));
+        // Distinct across versions and submission indices too.
+        assert_ne!(group_id_base(a, 3, 1), group_id_base(a, 4, 1));
+        assert_ne!(group_id_base(a, 3, 1), group_id_base(a, 3, 2));
+        // Low 16 bits are reserved for per-prompt offsets.
+        assert_eq!(group_id_base(a, 3, 1) & 0xFFFF, 0);
+        // Deterministic (validators recompute the same ids).
+        assert_eq!(group_id_base(a, 3, 1), group_id_base(a, 3, 1));
+        // No collisions across a realistic swarm's worth of submissions.
+        let mut seen = std::collections::BTreeSet::new();
+        for node in 0..64u64 {
+            let addr = node.wrapping_mul(0x1357_9BDF_2468_ACE0) ^ (node << 44);
+            for version in 0..16 {
+                for idx in 0..4 {
+                    assert!(
+                        seen.insert(group_id_base(addr, version, idx)),
+                        "collision at node {node} version {version} idx {idx}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

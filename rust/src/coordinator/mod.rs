@@ -5,10 +5,12 @@
 pub mod batcher;
 pub mod gen;
 pub mod pretrain;
+pub mod step;
 pub mod swarm;
 pub mod sync_driver;
 
 pub use batcher::{train_on_rollouts, StepReport};
-pub use gen::RolloutGenerator;
-pub use swarm::{Swarm, SwarmResult, SwarmStats};
+pub use gen::{group_id_base, RolloutGenerator};
+pub use step::{filter_groups, record_step, FilterOutcome};
+pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};
 pub use sync_driver::SyncPipeline;

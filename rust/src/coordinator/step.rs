@@ -1,0 +1,103 @@
+//! Shared per-step accounting between the deterministic async-k driver
+//! (`sync_driver`) and the free-running swarm (`swarm`): online group
+//! filtering of freshly generated rollouts and the canonical set of series
+//! every RL step records. Previously both drivers carried private copies
+//! of this logic that drifted apart.
+
+use crate::coordinator::batcher::StepReport;
+use crate::rl::{advantage, Rollout};
+use crate::util::metrics::Series;
+
+/// Result of online-filtering one submission's worth of rollouts (§3.3.2).
+pub struct FilterOutcome {
+    /// Rollouts from informative (non-degenerate) groups, advantages set.
+    pub rollouts: Vec<Rollout>,
+    /// Number of groups kept.
+    pub groups_kept: usize,
+    /// Number of all-same-reward groups discarded.
+    pub groups_discarded: usize,
+}
+
+/// Compute group advantages and drop degenerate groups: the shared
+/// "keep sampling until the batch fills" building block. The filtering
+/// rule itself lives in [`advantage::online_filter`] — this only adds the
+/// group accounting the drivers need.
+pub fn filter_groups(batch: Vec<Rollout>) -> FilterOutcome {
+    let (rollouts, groups_discarded) = advantage::online_filter(batch);
+    let mut kept_ids: Vec<u64> = rollouts.iter().map(|r| r.group_id).collect();
+    kept_ids.sort_unstable();
+    kept_ids.dedup();
+    FilterOutcome { rollouts, groups_kept: kept_ids.len(), groups_discarded }
+}
+
+/// Record the canonical per-step training series under `prefix` (empty for
+/// the swarm; experiment drivers namespace with e.g. `"async2/"`).
+pub fn record_step(
+    series: &Series,
+    prefix: &str,
+    step: u64,
+    r: &StepReport,
+    extra_inference: usize,
+) {
+    let p = |name: &str| format!("{prefix}{name}");
+    series.push(step, &p("task_reward"), r.mean_task_reward);
+    series.push(step, &p("length_penalty"), r.mean_length_penalty);
+    series.push(step, &p("reward"), r.mean_reward);
+    series.push(step, &p("completion_len"), r.mean_completion_len);
+    series.push(step, &p("loss"), r.metrics.loss as f64);
+    series.push(step, &p("gnorm"), r.metrics.gnorm as f64);
+    series.push(step, &p("clipfrac"), r.metrics.clipfrac as f64);
+    series.push(step, &p("entropy"), r.metrics.entropy as f64);
+    series.push(step, &p("kl"), r.metrics.kl as f64);
+    series.push(step, &p("ratio_max"), r.metrics.ratio_max as f64);
+    series.push(step, &p("discarded_groups"), r.discarded_groups as f64);
+    series.push(step, &p("padding_fraction"), r.padding_fraction);
+    series.push(step, &p("extra_inference_samples"), extra_inference as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(group: u64, reward: f32) -> Rollout {
+        Rollout {
+            task_id: 0,
+            group_id: group,
+            policy_step: 0,
+            tokens: vec![1, 5, 6, 2],
+            prompt_len: 2,
+            target_len: None,
+            task_reward: reward,
+            length_penalty: 0.0,
+            reward,
+            advantage: 0.0,
+            sampled_probs: vec![0.5, 0.5],
+            node_address: 0,
+        }
+    }
+
+    #[test]
+    fn filter_groups_counts_and_keeps_informative() {
+        let out = filter_groups(vec![
+            mk(1, 1.0),
+            mk(1, 0.0),
+            mk(2, 1.0),
+            mk(2, 1.0), // degenerate
+        ]);
+        assert_eq!(out.groups_kept, 1);
+        assert_eq!(out.groups_discarded, 1);
+        assert_eq!(out.rollouts.len(), 2);
+        assert!(out.rollouts.iter().all(|r| r.group_id == 1));
+        assert!(out.rollouts.iter().any(|r| r.advantage > 0.0));
+    }
+
+    #[test]
+    fn record_step_writes_canonical_series() {
+        let series = Series::default();
+        let report = StepReport { mean_task_reward: 0.5, ..Default::default() };
+        record_step(&series, "x/", 3, &report, 7);
+        assert_eq!(series.get("x/task_reward"), vec![(3, 0.5)]);
+        assert_eq!(series.get("x/extra_inference_samples"), vec![(3, 7.0)]);
+        assert!(series.names().contains(&"x/padding_fraction".to_string()));
+    }
+}

@@ -4,6 +4,12 @@
 //! free-running threads talking real HTTP over loopback, with optional
 //! bandwidth shaping. Used by the e2e example, the §4.2 utilization table
 //! and the swarm demo.
+//!
+//! The trainer is genuinely two-step asynchronous (§3.2): checkpoint
+//! publishing + relay mirroring run on a background [`Broadcaster`] thread
+//! so training of step `s+1` overlaps broadcasting of step `s`'s weights,
+//! and verified rollouts land in a version-tagged [`RolloutBuffer`] that
+//! enforces the `[current - async_level, current]` staleness window.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -11,23 +17,26 @@ use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::coordinator::batcher::train_on_rollouts;
-use crate::coordinator::gen::RolloutGenerator;
+use crate::coordinator::gen::{group_id_base, RolloutGenerator};
 use crate::coordinator::pretrain;
+use crate::coordinator::step::record_step;
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
 use crate::protocol::{DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker};
+use crate::rl::buffer::{Admission, RolloutBuffer, StalenessStats};
 use crate::rl::rollout_file::Submission;
-use crate::rl::Rollout;
 use crate::runtime::{EngineHost, HostTrainState, ModelSpec, ParamSet};
-use crate::shardcast::{Origin, Relay, ShardcastClient};
+use crate::shardcast::{BroadcastRecord, Broadcaster, Origin, Relay, ShardcastClient};
 use crate::tasks::dataset::{Dataset, DatasetConfig};
-use crate::toploc::{Validator, ValidatorConfig};
+use crate::toploc::{Rejection, Validator, ValidatorConfig};
 use crate::util::json::Json;
 use crate::util::metrics::{Counter, Series};
 
 /// Shared swarm state.
 struct Shared {
-    verified: Mutex<Vec<Rollout>>,
-    /// Policy versions the trusted side knows (validator prefill).
+    /// Verified rollouts, tagged with their producing policy version.
+    buffer: RolloutBuffer,
+    /// Policy versions the trusted side knows (validator prefill). Pruned
+    /// to the staleness window plus a margin — see `prune_versions`.
     versions: Mutex<std::collections::BTreeMap<u64, Arc<ParamSet>>>,
     submissions: Mutex<Vec<Vec<u8>>>,
     current_step: AtomicU64,
@@ -40,10 +49,73 @@ pub struct SwarmStats {
     pub submissions_received: Counter,
     pub submissions_accepted: Counter,
     pub submissions_rejected: Counter,
+    /// Valid-looking submissions outside the staleness window: dropped and
+    /// counted, not slashed (being slow is not cheating).
+    pub submissions_stale: Counter,
+    /// Rejected submissions whose sender could not be attributed from the
+    /// envelope (nothing to slash).
+    pub submissions_unattributed: Counter,
     pub rollouts_verified: Counter,
+    /// Rollouts dropped for staleness anywhere in the pipeline: stale
+    /// submissions, buffer-push rejections, and evictions when the trainer
+    /// advanced past their window.
+    pub rollouts_dropped_stale: Counter,
     pub nodes_slashed: Counter,
     pub broadcast_bytes: Counter,
     pub decode_tokens: Counter,
+    /// Per-lag histogram of rollouts consumed by the trainer:
+    /// lag = training step - producing policy version.
+    pub trained_by_lag: Mutex<std::collections::BTreeMap<u64, u64>>,
+}
+
+impl SwarmStats {
+    /// `(lag, n_rollouts)` pairs of everything the trainer consumed.
+    pub fn staleness_hist(&self) -> Vec<(u64, u64)> {
+        self.trained_by_lag.lock().unwrap().iter().map(|(&l, &n)| (l, n)).collect()
+    }
+
+    /// One-line rendering of the per-lag histogram ("lag 0: 12 | lag 1: 3").
+    pub fn staleness_summary(&self) -> String {
+        let hist = self.staleness_hist();
+        if hist.is_empty() {
+            return "none".into();
+        }
+        hist.iter()
+            .map(|(lag, n)| format!("lag {lag}: {n}"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    fn merge_staleness(&self, stats: &StalenessStats) {
+        let mut hist = self.trained_by_lag.lock().unwrap();
+        hist.clear();
+        for &(lag, n) in &stats.trained_by_lag {
+            hist.insert(lag, n);
+        }
+    }
+}
+
+/// Wall-clock accounting for one RL step. All `*_at` timestamps are
+/// seconds relative to the run epoch shared with [`BroadcastRecord`]s in
+/// [`SwarmResult::broadcasts`], so overlap between training step `s+1` and
+/// the broadcast of step `s`'s checkpoint is directly measurable.
+#[derive(Clone, Copy, Debug)]
+pub struct StepTiming {
+    pub step: u64,
+    /// Background broadcast duration (publish + relay mirror) of the
+    /// checkpoint this step produced (version `step + 1`); 0 when the
+    /// broadcaster recorded nothing (e.g. the run was cut short).
+    pub broadcast_secs: f64,
+    /// Time the trainer waited for a full verified batch.
+    pub batch_ready_secs: f64,
+    pub train_secs: f64,
+    /// Time the trainer was blocked handing the checkpoint to the
+    /// broadcaster (backpressure: more than `async_level` checkpoints in
+    /// flight). Non-zero means broadcast time is gating the trainer and
+    /// the overlap columns alone would overstate pipelining.
+    pub enqueue_wait_secs: f64,
+    pub train_started_at: f64,
+    pub train_ended_at: f64,
 }
 
 pub struct SwarmResult {
@@ -51,8 +123,71 @@ pub struct SwarmResult {
     pub final_state: Box<HostTrainState>,
     pub stats: Arc<SwarmStats>,
     pub ledger: Ledger,
-    /// (broadcast_secs, batch_ready_secs, train_secs) per RL step.
-    pub step_timings: Vec<(f64, f64, f64)>,
+    pub step_timings: Vec<StepTiming>,
+    /// Background broadcast records, same epoch as `step_timings`.
+    pub broadcasts: Vec<BroadcastRecord>,
+}
+
+impl SwarmResult {
+    /// Seconds of the broadcast each step *produced* (checkpoint
+    /// `step + 1`) that overlapped *subsequent* training steps — the
+    /// paper's "communication hidden behind compute" claim, measured
+    /// rather than simulated. A slow broadcast can span several training
+    /// steps; every hidden second counts. `(producing step, overlap_secs)`;
+    /// the final step has no later training to hide behind and is omitted.
+    pub fn broadcast_overlap(&self) -> Vec<(u64, f64)> {
+        self.step_timings
+            .iter()
+            .filter_map(|t| {
+                let b = self.broadcasts.iter().find(|r| r.step == t.step + 1)?;
+                let later: Vec<&StepTiming> =
+                    self.step_timings.iter().filter(|n| n.step > t.step).collect();
+                if later.is_empty() {
+                    return None;
+                }
+                // Training intervals are disjoint, so intersections sum.
+                let overlap: f64 = later
+                    .iter()
+                    .map(|n| {
+                        (b.completed_at.min(n.train_ended_at)
+                            - b.started_at.max(n.train_started_at))
+                            .max(0.0)
+                    })
+                    .sum();
+                Some((t.step, overlap))
+            })
+            .collect()
+    }
+
+    /// The common timing table, one row per step:
+    /// `[step, broadcast_s, batch_ready_s, train_s, overlap_s]` — both the
+    /// broadcast duration and the overlap refer to the checkpoint this
+    /// step produced.
+    pub fn timing_rows(&self) -> Vec<Vec<String>> {
+        self.timing_rows_with(|_, overlap| overlap.map_or("-".into(), |o| format!("{o:.2}")))
+    }
+
+    /// `timing_rows` with a custom renderer for the overlap column
+    /// (receives the step's timing and its measured overlap, if any).
+    pub fn timing_rows_with(
+        &self,
+        overlap_col: impl Fn(&StepTiming, Option<f64>) -> String,
+    ) -> Vec<Vec<String>> {
+        let overlaps: std::collections::BTreeMap<u64, f64> =
+            self.broadcast_overlap().into_iter().collect();
+        self.step_timings
+            .iter()
+            .map(|t| {
+                vec![
+                    t.step.to_string(),
+                    format!("{:.2}", t.broadcast_secs),
+                    format!("{:.2}", t.batch_ready_secs),
+                    format!("{:.2}", t.train_secs),
+                    overlap_col(t, overlaps.get(&t.step).copied()),
+                ]
+            })
+            .collect()
+    }
 }
 
 pub struct Swarm {
@@ -81,7 +216,7 @@ impl Swarm {
         let spec = self.host.spec().clone();
         let series = Series::default();
         let shared = Arc::new(Shared {
-            verified: Mutex::new(Vec::new()),
+            buffer: RolloutBuffer::new(cfg.async_level),
             versions: Mutex::new(Default::default()),
             submissions: Mutex::new(Vec::new()),
             current_step: AtomicU64::new(0),
@@ -102,7 +237,10 @@ impl Swarm {
         let _orch_srv = OrchestratorServer::start(orch.clone())?;
 
         // --- shardcast tier ---
-        let origin = Origin::start(ServerConfig::default())?;
+        let origin = Origin::start(ServerConfig {
+            egress_bytes_per_sec: cfg.origin_egress_bps,
+            ..Default::default()
+        })?;
         let relays: Vec<Relay> = (0..cfg.n_relays.max(1))
             .map(|i| {
                 Relay::start(
@@ -114,6 +252,19 @@ impl Swarm {
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
         let relay_urls: Vec<String> = relays.iter().map(Relay::url).collect();
+
+        // Background broadcast thread: the trainer hands checkpoints over
+        // and immediately returns to training (two-step async, §3.2).
+        let broadcaster = Broadcaster::start(
+            origin.store.clone(),
+            relays.iter().map(|r| r.store.clone()).collect(),
+            64 * 1024,
+            Duration::from_secs(cfg.broadcast_timeout_secs),
+            // Backpressure at the async level: the trainer may run at most
+            // this many checkpoints ahead of the broadcast tier.
+            cfg.async_level.max(1) as usize,
+        )?;
+        let epoch = broadcaster.epoch();
 
         // --- step/submission service (the PRIME-RL API the workers poll) ---
         let svc = Arc::clone(&shared);
@@ -138,11 +289,12 @@ impl Swarm {
         state = pretrain::pretrain(&self.host, state, &self.dataset, cfg, pretrain_steps, &series)?;
         crate::info!("swarm", "bootstrap done in {:.1}s", t_boot.elapsed().as_secs_f64());
 
-        // Publish checkpoint 0.
+        // Publish checkpoint 0 (through the broadcaster so even the
+        // bootstrap broadcast is off the trainer thread).
         let payload = state.params.to_bytes();
         shared.stats.broadcast_bytes.add(payload.len() as u64);
-        origin.publish(0, &payload, 64 * 1024);
         shared.versions.lock().unwrap().insert(0, Arc::new(state.params.clone()));
+        broadcaster.enqueue(0, payload)?;
 
         // --- validator thread ---
         let validator_handle = {
@@ -153,6 +305,9 @@ impl Swarm {
             let reward_cfg = cfg.reward.clone();
             let vcfg = ValidatorConfig {
                 expected_group: cfg.group_size,
+                // TOPLOC enforces the same off-policy window as the trainer
+                // buffer (§3.2) — not just exact-version existence.
+                max_policy_lag: cfg.async_level,
                 ..Default::default()
             };
             let max_new = cfg.max_new_tokens;
@@ -169,17 +324,58 @@ impl Swarm {
                         &validator, &bytes, &dataset, &reward_cfg, &host, &shared, &spec, max_new,
                     );
                     match verdict {
-                        Ok(sub) => {
+                        Verdict::Accept(sub) => {
+                            let n = sub.rollouts.len();
                             shared.stats.submissions_accepted.inc();
-                            shared.stats.rollouts_verified.add(sub.rollouts.len() as u64);
-                            let mut v = shared.verified.lock().unwrap();
-                            v.extend(sub.rollouts.into_iter().map(|w| w.rollout));
+                            shared.stats.rollouts_verified.add(n as u64);
+                            if n == 0 {
+                                // Every group was soft-dropped (termination
+                                // check): nothing to buffer.
+                                continue;
+                            }
+                            let version = sub.step;
+                            let rollouts =
+                                sub.rollouts.into_iter().map(|w| w.rollout).collect();
+                            if let Admission::TooStale { lag } =
+                                shared.buffer.push(version, rollouts)
+                            {
+                                // Went stale between verification start and
+                                // buffer admission.
+                                shared.stats.rollouts_dropped_stale.add(n as u64);
+                                crate::debug!(
+                                    "validator",
+                                    "verified batch of {n} went stale (lag {lag})"
+                                );
+                            }
                         }
-                        Err((node, why)) => {
+                        Verdict::Stale { node, submitted, current, n_rollouts } => {
+                            shared.stats.submissions_stale.inc();
+                            shared.stats.rollouts_dropped_stale.add(n_rollouts as u64);
+                            crate::debug!(
+                                "validator",
+                                "node {node}: dropping stale submission (policy {submitted}, current {current})"
+                            );
+                        }
+                        Verdict::EngineFailure { node, why } => {
+                            // Not the node's fault: drop unjudged, no
+                            // counters beyond the log.
+                            crate::warn!(
+                                "validator",
+                                "engine failure while validating node {node}'s submission (dropped unjudged): {why}"
+                            );
+                        }
+                        Verdict::Reject { node: Some(node), why } => {
                             shared.stats.submissions_rejected.inc();
                             shared.stats.nodes_slashed.inc();
                             crate::warn!("validator", "rejecting node {node}: {why}");
                             orch.slash(node, &why);
+                        }
+                        Verdict::Reject { node: None, why } => {
+                            // Malformed beyond attribution: count it, but
+                            // never slash an address the file doesn't prove.
+                            shared.stats.submissions_rejected.inc();
+                            shared.stats.submissions_unattributed.inc();
+                            crate::warn!("validator", "rejecting unattributable submission: {why}");
                         }
                     }
                 }
@@ -268,8 +464,9 @@ impl Swarm {
                             *idx,
                             generator_cfg.prompts_per_step.div_ceil(generator_cfg.n_workers),
                             generator_cfg.group_size,
-                            // Group-id base unique per (node, version, idx).
-                            (address << 20) ^ (version << 10) ^ (*idx << 4),
+                            // Collision-resistant base unique per
+                            // (node, version, idx) — full-width hash.
+                            group_id_base(address, version, *idx),
                         );
                         *idx += 1;
                         match sub {
@@ -301,68 +498,80 @@ impl Swarm {
             worker_threads.push(t);
         }
 
-        // --- trainer loop ---
+        // --- trainer loop (pipelined: broadcast of step s overlaps
+        // training of step s+1) ---
         let need = cfg.prompts_per_step * cfg.group_size;
-        let mut step_timings = Vec::new();
+        let batch_timeout = Duration::from_secs(cfg.batch_timeout_secs.max(1));
+        let mut step_timings: Vec<StepTiming> = Vec::new();
         for step in 0..cfg.rl_steps {
             shared.current_step.store(step, Ordering::SeqCst);
+            let evicted = shared.buffer.advance(step);
+            if evicted > 0 {
+                shared.stats.rollouts_dropped_stale.add(evicted);
+                crate::debug!("swarm", "step {step}: evicted {evicted} stale buffered rollouts");
+            }
             let t_wait = Instant::now();
-            loop {
-                let n = shared.verified.lock().unwrap().len();
-                if n >= need || t_wait.elapsed() > Duration::from_secs(120) {
-                    break;
-                }
+            while shared.buffer.len() < need && t_wait.elapsed() < batch_timeout {
                 std::thread::sleep(Duration::from_millis(20));
             }
             let batch_ready_secs = t_wait.elapsed().as_secs_f64();
-            let rollouts: Vec<Rollout> = {
-                let mut v = shared.verified.lock().unwrap();
-                std::mem::take(&mut *v)
-            };
-            anyhow::ensure!(!rollouts.is_empty(), "no verified rollouts arrived (step {step})");
+            let rollouts = shared.buffer.drain();
+            anyhow::ensure!(
+                !rollouts.is_empty(),
+                "no verified rollouts arrived within {}s (step {step})",
+                cfg.batch_timeout_secs
+            );
 
+            let train_started_at = epoch.elapsed().as_secs_f64();
             let t_train = Instant::now();
             let hp = crate::runtime::GrpoHp { lr: cfg.lr_at(step), ..cfg.hp };
             let (st, report) =
                 train_on_rollouts(&self.host, state, rollouts, &hp, cfg.micro_steps, false)?;
             state = st;
             let train_secs = t_train.elapsed().as_secs_f64();
+            let train_ended_at = epoch.elapsed().as_secs_f64();
 
-            // Broadcast the new checkpoint (overlapped with ongoing
-            // inference on the workers — they keep generating with the old
-            // version until the new one lands).
-            let t_bcast = Instant::now();
+            // Hand the new checkpoint to the background broadcaster and
+            // keep training: workers keep generating with the old version
+            // until the new one lands on the relays.
             let payload = state.params.to_bytes();
             shared.stats.broadcast_bytes.add(payload.len() as u64);
-            origin.publish(step + 1, &payload, 64 * 1024);
-            shared.versions.lock().unwrap().insert(step + 1, Arc::new(state.params.clone()));
-            // Wait for the relay tier to finish mirroring (broadcast time).
-            let deadline = Instant::now() + Duration::from_secs(60);
-            while !relays.iter().all(|r| r.store.is_complete(step + 1)) {
-                if Instant::now() > deadline {
-                    break;
-                }
-                std::thread::sleep(Duration::from_millis(10));
+            {
+                let mut versions = shared.versions.lock().unwrap();
+                versions.insert(step + 1, Arc::new(state.params.clone()));
+                // Window + margin: validators never need anything older.
+                let min_keep = (step + 1).saturating_sub(cfg.async_level + 1);
+                versions.retain(|&v, _| v >= min_keep);
             }
-            let broadcast_secs = t_bcast.elapsed().as_secs_f64();
-            step_timings.push((broadcast_secs, batch_ready_secs, train_secs));
+            let t_enq = Instant::now();
+            broadcaster.enqueue(step + 1, payload)?;
+            let enqueue_wait_secs = t_enq.elapsed().as_secs_f64();
 
-            series.push(step, "task_reward", report.mean_task_reward);
-            series.push(step, "length_penalty", report.mean_length_penalty);
-            series.push(step, "reward", report.mean_reward);
-            series.push(step, "loss", report.metrics.loss as f64);
-            series.push(step, "gnorm", report.metrics.gnorm as f64);
-            series.push(step, "entropy", report.metrics.entropy as f64);
-            series.push(step, "completion_len", report.mean_completion_len);
+            step_timings.push(StepTiming {
+                step,
+                broadcast_secs: 0.0, // filled from the broadcast records below
+                batch_ready_secs,
+                train_secs,
+                enqueue_wait_secs,
+                train_started_at,
+                train_ended_at,
+            });
+            record_step(&series, "", step, &report, 0);
             series.push(step, "batch_ready_secs", batch_ready_secs);
             series.push(step, "train_secs", train_secs);
-            series.push(step, "broadcast_secs", broadcast_secs);
+            series.push(step, "broadcast_backpressure_secs", enqueue_wait_secs);
+            series.push(
+                step,
+                "rollouts_dropped_stale",
+                shared.stats.rollouts_dropped_stale.get() as f64,
+            );
             orch.health_sweep();
             crate::info!(
                 "swarm",
-                "step {step}: task_r {:.3} wait {batch_ready_secs:.1}s train {train_secs:.1}s bcast {broadcast_secs:.1}s verified {} slashed {}",
+                "step {step}: task_r {:.3} wait {batch_ready_secs:.1}s train {train_secs:.1}s verified {} stale-dropped {} slashed {}",
                 report.mean_task_reward,
                 shared.stats.rollouts_verified.get(),
+                shared.stats.rollouts_dropped_stale.get(),
                 shared.stats.nodes_slashed.get()
             );
         }
@@ -372,6 +581,17 @@ impl Swarm {
             let _ = t.join();
         }
         let _ = validator_handle.join();
+        let broadcasts = broadcaster.finish();
+
+        // Back-fill measured broadcast durations (checkpoint `step + 1` is
+        // the one step `step` produced).
+        for t in &mut step_timings {
+            if let Some(r) = broadcasts.iter().find(|r| r.step == t.step + 1) {
+                t.broadcast_secs = r.total_secs();
+                series.push(t.step, "broadcast_secs", t.broadcast_secs);
+            }
+        }
+        shared.stats.merge_staleness(&shared.buffer.stats());
 
         Ok(SwarmResult {
             series,
@@ -379,6 +599,7 @@ impl Swarm {
             stats: shared.stats_arc(),
             ledger,
             step_timings,
+            broadcasts,
         })
     }
 }
@@ -390,16 +611,34 @@ impl Shared {
         s.submissions_received.add(self.stats.submissions_received.get());
         s.submissions_accepted.add(self.stats.submissions_accepted.get());
         s.submissions_rejected.add(self.stats.submissions_rejected.get());
+        s.submissions_stale.add(self.stats.submissions_stale.get());
+        s.submissions_unattributed.add(self.stats.submissions_unattributed.get());
         s.rollouts_verified.add(self.stats.rollouts_verified.get());
+        s.rollouts_dropped_stale.add(self.stats.rollouts_dropped_stale.get());
         s.nodes_slashed.add(self.stats.nodes_slashed.get());
         s.broadcast_bytes.add(self.stats.broadcast_bytes.get());
         s.decode_tokens.add(self.stats.decode_tokens.get());
+        *s.trained_by_lag.lock().unwrap() = self.stats.trained_by_lag.lock().unwrap().clone();
         Arc::new(s)
     }
 }
 
-/// Full validation of one submission (all five TOPLOC stages). Returns the
-/// submission on success or (node, reason) for slashing.
+/// Outcome of validating one submission.
+enum Verdict {
+    /// Every TOPLOC stage passed: feed the rollouts trainer-ward.
+    Accept(Submission),
+    /// Well-formed but outside the off-policy window: dropped + counted.
+    /// Staleness is a liveness property, not evidence of cheating.
+    Stale { node: u64, submitted: u64, current: u64, n_rollouts: usize },
+    /// The validator's own engine failed mid-check: nothing provable
+    /// about the sender, so the submission is dropped unjudged.
+    EngineFailure { node: u64, why: String },
+    /// Failed a trust check. Slash `node` when the envelope proves a
+    /// sender; `None` means the file was mangled beyond attribution.
+    Reject { node: Option<u64>, why: String },
+}
+
+/// Full validation of one submission (all five TOPLOC stages).
 #[allow(clippy::too_many_arguments)]
 fn validate_submission(
     validator: &Validator,
@@ -410,15 +649,32 @@ fn validate_submission(
     shared: &Arc<Shared>,
     spec: &ModelSpec,
     max_new: usize,
-) -> Result<Submission, (u64, String)> {
-    let mut sub = validator
-        .check_file(bytes)
-        .map_err(|e| (0u64, format!("{e:?}")))?;
+) -> Verdict {
+    let mut sub = match validator.check_file(bytes) {
+        Ok(sub) => sub,
+        Err(e) => {
+            // The file never parsed, so `sub.node_address` doesn't exist;
+            // attribute from the envelope when the container is intact.
+            // Same trust level as a well-formed submission's self-declared
+            // `node_address`: unsigned, so a cheater can claim another
+            // node's address either way. Closing that requires signing
+            // submissions with the protocol identities (see ROADMAP).
+            return Verdict::Reject {
+                node: Submission::peek_node_address(bytes),
+                why: format!("{e:?}"),
+            };
+        }
+    };
     let node = sub.node_address;
     let current = shared.current_step.load(Ordering::SeqCst);
-    validator
-        .check_sanity(&sub, dataset, reward_cfg, current, max_new)
-        .map_err(|e| (node, format!("{e:?}")))?;
+    if let Err(e) = validator.check_sanity(&sub, dataset, reward_cfg, current, max_new) {
+        return match e {
+            Rejection::StalePolicy { submitted, current } => {
+                Verdict::Stale { node, submitted, current, n_rollouts: sub.rollouts.len() }
+            }
+            other => Verdict::Reject { node: Some(node), why: format!("{other:?}") },
+        };
+    }
     // Termination failures on individual rollouts are *soft*: an honest
     // sampler occasionally draws a low-probability EOS, so those rollouts
     // are discarded (their whole group with them) rather than slashing the
@@ -433,16 +689,34 @@ fn validate_submission(
     sub.rollouts.retain(|w| !bad_groups.contains(&w.rollout.group_id));
     if sub.rollouts.is_empty() {
         // Nothing usable, but not evidence of cheating — discard quietly.
-        return Ok(sub);
+        return Verdict::Accept(sub);
     }
     // Computation + sampling checks need prefill under the claimed policy.
-    let params = shared
-        .versions
-        .lock()
-        .unwrap()
-        .get(&sub.step)
-        .cloned()
-        .ok_or((node, format!("unknown policy version {}", sub.step)))?;
+    // The versions map retains the whole staleness window (plus margin):
+    // a miss on an old version means it aged out (stale, not dishonest).
+    // A miss on a *future* version is different — honest workers can hold
+    // at most the checkpoint published during the current step (version
+    // current + 1), and anything the trainer has published is in the map,
+    // so claiming a version beyond that is provably fabricated.
+    let params = shared.versions.lock().unwrap().get(&sub.step).cloned();
+    let Some(params) = params else {
+        // Re-read the step counter: the trainer may have advanced (and
+        // pruned) while the checks above ran, and judging "future" against
+        // a stale snapshot could slash an honest-but-aged-out version.
+        let now = shared.current_step.load(Ordering::SeqCst);
+        if sub.step > now + 1 {
+            return Verdict::Reject {
+                node: Some(node),
+                why: format!("unpublished policy version {} (current {now})", sub.step),
+            };
+        }
+        return Verdict::Stale {
+            node,
+            submitted: sub.step,
+            current: now,
+            n_rollouts: sub.rollouts.len(),
+        };
+    };
     let (b, t, d, v) = (spec.batch_infer, spec.max_seq, spec.d_model, spec.vocab);
     for chunk in sub.rollouts.chunks(b) {
         let mut padded = vec![spec.pad_id; b * t];
@@ -451,19 +725,23 @@ fn validate_submission(
                 padded[i * t + j] = tok;
             }
         }
-        let (logits, hidden) = host
-            .prefill(Arc::clone(&params), padded)
-            .map_err(|e| (node, format!("prefill: {e}")))?;
+        let (logits, hidden) = match host.prefill(Arc::clone(&params), padded) {
+            Ok(out) => out,
+            // A trusted-side engine error proves nothing about the node —
+            // slashing here would exclude honest workers for our own
+            // infrastructure failures.
+            Err(e) => return Verdict::EngineFailure { node, why: format!("prefill: {e}") },
+        };
         for (i, w) in chunk.iter().enumerate() {
             let h = &hidden[i * t * d..(i + 1) * t * d];
             let l = &logits[i * t * v..(i + 1) * t * v];
-            validator
-                .check_computation(w, h, d)
-                .map_err(|e| (node, format!("{e:?}")))?;
-            validator
-                .check_sampling(w, l, v)
-                .map_err(|e| (node, format!("{e:?}")))?;
+            if let Err(e) = validator.check_computation(w, h, d) {
+                return Verdict::Reject { node: Some(node), why: format!("{e:?}") };
+            }
+            if let Err(e) = validator.check_sampling(w, l, v) {
+                return Verdict::Reject { node: Some(node), why: format!("{e:?}") };
+            }
         }
     }
-    Ok(sub)
+    Verdict::Accept(sub)
 }

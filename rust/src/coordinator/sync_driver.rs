@@ -9,10 +9,10 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::config::RunConfig;
-use crate::coordinator::batcher::{train_on_rollouts, StepReport};
+use crate::coordinator::batcher::train_on_rollouts;
 use crate::coordinator::gen::RolloutGenerator;
 use crate::coordinator::pretrain;
-use crate::rl::advantage;
+use crate::coordinator::step::{filter_groups, record_step};
 use crate::runtime::{EngineHost, HostTrainState, ParamSet};
 use crate::tasks::dataset::{Dataset, DatasetConfig};
 use crate::util::metrics::Series;
@@ -116,14 +116,16 @@ impl SyncPipeline {
         faulty: bool,
     ) -> anyhow::Result<Box<HostTrainState>> {
         let k = self.cfg.async_level;
-        // Policy-version queue: published[i] = params after step i; the
-        // generator for step s uses published[s.saturating_sub(k)].
+        // Policy-version queue, bounded to the only versions that can ever
+        // be consumed: the generator for step s uses the params from step
+        // s-k, so after trimming the front is exactly that version and at
+        // most k+1 entries are alive (previously every historical ParamSet
+        // was retained — memory grew linearly with rl_steps).
         let mut published: VecDeque<Arc<ParamSet>> = VecDeque::new();
         published.push_back(Arc::new(state.params.clone()));
 
         for step in 0..steps {
-            let gen_version = step.saturating_sub(k) as usize;
-            let gen_params = Arc::clone(&published[gen_version.min(published.len() - 1)]);
+            let gen_params = Arc::clone(published.front().expect("policy queue never empty"));
 
             // Online filtering loop (§3.3.2): keep sampling submissions
             // until we have enough non-degenerate groups.
@@ -139,21 +141,20 @@ impl SyncPipeline {
                     submission_idx,
                     self.cfg.prompts_per_step,
                     self.cfg.group_size,
-                    step * 1000 + submission_idx * 100,
+                    // Same collision-resistant derivation as the swarm
+                    // workers (the old `step * 1000 + idx * 100` base
+                    // collided across submissions past 100 prompts).
+                    crate::rl::group_id_base(0xA11CE, step, submission_idx),
                 )?;
-                let mut batch: Vec<crate::rl::Rollout> =
+                let batch: Vec<crate::rl::Rollout> =
                     sub.rollouts.into_iter().map(|w| w.rollout).collect();
-                let stats = advantage::compute_group_advantages(&mut batch);
-                let kept_groups: Vec<u64> = stats
-                    .iter()
-                    .filter(|(_, _, _, d)| !d)
-                    .map(|(g, ..)| *g)
-                    .collect();
-                groups_kept += kept_groups.len();
+                let n_batch = batch.len();
+                let out = filter_groups(batch);
+                groups_kept += out.groups_kept;
                 if submission_idx > 0 {
-                    extra_inference += batch.len();
+                    extra_inference += n_batch;
                 }
-                rollouts.extend(batch.into_iter().filter(|r| kept_groups.contains(&r.group_id)));
+                rollouts.extend(out.rollouts);
                 submission_idx += 1;
             }
 
@@ -168,7 +169,10 @@ impl SyncPipeline {
             )?;
             state = st;
             published.push_back(Arc::new(state.params.clone()));
-            self.record(series_prefix, step, &report, extra_inference);
+            while published.len() > (k + 1) as usize {
+                published.pop_front();
+            }
+            record_step(&self.series, series_prefix, step, &report, extra_inference);
             crate::info!(
                 "rl",
                 "[{series_prefix}] step {step}: task_r {:.3} len_pen {:.3} loss {:.4} gnorm {:.3} clip {:.3} ent {:.3}",
@@ -181,23 +185,6 @@ impl SyncPipeline {
             );
         }
         Ok(state)
-    }
-
-    fn record(&self, prefix: &str, step: u64, r: &StepReport, extra_inference: usize) {
-        let p = |name: &str| format!("{prefix}{name}");
-        self.series.push(step, &p("task_reward"), r.mean_task_reward);
-        self.series.push(step, &p("length_penalty"), r.mean_length_penalty);
-        self.series.push(step, &p("reward"), r.mean_reward);
-        self.series.push(step, &p("completion_len"), r.mean_completion_len);
-        self.series.push(step, &p("loss"), r.metrics.loss as f64);
-        self.series.push(step, &p("gnorm"), r.metrics.gnorm as f64);
-        self.series.push(step, &p("clipfrac"), r.metrics.clipfrac as f64);
-        self.series.push(step, &p("entropy"), r.metrics.entropy as f64);
-        self.series.push(step, &p("kl"), r.metrics.kl as f64);
-        self.series.push(step, &p("ratio_max"), r.metrics.ratio_max as f64);
-        self.series.push(step, &p("discarded_groups"), r.discarded_groups as f64);
-        self.series.push(step, &p("padding_fraction"), r.padding_fraction);
-        self.series.push(step, &p("extra_inference_samples"), extra_inference as f64);
     }
 
     /// Evaluate a policy on a held-out suite (Table 1). Returns the mean

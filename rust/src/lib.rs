@@ -13,12 +13,20 @@
 //! - [`runtime`]: PJRT artifact loading + train/sample engines.
 //! - [`tasks`], [`verifier`], [`rl`]: training data, GENESYS-style reward
 //!   environments (§2.1.3, §3.1), GRPO batching/advantages/filtering
-//!   (§3.3), sequence packing (§4.1).
-//! - [`shardcast`]: policy weight broadcast network (§2.2).
-//! - [`toploc`]: trustless inference verification (§2.3).
+//!   (§3.3), sequence packing (§4.1), and the version-tagged rollout
+//!   buffer enforcing the `[current - k, current]` off-policy staleness
+//!   window (§3.2).
+//! - [`shardcast`]: policy weight broadcast network (§2.2), including the
+//!   background [`shardcast::Broadcaster`] that overlaps checkpoint
+//!   distribution with the next training step.
+//! - [`toploc`]: trustless inference verification (§2.3) — the validator
+//!   enforces the same staleness window as the trainer buffer.
 //! - [`protocol`]: ledger/discovery/orchestrator/worker lifecycle (§2.4).
 //! - [`coordinator`]: PRIME-RL — the asynchronous RL pipeline itself
-//!   (§2.1, §3.2).
+//!   (§2.1, §3.2): a deterministic async-k driver for experiments and the
+//!   free-running swarm whose trainer is genuinely two-step asynchronous
+//!   (training of step s+1 overlaps broadcasting of step s's weights,
+//!   with measured per-step overlap in `SwarmResult`).
 
 pub mod config;
 pub mod coordinator;

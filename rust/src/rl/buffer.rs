@@ -1,0 +1,281 @@
+//! Version-tagged verified-rollout buffer (§3.2): the trainer-side queue
+//! between TOPLOC validation and GRPO batching in the asynchronous swarm.
+//!
+//! Every batch of verified rollouts is tagged with the policy version that
+//! generated it. The buffer enforces the paper's bounded off-policy window:
+//! rollouts from versions in `[current - window, current]` (and versions
+//! published ahead of the trainer's step counter, which are at most one
+//! step "in the future" during the broadcast overlap) are admitted; older
+//! ones are dropped and counted. Advancing the step re-checks everything
+//! still buffered, so rollouts that were fresh when verified but went stale
+//! while the trainer was busy are evicted before they can poison a batch.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::Rollout;
+
+/// What happened to a batch offered to the buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Within the window; `lag` = current_step - version (0 for versions
+    /// at or ahead of the current step).
+    Accepted { lag: u64 },
+    /// Older than `current - window`: dropped, never buffered.
+    TooStale { lag: u64 },
+}
+
+/// Snapshot of the buffer's staleness accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StalenessStats {
+    /// `(lag, n_rollouts)` counted when rollouts are drained for training:
+    /// lag = training step - producing policy version.
+    pub trained_by_lag: Vec<(u64, u64)>,
+    /// Rollouts rejected at push time (version already outside the window).
+    pub dropped_at_push: u64,
+    /// Rollouts evicted by `advance` (went stale while buffered).
+    pub evicted_on_advance: u64,
+}
+
+impl StalenessStats {
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_at_push + self.evicted_on_advance
+    }
+
+    pub fn trained_total(&self) -> u64 {
+        self.trained_by_lag.iter().map(|(_, n)| n).sum()
+    }
+}
+
+struct Inner {
+    current: u64,
+    /// version -> rollouts verified under that version (insertion order kept
+    /// within a version; BTreeMap keeps drain ordering oldest-first).
+    by_version: BTreeMap<u64, Vec<Rollout>>,
+    len: usize,
+    trained_by_lag: BTreeMap<u64, u64>,
+    dropped_at_push: u64,
+    evicted_on_advance: u64,
+}
+
+/// Thread-safe staleness-windowed rollout buffer.
+pub struct RolloutBuffer {
+    window: u64,
+    inner: Mutex<Inner>,
+}
+
+impl RolloutBuffer {
+    /// `window` is the asynchrony level k: versions in `[current - k,
+    /// current]` are acceptable at training time.
+    pub fn new(window: u64) -> RolloutBuffer {
+        RolloutBuffer {
+            window,
+            inner: Mutex::new(Inner {
+                current: 0,
+                by_version: BTreeMap::new(),
+                len: 0,
+                trained_by_lag: BTreeMap::new(),
+                dropped_at_push: 0,
+                evicted_on_advance: 0,
+            }),
+        }
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn current(&self) -> u64 {
+        self.inner.lock().unwrap().current
+    }
+
+    /// Offer verified rollouts generated under policy `version`. Versions
+    /// ahead of the current step (the worker already fetched the checkpoint
+    /// the trainer just published) are admitted with lag 0.
+    pub fn push(&self, version: u64, rollouts: Vec<Rollout>) -> Admission {
+        let mut inner = self.inner.lock().unwrap();
+        let lag = inner.current.saturating_sub(version);
+        if lag > self.window {
+            inner.dropped_at_push += rollouts.len() as u64;
+            return Admission::TooStale { lag };
+        }
+        inner.len += rollouts.len();
+        inner.by_version.entry(version).or_default().extend(rollouts);
+        Admission::Accepted { lag }
+    }
+
+    /// Move the trainer's step forward, evicting anything that fell out of
+    /// the window while buffered. Returns the number of evicted rollouts.
+    pub fn advance(&self, step: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.current = inner.current.max(step);
+        let min_version = inner.current.saturating_sub(self.window);
+        let stale: Vec<u64> = inner.by_version.range(..min_version).map(|(&v, _)| v).collect();
+        let mut evicted = 0u64;
+        for v in stale {
+            let dropped = inner.by_version.remove(&v).unwrap_or_default();
+            evicted += dropped.len() as u64;
+            inner.len -= dropped.len();
+        }
+        inner.evicted_on_advance += evicted;
+        evicted
+    }
+
+    /// Take everything buffered, oldest version first (so the batch the
+    /// trainer consumes is as close to FIFO in policy-version order as the
+    /// swarm allows). Records the per-lag histogram of what was drained.
+    pub fn drain(&self) -> Vec<Rollout> {
+        let mut inner = self.inner.lock().unwrap();
+        let current = inner.current;
+        let by_version = std::mem::take(&mut inner.by_version);
+        inner.len = 0;
+        let mut out = Vec::new();
+        for (version, rollouts) in by_version {
+            let lag = current.saturating_sub(version);
+            *inner.trained_by_lag.entry(lag).or_insert(0) += rollouts.len() as u64;
+            out.extend(rollouts);
+        }
+        out
+    }
+
+    pub fn stats(&self) -> StalenessStats {
+        let inner = self.inner.lock().unwrap();
+        StalenessStats {
+            trained_by_lag: inner.trained_by_lag.iter().map(|(&l, &n)| (l, n)).collect(),
+            dropped_at_push: inner.dropped_at_push,
+            evicted_on_advance: inner.evicted_on_advance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mk(version: u64, tag: u64) -> Rollout {
+        Rollout {
+            task_id: tag,
+            group_id: tag,
+            policy_step: version,
+            tokens: vec![1, 5, 2],
+            prompt_len: 1,
+            target_len: None,
+            task_reward: 0.0,
+            length_penalty: 0.0,
+            reward: 0.0,
+            advantage: 0.0,
+            sampled_probs: vec![0.5, 0.5],
+            node_address: 7,
+        }
+    }
+
+    #[test]
+    fn window_acceptance_and_lag() {
+        let b = RolloutBuffer::new(2);
+        b.advance(5);
+        assert_eq!(b.push(5, vec![mk(5, 0)]), Admission::Accepted { lag: 0 });
+        assert_eq!(b.push(4, vec![mk(4, 1)]), Admission::Accepted { lag: 1 });
+        assert_eq!(b.push(3, vec![mk(3, 2)]), Admission::Accepted { lag: 2 });
+        // Ahead of the trainer (broadcast overlap): admitted at lag 0.
+        assert_eq!(b.push(6, vec![mk(6, 3)]), Admission::Accepted { lag: 0 });
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn too_stale_is_dropped_and_counted() {
+        let b = RolloutBuffer::new(2);
+        b.advance(10);
+        assert_eq!(
+            b.push(7, vec![mk(7, 0), mk(7, 1)]),
+            Admission::TooStale { lag: 3 }
+        );
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.stats().dropped_at_push, 2);
+        assert_eq!(b.stats().dropped_total(), 2);
+    }
+
+    #[test]
+    fn advance_evicts_buffered_rollouts_that_went_stale() {
+        let b = RolloutBuffer::new(1);
+        b.push(0, vec![mk(0, 0), mk(0, 1)]);
+        b.push(1, vec![mk(1, 2)]);
+        // Step 2: version 0 is out of [1, 2]; version 1 survives.
+        assert_eq!(b.advance(2), 2);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.stats().evicted_on_advance, 2);
+        // Advancing backwards is a no-op (current is monotone).
+        assert_eq!(b.advance(0), 0);
+        assert_eq!(b.current(), 2);
+    }
+
+    #[test]
+    fn drain_is_oldest_version_first_and_records_histogram() {
+        let b = RolloutBuffer::new(3);
+        b.advance(3);
+        b.push(3, vec![mk(3, 30)]);
+        b.push(1, vec![mk(1, 10), mk(1, 11)]);
+        b.push(2, vec![mk(2, 20)]);
+        let drained = b.drain();
+        let versions: Vec<u64> = drained.iter().map(|r| r.policy_step).collect();
+        assert_eq!(versions, vec![1, 1, 2, 3]);
+        assert!(b.is_empty());
+        let stats = b.stats();
+        assert_eq!(stats.trained_by_lag, vec![(0, 1), (1, 1), (2, 2)]);
+        assert_eq!(stats.trained_total(), 4);
+    }
+
+    #[test]
+    fn prop_no_drained_rollout_outside_window() {
+        prop::check(
+            "staleness window invariant",
+            64,
+            |rng: &mut Rng, size| {
+                let window = rng.usize(4) as u64;
+                let ops: Vec<(bool, u64)> = (0..1 + rng.usize(size as usize % 40 + 1))
+                    .map(|_| (rng.bool(0.3), rng.usize(12) as u64))
+                    .collect();
+                (window, ops)
+            },
+            |(window, ops)| {
+                let b = RolloutBuffer::new(*window);
+                let mut pushed = 0u64;
+                for (is_advance, v) in ops {
+                    if *is_advance {
+                        b.advance(*v);
+                    } else {
+                        b.push(*v, vec![mk(*v, pushed)]);
+                        pushed += 1;
+                    }
+                }
+                let current = b.current();
+                let drained = b.drain();
+                // Everything drained respects the window at drain time.
+                for r in &drained {
+                    prop::ensure(
+                        r.policy_step + *window >= current,
+                        "drained rollout outside window",
+                    )?;
+                }
+                // Conservation: pushed = drained + dropped + evicted.
+                let stats = b.stats();
+                prop::ensure_eq(
+                    pushed,
+                    drained.len() as u64 + stats.dropped_total(),
+                    "rollout conservation",
+                )?;
+                prop::ensure_eq(stats.trained_total(), drained.len() as u64, "histogram total")?;
+                Ok(())
+            },
+        );
+    }
+}

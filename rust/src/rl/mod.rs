@@ -2,10 +2,13 @@
 //! group advantages, online/offline data filtering, sequence packing.
 
 pub mod advantage;
+pub mod buffer;
 pub mod filtering;
 pub mod packing;
 pub mod reward;
 pub mod rollout_file;
+
+pub use buffer::{Admission, RolloutBuffer, StalenessStats};
 
 /// One verified rollout as it flows trainer-ward: produced by an inference
 /// worker, checked by a TOPLOC validator, packed into micro-batches by the
@@ -37,4 +40,25 @@ impl Rollout {
     pub fn completion_len(&self) -> usize {
         self.tokens.len() - self.prompt_len
     }
+}
+
+/// Collision-resistant GRPO group-id base for one `(node, version, idx)`
+/// submission. Group ids within the submission are `base + prompt_index`,
+/// so the low 16 bits are reserved (up to 65536 prompts per submission)
+/// and the remaining 48 bits come from a SplitMix64-style mix of the full
+/// address/version/idx triple. Deterministic on both sides: workers derive
+/// their ids from it and the TOPLOC validator re-derives and enforces
+/// them, so one node cannot steer its rollouts into another node's groups.
+/// (The previous shift-and-xor scheme, `(address << 20) ^ ...`, silently
+/// discarded the high 20 address bits, letting two nodes collide and have
+/// their rollouts averaged into one group by `compute_group_advantages`.)
+pub fn group_id_base(node_address: u64, version: u64, submission_idx: u64) -> u64 {
+    let mut h = node_address ^ 0x9E3779B97F4A7C15;
+    for k in [version, submission_idx] {
+        h ^= k.wrapping_add(0x9E3779B97F4A7C15).wrapping_add(h << 6).wrapping_add(h >> 2);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+        h ^= h >> 31;
+    }
+    h & !0xFFFFu64
 }

@@ -79,6 +79,19 @@ impl Submission {
         f.encode()
     }
 
+    /// Best-effort sender attribution for submissions that fail the full
+    /// schema check: if the container decodes (checksum intact) and carries
+    /// a uniform `node` column, that address claimed the upload. Used to
+    /// slash the actual sender of a malformed-but-attributable file instead
+    /// of a ghost node; a file mangled beyond this yields `None` and the
+    /// rejection is only counted.
+    pub fn peek_node_address(bytes: &[u8]) -> Option<u64> {
+        let f = RpqFile::decode(bytes).ok()?;
+        let nodes = f.col("node")?.as_u64()?;
+        let first = *nodes.first()?;
+        nodes.iter().all(|&n| n == first).then_some(first)
+    }
+
     /// Decode + schema-validate (the validator's "parquet formatting
     /// check": anything that would throw in the trainer dataloader is
     /// rejected here).
@@ -194,6 +207,23 @@ mod tests {
         let n = bytes.len();
         bytes[n / 2] ^= 0x55;
         assert!(Submission::decode(&bytes).is_err());
+        // Checksum-broken container: no attribution possible.
+        assert_eq!(Submission::peek_node_address(&bytes), None);
+    }
+
+    #[test]
+    fn peek_attributes_schema_invalid_submissions() {
+        // A decodable container with a bogus schema still names its sender.
+        let mut f = RpqFile::new();
+        f.push("node", Column::U64(vec![0xC0FFEE; 3]))
+            .push("junk", Column::F32(vec![1.0; 3]));
+        let bytes = f.encode();
+        assert!(Submission::decode(&bytes).is_err());
+        assert_eq!(Submission::peek_node_address(&bytes), Some(0xC0FFEE));
+        // A mixed node column proves nothing -> no attribution.
+        let mut g = RpqFile::new();
+        g.push("node", Column::U64(vec![1, 2]));
+        assert_eq!(Submission::peek_node_address(&g.encode()), None);
     }
 
     #[test]

@@ -4,10 +4,12 @@
 
 pub mod client;
 pub mod manifest;
+pub mod publisher;
 pub mod server;
 pub mod store;
 
 pub use client::{DownloadReport, ShardcastClient};
 pub use manifest::Manifest;
+pub use publisher::{BroadcastRecord, Broadcaster};
 pub use server::{Origin, Relay};
 pub use store::Store;

@@ -1,0 +1,225 @@
+//! Asynchronous checkpoint publishing (§3.2): a background broadcast
+//! thread that overlaps SHARDCAST distribution with the next training
+//! step. The trainer enqueues `(step, payload)` and immediately returns to
+//! training; the broadcaster shards + publishes to the origin store, then
+//! waits for the relay tier to finish mirroring, recording per-checkpoint
+//! timings so the pipeline's true overlap can be measured (Fig 6 / §4.2).
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::manifest::Manifest;
+use super::store::Store;
+
+/// Timing record for one broadcast, all timestamps in seconds relative to
+/// the broadcaster's epoch (`Broadcaster::start`).
+#[derive(Clone, Debug)]
+pub struct BroadcastRecord {
+    /// Checkpoint version that was broadcast.
+    pub step: u64,
+    pub bytes: usize,
+    /// When the trainer handed the payload over.
+    pub enqueued_at: f64,
+    /// When the broadcaster started working on it (> enqueued_at when a
+    /// previous broadcast was still in flight).
+    pub started_at: f64,
+    /// When every relay had a complete mirror (or the timeout fired).
+    pub completed_at: f64,
+    /// Sharding + origin-store publish time.
+    pub publish_secs: f64,
+    /// Origin-complete -> all relays complete.
+    pub mirror_secs: f64,
+    /// True when the relay tier did not finish inside the timeout.
+    pub timed_out: bool,
+}
+
+impl BroadcastRecord {
+    /// Wall-clock the broadcast occupied (start -> relays complete).
+    pub fn total_secs(&self) -> f64 {
+        self.completed_at - self.started_at
+    }
+}
+
+/// Background checkpoint broadcaster. Dropping it without calling
+/// [`Broadcaster::finish`] joins the thread and discards the records.
+pub struct Broadcaster {
+    /// `(step, payload, enqueued_at_secs)` — the timestamp is stamped on
+    /// the sending thread so queue wait is measurable. Bounded: `enqueue`
+    /// blocks once `queue_depth` checkpoints are in flight, giving the
+    /// trainer backpressure instead of unbounded payload buildup.
+    tx: Option<SyncSender<(u64, Vec<u8>, f64)>>,
+    handle: Option<JoinHandle<Vec<BroadcastRecord>>>,
+    epoch: Instant,
+}
+
+impl Broadcaster {
+    /// `origin` is the training-side store; `relays` are the stores of the
+    /// relay tier whose mirrors gate "broadcast complete". `queue_depth`
+    /// bounds in-flight checkpoints (the async level): past it, `enqueue`
+    /// blocks rather than letting the trainer run arbitrarily ahead of the
+    /// broadcast tier.
+    pub fn start(
+        origin: Store,
+        relays: Vec<Store>,
+        shard_bytes: usize,
+        mirror_timeout: Duration,
+        queue_depth: usize,
+    ) -> anyhow::Result<Broadcaster> {
+        let epoch = Instant::now();
+        // The enqueue timestamp rides in the message, stamped on the
+        // trainer's thread, so queue wait behind an in-flight broadcast is
+        // visible as `started_at - enqueued_at`.
+        let (tx, rx) = sync_channel::<(u64, Vec<u8>, f64)>(queue_depth.max(1));
+        let handle = std::thread::Builder::new().name("i2-broadcast".into()).spawn(move || {
+            let mut records = Vec::new();
+            while let Ok((step, payload, enqueued_at)) = rx.recv() {
+                let started_at = epoch.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let (manifest, shards) = Manifest::build(step, &payload, shard_bytes.max(1));
+                origin.publish_full(manifest, shards);
+                let publish_secs = t0.elapsed().as_secs_f64();
+                let deadline = Instant::now() + mirror_timeout;
+                let t1 = Instant::now();
+                let mut timed_out = false;
+                while !relays.iter().all(|r| r.is_complete(step)) {
+                    if Instant::now() > deadline {
+                        timed_out = true;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                records.push(BroadcastRecord {
+                    step,
+                    bytes: payload.len(),
+                    enqueued_at,
+                    started_at,
+                    completed_at: epoch.elapsed().as_secs_f64(),
+                    publish_secs,
+                    mirror_secs: t1.elapsed().as_secs_f64(),
+                    timed_out,
+                });
+            }
+            records
+        })?;
+        Ok(Broadcaster { tx: Some(tx), handle: Some(handle), epoch })
+    }
+
+    /// Instant that `*_at` record fields are relative to.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Hand a checkpoint to the background thread; returns immediately.
+    pub fn enqueue(&self, step: u64, payload: Vec<u8>) -> anyhow::Result<()> {
+        let enqueued_at = self.epoch.elapsed().as_secs_f64();
+        self.tx
+            .as_ref()
+            .expect("broadcaster already finished")
+            .send((step, payload, enqueued_at))
+            .map_err(|_| anyhow::anyhow!("broadcast thread terminated"))
+    }
+
+    /// Close the queue, wait for in-flight broadcasts, return the records.
+    pub fn finish(mut self) -> Vec<BroadcastRecord> {
+        drop(self.tx.take());
+        match self.handle.take().map(JoinHandle::join) {
+            Some(Ok(records)) => records,
+            Some(Err(_)) => {
+                crate::error!("shardcast", "broadcast thread panicked; timing records lost");
+                Vec::new()
+            }
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for Broadcaster {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcasts_and_records_timings() {
+        let origin = Store::new();
+        let relay = Store::new();
+        let b = Broadcaster::start(
+            origin.clone(),
+            vec![relay.clone()],
+            1024,
+            Duration::from_secs(2),
+            2,
+        )
+        .unwrap();
+        // Mirror thread standing in for a relay puller.
+        let (o2, r2) = (origin.clone(), relay.clone());
+        let mirror = std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while Instant::now() < deadline {
+                for step in o2.versions() {
+                    if r2.is_complete(step) {
+                        continue;
+                    }
+                    if let Some(m) = o2.manifest(step) {
+                        let n = m.n_shards();
+                        r2.publish_manifest(m);
+                        for i in 0..n {
+                            if let Some(s) = o2.shard(step, i) {
+                                r2.put_shard(step, i, s);
+                            }
+                        }
+                    }
+                }
+                if r2.is_complete(1) && r2.is_complete(2) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        b.enqueue(1, vec![7u8; 5000]).unwrap();
+        b.enqueue(2, vec![8u8; 3000]).unwrap();
+        let records = b.finish();
+        mirror.join().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].step, 1);
+        assert_eq!(records[1].step, 2);
+        assert!(!records[0].timed_out && !records[1].timed_out);
+        assert!(origin.is_complete(1) && origin.is_complete(2));
+        assert!(relay.is_complete(1) && relay.is_complete(2));
+        assert_eq!(records[0].bytes, 5000);
+        // Timeline sanity: enqueue <= start <= complete, monotone steps.
+        for r in &records {
+            assert!(r.enqueued_at <= r.started_at + 1e-9);
+            assert!(r.started_at <= r.completed_at);
+        }
+        assert!(records[0].completed_at <= records[1].completed_at);
+    }
+
+    #[test]
+    fn timeout_is_reported_not_fatal() {
+        let origin = Store::new();
+        let never_mirrors = Store::new();
+        let b = Broadcaster::start(
+            origin.clone(),
+            vec![never_mirrors],
+            256,
+            Duration::from_millis(30),
+            1,
+        )
+        .unwrap();
+        b.enqueue(3, vec![1u8; 1000]).unwrap();
+        let records = b.finish();
+        assert_eq!(records.len(), 1);
+        assert!(records[0].timed_out);
+        // The origin still has the full checkpoint for late pullers.
+        assert!(origin.is_complete(3));
+    }
+}

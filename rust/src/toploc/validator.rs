@@ -17,6 +17,10 @@ pub enum Rejection {
     StalePolicy { submitted: u64, current: u64 },
     /// Task ids don't reproduce from the fixed sampling seed.
     SeedMismatch,
+    /// Group ids don't match the deterministic per-(node, step, idx)
+    /// derivation — a vector for steering rollouts into other nodes'
+    /// GRPO groups.
+    GroupIdMismatch { got: u64, want: u64 },
     /// Reported scalars outside plausible bounds.
     ValueBounds(String),
     /// Reported reward disagrees with re-verification.
@@ -106,6 +110,20 @@ impl Validator {
         let got: Vec<u64> = sub.rollouts.iter().map(|r| r.rollout.task_id).collect();
         if got != want {
             return Err(Rejection::SeedMismatch);
+        }
+        // Group ids are as deterministic as the task draw: base hash of
+        // (node, step, idx) plus the prompt index. Enforcing them here
+        // closes the deliberate-collision vector (a node claiming another
+        // node's group ids to poison its advantage baselines).
+        let base = crate::rl::group_id_base(sub.node_address, sub.step, sub.submission_idx);
+        for (i, w) in sub.rollouts.iter().enumerate() {
+            let want_gid = base + (i / self.cfg.expected_group.max(1)) as u64;
+            if w.rollout.group_id != want_gid {
+                return Err(Rejection::GroupIdMismatch {
+                    got: w.rollout.group_id,
+                    want: want_gid,
+                });
+            }
         }
 
         for w in &sub.rollouts {
@@ -328,11 +346,13 @@ mod tests {
         let dataset = Dataset::generate(&DatasetConfig { n_math: 40, n_code: 0, ..Default::default() });
         let reward_cfg = RewardConfig::default();
 
-        // Build an honest submission: tasks drawn from the seed formula.
+        // Build an honest submission: tasks drawn from the seed formula,
+        // group ids from the deterministic base.
         let seed = node_sample_seed(9, 3, 0);
+        let base = crate::rl::group_id_base(9, 3, 0);
         let ids = dataset.sample_for(seed, 2);
         let mut rollouts = Vec::new();
-        for id in &ids {
+        for (pi, id) in ids.iter().enumerate() {
             let task = dataset.get(*id).unwrap();
             for _ in 0..2 {
                 let mut tokens = vec![crate::data::tokenizer::BOS];
@@ -343,6 +363,7 @@ mod tests {
                 let n = tokens.len() - plen;
                 let mut w = wire(tokens, plen, true, 0.9);
                 w.rollout.task_id = *id;
+                w.rollout.group_id = base + pi as u64;
                 w.rollout.task_reward = 1.0;
                 w.rollout.reward = 1.0;
                 w.rollout.sampled_probs = vec![0.5; n];
@@ -351,6 +372,14 @@ mod tests {
         }
         let sub = Submission { node_address: 9, step: 3, submission_idx: 0, rollouts };
         v.check_sanity(&sub, &dataset, &reward_cfg, 3, 128).unwrap();
+
+        // Claiming someone else's group ids (deliberate collision attack).
+        let mut gid_thief = sub.clone();
+        gid_thief.rollouts[2].rollout.group_id = crate::rl::group_id_base(8, 3, 0);
+        assert!(matches!(
+            v.check_sanity(&gid_thief, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::GroupIdMismatch { .. })
+        ));
 
         // Cherry-picking: swap in a different task id.
         let mut cheat = sub.clone();

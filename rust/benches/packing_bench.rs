@@ -6,7 +6,7 @@
 
 use intellect2::rl::packing::pack;
 use intellect2::rl::Rollout;
-use intellect2::util::bench::Bencher;
+use intellect2::util::bench::{BenchReport, Bencher};
 use intellect2::util::metrics::render_table;
 use intellect2::util::rng::Rng;
 
@@ -29,6 +29,7 @@ fn mk(len: usize, rng: &mut Rng) -> Rollout {
 
 fn main() {
     let (b_rows, t) = (8usize, 256usize);
+    let mut report = BenchReport::new("packing");
     let mut rows = Vec::new();
     for (label, lo, hi) in [
         ("uniform short (16..64)", 16usize, 64usize),
@@ -52,6 +53,13 @@ fn main() {
             })
             .collect();
         let out = pack(&rollouts, b_rows, t);
+        let key = label.split(" (").next().unwrap_or(label).replace(' ', "_");
+        report.metric(&format!("{key}_packed_waste"), out.padding_fraction);
+        report.metric(&format!("{key}_naive_waste"), out.naive_padding_fraction);
+        report.metric(
+            &format!("{key}_compute_gain"),
+            (1.0 - out.padding_fraction) / (1.0 - out.naive_padding_fraction),
+        );
         rows.push(vec![
             label.to_string(),
             format!("{:.1}%", 100.0 * out.padding_fraction),
@@ -75,8 +83,14 @@ fn main() {
     let mut rng = Rng::new(7);
     let rollouts: Vec<Rollout> = (0..1024).map(|_| mk(16 + rng.usize(224), &mut rng)).collect();
     let b = Bencher::default();
-    b.run_throughput("pack 1024 rollouts (FFD)", 1024.0, "rollouts", || {
+    let r = b.run_throughput("pack 1024 rollouts (FFD)", 1024.0, "rollouts", || {
         let out = pack(&rollouts, b_rows, t);
         assert!(!out.batches.is_empty());
     });
+    report.record(&r);
+    report.metric("pack_rollouts_per_sec", 1024.0 / (r.mean_ns / 1e9));
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("bench json not written: {e}"),
+    }
 }

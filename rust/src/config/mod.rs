@@ -11,6 +11,10 @@
 //!   out (previously a hard-coded 60 s wait on the trainer thread).
 //! - `origin-egress-bps`: shaped origin uplink in bytes/sec (0 = unshaped)
 //!   so broadcast time is non-trivial like the paper's WAN links (§4.2).
+//! - `validator-threads`: CPU-stage fan-out of the TOPLOC validation
+//!   pipeline (stages 1–3 run across this many pool threads; <=1 = inline).
+//! - `prefill-bucket-tokens`: length-bucket grain for validator prefill
+//!   padding, in tokens (0 = the model's TOPLOC commit interval).
 
 use crate::rl::reward::RewardConfig;
 use crate::runtime::GrpoHp;
@@ -52,6 +56,13 @@ pub struct RunConfig {
     pub batch_timeout_secs: u64,
     /// Background broadcaster's relay-mirror deadline (seconds).
     pub broadcast_timeout_secs: u64,
+    /// TOPLOC validation pipeline: CPU-stage (schema/sanity/termination)
+    /// fan-out threads; values <= 1 validate inline on the pipeline thread.
+    pub validator_threads: usize,
+    /// Validator prefill length-bucket grain in tokens; calls pad to a
+    /// multiple of this. 0 = the model's TOPLOC commit interval (so commit
+    /// rows always land inside the padded frame).
+    pub prefill_bucket_tokens: usize,
     pub lr_warmup_steps: u64,
     /// Offline difficulty filter (pass@k band) applied before training.
     pub offline_filter: bool,
@@ -81,6 +92,8 @@ impl Default for RunConfig {
             origin_egress_bps: 0,
             batch_timeout_secs: 120,
             broadcast_timeout_secs: 60,
+            validator_threads: 4,
+            prefill_bucket_tokens: 0,
             lr_warmup_steps: 5,
             offline_filter: false,
         }
@@ -116,6 +129,8 @@ impl RunConfig {
         self.origin_egress_bps = a.u64_or("origin-egress-bps", self.origin_egress_bps);
         self.batch_timeout_secs = a.u64_or("batch-timeout-secs", self.batch_timeout_secs);
         self.broadcast_timeout_secs = a.u64_or("broadcast-timeout-secs", self.broadcast_timeout_secs);
+        self.validator_threads = a.usize_or("validator-threads", self.validator_threads);
+        self.prefill_bucket_tokens = a.usize_or("prefill-bucket-tokens", self.prefill_bucket_tokens);
         if a.has_flag("offline-filter") {
             self.offline_filter = true;
         }
@@ -169,7 +184,8 @@ mod tests {
     fn cli_overrides() {
         let a = Args::parse(
             "--model micro --async-level 4 --lr 0.001 --target-short \
-             --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000"
+             --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000 \
+             --validator-threads 8 --prefill-bucket-tokens 64"
                 .split_whitespace()
                 .map(str::to_string),
         );
@@ -181,6 +197,8 @@ mod tests {
         assert_eq!(c.batch_timeout_secs, 7);
         assert_eq!(c.broadcast_timeout_secs, 9);
         assert_eq!(c.origin_egress_bps, 5000);
+        assert_eq!(c.validator_threads, 8);
+        assert_eq!(c.prefill_bucket_tokens, 64);
     }
 
     #[test]

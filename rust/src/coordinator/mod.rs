@@ -8,9 +8,11 @@ pub mod pretrain;
 pub mod step;
 pub mod swarm;
 pub mod sync_driver;
+pub mod validation;
 
 pub use batcher::{train_on_rollouts, StepReport};
 pub use gen::{group_id_base, RolloutGenerator};
 pub use step::{filter_groups, record_step, FilterOutcome};
 pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};
 pub use sync_driver::SyncPipeline;
+pub use validation::{SubmissionQueue, ValidationPipeline, Verdict};

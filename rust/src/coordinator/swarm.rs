@@ -10,6 +10,12 @@
 //! so training of step `s+1` overlaps broadcasting of step `s`'s weights,
 //! and verified rollouts land in a version-tagged [`RolloutBuffer`] that
 //! enforces the `[current - async_level, current]` staleness window.
+//!
+//! Verification runs as a parallel, length-bucketed pipeline
+//! ([`ValidationPipeline`]): uploads land in a bounded FIFO
+//! [`SubmissionQueue`], CPU checks fan out across `validator-threads`
+//! pool workers, and prefill calls pack rollouts from many submissions
+//! into `batch_infer` lanes padded only to their bucket's length.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -20,14 +26,16 @@ use crate::coordinator::batcher::train_on_rollouts;
 use crate::coordinator::gen::{group_id_base, RolloutGenerator};
 use crate::coordinator::pretrain;
 use crate::coordinator::step::record_step;
+use crate::coordinator::validation::{
+    SubmissionQueue, ValidationPipeline, Verdict, SUBMISSION_QUEUE_CAP, VALIDATION_WAVE,
+};
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
 use crate::protocol::{DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker};
 use crate::rl::buffer::{Admission, RolloutBuffer, StalenessStats};
-use crate::rl::rollout_file::Submission;
-use crate::runtime::{EngineHost, HostTrainState, ModelSpec, ParamSet};
+use crate::runtime::{EngineHost, HostTrainState, ParamSet};
 use crate::shardcast::{BroadcastRecord, Broadcaster, Origin, Relay, ShardcastClient};
 use crate::tasks::dataset::{Dataset, DatasetConfig};
-use crate::toploc::{Rejection, Validator, ValidatorConfig};
+use crate::toploc::{Validator, ValidatorConfig};
 use crate::util::json::Json;
 use crate::util::metrics::{Counter, Series};
 
@@ -38,7 +46,9 @@ struct Shared {
     /// Policy versions the trusted side knows (validator prefill). Pruned
     /// to the staleness window plus a margin — see `prune_versions`.
     versions: Mutex<std::collections::BTreeMap<u64, Arc<ParamSet>>>,
-    submissions: Mutex<Vec<Vec<u8>>>,
+    /// Bounded FIFO between the HTTP ingest handler and the validation
+    /// pipeline (condvar-woken; sheds oldest-first under overload).
+    submissions: SubmissionQueue,
     current_step: AtomicU64,
     stop: AtomicBool,
     pub stats: SwarmStats,
@@ -55,6 +65,15 @@ pub struct SwarmStats {
     /// Rejected submissions whose sender could not be attributed from the
     /// envelope (nothing to slash).
     pub submissions_unattributed: Counter,
+    /// Uploads shed unvalidated because the ingest queue was full
+    /// (oldest-first; a sustained non-zero rate means the validation
+    /// pipeline is under-provisioned — raise `validator-threads`).
+    pub submissions_shed: Counter,
+    /// Submissions dropped unjudged because the validator's own side
+    /// failed mid-check (engine errors and firewalled checker panics).
+    /// Neither accepted nor rejected — without this counter a
+    /// panic-probing attacker would be invisible in the stats.
+    pub submissions_engine_failed: Counter,
     pub rollouts_verified: Counter,
     /// Rollouts dropped for staleness anywhere in the pipeline: stale
     /// submissions, buffer-push rejections, and evictions when the trainer
@@ -213,12 +232,11 @@ impl Swarm {
     /// must get slashed (swarm_demo uses this).
     pub fn run(&self, pretrain_steps: u64, evil_worker: bool) -> anyhow::Result<SwarmResult> {
         let cfg = &self.cfg;
-        let spec = self.host.spec().clone();
         let series = Series::default();
         let shared = Arc::new(Shared {
             buffer: RolloutBuffer::new(cfg.async_level),
             versions: Mutex::new(Default::default()),
-            submissions: Mutex::new(Vec::new()),
+            submissions: SubmissionQueue::new(SUBMISSION_QUEUE_CAP),
             current_step: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             stats: SwarmStats::default(),
@@ -276,7 +294,10 @@ impl Swarm {
                 )])),
                 ("POST", "/submit") => {
                     svc.stats.submissions_received.inc();
-                    svc.submissions.lock().unwrap().push(req.body.clone());
+                    let shed = svc.submissions.push(req.body.clone());
+                    if shed > 0 {
+                        svc.stats.submissions_shed.add(shed);
+                    }
                     Response::ok("accepted for validation")
                 }
                 _ => Response::error(404, "x"),
@@ -296,7 +317,9 @@ impl Swarm {
         shared.versions.lock().unwrap().insert(0, Arc::new(state.params.clone()));
         broadcaster.enqueue(0, payload)?;
 
-        // --- validator thread ---
+        // --- validator thread (drives the parallel, length-bucketed
+        // validation pipeline: CPU stages fan out over a thread pool,
+        // prefill calls pack lanes across submissions) ---
         let validator_handle = {
             let shared = Arc::clone(&shared);
             let host = Arc::clone(&self.host);
@@ -311,71 +334,93 @@ impl Swarm {
                 ..Default::default()
             };
             let max_new = cfg.max_new_tokens;
-            let spec = spec.clone();
+            let (threads, bucket) = (cfg.validator_threads, cfg.prefill_bucket_tokens);
             std::thread::Builder::new().name("i2-validator".into()).spawn(move || {
-                let validator = Validator::new(vcfg);
+                let pipeline = ValidationPipeline::new(
+                    Validator::new(vcfg),
+                    dataset,
+                    reward_cfg,
+                    host,
+                    max_new,
+                    threads,
+                    bucket,
+                );
                 while !shared.stop.load(Ordering::SeqCst) {
-                    let next = shared.submissions.lock().unwrap().pop();
-                    let Some(bytes) = next else {
-                        std::thread::sleep(Duration::from_millis(10));
+                    // Condvar-woken (a /submit wakes us immediately); the
+                    // timeout only bounds how long a stop takes to notice.
+                    let wave = shared
+                        .submissions
+                        .drain_wait(VALIDATION_WAVE, Duration::from_millis(100));
+                    if wave.is_empty() {
                         continue;
-                    };
-                    let verdict = validate_submission(
-                        &validator, &bytes, &dataset, &reward_cfg, &host, &shared, &spec, max_new,
-                    );
-                    match verdict {
-                        Verdict::Accept(sub) => {
-                            let n = sub.rollouts.len();
-                            shared.stats.submissions_accepted.inc();
-                            shared.stats.rollouts_verified.add(n as u64);
-                            if n == 0 {
-                                // Every group was soft-dropped (termination
-                                // check): nothing to buffer.
-                                continue;
+                    }
+                    let current = || shared.current_step.load(Ordering::SeqCst);
+                    let versions =
+                        |v: u64| shared.versions.lock().unwrap().get(&v).cloned();
+                    for verdict in pipeline.validate_batch(wave, &current, &versions) {
+                        match verdict {
+                            Verdict::Accept(sub) => {
+                                let n = sub.rollouts.len();
+                                shared.stats.submissions_accepted.inc();
+                                shared.stats.rollouts_verified.add(n as u64);
+                                if n == 0 {
+                                    // Every group was soft-dropped
+                                    // (termination check): nothing to buffer.
+                                    continue;
+                                }
+                                let version = sub.step;
+                                let rollouts =
+                                    sub.rollouts.into_iter().map(|w| w.rollout).collect();
+                                if let Admission::TooStale { lag } =
+                                    shared.buffer.push(version, rollouts)
+                                {
+                                    // Went stale between verification start
+                                    // and buffer admission.
+                                    shared.stats.rollouts_dropped_stale.add(n as u64);
+                                    crate::debug!(
+                                        "validator",
+                                        "verified batch of {n} went stale (lag {lag})"
+                                    );
+                                }
                             }
-                            let version = sub.step;
-                            let rollouts =
-                                sub.rollouts.into_iter().map(|w| w.rollout).collect();
-                            if let Admission::TooStale { lag } =
-                                shared.buffer.push(version, rollouts)
-                            {
-                                // Went stale between verification start and
-                                // buffer admission.
-                                shared.stats.rollouts_dropped_stale.add(n as u64);
+                            Verdict::Stale { node, submitted, current, n_rollouts } => {
+                                shared.stats.submissions_stale.inc();
+                                shared.stats.rollouts_dropped_stale.add(n_rollouts as u64);
                                 crate::debug!(
                                     "validator",
-                                    "verified batch of {n} went stale (lag {lag})"
+                                    "node {node}: dropping stale submission (policy {submitted}, current {current})"
                                 );
                             }
-                        }
-                        Verdict::Stale { node, submitted, current, n_rollouts } => {
-                            shared.stats.submissions_stale.inc();
-                            shared.stats.rollouts_dropped_stale.add(n_rollouts as u64);
-                            crate::debug!(
-                                "validator",
-                                "node {node}: dropping stale submission (policy {submitted}, current {current})"
-                            );
-                        }
-                        Verdict::EngineFailure { node, why } => {
-                            // Not the node's fault: drop unjudged, no
-                            // counters beyond the log.
-                            crate::warn!(
-                                "validator",
-                                "engine failure while validating node {node}'s submission (dropped unjudged): {why}"
-                            );
-                        }
-                        Verdict::Reject { node: Some(node), why } => {
-                            shared.stats.submissions_rejected.inc();
-                            shared.stats.nodes_slashed.inc();
-                            crate::warn!("validator", "rejecting node {node}: {why}");
-                            orch.slash(node, &why);
-                        }
-                        Verdict::Reject { node: None, why } => {
-                            // Malformed beyond attribution: count it, but
-                            // never slash an address the file doesn't prove.
-                            shared.stats.submissions_rejected.inc();
-                            shared.stats.submissions_unattributed.inc();
-                            crate::warn!("validator", "rejecting unattributable submission: {why}");
+                            Verdict::EngineFailure { node, why } => {
+                                // Not the node's fault: drop unjudged
+                                // (counted so panic-probing is visible).
+                                shared.stats.submissions_engine_failed.inc();
+                                let who = node.map_or_else(
+                                    || "an unattributed sender".to_string(),
+                                    |n| format!("node {n}"),
+                                );
+                                crate::warn!(
+                                    "validator",
+                                    "engine failure while validating {who}'s submission (dropped unjudged): {why}"
+                                );
+                            }
+                            Verdict::Reject { node: Some(node), why } => {
+                                shared.stats.submissions_rejected.inc();
+                                shared.stats.nodes_slashed.inc();
+                                crate::warn!("validator", "rejecting node {node}: {why}");
+                                orch.slash(node, &why);
+                            }
+                            Verdict::Reject { node: None, why } => {
+                                // Malformed beyond attribution: count it,
+                                // but never slash an address the file
+                                // doesn't prove.
+                                shared.stats.submissions_rejected.inc();
+                                shared.stats.submissions_unattributed.inc();
+                                crate::warn!(
+                                    "validator",
+                                    "rejecting unattributable submission: {why}"
+                                );
+                            }
                         }
                     }
                 }
@@ -613,6 +658,8 @@ impl Shared {
         s.submissions_rejected.add(self.stats.submissions_rejected.get());
         s.submissions_stale.add(self.stats.submissions_stale.get());
         s.submissions_unattributed.add(self.stats.submissions_unattributed.get());
+        s.submissions_shed.add(self.stats.submissions_shed.get());
+        s.submissions_engine_failed.add(self.stats.submissions_engine_failed.get());
         s.rollouts_verified.add(self.stats.rollouts_verified.get());
         s.rollouts_dropped_stale.add(self.stats.rollouts_dropped_stale.get());
         s.nodes_slashed.add(self.stats.nodes_slashed.get());
@@ -623,125 +670,8 @@ impl Shared {
     }
 }
 
-/// Outcome of validating one submission.
-enum Verdict {
-    /// Every TOPLOC stage passed: feed the rollouts trainer-ward.
-    Accept(Submission),
-    /// Well-formed but outside the off-policy window: dropped + counted.
-    /// Staleness is a liveness property, not evidence of cheating.
-    Stale { node: u64, submitted: u64, current: u64, n_rollouts: usize },
-    /// The validator's own engine failed mid-check: nothing provable
-    /// about the sender, so the submission is dropped unjudged.
-    EngineFailure { node: u64, why: String },
-    /// Failed a trust check. Slash `node` when the envelope proves a
-    /// sender; `None` means the file was mangled beyond attribution.
-    Reject { node: Option<u64>, why: String },
-}
-
-/// Full validation of one submission (all five TOPLOC stages).
-#[allow(clippy::too_many_arguments)]
-fn validate_submission(
-    validator: &Validator,
-    bytes: &[u8],
-    dataset: &Dataset,
-    reward_cfg: &crate::rl::reward::RewardConfig,
-    host: &Arc<EngineHost>,
-    shared: &Arc<Shared>,
-    spec: &ModelSpec,
-    max_new: usize,
-) -> Verdict {
-    let mut sub = match validator.check_file(bytes) {
-        Ok(sub) => sub,
-        Err(e) => {
-            // The file never parsed, so `sub.node_address` doesn't exist;
-            // attribute from the envelope when the container is intact.
-            // Same trust level as a well-formed submission's self-declared
-            // `node_address`: unsigned, so a cheater can claim another
-            // node's address either way. Closing that requires signing
-            // submissions with the protocol identities (see ROADMAP).
-            return Verdict::Reject {
-                node: Submission::peek_node_address(bytes),
-                why: format!("{e:?}"),
-            };
-        }
-    };
-    let node = sub.node_address;
-    let current = shared.current_step.load(Ordering::SeqCst);
-    if let Err(e) = validator.check_sanity(&sub, dataset, reward_cfg, current, max_new) {
-        return match e {
-            Rejection::StalePolicy { submitted, current } => {
-                Verdict::Stale { node, submitted, current, n_rollouts: sub.rollouts.len() }
-            }
-            other => Verdict::Reject { node: Some(node), why: format!("{other:?}") },
-        };
-    }
-    // Termination failures on individual rollouts are *soft*: an honest
-    // sampler occasionally draws a low-probability EOS, so those rollouts
-    // are discarded (their whole group with them) rather than slashing the
-    // node. Systematic early truncation still surfaces as the node's
-    // contributions evaporating.
-    let mut bad_groups: Vec<u64> = Vec::new();
-    for w in &sub.rollouts {
-        if validator.check_termination(w, max_new, spec.max_seq).is_err() {
-            bad_groups.push(w.rollout.group_id);
-        }
-    }
-    sub.rollouts.retain(|w| !bad_groups.contains(&w.rollout.group_id));
-    if sub.rollouts.is_empty() {
-        // Nothing usable, but not evidence of cheating — discard quietly.
-        return Verdict::Accept(sub);
-    }
-    // Computation + sampling checks need prefill under the claimed policy.
-    // The versions map retains the whole staleness window (plus margin):
-    // a miss on an old version means it aged out (stale, not dishonest).
-    // A miss on a *future* version is different — honest workers can hold
-    // at most the checkpoint published during the current step (version
-    // current + 1), and anything the trainer has published is in the map,
-    // so claiming a version beyond that is provably fabricated.
-    let params = shared.versions.lock().unwrap().get(&sub.step).cloned();
-    let Some(params) = params else {
-        // Re-read the step counter: the trainer may have advanced (and
-        // pruned) while the checks above ran, and judging "future" against
-        // a stale snapshot could slash an honest-but-aged-out version.
-        let now = shared.current_step.load(Ordering::SeqCst);
-        if sub.step > now + 1 {
-            return Verdict::Reject {
-                node: Some(node),
-                why: format!("unpublished policy version {} (current {now})", sub.step),
-            };
-        }
-        return Verdict::Stale {
-            node,
-            submitted: sub.step,
-            current: now,
-            n_rollouts: sub.rollouts.len(),
-        };
-    };
-    let (b, t, d, v) = (spec.batch_infer, spec.max_seq, spec.d_model, spec.vocab);
-    for chunk in sub.rollouts.chunks(b) {
-        let mut padded = vec![spec.pad_id; b * t];
-        for (i, w) in chunk.iter().enumerate() {
-            for (j, &tok) in w.rollout.tokens.iter().enumerate() {
-                padded[i * t + j] = tok;
-            }
-        }
-        let (logits, hidden) = match host.prefill(Arc::clone(&params), padded) {
-            Ok(out) => out,
-            // A trusted-side engine error proves nothing about the node —
-            // slashing here would exclude honest workers for our own
-            // infrastructure failures.
-            Err(e) => return Verdict::EngineFailure { node, why: format!("prefill: {e}") },
-        };
-        for (i, w) in chunk.iter().enumerate() {
-            let h = &hidden[i * t * d..(i + 1) * t * d];
-            let l = &logits[i * t * v..(i + 1) * t * v];
-            if let Err(e) = validator.check_computation(w, h, d) {
-                return Verdict::Reject { node: Some(node), why: format!("{e:?}") };
-            }
-            if let Err(e) = validator.check_sampling(w, l, v) {
-                return Verdict::Reject { node: Some(node), why: format!("{e:?}") };
-            }
-        }
-    }
-    Verdict::Accept(sub)
-}
+// `Verdict` and per-submission validation live in
+// `coordinator::validation` now: the validator thread above drives the
+// parallel, length-bucketed `ValidationPipeline`, and the pre-pipeline
+// single-submission full-pad path survives there as
+// `validate_submission_fullpad` (the bench/test baseline).

@@ -1,0 +1,627 @@
+//! The validator node's pipeline (§2.3 at swarm scale): verification must
+//! keep pace with a permissionless fleet of inference workers, so the
+//! single-threaded pad-everything-to-`max_seq` path is replaced by a
+//! two-stage pipeline over *waves* of submissions:
+//!
+//! 1. **CPU stage** — schema / sanity / termination (TOPLOC stages 1–3)
+//!    fan out across a [`ThreadPool`], one job per submission.
+//! 2. **Prefill stage** — survivors are grouped by claimed policy
+//!    version; [`plan_prefills`] packs their rollouts — across
+//!    submissions — into length-bucketed `batch_infer`-lane prefill
+//!    calls, and the computation + sampling checks (stages 4–5) run per
+//!    lane with verdicts attributed back per submission.
+//!
+//! Verdicts come back in input order and are byte-identical to running
+//! [`validate_submission_fullpad`] (the pre-pipeline reference path) on
+//! each submission alone, regardless of thread count or bucket grain —
+//! the equivalence tests in `tests/validation_pipeline.rs` enforce this.
+//! The one deliberate exception is a mid-wave engine failure, where call
+//! partitioning makes exact replay impossible: the pipeline is then
+//! strictly conservative — every submission touched by a failed call is
+//! dropped unjudged (never slashed), even if a sibling call saw a check
+//! fail.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::rl::reward::RewardConfig;
+use crate::rl::rollout_file::Submission;
+use crate::runtime::{EngineHost, ModelSpec, ParamSet};
+use crate::tasks::dataset::Dataset;
+use crate::toploc::pipeline::{plan_prefills, LaneReq};
+use crate::toploc::{Rejection, Validator};
+use crate::util::metrics::Counter;
+use crate::util::pool::ThreadPool;
+
+/// Max submissions validated per pipeline wave: bounds verdict latency
+/// while leaving plenty of cross-submission material for lane packing.
+pub const VALIDATION_WAVE: usize = 32;
+
+/// Ingest queue bound: at sustained overload the oldest uploads are shed
+/// first (they are the nearest to aging out of the staleness window).
+pub const SUBMISSION_QUEUE_CAP: usize = 512;
+
+/// Shared `why` for a stage-4/5 checker panic, so the packed pipeline and
+/// the full-pad reference emit identical EngineFailure verdicts.
+const PREFILL_CHECK_PANIC: &str = "validator panicked during prefill-stage checks";
+
+/// Outcome of validating one submission.
+pub enum Verdict {
+    /// Every TOPLOC stage passed: feed the rollouts trainer-ward.
+    Accept(Submission),
+    /// Well-formed but outside the off-policy window: dropped + counted.
+    /// Staleness is a liveness property, not evidence of cheating.
+    Stale { node: u64, submitted: u64, current: u64, n_rollouts: usize },
+    /// The validator's own side failed mid-check (engine error or a
+    /// checker panic): nothing provable about the sender, so the
+    /// submission is dropped unjudged. `node` is best-effort attribution
+    /// for the logs (`None` when the envelope itself was unreadable).
+    EngineFailure { node: Option<u64>, why: String },
+    /// Failed a trust check. Slash `node` when the envelope proves a
+    /// sender; `None` means the file was mangled beyond attribution.
+    Reject { node: Option<u64>, why: String },
+}
+
+impl Verdict {
+    /// Compact comparable form `(kind, node, detail)` — what the
+    /// pipeline-equivalence tests diff across configurations.
+    pub fn fingerprint(&self) -> (&'static str, Option<u64>, String) {
+        match self {
+            Verdict::Accept(sub) => {
+                ("accept", Some(sub.node_address), format!("{} rollouts", sub.rollouts.len()))
+            }
+            Verdict::Stale { node, submitted, current, n_rollouts } => {
+                ("stale", Some(*node), format!("{submitted}/{current}/{n_rollouts}"))
+            }
+            Verdict::EngineFailure { node, why } => ("engine-failure", *node, why.clone()),
+            Verdict::Reject { node, why } => ("reject", *node, why.clone()),
+        }
+    }
+}
+
+/// Bounded FIFO of raw submission uploads between the HTTP ingest handler
+/// and the validator thread. FIFO matters: the previous `Vec::pop` drained
+/// LIFO, starving the oldest submissions until they went stale. Consumers
+/// block on a condvar (no sleep-polling); producers wake them on push.
+pub struct SubmissionQueue {
+    inner: Mutex<VecDeque<Vec<u8>>>,
+    nonempty: Condvar,
+    cap: usize,
+}
+
+impl SubmissionQueue {
+    pub fn new(cap: usize) -> SubmissionQueue {
+        SubmissionQueue {
+            inner: Mutex::new(VecDeque::new()),
+            nonempty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue an upload. When full, the *oldest* entries are shed (newer
+    /// uploads are closer to the current policy and worth more); returns
+    /// the number shed so the caller can count the drops.
+    pub fn push(&self, bytes: Vec<u8>) -> u64 {
+        let mut q = self.inner.lock().unwrap();
+        let mut shed = 0;
+        while q.len() >= self.cap {
+            q.pop_front();
+            shed += 1;
+        }
+        q.push_back(bytes);
+        drop(q);
+        self.nonempty.notify_one();
+        shed
+    }
+
+    /// Dequeue up to `max` entries, oldest first. Blocks until at least
+    /// one entry is available or `timeout` elapses (the timeout only
+    /// exists so callers can re-check their stop flag — a push wakes the
+    /// consumer immediately).
+    pub fn drain_wait(&self, max: usize, timeout: Duration) -> Vec<Vec<u8>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.nonempty.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        let n = q.len().min(max.max(1));
+        q.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stage 1–3 output for one submission.
+enum CpuOutcome {
+    /// Passed the CPU stages (soft-dropped groups removed): needs prefill.
+    Ready(Submission),
+    /// Verdict settled without touching the engine.
+    Done(Verdict),
+}
+
+/// Stages 1–3: file, sanity, termination. Pure CPU — safe to fan out.
+fn cpu_stages(
+    validator: &Validator,
+    dataset: &Dataset,
+    reward_cfg: &RewardConfig,
+    bytes: &[u8],
+    current: u64,
+    max_new: usize,
+    max_seq: usize,
+) -> CpuOutcome {
+    let mut sub = match validator.check_file(bytes) {
+        Ok(sub) => sub,
+        Err(e) => {
+            // The file never parsed, so `sub.node_address` doesn't exist;
+            // attribute from the envelope when the container is intact.
+            // Same trust level as a well-formed submission's self-declared
+            // `node_address`: unsigned, so a cheater can claim another
+            // node's address either way. Closing that requires signing
+            // submissions with the protocol identities (see ROADMAP).
+            return CpuOutcome::Done(Verdict::Reject {
+                node: Submission::peek_node_address(bytes),
+                why: format!("{e:?}"),
+            });
+        }
+    };
+    let node = sub.node_address;
+    if let Err(e) = validator.check_sanity(&sub, dataset, reward_cfg, current, max_new) {
+        return CpuOutcome::Done(match e {
+            Rejection::StalePolicy { submitted, current } => {
+                Verdict::Stale { node, submitted, current, n_rollouts: sub.rollouts.len() }
+            }
+            other => Verdict::Reject { node: Some(node), why: format!("{other:?}") },
+        });
+    }
+    // Overlong sequences cannot be prefilled (no frame is wider than
+    // max_seq; the old path would have panicked building its padded
+    // buffer). Honest workers cannot produce them, so this is a hard
+    // reject, not a soft drop.
+    if let Some((i, w)) =
+        sub.rollouts.iter().enumerate().find(|(_, w)| w.rollout.tokens.len() > max_seq)
+    {
+        return CpuOutcome::Done(Verdict::Reject {
+            node: Some(node),
+            why: format!(
+                "rollout {i}: {} tokens exceeds max_seq {max_seq}",
+                w.rollout.tokens.len()
+            ),
+        });
+    }
+    // Termination failures on individual rollouts are *soft*: an honest
+    // sampler occasionally draws a low-probability EOS, so those rollouts
+    // are discarded (their whole group with them) rather than slashing the
+    // node. Systematic early truncation still surfaces as the node's
+    // contributions evaporating.
+    let mut bad_groups: HashSet<u64> = HashSet::new();
+    for w in &sub.rollouts {
+        if validator.check_termination(w, max_new, max_seq).is_err() {
+            bad_groups.insert(w.rollout.group_id);
+        }
+    }
+    if !bad_groups.is_empty() {
+        sub.rollouts.retain(|w| !bad_groups.contains(&w.rollout.group_id));
+    }
+    if sub.rollouts.is_empty() {
+        // Nothing usable, but not evidence of cheating — discard quietly.
+        return CpuOutcome::Done(Verdict::Accept(sub));
+    }
+    CpuOutcome::Ready(sub)
+}
+
+/// [`cpu_stages`] behind a panic firewall: the checks run over
+/// attacker-controlled bytes on pool workers, and a panicking checker
+/// must not hang the wave (a dead job would leave its result slot empty)
+/// or take the validator thread down. A panic proves nothing about the
+/// sender — our bug or their malice — so the submission is dropped
+/// unjudged as an [`Verdict::EngineFailure`], never slashed.
+fn cpu_stages_guarded(
+    validator: &Validator,
+    dataset: &Dataset,
+    reward_cfg: &RewardConfig,
+    bytes: &[u8],
+    current: u64,
+    max_new: usize,
+    max_seq: usize,
+) -> CpuOutcome {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cpu_stages(validator, dataset, reward_cfg, bytes, current, max_new, max_seq)
+    }))
+    .unwrap_or_else(|_| {
+        CpuOutcome::Done(Verdict::EngineFailure {
+            node: Submission::peek_node_address(bytes),
+            why: "validator panicked during CPU-stage checks".into(),
+        })
+    })
+}
+
+/// The parallel, length-bucketed validation pipeline (see module docs).
+pub struct ValidationPipeline {
+    validator: Arc<Validator>,
+    dataset: Arc<Dataset>,
+    reward_cfg: Arc<RewardConfig>,
+    host: Arc<EngineHost>,
+    spec: ModelSpec,
+    max_new: usize,
+    /// Length-bucket grain in tokens: prefill calls pad to a multiple of
+    /// this (resolved from the TOPLOC commit interval when the config
+    /// said 0).
+    bucket_tokens: usize,
+    /// CPU-stage fan-out; `None` runs stages 1–3 inline on the calling
+    /// thread (the sequential path, `validator-threads <= 1`).
+    pool: Option<ThreadPool>,
+    /// Prefill calls issued (observability: lane efficiency is
+    /// rollouts-verified / (calls x batch_infer)).
+    pub prefill_calls: Counter,
+}
+
+impl ValidationPipeline {
+    pub fn new(
+        validator: Validator,
+        dataset: Arc<Dataset>,
+        reward_cfg: RewardConfig,
+        host: Arc<EngineHost>,
+        max_new: usize,
+        threads: usize,
+        bucket_tokens: usize,
+    ) -> ValidationPipeline {
+        let spec = host.spec().clone();
+        let bucket =
+            if bucket_tokens == 0 { spec.toploc_interval.max(1) } else { bucket_tokens };
+        ValidationPipeline {
+            validator: Arc::new(validator),
+            dataset,
+            reward_cfg: Arc::new(reward_cfg),
+            host,
+            spec,
+            max_new,
+            bucket_tokens: bucket,
+            pool: (threads > 1).then(|| ThreadPool::new(threads)),
+            prefill_calls: Counter::default(),
+        }
+    }
+
+    /// Validate one wave of raw submissions; verdicts in input order.
+    ///
+    /// `current_step` is read once for the whole CPU wave and re-read on a
+    /// version-lookup miss (the trainer may have advanced — and pruned —
+    /// while the checks ran, and judging "future" against a stale snapshot
+    /// could slash an honest-but-aged-out version). `version_params` maps
+    /// a policy version to the trusted checkpoint to prefill under.
+    pub fn validate_batch(
+        &self,
+        batch: Vec<Vec<u8>>,
+        current_step: &dyn Fn() -> u64,
+        version_params: &dyn Fn(u64) -> Option<Arc<ParamSet>>,
+    ) -> Vec<Verdict> {
+        let n = batch.len();
+        let now = current_step();
+
+        // --- CPU stage: stages 1–3, one job per submission ---
+        let outcomes: Vec<CpuOutcome> = match &self.pool {
+            None => batch
+                .iter()
+                .map(|b| {
+                    cpu_stages_guarded(
+                        &self.validator,
+                        &self.dataset,
+                        &self.reward_cfg,
+                        b,
+                        now,
+                        self.max_new,
+                        self.spec.max_seq,
+                    )
+                })
+                .collect(),
+            Some(pool) => {
+                let slots: Arc<Mutex<Vec<Option<CpuOutcome>>>> =
+                    Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+                for (i, bytes) in batch.into_iter().enumerate() {
+                    let validator = Arc::clone(&self.validator);
+                    let dataset = Arc::clone(&self.dataset);
+                    let reward = Arc::clone(&self.reward_cfg);
+                    let slots = Arc::clone(&slots);
+                    let (max_new, max_seq) = (self.max_new, self.spec.max_seq);
+                    pool.submit(move || {
+                        let out = cpu_stages_guarded(
+                            &validator, &dataset, &reward, &bytes, now, max_new, max_seq,
+                        );
+                        slots.lock().unwrap()[i] = Some(out);
+                    });
+                }
+                pool.wait_idle();
+                let mut slots = slots.lock().unwrap();
+                std::mem::take(&mut *slots)
+                    .into_iter()
+                    .map(|o| o.expect("cpu stage completed"))
+                    .collect()
+            }
+        };
+
+        // --- assemble: early verdicts out, survivors grouped by version ---
+        let mut verdicts: Vec<Option<Verdict>> = (0..n).map(|_| None).collect();
+        let mut pending: Vec<Option<Submission>> = (0..n).map(|_| None).collect();
+        let mut by_version: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        for (i, out) in outcomes.into_iter().enumerate() {
+            match out {
+                CpuOutcome::Done(v) => verdicts[i] = Some(v),
+                CpuOutcome::Ready(sub) => {
+                    by_version.entry(sub.step).or_default().push(i);
+                    pending[i] = Some(sub);
+                }
+            }
+        }
+
+        // --- prefill stage: stages 4–5 over packed, bucketed calls ---
+        // Per-submission failure state. The winning rejection is the one
+        // at the lowest rollout index, matching the sequential path (which
+        // checks rollouts in order and stops at the first failure) no
+        // matter which packed call surfaced it first.
+        let mut failed: Vec<Option<(usize, String)>> = (0..n).map(|_| None).collect();
+        let mut engine_failed: Vec<Option<String>> = (0..n).map(|_| None).collect();
+
+        let (b, d, v) = (self.spec.batch_infer, self.spec.d_model, self.spec.vocab);
+        for (&version, subs) in &by_version {
+            // The versions map retains the whole staleness window (plus
+            // margin): a miss on an old version means it aged out (stale,
+            // not dishonest). A miss on a *future* version is different —
+            // honest workers can hold at most the checkpoint published
+            // during the current step (version current + 1), and anything
+            // the trainer has published is in the map, so claiming a
+            // version beyond that is provably fabricated.
+            let Some(params) = version_params(version) else {
+                let now = current_step();
+                for &i in subs {
+                    let sub = pending[i].take().expect("pending submission");
+                    verdicts[i] = Some(if version > now + 1 {
+                        Verdict::Reject {
+                            node: Some(sub.node_address),
+                            why: format!(
+                                "unpublished policy version {version} (current {now})"
+                            ),
+                        }
+                    } else {
+                        Verdict::Stale {
+                            node: sub.node_address,
+                            submitted: version,
+                            current: now,
+                            n_rollouts: sub.rollouts.len(),
+                        }
+                    });
+                }
+                continue;
+            };
+            let mut lanes = Vec::new();
+            for &i in subs {
+                let rollouts = &pending[i].as_ref().expect("pending submission").rollouts;
+                for (ri, w) in rollouts.iter().enumerate() {
+                    lanes.push(LaneReq { sub: i, rollout: ri, len: w.rollout.tokens.len() });
+                }
+            }
+            for call in plan_prefills(lanes, b, self.bucket_tokens, self.spec.max_seq) {
+                // Lanes that can no longer change their submission's
+                // verdict are dead weight: anything from a submission
+                // dropped unjudged (engine failure), and anything at a
+                // higher rollout index than an already-recorded failure
+                // (only a lower index can win the min-index attribution —
+                // the sequential path would never have reached them).
+                let doomed = |l: &LaneReq| {
+                    engine_failed[l.sub].is_some()
+                        || failed[l.sub].as_ref().map_or(false, |(ri, _)| l.rollout > *ri)
+                };
+                let live: Vec<LaneReq> =
+                    call.lanes.iter().copied().filter(|l| !doomed(l)).collect();
+                if live.is_empty() {
+                    continue;
+                }
+                let t = call.seq_len;
+                let mut padded = vec![self.spec.pad_id; live.len() * t];
+                for (lane, l) in live.iter().enumerate() {
+                    let toks =
+                        &pending[l.sub].as_ref().expect("pending submission").rollouts[l.rollout]
+                            .rollout
+                            .tokens;
+                    padded[lane * t..lane * t + toks.len()].copy_from_slice(toks);
+                }
+                self.prefill_calls.inc();
+                let (logits, hidden, stride) =
+                    match self.host.prefill_rows(Arc::clone(&params), padded, live.len(), t) {
+                        Ok(out) => out,
+                        // A trusted-side engine error proves nothing about
+                        // the nodes — slashing here would exclude honest
+                        // workers for our own infrastructure failures.
+                        Err(e) => {
+                            let why = format!("prefill: {e}");
+                            for l in &live {
+                                engine_failed[l.sub].get_or_insert_with(|| why.clone());
+                            }
+                            continue;
+                        }
+                    };
+                for (lane, l) in live.iter().enumerate() {
+                    // Re-check: a failure recorded earlier in this same
+                    // call can doom later lanes of the same submission.
+                    if engine_failed[l.sub].is_some()
+                        || failed[l.sub].as_ref().map_or(false, |(ri, _)| l.rollout > *ri)
+                    {
+                        continue;
+                    }
+                    let w = &pending[l.sub].as_ref().expect("pending submission").rollouts
+                        [l.rollout];
+                    let h = &hidden[lane * stride * d..(lane + 1) * stride * d];
+                    let lg = &logits[lane * stride * v..(lane + 1) * stride * v];
+                    // Same panic firewall as the CPU stages: these checks
+                    // also consume attacker-controlled data, and a panic
+                    // must not kill the long-lived validator thread.
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.validator
+                            .check_computation(w, h, d)
+                            .and_then(|()| self.validator.check_sampling(w, lg, v))
+                    }));
+                    match res {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => {
+                            if failed[l.sub].as_ref().map_or(true, |(ri, _)| l.rollout < *ri) {
+                                failed[l.sub] = Some((l.rollout, format!("{e:?}")));
+                            }
+                        }
+                        Err(_) => {
+                            engine_failed[l.sub].get_or_insert_with(|| {
+                                PREFILL_CHECK_PANIC.to_string()
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- final assembly, input order ---
+        // Engine failure outranks rejection: if any of a submission's
+        // lanes hit a prefill error, the engine was unhealthy while
+        // judging it, and a "failed" check from a sibling call can't be
+        // trusted as slashing evidence (the sequential path would have
+        // returned EngineFailure at its first bad chunk and never reached
+        // the rest). Drop unjudged instead of slashing.
+        for i in 0..n {
+            if verdicts[i].is_some() {
+                continue;
+            }
+            let sub = pending[i].take().expect("pending submission");
+            let node = sub.node_address;
+            verdicts[i] = Some(if let Some(why) = engine_failed[i].take() {
+                Verdict::EngineFailure { node: Some(node), why }
+            } else if let Some((_, why)) = failed[i].take() {
+                Verdict::Reject { node: Some(node), why }
+            } else {
+                Verdict::Accept(sub)
+            });
+        }
+        verdicts.into_iter().map(|v| v.expect("verdict assigned")).collect()
+    }
+}
+
+/// The pre-pipeline reference path: validate one submission alone, every
+/// prefill padded to the full `[batch_infer, max_seq]` frame. Kept as the
+/// baseline that `toploc_bench` and the pipeline-equivalence tests compare
+/// against — behavior changes here must be mirrored in
+/// [`ValidationPipeline::validate_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn validate_submission_fullpad(
+    validator: &Validator,
+    bytes: &[u8],
+    dataset: &Dataset,
+    reward_cfg: &RewardConfig,
+    host: &Arc<EngineHost>,
+    spec: &ModelSpec,
+    max_new: usize,
+    current_step: &dyn Fn() -> u64,
+    version_params: &dyn Fn(u64) -> Option<Arc<ParamSet>>,
+) -> Verdict {
+    let sub = match cpu_stages_guarded(
+        validator,
+        dataset,
+        reward_cfg,
+        bytes,
+        current_step(),
+        max_new,
+        spec.max_seq,
+    ) {
+        CpuOutcome::Done(v) => return v,
+        CpuOutcome::Ready(sub) => sub,
+    };
+    let node = sub.node_address;
+    let Some(params) = version_params(sub.step) else {
+        let now = current_step();
+        if sub.step > now + 1 {
+            return Verdict::Reject {
+                node: Some(node),
+                why: format!("unpublished policy version {} (current {now})", sub.step),
+            };
+        }
+        return Verdict::Stale {
+            node,
+            submitted: sub.step,
+            current: now,
+            n_rollouts: sub.rollouts.len(),
+        };
+    };
+    let (b, t, d, v) = (spec.batch_infer, spec.max_seq, spec.d_model, spec.vocab);
+    for chunk in sub.rollouts.chunks(b) {
+        let mut padded = vec![spec.pad_id; b * t];
+        for (i, w) in chunk.iter().enumerate() {
+            padded[i * t..i * t + w.rollout.tokens.len()].copy_from_slice(&w.rollout.tokens);
+        }
+        let (logits, hidden) = match host.prefill(Arc::clone(&params), padded) {
+            Ok(out) => out,
+            Err(e) => {
+                return Verdict::EngineFailure { node: Some(node), why: format!("prefill: {e}") }
+            }
+        };
+        for (i, w) in chunk.iter().enumerate() {
+            let h = &hidden[i * t * d..(i + 1) * t * d];
+            let l = &logits[i * t * v..(i + 1) * t * v];
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                validator.check_computation(w, h, d).and_then(|()| validator.check_sampling(w, l, v))
+            }));
+            match res {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    return Verdict::Reject { node: Some(node), why: format!("{e:?}") }
+                }
+                Err(_) => {
+                    return Verdict::EngineFailure {
+                        node: Some(node),
+                        why: PREFILL_CHECK_PANIC.to_string(),
+                    }
+                }
+            }
+        }
+    }
+    Verdict::Accept(sub)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_is_fifo_and_wakes_consumer() {
+        let q = Arc::new(SubmissionQueue::new(8));
+        q.push(vec![1]);
+        q.push(vec![2]);
+        q.push(vec![3]);
+        assert_eq!(q.len(), 3);
+        // Oldest first, up to max.
+        assert_eq!(q.drain_wait(2, Duration::from_millis(1)), vec![vec![1], vec![2]]);
+        assert_eq!(q.drain_wait(9, Duration::from_millis(1)), vec![vec![3]]);
+        assert!(q.is_empty());
+        // Empty + timeout: returns empty without hanging.
+        assert!(q.drain_wait(4, Duration::from_millis(5)).is_empty());
+        // A push from another thread wakes a blocked consumer well before
+        // the (generous) timeout.
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.drain_wait(1, Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(vec![7]);
+        assert_eq!(t.join().unwrap(), vec![vec![7]]);
+    }
+
+    #[test]
+    fn queue_sheds_oldest_when_full() {
+        let q = SubmissionQueue::new(3);
+        assert_eq!(q.push(vec![1]), 0);
+        assert_eq!(q.push(vec![2]), 0);
+        assert_eq!(q.push(vec![3]), 0);
+        // Full: the oldest entry is shed, the newest kept.
+        assert_eq!(q.push(vec![4]), 1);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.drain_wait(8, Duration::from_millis(1)), vec![vec![2], vec![3], vec![4]]);
+    }
+}

@@ -441,6 +441,50 @@ impl SampleEngine {
         let outs = self.rt.call("prefill", &inputs)?;
         Ok((to_f32(&outs[0])?, to_f32(&outs[1])?))
     }
+
+    /// Length-bucketed validator prefill: `tokens` is row-major
+    /// `[rows, seq_len]` with `rows <= batch_infer` and
+    /// `seq_len <= max_seq`. Picks the cheapest compiled `prefill_{T}`
+    /// artifact with `T >= seq_len` (falling back to the full
+    /// `[batch_infer, max_seq]` frame when no bucketed artifacts are
+    /// shipped — packing across submissions still wins there by filling
+    /// all lanes), pads rows into that frame and returns
+    /// `(logits, hidden, stride)`: row `i`'s positions start at
+    /// `i * stride` rows of `vocab` / `d_model` respectively. Rows are
+    /// causal and independent, so lane position and co-tenants never
+    /// change a row's outputs; a bucketed artifact can differ from the
+    /// full frame only by kernel-shape fp rounding, which the TOPLOC
+    /// tolerances absorb.
+    pub fn prefill_rows(
+        &self,
+        tokens: &[i32],
+        rows: usize,
+        seq_len: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, usize)> {
+        let spec = &self.rt.spec;
+        let b = spec.batch_infer;
+        anyhow::ensure!((1..=b).contains(&rows), "prefill rows {rows} outside 1..={b}");
+        anyhow::ensure!(
+            (1..=spec.max_seq).contains(&seq_len),
+            "prefill seq_len {seq_len} outside 1..={}",
+            spec.max_seq
+        );
+        anyhow::ensure!(
+            tokens.len() == rows * seq_len,
+            "prefill tokens {} != rows*seq_len {}",
+            tokens.len(),
+            rows * seq_len
+        );
+        let (artifact, t) = spec.prefill_artifact_for(seq_len)?;
+        let mut padded = vec![spec.pad_id; b * t];
+        for r in 0..rows {
+            padded[r * t..r * t + seq_len].copy_from_slice(&tokens[r * seq_len..(r + 1) * seq_len]);
+        }
+        let mut inputs = self.params.literals(&self.rt);
+        inputs.push(lit_i32(&padded, &[b, t]));
+        let outs = self.rt.call(&artifact, &inputs)?;
+        Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, t))
+    }
 }
 
 pub fn softmax_prob(logits: &[f32], idx: usize) -> f32 {

@@ -29,6 +29,13 @@ enum Req {
         tokens: Vec<i32>,
         reply: Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
     },
+    PrefillRows {
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+        rows: usize,
+        seq_len: usize,
+        reply: Sender<anyhow::Result<(Vec<f32>, Vec<f32>, usize)>>,
+    },
     Logprobs {
         params: Arc<ParamSet>,
         tokens: Vec<i32>,
@@ -99,6 +106,10 @@ impl EngineHost {
                     Req::Prefill { params, tokens, reply } => {
                         sample.set_params((*params).clone());
                         let _ = reply.send(sample.prefill(&tokens));
+                    }
+                    Req::PrefillRows { params, tokens, rows, seq_len, reply } => {
+                        sample.set_params((*params).clone());
+                        let _ = reply.send(sample.prefill_rows(&tokens, rows, seq_len));
                     }
                     Req::Logprobs { params, tokens, segs, reply } => {
                         let _ = reply.send(train.logprobs(&params, &tokens, &segs));
@@ -190,6 +201,24 @@ impl EngineHost {
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let (reply, rx) = channel();
         self.tx.send(Req::Prefill { params, tokens, reply }).map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    /// Length-bucketed validator prefill (see [`super::engine::SampleEngine::prefill_rows`]):
+    /// `tokens` is row-major `[rows, seq_len]`; returns
+    /// `(logits, hidden, stride)` where consecutive rows are `stride`
+    /// positions apart in both outputs.
+    pub fn prefill_rows(
+        &self,
+        params: Arc<ParamSet>,
+        tokens: Vec<i32>,
+        rows: usize,
+        seq_len: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, usize)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::PrefillRows { params, tokens, rows, seq_len, reply })
+            .map_err(closed)?;
         rx.recv().map_err(closed)?
     }
 

@@ -126,7 +126,16 @@ impl ModelSpec {
             hp_layout: strs("hp_layout"),
             metrics_layout: strs("metrics_layout"),
             toploc_interval: j.path(&["toploc", "interval"]).and_then(Json::as_usize).unwrap_or(32),
-            toploc_topk: j.path(&["toploc", "topk"]).and_then(Json::as_usize).unwrap_or(8),
+            // Floor at the verifier's minimum row width: commit rows
+            // narrower than MIN_OVERLAP are rejected as forged-shaped
+            // (toploc::commitment), so honest builders must never emit
+            // them, whatever the spec says. (topk_abs itself clamps to
+            // d_model, which covers degenerate tiny models.)
+            toploc_topk: j
+                .path(&["toploc", "topk"])
+                .and_then(Json::as_usize)
+                .unwrap_or(8)
+                .max(crate::toploc::commitment::MIN_OVERLAP),
             artifacts,
         })
     }
@@ -137,6 +146,51 @@ impl ModelSpec {
             .find(|(n, _)| n == name)
             .map(|(_, m)| m)
             .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in spec"))
+    }
+
+    /// Sequence lengths of the available validator prefill artifacts:
+    /// bucketed `prefill_{T}` variants plus the full-frame `prefill` at
+    /// `max_seq`, ascending. The AOT harness may ship any subset of bucket
+    /// lengths; [`ModelSpec::prefill_artifact_for`] picks the cheapest one
+    /// covering each request.
+    pub fn prefill_lengths(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|(name, _)| {
+                if name == "prefill" {
+                    Some(self.max_seq)
+                } else {
+                    name.strip_prefix("prefill_").and_then(|t| t.parse().ok())
+                }
+            })
+            .filter(|&t| t > 0 && t <= self.max_seq)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Name + padded length of the cheapest compiled prefill artifact
+    /// covering `seq_len` (the shortest `prefill_{T}` with `T >= seq_len`,
+    /// falling back to the full `prefill` frame).
+    pub fn prefill_artifact_for(&self, seq_len: usize) -> anyhow::Result<(String, usize)> {
+        let t = self
+            .prefill_lengths()
+            .into_iter()
+            .find(|&t| t >= seq_len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no prefill artifact covers seq_len {seq_len} (max_seq {})",
+                    self.max_seq
+                )
+            })?;
+        let name = if t == self.max_seq && self.artifact("prefill").is_ok() {
+            "prefill".to_string()
+        } else {
+            format!("prefill_{t}")
+        };
+        Ok((name, t))
     }
 
     /// Total bytes of one parameter set (f32) — what SHARDCAST broadcasts.
@@ -173,10 +227,38 @@ mod tests {
     }"#;
 
     #[test]
+    fn prefill_artifact_selection() {
+        let mut s = ModelSpec::parse(SAMPLE).unwrap();
+        let meta = s.artifacts[0].1.clone();
+        // Only the full frame shipped: everything resolves to it.
+        s.artifacts.push(("prefill".to_string(), meta.clone()));
+        assert_eq!(s.prefill_lengths(), vec![256]);
+        assert_eq!(s.prefill_artifact_for(10).unwrap(), ("prefill".to_string(), 256));
+        assert_eq!(s.prefill_artifact_for(256).unwrap(), ("prefill".to_string(), 256));
+        // Bucketed variants: cheapest covering length wins; junk and
+        // over-length names are ignored.
+        s.artifacts.push(("prefill_64".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_128".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_9999".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_x".to_string(), meta));
+        assert_eq!(s.prefill_lengths(), vec![64, 128, 256]);
+        assert_eq!(s.prefill_artifact_for(10).unwrap(), ("prefill_64".to_string(), 64));
+        assert_eq!(s.prefill_artifact_for(64).unwrap(), ("prefill_64".to_string(), 64));
+        assert_eq!(s.prefill_artifact_for(65).unwrap(), ("prefill_128".to_string(), 128));
+        assert_eq!(s.prefill_artifact_for(200).unwrap(), ("prefill".to_string(), 256));
+        assert!(s.prefill_artifact_for(257).is_err());
+    }
+
+    #[test]
     fn parses_sample() {
         let s = ModelSpec::parse(SAMPLE).unwrap();
         assert_eq!(s.name, "nano");
         assert_eq!(s.d_model, 64);
+        assert_eq!(s.toploc_topk, 8);
+        // A topk below the verifier's minimum row width is floored, so
+        // honest builders never emit commit rows the validator rejects.
+        let narrow = ModelSpec::parse(&SAMPLE.replace("\"topk\": 8", "\"topk\": 2")).unwrap();
+        assert_eq!(narrow.toploc_topk, crate::toploc::commitment::MIN_OVERLAP);
         assert_eq!(s.params_bytes(), 120064 * 4);
         assert_eq!(s.metric_idx("kl"), 4);
         let a = s.artifact("init").unwrap();

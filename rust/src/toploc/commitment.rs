@@ -29,13 +29,33 @@ pub struct Commitment {
 }
 
 /// Top-k coordinates of |x| (descending by magnitude).
+///
+/// Validator hot path: runs once per commit row on both sides of every
+/// computation check, so it partitions the top k out in O(d) with
+/// `select_nth_unstable_by` and sorts only those k, instead of fully
+/// sorting all `d_model` indices. Ties break by ascending index, which is
+/// what the stable full sort this replaces produced — commitments stay
+/// bit-identical across the two implementations.
 pub fn topk_abs(x: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
-    let mut order: Vec<usize> = (0..x.len()).collect();
-    order.sort_by(|&a, &b| {
-        x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
-    });
-    let top = &order[..k.min(x.len())];
-    (top.iter().map(|&i| i as u32).collect(), top.iter().map(|&i| x[i]).collect())
+    let k = k.min(x.len());
+    if k == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let cmp = |a: &u32, b: &u32| {
+        x[*b as usize]
+            .abs()
+            .partial_cmp(&x[*a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    let mut order: Vec<u32> = (0..x.len() as u32).collect();
+    if k < order.len() {
+        let _ = order.select_nth_unstable_by(k - 1, cmp);
+        order.truncate(k);
+    }
+    order.sort_unstable_by(cmp);
+    let val = order.iter().map(|&i| x[i as usize]).collect();
+    (order, val)
 }
 
 impl Commitment {
@@ -107,15 +127,48 @@ impl Commitment {
             if pos >= seq_len {
                 return Err(format!("commit row at pos {pos} beyond sequence ({seq_len})"));
             }
+            // The row contents are attacker-controlled: a short row would
+            // lower the overlap bar below MIN_OVERLAP (a single known
+            // coordinate would pass), and duplicate or out-of-range
+            // coordinates would inflate the overlap count / panic the
+            // indexing — all are rejected outright (honest rows are
+            // distinct in-range top-k of width >= MIN_OVERLAP whenever
+            // d_model allows, so this costs them nothing).
+            if r.idx.len() < MIN_OVERLAP.min(d_model) {
+                return Err(format!(
+                    "pos {pos}: commit row of {} coords (need {})",
+                    r.idx.len(),
+                    MIN_OVERLAP.min(d_model)
+                ));
+            }
             let h = &hidden[pos * d_model..(pos + 1) * d_model];
             let (want_idx, _) = topk_abs(h, r.idx.len());
-            let overlap = r.idx.iter().filter(|i| want_idx.contains(i)).count();
+            let mut seen: Vec<u32> = Vec::with_capacity(r.idx.len());
+            let mut overlap = 0usize;
+            for &i in &r.idx {
+                if seen.contains(&i) {
+                    return Err(format!("pos {pos}: duplicate committed coordinate {i}"));
+                }
+                seen.push(i);
+                if want_idx.contains(&i) {
+                    overlap += 1;
+                }
+            }
             let need = MIN_OVERLAP.min(r.idx.len());
             if overlap < need {
                 return Err(format!("pos {pos}: top-k overlap {overlap} < {need}"));
             }
             for (&i, &v) in r.idx.iter().zip(&r.val) {
-                let actual = h[i as usize];
+                let Some(&actual) = h.get(i as usize) else {
+                    return Err(format!(
+                        "pos {pos}: committed coordinate {i} outside d_model {d_model}"
+                    ));
+                };
+                // NaN would sail through the tolerance comparison below
+                // (NaN > tol is false), neutering the value check.
+                if !v.is_finite() {
+                    return Err(format!("pos {pos} coord {i}: non-finite committed value"));
+                }
                 let tol = VALUE_RTOL * actual.abs().max(0.05);
                 if (actual - v).abs() > tol {
                     return Err(format!(
@@ -199,5 +252,74 @@ mod tests {
     fn rejects_out_of_range_positions() {
         let c = Commitment::build(&[(999, vec![1.0; 8])], 4);
         assert!(c.verify_against(&vec![0.0; 64 * 8], 8, 64).is_err());
+    }
+
+    #[test]
+    fn rejects_forged_row_shapes() {
+        // Attacker-shaped rows must fail, not bypass or panic: empty or
+        // short rows (which would vacuously match / lower the overlap bar
+        // to one known coordinate), duplicated coordinates (overlap
+        // inflation), out-of-range indices (previously an
+        // index-out-of-bounds panic in the validator), and NaN values
+        // (which the tolerance comparison can't flag).
+        let mut rng = Rng::new(7);
+        let d = 64;
+        let h: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let honest = Commitment::build(&[(0, h.clone())], TOPK);
+        honest.verify_against(&h, d, 1).unwrap();
+
+        let empty = Commitment { rows: vec![CommitRow { pos: 0, idx: vec![], val: vec![] }] };
+        assert!(empty.verify_against(&h, d, 1).unwrap_err().contains("commit row of 0 coords"));
+
+        let top = honest.rows[0].idx[0];
+        let short = Commitment {
+            rows: vec![CommitRow { pos: 0, idx: vec![top], val: vec![h[top as usize]] }],
+        };
+        assert!(short.verify_against(&h, d, 1).unwrap_err().contains("commit row of 1 coords"));
+
+        let dup = Commitment {
+            rows: vec![CommitRow {
+                pos: 0,
+                idx: vec![top; TOPK],
+                val: vec![h[top as usize]; TOPK],
+            }],
+        };
+        assert!(dup.verify_against(&h, d, 1).unwrap_err().contains("duplicate"));
+
+        let mut forged = honest.clone();
+        forged.rows[0].idx[TOPK - 1] = 1_000_000;
+        assert!(forged.verify_against(&h, d, 1).unwrap_err().contains("outside d_model"));
+
+        let mut nan = honest.clone();
+        nan.rows[0].val[0] = f32::NAN;
+        assert!(nan.verify_against(&h, d, 1).unwrap_err().contains("non-finite"));
+    }
+
+    #[test]
+    fn topk_matches_full_sort_reference() {
+        // The selection-based top-k must reproduce the stable full sort it
+        // replaced, including index-ascending tie-breaks (so commitments
+        // built by old and new code are interchangeable).
+        let mut rng = Rng::new(6);
+        for case in 0..50 {
+            let d = 1 + (case * 7) % 96;
+            let mut x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            // Inject deliberate |value| ties.
+            if d > 4 {
+                x[1] = -x[0];
+                x[d / 2] = x[0];
+            }
+            let k = 1 + case % 12;
+            let mut order: Vec<usize> = (0..x.len()).collect();
+            order.sort_by(|&a, &b| {
+                x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let top = &order[..k.min(x.len())];
+            let want_idx: Vec<u32> = top.iter().map(|&i| i as u32).collect();
+            let want_val: Vec<f32> = top.iter().map(|&i| x[i]).collect();
+            assert_eq!(topk_abs(&x, k), (want_idx, want_val), "d={d} k={k}");
+        }
+        assert_eq!(topk_abs(&[], 4), (Vec::new(), Vec::new()));
+        assert_eq!(topk_abs(&[1.0, 2.0], 0), (Vec::new(), Vec::new()));
     }
 }

@@ -2,9 +2,58 @@
 //! locality-sensitive commitments over final hidden states, plus sampling
 //! and sanity checks. Validators audit submissions far faster than
 //! generation (one prefill vs T decode steps — `benches/toploc_bench.rs`).
+//!
+//! # The five validation stages
+//!
+//! Every rollout submission passes through five stages; the first three
+//! are pure CPU work, the last two need model prefill:
+//!
+//! 1. **File check** ([`Validator::check_file`]) — rpq decode + schema
+//!    (the paper's "parquet formatting check"). Malformed files are
+//!    rejected with best-effort envelope attribution.
+//! 2. **Sanity checks** ([`Validator::check_sanity`], §2.3.3) — staleness
+//!    window, fixed data-sampling seed, deterministic group ids, value
+//!    bounds, and reward re-verification against the environment.
+//! 3. **Termination check** ([`Validator::check_termination`], §2.3.2) —
+//!    plausible EOS probability or genuine max-length. Failures are
+//!    *soft*: the offending group is discarded, the node is not slashed.
+//! 4. **Computation check** ([`Validator::check_computation`], §2.3.1) —
+//!    the TOPLOC commitment's top-k hidden-state coordinates must match a
+//!    prefill recomputation within index-overlap and value tolerances.
+//! 5. **Sampling checks** ([`Validator::check_sampling`], §2.3.2) —
+//!    calibrated bimodality test on recomputed token probabilities
+//!    (catches decode-with-a-smaller-model) and median agreement with the
+//!    reported per-token probs (catches fabricated reports).
+//!
+//! # Pipeline topology
+//!
+//! The validator node (`coordinator::validation::ValidationPipeline`)
+//! runs these stages as a two-stage pipeline over *waves* of submissions
+//! pulled from a bounded FIFO ingest queue:
+//!
+//! - **CPU stage** — stages 1–3 fan out across a `util::pool::ThreadPool`
+//!   (`validator-threads` knob), one job per submission.
+//! - **Prefill stage** — survivors are grouped by claimed policy version,
+//!   then [`pipeline::plan_prefills`] packs their rollouts — across
+//!   submissions — into length-bucketed prefill calls: lanes sorted
+//!   longest-first, `batch_infer` per call, each call padded only to its
+//!   longest lane rounded up to the bucket grain (`prefill-bucket-tokens`
+//!   knob; 0 = the model's TOPLOC commit interval). Stages 4–5 run on
+//!   each lane and verdicts are attributed back per submission.
+//!
+//! The old path — one thread, one submission at a time, every prefill
+//! padded to the full `batch_infer x max_seq` frame — survives as
+//! `coordinator::validation::validate_submission_fullpad`, the reference
+//! baseline the equivalence tests and `toploc_bench` compare against.
+//! The runtime picks the cheapest compiled `prefill_{T}` artifact
+//! covering each call (`ModelSpec::prefill_artifact_for`), falling back
+//! to the full frame when only `prefill` is shipped — packing still wins
+//! there by filling all lanes and issuing fewer calls.
 
 pub mod commitment;
+pub mod pipeline;
 pub mod validator;
 
-pub use commitment::{Commitment, CommitRow};
+pub use commitment::{CommitRow, Commitment};
+pub use pipeline::{plan_prefills, LaneReq, PlannedCall};
 pub use validator::{Rejection, Validator, ValidatorConfig};

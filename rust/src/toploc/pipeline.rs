@@ -1,0 +1,185 @@
+//! Prefill planning for the parallel validation pipeline: cross-submission,
+//! length-bucketed lane packing.
+//!
+//! The pre-pipeline validator padded every prefill to the full
+//! `batch_infer x max_seq` frame and filled its lanes from a single
+//! submission, so a 4-rollout submission wasted 12 of 16 lanes and every
+//! short rollout paid for `max_seq` positions. The planner here takes all
+//! rollouts that share a policy version — across submissions — sorts them
+//! longest-first, packs them `batch_infer` lanes at a time, and pads each
+//! call only to its longest lane rounded up to the bucket grain (the
+//! TOPLOC commit interval by default, so commit-row positions always fall
+//! inside the padded frame). Verdict attribution stays per submission via
+//! the `(sub, rollout)` tags carried on every lane.
+//!
+//! This module is engine-independent (pure planning); the validator node
+//! (`coordinator::validation`) executes the plan against the runtime.
+
+/// One rollout awaiting the prefill-backed checks (stages 4–5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneReq {
+    /// Caller-scoped submission slot (index into the wave being validated).
+    pub sub: usize,
+    /// Rollout index within that submission.
+    pub rollout: usize,
+    /// Sequence length in tokens (prompt + completion).
+    pub len: usize,
+}
+
+/// One planned prefill call: up to `batch_infer` lanes drawn from any mix
+/// of submissions (all sharing a policy version), padded to `seq_len`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlannedCall {
+    /// Occupied lanes in call order (lane i of the batch holds `lanes[i]`).
+    pub lanes: Vec<LaneReq>,
+    /// Padded sequence length: the longest lane rounded up to the bucket
+    /// grain, capped at `max_seq`. Covers every lane in the call.
+    pub seq_len: usize,
+}
+
+/// Pack `lanes` (one per rollout, all sharing a policy version) into
+/// prefill calls of at most `batch_infer` lanes each.
+///
+/// Lanes are sorted longest-first with a deterministic `(sub, rollout)`
+/// tie-break, so each chunk's padding is set by its first lane and the plan
+/// is a pure function of the lane set — the same wave always produces the
+/// same calls regardless of arrival order or validator thread count.
+/// Callers must have rejected lanes longer than `max_seq` beforehand.
+pub fn plan_prefills(
+    mut lanes: Vec<LaneReq>,
+    batch_infer: usize,
+    bucket: usize,
+    max_seq: usize,
+) -> Vec<PlannedCall> {
+    let b = batch_infer.max(1);
+    let grain = bucket.max(1);
+    lanes.sort_unstable_by(|a, b| {
+        b.len.cmp(&a.len).then(a.sub.cmp(&b.sub)).then(a.rollout.cmp(&b.rollout))
+    });
+    lanes
+        .chunks(b)
+        .map(|c| {
+            let longest = c[0].len.min(max_seq).max(1);
+            let seq_len = (longest.div_ceil(grain) * grain).min(max_seq).max(longest);
+            PlannedCall { lanes: c.to_vec(), seq_len }
+        })
+        .collect()
+}
+
+/// Fraction of lane-token slots in `calls` not occupied by real tokens —
+/// the padding waste the plan leaves on the table (benches report this;
+/// the full-pad baseline's waste is `1 - Σlen / (n_calls · B · max_seq)`).
+pub fn plan_padding_fraction(calls: &[PlannedCall], batch_infer: usize) -> f64 {
+    let total: usize = calls.iter().map(|c| batch_infer.max(1) * c.seq_len).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let used: usize = calls.iter().flat_map(|c| c.lanes.iter().map(|l| l.len)).sum();
+    1.0 - used as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, ensure_eq};
+    use crate::util::rng::Rng;
+
+    fn lane(sub: usize, rollout: usize, len: usize) -> LaneReq {
+        LaneReq { sub, rollout, len }
+    }
+
+    #[test]
+    fn packs_across_submissions_and_buckets_lengths() {
+        // 3 submissions of 2 rollouts, batch of 4 lanes, grain 32.
+        let lanes = vec![
+            lane(0, 0, 40),
+            lane(0, 1, 10),
+            lane(1, 0, 100),
+            lane(1, 1, 90),
+            lane(2, 0, 33),
+            lane(2, 1, 8),
+        ];
+        let calls = plan_prefills(lanes, 4, 32, 256);
+        assert_eq!(calls.len(), 2);
+        // Longest-first: the 100/90/40/33 lanes share the first call,
+        // padded to 128 (100 rounded up to the 32 grain).
+        assert_eq!(calls[0].seq_len, 128);
+        assert_eq!(
+            calls[0].lanes,
+            vec![lane(1, 0, 100), lane(1, 1, 90), lane(0, 0, 40), lane(2, 0, 33)]
+        );
+        // The short tail pays only one 32-token bucket.
+        assert_eq!(calls[1].seq_len, 32);
+        assert_eq!(calls[1].lanes, vec![lane(0, 1, 10), lane(2, 1, 8)]);
+    }
+
+    #[test]
+    fn seq_len_caps_at_max_seq() {
+        let calls = plan_prefills(vec![lane(0, 0, 250)], 4, 32, 256);
+        assert_eq!(calls[0].seq_len, 256);
+        // Rounding lands inside the frame when it can...
+        let calls = plan_prefills(vec![lane(0, 0, 90)], 4, 32, 100);
+        assert_eq!(calls[0].seq_len, 96);
+        // ...and caps at a max_seq that is not a multiple of the grain.
+        let calls = plan_prefills(vec![lane(0, 0, 99)], 4, 32, 100);
+        assert_eq!(calls[0].seq_len, 100);
+    }
+
+    #[test]
+    fn padding_fraction_counts_empty_lanes() {
+        // One call, 2 of 4 lanes used, padded to 32: 48/128 slots used.
+        let calls = plan_prefills(vec![lane(0, 0, 32), lane(0, 1, 16)], 4, 32, 256);
+        let waste = plan_padding_fraction(&calls, 4);
+        assert!((waste - (1.0 - 48.0 / 128.0)).abs() < 1e-9, "waste={waste}");
+        assert_eq!(plan_padding_fraction(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn plan_properties() {
+        check(
+            "prefill plan covers every lane within bounds",
+            64,
+            |rng, size| {
+                let n_subs = 1 + rng.usize(6);
+                let mut lanes = Vec::new();
+                for s in 0..n_subs {
+                    for r in 0..1 + rng.usize(size as usize + 3) {
+                        lanes.push(lane(s, r, 1 + rng.usize(256)));
+                    }
+                }
+                let b = 1 + rng.usize(16);
+                let grain = 1 + rng.usize(64);
+                (lanes, b, grain)
+            },
+            |(lanes, b, grain)| {
+                let max_seq = 256;
+                let calls = plan_prefills(lanes.clone(), *b, *grain, max_seq);
+                // Every lane appears exactly once.
+                let mut seen: Vec<LaneReq> = calls.iter().flat_map(|c| c.lanes.clone()).collect();
+                seen.sort_unstable_by_key(|l| (l.sub, l.rollout));
+                let mut want = lanes.clone();
+                want.sort_unstable_by_key(|l| (l.sub, l.rollout));
+                ensure_eq(seen, want, "lane coverage")?;
+                for c in &calls {
+                    ensure(c.lanes.len() <= *b, "call exceeds batch_infer")?;
+                    ensure(c.seq_len <= max_seq, "seq_len beyond max_seq")?;
+                    ensure(
+                        c.seq_len % *grain == 0 || c.seq_len == max_seq,
+                        "seq_len off the bucket grain",
+                    )?;
+                    for l in &c.lanes {
+                        ensure(l.len <= c.seq_len, "lane longer than its call frame")?;
+                    }
+                }
+                // Deterministic: arrival order must not change the plan.
+                let mut shuffled = lanes.clone();
+                Rng::new(0xD15C0).shuffle(&mut shuffled);
+                ensure_eq(
+                    plan_prefills(shuffled, *b, *grain, max_seq),
+                    calls,
+                    "plan depends on arrival order",
+                )
+            },
+        );
+    }
+}

@@ -128,6 +128,18 @@ impl Validator {
 
         for w in &sub.rollouts {
             let r = &w.rollout;
+            // The wire schema only guarantees prompt_len < max(len, 1), so
+            // a crafted rollout can arrive with no tokens at all — reject
+            // before the slicing below can panic on it.
+            if r.tokens.is_empty() {
+                return Err(Rejection::ValueBounds("empty token list".into()));
+            }
+            // A zero prompt_len would send the sampling check to the
+            // logits row at position -1 (usize underflow); honest prompts
+            // always lead with BOS, so prompt_len >= 1.
+            if r.prompt_len == 0 {
+                return Err(Rejection::ValueBounds("zero prompt_len".into()));
+            }
             if !crate::rl::reward::reward_in_bounds(reward_cfg, r.reward, max_completion) {
                 return Err(Rejection::ValueBounds(format!("reward {}", r.reward)));
             }
@@ -213,6 +225,14 @@ impl Validator {
         // of the model's own distributions. A worker decoding with a
         // different (smaller) model lands most tokens in the claimed
         // model's low tail — observed >> expected.
+        //
+        // Validator hot loop: p(sampled), the tail mass and the reported-
+        // prob error are computed in two passes over each vocab row with no
+        // per-token allocation (previously: separate max / normalizer /
+        // materialized-probability-vector / tail-filter passes plus a
+        // Vec<f64> per completion token). The exact tail mass needs the
+        // softmax normalizer first, so two passes is the floor; the first
+        // pass folds max and normalizer together with online rescaling.
         let t = self.cfg.low_prob_threshold;
         let mut low = 0usize;
         let mut expected_low = 0.0f64;
@@ -220,11 +240,34 @@ impl Validator {
         for j in 0..r.completion_len() {
             let pos = r.prompt_len + j; // token index being predicted
             let row = &logits[(pos - 1) * vocab..pos * vocab];
-            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let z: f64 = row.iter().map(|&l| ((l - max) as f64).exp()).sum();
-            let probs: Vec<f64> = row.iter().map(|&l| ((l - max) as f64).exp() / z).collect();
-            let p = probs[r.tokens[pos] as usize] as f32;
-            expected_low += probs.iter().filter(|&&q| q < t as f64).sum::<f64>();
+            // Pass 1: streaming softmax — running max m and z = Σ exp(l-m).
+            let mut m = f32::NEG_INFINITY;
+            let mut z = 0.0f64;
+            for &l in row {
+                if l > m {
+                    z = z * ((m - l) as f64).exp() + 1.0;
+                    m = l;
+                } else if l > f32::NEG_INFINITY || m > f32::NEG_INFINITY {
+                    z += ((l - m) as f64).exp();
+                }
+                // else: both -inf — contributes nothing, and (l - m)
+                // would be NaN and poison z (the old global-max code
+                // treated -inf logits as probability 0; keep that).
+            }
+            // Pass 2: p(sampled) and the sub-threshold tail mass.
+            let sampled = r.tokens[pos] as usize;
+            let mut p = 0.0f32;
+            let mut tail = 0.0f64;
+            for (i, &l) in row.iter().enumerate() {
+                let q = ((l - m) as f64).exp() / z;
+                if q < t as f64 {
+                    tail += q;
+                }
+                if i == sampled {
+                    p = q as f32;
+                }
+            }
+            expected_low += tail;
             if p < t {
                 low += 1;
             }
@@ -236,8 +279,10 @@ impl Validator {
         if (low as f64) > 3.0 * expected_low + 0.25 * n + 2.0 {
             return Err(Rejection::SamplingBimodal { low_frac: low as f64 / n });
         }
-        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = errs[errs.len() / 2];
+        // Median via selection instead of a full sort of the error vector.
+        let mid = errs.len() / 2;
+        let (_, median, _) = errs.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        let median = *median;
         if median > self.cfg.prob_median_tol {
             return Err(Rejection::ProbMismatch { median_err: median });
         }
@@ -305,6 +350,24 @@ mod tests {
         let mut w = wire(vec![1, 3, 4, 5, 6], 1, false, 0.0);
         w.rollout.sampled_probs = vec![0.125; 4];
         let logits = vec![0.0f32; 5 * vocab];
+        v.check_sampling(&w, &logits, vocab).unwrap();
+    }
+
+    #[test]
+    fn sampling_check_tolerates_neg_infinity_logits() {
+        // A row *leading* with -inf seeds the streaming pass with
+        // m = l = -inf; the rescale must not poison z with NaN (which
+        // would panic the median selection). -inf logits are probability
+        // 0, as the old global-max implementation computed.
+        let v = Validator::new(ValidatorConfig::default());
+        let vocab = 8;
+        let mut w = wire(vec![1, 3, 4, 5, 6], 1, false, 0.0);
+        let mut logits = vec![0.0f32; 5 * vocab];
+        for t in 0..5 {
+            logits[t * vocab] = f32::NEG_INFINITY;
+        }
+        // Mass is uniform over the remaining 7 tokens.
+        w.rollout.sampled_probs = vec![1.0 / 7.0; 4];
         v.check_sampling(&w, &logits, vocab).unwrap();
     }
 
@@ -409,6 +472,28 @@ mod tests {
         bounds.rollouts[1].rollout.reward = 42.0;
         assert!(matches!(
             v.check_sanity(&bounds, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::ValueBounds(_))
+        ));
+
+        // Empty token list: decodes (prompt_len 0 < max(len, 1)) but must
+        // be rejected, not panic the special-token slice below it.
+        let mut hollow = sub.clone();
+        hollow.rollouts[1].rollout.tokens = Vec::new();
+        hollow.rollouts[1].rollout.prompt_len = 0;
+        hollow.rollouts[1].rollout.sampled_probs = Vec::new();
+        assert!(matches!(
+            v.check_sanity(&hollow, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::ValueBounds(_))
+        ));
+
+        // Zero prompt_len with real tokens: would underflow the sampling
+        // check's position arithmetic — rejected here instead.
+        let mut headless = sub.clone();
+        let n_toks = headless.rollouts[0].rollout.tokens.len();
+        headless.rollouts[0].rollout.prompt_len = 0;
+        headless.rollouts[0].rollout.sampled_probs = vec![0.5; n_toks];
+        assert!(matches!(
+            v.check_sanity(&headless, &dataset, &reward_cfg, 3, 128),
             Err(Rejection::ValueBounds(_))
         ));
     }

@@ -1,7 +1,13 @@
 //! Criterion-style bench harness (criterion itself is not in the offline
 //! crate set). `cargo bench` targets use `harness = false` and drive this.
+//! [`BenchReport`] additionally serializes results + named metrics to
+//! `BENCH_<name>.json` so the perf trajectory is tracked across PRs (CI
+//! uploads these files as workflow artifacts).
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -106,6 +112,69 @@ impl Bencher {
     }
 }
 
+/// Machine-readable bench output: collects [`BenchResult`]s plus named
+/// scalar metrics (speedups, items/sec) and writes `BENCH_<name>.json`.
+/// Destination directory: `$BENCH_JSON_DIR`, defaulting to the working
+/// directory (`rust/` under `cargo bench`).
+pub struct BenchReport {
+    name: String,
+    results: Vec<Json>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a timed result (call with what `Bencher::run` returned).
+    pub fn record(&mut self, r: &BenchResult) {
+        self.results.push(Json::obj(vec![
+            ("name", r.name.as_str().into()),
+            ("iters", r.iters.into()),
+            ("mean_ns", r.mean_ns.into()),
+            ("p50_ns", r.p50_ns.into()),
+            ("p95_ns", r.p95_ns.into()),
+            ("min_ns", r.min_ns.into()),
+            (
+                "throughput",
+                match r.throughput {
+                    Some((v, unit)) => {
+                        Json::obj(vec![("value", v.into()), ("unit", unit.into())])
+                    }
+                    None => Json::Null,
+                },
+            ),
+        ]));
+    }
+
+    /// Record a named scalar metric (a speedup, a rollouts/sec figure...).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path written.
+    pub fn write_to(&self, dir: &str) -> anyhow::Result<PathBuf> {
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        let json = Json::obj(vec![
+            ("bench", self.name.as_str().into()),
+            ("results", Json::Arr(self.results.clone())),
+            (
+                "metrics",
+                Json::Obj(self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+            ),
+        ]);
+        std::fs::write(&path, format!("{json}\n"))?;
+        Ok(path)
+    }
+
+    /// Write to `$BENCH_JSON_DIR` (default: working directory).
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        self.write_to(&dir)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +187,29 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns >= r.min_ns);
+    }
+
+    #[test]
+    fn report_emits_json() {
+        let b = Bencher { warmup_iters: 0, measure_iters: 2, max_seconds: 1.0 };
+        let mut rep = BenchReport::new("selftest");
+        let r = b.run_throughput("noop", 10.0, "items", || {
+            std::hint::black_box(1 + 1);
+        });
+        rep.record(&r);
+        rep.metric("speedup", 2.5);
+        let dir = std::env::temp_dir();
+        let path = rep.write_to(dir.to_str().unwrap()).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_selftest.json");
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("selftest"));
+        assert_eq!(
+            parsed.path(&["metrics", "speedup"]).and_then(Json::as_f64),
+            Some(2.5)
+        );
+        let first = parsed.get("results").and_then(|r| r.idx(0)).unwrap();
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("noop"));
+        assert!(first.path(&["throughput", "value"]).and_then(Json::as_f64).unwrap() > 0.0);
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,18 +1,26 @@
 //! Minimal thread pool (no rayon/tokio offline). Owns N workers pulling
-//! boxed jobs from a shared queue; `scope`-style join via completion count.
+//! boxed jobs from a shared queue; `scope`-style join via completion count
+//! under a condvar (waiters sleep until the last job signals, instead of
+//! the 200 µs spin-poll this replaces).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// (submitted, completed) job counts, guarded together so `wait_idle`'s
+/// check-then-wait can't lose a wakeup.
+struct Counts {
+    counts: Mutex<(u64, u64)>,
+    idle: Condvar,
+}
+
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    submitted: Arc<AtomicU64>,
-    completed: Arc<AtomicU64>,
+    state: Arc<Counts>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -20,21 +28,39 @@ impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let submitted = Arc::new(AtomicU64::new(0));
-        let completed = Arc::new(AtomicU64::new(0));
+        let state = Arc::new(Counts { counts: Mutex::new((0, 0)), idle: Condvar::new() });
         let shutdown = Arc::new(AtomicBool::new(false));
         let workers = (0..n.max(1))
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
-                let completed = Arc::clone(&completed);
+                let state = Arc::clone(&state);
                 std::thread::Builder::new()
                     .name(format!("i2-pool-{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(job) => {
-                                job();
-                                completed.fetch_add(1, Ordering::SeqCst);
+                                // Panic firewall: a panicking job must not
+                                // kill the worker (stranding queued jobs)
+                                // or skip the completion tick (deadlocking
+                                // wait_idle forever). It counts as
+                                // completed; its result slot stays empty
+                                // for the submitter to handle.
+                                let panicked = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                )
+                                .is_err();
+                                if panicked {
+                                    crate::warn!("pool", "job panicked (counted as completed)");
+                                }
+                                // The job (and everything it captured) is
+                                // dropped before the count ticks, so a
+                                // woken waiter observes fully-released jobs.
+                                let mut c = state.counts.lock().unwrap();
+                                c.1 += 1;
+                                if c.1 == c.0 {
+                                    state.idle.notify_all();
+                                }
                             }
                             Err(_) => break,
                         }
@@ -42,18 +68,20 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, submitted, completed, shutdown }
+        ThreadPool { tx: Some(tx), workers, state, shutdown }
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.state.counts.lock().unwrap().0 += 1;
         self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
     }
 
-    /// Block until every submitted job has completed.
+    /// Block until every submitted job has completed (condvar-woken by the
+    /// job that drains the queue).
     pub fn wait_idle(&self) {
-        while self.completed.load(Ordering::SeqCst) < self.submitted.load(Ordering::SeqCst) {
-            std::thread::sleep(std::time::Duration::from_micros(200));
+        let mut c = self.state.counts.lock().unwrap();
+        while c.1 < c.0 {
+            c = self.state.idle.wait(c).unwrap();
         }
     }
 
@@ -109,6 +137,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn executes_all_jobs() {
@@ -135,5 +164,42 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_wait_idle() {
+        // The validation pipeline blocks in wait_idle every wave over
+        // attacker-controlled inputs: a panicking job must count as
+        // completed and leave the worker alive for the jobs behind it.
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("hostile input"));
+        for _ in 0..3 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must return despite the panic
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn wait_idle_across_waves() {
+        // No jobs: returns immediately. Then several submit/wait waves on
+        // the same pool (the validation pipeline's usage pattern).
+        let pool = ThreadPool::new(3);
+        pool.wait_idle();
+        let counter = Arc::new(AtomicU64::new(0));
+        for wave in 1..=4u64 {
+            for _ in 0..25 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::SeqCst), wave * 25);
+        }
     }
 }

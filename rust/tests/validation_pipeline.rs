@@ -1,0 +1,337 @@
+//! Equivalence tests for the parallel, length-bucketed validation
+//! pipeline: packed/bucketed/threaded validation must produce verdicts
+//! byte-identical to the sequential single-submission full-pad reference
+//! on mixed honest/cheating submissions — and therefore identical
+//! accept/slash/stale counters — regardless of thread count or bucket
+//! grain.
+
+use std::sync::Arc;
+
+use intellect2::config::RunConfig;
+use intellect2::coordinator::validation::{
+    validate_submission_fullpad, ValidationPipeline, Verdict,
+};
+use intellect2::coordinator::{group_id_base, RolloutGenerator};
+use intellect2::rl::rollout_file::Submission;
+use intellect2::runtime::{EngineHost, ParamSet, Runtime};
+use intellect2::tasks::dataset::{Dataset, DatasetConfig};
+use intellect2::toploc::{Validator, ValidatorConfig};
+use intellect2::util::prop::{check, ensure_eq};
+use intellect2::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    Runtime::artifacts_dir("nano").join("spec.json").exists()
+}
+
+struct Fixture {
+    host: Arc<EngineHost>,
+    dataset: Arc<Dataset>,
+    cfg: RunConfig,
+    /// The trusted checkpoint, registered as policy version 1.
+    params: Arc<ParamSet>,
+    /// Honest submissions from 3 nodes x 2 submission indices, policy
+    /// version 1 (mixed lengths via sampled EOS terminations).
+    honest: Vec<Submission>,
+    /// Honest submission claiming policy version 0 — aged out of the
+    /// versions map by the time it is validated (stale, not slashable).
+    old: Submission,
+    /// Honest-looking submission claiming version 5, which the trainer
+    /// never published (provably fabricated).
+    future: Submission,
+}
+
+impl Fixture {
+    fn build() -> Fixture {
+        let cfg = RunConfig {
+            model: "nano".into(),
+            group_size: 2,
+            max_new_tokens: 14,
+            n_math: 40,
+            n_code: 8,
+            ..Default::default()
+        };
+        let host = Arc::new(EngineHost::spawn_size(&cfg.model).unwrap());
+        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
+            seed: cfg.seed,
+            n_math: cfg.n_math,
+            n_code: cfg.n_code,
+            ..Default::default()
+        }));
+        let generator = RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg);
+        let params = Arc::new(host.init_params(9).unwrap());
+        let mut honest = Vec::new();
+        for node in [11u64, 22, 33] {
+            for idx in 0..2u64 {
+                honest.push(
+                    generator
+                        .generate_submission(
+                            &params,
+                            node,
+                            1,
+                            idx,
+                            2,
+                            cfg.group_size,
+                            group_id_base(node, 1, idx),
+                        )
+                        .unwrap(),
+                );
+            }
+        }
+        // Self-consistent (seed formula, group ids) at their claimed
+        // steps, so they pass the CPU stages and exercise the
+        // version-miss paths instead of SeedMismatch.
+        let old = generator
+            .generate_submission(&params, 44, 0, 0, 2, cfg.group_size, group_id_base(44, 0, 0))
+            .unwrap();
+        let future = generator
+            .generate_submission(&params, 55, 5, 0, 2, cfg.group_size, group_id_base(55, 5, 0))
+            .unwrap();
+        Fixture { host, dataset, cfg, params, honest, old, future }
+    }
+
+    fn vcfg(&self) -> ValidatorConfig {
+        ValidatorConfig {
+            expected_group: self.cfg.group_size,
+            max_policy_lag: self.cfg.async_level,
+            ..Default::default()
+        }
+    }
+
+    fn lookup(&self) -> impl Fn(u64) -> Option<Arc<ParamSet>> + '_ {
+        |v| (v == 1).then(|| Arc::clone(&self.params))
+    }
+
+    /// The sequential pre-pipeline reference, one submission at a time.
+    fn fullpad_verdicts(&self, batch: &[Vec<u8>], current: u64) -> Vec<Verdict> {
+        let validator = Validator::new(self.vcfg());
+        batch
+            .iter()
+            .map(|bytes| {
+                validate_submission_fullpad(
+                    &validator,
+                    bytes,
+                    &self.dataset,
+                    &self.cfg.reward,
+                    &self.host,
+                    self.host.spec(),
+                    self.cfg.max_new_tokens,
+                    &|| current,
+                    &self.lookup(),
+                )
+            })
+            .collect()
+    }
+
+    fn pipeline(&self, threads: usize, bucket: usize) -> ValidationPipeline {
+        ValidationPipeline::new(
+            Validator::new(self.vcfg()),
+            Arc::clone(&self.dataset),
+            self.cfg.reward.clone(),
+            Arc::clone(&self.host),
+            self.cfg.max_new_tokens,
+            threads,
+            bucket,
+        )
+    }
+}
+
+fn fingerprints(verdicts: &[Verdict]) -> Vec<(&'static str, Option<u64>, String)> {
+    verdicts.iter().map(Verdict::fingerprint).collect()
+}
+
+/// What the swarm loop would do with these verdicts — the counters the
+/// multi-threaded validator must keep identical to the sequential path.
+fn counters(verdicts: &[Verdict]) -> (u64, u64, u64, u64, u64, u64, u64) {
+    let (mut accepted, mut verified, mut rejected, mut slashed) = (0, 0, 0, 0);
+    let (mut unattributed, mut stale, mut stale_rollouts) = (0, 0, 0);
+    for v in verdicts {
+        match v {
+            Verdict::Accept(sub) => {
+                accepted += 1;
+                verified += sub.rollouts.len() as u64;
+            }
+            Verdict::Stale { n_rollouts, .. } => {
+                stale += 1;
+                stale_rollouts += *n_rollouts as u64;
+            }
+            Verdict::EngineFailure { .. } => {}
+            Verdict::Reject { node, .. } => {
+                rejected += 1;
+                match node {
+                    Some(_) => slashed += 1,
+                    None => unattributed += 1,
+                }
+            }
+        }
+    }
+    (accepted, verified, rejected, slashed, unattributed, stale, stale_rollouts)
+}
+
+/// A deterministic mixed batch: honest + every cheating/staleness flavor.
+fn mixed_batch(fx: &Fixture) -> Vec<Vec<u8>> {
+    let mut batch: Vec<Vec<u8>> = fx.honest.iter().map(Submission::encode).collect();
+
+    // Reward hacking (stage-2 reject): claim every task solved.
+    let mut liar = fx.honest[0].clone();
+    for w in &mut liar.rollouts {
+        w.rollout.task_reward = 1.0;
+        w.rollout.reward = 1.0;
+    }
+    batch.push(liar.encode());
+
+    // Tampered commitment (stage-4 reject) on a non-first rollout, so the
+    // min-rollout-index attribution is exercised.
+    let mut forged = fx.honest[1].clone();
+    forged.commitment_tamper(2);
+    batch.push(forged.encode());
+
+    // Fabricated probability reports (stage-5 reject).
+    let mut fabricated = fx.honest[2].clone();
+    for w in &mut fabricated.rollouts {
+        for p in &mut w.rollout.sampled_probs {
+            *p = 0.97;
+        }
+    }
+    batch.push(fabricated.encode());
+
+    // Aged-out policy version (version-miss -> stale, not slashable).
+    batch.push(fx.old.encode());
+
+    // Unpublished future version (version-miss -> provably fabricated).
+    batch.push(fx.future.encode());
+
+    // Mangled beyond attribution (checksum broken).
+    let mut mangled = fx.honest[5].encode();
+    let mid = mangled.len() / 2;
+    mangled[mid] ^= 0x55;
+    batch.push(mangled);
+
+    batch
+}
+
+/// Test-local helper: corrupt one rollout's commitment bytes.
+trait CommitmentTamper {
+    fn commitment_tamper(&mut self, rollout: usize);
+}
+
+impl CommitmentTamper for Submission {
+    fn commitment_tamper(&mut self, rollout: usize) {
+        let r = rollout.min(self.rollouts.len() - 1);
+        for b in &mut self.rollouts[r].commitment {
+            *b = b.wrapping_add(31);
+        }
+    }
+}
+
+#[test]
+fn packed_pipeline_matches_fullpad_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let batch = mixed_batch(&fx);
+    let want = fingerprints(&fx.fullpad_verdicts(&batch, 1));
+    // Sanity on the mix itself: accepts, rejects (attributed and not) and
+    // stales are all present, so the equivalence below is non-trivial.
+    let (accepted, _, rejected, slashed, unattributed, stale, _) =
+        counters(&fx.fullpad_verdicts(&batch, 1));
+    assert!(accepted >= 1, "no honest submission accepted: {want:?}");
+    assert!(rejected >= 4 && slashed >= 3 && unattributed >= 1, "mix degenerated: {want:?}");
+    assert!(stale >= 1, "no stale verdict in the mix: {want:?}");
+
+    // Threaded + packed + bucketed, across thread counts and bucket
+    // grains: verdicts must be byte-identical to the reference.
+    for (threads, bucket) in [(1usize, 0usize), (4, 0), (4, 1), (4, 4096), (2, 7)] {
+        let pipeline = fx.pipeline(threads, bucket);
+        let got = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
+        assert_eq!(
+            fingerprints(&got),
+            want,
+            "pipeline(threads={threads}, bucket={bucket}) diverged from reference"
+        );
+    }
+
+    // Packing really packed: 11 submissions survive to at most a handful
+    // of prefill calls (the baseline issues one full-frame call per
+    // submission that reaches stages 4–5).
+    let pipeline = fx.pipeline(4, 0);
+    let _ = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
+    let calls = pipeline.prefill_calls.get();
+    assert!(
+        (1..=3).contains(&calls),
+        "expected the wave to pack into 1..=3 prefill calls, got {calls}"
+    );
+}
+
+#[test]
+fn threaded_counters_match_sequential() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let batch = mixed_batch(&fx);
+    let sequential = fx.pipeline(1, 0).validate_batch(batch.clone(), &|| 1, &fx.lookup());
+    let threaded = fx.pipeline(4, 0).validate_batch(batch, &|| 1, &fx.lookup());
+    assert_eq!(counters(&sequential), counters(&threaded));
+    assert_eq!(fingerprints(&sequential), fingerprints(&threaded));
+}
+
+#[test]
+fn pipeline_equivalence_property_random_tampers() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    // Property: for any per-submission tamper assignment, the packed
+    // pipeline's verdicts equal the full-pad reference's.
+    check(
+        "packed pipeline == full-pad reference under random tampering",
+        6,
+        |rng: &mut Rng, _size| {
+            fx.honest
+                .iter()
+                .map(|sub| {
+                    let mut sub = sub.clone();
+                    match rng.usize(6) {
+                        0 => {} // honest
+                        1 => {
+                            for w in &mut sub.rollouts {
+                                w.rollout.task_reward = 1.0;
+                                w.rollout.reward = 1.0;
+                            }
+                        }
+                        2 => sub.commitment_tamper(rng.usize(sub.rollouts.len())),
+                        3 => {
+                            let r = rng.usize(sub.rollouts.len());
+                            for p in &mut sub.rollouts[r].rollout.sampled_probs {
+                                *p = 0.93;
+                            }
+                        }
+                        4 => sub = fx.old.clone(),
+                        _ => sub = fx.future.clone(),
+                    }
+                    sub.encode()
+                })
+                .map(DebugBytes)
+                .collect::<Vec<_>>()
+        },
+        |batch| {
+            let bytes: Vec<Vec<u8>> = batch.iter().map(|b| b.0.clone()).collect();
+            let want = fingerprints(&fx.fullpad_verdicts(&bytes, 1));
+            let got = fx.pipeline(4, 0).validate_batch(bytes, &|| 1, &fx.lookup());
+            ensure_eq(fingerprints(&got), want, "pipeline diverged")
+        },
+    );
+}
+
+/// Wrapper so the prop harness can Debug-print failing inputs tersely.
+struct DebugBytes(Vec<u8>);
+
+impl std::fmt::Debug for DebugBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "<{} submission bytes>", self.0.len())
+    }
+}

@@ -1,0 +1,92 @@
+//! Bench-regression comparator for CI: diff the previous run's
+//! `BENCH_*.json` artifacts against the current run's and warn (GitHub
+//! `::warning::` annotations) when a higher-is-better figure drops past
+//! the threshold. Advisory by default — the perf trajectory should gate
+//! merges only once the runners are stable enough to trust; pass
+//! `--fail-on-regression` to make it binding.
+//!
+//!   bench_compare --old prev-bench/ --new . [--threshold-pct 15]
+//!                 [--fail-on-regression]
+
+use std::path::Path;
+
+use intellect2::util::bench::compare_bench_docs;
+use intellect2::util::cli::Args;
+use intellect2::util::json::Json;
+
+fn load_bench_docs(dir: &str) -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(entry.path()) else {
+            continue;
+        };
+        match Json::parse(&text) {
+            Ok(doc) => out.push((name, doc)),
+            Err(e) => eprintln!("::warning::{name}: unparseable bench JSON ({e})"),
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+fn main() -> std::process::ExitCode {
+    let args = Args::from_env();
+    let old_dir = args.str_or("old", "prev-bench");
+    let new_dir = args.str_or("new", ".");
+    let threshold = args.f64_or("threshold-pct", 15.0) / 100.0;
+    let binding = args.has_flag("fail-on-regression");
+
+    if !Path::new(&old_dir).is_dir() {
+        // First run on a branch, expired artifacts, or history disabled:
+        // nothing to compare against is not a failure.
+        println!("bench_compare: no baseline directory {old_dir:?}; skipping comparison");
+        return std::process::ExitCode::SUCCESS;
+    }
+    let old = load_bench_docs(&old_dir);
+    let new = load_bench_docs(&new_dir);
+    if old.is_empty() || new.is_empty() {
+        println!(
+            "bench_compare: nothing to compare (old: {} files, new: {} files)",
+            old.len(),
+            new.len()
+        );
+        return std::process::ExitCode::SUCCESS;
+    }
+
+    let mut regressions = 0usize;
+    for (name, new_doc) in &new {
+        let Some((_, old_doc)) = old.iter().find(|(n, _)| n == name) else {
+            println!("{name}: no baseline (new bench)");
+            continue;
+        };
+        for d in compare_bench_docs(old_doc, new_doc) {
+            let pct = d.delta_frac * 100.0;
+            println!("{name}: {:<40} {:>12.2} -> {:>12.2}  ({pct:+.1}%)", d.key, d.old, d.new);
+            if d.regressed(threshold) {
+                regressions += 1;
+                let direction = if d.lower_is_better { "rose" } else { "dropped" };
+                println!(
+                    "::warning::bench regression in {name}: {} {direction} {:.1}% \
+                     ({:.2} -> {:.2}, threshold {:.0}%)",
+                    d.key,
+                    pct.abs(),
+                    d.old,
+                    d.new,
+                    threshold * 100.0
+                );
+            }
+        }
+    }
+    if regressions > 0 && binding {
+        eprintln!("bench_compare: {regressions} regression(s) past threshold");
+        return std::process::ExitCode::FAILURE;
+    }
+    std::process::ExitCode::SUCCESS
+}

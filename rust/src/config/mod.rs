@@ -12,9 +12,14 @@
 //! - `origin-egress-bps`: shaped origin uplink in bytes/sec (0 = unshaped)
 //!   so broadcast time is non-trivial like the paper's WAN links (§4.2).
 //! - `validator-threads`: CPU-stage fan-out of the TOPLOC validation
-//!   pipeline (stages 1–3 run across this many pool threads; <=1 = inline).
+//!   pipeline (stages 0–3 run across this many pool threads; <=1 = inline).
 //! - `prefill-bucket-tokens`: length-bucket grain for validator prefill
 //!   padding, in tokens (0 = the model's TOPLOC commit interval).
+//! - `require-signed-submissions`: verify every rollout upload's envelope
+//!   signature against the ledger's key registry before any other
+//!   validation (stage 0). Default on — the real swarm slashes on proven
+//!   attribution only; `--require-signed-submissions false` restores the
+//!   legacy trust-the-claimed-address behavior for old fixtures.
 
 use crate::rl::reward::RewardConfig;
 use crate::runtime::GrpoHp;
@@ -63,6 +68,10 @@ pub struct RunConfig {
     /// multiple of this. 0 = the model's TOPLOC commit interval (so commit
     /// rows always land inside the padded frame).
     pub prefill_bucket_tokens: usize,
+    /// Verify submission-envelope signatures (stage 0) against the
+    /// ledger's key registry; slash only on proven attribution. On by
+    /// default for the real swarm; turn off for legacy unsigned fixtures.
+    pub require_signed_submissions: bool,
     pub lr_warmup_steps: u64,
     /// Offline difficulty filter (pass@k band) applied before training.
     pub offline_filter: bool,
@@ -94,6 +103,7 @@ impl Default for RunConfig {
             broadcast_timeout_secs: 60,
             validator_threads: 4,
             prefill_bucket_tokens: 0,
+            require_signed_submissions: true,
             lr_warmup_steps: 5,
             offline_filter: false,
         }
@@ -131,6 +141,8 @@ impl RunConfig {
         self.broadcast_timeout_secs = a.u64_or("broadcast-timeout-secs", self.broadcast_timeout_secs);
         self.validator_threads = a.usize_or("validator-threads", self.validator_threads);
         self.prefill_bucket_tokens = a.usize_or("prefill-bucket-tokens", self.prefill_bucket_tokens);
+        self.require_signed_submissions =
+            a.bool_or("require-signed-submissions", self.require_signed_submissions);
         if a.has_flag("offline-filter") {
             self.offline_filter = true;
         }
@@ -185,7 +197,8 @@ mod tests {
         let a = Args::parse(
             "--model micro --async-level 4 --lr 0.001 --target-short \
              --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000 \
-             --validator-threads 8 --prefill-bucket-tokens 64"
+             --validator-threads 8 --prefill-bucket-tokens 64 \
+             --require-signed-submissions false"
                 .split_whitespace()
                 .map(str::to_string),
         );
@@ -199,6 +212,9 @@ mod tests {
         assert_eq!(c.origin_egress_bps, 5000);
         assert_eq!(c.validator_threads, 8);
         assert_eq!(c.prefill_bucket_tokens, 64);
+        assert!(!c.require_signed_submissions);
+        // Default: signatures required.
+        assert!(RunConfig::default().require_signed_submissions);
     }
 
     #[test]

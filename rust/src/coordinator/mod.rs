@@ -15,4 +15,4 @@ pub use gen::{group_id_base, RolloutGenerator};
 pub use step::{filter_groups, record_step, FilterOutcome};
 pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};
 pub use sync_driver::SyncPipeline;
-pub use validation::{SubmissionQueue, ValidationPipeline, Verdict};
+pub use validation::{ReplayGuard, SigOracle, SubmissionQueue, ValidationPipeline, Verdict};

@@ -16,6 +16,16 @@
 //! [`SubmissionQueue`], CPU checks fan out across `validator-threads`
 //! pool workers, and prefill calls pack rollouts from many submissions
 //! into `batch_infer` lanes padded only to their bucket's length.
+//!
+//! Every upload is a signed envelope (§2.4.1): workers sign at upload
+//! time with their node key, and the validator's stage 0 verifies the
+//! signature against the ledger's key registry before any other work —
+//! slashing acts on *proven* attribution, unsigned/forged uploads are
+//! counted and dropped, and replays are closed from both ends: an old
+//! envelope ages out with the staleness window because the signature
+//! binds the policy step, and an in-window re-post is deduplicated by a
+//! first-seen `ReplayGuard` on `(node, step, submission_idx)`
+//! (`require-signed-submissions` knob, on by default).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -65,6 +75,21 @@ pub struct SwarmStats {
     /// Rejected submissions whose sender could not be attributed from the
     /// envelope (nothing to slash).
     pub submissions_unattributed: Counter,
+    /// Uploads rejected in stage 0 because signing is required and no
+    /// envelope was present. Never slashed — there is nobody to hold
+    /// accountable for anonymous bytes.
+    pub submissions_unsigned: Counter,
+    /// Uploads rejected in stage 0 because the envelope does not prove its
+    /// claimed sender (unregistered address, bad signature, or payload not
+    /// matching the signed digest). Never slashed against the claimed
+    /// address — that is the framing attack signing exists to close.
+    pub submissions_forged: Counter,
+    /// Fully-valid submissions dropped because their exact
+    /// `(node, step, submission_idx)` identity was already accepted this
+    /// window (`ReplayGuard`): re-posting a captured envelope must not
+    /// double-weight a node's rollouts. Not slashed — the bytes are
+    /// genuine, and the replayer may not be the signer.
+    pub submissions_replayed: Counter,
     /// Uploads shed unvalidated because the ingest queue was full
     /// (oldest-first; a sustained non-zero rate means the validation
     /// pipeline is under-provisioned — raise `validator-threads`).
@@ -335,8 +360,11 @@ impl Swarm {
             };
             let max_new = cfg.max_new_tokens;
             let (threads, bucket) = (cfg.validator_threads, cfg.prefill_bucket_tokens);
+            let require_signed = cfg.require_signed_submissions;
+            let async_level = cfg.async_level;
+            let keys_ledger = ledger.clone();
             std::thread::Builder::new().name("i2-validator".into()).spawn(move || {
-                let pipeline = ValidationPipeline::new(
+                let mut pipeline = ValidationPipeline::new(
                     Validator::new(vcfg),
                     dataset,
                     reward_cfg,
@@ -345,6 +373,20 @@ impl Swarm {
                     threads,
                     bucket,
                 );
+                if require_signed {
+                    // Stage 0: envelope signatures verified against the
+                    // ledger's key registry (key bytes never leave the
+                    // ledger); slashing needs proof.
+                    pipeline = pipeline.with_signing(Arc::new(
+                        move |addr, msg: &[u8], sig: &[u8; 32]| {
+                            keys_ledger.check_address_sig(addr, msg, sig)
+                        },
+                    ));
+                }
+                // In-window replay dedup: a captured valid envelope can be
+                // re-posted before its step ages out; each (node, step,
+                // idx) identity may be buffered at most once.
+                let mut replay_guard = crate::coordinator::validation::ReplayGuard::new();
                 while !shared.stop.load(Ordering::SeqCst) {
                     // Condvar-woken (a /submit wakes us immediately); the
                     // timeout only bounds how long a stop takes to notice.
@@ -357,9 +399,28 @@ impl Swarm {
                     let current = || shared.current_step.load(Ordering::SeqCst);
                     let versions =
                         |v: u64| shared.versions.lock().unwrap().get(&v).cloned();
+                    replay_guard.advance(current().saturating_sub(async_level));
                     for verdict in pipeline.validate_batch(wave, &current, &versions) {
                         match verdict {
                             Verdict::Accept(sub) => {
+                                if !replay_guard.first_sighting(
+                                    sub.node_address,
+                                    sub.step,
+                                    sub.submission_idx,
+                                ) {
+                                    // Genuine bytes, already consumed:
+                                    // dropped + counted, never slashed
+                                    // (the replayer may not be the signer).
+                                    shared.stats.submissions_replayed.inc();
+                                    crate::warn!(
+                                        "validator",
+                                        "dropping replayed submission (node {}, step {}, idx {})",
+                                        sub.node_address,
+                                        sub.step,
+                                        sub.submission_idx
+                                    );
+                                    continue;
+                                }
                                 let n = sub.rollouts.len();
                                 shared.stats.submissions_accepted.inc();
                                 shared.stats.rollouts_verified.add(n as u64);
@@ -419,6 +480,26 @@ impl Swarm {
                                 crate::warn!(
                                     "validator",
                                     "rejecting unattributable submission: {why}"
+                                );
+                            }
+                            Verdict::Unsigned { why } => {
+                                // Signature required, none present: counted
+                                // and dropped — anonymous bytes slash nobody.
+                                shared.stats.submissions_rejected.inc();
+                                shared.stats.submissions_unsigned.inc();
+                                crate::warn!(
+                                    "validator",
+                                    "rejecting unsigned submission: {why}"
+                                );
+                            }
+                            Verdict::Forged { claimed, why } => {
+                                // Unprovable envelope: the claimed address
+                                // is a log detail, never a slash target.
+                                shared.stats.submissions_rejected.inc();
+                                shared.stats.submissions_forged.inc();
+                                crate::warn!(
+                                    "validator",
+                                    "rejecting forged submission claiming node {claimed}: {why}"
                                 );
                             }
                         }
@@ -524,13 +605,21 @@ impl Swarm {
                                 );
                                 if is_evil {
                                     // Tamper: claim every rollout solved the
-                                    // task (reward hacking attempt).
+                                    // task (reward hacking attempt). The evil
+                                    // worker still signs its upload — which
+                                    // is what turns its slash from claimed to
+                                    // *proven* attribution.
                                     for w in &mut sub.rollouts {
                                         w.rollout.task_reward = 1.0;
                                         w.rollout.reward = 1.0;
                                     }
                                 }
-                                let _ = http.post(&format!("{step_url}/submit"), sub.encode());
+                                // Sign at upload time (§2.4.1): the envelope
+                                // binds node, step, idx and payload digest.
+                                let _ = http.post(
+                                    &format!("{step_url}/submit"),
+                                    worker.sign_submission(&sub),
+                                );
                             }
                             Err(e) => {
                                 crate::warn!("worker", "generate: {e}");
@@ -658,6 +747,9 @@ impl Shared {
         s.submissions_rejected.add(self.stats.submissions_rejected.get());
         s.submissions_stale.add(self.stats.submissions_stale.get());
         s.submissions_unattributed.add(self.stats.submissions_unattributed.get());
+        s.submissions_unsigned.add(self.stats.submissions_unsigned.get());
+        s.submissions_forged.add(self.stats.submissions_forged.get());
+        s.submissions_replayed.add(self.stats.submissions_replayed.get());
         s.submissions_shed.add(self.stats.submissions_shed.get());
         s.submissions_engine_failed.add(self.stats.submissions_engine_failed.get());
         s.rollouts_verified.add(self.stats.rollouts_verified.get());

@@ -3,8 +3,15 @@
 //! single-threaded pad-everything-to-`max_seq` path is replaced by a
 //! two-stage pipeline over *waves* of submissions:
 //!
-//! 1. **CPU stage** — schema / sanity / termination (TOPLOC stages 1–3)
-//!    fan out across a [`ThreadPool`], one job per submission.
+//! 1. **CPU stage** — envelope signature (TOPLOC stage 0, when a
+//!    [`SigOracle`] is configured), then schema / sanity / termination
+//!    (stages 1–3) fan out across a [`ThreadPool`], one job per
+//!    submission. Stage 0 settles attribution before any other work: a
+//!    verified envelope upgrades slash attribution from "claimed" to
+//!    "proven" (the signer answers for the payload, well-formed or not),
+//!    while missing or unprovable envelopes yield [`Verdict::Unsigned`] /
+//!    [`Verdict::Forged`] — counted, never slashed against the claimed
+//!    address, and never allowed near the engine.
 //! 2. **Prefill stage** — survivors are grouped by claimed policy
 //!    version; [`plan_prefills`] packs their rollouts — across
 //!    submissions — into length-bucketed `batch_infer`-lane prefill
@@ -25,8 +32,9 @@ use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::protocol::SigCheck;
 use crate::rl::reward::RewardConfig;
-use crate::rl::rollout_file::Submission;
+use crate::rl::rollout_file::{Envelope, Submission};
 use crate::runtime::{EngineHost, ModelSpec, ParamSet};
 use crate::tasks::dataset::Dataset;
 use crate::toploc::pipeline::{plan_prefills, LaneReq};
@@ -46,6 +54,14 @@ pub const SUBMISSION_QUEUE_CAP: usize = 512;
 /// the full-pad reference emit identical EngineFailure verdicts.
 const PREFILL_CHECK_PANIC: &str = "validator panicked during prefill-stage checks";
 
+/// Signature oracle for envelope verification (stage 0): answers whether
+/// `sig` over `msg` verifies under `address`'s registered key — the
+/// ledger's registry playing the public-key-registry role (§2.4.1).
+/// Deliberately *not* an address→key lookup: with HMAC stand-in
+/// signatures the verification key is the signing key, so key bytes must
+/// never leave the registry (see `Ledger::check_address_sig`).
+pub type SigOracle = dyn Fn(u64, &[u8], &[u8; 32]) -> SigCheck + Send + Sync;
+
 /// Outcome of validating one submission.
 pub enum Verdict {
     /// Every TOPLOC stage passed: feed the rollouts trainer-ward.
@@ -58,9 +74,20 @@ pub enum Verdict {
     /// submission is dropped unjudged. `node` is best-effort attribution
     /// for the logs (`None` when the envelope itself was unreadable).
     EngineFailure { node: Option<u64>, why: String },
-    /// Failed a trust check. Slash `node` when the envelope proves a
-    /// sender; `None` means the file was mangled beyond attribution.
+    /// Failed a trust check. Slash `node` when the sender is known — with
+    /// signing on that means *proven* by a verified envelope (stage 0);
+    /// in legacy signature-optional mode it is the file's own unsigned
+    /// claim. `None` means the file was mangled beyond attribution.
     Reject { node: Option<u64>, why: String },
+    /// Signing is required but the upload carries no (version-1) envelope.
+    /// Counted, never slashed: there is no one to hold accountable.
+    Unsigned { why: String },
+    /// An envelope is present but does not prove its claimed sender: the
+    /// address is unregistered, the signature fails against the registered
+    /// key, or the payload does not match the signed digest. Rejected
+    /// without slashing `claimed` — slashing on an unproven claim is
+    /// exactly the framing vector signing exists to close.
+    Forged { claimed: u64, why: String },
 }
 
 impl Verdict {
@@ -76,6 +103,8 @@ impl Verdict {
             }
             Verdict::EngineFailure { node, why } => ("engine-failure", *node, why.clone()),
             Verdict::Reject { node, why } => ("reject", *node, why.clone()),
+            Verdict::Unsigned { why } => ("unsigned", None, why.clone()),
+            Verdict::Forged { claimed, why } => ("forged", Some(*claimed), why.clone()),
         }
     }
 }
@@ -138,7 +167,51 @@ impl SubmissionQueue {
     }
 }
 
-/// Stage 1–3 output for one submission.
+/// First-seen registry closing the *in-window* replay gap. Binding the
+/// policy step into the envelope signature makes replays worthless once
+/// the step ages out of the staleness window, but an identical valid
+/// envelope re-posted *within* the window would verify (and be accepted)
+/// every time — double-weighting one node's rollouts in the gradient for
+/// zero extra compute. The swarm's validator loop consults this before
+/// buffering an accepted submission: each `(node, step, submission_idx)`
+/// lands at most once, and [`ReplayGuard::advance`] prunes steps the
+/// signature binding already protects. Honest workers never collide —
+/// they increment `submission_idx` per upload.
+#[derive(Default)]
+pub struct ReplayGuard {
+    /// step → set of (node, submission_idx) first sightings; keyed by
+    /// step so pruning to the staleness window is one range split.
+    seen: BTreeMap<u64, HashSet<(u64, u64)>>,
+}
+
+impl ReplayGuard {
+    pub fn new() -> ReplayGuard {
+        ReplayGuard::default()
+    }
+
+    /// Record a sighting; `false` means this exact submission identity
+    /// was already accepted (a replay — drop it).
+    pub fn first_sighting(&mut self, node: u64, step: u64, submission_idx: u64) -> bool {
+        self.seen.entry(step).or_default().insert((node, submission_idx))
+    }
+
+    /// Drop bookkeeping for steps below `min_step`: anything that old is
+    /// outside the staleness window, where the signature's step binding
+    /// already makes replays stale-reject.
+    pub fn advance(&mut self, min_step: u64) {
+        self.seen = self.seen.split_off(&min_step);
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.values().map(HashSet::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stage 0–3 output for one submission.
 enum CpuOutcome {
     /// Passed the CPU stages (soft-dropped groups removed): needs prefill.
     Ready(Submission),
@@ -146,31 +219,123 @@ enum CpuOutcome {
     Done(Verdict),
 }
 
-/// Stages 1–3: file, sanity, termination. Pure CPU — safe to fan out.
+/// Stage 0 outcome: the payload to keep checking, or an early verdict.
+enum Stage0<'a> {
+    /// `proven` is the verified envelope when signing is on (`None` in
+    /// legacy signature-optional mode, where a present envelope is
+    /// stripped but proves nothing).
+    Payload { payload: &'a [u8], proven: Option<Envelope> },
+    Done(Verdict),
+}
+
+/// Stage 0 — envelope signature check, before any other work. With
+/// signing on, only three outcomes exist: a *proven* sender (valid
+/// signature from the registered key over exactly these payload bytes),
+/// [`Verdict::Unsigned`], or [`Verdict::Forged`]. A valid signature makes
+/// every later failure the signer's to answer for; an invalid one must
+/// never be slashed against the claimed address (framing).
+fn check_envelope<'a>(signing: Option<&Arc<SigOracle>>, bytes: &'a [u8]) -> Stage0<'a> {
+    let parsed = Envelope::parse(bytes);
+    let Some(oracle) = signing else {
+        // Legacy mode: strip an envelope if present so signed workers and
+        // unsigned fixtures interoperate; attribution stays best-effort.
+        return match parsed {
+            Some((_, payload)) => Stage0::Payload { payload, proven: None },
+            None => Stage0::Payload { payload: bytes, proven: None },
+        };
+    };
+    let Some((env, payload)) = parsed else {
+        return Stage0::Done(Verdict::Unsigned {
+            why: "submission carries no signed envelope".into(),
+        });
+    };
+    let msg = Envelope::signing_bytes(
+        env.node_address,
+        env.step,
+        env.submission_idx,
+        &env.payload_digest,
+    );
+    match oracle(env.node_address, &msg, &env.sig) {
+        SigCheck::NoKey => {
+            return Stage0::Done(Verdict::Forged {
+                claimed: env.node_address,
+                why: format!("address {} has no registered key", env.node_address),
+            });
+        }
+        SigCheck::Mismatch => {
+            return Stage0::Done(Verdict::Forged {
+                claimed: env.node_address,
+                why: "signature does not verify against the registered key".into(),
+            });
+        }
+        SigCheck::Valid => {}
+    }
+    if !env.digest_matches(payload) {
+        // The signature only vouches for the signed digest; these payload
+        // bytes are someone else's tamper (or corruption in flight).
+        return Stage0::Done(Verdict::Forged {
+            claimed: env.node_address,
+            why: "payload does not match the signed digest".into(),
+        });
+    }
+    Stage0::Payload { payload, proven: Some(env) }
+}
+
+/// Stages 0–3: envelope, file, sanity, termination. Pure CPU — safe to
+/// fan out.
 fn cpu_stages(
     validator: &Validator,
     dataset: &Dataset,
     reward_cfg: &RewardConfig,
+    signing: Option<&Arc<SigOracle>>,
     bytes: &[u8],
     current: u64,
     max_new: usize,
     max_seq: usize,
 ) -> CpuOutcome {
-    let mut sub = match validator.check_file(bytes) {
+    let (payload, proven) = match check_envelope(signing, bytes) {
+        Stage0::Payload { payload, proven } => (payload, proven),
+        Stage0::Done(v) => return CpuOutcome::Done(v),
+    };
+    let mut sub = match validator.check_file(payload) {
         Ok(sub) => sub,
         Err(e) => {
-            // The file never parsed, so `sub.node_address` doesn't exist;
-            // attribute from the envelope when the container is intact.
-            // Same trust level as a well-formed submission's self-declared
-            // `node_address`: unsigned, so a cheater can claim another
-            // node's address either way. Closing that requires signing
-            // submissions with the protocol identities (see ROADMAP).
+            // With a verified envelope the malformed payload is *proven*
+            // to come from the signer — slash them, not a guess. Without
+            // one (legacy mode), fall back to best-effort attribution:
+            // the same trust level as a well-formed submission's
+            // self-declared `node_address` column.
             return CpuOutcome::Done(Verdict::Reject {
-                node: Submission::peek_node_address(bytes),
+                node: proven
+                    .as_ref()
+                    .map(|env| env.node_address)
+                    .or_else(|| Submission::peek_node_address(bytes)),
                 why: format!("{e:?}"),
             });
         }
     };
+    if let Some(env) = &proven {
+        // The payload's self-declared identity must match what the
+        // signature proves; a mismatch is a proven lie by the signer.
+        if sub.node_address != env.node_address
+            || sub.step != env.step
+            || sub.submission_idx != env.submission_idx
+        {
+            return CpuOutcome::Done(Verdict::Reject {
+                node: Some(env.node_address),
+                why: format!(
+                    "payload claims node {}/step {}/idx {} but the envelope proves \
+                     node {}/step {}/idx {}",
+                    sub.node_address,
+                    sub.step,
+                    sub.submission_idx,
+                    env.node_address,
+                    env.step,
+                    env.submission_idx
+                ),
+            });
+        }
+    }
     let node = sub.node_address;
     if let Err(e) = validator.check_sanity(&sub, dataset, reward_cfg, current, max_new) {
         return CpuOutcome::Done(match e {
@@ -226,13 +391,14 @@ fn cpu_stages_guarded(
     validator: &Validator,
     dataset: &Dataset,
     reward_cfg: &RewardConfig,
+    signing: Option<&Arc<SigOracle>>,
     bytes: &[u8],
     current: u64,
     max_new: usize,
     max_seq: usize,
 ) -> CpuOutcome {
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        cpu_stages(validator, dataset, reward_cfg, bytes, current, max_new, max_seq)
+        cpu_stages(validator, dataset, reward_cfg, signing, bytes, current, max_new, max_seq)
     }))
     .unwrap_or_else(|_| {
         CpuOutcome::Done(Verdict::EngineFailure {
@@ -254,9 +420,13 @@ pub struct ValidationPipeline {
     /// this (resolved from the TOPLOC commit interval when the config
     /// said 0).
     bucket_tokens: usize,
-    /// CPU-stage fan-out; `None` runs stages 1–3 inline on the calling
+    /// CPU-stage fan-out; `None` runs stages 0–3 inline on the calling
     /// thread (the sequential path, `validator-threads <= 1`).
     pool: Option<ThreadPool>,
+    /// Stage-0 key registry. `Some` = signatures required
+    /// (`require-signed-submissions`, the real swarm); `None` = legacy
+    /// signature-optional mode for fixtures and benches.
+    signing: Option<Arc<SigOracle>>,
     /// Prefill calls issued (observability: lane efficiency is
     /// rollouts-verified / (calls x batch_infer)).
     pub prefill_calls: Counter,
@@ -284,8 +454,16 @@ impl ValidationPipeline {
             max_new,
             bucket_tokens: bucket,
             pool: (threads > 1).then(|| ThreadPool::new(threads)),
+            signing: None,
             prefill_calls: Counter::default(),
         }
+    }
+
+    /// Require signed submission envelopes, verified through `oracle`
+    /// (the ledger's signature check against its key registry) as stage 0.
+    pub fn with_signing(mut self, oracle: Arc<SigOracle>) -> ValidationPipeline {
+        self.signing = Some(oracle);
+        self
     }
 
     /// Validate one wave of raw submissions; verdicts in input order.
@@ -304,7 +482,7 @@ impl ValidationPipeline {
         let n = batch.len();
         let now = current_step();
 
-        // --- CPU stage: stages 1–3, one job per submission ---
+        // --- CPU stage: stages 0–3, one job per submission ---
         let outcomes: Vec<CpuOutcome> = match &self.pool {
             None => batch
                 .iter()
@@ -313,6 +491,7 @@ impl ValidationPipeline {
                         &self.validator,
                         &self.dataset,
                         &self.reward_cfg,
+                        self.signing.as_ref(),
                         b,
                         now,
                         self.max_new,
@@ -327,11 +506,19 @@ impl ValidationPipeline {
                     let validator = Arc::clone(&self.validator);
                     let dataset = Arc::clone(&self.dataset);
                     let reward = Arc::clone(&self.reward_cfg);
+                    let signing = self.signing.clone();
                     let slots = Arc::clone(&slots);
                     let (max_new, max_seq) = (self.max_new, self.spec.max_seq);
                     pool.submit(move || {
                         let out = cpu_stages_guarded(
-                            &validator, &dataset, &reward, &bytes, now, max_new, max_seq,
+                            &validator,
+                            &dataset,
+                            &reward,
+                            signing.as_ref(),
+                            &bytes,
+                            now,
+                            max_new,
+                            max_seq,
                         );
                         slots.lock().unwrap()[i] = Some(out);
                     });
@@ -414,7 +601,7 @@ impl ValidationPipeline {
                 // the sequential path would never have reached them).
                 let doomed = |l: &LaneReq| {
                     engine_failed[l.sub].is_some()
-                        || failed[l.sub].as_ref().map_or(false, |(ri, _)| l.rollout > *ri)
+                        || matches!(&failed[l.sub], Some((ri, _)) if l.rollout > *ri)
                 };
                 let live: Vec<LaneReq> =
                     call.lanes.iter().copied().filter(|l| !doomed(l)).collect();
@@ -449,7 +636,7 @@ impl ValidationPipeline {
                     // Re-check: a failure recorded earlier in this same
                     // call can doom later lanes of the same submission.
                     if engine_failed[l.sub].is_some()
-                        || failed[l.sub].as_ref().map_or(false, |(ri, _)| l.rollout > *ri)
+                        || matches!(&failed[l.sub], Some((ri, _)) if l.rollout > *ri)
                     {
                         continue;
                     }
@@ -468,7 +655,7 @@ impl ValidationPipeline {
                     match res {
                         Ok(Ok(())) => {}
                         Ok(Err(e)) => {
-                            if failed[l.sub].as_ref().map_or(true, |(ri, _)| l.rollout < *ri) {
+                            if !matches!(&failed[l.sub], Some((ri, _)) if l.rollout >= *ri) {
                                 failed[l.sub] = Some((l.rollout, format!("{e:?}")));
                             }
                         }
@@ -515,6 +702,7 @@ impl ValidationPipeline {
 #[allow(clippy::too_many_arguments)]
 pub fn validate_submission_fullpad(
     validator: &Validator,
+    signing: Option<&Arc<SigOracle>>,
     bytes: &[u8],
     dataset: &Dataset,
     reward_cfg: &RewardConfig,
@@ -528,6 +716,7 @@ pub fn validate_submission_fullpad(
         validator,
         dataset,
         reward_cfg,
+        signing,
         bytes,
         current_step(),
         max_new,
@@ -590,6 +779,116 @@ pub fn validate_submission_fullpad(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::protocol::Identity;
+
+    /// Stage 0 never needs an engine: every outcome here settles before
+    /// any prefill (or even rpq decoding) happens.
+    #[test]
+    fn stage0_envelope_outcomes() {
+        let a = Identity::from_seed(1);
+        let b = Identity::from_seed(2);
+        // Stage 0 judges the envelope only — payload contents are opaque.
+        let payload = b"opaque payload bytes".to_vec();
+        let sealed_a = Envelope::seal(&a, 3, 0, &payload);
+        // Oracle over a one-entry registry: only `a` is registered, and
+        // the oracle answers verify-or-not without exposing key bytes.
+        let keys = std::collections::BTreeMap::from([(a.address, a.secret())]);
+        let lookup: Arc<SigOracle> =
+            Arc::new(move |addr, msg: &[u8], sig: &[u8; 32]| match keys.get(&addr) {
+                None => SigCheck::NoKey,
+                Some(key) if crate::protocol::identity::hmac_verify(key, msg, sig) => {
+                    SigCheck::Valid
+                }
+                Some(_) => SigCheck::Mismatch,
+            });
+        let signing = Some(&lookup);
+
+        // Legacy mode passes raw bytes through untouched and strips (but
+        // does not trust) an envelope.
+        match check_envelope(None, &payload) {
+            Stage0::Payload { payload: p, proven: None } => assert_eq!(p, &payload[..]),
+            _ => panic!("legacy raw bytes should pass through"),
+        }
+        match check_envelope(None, &sealed_a) {
+            Stage0::Payload { payload: p, proven: None } => assert_eq!(p, &payload[..]),
+            _ => panic!("legacy sealed bytes should strip the envelope"),
+        }
+
+        // Signing on: raw bytes are Unsigned.
+        match check_envelope(signing, &payload) {
+            Stage0::Done(Verdict::Unsigned { .. }) => {}
+            _ => panic!("raw bytes must be Unsigned when signing is required"),
+        }
+        // A genuine envelope from a registered key proves its sender.
+        match check_envelope(signing, &sealed_a) {
+            Stage0::Payload { payload: p, proven: Some(env) } => {
+                assert_eq!(p, &payload[..]);
+                assert_eq!(env.node_address, a.address);
+                assert_eq!(env.step, 3);
+            }
+            _ => panic!("valid envelope must prove its sender"),
+        }
+        // Unregistered signer: forged, attribution is log-only.
+        match check_envelope(signing, &Envelope::seal(&b, 3, 0, &payload)) {
+            Stage0::Done(Verdict::Forged { claimed, why }) => {
+                assert_eq!(claimed, b.address);
+                assert!(why.contains("no registered key"), "{why}");
+            }
+            _ => panic!("unregistered address must be Forged"),
+        }
+        // Framing: node B signs a header claiming node A's address. The
+        // signature fails against A's registered key — A is never slashed.
+        use sha2::{Digest, Sha256};
+        let digest: [u8; 32] = Sha256::digest(&payload).into();
+        let framed = Envelope {
+            node_address: a.address,
+            step: 3,
+            submission_idx: 0,
+            payload_digest: digest,
+            sig: b.sign(&Envelope::signing_bytes(a.address, 3, 0, &digest)),
+        }
+        .encode(&payload);
+        match check_envelope(signing, &framed) {
+            Stage0::Done(Verdict::Forged { claimed, why }) => {
+                assert_eq!(claimed, a.address);
+                assert!(why.contains("signature"), "{why}");
+            }
+            _ => panic!("framing must be Forged, not slashed against A"),
+        }
+        // Tampered payload under A's intact header: the signed digest no
+        // longer covers the bytes.
+        let mut tampered = sealed_a.clone();
+        let last = tampered.len() - 1;
+        tampered[last] ^= 0x01;
+        match check_envelope(signing, &tampered) {
+            Stage0::Done(Verdict::Forged { claimed, why }) => {
+                assert_eq!(claimed, a.address);
+                assert!(why.contains("digest"), "{why}");
+            }
+            _ => panic!("post-signing tamper must be Forged"),
+        }
+    }
+
+    #[test]
+    fn replay_guard_dedupes_within_window_and_prunes() {
+        let mut g = ReplayGuard::new();
+        assert!(g.first_sighting(7, 3, 0));
+        assert!(g.first_sighting(7, 3, 1)); // next upload, same node/step
+        assert!(g.first_sighting(8, 3, 0)); // other node, same step/idx
+        assert!(g.first_sighting(7, 4, 0)); // same node/idx, next step
+        // Exact re-post within the window: caught.
+        assert!(!g.first_sighting(7, 3, 0));
+        assert_eq!(g.len(), 4);
+        // Steps below the window are pruned; the signature's step binding
+        // covers them (replays go stale, not duplicate).
+        g.advance(4);
+        assert_eq!(g.len(), 1);
+        assert!(g.first_sighting(7, 4, 1));
+        // A pruned identity re-posted would re-enter the guard — but only
+        // after its step left the window, where stage 1–2 reject it as
+        // stale before buffering.
+        assert!(g.first_sighting(7, 3, 0));
+    }
 
     #[test]
     fn queue_is_fifo_and_wakes_consumer() {

@@ -10,6 +10,43 @@ use sha2::{Digest, Sha256};
 
 type HmacSha256 = Hmac<Sha256>;
 
+/// Node addresses are floored to 48 bits: they travel through JSON API
+/// payloads as numbers, and `util::json` numbers are f64 (exact only up to
+/// 2^53). Signatures and other byte blobs must NOT take that route — they
+/// go hex-encoded (see `util::json::Json::hex`).
+pub const ADDRESS_MASK: u64 = 0xFFFF_FFFF_FFFF;
+
+/// HMAC-SHA256 verification against raw registered key material — what a
+/// verifier holding the ledger's address→key registry uses (it has the
+/// key bytes, not an [`Identity`]).
+pub fn hmac_verify(key: &[u8; 32], msg: &[u8], sig: &[u8; 32]) -> bool {
+    let mut mac = HmacSha256::new_from_slice(key).expect("hmac key");
+    mac.update(msg);
+    let want: [u8; 32] = mac.finalize().into_bytes().into();
+    // Constant-time comparison: fold every byte difference instead of
+    // short-circuiting at the first mismatch. The verification sites are
+    // network-reachable (/submit envelopes, /invite signatures), and a
+    // short-circuiting == would hand forgers a byte-at-a-time timing
+    // oracle on the MAC.
+    want.iter().zip(sig.iter()).fold(0u8, |acc, (a, b)| acc | (a ^ b)) == 0
+}
+
+/// Outcome of checking a signature against a key registry. Distinguishing
+/// "no such key" from "wrong signature" matters for observability
+/// (unregistered senders vs. framing attempts), but neither outcome ever
+/// exposes key material to the caller — with HMAC stand-in signatures the
+/// verification key IS the signing key, so handing out key bytes would
+/// let any registry reader forge "proven" attributions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SigCheck {
+    /// The address has no registered key.
+    NoKey,
+    /// A key exists but the signature does not verify under it.
+    Mismatch,
+    /// The signature verifies under the address's registered key.
+    Valid,
+}
+
 #[derive(Clone, Debug)]
 pub struct Identity {
     pub address: u64,
@@ -22,9 +59,7 @@ impl Identity {
     pub fn from_seed(seed: u64) -> Identity {
         let secret: [u8; 32] = Sha256::digest(seed.to_le_bytes()).into();
         let addr_hash = Sha256::digest(secret);
-        // 48-bit addresses: they travel through JSON (f64-safe up to 2^53).
-        let address =
-            u64::from_le_bytes(addr_hash[..8].try_into().unwrap()) & 0xFFFF_FFFF_FFFF;
+        let address = u64::from_le_bytes(addr_hash[..8].try_into().unwrap()) & ADDRESS_MASK;
         Identity { address, secret }
     }
 
@@ -35,7 +70,7 @@ impl Identity {
     }
 
     pub fn verify(&self, msg: &[u8], sig: &[u8; 32]) -> bool {
-        self.sign(msg) == *sig
+        hmac_verify(&self.secret, msg, sig)
     }
 
     pub(crate) fn secret(&self) -> [u8; 32] {
@@ -61,5 +96,24 @@ mod tests {
     #[test]
     fn deterministic() {
         assert_eq!(Identity::from_seed(9).address, Identity::from_seed(9).address);
+    }
+
+    #[test]
+    fn addresses_are_json_safe_48_bit() {
+        for seed in 0..64 {
+            let a = Identity::from_seed(seed).address;
+            assert_eq!(a & !ADDRESS_MASK, 0, "address {a:#x} exceeds 48 bits");
+            // Exact through an f64 round-trip (the JSON number path).
+            assert_eq!((a as f64) as u64, a);
+        }
+    }
+
+    #[test]
+    fn raw_key_verification_matches_identity() {
+        let id = Identity::from_seed(4);
+        let sig = id.sign(b"payload");
+        assert!(hmac_verify(&id.secret(), b"payload", &sig));
+        assert!(!hmac_verify(&id.secret(), b"payloaD", &sig));
+        assert!(!hmac_verify(&Identity::from_seed(5).secret(), b"payload", &sig));
     }
 }

@@ -8,7 +8,7 @@ use std::sync::{Arc, Mutex};
 
 use sha2::{Digest, Sha256};
 
-use super::identity::Identity;
+use super::identity::{hmac_verify, Identity, SigCheck};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tx {
@@ -63,19 +63,28 @@ pub struct Ledger {
     inner: Arc<Mutex<Inner>>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum LedgerError {
-    #[error("unknown signer {0}")]
     UnknownSigner(u64),
-    #[error("bad signature")]
     BadSignature,
-    #[error("unknown pool {0}")]
     UnknownPool(u64),
-    #[error("not pool owner")]
     NotOwner,
-    #[error("node {0} is slashed from pool")]
     Slashed(u64),
 }
+
+impl std::fmt::Display for LedgerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LedgerError::UnknownSigner(a) => write!(f, "unknown signer {a}"),
+            LedgerError::BadSignature => write!(f, "bad signature"),
+            LedgerError::UnknownPool(p) => write!(f, "unknown pool {p}"),
+            LedgerError::NotOwner => write!(f, "not pool owner"),
+            LedgerError::Slashed(n) => write!(f, "node {n} is slashed from pool"),
+        }
+    }
+}
+
+impl std::error::Error for LedgerError {}
 
 impl Ledger {
     pub fn new() -> Ledger {
@@ -87,6 +96,28 @@ impl Ledger {
         self.inner.lock().unwrap().keys.insert(id.address, id.secret());
     }
 
+    /// Verify `sig` over `msg` against `address`'s registered key: the
+    /// ledger's key registry playing the public-key-registry role
+    /// (§2.4.1). Key material never leaves the ledger — with HMAC
+    /// stand-in signatures the registered secret *is* the signing key, so
+    /// an accessor returning key bytes would let any registry reader
+    /// forge other nodes' signatures (exactly the framing attack envelope
+    /// verification exists to close). Used by the TOPLOC validator's
+    /// stage 0 and by workers validating signed invites.
+    pub fn check_address_sig(&self, address: u64, msg: &[u8], sig: &[u8; 32]) -> SigCheck {
+        match self.inner.lock().unwrap().keys.get(&address) {
+            None => SigCheck::NoKey,
+            Some(key) if hmac_verify(key, msg, sig) => SigCheck::Valid,
+            Some(_) => SigCheck::Mismatch,
+        }
+    }
+
+    /// Owner address of a pool (workers validate that invites come from
+    /// the pool's actual owner).
+    pub fn pool_owner(&self, pool_id: u64) -> Option<u64> {
+        self.inner.lock().unwrap().pools.get(&pool_id).map(|(_, owner)| *owner)
+    }
+
     /// Submit a signed transaction. `signer_override` lets pool owners sign
     /// Slash/Evict.
     pub fn submit(&self, tx: Tx, signer: &Identity) -> Result<u64, LedgerError> {
@@ -95,14 +126,8 @@ impl Ledger {
         // Verify the signature against the registered key (not the caller's
         // claim): an imposter with a different secret fails here.
         let sig = signer.sign(&tx.canonical());
-        {
-            use hmac::{Hmac, Mac};
-            let mut mac = Hmac::<Sha256>::new_from_slice(&key).expect("hmac");
-            mac.update(&tx.canonical());
-            let want: [u8; 32] = mac.finalize().into_bytes().into();
-            if want != sig {
-                return Err(LedgerError::BadSignature);
-            }
+        if !hmac_verify(&key, &tx.canonical(), &sig) {
+            return Err(LedgerError::BadSignature);
         }
         // Authorization rules.
         match &tx {
@@ -286,6 +311,27 @@ mod tests {
             Err(LedgerError::Slashed(node.address))
         );
         assert!(ledger.verify_chain());
+    }
+
+    #[test]
+    fn address_sig_checks_without_exposing_keys() {
+        let (ledger, owner, node) = setup();
+        let sig = node.sign(b"msg");
+        assert_eq!(ledger.check_address_sig(node.address, b"msg", &sig), SigCheck::Valid);
+        // Wrong message or someone else's signature: mismatch, not a leak.
+        assert_eq!(ledger.check_address_sig(node.address, b"msG", &sig), SigCheck::Mismatch);
+        assert_eq!(
+            ledger.check_address_sig(owner.address, b"msg", &sig),
+            SigCheck::Mismatch
+        );
+        // Unregistered address.
+        let stranger = Identity::from_seed(99);
+        assert_eq!(
+            ledger.check_address_sig(stranger.address, b"msg", &stranger.sign(b"msg")),
+            SigCheck::NoKey
+        );
+        assert_eq!(ledger.pool_owner(1), Some(owner.address));
+        assert_eq!(ledger.pool_owner(9), None);
     }
 
     #[test]

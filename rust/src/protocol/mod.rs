@@ -9,7 +9,7 @@ pub mod orchestrator;
 pub mod worker;
 
 pub use discovery::{DiscoveryServer, DiscoveryService, NodeInfo};
-pub use identity::Identity;
+pub use identity::{Identity, SigCheck};
 pub use ledger::{Ledger, LedgerError, Tx};
 pub use orchestrator::{NodeStatus, Orchestrator, OrchestratorServer, TaskSpec};
 pub use worker::{HardwareSpec, SharedVolume, TaskHandler, Worker};

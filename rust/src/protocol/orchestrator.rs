@@ -18,6 +18,13 @@ pub enum NodeStatus {
     Dead,
 }
 
+/// Canonical bytes a signed invite covers. Shared between the
+/// orchestrator (signing) and the worker (validating against the pool
+/// owner's ledger-registered key, §2.4.2).
+pub fn invite_message(node: u64, pool_id: u64, domain: &str) -> Vec<u8> {
+    format!("invite:{node}:{pool_id}:{domain}").into_bytes()
+}
+
 #[derive(Clone, Debug)]
 pub struct TaskSpec {
     pub id: u64,
@@ -99,14 +106,13 @@ impl Orchestrator {
             if self.ledger.is_slashed(self.pool_id, addr) {
                 continue;
             }
-            // Signed invite.
-            let msg = format!("invite:{addr}:{}:dist-rl", self.pool_id);
-            let sig = self.identity.sign(msg.as_bytes());
+            // Signed invite (signatures travel hex — see util::json).
+            let sig = self.identity.sign(&invite_message(addr, self.pool_id, "dist-rl"));
             let body = Json::obj(vec![
                 ("pool_id", self.pool_id.into()),
                 ("domain", "dist-rl".into()),
                 ("node", addr.into()),
-                ("sig", Json::Str(crate::shardcast::manifest::hex(&sig))),
+                ("sig", Json::hex(&sig)),
             ]);
             if let Ok(r) = client.post_json(&format!("{endpoint}/invite"), &body) {
                 if r.status == 200 {

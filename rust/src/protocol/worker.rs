@@ -8,10 +8,11 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::identity::Identity;
+use super::identity::{Identity, SigCheck};
 use super::ledger::{Ledger, Tx};
-use super::orchestrator::TaskSpec;
+use super::orchestrator::{invite_message, TaskSpec};
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
+use crate::rl::rollout_file::Submission;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -70,6 +71,21 @@ impl SharedVolume {
 
 pub type TaskHandler = dyn Fn(&TaskSpec, &SharedVolume) -> anyhow::Result<String> + Send + Sync;
 
+/// Is `j` a valid invite for `node` into `pool_id` — signed by the pool
+/// owner's ledger-registered key over the canonical invite message?
+/// `None` on any missing field, unknown pool/key or signature mismatch.
+fn invite_authorized(ledger: &Ledger, node: u64, pool_id: u64, j: &Json) -> Option<()> {
+    let invite_pool = j.get("pool_id").and_then(Json::as_u64)?;
+    if invite_pool != pool_id {
+        return None;
+    }
+    let domain = j.get("domain").and_then(Json::as_str)?;
+    let sig: [u8; 32] = j.get("sig")?.as_hex_bytes()?.try_into().ok()?;
+    let owner = ledger.pool_owner(invite_pool)?;
+    let msg = invite_message(node, invite_pool, domain);
+    (ledger.check_address_sig(owner, &msg, &sig) == SigCheck::Valid).then_some(())
+}
+
 pub struct Worker {
     pub identity: Identity,
     pub hardware: HardwareSpec,
@@ -103,16 +119,23 @@ impl Worker {
         // endpoint in advance (DoS protection, §2.4.2).
         let inv = Arc::clone(&invited);
         let address = identity.address;
+        let invite_ledger = ledger.clone();
         let invite_server = HttpServer::start(
             ServerConfig { worker_threads: 1, ..Default::default() },
             move |req| {
                 if req.method == "POST" && req.path == "/invite" {
                     let Ok(j) = req.json() else { return Response::error(400, "bad json") };
-                    if j.get("node").and_then(Json::as_u64) == Some(address) {
-                        inv.store(true, Ordering::SeqCst);
-                        return Response::ok("accepted");
+                    if j.get("node").and_then(Json::as_u64) != Some(address) {
+                        return Response::error(400, "invite for someone else");
                     }
-                    return Response::error(400, "invite for someone else");
+                    // Validate the invite signature on the ledger
+                    // (§2.4.2): it must come from the registered key of
+                    // the pool's actual owner for *this* pool.
+                    if invite_authorized(&invite_ledger, address, pool_id, &j).is_none() {
+                        return Response::error(403, "invalid invite signature");
+                    }
+                    inv.store(true, Ordering::SeqCst);
+                    return Response::ok("accepted");
                 }
                 Response::error(404, "x")
             },
@@ -150,6 +173,21 @@ impl Worker {
 
     pub fn is_invited(&self) -> bool {
         self.invited.load(Ordering::SeqCst)
+    }
+
+    /// The invite webserver's URL (what the worker registered with
+    /// discovery; tests probe it directly).
+    pub fn endpoint(&self) -> Option<String> {
+        self.invite_server.as_ref().map(HttpServer::url)
+    }
+
+    /// Sign a rollout submission at upload time (§2.4.1: every API
+    /// interaction is signed with the node keypair). The envelope binds
+    /// the worker's address, the policy step, the submission index and the
+    /// payload digest, so the validator can prove who sent what — and a
+    /// replayed envelope ages out with the staleness window.
+    pub fn sign_submission(&self, sub: &Submission) -> Vec<u8> {
+        sub.encode_signed(&self.identity)
     }
 
     /// Start the heartbeat loop: poll the orchestrator, execute any pulled
@@ -280,6 +318,40 @@ mod tests {
             Ok(_) => panic!("boot should have failed"),
         };
         assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn forged_invites_rejected_owner_invite_accepted() {
+        let (ledger, owner) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        let worker = Worker::boot(Identity::from_seed(7), &ledger, 1, &discovery.url(), 8).unwrap();
+        let url = worker.endpoint().unwrap();
+        let addr = worker.identity.address;
+        let c = HttpClient::new("test");
+        let body = |sig: &[u8; 32]| {
+            Json::obj(vec![
+                ("pool_id", 1u64.into()),
+                ("domain", "dist-rl".into()),
+                ("node", addr.into()),
+                ("sig", Json::hex(sig)),
+            ])
+        };
+        // Garbage signature: refused.
+        let r = c.post_json(&format!("{url}/invite"), &body(&[0u8; 32])).unwrap();
+        assert_eq!(r.status, 403);
+        assert!(!worker.is_invited());
+        // Registered identity that is not the pool owner: refused.
+        let imposter = Identity::from_seed(66);
+        ledger.register_key(&imposter);
+        let sig = imposter.sign(&invite_message(addr, 1, "dist-rl"));
+        let r = c.post_json(&format!("{url}/invite"), &body(&sig)).unwrap();
+        assert_eq!(r.status, 403);
+        assert!(!worker.is_invited());
+        // The pool owner's genuine signature: accepted.
+        let sig = owner.sign(&invite_message(addr, 1, "dist-rl"));
+        let r = c.post_json(&format!("{url}/invite"), &body(&sig)).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(worker.is_invited());
     }
 
     #[test]

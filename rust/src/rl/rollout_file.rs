@@ -1,9 +1,21 @@
 //! Wire format for rollout submissions: `rpq` files exchanged between
 //! inference workers, TOPLOC validators and the trainer (§2.1.1 uses
 //! Parquet; `rpq` is the from-scratch stand-in — see data::rpq).
+//!
+//! Uploads travel inside a signed [`Envelope`]: a versioned header naming
+//! the sender, the policy step and the submission index, carrying the
+//! payload's SHA-256 and an HMAC-SHA256 signature (§2.4.1 node keys) over
+//! the canonical header bytes. The signature binds the *step*, so a
+//! replayed old envelope ages out with the validator's staleness window,
+//! and it binds the *payload digest*, so swapping the payload under a
+//! captured header invalidates the signature. Verification happens in the
+//! validation pipeline's stage 0 against the ledger's key registry.
+
+use sha2::{Digest, Sha256};
 
 use super::Rollout;
 use crate::data::rpq::{Column, DType, RpqFile, Schema};
+use crate::protocol::identity::{hmac_verify, Identity};
 
 /// A rollout plus the trust metadata the validator consumes.
 #[derive(Clone, Debug)]
@@ -25,6 +37,126 @@ pub struct Submission {
     /// Submission index for this node/step (seed formula input, §2.3.3).
     pub submission_idx: u64,
     pub rollouts: Vec<WireRollout>,
+}
+
+/// Envelope wire version this build emits and accepts.
+pub const ENVELOPE_VERSION: u8 = 1;
+
+/// Envelope magic ("INTELLECT-2 Signed Envelope").
+pub const ENVELOPE_MAGIC: [u8; 4] = *b"I2SE";
+
+/// Fixed header size: magic, version, node/step/idx, digest, signature.
+pub const ENVELOPE_HEADER_LEN: usize = 4 + 1 + 3 * 8 + 32 + 32;
+
+/// Domain-separation prefix of the canonical signed bytes.
+const ENVELOPE_SIGNING_CONTEXT: &[u8; 16] = b"i2-submission-v1";
+
+/// Signed submission header: who uploaded, for which policy step, plus the
+/// payload digest the signature commits to.
+///
+/// Wire layout (little-endian):
+/// `"I2SE" | u8 version | u64 node | u64 step | u64 submission_idx |
+/// [u8; 32] payload sha256 | [u8; 32] hmac signature | payload bytes`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Envelope {
+    pub node_address: u64,
+    pub step: u64,
+    pub submission_idx: u64,
+    pub payload_digest: [u8; 32],
+    pub sig: [u8; 32],
+}
+
+impl Envelope {
+    /// Canonical byte serialization the signature covers. Binding `step`
+    /// makes replays age out with the staleness window; binding the
+    /// payload digest makes a payload swap under a captured header
+    /// detectable.
+    pub fn signing_bytes(
+        node_address: u64,
+        step: u64,
+        submission_idx: u64,
+        payload_digest: &[u8; 32],
+    ) -> Vec<u8> {
+        let mut m = Vec::with_capacity(ENVELOPE_SIGNING_CONTEXT.len() + 3 * 8 + 32);
+        m.extend_from_slice(ENVELOPE_SIGNING_CONTEXT);
+        m.extend_from_slice(&node_address.to_le_bytes());
+        m.extend_from_slice(&step.to_le_bytes());
+        m.extend_from_slice(&submission_idx.to_le_bytes());
+        m.extend_from_slice(payload_digest);
+        m
+    }
+
+    /// Build and sign an envelope around `payload` under `identity`'s key
+    /// (the honest worker's upload path).
+    pub fn seal(identity: &Identity, step: u64, submission_idx: u64, payload: &[u8]) -> Vec<u8> {
+        let payload_digest: [u8; 32] = Sha256::digest(payload).into();
+        let sig = identity.sign(&Envelope::signing_bytes(
+            identity.address,
+            step,
+            submission_idx,
+            &payload_digest,
+        ));
+        Envelope { node_address: identity.address, step, submission_idx, payload_digest, sig }
+            .encode(payload)
+    }
+
+    /// Serialize header + payload (no signing — tests use this to forge).
+    pub fn encode(&self, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(ENVELOPE_HEADER_LEN + payload.len());
+        out.extend_from_slice(&ENVELOPE_MAGIC);
+        out.push(ENVELOPE_VERSION);
+        out.extend_from_slice(&self.node_address.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.submission_idx.to_le_bytes());
+        out.extend_from_slice(&self.payload_digest);
+        out.extend_from_slice(&self.sig);
+        out.extend_from_slice(payload);
+        out
+    }
+
+    /// Structural parse: split header and payload. `None` when the bytes
+    /// do not carry a version-1 envelope at all (legacy raw `rpq` uploads
+    /// land here); no signature or digest checking happens yet.
+    pub fn parse(bytes: &[u8]) -> Option<(Envelope, &[u8])> {
+        if bytes.len() < ENVELOPE_HEADER_LEN
+            || bytes[..4] != ENVELOPE_MAGIC
+            || bytes[4] != ENVELOPE_VERSION
+        {
+            return None;
+        }
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        let arr_at = |o: usize| -> [u8; 32] { bytes[o..o + 32].try_into().unwrap() };
+        let env = Envelope {
+            node_address: u64_at(5),
+            step: u64_at(13),
+            submission_idx: u64_at(21),
+            payload_digest: arr_at(29),
+            sig: arr_at(61),
+        };
+        Some((env, &bytes[ENVELOPE_HEADER_LEN..]))
+    }
+
+    /// Does the signed digest cover exactly these payload bytes?
+    pub fn digest_matches(&self, payload: &[u8]) -> bool {
+        let d: [u8; 32] = Sha256::digest(payload).into();
+        d == self.payload_digest
+    }
+
+    /// Verify the signature against a registered key (the ledger's
+    /// address→key registry). True only if `key`'s owner signed exactly
+    /// this header.
+    pub fn verify_sig(&self, key: &[u8; 32]) -> bool {
+        hmac_verify(
+            key,
+            &Envelope::signing_bytes(
+                self.node_address,
+                self.step,
+                self.submission_idx,
+                &self.payload_digest,
+            ),
+            &self.sig,
+        )
+    }
 }
 
 pub fn schema() -> Schema {
@@ -79,13 +211,29 @@ impl Submission {
         f.encode()
     }
 
-    /// Best-effort sender attribution for submissions that fail the full
-    /// schema check: if the container decodes (checksum intact) and carries
-    /// a uniform `node` column, that address claimed the upload. Used to
-    /// slash the actual sender of a malformed-but-attributable file instead
-    /// of a ghost node; a file mangled beyond this yields `None` and the
-    /// rejection is only counted.
+    /// Sign + serialize for upload: the `rpq` payload wrapped in a signed
+    /// [`Envelope`] under `identity`'s key.
+    pub fn encode_signed(&self, identity: &Identity) -> Vec<u8> {
+        Envelope::seal(identity, self.step, self.submission_idx, &self.encode())
+    }
+
+    /// Best-effort *unverified* sender attribution for log lines and for
+    /// legacy (signature-optional) deployments: if the container decodes
+    /// (checksum intact) and carries a uniform `node` column, that address
+    /// claimed the upload; failing that, an envelope header's claim is
+    /// used. A file mangled beyond both yields `None`. When signatures are
+    /// required, slash attribution never comes from here — only from a
+    /// verified envelope (stage 0).
     pub fn peek_node_address(bytes: &[u8]) -> Option<u64> {
+        if let Some((env, payload)) = Envelope::parse(bytes) {
+            return Submission::peek_payload_address(payload).or(Some(env.node_address));
+        }
+        Submission::peek_payload_address(bytes)
+    }
+
+    /// [`Submission::peek_node_address`] on bare payload bytes (no
+    /// envelope handling).
+    fn peek_payload_address(bytes: &[u8]) -> Option<u64> {
         let f = RpqFile::decode(bytes).ok()?;
         let nodes = f.col("node")?.as_u64()?;
         let first = *nodes.first()?;
@@ -232,5 +380,141 @@ mod tests {
         let mut f = RpqFile::new();
         f.push("whatever", Column::U64(vec![1]));
         assert!(Submission::decode(&f.encode()).is_err());
+    }
+
+    #[test]
+    fn envelope_seal_parse_verify() {
+        let id = Identity::from_seed(7);
+        let mut sub = sample_submission();
+        sub.node_address = id.address;
+        let bytes = sub.encode_signed(&id);
+        let (env, payload) = Envelope::parse(&bytes).expect("envelope present");
+        assert_eq!(env.node_address, id.address);
+        assert_eq!(env.step, sub.step);
+        assert_eq!(env.submission_idx, sub.submission_idx);
+        assert!(env.digest_matches(payload));
+        assert!(env.verify_sig(&id.secret()));
+        // Wrong key: the signature proves nothing.
+        assert!(!env.verify_sig(&Identity::from_seed(8).secret()));
+        // The payload is the plain rpq file.
+        assert_eq!(Submission::decode(payload).unwrap().rollouts.len(), 3);
+    }
+
+    #[test]
+    fn envelope_binds_header_fields_and_payload() {
+        let id = Identity::from_seed(7);
+        let payload = sample_submission().encode();
+        let bytes = Envelope::seal(&id, 4, 1, &payload);
+        let (env, payload) = Envelope::parse(&bytes).unwrap();
+        // Any header mutation invalidates the signature (replaying at a
+        // different step, claiming another sender, swapping the digest).
+        for tampered in [
+            Envelope { step: env.step + 1, ..env.clone() },
+            Envelope { node_address: env.node_address ^ 1, ..env.clone() },
+            Envelope { submission_idx: env.submission_idx + 1, ..env.clone() },
+            Envelope { payload_digest: [9u8; 32], ..env.clone() },
+        ] {
+            assert!(!tampered.verify_sig(&id.secret()), "{tampered:?}");
+        }
+        // A payload swap under the intact header fails the digest check.
+        let mut other = payload.to_vec();
+        let mid = other.len() / 2;
+        other[mid] ^= 0x40;
+        assert!(!env.digest_matches(&other));
+        assert!(env.digest_matches(payload));
+    }
+
+    #[test]
+    fn peek_handles_truncated_and_garbage_headers() {
+        // Random garbage: no envelope, no rpq container.
+        assert_eq!(Submission::peek_node_address(&[0x13; 40]), None);
+        assert_eq!(Submission::peek_node_address(&[]), None);
+        // Magic only / header cut short: not parseable as an envelope, and
+        // not an rpq file either.
+        let mut cut = ENVELOPE_MAGIC.to_vec();
+        assert_eq!(Submission::peek_node_address(&cut), None);
+        cut.push(ENVELOPE_VERSION);
+        cut.extend_from_slice(&[0u8; 20]);
+        assert_eq!(Submission::peek_node_address(&cut), None);
+        // Unknown version: treated as not-an-envelope, not misparsed.
+        let id = Identity::from_seed(3);
+        let mut bytes = Envelope::seal(&id, 1, 0, &sample_submission().encode());
+        bytes[4] = 2;
+        assert_eq!(Envelope::parse(&bytes), None);
+        // Envelope wrapping garbage: the header's (unverified) claim.
+        let garbage = Envelope::seal(&id, 1, 0, &[0xAB; 10]);
+        assert_eq!(Submission::peek_node_address(&garbage), Some(id.address));
+        // Envelope wrapping an intact payload: the payload's own claim.
+        let signed = Envelope::seal(&id, 1, 0, &sample_submission().encode());
+        assert_eq!(Submission::peek_node_address(&signed), Some(0xAB));
+    }
+
+    #[test]
+    fn prop_envelope_roundtrip_arbitrary_batches() {
+        use crate::util::prop::{check, ensure, ensure_eq};
+        use crate::util::rng::Rng;
+        // Sign -> serialize -> parse -> verify round-trips for arbitrary
+        // rollout batches, and the recovered submission matches the input.
+        check(
+            "signed envelope roundtrip",
+            24,
+            |rng: &mut Rng, size| {
+                let id_seed = rng.next_u64();
+                let id = Identity::from_seed(id_seed);
+                let step = rng.next_u64() % 1000;
+                let idx = rng.next_u64() % 16;
+                let n = 1 + rng.usize(size as usize % 12 + 1);
+                let rollouts = (0..n)
+                    .map(|i| {
+                        let len = 2 + rng.usize(24);
+                        WireRollout {
+                            rollout: Rollout {
+                                task_id: rng.next_u64() % 512,
+                                group_id: rng.next_u64(),
+                                policy_step: step,
+                                tokens: (0..len as i32).map(|t| 1 + (t * 7) % 61).collect(),
+                                prompt_len: 1 + rng.usize(len - 1),
+                                target_len: (i % 2 == 0).then(|| 8 + rng.usize(56)),
+                                task_reward: (rng.next_u32() % 2) as f32,
+                                length_penalty: 0.25,
+                                reward: 0.75,
+                                advantage: 0.0,
+                                sampled_probs: vec![0.5; len],
+                                node_address: id.address,
+                            },
+                            commitment: (0..rng.usize(20)).map(|_| rng.next_u32() as u8).collect(),
+                            finish_eos: i % 3 == 0,
+                            eos_prob: 0.4,
+                        }
+                    })
+                    .collect();
+                (
+                    id_seed,
+                    Submission { node_address: id.address, step, submission_idx: idx, rollouts },
+                )
+            },
+            |(id_seed, sub)| {
+                let id = Identity::from_seed(*id_seed);
+                let bytes = sub.encode_signed(&id);
+                let (env, payload) =
+                    Envelope::parse(&bytes).ok_or("envelope did not parse")?;
+                ensure(env.digest_matches(payload), "digest mismatch")?;
+                ensure(env.verify_sig(&id.secret()), "signature did not verify")?;
+                ensure(
+                    !env.verify_sig(&Identity::from_seed(id_seed ^ 1).secret()),
+                    "foreign key verified",
+                )?;
+                ensure_eq(env.node_address, sub.node_address, "node")?;
+                ensure_eq(env.step, sub.step, "step")?;
+                ensure_eq(env.submission_idx, sub.submission_idx, "idx")?;
+                let back = Submission::decode(payload).map_err(|e| e.to_string())?;
+                ensure_eq(back.rollouts.len(), sub.rollouts.len(), "rollout count")?;
+                ensure_eq(
+                    back.rollouts.last().unwrap().rollout.tokens.clone(),
+                    sub.rollouts.last().unwrap().rollout.tokens.clone(),
+                    "tokens roundtrip",
+                )
+            },
+        );
     }
 }

@@ -84,7 +84,7 @@ impl Manifest {
 }
 
 pub fn hex(d: &[u8]) -> String {
-    d.iter().map(|b| format!("{b:02x}")).collect()
+    crate::util::json::hex_string(d)
 }
 
 pub fn unhex(s: &str) -> anyhow::Result<[u8; 32]> {

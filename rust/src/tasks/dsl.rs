@@ -19,19 +19,28 @@ pub const MAX_PROGRAM_OPS: usize = 8;
 pub const MAX_LIST_LEN: usize = 64;
 pub const MAX_ABS_VALUE: i64 = 1_000_000_000;
 
-#[derive(Clone, Debug, thiserror::Error, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum DslError {
-    #[error("unknown op {0:?}")]
     UnknownOp(String),
-    #[error("program too long")]
     ProgramTooLong,
-    #[error("empty list for {0}")]
     EmptyList(&'static str),
-    #[error("value out of sandbox bounds")]
     ValueOverflow,
-    #[error("empty program")]
     EmptyProgram,
 }
+
+impl std::fmt::Display for DslError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DslError::UnknownOp(op) => write!(f, "unknown op {op:?}"),
+            DslError::ProgramTooLong => write!(f, "program too long"),
+            DslError::EmptyList(op) => write!(f, "empty list for {op}"),
+            DslError::ValueOverflow => write!(f, "value out of sandbox bounds"),
+            DslError::EmptyProgram => write!(f, "empty program"),
+        }
+    }
+}
+
+impl std::error::Error for DslError {}
 
 pub fn apply_op(op: &str, mut xs: Vec<i64>) -> Result<Vec<i64>, DslError> {
     match op {

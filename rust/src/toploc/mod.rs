@@ -3,14 +3,27 @@
 //! and sanity checks. Validators audit submissions far faster than
 //! generation (one prefill vs T decode steps — `benches/toploc_bench.rs`).
 //!
-//! # The five validation stages
+//! # The six validation stages
 //!
-//! Every rollout submission passes through five stages; the first three
-//! are pure CPU work, the last two need model prefill:
+//! Every rollout submission passes through six stages; the first four are
+//! pure CPU work, the last two need model prefill:
 //!
+//! 0. **Signature check** (`coordinator::validation::check_envelope`,
+//!    §2.4.1) — the upload's signed envelope is verified against the
+//!    ledger's address→key registry before anything else runs: HMAC
+//!    signature over the canonical header (node, step, submission index,
+//!    payload digest), then the digest against the payload bytes. A valid
+//!    envelope *proves* the sender, so every later failure — including a
+//!    malformed payload — slashes the signer; a missing or unprovable one
+//!    is rejected unslashed (`unsigned` / `forged` counters). Binding the
+//!    step into the signature makes replayed envelopes age out with the
+//!    staleness window. Governed by `require-signed-submissions` (on for
+//!    the real swarm; off restores legacy trust-the-claimed-address
+//!    behavior for old fixtures).
 //! 1. **File check** ([`Validator::check_file`]) — rpq decode + schema
 //!    (the paper's "parquet formatting check"). Malformed files are
-//!    rejected with best-effort envelope attribution.
+//!    rejected — attributed to the proven signer when signing is on,
+//!    best-effort otherwise.
 //! 2. **Sanity checks** ([`Validator::check_sanity`], §2.3.3) — staleness
 //!    window, fixed data-sampling seed, deterministic group ids, value
 //!    bounds, and reward re-verification against the environment.
@@ -31,7 +44,7 @@
 //! runs these stages as a two-stage pipeline over *waves* of submissions
 //! pulled from a bounded FIFO ingest queue:
 //!
-//! - **CPU stage** — stages 1–3 fan out across a `util::pool::ThreadPool`
+//! - **CPU stage** — stages 0–3 fan out across a `util::pool::ThreadPool`
 //!   (`validator-threads` knob), one job per submission.
 //! - **Prefill stage** — survivors are grouped by claimed policy version,
 //!   then [`pipeline::plan_prefills`] packs their rollouts — across

@@ -175,6 +175,105 @@ impl BenchReport {
     }
 }
 
+/// One comparable figure from a `BENCH_<name>.json`: a named scalar metric
+/// or a result's throughput.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchFigure {
+    pub key: String,
+    pub value: f64,
+    /// Comparison direction — the `metrics` map mixes speedups and
+    /// items/sec (higher is better) with waste/padding fractions, call
+    /// counts and overhead ratios (lower is better).
+    pub lower_is_better: bool,
+}
+
+/// Is a smaller value of this metric an improvement? Keyed off the naming
+/// conventions the benches actually use: `*_waste`, `*_fraction`/`*_frac`,
+/// `*_calls_*`, `*_overhead*` and raw `*_ns` timings shrink when things
+/// get better; throughputs, speedups and gains grow.
+fn lower_is_better(key: &str) -> bool {
+    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns"]
+        .iter()
+        .any(|marker| key.contains(marker))
+}
+
+/// Old-vs-new delta for one figure; `delta_frac` is `(new - old) / old`,
+/// so `-0.2` means the figure dropped 20%.
+#[derive(Clone, Debug)]
+pub struct FigureDelta {
+    pub key: String,
+    pub old: f64,
+    pub new: f64,
+    pub delta_frac: f64,
+    pub lower_is_better: bool,
+}
+
+impl FigureDelta {
+    /// Did this figure move in its bad direction by more than
+    /// `threshold_frac`?
+    pub fn regressed(&self, threshold_frac: f64) -> bool {
+        if self.lower_is_better {
+            self.delta_frac > threshold_frac.abs()
+        } else {
+            self.delta_frac < -threshold_frac.abs()
+        }
+    }
+}
+
+/// Extract the comparable figures from a parsed `BENCH_<name>.json`.
+pub fn bench_figures(doc: &Json) -> Vec<BenchFigure> {
+    let mut out = Vec::new();
+    if let Some(metrics) = doc.get("metrics").and_then(Json::as_obj) {
+        for (k, v) in metrics {
+            if let Some(value) = v.as_f64() {
+                out.push(BenchFigure {
+                    key: k.clone(),
+                    value,
+                    lower_is_better: lower_is_better(k),
+                });
+            }
+        }
+    }
+    for r in doc.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+        let (Some(name), Some(value)) = (
+            r.get("name").and_then(Json::as_str),
+            r.path(&["throughput", "value"]).and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        out.push(BenchFigure {
+            key: format!("throughput:{name}"),
+            value,
+            lower_is_better: false,
+        });
+    }
+    out
+}
+
+/// Compare two bench documents figure by figure (keys present in both).
+/// The bench-regression CI step feeds this the previous run's artifact
+/// and the current run's output and warns on moves past its threshold in
+/// each figure's bad direction.
+pub fn compare_bench_docs(old: &Json, new: &Json) -> Vec<FigureDelta> {
+    let new_figs: Vec<BenchFigure> = bench_figures(new);
+    bench_figures(old)
+        .into_iter()
+        .filter_map(|o| {
+            let n = new_figs.iter().find(|f| f.key == o.key)?;
+            if o.value == 0.0 {
+                return None;
+            }
+            Some(FigureDelta {
+                key: o.key,
+                old: o.value,
+                new: n.value,
+                delta_frac: (n.value - o.value) / o.value,
+                lower_is_better: o.lower_is_better,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +310,41 @@ mod tests {
         assert_eq!(first.get("name").and_then(Json::as_str), Some("noop"));
         assert!(first.path(&["throughput", "value"]).and_then(Json::as_f64).unwrap() > 0.0);
         let _ = std::fs::remove_file(path);
+    }
+
+    fn doc(speedup: f64, waste: f64, thr: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench":"x","metrics":{{"speedup":{speedup},"packed_waste":{waste}}},"results":[
+                {{"name":"verify","throughput":{{"value":{thr},"unit":"rollouts"}}}},
+                {{"name":"no-thr","throughput":null}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn comparator_flags_regressions_only() {
+        let deltas = compare_bench_docs(&doc(2.0, 0.30, 100.0), &doc(2.2, 0.10, 70.0));
+        assert_eq!(deltas.len(), 3);
+        let speedup = deltas.iter().find(|d| d.key == "speedup").unwrap();
+        assert!((speedup.delta_frac - 0.1).abs() < 1e-9);
+        assert!(!speedup.regressed(0.15));
+        let thr = deltas.iter().find(|d| d.key == "throughput:verify").unwrap();
+        assert!((thr.delta_frac + 0.3).abs() < 1e-9);
+        assert!(thr.regressed(0.15));
+        assert!(!thr.regressed(0.5));
+        // Lower-is-better figures invert: padding waste dropping 67% is an
+        // improvement, not a regression...
+        let waste = deltas.iter().find(|d| d.key == "packed_waste").unwrap();
+        assert!(waste.lower_is_better);
+        assert!(waste.delta_frac < 0.0);
+        assert!(!waste.regressed(0.15));
+        // ...and waste *rising* is one.
+        let worse = compare_bench_docs(&doc(2.0, 0.10, 100.0), &doc(2.0, 0.30, 100.0));
+        assert!(worse.iter().find(|d| d.key == "packed_waste").unwrap().regressed(0.15));
+        // Figures missing on either side (or zero baselines) are skipped,
+        // not treated as regressions.
+        let empty = Json::parse(r#"{"bench":"x","metrics":{},"results":[]}"#).unwrap();
+        assert!(compare_bench_docs(&empty, &doc(2.0, 0.1, 100.0)).is_empty());
+        assert!(compare_bench_docs(&doc(0.0, 0.0, 0.0), &doc(2.0, 0.1, 100.0)).is_empty());
     }
 }

@@ -61,6 +61,20 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Boolean knob with a default: `--key` or `--key true` turns it on,
+    /// `--key false` (or `0`/`off`) turns it off — the form on-by-default
+    /// settings need, which `has_flag` alone cannot express.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        if self.has_flag(key) {
+            return true;
+        }
+        match self.get(key) {
+            Some("true") | Some("1") | Some("on") => true,
+            Some("false") | Some("0") | Some("off") => false,
+            _ => default,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +109,15 @@ mod tests {
         let a = parse("--a --b v");
         assert!(a.has_flag("a"));
         assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn bool_knob_forms() {
+        let a = parse("--x false --y --z true");
+        assert!(!a.bool_or("x", true));
+        assert!(a.bool_or("y", false));
+        assert!(a.bool_or("z", false));
+        assert!(a.bool_or("absent", true));
+        assert!(!a.bool_or("absent", false));
     }
 }

@@ -15,12 +15,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -91,6 +98,27 @@ impl Json {
             cur = cur.get(k)?;
         }
         Some(cur)
+    }
+
+    /// Byte blobs (signatures, digests) hex-encode into a string. They
+    /// must never ride [`Json::Num`]: numbers here are f64, exact only up
+    /// to 2^53, so anything wider than 48-bit node addresses would be
+    /// silently mangled (see `protocol::identity::ADDRESS_MASK`).
+    pub fn hex(bytes: &[u8]) -> Json {
+        Json::Str(hex_string(bytes))
+    }
+
+    /// Decode a [`Json::hex`]-encoded string back into bytes. `None` for
+    /// non-strings, odd lengths or non-hex characters.
+    pub fn as_hex_bytes(&self) -> Option<Vec<u8>> {
+        let s = self.as_str()?;
+        if s.len() % 2 != 0 {
+            return None;
+        }
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(s.get(i..i + 2)?, 16).ok())
+            .collect()
     }
 
     pub fn parse(s: &str) -> Result<Json, ParseError> {
@@ -315,6 +343,12 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Canonical lowercase hex encoding for byte blobs — the single
+/// implementation behind [`Json::hex`] and `shardcast::manifest::hex`.
+pub fn hex_string(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
 fn escape(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -416,5 +450,29 @@ mod tests {
         let v = Json::obj(vec![("x", 1u64.into()), ("y", "s".into())]);
         assert_eq!(v.get("x").unwrap().as_u64().unwrap(), 1);
         assert_eq!(v.get("y").unwrap().as_str().unwrap(), "s");
+    }
+
+    #[test]
+    fn byte_blobs_hex_roundtrip_lossless() {
+        // Regression guard for why signatures must not ride Json::Num:
+        // numbers are f64 (53-bit mantissa), so 54-bit integers corrupt.
+        let big = (1u64 << 53) + 1;
+        assert_ne!(Json::Num(big as f64).as_u64(), Some(big));
+        // 48-bit node addresses (protocol::identity::ADDRESS_MASK) are
+        // exact — the largest one round-trips through print/parse.
+        let addr = 0xFFFF_FFFF_FFFFu64;
+        let j = Json::from(addr);
+        assert_eq!(j.as_u64(), Some(addr));
+        assert_eq!(Json::parse(&j.to_string()).unwrap().as_u64(), Some(addr));
+        // 32-byte signatures go hex and round-trip losslessly, including
+        // through serialization.
+        let sig: Vec<u8> = (0..32).map(|i| (i * 37 + 251) as u8).collect();
+        let j = Json::hex(&sig);
+        assert_eq!(j.as_hex_bytes().unwrap(), sig);
+        assert_eq!(Json::parse(&j.to_string()).unwrap().as_hex_bytes().unwrap(), sig);
+        // Malformed hex is rejected, not mangled.
+        assert_eq!(Json::Str("abc".into()).as_hex_bytes(), None);
+        assert_eq!(Json::Str("zz".into()).as_hex_bytes(), None);
+        assert_eq!(Json::Num(3.0).as_hex_bytes(), None);
     }
 }

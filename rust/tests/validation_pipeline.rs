@@ -3,16 +3,21 @@
 //! byte-identical to the sequential single-submission full-pad reference
 //! on mixed honest/cheating submissions — and therefore identical
 //! accept/slash/stale counters — regardless of thread count or bucket
-//! grain.
+//! grain, in both the legacy unsigned mode and the signed-envelope mode
+//! (stage 0). Plus adversarial end-to-end coverage for the envelope
+//! layer: framing, post-signing tampers, unregistered senders, unsigned
+//! uploads and replayed old envelopes.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use intellect2::config::RunConfig;
 use intellect2::coordinator::validation::{
-    validate_submission_fullpad, ValidationPipeline, Verdict,
+    validate_submission_fullpad, SigOracle, ValidationPipeline, Verdict,
 };
 use intellect2::coordinator::{group_id_base, RolloutGenerator};
-use intellect2::rl::rollout_file::Submission;
+use intellect2::protocol::{Identity, Ledger};
+use intellect2::rl::rollout_file::{Envelope, Submission};
 use intellect2::runtime::{EngineHost, ParamSet, Runtime};
 use intellect2::tasks::dataset::{Dataset, DatasetConfig};
 use intellect2::toploc::{Validator, ValidatorConfig};
@@ -29,6 +34,11 @@ struct Fixture {
     cfg: RunConfig,
     /// The trusted checkpoint, registered as policy version 1.
     params: Arc<ParamSet>,
+    /// Key registry: every identity below is registered here except
+    /// `unregistered`.
+    ledger: Ledger,
+    /// address → identity for sealing envelopes in tests.
+    ids: BTreeMap<u64, Identity>,
     /// Honest submissions from 3 nodes x 2 submission indices, policy
     /// version 1 (mixed lengths via sampled EOS terminations).
     honest: Vec<Submission>,
@@ -38,6 +48,10 @@ struct Fixture {
     /// Honest-looking submission claiming version 5, which the trainer
     /// never published (provably fabricated).
     future: Submission,
+    /// Identity with no ledger-registered key, and its (otherwise honest)
+    /// submission.
+    unregistered: Identity,
+    unregistered_sub: Submission,
 }
 
 impl Fixture {
@@ -59,34 +73,56 @@ impl Fixture {
         }));
         let generator = RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg);
         let params = Arc::new(host.init_params(9).unwrap());
+        let ledger = Ledger::new();
+        let mut ids = BTreeMap::new();
+        let mut identity = |seed: u64, register: bool| {
+            let id = Identity::from_seed(seed);
+            if register {
+                ledger.register_key(&id);
+            }
+            ids.insert(id.address, id.clone());
+            id
+        };
+        let gen = |id: &Identity, step: u64, idx: u64| {
+            generator
+                .generate_submission(
+                    &params,
+                    id.address,
+                    step,
+                    idx,
+                    2,
+                    cfg.group_size,
+                    group_id_base(id.address, step, idx),
+                )
+                .unwrap()
+        };
         let mut honest = Vec::new();
-        for node in [11u64, 22, 33] {
+        for seed in [11u64, 22, 33] {
+            let id = identity(seed, true);
             for idx in 0..2u64 {
-                honest.push(
-                    generator
-                        .generate_submission(
-                            &params,
-                            node,
-                            1,
-                            idx,
-                            2,
-                            cfg.group_size,
-                            group_id_base(node, 1, idx),
-                        )
-                        .unwrap(),
-                );
+                honest.push(gen(&id, 1, idx));
             }
         }
         // Self-consistent (seed formula, group ids) at their claimed
         // steps, so they pass the CPU stages and exercise the
         // version-miss paths instead of SeedMismatch.
-        let old = generator
-            .generate_submission(&params, 44, 0, 0, 2, cfg.group_size, group_id_base(44, 0, 0))
-            .unwrap();
-        let future = generator
-            .generate_submission(&params, 55, 5, 0, 2, cfg.group_size, group_id_base(55, 5, 0))
-            .unwrap();
-        Fixture { host, dataset, cfg, params, honest, old, future }
+        let old = gen(&identity(44, true), 0, 0);
+        let future = gen(&identity(55, true), 5, 0);
+        let unregistered = identity(99, false);
+        let unregistered_sub = gen(&unregistered, 1, 0);
+        Fixture {
+            host,
+            dataset,
+            cfg,
+            params,
+            ledger,
+            ids,
+            honest,
+            old,
+            future,
+            unregistered,
+            unregistered_sub,
+        }
     }
 
     fn vcfg(&self) -> ValidatorConfig {
@@ -101,14 +137,37 @@ impl Fixture {
         |v| (v == 1).then(|| Arc::clone(&self.params))
     }
 
+    /// The ledger's signature check as the stage-0 oracle (key bytes
+    /// never leave the ledger).
+    fn keys(&self) -> Arc<SigOracle> {
+        let ledger = self.ledger.clone();
+        Arc::new(move |addr, msg: &[u8], sig: &[u8; 32]| ledger.check_address_sig(addr, msg, sig))
+    }
+
+    /// Seal `sub` under its own sender's key (the honest upload path).
+    fn sign(&self, sub: &Submission) -> Vec<u8> {
+        sub.encode_signed(&self.ids[&sub.node_address])
+    }
+
+    /// Encode `sub` signed or raw depending on the mode under test.
+    fn encode(&self, sub: &Submission, signed: bool) -> Vec<u8> {
+        if signed {
+            self.sign(sub)
+        } else {
+            sub.encode()
+        }
+    }
+
     /// The sequential pre-pipeline reference, one submission at a time.
-    fn fullpad_verdicts(&self, batch: &[Vec<u8>], current: u64) -> Vec<Verdict> {
+    fn fullpad_verdicts(&self, batch: &[Vec<u8>], current: u64, signed: bool) -> Vec<Verdict> {
         let validator = Validator::new(self.vcfg());
+        let keys = signed.then(|| self.keys());
         batch
             .iter()
             .map(|bytes| {
                 validate_submission_fullpad(
                     &validator,
+                    keys.as_ref(),
                     bytes,
                     &self.dataset,
                     &self.cfg.reward,
@@ -122,8 +181,8 @@ impl Fixture {
             .collect()
     }
 
-    fn pipeline(&self, threads: usize, bucket: usize) -> ValidationPipeline {
-        ValidationPipeline::new(
+    fn pipeline(&self, threads: usize, bucket: usize, signed: bool) -> ValidationPipeline {
+        let p = ValidationPipeline::new(
             Validator::new(self.vcfg()),
             Arc::clone(&self.dataset),
             self.cfg.reward.clone(),
@@ -131,7 +190,12 @@ impl Fixture {
             self.cfg.max_new_tokens,
             threads,
             bucket,
-        )
+        );
+        if signed {
+            p.with_signing(self.keys())
+        } else {
+            p
+        }
     }
 }
 
@@ -141,9 +205,12 @@ fn fingerprints(verdicts: &[Verdict]) -> Vec<(&'static str, Option<u64>, String)
 
 /// What the swarm loop would do with these verdicts — the counters the
 /// multi-threaded validator must keep identical to the sequential path.
-fn counters(verdicts: &[Verdict]) -> (u64, u64, u64, u64, u64, u64, u64) {
+/// `(accepted, verified, rejected, slashed, unattributed, stale,
+/// stale_rollouts, unsigned, forged)`.
+fn counters(verdicts: &[Verdict]) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64) {
     let (mut accepted, mut verified, mut rejected, mut slashed) = (0, 0, 0, 0);
     let (mut unattributed, mut stale, mut stale_rollouts) = (0, 0, 0);
+    let (mut unsigned, mut forged) = (0, 0);
     for v in verdicts {
         match v {
             Verdict::Accept(sub) => {
@@ -162,28 +229,39 @@ fn counters(verdicts: &[Verdict]) -> (u64, u64, u64, u64, u64, u64, u64) {
                     None => unattributed += 1,
                 }
             }
+            Verdict::Unsigned { .. } => {
+                rejected += 1;
+                unsigned += 1;
+            }
+            Verdict::Forged { .. } => {
+                rejected += 1;
+                forged += 1;
+            }
         }
     }
-    (accepted, verified, rejected, slashed, unattributed, stale, stale_rollouts)
+    (accepted, verified, rejected, slashed, unattributed, stale, stale_rollouts, unsigned, forged)
 }
 
 /// A deterministic mixed batch: honest + every cheating/staleness flavor.
-fn mixed_batch(fx: &Fixture) -> Vec<Vec<u8>> {
-    let mut batch: Vec<Vec<u8>> = fx.honest.iter().map(Submission::encode).collect();
+/// In signed mode the stage-0 attack surface is included too.
+fn mixed_batch(fx: &Fixture, signed: bool) -> Vec<Vec<u8>> {
+    let mut batch: Vec<Vec<u8>> = fx.honest.iter().map(|s| fx.encode(s, signed)).collect();
 
-    // Reward hacking (stage-2 reject): claim every task solved.
+    // Reward hacking (stage-2 reject): claim every task solved. In signed
+    // mode the cheater seals its own tampered payload — a valid envelope
+    // over dishonest contents, so the slash is *proven*.
     let mut liar = fx.honest[0].clone();
     for w in &mut liar.rollouts {
         w.rollout.task_reward = 1.0;
         w.rollout.reward = 1.0;
     }
-    batch.push(liar.encode());
+    batch.push(fx.encode(&liar, signed));
 
     // Tampered commitment (stage-4 reject) on a non-first rollout, so the
     // min-rollout-index attribution is exercised.
-    let mut forged = fx.honest[1].clone();
-    forged.commitment_tamper(2);
-    batch.push(forged.encode());
+    let mut forged_commit = fx.honest[1].clone();
+    forged_commit.commitment_tamper(2);
+    batch.push(fx.encode(&forged_commit, signed));
 
     // Fabricated probability reports (stage-5 reject).
     let mut fabricated = fx.honest[2].clone();
@@ -192,19 +270,40 @@ fn mixed_batch(fx: &Fixture) -> Vec<Vec<u8>> {
             *p = 0.97;
         }
     }
-    batch.push(fabricated.encode());
+    batch.push(fx.encode(&fabricated, signed));
 
     // Aged-out policy version (version-miss -> stale, not slashable).
-    batch.push(fx.old.encode());
+    batch.push(fx.encode(&fx.old, signed));
 
     // Unpublished future version (version-miss -> provably fabricated).
-    batch.push(fx.future.encode());
+    batch.push(fx.encode(&fx.future, signed));
 
-    // Mangled beyond attribution (checksum broken).
-    let mut mangled = fx.honest[5].encode();
-    let mid = mangled.len() / 2;
-    mangled[mid] ^= 0x55;
+    // Payload mangled in flight. Unsigned mode: checksum broken beyond
+    // attribution. Signed mode: the signed digest no longer covers the
+    // bytes — forged, and the signer is NOT slashed for bytes they
+    // provably did not vouch for.
+    let mut mangled = fx.encode(&fx.honest[5], signed);
+    let n = mangled.len();
+    mangled[n / 2] ^= 0x55;
     batch.push(mangled);
+
+    if signed {
+        // Unsigned upload under a signature-required validator.
+        batch.push(fx.honest[3].encode());
+        // Framing: the node behind `future` re-uses its own signature but
+        // claims the first honest node's address — must not slash the
+        // framed node.
+        let framer = &fx.ids[&fx.future.node_address];
+        let victim = fx.honest[0].node_address;
+        let payload = fx.honest[0].encode();
+        let sealed = Envelope::seal(framer, 1, 0, &payload);
+        let (mut env, payload) = Envelope::parse(&sealed).unwrap();
+        env.node_address = victim;
+        batch.push(env.encode(payload));
+        // Unregistered sender: a valid signature from a key the ledger
+        // does not know.
+        batch.push(fx.unregistered_sub.encode_signed(&fx.unregistered));
+    }
 
     batch
 }
@@ -230,38 +329,52 @@ fn packed_pipeline_matches_fullpad_reference() {
         return;
     }
     let fx = Fixture::build();
-    let batch = mixed_batch(&fx);
-    let want = fingerprints(&fx.fullpad_verdicts(&batch, 1));
-    // Sanity on the mix itself: accepts, rejects (attributed and not) and
-    // stales are all present, so the equivalence below is non-trivial.
-    let (accepted, _, rejected, slashed, unattributed, stale, _) =
-        counters(&fx.fullpad_verdicts(&batch, 1));
-    assert!(accepted >= 1, "no honest submission accepted: {want:?}");
-    assert!(rejected >= 4 && slashed >= 3 && unattributed >= 1, "mix degenerated: {want:?}");
-    assert!(stale >= 1, "no stale verdict in the mix: {want:?}");
+    for signed in [false, true] {
+        let batch = mixed_batch(&fx, signed);
+        let want = fingerprints(&fx.fullpad_verdicts(&batch, 1, signed));
+        // Sanity on the mix itself: accepts, rejects and stales are all
+        // present, so the equivalence below is non-trivial.
+        let (accepted, _, rejected, slashed, unattributed, stale, _, unsigned, forged) =
+            counters(&fx.fullpad_verdicts(&batch, 1, signed));
+        assert!(accepted >= 1, "no honest submission accepted: {want:?}");
+        assert!(rejected >= 4 && slashed >= 3, "mix degenerated: {want:?}");
+        assert!(stale >= 1, "no stale verdict in the mix: {want:?}");
+        if signed {
+            // The stage-0 flavors are all represented: the in-flight
+            // mangle + framing + unregistered sender are forged, the raw
+            // upload is unsigned, and nothing is unattributed (stage 0
+            // always names a claimed sender or refuses the upload whole).
+            assert_eq!(unsigned, 1, "{want:?}");
+            assert_eq!(forged, 3, "{want:?}");
+            assert_eq!(unattributed, 0, "{want:?}");
+        } else {
+            assert!(unattributed >= 1, "mix degenerated: {want:?}");
+            assert_eq!(unsigned + forged, 0, "{want:?}");
+        }
 
-    // Threaded + packed + bucketed, across thread counts and bucket
-    // grains: verdicts must be byte-identical to the reference.
-    for (threads, bucket) in [(1usize, 0usize), (4, 0), (4, 1), (4, 4096), (2, 7)] {
-        let pipeline = fx.pipeline(threads, bucket);
-        let got = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
-        assert_eq!(
-            fingerprints(&got),
-            want,
-            "pipeline(threads={threads}, bucket={bucket}) diverged from reference"
+        // Threaded + packed + bucketed, across thread counts and bucket
+        // grains: verdicts must be byte-identical to the reference.
+        for (threads, bucket) in [(1usize, 0usize), (4, 0), (4, 1), (4, 4096), (2, 7)] {
+            let pipeline = fx.pipeline(threads, bucket, signed);
+            let got = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
+            assert_eq!(
+                fingerprints(&got),
+                want,
+                "pipeline(threads={threads}, bucket={bucket}, signed={signed}) diverged"
+            );
+        }
+
+        // Packing really packed: the surviving submissions reach at most a
+        // handful of prefill calls (the baseline issues one full-frame
+        // call per submission that reaches stages 4–5).
+        let pipeline = fx.pipeline(4, 0, signed);
+        let _ = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
+        let calls = pipeline.prefill_calls.get();
+        assert!(
+            (1..=3).contains(&calls),
+            "expected the wave to pack into 1..=3 prefill calls, got {calls} (signed={signed})"
         );
     }
-
-    // Packing really packed: 11 submissions survive to at most a handful
-    // of prefill calls (the baseline issues one full-frame call per
-    // submission that reaches stages 4–5).
-    let pipeline = fx.pipeline(4, 0);
-    let _ = pipeline.validate_batch(batch.clone(), &|| 1, &fx.lookup());
-    let calls = pipeline.prefill_calls.get();
-    assert!(
-        (1..=3).contains(&calls),
-        "expected the wave to pack into 1..=3 prefill calls, got {calls}"
-    );
 }
 
 #[test]
@@ -271,11 +384,129 @@ fn threaded_counters_match_sequential() {
         return;
     }
     let fx = Fixture::build();
-    let batch = mixed_batch(&fx);
-    let sequential = fx.pipeline(1, 0).validate_batch(batch.clone(), &|| 1, &fx.lookup());
-    let threaded = fx.pipeline(4, 0).validate_batch(batch, &|| 1, &fx.lookup());
-    assert_eq!(counters(&sequential), counters(&threaded));
-    assert_eq!(fingerprints(&sequential), fingerprints(&threaded));
+    for signed in [false, true] {
+        let batch = mixed_batch(&fx, signed);
+        let sequential = fx.pipeline(1, 0, signed).validate_batch(batch.clone(), &|| 1, &fx.lookup());
+        let threaded = fx.pipeline(4, 0, signed).validate_batch(batch, &|| 1, &fx.lookup());
+        assert_eq!(counters(&sequential), counters(&threaded), "signed={signed}");
+        assert_eq!(fingerprints(&sequential), fingerprints(&threaded), "signed={signed}");
+    }
+}
+
+/// The tentpole's adversarial end-to-end cases, one by one, with explicit
+/// attribution assertions.
+#[test]
+fn signed_envelope_adversaries() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let pipeline = fx.pipeline(4, 0, true);
+    let victim = fx.honest[0].node_address;
+    let framer_id = &fx.ids[&fx.future.node_address];
+    let liar_addr = fx.honest[2].node_address;
+
+    // 1. Framing: a submission "from" the victim signed by someone else.
+    let payload = fx.honest[0].encode();
+    let sealed = Envelope::seal(framer_id, 1, 0, &payload);
+    let (mut env, payload_bytes) = Envelope::parse(&sealed).unwrap();
+    env.node_address = victim;
+    let framed = env.encode(payload_bytes);
+    // 2. Tamper-after-signing: valid header, swapped payload byte.
+    let mut tampered = fx.sign(&fx.honest[1]);
+    let k = tampered.len() - 3;
+    tampered[k] ^= 0x20;
+    // 3. Tamper-then-sign: the signer seals its own lie (reward hack).
+    let mut liar = fx.honest[2].clone();
+    for w in &mut liar.rollouts {
+        w.rollout.task_reward = 1.0;
+        w.rollout.reward = 1.0;
+    }
+    let liar_signed = fx.sign(&liar);
+    // 4. Signed garbage: proven malformed payload.
+    let garbage = Envelope::seal(framer_id, 1, 0, b"not an rpq file");
+    // 5. Unregistered sender.
+    let unknown = fx.unregistered_sub.encode_signed(&fx.unregistered);
+    // 6. The victim's genuine submission, to prove it still lands.
+    let genuine = fx.sign(&fx.honest[0]);
+
+    let verdicts = pipeline.validate_batch(
+        vec![framed, tampered, liar_signed, garbage, unknown, genuine],
+        &|| 1,
+        &fx.lookup(),
+    );
+    match &verdicts[0] {
+        Verdict::Forged { claimed, .. } => assert_eq!(*claimed, victim),
+        v => panic!("framing: {:?}", v.fingerprint()),
+    }
+    match &verdicts[1] {
+        Verdict::Forged { claimed, .. } => assert_eq!(*claimed, fx.honest[1].node_address),
+        v => panic!("tamper-after-signing: {:?}", v.fingerprint()),
+    }
+    match &verdicts[2] {
+        // The signer vouched for the tampered payload: slash the signer.
+        Verdict::Reject { node, .. } => assert_eq!(*node, Some(liar_addr)),
+        v => panic!("tamper-then-sign: {:?}", v.fingerprint()),
+    }
+    match &verdicts[3] {
+        // Malformed payload under a valid envelope: proven, slash signer.
+        Verdict::Reject { node, .. } => assert_eq!(*node, Some(framer_id.address)),
+        v => panic!("signed garbage: {:?}", v.fingerprint()),
+    }
+    assert!(matches!(&verdicts[4], Verdict::Forged { .. }), "unregistered sender");
+    match &verdicts[5] {
+        Verdict::Accept(sub) => assert_eq!(sub.node_address, victim),
+        v => panic!("genuine submission: {:?}", v.fingerprint()),
+    }
+    // The framed victim was never slashed: its only Reject-with-node
+    // verdicts would have named it, and none did.
+    for v in &verdicts {
+        if let Verdict::Reject { node: Some(n), .. } = v {
+            assert_ne!(*n, victim, "framed node must not be slashed");
+        }
+    }
+}
+
+/// Replay binding: a captured envelope re-submitted later fails the
+/// staleness window (its signed step aged out) without slashing anyone —
+/// and it cannot be re-targeted at a newer step without the key.
+#[test]
+fn replayed_envelopes_age_out() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let pipeline = fx.pipeline(1, 0, true);
+    let signed = fx.sign(&fx.honest[0]);
+
+    // Fresh: accepted at current step 1.
+    let v = pipeline.validate_batch(vec![signed.clone()], &|| 1, &fx.lookup());
+    assert!(matches!(v[0], Verdict::Accept(_)), "{:?}", v[0].fingerprint());
+
+    // Replayed verbatim much later: outside the staleness window. Dropped
+    // and counted — never slashed (being replayed is not the signer's
+    // dishonesty; the window bound is what makes replays worthless).
+    let v = pipeline.validate_batch(vec![signed.clone()], &|| 9, &fx.lookup());
+    match &v[0] {
+        Verdict::Stale { node, submitted, current, .. } => {
+            assert_eq!(*node, fx.honest[0].node_address);
+            assert_eq!((*submitted, *current), (1, 9));
+        }
+        v => panic!("replay: {:?}", v.fingerprint()),
+    }
+
+    // An attacker cannot refresh the replay: rewriting the envelope's
+    // step breaks the signature (it is bound into the signed bytes).
+    let (env, payload) = Envelope::parse(&signed).unwrap();
+    let refreshed = Envelope { step: 9, ..env }.encode(payload);
+    let v = pipeline.validate_batch(vec![refreshed], &|| 9, &fx.lookup());
+    assert!(
+        matches!(&v[0], Verdict::Forged { .. }),
+        "step-rewritten replay must be forged: {:?}",
+        v[0].fingerprint()
+    );
 }
 
 #[test]
@@ -285,17 +516,20 @@ fn pipeline_equivalence_property_random_tampers() {
         return;
     }
     let fx = Fixture::build();
-    // Property: for any per-submission tamper assignment, the packed
-    // pipeline's verdicts equal the full-pad reference's.
+    // Property: for any per-submission tamper assignment, in either
+    // signing mode, the packed pipeline's verdicts equal the full-pad
+    // reference's.
     check(
         "packed pipeline == full-pad reference under random tampering",
         6,
         |rng: &mut Rng, _size| {
-            fx.honest
+            let signed = rng.bool(0.5);
+            let batch = fx
+                .honest
                 .iter()
                 .map(|sub| {
                     let mut sub = sub.clone();
-                    match rng.usize(6) {
+                    match rng.usize(7) {
                         0 => {} // honest
                         1 => {
                             for w in &mut sub.rollouts {
@@ -311,17 +545,24 @@ fn pipeline_equivalence_property_random_tampers() {
                             }
                         }
                         4 => sub = fx.old.clone(),
-                        _ => sub = fx.future.clone(),
+                        5 => sub = fx.future.clone(),
+                        _ => {
+                            // In-flight bit flip (position varies).
+                            let mut bytes = fx.encode(&sub, signed);
+                            let k = rng.usize(bytes.len());
+                            bytes[k] ^= 0x10;
+                            return DebugBytes(bytes);
+                        }
                     }
-                    sub.encode()
+                    DebugBytes(fx.encode(&sub, signed))
                 })
-                .map(DebugBytes)
-                .collect::<Vec<_>>()
+                .collect::<Vec<_>>();
+            (signed, batch)
         },
-        |batch| {
+        |(signed, batch)| {
             let bytes: Vec<Vec<u8>> = batch.iter().map(|b| b.0.clone()).collect();
-            let want = fingerprints(&fx.fullpad_verdicts(&bytes, 1));
-            let got = fx.pipeline(4, 0).validate_batch(bytes, &|| 1, &fx.lookup());
+            let want = fingerprints(&fx.fullpad_verdicts(&bytes, 1, *signed));
+            let got = fx.pipeline(4, 0, *signed).validate_batch(bytes, &|| 1, &fx.lookup());
             ensure_eq(fingerprints(&got), want, "pipeline diverged")
         },
     );

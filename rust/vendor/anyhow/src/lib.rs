@@ -1,0 +1,154 @@
+//! Vendored minimal `anyhow`: an erased error type plus the `anyhow!`,
+//! `bail!` and `ensure!` macros, covering the subset of the real crate's
+//! API this repository uses (no `Context`, no downcasting, no backtraces).
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion powering `?` without colliding
+//! with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// Erased error: any `std::error::Error + Send + Sync` or a plain message.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-only error (what `anyhow!("...")` produces).
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Message {}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(Message(message.to_string())))
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// The chain of `source()` causes, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next: Option<&(dyn std::error::Error + 'static)> = Some(self.0.as_ref());
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// `anyhow!("fmt", args...)` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt", args...)` — return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "fmt", args...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf failure")
+        }
+    }
+
+    impl std::error::Error for Leaf {}
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Err(Leaf.into())
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(fails(true).unwrap_err().to_string(), "leaf failure");
+        let e: Error = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        assert_eq!(format!("{e:?}"), "x = 7");
+        let io: Error = std::io::Error::other("disk on fire").into();
+        assert_eq!(io.to_string(), "disk on fire");
+        assert_eq!(io.chain().count(), 1);
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stop {}", "here");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop here");
+    }
+}

@@ -1,0 +1,126 @@
+//! Vendored from-scratch HMAC (RFC 2104) over the vendored SHA-256,
+//! exposing the subset of the `hmac` crate API this repository uses:
+//! `Hmac<Sha256>` with the `Mac` trait's `new_from_slice` / `update` /
+//! `finalize().into_bytes()`. Correctness is pinned by the RFC 4231 test
+//! vectors below.
+
+use std::marker::PhantomData;
+
+use sha2::{Digest, Sha256};
+
+const BLOCK: usize = 64;
+
+/// HMAC keyed with a hash function `D`. Only `Hmac<Sha256>` is
+/// implemented — the one instantiation the repo uses.
+#[derive(Clone)]
+pub struct Hmac<D> {
+    inner: Sha256,
+    opad_key: [u8; BLOCK],
+    _marker: PhantomData<D>,
+}
+
+/// Finished MAC tag; `.into_bytes()` yields the 32-byte output.
+pub struct Tag(sha2::Output);
+
+impl Tag {
+    pub fn into_bytes(self) -> sha2::Output {
+        self.0
+    }
+}
+
+/// Key-length error. HMAC accepts any key length, so this is never
+/// produced here — it exists so `new_from_slice(..).expect(..)` type-checks
+/// like the real crate.
+#[derive(Debug)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("invalid hmac key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// The subset of the `digest` crate's `Mac` trait this repo calls.
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> Tag;
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        // Keys longer than the block size are hashed first (RFC 2104).
+        let mut padded = [0u8; BLOCK];
+        if key.len() > BLOCK {
+            let d: [u8; 32] = Sha256::digest(key).into();
+            padded[..32].copy_from_slice(&d);
+        } else {
+            padded[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad_key = [0u8; BLOCK];
+        let mut opad_key = [0u8; BLOCK];
+        for ((ip, op), p) in ipad_key.iter_mut().zip(opad_key.iter_mut()).zip(padded) {
+            *ip = p ^ 0x36;
+            *op = p ^ 0x5c;
+        }
+        let mut inner = Sha256::new();
+        inner.update(ipad_key);
+        Ok(Hmac { inner, opad_key, _marker: PhantomData })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> Tag {
+        let inner_digest = self.inner.finalize();
+        let mut outer = Sha256::new();
+        outer.update(self.opad_key);
+        outer.update(inner_digest.as_slice());
+        Tag(outer.finalize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hmac(key: &[u8], msg: &[u8]) -> String {
+        let mut m = Hmac::<Sha256>::new_from_slice(key).unwrap();
+        m.update(msg);
+        let out: [u8; 32] = m.finalize().into_bytes().into();
+        out.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn rfc4231_vectors() {
+        // Case 1: 20 x 0x0b key, "Hi There".
+        assert_eq!(
+            hmac(&[0x0b; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // Case 2: key "Jefe", msg "what do ya want for nothing?".
+        assert_eq!(
+            hmac(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // Case 3: 20 x 0xaa key, 50 x 0xdd message.
+        assert_eq!(
+            hmac(&[0xaa; 20], &[0xdd; 50]),
+            "773ea91e36800e46854db8ebd09181a72959098b3ef8c122d9635514ced565fe"
+        );
+        // Case 6: 131-byte key (> block size, gets hashed first).
+        assert_eq!(
+            hmac(&[0xaa; 131], b"Test Using Larger Than Block-Size Key - Hash Key First"),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn distinct_keys_distinct_tags() {
+        assert_ne!(hmac(&[1; 32], b"msg"), hmac(&[2; 32], b"msg"));
+        assert_ne!(hmac(&[1; 32], b"msg"), hmac(&[1; 32], b"msh"));
+    }
+}

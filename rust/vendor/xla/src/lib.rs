@@ -1,0 +1,266 @@
+//! Vendored **stub** of the PJRT/XLA bindings (`xla` crate) the runtime
+//! layer links against.
+//!
+//! The real bindings wrap native XLA (HLO text -> HloModuleProto ->
+//! compile -> execute) and come from the external build harness together
+//! with the AOT model artifacts; they cannot be built from a bare checkout.
+//! This stub keeps the crate graph closed so `cargo build && cargo test`
+//! work offline:
+//!
+//! - **Host-side literal plumbing is real** ([`Literal`] creation,
+//!   `to_vec`, `get_first_element`, `element_count`, tuple decomposition)
+//!   — unit tests exercise these without any artifacts.
+//! - **Device ops are gated**: [`HloModuleProto::from_text_file`] and
+//!   [`PjRtClient::compile`] return a descriptive error. Engine-dependent
+//!   tests and benches all self-skip when `artifacts/<size>/spec.json` is
+//!   absent, so a stub build never reaches these paths in CI.
+//!
+//! Deployments with real XLA replace `vendor/xla` with the actual bindings
+//! (same API surface); no first-party code changes.
+
+use std::fmt;
+
+/// Stub error: any attempted device op reports itself clearly.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "vendored xla stub: {what} requires the real PJRT bindings (external build harness)"
+    ))
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Element types host code moves in and out of literals.
+pub trait NativeType: Copy {
+    fn scalar_literal(v: Self) -> Literal;
+    fn extract(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+/// Host tensor: typed data + shape, or a tuple of literals.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    S32 { data: Vec<i32>, shape: Vec<usize> },
+    U32 { data: Vec<u32>, shape: Vec<usize> },
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn scalar_literal(v: f32) -> Literal {
+        Literal::F32 { data: vec![v], shape: vec![] }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn scalar_literal(v: i32) -> Literal {
+        Literal::S32 { data: vec![v], shape: vec![] }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<i32>> {
+        match lit {
+            Literal::S32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn scalar_literal(v: u32) -> Literal {
+        Literal::U32 { data: vec![v], shape: vec![] }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<u32>> {
+        match lit {
+            Literal::U32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::scalar_literal(v)
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {shape:?} needs {}",
+                bytes.len(),
+                n * 4
+            )));
+        }
+        let shape = shape.to_vec();
+        Ok(match ty {
+            ElementType::F32 => Literal::F32 {
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                shape,
+            },
+            ElementType::S32 => Literal::S32 {
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                shape,
+            },
+            ElementType::U32 => Literal::U32 {
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                shape,
+            },
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::S32 { data, .. } => data.len(),
+            Literal::U32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self).ok_or_else(|| Error("literal type mismatch in to_vec".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(std::mem::take(parts)),
+            _ => Err(Error("decompose_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (device-side in the real bindings; gated here).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by `execute` (never constructed here).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Client handle. Construction succeeds (host-only work is fine); the
+/// first compile reports the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let data = [1.0f32, -2.0, 3.5, 0.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let mut t = Literal::Tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        assert_eq!(t.element_count(), 2);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(1i32).decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn device_ops_report_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto(()));
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("vendored xla stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

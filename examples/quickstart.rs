@@ -27,10 +27,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("== INTELLECT-2 quickstart ({} model, async-{}) ==", cfg.model, cfg.async_level);
     let pipeline = SyncPipeline::new(cfg.clone())?;
+    let mix: Vec<String> = pipeline
+        .dataset
+        .env_counts()
+        .iter()
+        .map(|(env, n)| format!("{n} {env}"))
+        .collect();
     println!(
-        "dataset: {} math + {} code tasks | model: {} params",
-        pipeline.dataset.count_kind(intellect2::tasks::TaskKind::Math),
-        pipeline.dataset.count_kind(intellect2::tasks::TaskKind::Code),
+        "dataset: {} tasks ({}) | model: {} params",
+        pipeline.dataset.len(),
+        mix.join(" + "),
         pipeline.host.spec().n_params,
     );
 
@@ -57,8 +63,9 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n-- held-out evaluation (MATH-HARD suite) --");
     let tuned = Arc::new(state.params.clone());
-    let before = pipeline.evaluate_suite(&base, Suite::MathHard, 16)?;
-    let after = pipeline.evaluate_suite(&tuned, Suite::MathHard, 16)?;
+    let suite = Suite::math_hard();
+    let before = pipeline.evaluate_suite(&base, &suite, 16)?;
+    let after = pipeline.evaluate_suite(&tuned, &suite, 16)?;
     println!("base: {before:.1}%   RL-trained: {after:.1}%");
 
     pipeline.series.save("runs/quickstart.jsonl")?;

@@ -45,6 +45,17 @@ def _sig(names_shapes):
     ]
 
 
+def prefill_ladder(max_seq: int):
+    """Bucketed prefill lengths: powers of two from TOPLOC's commit
+    interval (the smallest useful frame — commitments land on interval
+    boundaries) up to, but excluding, the full frame."""
+    t, out = max(C.TOPLOC_INTERVAL, 16), []
+    while t < max_seq:
+        out.append(t)
+        t *= 2
+    return out
+
+
 def artifact_defs(cfg: C.ModelConfig):
     """(name, fn, example_args, input_signature, output_signature) tuples."""
     bt, bi, t, v, d = (cfg.batch_train, cfg.batch_infer, cfg.max_seq,
@@ -129,18 +140,29 @@ def artifact_defs(cfg: C.ModelConfig):
     ))
 
     # --- prefill (validator; inference-batch shaped) ---
+    # The full [bi, max_seq] frame plus a ladder of length-bucketed
+    # prefill_{T} variants: the validation pipeline packs rollouts into
+    # the cheapest artifact covering each length bucket
+    # (ModelSpec::prefill_artifact_for), so short rollouts cost T/max_seq
+    # of the full frame's device FLOPs instead of just saving host-side
+    # padding. Rows are causal and independent; a bucketed frame differs
+    # from the full one only by kernel-shape fp rounding, which the
+    # TOPLOC tolerances absorb.
     def prefill_fn(*args):
         n = len(pspecs)
         params = list(args[:n])
         (tokens,) = args[n:]
         return M.prefill(cfg, params, tokens)
 
-    defs.append((
-        "prefill", prefill_fn,
-        pspecs + [_spec((bi, t), jnp.int32)],
-        _sig(psig + [("tokens", (bi, t), "i32")]),
-        _sig([("logits", (bi, t, v), "f32"), ("hidden", (bi, t, d), "f32")]),
-    ))
+    for t_b in prefill_ladder(t) + [t]:
+        name = "prefill" if t_b == t else f"prefill_{t_b}"
+        defs.append((
+            name, prefill_fn,
+            pspecs + [_spec((bi, t_b), jnp.int32)],
+            _sig(psig + [("tokens", (bi, t_b), "i32")]),
+            _sig([("logits", (bi, t_b, v), "f32"),
+                  ("hidden", (bi, t_b, d), "f32")]),
+        ))
 
     # --- decode_step ---
     def dec_fn(*args):

@@ -19,6 +19,23 @@ def test_artifact_defs_cover_all_entrypoints():
     assert "grpo_step_faulty" not in micro  # fault variant is nano-only
 
 
+def test_prefill_ladder_artifacts_emitted():
+    cfg = C.SIZES["nano"]
+    ladder = aot.prefill_ladder(cfg.max_seq)
+    # Powers of two from the TOPLOC interval up to (excluding) max_seq.
+    assert ladder == [32, 64, 128]
+    defs = {d[0]: d for d in aot.artifact_defs(cfg)}
+    for t_b in ladder:
+        name, _, args, in_sig, out_sig = defs[f"prefill_{t_b}"]
+        # The token input and both outputs are bucket-shaped: device FLOPs
+        # scale with T, not max_seq.
+        assert in_sig[-1]["shape"] == [cfg.batch_infer, t_b]
+        assert out_sig[0]["shape"] == [cfg.batch_infer, t_b, cfg.vocab]
+        assert out_sig[1]["shape"] == [cfg.batch_infer, t_b, cfg.d_model]
+    # The full frame is still there for lengths past the last bucket.
+    assert defs["prefill"][3][-1]["shape"] == [cfg.batch_infer, cfg.max_seq]
+
+
 def test_signatures_are_complete():
     cfg = C.SIZES["nano"]
     n = len(cfg.param_specs())

@@ -25,8 +25,7 @@ fn main() -> anyhow::Result<()> {
         group_size: 4,
         micro_steps: 2,
         max_new_tokens: 14,
-        n_math: 300,
-        n_code: 0,
+        env_mix: intellect2::tasks::dataset::EnvMix::of(&[("math", 300)]),
         ..Default::default()
     }
     .apply_args(&args);
@@ -43,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     // Pass@8 estimation with the base model (the paper uses the distilled
     // 7B as the estimator; we use the base policy itself).
     let k = 8;
-    let stats = pipeline.estimate_pass_at_k(&base_params, k, cfg.n_math.min(120))?;
+    let stats = pipeline.estimate_pass_at_k(&base_params, k, pipeline.dataset.len().min(120))?;
     let band = FilterBand::default();
     let keep = stats.keep(&band);
     let (easy, mid, hard) = stats.band_fractions(&band);
@@ -55,6 +54,9 @@ fn main() -> anyhow::Result<()> {
         100.0 * hard,
         keep.len()
     );
+    for (env, kept, total) in stats.by_env(&band) {
+        println!("  [{env}] kept {kept}/{total}");
+    }
 
     for (label, filtered) in [("unfiltered", false), ("filtered", true)] {
         let mut p = SyncPipeline::new(cfg.clone())?;
@@ -62,9 +64,9 @@ fn main() -> anyhow::Result<()> {
             if keep.len() < cfg.prompts_per_step {
                 println!("(band too small; widening to [1, 6])");
                 let wide = stats.keep(&FilterBand { k, min_pass: 1, max_pass: 6 });
-                p.set_dataset(p.dataset.filtered(&wide));
+                p.set_dataset(p.dataset.filtered(&wide))?;
             } else {
-                p.set_dataset(p.dataset.filtered(&keep));
+                p.set_dataset(p.dataset.filtered(&keep))?;
             }
         }
         // Same base weights.

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use intellect2::config::RunConfig;
 use intellect2::coordinator::SyncPipeline;
 use intellect2::rl::reward::RewardConfig;
-use intellect2::tasks::eval::ALL_SUITES;
+use intellect2::tasks::eval::Suite;
 use intellect2::util::cli::Args;
 use intellect2::util::metrics::{render_table, Series};
 
@@ -39,9 +39,11 @@ fn main() -> anyhow::Result<()> {
 
     let out = Series::default();
     let mut rows = Vec::new();
-    for suite in ALL_SUITES {
-        let b = pipeline.evaluate_suite(&base, suite, eval_n)?;
-        let t = pipeline.evaluate_suite(&tuned, suite, eval_n)?;
+    // The five classic analogues plus every registered env's derived
+    // held-out suite (plug in an env, it shows up here automatically).
+    for suite in Suite::standard(pipeline.registry()) {
+        let b = pipeline.evaluate_suite(&base, &suite, eval_n)?;
+        let t = pipeline.evaluate_suite(&tuned, &suite, eval_n)?;
         out.push(0, &format!("base {}", suite.name()), b);
         out.push(0, &format!("tuned {}", suite.name()), t);
         rows.push(vec![

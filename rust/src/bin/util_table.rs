@@ -57,6 +57,18 @@ fn main() -> anyhow::Result<()> {
         )
     );
 
+    // Per-environment pass rates over verified rollouts: in a mixed-env
+    // run the aggregate reward hides which scenarios actually learn.
+    if !result.stats.env_pass.is_empty() {
+        println!(
+            "{}",
+            render_table(
+                &["environment", "verified rollouts", "pass rate"],
+                &result.stats.env_pass.rows()
+            )
+        );
+    }
+
     // Off-policy staleness accounting (the two-step-async correctness knob).
     let hist = result.stats.staleness_hist();
     let trained: u64 = hist.iter().map(|(_, n)| n).sum();

@@ -20,9 +20,15 @@
 //!   validation (stage 0). Default on — the real swarm slashes on proven
 //!   attribution only; `--require-signed-submissions false` restores the
 //!   legacy trust-the-claimed-address behavior for old fixtures.
+//! - `env-mix`: ordered per-environment task counts for the training
+//!   dataset, e.g. `--env-mix math=900,code=100,seq=200,chain=50`
+//!   (replaces the old hardcoded `n-math`/`n-code` pair). Env names are
+//!   `verifier::Registry` keys; both swarm sides must run the same mix —
+//!   the dataset's registry fingerprint enforces the env-set half of that.
 
 use crate::rl::reward::RewardConfig;
 use crate::runtime::GrpoHp;
+use crate::tasks::dataset::EnvMix;
 use crate::util::cli::Args;
 
 #[derive(Clone, Debug)]
@@ -46,8 +52,9 @@ pub struct RunConfig {
     pub temperature: f32,
     pub hp: GrpoHp,
     pub reward: RewardConfig,
-    pub n_math: usize,
-    pub n_code: usize,
+    /// Training-dataset composition: ordered `(env, count)` pairs over the
+    /// environment registry (`--env-mix math=400,code=60,...`).
+    pub env_mix: EnvMix,
     /// Swarm shape (threaded e2e driver).
     pub n_workers: usize,
     pub n_relays: usize,
@@ -93,8 +100,7 @@ impl Default for RunConfig {
             temperature: 1.0,
             hp: GrpoHp::default(),
             reward: RewardConfig::default(),
-            n_math: 400,
-            n_code: 60,
+            env_mix: EnvMix::of(&[("math", 400), ("code", 60), ("seq", 50), ("chain", 50)]),
             n_workers: 3,
             n_relays: 2,
             worker_ingress_bps: 0,
@@ -133,8 +139,9 @@ impl RunConfig {
         self.hp.ent_coef = a.f32_or("ent-coef", self.hp.ent_coef);
         self.n_workers = a.usize_or("workers", self.n_workers);
         self.n_relays = a.usize_or("relays", self.n_relays);
-        self.n_math = a.usize_or("n-math", self.n_math);
-        self.n_code = a.usize_or("n-code", self.n_code);
+        if let Some(mix) = a.get("env-mix") {
+            self.env_mix = EnvMix::parse(mix).expect("--env-mix");
+        }
         self.worker_ingress_bps = a.u64_or("worker-ingress-bps", self.worker_ingress_bps);
         self.origin_egress_bps = a.u64_or("origin-egress-bps", self.origin_egress_bps);
         self.batch_timeout_secs = a.u64_or("batch-timeout-secs", self.batch_timeout_secs);
@@ -198,12 +205,18 @@ mod tests {
             "--model micro --async-level 4 --lr 0.001 --target-short \
              --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000 \
              --validator-threads 8 --prefill-bucket-tokens 64 \
-             --require-signed-submissions false"
+             --require-signed-submissions false \
+             --env-mix math=10,seq=5"
                 .split_whitespace()
                 .map(str::to_string),
         );
         let c = RunConfig::default().apply_args(&a);
         assert_eq!(c.model, "micro");
+        assert_eq!(c.env_mix, EnvMix::of(&[("math", 10), ("seq", 5)]));
+        // Default mix spans all four standard environments.
+        for env in ["math", "code", "seq", "chain"] {
+            assert!(RunConfig::default().env_mix.count(env) > 0, "{env}");
+        }
         assert_eq!(c.async_level, 4);
         assert!((c.hp.lr - 0.001).abs() < 1e-9);
         assert_eq!(c.reward.targets, vec![16, 32, 48, 64]);

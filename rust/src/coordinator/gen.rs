@@ -22,21 +22,47 @@ pub struct RolloutGenerator {
     pub host: Arc<EngineHost>,
     pub dataset: Arc<Dataset>,
     pub reward_cfg: RewardConfig,
-    pub registry: Registry,
+    pub registry: Arc<Registry>,
     pub max_new: usize,
     pub temperature: f32,
 }
 
 impl RolloutGenerator {
-    pub fn from_config(host: Arc<EngineHost>, dataset: Arc<Dataset>, cfg: &RunConfig) -> Self {
-        RolloutGenerator {
+    /// Generator over the standard registry. Errors if `dataset` was built
+    /// from a *different* registry (fingerprint mismatch): computing
+    /// rewards with env semantics the dataset's tasks don't carry is
+    /// exactly the silent divergence §2.3.3 would slash an honest node for.
+    pub fn from_config(
+        host: Arc<EngineHost>,
+        dataset: Arc<Dataset>,
+        cfg: &RunConfig,
+    ) -> anyhow::Result<Self> {
+        RolloutGenerator::with_registry(host, dataset, cfg, Arc::new(Registry::default()))
+    }
+
+    /// Generator over a custom registry (plugin deployments). The registry
+    /// fingerprint must match the dataset's.
+    pub fn with_registry(
+        host: Arc<EngineHost>,
+        dataset: Arc<Dataset>,
+        cfg: &RunConfig,
+        registry: Arc<Registry>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            registry.fingerprint() == dataset.fingerprint,
+            "registry fingerprint {:#x} != dataset fingerprint {:#x}: the generator would \
+             compute rewards under different env semantics than the dataset was built with",
+            registry.fingerprint(),
+            dataset.fingerprint
+        );
+        Ok(RolloutGenerator {
             host,
             dataset,
             reward_cfg: cfg.reward.clone(),
-            registry: Registry::default(),
+            registry,
             max_new: cfg.max_new_tokens,
             temperature: cfg.temperature,
-        }
+        })
     }
 
     /// Generate one submission: `n_prompts` tasks drawn from the fixed
@@ -180,13 +206,19 @@ mod tests {
             return;
         }
         let host = Arc::new(EngineHost::spawn_size("nano").unwrap());
-        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
-            n_math: 50,
-            n_code: 10,
-            ..Default::default()
-        }));
+        let registry = crate::verifier::Registry::standard();
+        let dataset = Arc::new(
+            Dataset::generate(
+                &registry,
+                &DatasetConfig {
+                    mix: crate::tasks::dataset::EnvMix::of(&[("math", 50), ("code", 10)]),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
         let cfg = RunConfig { max_new_tokens: 12, ..Default::default() };
-        let generator = RolloutGenerator::from_config(Arc::clone(&host), dataset, &cfg);
+        let generator = RolloutGenerator::from_config(Arc::clone(&host), dataset, &cfg).unwrap();
         let params = Arc::new(host.init_params(3).unwrap());
 
         let a = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();

@@ -12,6 +12,7 @@ use crate::runtime::{EngineHost, HostTrainState};
 use crate::tasks::dataset::Dataset;
 use crate::util::metrics::Series;
 use crate::util::rng::Rng;
+use crate::verifier::Registry;
 
 /// Fraction of corpus samples with a corrupted answer.
 pub const NOISE_FRAC: f64 = 0.25;
@@ -19,8 +20,11 @@ pub const NOISE_FRAC: f64 = 0.25;
 pub const BUDGET_FRAC: f64 = 0.4;
 
 /// Render one corpus sample: `prompt>answer$` (optionally with `<N|` budget
-/// prefix and `~` filler of roughly N tokens before the answer).
+/// prefix and `~` filler of roughly N tokens before the answer). Noise is
+/// env-owned: each environment's `corrupt_answer` hook decides what a
+/// plausible-but-wrong completion looks like in its domain.
 pub fn render_sample(
+    registry: &Registry,
     dataset: &Dataset,
     rng: &mut Rng,
     targets: &[usize],
@@ -28,15 +32,12 @@ pub fn render_sample(
     let task = &dataset.tasks[rng.usize(dataset.len())];
     let corrupt = rng.bool(NOISE_FRAC);
     let answer = if corrupt {
-        match task.answer.parse::<i64>() {
-            Ok(v) => (v + 1 + rng.range(0, 9) as i64).to_string(),
-            Err(_) => {
-                // Code task: swap in a random (likely wrong) op word.
-                crate::tasks::dsl::OPS[rng.usize(crate::tasks::dsl::OPS.len())].to_string()
-            }
+        match registry.env_for(task) {
+            Some(env) => env.corrupt_answer(task.answer(), rng),
+            None => task.answer().to_string(),
         }
     } else {
-        task.answer.clone()
+        task.answer().to_string()
     };
     let mut text = String::new();
     if !targets.is_empty() && rng.bool(BUDGET_FRAC) {
@@ -62,6 +63,7 @@ pub fn render_sample(
 
 /// Build one packed `[B,T]` pretraining batch (greedy row fill).
 pub fn corpus_batch(
+    registry: &Registry,
     dataset: &Dataset,
     rng: &mut Rng,
     b: usize,
@@ -74,7 +76,7 @@ pub fn corpus_batch(
         let mut pos = 0usize;
         let mut seg = 1i32;
         loop {
-            let sample = render_sample(dataset, rng, targets);
+            let sample = render_sample(registry, dataset, rng, targets);
             if pos + sample.len() > t {
                 break;
             }
@@ -96,6 +98,7 @@ pub fn corpus_batch(
 pub fn pretrain(
     host: &Arc<EngineHost>,
     mut state: Box<HostTrainState>,
+    registry: &Registry,
     dataset: &Dataset,
     cfg: &RunConfig,
     steps: u64,
@@ -105,6 +108,7 @@ pub fn pretrain(
     let mut rng = Rng::new(cfg.seed ^ 0x9E7A);
     for step in 0..steps {
         let (tokens, segs) = corpus_batch(
+            registry,
             dataset,
             &mut rng,
             spec.batch_train,
@@ -128,11 +132,21 @@ mod tests {
     use super::*;
     use crate::tasks::dataset::DatasetConfig;
 
+    fn gen(mix: &[(&str, usize)]) -> (Registry, Dataset) {
+        let reg = Registry::standard();
+        let cfg = DatasetConfig {
+            mix: crate::tasks::dataset::EnvMix::of(mix),
+            ..Default::default()
+        };
+        let d = Dataset::generate(&reg, &cfg).unwrap();
+        (reg, d)
+    }
+
     #[test]
     fn corpus_batch_shape_and_segments() {
-        let dataset = Dataset::generate(&DatasetConfig { n_math: 30, n_code: 5, ..Default::default() });
+        let (reg, dataset) = gen(&[("math", 30), ("code", 5)]);
         let mut rng = Rng::new(1);
-        let (tokens, segs) = corpus_batch(&dataset, &mut rng, 4, 128, &[16, 32]);
+        let (tokens, segs) = corpus_batch(&reg, &dataset, &mut rng, 4, 128, &[16, 32]);
         assert_eq!(tokens.len(), 4 * 128);
         // Every row has at least one sample; segments are contiguous runs.
         for row in 0..4 {
@@ -148,12 +162,14 @@ mod tests {
 
     #[test]
     fn render_sample_formats() {
-        let dataset = Dataset::generate(&DatasetConfig { n_math: 20, n_code: 0, ..Default::default() });
+        // All four envs in the corpus: noise goes through each env's own
+        // corrupt_answer hook without panicking.
+        let (reg, dataset) = gen(&[("math", 20), ("code", 5), ("seq", 5), ("chain", 5)]);
         let mut rng = Rng::new(2);
         let mut saw_budget = false;
         let mut saw_plain = false;
         for _ in 0..50 {
-            let toks = render_sample(&dataset, &mut rng, &[16, 32]);
+            let toks = render_sample(&reg, &dataset, &mut rng, &[16, 32]);
             assert_eq!(toks[0], tokenizer::BOS);
             assert_eq!(*toks.last().unwrap(), tokenizer::EOS);
             let text = tokenizer::decode_clean(&toks);

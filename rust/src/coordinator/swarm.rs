@@ -47,7 +47,8 @@ use crate::shardcast::{BroadcastRecord, Broadcaster, Origin, Relay, ShardcastCli
 use crate::tasks::dataset::{Dataset, DatasetConfig};
 use crate::toploc::{Validator, ValidatorConfig};
 use crate::util::json::Json;
-use crate::util::metrics::{Counter, Series};
+use crate::util::metrics::{Counter, PassRates, Series};
+use crate::verifier::Registry;
 
 /// Shared swarm state.
 struct Shared {
@@ -107,6 +108,10 @@ pub struct SwarmStats {
     pub nodes_slashed: Counter,
     pub broadcast_bytes: Counter,
     pub decode_tokens: Counter,
+    /// Per-environment task pass rates over *verified* rollouts (the
+    /// validator re-checked these rewards), keyed by env registry name —
+    /// mixed-env runs are unobservable from one aggregate reward number.
+    pub env_pass: PassRates,
     /// Per-lag histogram of rollouts consumed by the trainer:
     /// lag = training step - producing policy version.
     pub trained_by_lag: Mutex<std::collections::BTreeMap<u64, u64>>,
@@ -238,18 +243,27 @@ pub struct Swarm {
     pub cfg: RunConfig,
     pub host: Arc<EngineHost>,
     pub dataset: Arc<Dataset>,
+    /// The environment registry every side of the swarm dispatches
+    /// through (generation rewards, TOPLOC re-verification, pretrain
+    /// corpus noise). Its fingerprint is stamped on the dataset, so a
+    /// worker or validator holding a different registry fails loudly at
+    /// construction instead of producing slashable "determinism" drift.
+    pub registry: Arc<Registry>,
 }
 
 impl Swarm {
     pub fn new(cfg: RunConfig) -> anyhow::Result<Swarm> {
         let host = Arc::new(EngineHost::spawn_size(&cfg.model)?);
-        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
-            seed: cfg.seed,
-            n_math: cfg.n_math,
-            n_code: cfg.n_code,
-            ..Default::default()
-        }));
-        Ok(Swarm { cfg, host, dataset })
+        let registry = Arc::new(Registry::default());
+        let dataset = Arc::new(Dataset::generate(
+            &registry,
+            &DatasetConfig {
+                seed: cfg.seed,
+                mix: cfg.env_mix.clone(),
+                ..Default::default()
+            },
+        )?);
+        Ok(Swarm { cfg, host, dataset, registry })
     }
 
     /// Run the full decentralized pipeline for `cfg.rl_steps` steps.
@@ -332,7 +346,15 @@ impl Swarm {
         // --- trainer bootstrap ---
         let t_boot = Instant::now();
         let mut state = self.host.fresh_train_state(cfg.seed as u32)?;
-        state = pretrain::pretrain(&self.host, state, &self.dataset, cfg, pretrain_steps, &series)?;
+        state = pretrain::pretrain(
+            &self.host,
+            state,
+            &self.registry,
+            &self.dataset,
+            cfg,
+            pretrain_steps,
+            &series,
+        )?;
         crate::info!("swarm", "bootstrap done in {:.1}s", t_boot.elapsed().as_secs_f64());
 
         // Publish checkpoint 0 (through the broadcaster so even the
@@ -363,26 +385,29 @@ impl Swarm {
             let require_signed = cfg.require_signed_submissions;
             let async_level = cfg.async_level;
             let keys_ledger = ledger.clone();
+            // Built *before* the thread spawns: a registry/dataset
+            // fingerprint mismatch aborts the run here, loudly, instead
+            // of killing a background thread.
+            let mut pipeline = ValidationPipeline::new(
+                Validator::with_registry(vcfg, Arc::clone(&self.registry)),
+                Arc::clone(&dataset),
+                reward_cfg,
+                host,
+                max_new,
+                threads,
+                bucket,
+            )?;
+            if require_signed {
+                // Stage 0: envelope signatures verified against the
+                // ledger's key registry (key bytes never leave the
+                // ledger); slashing needs proof.
+                pipeline = pipeline.with_signing(Arc::new(
+                    move |addr, msg: &[u8], sig: &[u8; 32]| {
+                        keys_ledger.check_address_sig(addr, msg, sig)
+                    },
+                ));
+            }
             std::thread::Builder::new().name("i2-validator".into()).spawn(move || {
-                let mut pipeline = ValidationPipeline::new(
-                    Validator::new(vcfg),
-                    dataset,
-                    reward_cfg,
-                    host,
-                    max_new,
-                    threads,
-                    bucket,
-                );
-                if require_signed {
-                    // Stage 0: envelope signatures verified against the
-                    // ledger's key registry (key bytes never leave the
-                    // ledger); slashing needs proof.
-                    pipeline = pipeline.with_signing(Arc::new(
-                        move |addr, msg: &[u8], sig: &[u8; 32]| {
-                            keys_ledger.check_address_sig(addr, msg, sig)
-                        },
-                    ));
-                }
                 // In-window replay dedup: a captured valid envelope can be
                 // re-posted before its step ages out; each (node, step,
                 // idx) identity may be buffered at most once.
@@ -424,6 +449,16 @@ impl Swarm {
                                 let n = sub.rollouts.len();
                                 shared.stats.submissions_accepted.inc();
                                 shared.stats.rollouts_verified.add(n as u64);
+                                // Per-env pass rates over verified rollouts
+                                // (rewards were re-checked in stage 2).
+                                for w in &sub.rollouts {
+                                    if let Some(task) = dataset.get(w.rollout.task_id) {
+                                        shared
+                                            .stats
+                                            .env_pass
+                                            .record(task.env, w.rollout.task_reward > 0.5);
+                                    }
+                                }
                                 if n == 0 {
                                     // Every group was soft-dropped
                                     // (termination check): nothing to buffer.
@@ -527,6 +562,7 @@ impl Swarm {
             let shared = Arc::clone(&shared);
             let host = Arc::clone(&self.host);
             let dataset = Arc::clone(&self.dataset);
+            let registry = Arc::clone(&self.registry);
             let generator_cfg = cfg.clone();
             let relay_urls = relay_urls.clone();
             let step_url = step_srv.url();
@@ -535,11 +571,25 @@ impl Swarm {
                 .name(format!("i2-infer-{wi}"))
                 .spawn(move || {
                     let address = worker.identity.address;
-                    let generator = RolloutGenerator::from_config(
+                    // The swarm's own registry (never a freshly-built
+                    // default): with a custom env set, a default-registry
+                    // worker would fail the fingerprint check and silently
+                    // produce zero rollouts.
+                    let generator = match RolloutGenerator::with_registry(
                         Arc::clone(&host),
                         dataset,
                         &generator_cfg,
-                    );
+                        registry,
+                    ) {
+                        Ok(g) => g,
+                        Err(e) => {
+                            // Registry/dataset mismatch: this worker would
+                            // only produce slash-bait — refuse to run.
+                            crate::warn!("worker", "node {address}: {e}");
+                            worker.shutdown();
+                            return;
+                        }
+                    };
                     let sc = ShardcastClient::new(
                         &format!("worker-{address}"),
                         &relay_urls,
@@ -757,6 +807,9 @@ impl Shared {
         s.nodes_slashed.add(self.stats.nodes_slashed.get());
         s.broadcast_bytes.add(self.stats.broadcast_bytes.get());
         s.decode_tokens.add(self.stats.decode_tokens.get());
+        for (env, attempts, passes) in self.stats.env_pass.snapshot() {
+            s.env_pass.add(&env, attempts, passes);
+        }
         *s.trained_by_lag.lock().unwrap() = self.stats.trained_by_lag.lock().unwrap().clone();
         Arc::new(s)
     }

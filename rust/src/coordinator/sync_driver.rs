@@ -16,6 +16,7 @@ use crate::coordinator::step::{filter_groups, record_step};
 use crate::runtime::{EngineHost, HostTrainState, ParamSet};
 use crate::tasks::dataset::{Dataset, DatasetConfig};
 use crate::util::metrics::Series;
+use crate::verifier::Registry;
 
 pub struct SyncPipeline {
     pub cfg: RunConfig,
@@ -28,21 +29,44 @@ pub struct SyncPipeline {
 impl SyncPipeline {
     pub fn new(cfg: RunConfig) -> anyhow::Result<SyncPipeline> {
         let host = Arc::new(EngineHost::spawn_size(&cfg.model)?);
-        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
-            seed: cfg.seed,
-            n_math: cfg.n_math,
-            n_code: cfg.n_code,
-            ..Default::default()
-        }));
-        let generator = RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg);
+        let registry = Arc::new(Registry::default());
+        let dataset = Arc::new(Dataset::generate(
+            &registry,
+            &DatasetConfig {
+                seed: cfg.seed,
+                mix: cfg.env_mix.clone(),
+                ..Default::default()
+            },
+        )?);
+        let generator = RolloutGenerator::with_registry(
+            Arc::clone(&host),
+            Arc::clone(&dataset),
+            &cfg,
+            registry,
+        )?;
         Ok(SyncPipeline { cfg, host, dataset, generator, series: Series::default() })
     }
 
-    /// Replace the dataset (offline filtering experiments).
-    pub fn set_dataset(&mut self, dataset: Dataset) {
+    /// The environment registry this pipeline dispatches through.
+    pub fn registry(&self) -> &Registry {
+        &self.generator.registry
+    }
+
+    /// Replace the dataset (offline filtering experiments). The same
+    /// fingerprint invariant as construction: the incoming dataset must
+    /// have been built from this pipeline's registry (`Dataset::filtered`
+    /// preserves the fingerprint, so filtering experiments pass freely).
+    pub fn set_dataset(&mut self, dataset: Dataset) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dataset.fingerprint == self.registry().fingerprint(),
+            "dataset fingerprint {:#x} != registry fingerprint {:#x}",
+            dataset.fingerprint,
+            self.registry().fingerprint()
+        );
         let d = Arc::new(dataset);
         self.dataset = Arc::clone(&d);
         self.generator.dataset = d;
+        Ok(())
     }
 
     /// Init + pretrain the base model.
@@ -51,6 +75,7 @@ impl SyncPipeline {
         pretrain::pretrain(
             &self.host,
             state,
+            self.registry(),
             &self.dataset,
             &self.cfg,
             self.cfg.pretrain_steps,
@@ -99,7 +124,7 @@ impl SyncPipeline {
                             > 0.5
                     })
                     .count();
-                stats.record(*id, passes);
+                stats.record(*id, task.env, passes);
             }
         }
         Ok(stats)
@@ -188,19 +213,21 @@ impl SyncPipeline {
     }
 
     /// Evaluate a policy on a held-out suite (Table 1). Returns the mean
-    /// score in percent.
+    /// score in percent. Task generation and scoring both go through the
+    /// pipeline's registry — the same dispatch the trainer uses.
     pub fn evaluate_suite(
         &self,
         params: &Arc<ParamSet>,
-        suite: crate::tasks::eval::Suite,
+        suite: &crate::tasks::eval::Suite,
         n_tasks: usize,
     ) -> anyhow::Result<f64> {
-        use crate::tasks::eval::Suite;
+        use crate::tasks::eval::Scoring;
         let spec = self.host.spec().clone();
-        let tasks = suite.tasks(n_tasks);
-        let target = match suite {
-            Suite::LengthFollow => self.cfg.reward.targets.last().copied().or(Some(32)),
-            _ => None,
+        let registry = self.registry();
+        let tasks = suite.tasks(registry, n_tasks)?;
+        let target = match suite.scoring {
+            Scoring::LengthFollow => self.cfg.reward.targets.last().copied().or(Some(32)),
+            Scoring::Correctness => None,
         };
         let opts = crate::runtime::GenOpts {
             max_new: self.cfg.max_new_tokens.max(target.unwrap_or(0) + 16),
@@ -218,7 +245,7 @@ impl SyncPipeline {
             for (t, g) in chunk.iter().zip(&gens) {
                 let completion =
                     crate::data::tokenizer::decode_clean(&g.tokens[g.prompt_len..]);
-                total += suite.score(t, &completion, g.completion_len(), target);
+                total += suite.score(registry, t, &completion, g.completion_len(), target);
                 count += 1.0;
             }
         }

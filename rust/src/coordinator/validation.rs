@@ -433,6 +433,12 @@ pub struct ValidationPipeline {
 }
 
 impl ValidationPipeline {
+    /// Build the pipeline. Errors when the validator's environment
+    /// registry does not fingerprint-match the dataset's: reward
+    /// re-verification (stage 2) replays each task's env verifier, and
+    /// doing that under different env semantics than the dataset was
+    /// generated with would slash honest workers — the silent-mismatch
+    /// failure the registry fingerprint exists to make loud.
     pub fn new(
         validator: Validator,
         dataset: Arc<Dataset>,
@@ -441,11 +447,18 @@ impl ValidationPipeline {
         max_new: usize,
         threads: usize,
         bucket_tokens: usize,
-    ) -> ValidationPipeline {
+    ) -> anyhow::Result<ValidationPipeline> {
+        anyhow::ensure!(
+            validator.registry.fingerprint() == dataset.fingerprint,
+            "validator registry fingerprint {:#x} != dataset fingerprint {:#x}: refusing to \
+             re-verify rewards under mismatched environment semantics",
+            validator.registry.fingerprint(),
+            dataset.fingerprint
+        );
         let spec = host.spec().clone();
         let bucket =
             if bucket_tokens == 0 { spec.toploc_interval.max(1) } else { bucket_tokens };
-        ValidationPipeline {
+        Ok(ValidationPipeline {
             validator: Arc::new(validator),
             dataset,
             reward_cfg: Arc::new(reward_cfg),
@@ -456,7 +469,7 @@ impl ValidationPipeline {
             pool: (threads > 1).then(|| ThreadPool::new(threads)),
             signing: None,
             prefill_calls: Counter::default(),
-        }
+        })
     }
 
     /// Require signed submission envelopes, verified through `oracle`

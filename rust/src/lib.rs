@@ -11,11 +11,13 @@
 //!   PRNG, metrics, bench/property harnesses, columnar rollout format,
 //!   tokenizer) — the vendored crate set has no tokio/serde/etc.
 //! - [`runtime`]: PJRT artifact loading + train/sample engines.
-//! - [`tasks`], [`verifier`], [`rl`]: training data, GENESYS-style reward
-//!   environments (§2.1.3, §3.1), GRPO batching/advantages/filtering
-//!   (§3.3), sequence packing (§4.1), and the version-tagged rollout
-//!   buffer enforcing the `[current - k, current]` off-policy staleness
-//!   window (§3.2).
+//! - [`tasks`], [`verifier`], [`rl`]: the pluggable environment registry
+//!   (GENESYS-style reward environments, §2.1.3/§3.1 — adding one is one
+//!   file implementing `verifier::Environment`, with a registry
+//!   fingerprint keeping worker and validator env sets provably in sync),
+//!   GRPO batching/advantages/filtering (§3.3), sequence packing (§4.1),
+//!   and the version-tagged rollout buffer enforcing the
+//!   `[current - k, current]` off-policy staleness window (§3.2).
 //! - [`shardcast`]: policy weight broadcast network (§2.2), including the
 //!   background [`shardcast::Broadcaster`] that overlaps checkpoint
 //!   distribution with the next training step.

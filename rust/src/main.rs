@@ -60,8 +60,8 @@ fn main() -> anyhow::Result<()> {
             let state = pipeline.bootstrap()?;
             let params = Arc::new(state.params.clone());
             let n = args.usize_or("eval-n", 24);
-            for suite in intellect2::tasks::eval::ALL_SUITES {
-                let score = pipeline.evaluate_suite(&params, suite, n)?;
+            for suite in intellect2::tasks::eval::Suite::standard(pipeline.registry()) {
+                let score = pipeline.evaluate_suite(&params, &suite, n)?;
                 println!("{:<40} {score:.1}%", suite.name());
             }
         }

@@ -2,6 +2,12 @@
 //! pool (signed invites validated on the ledger), tracks node health via
 //! heartbeats with missed-count eviction, and distributes tasks *in
 //! response to heartbeats* — the paper's reactive pull-based model.
+//!
+//! Heartbeats are *membership-gated*: a node the orchestrator never
+//! admitted (via the signed-invite sweep) or that the ledger has slashed
+//! cannot heartbeat itself into the pool and receive tasks — that would
+//! bypass the invite flow entirely. Such heartbeats are refused (HTTP
+//! 403) and counted in [`Orchestrator::heartbeats_rejected`].
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -10,6 +16,7 @@ use super::identity::Identity;
 use super::ledger::{Ledger, Tx};
 use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NodeStatus {
@@ -47,6 +54,19 @@ struct Inner {
     next_task_id: u64,
 }
 
+/// Why a heartbeat was refused (no state was recorded for the sender).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeartbeatRejected {
+    /// The node was never admitted through the invite flow.
+    NeverInvited,
+    /// The node is slashed on the ledger; slashed nodes do not rejoin by
+    /// heartbeating.
+    Slashed,
+    /// The node was evicted (missed-heartbeat sweep): it re-enters through
+    /// a fresh invite, not by heartbeating back to life.
+    Evicted,
+}
+
 #[derive(Clone)]
 pub struct Orchestrator {
     inner: Arc<Mutex<Inner>>,
@@ -55,6 +75,8 @@ pub struct Orchestrator {
     pub pool_id: u64,
     pub heartbeat_timeout_ms: u64,
     pub max_missed: u32,
+    /// Heartbeats refused from never-invited or slashed senders.
+    pub heartbeats_rejected: Arc<Counter>,
 }
 
 pub struct OrchestratorServer {
@@ -75,6 +97,30 @@ impl Orchestrator {
             pool_id,
             heartbeat_timeout_ms,
             max_missed: 3,
+            heartbeats_rejected: Arc::new(Counter::default()),
+        }
+    }
+
+    /// Record a node as admitted (status `Invited`) — the bookkeeping half
+    /// of the signed-invite flow. Normal operation reaches this only
+    /// through [`Orchestrator::sweep_discovery`] after the worker accepted
+    /// a signed invite; tests use it to set up membership directly. A
+    /// previously-evicted (`Dead`) node is restored to `Invited`: a fresh
+    /// invite is exactly its re-entry path.
+    pub fn admit(&self, node: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let state = inner.nodes.entry(node).or_insert_with(|| NodeState {
+            status: NodeStatus::Invited,
+            last_heartbeat_ms: crate::util::now_ms(),
+            missed: 0,
+            current_task: None,
+            logs: VecDeque::new(),
+        });
+        if state.status == NodeStatus::Dead {
+            state.status = NodeStatus::Invited;
+            state.last_heartbeat_ms = crate::util::now_ms();
+            state.missed = 0;
+            state.current_task = None;
         }
     }
 
@@ -100,7 +146,17 @@ impl Orchestrator {
             ) else {
                 continue;
             };
-            if self.inner.lock().unwrap().nodes.contains_key(&addr) {
+            // Known-and-alive nodes are skipped; an evicted (Dead) node is
+            // eligible for re-invitation — that is its only way back in,
+            // since its heartbeats are refused.
+            let known_alive = self
+                .inner
+                .lock()
+                .unwrap()
+                .nodes
+                .get(&addr)
+                .is_some_and(|s| s.status != NodeStatus::Dead);
+            if known_alive {
                 continue;
             }
             if self.ledger.is_slashed(self.pool_id, addr) {
@@ -120,16 +176,7 @@ impl Orchestrator {
                         Tx::Invite { pool_id: self.pool_id, node: addr, orchestrator: self.identity.address },
                         &self.identity,
                     );
-                    self.inner.lock().unwrap().nodes.insert(
-                        addr,
-                        NodeState {
-                            status: NodeStatus::Invited,
-                            last_heartbeat_ms: crate::util::now_ms(),
-                            missed: 0,
-                            current_task: None,
-                            logs: VecDeque::new(),
-                        },
-                    );
+                    self.admit(addr);
                     invited += 1;
                 }
             }
@@ -147,15 +194,35 @@ impl Orchestrator {
     }
 
     /// Record a heartbeat; hand out a queued task if the node is idle.
-    pub fn heartbeat(&self, node: u64, log: Option<String>, task_done: Option<u64>) -> Option<TaskSpec> {
+    ///
+    /// Membership-gated (§2.4.2): heartbeats only count for nodes that
+    /// entered through the signed-invite flow and are not slashed on the
+    /// ledger. Previously an unknown sender was silently auto-registered
+    /// as `Active` — an uninvited or slashed node could heartbeat itself
+    /// into the pool and receive tasks, bypassing invites entirely.
+    pub fn heartbeat(
+        &self,
+        node: u64,
+        log: Option<String>,
+        task_done: Option<u64>,
+    ) -> Result<Option<TaskSpec>, HeartbeatRejected> {
+        if self.ledger.is_slashed(self.pool_id, node) {
+            self.heartbeats_rejected.inc();
+            return Err(HeartbeatRejected::Slashed);
+        }
         let mut inner = self.inner.lock().unwrap();
-        let state = inner.nodes.entry(node).or_insert_with(|| NodeState {
-            status: NodeStatus::Active,
-            last_heartbeat_ms: 0,
-            missed: 0,
-            current_task: None,
-            logs: VecDeque::new(),
-        });
+        let Some(state) = inner.nodes.get_mut(&node) else {
+            drop(inner);
+            self.heartbeats_rejected.inc();
+            return Err(HeartbeatRejected::NeverInvited);
+        };
+        if state.status == NodeStatus::Dead {
+            // Evicted from the pool (ledger `Tx::Evict`): heartbeats do
+            // not resurrect it — only a fresh invite (`admit`) does.
+            drop(inner);
+            self.heartbeats_rejected.inc();
+            return Err(HeartbeatRejected::Evicted);
+        }
         state.status = NodeStatus::Active;
         state.last_heartbeat_ms = crate::util::now_ms();
         state.missed = 0;
@@ -173,10 +240,10 @@ impl Orchestrator {
         if state.current_task.is_none() {
             if let Some(task) = inner.queue.pop_front() {
                 inner.nodes.get_mut(&node).unwrap().current_task = Some(task.id);
-                return Some(task);
+                return Ok(Some(task));
             }
         }
-        None
+        Ok(None)
     }
 
     /// Health sweep: count missed heartbeats, mark dead + evict from the
@@ -259,12 +326,13 @@ fn handle(orch: &Orchestrator, req: &Request) -> Response {
             let log = j.get("log").and_then(Json::as_str).map(str::to_string);
             let done = j.get("task_done").and_then(Json::as_u64);
             match orch.heartbeat(node, log, done) {
-                Some(task) => Response::json(&Json::obj(vec![
+                Ok(Some(task)) => Response::json(&Json::obj(vec![
                     ("task_id", task.id.into()),
                     ("kind", task.kind.into()),
                     ("payload", task.payload),
                 ])),
-                None => Response::json(&Json::obj(vec![("task_id", Json::Null)])),
+                Ok(None) => Response::json(&Json::obj(vec![("task_id", Json::Null)])),
+                Err(why) => Response::error(403, &format!("heartbeat refused: {why:?}")),
             }
         }
         ("POST", "/task") => {
@@ -331,25 +399,47 @@ mod tests {
     #[test]
     fn pull_based_task_distribution() {
         let o = orch();
+        o.admit(10);
+        o.admit(11);
         o.create_task("rollout", Json::Null);
         o.create_task("rollout", Json::Null);
         // First heartbeat gets task 0.
-        let t = o.heartbeat(10, None, None).unwrap();
+        let t = o.heartbeat(10, None, None).unwrap().unwrap();
         assert_eq!(t.id, 0);
         // Same node, still busy: nothing.
-        assert!(o.heartbeat(10, None, None).is_none());
+        assert!(o.heartbeat(10, None, None).unwrap().is_none());
         // Second node gets task 1.
-        assert_eq!(o.heartbeat(11, None, None).unwrap().id, 1);
+        assert_eq!(o.heartbeat(11, None, None).unwrap().unwrap().id, 1);
         // Node 10 finishes, queue is empty.
-        assert!(o.heartbeat(10, Some("done".into()), Some(0)).is_none());
+        assert!(o.heartbeat(10, Some("done".into()), Some(0)).unwrap().is_none());
         assert_eq!(o.logs(10), vec!["done".to_string()]);
         assert_eq!(o.queue_len(), 0);
     }
 
     #[test]
+    fn uninvited_and_slashed_heartbeats_rejected() {
+        let o = orch();
+        o.create_task("rollout", Json::Null);
+        // Never invited: refused, no state recorded, no task handed out.
+        assert_eq!(o.heartbeat(66, None, None).unwrap_err(), HeartbeatRejected::NeverInvited);
+        assert_eq!(o.status(66), None);
+        assert_eq!(o.queue_len(), 1);
+        // Slashed after admission: refused even though it is a member.
+        o.admit(9);
+        o.slash(9, "toploc rejection");
+        assert_eq!(o.heartbeat(9, None, None).unwrap_err(), HeartbeatRejected::Slashed);
+        assert_eq!(o.queue_len(), 1);
+        assert_eq!(o.heartbeats_rejected.get(), 2);
+        // An admitted, unslashed node still pulls the task.
+        o.admit(10);
+        assert!(o.heartbeat(10, None, None).unwrap().is_some());
+    }
+
+    #[test]
     fn health_sweep_evicts_after_missed_heartbeats() {
         let o = orch();
-        o.heartbeat(7, None, None);
+        o.admit(7);
+        o.heartbeat(7, None, None).unwrap();
         assert_eq!(o.status(7), Some(NodeStatus::Active));
         // Three sweeps past the timeout -> dead + evicted on the ledger.
         for _ in 0..3 {
@@ -358,13 +448,21 @@ mod tests {
         }
         assert_eq!(o.status(7), Some(NodeStatus::Dead));
         assert!(o.active_nodes().is_empty());
+        // An evicted node cannot heartbeat itself back into the pool —
+        // only a fresh invite restores it.
+        assert_eq!(o.heartbeat(7, None, None).unwrap_err(), HeartbeatRejected::Evicted);
+        assert_eq!(o.status(7), Some(NodeStatus::Dead));
+        o.admit(7);
+        assert_eq!(o.status(7), Some(NodeStatus::Invited));
+        assert!(o.heartbeat(7, None, None).is_ok());
     }
 
     #[test]
     fn heartbeats_keep_node_alive() {
         let o = orch();
+        o.admit(7);
         for _ in 0..5 {
-            o.heartbeat(7, None, None);
+            o.heartbeat(7, None, None).unwrap();
             std::thread::sleep(std::time::Duration::from_millis(10));
             o.health_sweep();
         }
@@ -374,7 +472,8 @@ mod tests {
     #[test]
     fn slash_marks_dead_and_ledger() {
         let o = orch();
-        o.heartbeat(9, None, None);
+        o.admit(9);
+        o.heartbeat(9, None, None).unwrap();
         o.slash(9, "toploc rejection");
         assert_eq!(o.status(9), Some(NodeStatus::Dead));
         assert!(o.ledger.is_slashed(1, 9));
@@ -392,9 +491,18 @@ mod tests {
             )
             .unwrap();
         assert_eq!(r.status, 200);
+        // An uninvited heartbeat over HTTP is a 403, and hands out nothing.
         let hb = c
             .post_json(&format!("{}/heartbeat", srv.url()), &Json::obj(vec![("node", 5u64.into())]))
             .unwrap();
+        assert_eq!(hb.status, 403);
+        assert_eq!(o.heartbeats_rejected.get(), 1);
+        // After admission the same heartbeat pulls the task.
+        o.admit(5);
+        let hb = c
+            .post_json(&format!("{}/heartbeat", srv.url()), &Json::obj(vec![("node", 5u64.into())]))
+            .unwrap();
+        assert_eq!(hb.status, 200);
         let j = Json::parse(std::str::from_utf8(&hb.body).unwrap()).unwrap();
         assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "rollout");
         let nodes = c.get(&format!("{}/nodes", srv.url())).unwrap();

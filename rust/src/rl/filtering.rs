@@ -21,30 +21,48 @@ impl Default for FilterBand {
 
 #[derive(Clone, Debug, Default)]
 pub struct PassStats {
-    /// (task_id, passes out of k).
-    pub per_task: Vec<(u64, usize)>,
+    /// (task_id, owning env, passes out of k).
+    pub per_task: Vec<(u64, &'static str, usize)>,
 }
 
 impl PassStats {
-    pub fn record(&mut self, task_id: u64, passes: usize) {
-        self.per_task.push((task_id, passes));
+    pub fn record(&mut self, task_id: u64, env: &'static str, passes: usize) {
+        self.per_task.push((task_id, env, passes));
     }
 
     /// Task ids inside the band (the filtered training set).
     pub fn keep(&self, band: &FilterBand) -> Vec<u64> {
         self.per_task
             .iter()
-            .filter(|(_, p)| *p >= band.min_pass && *p <= band.max_pass)
-            .map(|(id, _)| *id)
+            .filter(|(_, _, p)| *p >= band.min_pass && *p <= band.max_pass)
+            .map(|(id, _, _)| *id)
             .collect()
     }
 
     /// Fractions (too_easy, in_band, too_hard) for reporting.
     pub fn band_fractions(&self, band: &FilterBand) -> (f64, f64, f64) {
         let n = self.per_task.len().max(1) as f64;
-        let easy = self.per_task.iter().filter(|(_, p)| *p > band.max_pass).count() as f64;
-        let hard = self.per_task.iter().filter(|(_, p)| *p < band.min_pass).count() as f64;
+        let easy = self.per_task.iter().filter(|(_, _, p)| *p > band.max_pass).count() as f64;
+        let hard = self.per_task.iter().filter(|(_, _, p)| *p < band.min_pass).count() as f64;
         (easy / n, 1.0 - (easy + hard) / n, hard / n)
+    }
+
+    /// Per-environment `(env, kept, total)` breakdown — mixed-env filtering
+    /// observability (a band that keeps plenty of math can still starve a
+    /// harder env out of the training set entirely).
+    pub fn by_env(&self, band: &FilterBand) -> Vec<(&'static str, usize, usize)> {
+        let mut out: Vec<(&'static str, usize, usize)> = Vec::new();
+        for (_, env, p) in &self.per_task {
+            let kept = (*p >= band.min_pass && *p <= band.max_pass) as usize;
+            match out.iter_mut().find(|(n, _, _)| n == env) {
+                Some((_, k, t)) => {
+                    *k += kept;
+                    *t += 1;
+                }
+                None => out.push((env, kept, 1)),
+            }
+        }
+        out
     }
 }
 
@@ -55,17 +73,18 @@ mod tests {
     #[test]
     fn band_keeps_middle() {
         let mut s = PassStats::default();
-        s.record(0, 0); // too hard
-        s.record(1, 1); // keep
-        s.record(2, 4); // keep
-        s.record(3, 5); // too easy
-        s.record(4, 8); // too easy
+        s.record(0, "math", 0); // too hard
+        s.record(1, "math", 1); // keep
+        s.record(2, "code", 4); // keep
+        s.record(3, "code", 5); // too easy
+        s.record(4, "math", 8); // too easy
         let band = FilterBand::default();
         assert_eq!(s.keep(&band), vec![1, 2]);
         let (easy, mid, hard) = s.band_fractions(&band);
         assert!((easy - 0.4).abs() < 1e-9);
         assert!((mid - 0.4).abs() < 1e-9);
         assert!((hard - 0.2).abs() < 1e-9);
+        assert_eq!(s.by_env(&band), vec![("math", 1, 3), ("code", 1, 2)]);
     }
 
     #[test]

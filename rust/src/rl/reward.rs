@@ -85,8 +85,14 @@ mod tests {
         let reg = Registry::default();
         let mut rng = Rng::new(1);
         let t = math::generate(0, 0, &mut rng);
-        assert_eq!(task_reward(&reg, &t, &t.answer), 1.0);
+        assert_eq!(task_reward(&reg, &t, t.answer()), 1.0);
         assert_eq!(task_reward(&reg, &t, "wrong"), 0.0);
+        // Dispatch is registry-wide: every registered env rewards its own
+        // reference completion.
+        for name in reg.names() {
+            let t = reg.generate(name, 1, 1, &mut rng).unwrap();
+            assert_eq!(task_reward(&reg, &t, t.answer()), 1.0, "{name}");
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! `EngineHost`: cross-thread facade over a thread-confined [`Runtime`].
+//! `EngineHost`: cross-thread facade over a thread-confined
+//! [`Runtime`](super::Runtime).
 //!
 //! `xla::PjRtClient` is `Rc`-based, so all PJRT objects live on one thread.
 //! The host spawns that thread, compiles artifacts there, and serves

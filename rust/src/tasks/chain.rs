@@ -1,0 +1,220 @@
+//! `ChainEnv` ("chain"): multi-step arithmetic chains — the second
+//! environment added purely through the pluggable registry (one file +
+//! one `register` call, like `tasks::seq`).
+//!
+//! A task is a start value and a chain of operations applied strictly
+//! left-to-right — **no precedence**, which is exactly what distinguishes
+//! it from the math env: `"7:+3:*2:-4=?"` means `((7+3)*2)-4 = 16`, where
+//! the math env's `7+3*2-4` would be `9`. The model must track running
+//! state across steps, the multi-step-reasoning axis the paper's
+//! length-budget experiments probe.
+//!
+//! The op list is *hidden verification state*: the verifier refolds the
+//! chain from the payload's structured ops, never from the prompt text or
+//! the stored answer.
+//!
+//! Difficulty ladder (number of ops / operand ranges):
+//!   0: 2 ops, +/- on small values          "7:+3:-2=?"
+//!   1: 3 ops, +/-                          "12:+9:-4:+7=?"
+//!   2: 3 ops with *2..*4 mixed in          "5:+3:*2:-4=?"
+//!   3: 4 ops, mixed                        "9:*3:-5:+12:*2=?"
+//!   4: 5 ops, mixed, larger operands       —
+//!
+//! Payload: `{"answer": "<result>", "start": s, "ops": [["+",3],["*",2]]}`.
+
+use super::Task;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::verifier::Environment;
+
+pub const MAX_DIFFICULTY: u8 = 4;
+
+/// The "chain" environment plugin.
+pub struct ChainEnv;
+
+impl Environment for ChainEnv {
+    fn name(&self) -> &'static str {
+        "chain"
+    }
+    fn description(&self) -> &'static str {
+        "left-to-right multi-step arithmetic chains (no precedence)"
+    }
+    fn max_difficulty(&self) -> u8 {
+        MAX_DIFFICULTY
+    }
+    fn generate(&self, id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+        generate(id, difficulty, rng)
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        verify(task, completion)
+    }
+}
+
+/// Ops per chain at each difficulty.
+pub fn n_ops(difficulty: u8) -> usize {
+    match difficulty {
+        0 => 2,
+        1 | 2 => 3,
+        3 => 4,
+        _ => 5,
+    }
+}
+
+/// Fold a chain left-to-right. `None` on an unknown op word (a malformed
+/// payload must fail verification, not panic or free-pass).
+pub fn fold(start: i64, ops: &[(String, i64)]) -> Option<i64> {
+    let mut acc = start;
+    for (op, v) in ops {
+        acc = match op.as_str() {
+            "+" => acc.checked_add(*v)?,
+            "-" => acc.checked_sub(*v)?,
+            "*" => acc.checked_mul(*v)?,
+            _ => return None,
+        };
+    }
+    Some(acc)
+}
+
+pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+    let (add_hi, start_hi) = if difficulty >= 4 { (50, 60) } else { (20, 20) };
+    let start = rng.range(1, start_hi) as i64;
+    let mut ops: Vec<(String, i64)> = Vec::with_capacity(n_ops(difficulty));
+    for _ in 0..n_ops(difficulty) {
+        // Multiplication only enters at difficulty >= 2, and stays rare
+        // enough that values remain small (bounded by construction:
+        // |v| <= 60 + 50*5 times at most 4^5 < 1e6).
+        let mul = difficulty >= 2 && rng.bool(0.35);
+        if mul {
+            ops.push(("*".into(), 2 + rng.range(0, 3) as i64));
+        } else if rng.bool(0.5) {
+            ops.push(("+".into(), 1 + rng.range(0, add_hi) as i64));
+        } else {
+            ops.push(("-".into(), 1 + rng.range(0, add_hi) as i64));
+        }
+    }
+    let answer = fold(start, &ops).expect("generated ops are well-formed and bounded");
+    let prompt = {
+        let mut s = start.to_string();
+        for (op, v) in &ops {
+            s.push(':');
+            s.push_str(op);
+            s.push_str(&v.to_string());
+        }
+        s.push_str("=?");
+        s
+    };
+    let ops_json = Json::Arr(
+        ops.iter()
+            .map(|(op, v)| Json::Arr(vec![Json::Str(op.clone()), Json::from(*v)]))
+            .collect(),
+    );
+    Task {
+        id,
+        env: "chain",
+        prompt,
+        difficulty,
+        payload: Json::obj(vec![
+            ("answer", answer.to_string().into()),
+            ("start", start.into()),
+            ("ops", ops_json),
+        ]),
+    }
+}
+
+/// Refold the hidden op chain and compare against the completion's final
+/// integer (tolerant extraction shared with the math env).
+pub fn verify(task: &Task, completion: &str) -> bool {
+    let Some(start) = task.payload.get("start").and_then(Json::as_f64) else {
+        return false;
+    };
+    let Some(ops) = decode_ops(&task.payload) else {
+        return false;
+    };
+    let Some(want) = fold(start as i64, &ops) else {
+        return false;
+    };
+    super::math::extract_answer(completion) == Some(want)
+}
+
+fn decode_ops(payload: &Json) -> Option<Vec<(String, i64)>> {
+    payload
+        .get("ops")?
+        .as_arr()?
+        .iter()
+        .map(|pair| {
+            Some((
+                pair.idx(0)?.as_str()?.to_string(),
+                pair.idx(1)?.as_f64()? as i64,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops(spec: &[(&str, i64)]) -> Vec<(String, i64)> {
+        spec.iter().map(|(o, v)| (o.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn folds_left_to_right_without_precedence() {
+        // ((7+3)*2)-4 = 16, NOT 7+(3*2)-4 = 9.
+        assert_eq!(fold(7, &ops(&[("+", 3), ("*", 2), ("-", 4)])), Some(16));
+        assert_eq!(fold(5, &ops(&[])), Some(5));
+        assert_eq!(fold(5, &ops(&[("/", 2)])), None);
+    }
+
+    #[test]
+    fn generated_tasks_verify_with_reference_answer() {
+        let mut rng = Rng::new(13);
+        for d in 0..=MAX_DIFFICULTY {
+            for i in 0..50 {
+                let t = generate(i, d, &mut rng);
+                assert!(verify(&t, t.answer()), "{t:?}");
+                assert!(!verify(&t, "999999999"), "{t:?}");
+                assert_eq!(t.prompt.matches(':').count(), n_ops(d), "{t:?}");
+                assert!(t.prompt.ends_with("=?"), "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_differs_from_precedence_semantics() {
+        // Find a generated chain whose left-to-right answer differs from
+        // what precedence evaluation of the "same" expression would give —
+        // the reason this is a distinct environment, not math rebranded.
+        let mut rng = Rng::new(17);
+        let mut diverged = false;
+        for i in 0..200 {
+            let t = generate(i, 2, &mut rng);
+            let expr = t.prompt.trim_end_matches("=?").replace(':', "");
+            if let Some(prec) = super::super::math::eval_expr(&expr) {
+                if prec.to_string() != t.answer() {
+                    diverged = true;
+                    break;
+                }
+            }
+        }
+        assert!(diverged, "no chain diverged from precedence semantics in 200 draws");
+    }
+
+    #[test]
+    fn malformed_payload_fails_closed() {
+        let mut rng = Rng::new(19);
+        let mut t = generate(0, 1, &mut rng);
+        let honest = t.answer().to_string();
+        // Drop the hidden ops: unverifiable, never a free pass.
+        t.payload = Json::obj(vec![("answer", honest.clone().into())]);
+        assert!(!verify(&t, &honest));
+        // Unknown op word in a tampered payload: fails, no panic.
+        let bad = Json::obj(vec![
+            ("answer", honest.clone().into()),
+            ("start", 5u64.into()),
+            ("ops", Json::Arr(vec![Json::Arr(vec!["%".into(), Json::from(2u64)])])),
+        ]);
+        t.payload = bad;
+        assert!(!verify(&t, &honest));
+    }
+}

@@ -1,19 +1,89 @@
-//! Dataset assembly + the paper's deterministic sampling scheme.
+//! Dataset assembly + the paper's deterministic sampling scheme, routed
+//! entirely through the environment registry.
 //!
 //! §2.3.3: inference workers must not cherry-pick samples, so each node
 //! derives its batch from `seed = node_address * step + submissions`; the
-//! validator reproduces the draw from the same seed. §3.3.1: offline
-//! difficulty filtering keeps tasks with base-model pass@8 in a band.
+//! validator reproduces the draw from the same seed. That only works if
+//! both sides rebuild the *same dataset* — so generation is a pure
+//! function of `(registry, seed, env mix)`, the mix is an ordered list of
+//! `(env, count)` pairs (the `--env-mix math=900,code=100,seq=200` knob),
+//! and the produced [`Dataset`] carries the registry's fingerprint so a
+//! silently different env set is refused at construction time instead of
+//! surfacing as a bogus slash. §3.3.1: offline difficulty filtering keeps
+//! tasks with base-model pass@8 in a band.
 
-use super::{math, dsl, Task, TaskKind};
+use super::Task;
 use crate::util::rng::Rng;
+use crate::verifier::Registry;
+
+/// Ordered per-environment task counts. Order matters: the dataset is
+/// generated mix-entry by mix-entry from one RNG stream, so two parties
+/// must agree on the order (they do — both parse the same knob string).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EnvMix(pub Vec<(String, usize)>);
+
+impl EnvMix {
+    /// Parse the `--env-mix` knob: `"math=900,code=100,seq=200"`.
+    pub fn parse(s: &str) -> anyhow::Result<EnvMix> {
+        let mut out = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, count) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad env-mix entry {part:?} (want env=count)"))?;
+            let name = name.trim();
+            anyhow::ensure!(!name.is_empty(), "empty env name in env-mix {s:?}");
+            anyhow::ensure!(
+                !out.iter().any(|(n, _)| n == name),
+                "env {name:?} repeated in env-mix {s:?}"
+            );
+            let count: usize = count
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad count in env-mix entry {part:?}"))?;
+            out.push((name.to_string(), count));
+        }
+        anyhow::ensure!(!out.is_empty(), "empty env-mix");
+        Ok(EnvMix(out))
+    }
+
+    /// Build from literal pairs (tests and harness configs).
+    pub fn of(pairs: &[(&str, usize)]) -> EnvMix {
+        EnvMix(pairs.iter().map(|(n, c)| (n.to_string(), *c)).collect())
+    }
+
+    /// Task count for one env (0 if absent from the mix).
+    pub fn count(&self, env: &str) -> usize {
+        self.0.iter().find(|(n, _)| n == env).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    pub fn total(&self) -> usize {
+        self.0.iter().map(|(_, c)| c).sum()
+    }
+
+    /// Canonical knob rendering (`parse(render(m)) == m`).
+    pub fn render(&self) -> String {
+        self.0
+            .iter()
+            .map(|(n, c)| format!("{n}={c}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl Default for EnvMix {
+    /// The historical two-domain default.
+    fn default() -> Self {
+        EnvMix::of(&[("math", 900), ("code", 100)])
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct DatasetConfig {
     pub seed: u64,
-    pub n_math: usize,
-    pub n_code: usize,
-    /// Distribution over difficulties (unnormalized weights by level).
+    /// Per-env task counts, in generation order.
+    pub mix: EnvMix,
+    /// Distribution over difficulties (unnormalized weights by level;
+    /// clamped per env to its own ladder).
     pub difficulty_weights: Vec<f64>,
 }
 
@@ -21,8 +91,7 @@ impl Default for DatasetConfig {
     fn default() -> Self {
         DatasetConfig {
             seed: 1337,
-            n_math: 900,
-            n_code: 100,
+            mix: EnvMix::default(),
             difficulty_weights: vec![4.0, 3.0, 2.0, 1.0, 0.5, 0.25],
         }
     }
@@ -31,24 +100,33 @@ impl Default for DatasetConfig {
 #[derive(Clone)]
 pub struct Dataset {
     pub tasks: Vec<Task>,
+    /// Fingerprint of the registry that generated this dataset
+    /// ([`Registry::fingerprint`]): generators and validators check theirs
+    /// against it at construction, so a silent env-set mismatch — which
+    /// would turn §2.3.3 determinism checks into false slashes — fails
+    /// fast instead.
+    pub fingerprint: u64,
 }
 
 impl Dataset {
-    /// Deterministically generate the full task set (math then code, ids
-    /// are indices).
-    pub fn generate(cfg: &DatasetConfig) -> Dataset {
+    /// Deterministically generate the full task set: mix entries in
+    /// order, ids are indices, difficulties drawn from one RNG stream.
+    /// Errors on a mix naming an env the registry doesn't have.
+    pub fn generate(registry: &Registry, cfg: &DatasetConfig) -> anyhow::Result<Dataset> {
         let mut rng = Rng::new(cfg.seed);
-        let mut tasks = Vec::with_capacity(cfg.n_math + cfg.n_code);
-        for i in 0..cfg.n_math {
-            let d = rng.weighted(&cfg.difficulty_weights) as u8;
-            let d = d.min(math::MAX_DIFFICULTY);
-            tasks.push(math::generate(i as u64, d, &mut rng));
+        let mut tasks = Vec::with_capacity(cfg.mix.total());
+        let mut id = 0u64;
+        for (name, count) in &cfg.mix.0 {
+            let env = registry
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("env-mix names unregistered env {name:?}"))?;
+            for _ in 0..*count {
+                let d = (rng.weighted(&cfg.difficulty_weights) as u8).min(env.max_difficulty());
+                tasks.push(env.generate(id, d, &mut rng));
+                id += 1;
+            }
         }
-        for i in 0..cfg.n_code {
-            let d = (rng.weighted(&cfg.difficulty_weights) as u8).min(3);
-            tasks.push(dsl::generate((cfg.n_math + i) as u64, d, &mut rng));
-        }
-        Dataset { tasks }
+        Ok(Dataset { tasks, fingerprint: registry.fingerprint() })
     }
 
     pub fn len(&self) -> usize {
@@ -78,6 +156,7 @@ impl Dataset {
                 .filter(|t| set[t.id as usize])
                 .cloned()
                 .collect(),
+            fingerprint: self.fingerprint,
         }
     }
 
@@ -88,8 +167,21 @@ impl Dataset {
         (0..k).map(|_| self.tasks[rng.usize(self.tasks.len())].id).collect()
     }
 
-    pub fn count_kind(&self, kind: TaskKind) -> usize {
-        self.tasks.iter().filter(|t| t.kind == kind).count()
+    /// Tasks owned by one environment.
+    pub fn count_env(&self, env: &str) -> usize {
+        self.tasks.iter().filter(|t| t.env == env).count()
+    }
+
+    /// `(env, count)` pairs in first-appearance order (observability).
+    pub fn env_counts(&self) -> Vec<(&'static str, usize)> {
+        let mut out: Vec<(&'static str, usize)> = Vec::new();
+        for t in &self.tasks {
+            match out.iter_mut().find(|(n, _)| *n == t.env) {
+                Some((_, c)) => *c += 1,
+                None => out.push((t.env, 1)),
+            }
+        }
+        out
     }
 }
 
@@ -102,24 +194,58 @@ pub fn node_sample_seed(node_address: u64, step: u64, submissions: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
+
+    fn reg() -> Registry {
+        Registry::standard()
+    }
+
+    #[test]
+    fn env_mix_parses_and_renders() {
+        let m = EnvMix::parse("math=900, code=100,seq=200").unwrap();
+        assert_eq!(m.count("math"), 900);
+        assert_eq!(m.count("seq"), 200);
+        assert_eq!(m.count("chain"), 0);
+        assert_eq!(m.total(), 1200);
+        assert_eq!(EnvMix::parse(&m.render()).unwrap(), m);
+        assert!(EnvMix::parse("").is_err());
+        assert!(EnvMix::parse("math").is_err());
+        assert!(EnvMix::parse("math=x").is_err());
+        assert!(EnvMix::parse("math=1,math=2").is_err());
+    }
 
     #[test]
     fn generation_is_deterministic() {
-        let cfg = DatasetConfig { n_math: 50, n_code: 10, ..Default::default() };
-        let a = Dataset::generate(&cfg);
-        let b = Dataset::generate(&cfg);
+        let cfg = DatasetConfig {
+            mix: EnvMix::of(&[("math", 50), ("code", 10)]),
+            ..Default::default()
+        };
+        let a = Dataset::generate(&reg(), &cfg).unwrap();
+        let b = Dataset::generate(&reg(), &cfg).unwrap();
         assert_eq!(a.len(), 60);
         for (x, y) in a.tasks.iter().zip(&b.tasks) {
             assert_eq!(x.prompt, y.prompt);
-            assert_eq!(x.answer, y.answer);
+            assert_eq!(x.payload, y.payload);
         }
-        assert_eq!(a.count_kind(TaskKind::Math), 50);
-        assert_eq!(a.count_kind(TaskKind::Code), 10);
+        assert_eq!(a.count_env("math"), 50);
+        assert_eq!(a.count_env("code"), 10);
+        assert_eq!(a.env_counts(), vec![("math", 50), ("code", 10)]);
+        assert_eq!(a.fingerprint, reg().fingerprint());
+    }
+
+    #[test]
+    fn unknown_env_in_mix_is_refused() {
+        let cfg = DatasetConfig { mix: EnvMix::of(&[("martian", 5)]), ..Default::default() };
+        assert!(Dataset::generate(&reg(), &cfg).is_err());
     }
 
     #[test]
     fn ids_are_indices() {
-        let d = Dataset::generate(&DatasetConfig { n_math: 20, n_code: 5, ..Default::default() });
+        let cfg = DatasetConfig {
+            mix: EnvMix::of(&[("math", 20), ("code", 5), ("seq", 5), ("chain", 5)]),
+            ..Default::default()
+        };
+        let d = Dataset::generate(&reg(), &cfg).unwrap();
         for (i, t) in d.tasks.iter().enumerate() {
             assert_eq!(t.id, i as u64);
             assert_eq!(d.get(t.id).unwrap().prompt, t.prompt);
@@ -128,7 +254,11 @@ mod tests {
 
     #[test]
     fn sample_reproducible_across_parties() {
-        let d = Dataset::generate(&DatasetConfig { n_math: 100, n_code: 20, ..Default::default() });
+        let cfg = DatasetConfig {
+            mix: EnvMix::of(&[("math", 100), ("code", 20)]),
+            ..Default::default()
+        };
+        let d = Dataset::generate(&reg(), &cfg).unwrap();
         let seed = node_sample_seed(0xABCD, 7, 2);
         assert_eq!(d.sample_for(seed, 16), d.sample_for(seed, 16));
         assert_ne!(
@@ -142,10 +272,62 @@ mod tests {
     }
 
     #[test]
-    fn filtering_keeps_subset() {
-        let d = Dataset::generate(&DatasetConfig { n_math: 30, n_code: 0, ..Default::default() });
+    fn filtering_keeps_subset_and_fingerprint() {
+        let cfg = DatasetConfig { mix: EnvMix::of(&[("math", 30)]), ..Default::default() };
+        let d = Dataset::generate(&reg(), &cfg).unwrap();
         let f = d.filtered(&[1, 5, 9]);
         assert_eq!(f.len(), 3);
         assert!(f.tasks.iter().all(|t| [1, 5, 9].contains(&t.id)));
+        assert_eq!(f.fingerprint, d.fingerprint);
+    }
+
+    /// Byte-identical serialization of one task (what "identical dataset"
+    /// means across parties: prompt, env, difficulty and the full hidden
+    /// payload, rendered to canonical JSON text).
+    fn task_bytes(t: &Task) -> String {
+        format!("{}|{}|{}|{}|{}", t.id, t.env, t.difficulty, t.prompt, t.payload)
+    }
+
+    /// The regeneration-parity property behind §2.3.3 slashing: for
+    /// *arbitrary env mixes* over arbitrary env subsets/orders, a
+    /// worker-side and a validator-side dataset built from independently
+    /// constructed registries are byte-identical — tasks, hidden payloads,
+    /// fingerprint and the deterministic sample draw.
+    #[test]
+    fn prop_regeneration_parity_across_arbitrary_mixes() {
+        prop::check(
+            "worker/validator dataset regeneration parity",
+            24,
+            |rng, _| {
+                let mut names = Registry::standard().names();
+                rng.shuffle(&mut names);
+                let n_envs = 1 + rng.usize(names.len());
+                let mix = EnvMix(
+                    names[..n_envs]
+                        .iter()
+                        .map(|n| (n.to_string(), 1 + rng.usize(40)))
+                        .collect(),
+                );
+                (rng.next_u64(), mix)
+            },
+            |(seed, mix)| {
+                let cfg = DatasetConfig { seed: *seed, mix: mix.clone(), ..Default::default() };
+                let worker = Dataset::generate(&Registry::standard(), &cfg)
+                    .map_err(|e| e.to_string())?;
+                let validator = Dataset::generate(&Registry::standard(), &cfg)
+                    .map_err(|e| e.to_string())?;
+                prop::ensure_eq(worker.len(), mix.total(), "dataset size")?;
+                prop::ensure_eq(worker.fingerprint, validator.fingerprint, "fingerprint")?;
+                for (a, b) in worker.tasks.iter().zip(&validator.tasks) {
+                    prop::ensure_eq(task_bytes(a), task_bytes(b), "task bytes")?;
+                }
+                let s = node_sample_seed(0xBEEF, 3, 1);
+                prop::ensure_eq(
+                    worker.sample_for(s, 8),
+                    validator.sample_for(s, 8),
+                    "sample draw",
+                )
+            },
+        );
     }
 }

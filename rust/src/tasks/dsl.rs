@@ -1,4 +1,5 @@
-//! Mini stack DSL — the "python coding competition" stand-in (§2.1.3).
+//! `CodeEnv` ("code"): mini stack DSL — the "python coding competition"
+//! stand-in (§2.1.3), packaged as one [`Environment`] plugin.
 //!
 //! A program is a sequence of words applied left-to-right to an integer
 //! list (`"sort rev"` sorts then reverses). Tasks show input/output example
@@ -6,9 +7,40 @@
 //! hidden unit tests — sandboxed exactly like the paper sandboxes LLM
 //! code: hard limits on program length, list size and value magnitude,
 //! and binary all-tests-pass rewards to discourage reward hacking.
+//!
+//! Payload: `{"answer": "<program>", "tests": [[[in...],[out...]], ...]}` —
+//! the hidden unit tests ride the env-owned payload (list values are
+//! bounded by [`MAX_ABS_VALUE`], well inside f64-exact JSON range).
 
-use super::{Task, TaskKind};
+use super::Task;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::verifier::Environment;
+
+/// The "code" environment plugin.
+pub struct CodeEnv;
+
+impl Environment for CodeEnv {
+    fn name(&self) -> &'static str {
+        "code"
+    }
+    fn description(&self) -> &'static str {
+        "stack-DSL programs under hidden unit tests (SYNTHETIC-1 analogue)"
+    }
+    fn max_difficulty(&self) -> u8 {
+        3
+    }
+    fn generate(&self, id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+        generate(id, difficulty, rng)
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        verify(task, completion)
+    }
+    fn corrupt_answer(&self, _answer: &str, rng: &mut Rng) -> String {
+        // Pretraining noise: a random (likely wrong) op word.
+        OPS[rng.usize(OPS.len())].to_string()
+    }
+}
 
 pub const OPS: &[&str] = &[
     "rev", "sort", "inc", "dec", "dbl", "sum", "max", "min", "len", "head", "tail",
@@ -155,13 +187,39 @@ pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
         );
         return Task {
             id,
-            kind: TaskKind::Code,
+            env: "code",
             prompt,
-            answer: program,
             difficulty,
-            tests: pairs[2..].to_vec(),
+            payload: Json::obj(vec![
+                ("answer", program.into()),
+                ("tests", encode_tests(&pairs[2..])),
+            ]),
         };
     }
+}
+
+/// Hidden unit tests -> payload JSON: `[[[in...],[out...]], ...]`.
+fn encode_tests(pairs: &[(Vec<i64>, Vec<i64>)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(i, o)| Json::Arr(vec![Json::from(i.clone()), Json::from(o.clone())]))
+            .collect(),
+    )
+}
+
+/// Payload JSON -> hidden unit tests (inverse of [`encode_tests`]).
+/// `None` on a malformed payload — which `verify` scores as failure.
+pub fn decode_tests(payload: &Json) -> Option<Vec<(Vec<i64>, Vec<i64>)>> {
+    let list = |j: &Json| -> Option<Vec<i64>> {
+        j.as_arr()?.iter().map(|v| v.as_f64().map(|f| f as i64)).collect()
+    };
+    payload
+        .get("tests")?
+        .as_arr()?
+        .iter()
+        .map(|pair| Some((list(pair.idx(0)?)?, list(pair.idx(1)?)?)))
+        .collect()
 }
 
 /// Binary all-tests-pass verification (§3.1.1: deliberately no partial
@@ -172,7 +230,10 @@ pub fn verify(task: &Task, completion: &str) -> bool {
     if program.is_empty() {
         return false;
     }
-    task.tests.iter().all(|(input, want)| match run(program, input) {
+    let Some(tests) = decode_tests(&task.payload) else {
+        return false;
+    };
+    tests.iter().all(|(input, want)| match run(program, input) {
         Ok(got) => &got == want,
         Err(_) => false,
     })
@@ -219,8 +280,8 @@ mod tests {
         for d in 0..=3u8 {
             for i in 0..40 {
                 let t = generate(i, d, &mut rng);
-                assert!(verify(&t, &t.answer), "{t:?}");
-                assert_eq!(t.tests.len(), 2);
+                assert!(verify(&t, t.answer()), "{t:?}");
+                assert_eq!(decode_tests(&t.payload).unwrap().len(), 2);
             }
         }
     }
@@ -233,13 +294,26 @@ mod tests {
         for i in 0..n {
             let t = generate(i, 2, &mut rng);
             // A fixed wrong guess.
-            if t.answer != "rev" && verify(&t, "rev") {
+            if t.answer() != "rev" && verify(&t, "rev") {
                 wrong_pass += 1;
             }
         }
         // Collisions possible (different program, same behaviour on the
         // hidden tests) but must be rare.
         assert!(wrong_pass < n / 4, "{wrong_pass}");
+    }
+
+    #[test]
+    fn tests_roundtrip_through_payload() {
+        let pairs = vec![(vec![1, 2], vec![2, 1]), (vec![], vec![0])];
+        let payload = Json::obj(vec![("tests", encode_tests(&pairs))]);
+        assert_eq!(decode_tests(&payload), Some(pairs));
+        // A task whose payload lost its hidden tests never verifies.
+        let mut rng = Rng::new(5);
+        let mut t = generate(0, 1, &mut rng);
+        let answer = t.answer().to_string();
+        t.payload = Json::obj(vec![("answer", answer.clone().into())]);
+        assert!(!verify(&t, &answer));
     }
 
     #[test]

@@ -1,83 +1,174 @@
-//! Held-out evaluation suites — the Table 1 benchmark analogues.
+//! Held-out evaluation suites — the Table 1 benchmark analogues, derived
+//! from the environment registry.
 //!
 //! The paper evaluates on AIME24/25, LiveCodeBench, GPQA-Diamond and
 //! IFEval. Substitutions (DESIGN.md): each suite is a held-out seeded task
 //! family probing the same axis (hard math, code, mixed generalization,
-//! instruction/length following).
+//! instruction/length following). A [`Suite`] is *data*, not an enum: a
+//! name, a held-out seed, a cycled list of `(env, difficulty)` templates,
+//! and a scoring mode — all task generation and correctness scoring go
+//! through `verifier::Registry`, the same dispatch path the trainer and
+//! the TOPLOC validator use, so the two verification paths cannot drift.
+//!
+//! Every registered environment also contributes a *derived* held-out
+//! suite ([`Suite::for_env`]) built from its own
+//! `Environment::eval_difficulties` ladder — plug in an env, get its eval
+//! for free ([`Suite::standard`] appends them automatically).
 
-use super::{dataset::Dataset, dsl, math, Task, TaskKind};
+use super::{dataset::Dataset, Task};
 use crate::util::rng::Rng;
+use crate::verifier::{Environment, Registry};
 
+/// How a suite scores one completion.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Suite {
-    /// AIME analogue: hardest math levels (4-5).
-    MathHard,
-    /// AIME25 analogue: same distribution, different seed.
-    MathHard2,
-    /// LiveCodeBench analogue: held-out code tasks (difficulty 2-3).
-    Code,
-    /// GPQA analogue: mixed hard math + code generalization set.
-    Mixed,
-    /// IFEval analogue: length-budget following (score = fraction of
-    /// completions within tolerance of the requested budget).
+pub enum Scoring {
+    /// Binary correctness through the task's environment verifier.
+    Correctness,
+    /// IFEval analogue: fraction of completions within tolerance of the
+    /// requested thinking budget (correctness ignored).
     LengthFollow,
 }
 
-pub const ALL_SUITES: [Suite; 5] =
-    [Suite::MathHard, Suite::MathHard2, Suite::Code, Suite::Mixed, Suite::LengthFollow];
+/// One held-out suite.
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub name: String,
+    /// Held-out seed: disjoint from every training dataset seed.
+    seed: u64,
+    /// `(env, difficulty)` templates, cycled across task indices.
+    entries: Vec<(String, u8)>,
+    pub scoring: Scoring,
+}
+
+/// Base of the held-out seed space (training datasets use small
+/// user-picked seeds; everything here lives under this prefix).
+const EVAL_SEED_BASE: u64 = 0xE11A_0000;
+
+/// FNV-1a over an env name: the per-env derived-suite seed offset.
+fn name_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
 
 impl Suite {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Suite::MathHard => "MATH-HARD (AIME24 analogue)",
-            Suite::MathHard2 => "MATH-HARD-2 (AIME25 analogue)",
-            Suite::Code => "CODE (LiveCodeBench analogue)",
-            Suite::Mixed => "MIXED (GPQA-Diamond analogue)",
-            Suite::LengthFollow => "LENGTH-FOLLOW (IFEval analogue)",
+    /// AIME24 analogue: hardest math levels (4-5).
+    pub fn math_hard() -> Suite {
+        Suite {
+            name: "MATH-HARD (AIME24 analogue)".into(),
+            seed: EVAL_SEED_BASE + 1,
+            entries: vec![("math".into(), 4), ("math".into(), 5)],
+            scoring: Scoring::Correctness,
         }
     }
 
-    /// Held-out seeds: disjoint from every training dataset seed.
-    fn seed(&self) -> u64 {
-        match self {
-            Suite::MathHard => 0xE11A_0001,
-            Suite::MathHard2 => 0xE11A_0002,
-            Suite::Code => 0xE11A_0003,
-            Suite::Mixed => 0xE11A_0004,
-            Suite::LengthFollow => 0xE11A_0005,
+    /// AIME25 analogue: same distribution, different seed.
+    pub fn math_hard2() -> Suite {
+        Suite {
+            name: "MATH-HARD-2 (AIME25 analogue)".into(),
+            seed: EVAL_SEED_BASE + 2,
+            entries: vec![("math".into(), 4), ("math".into(), 5)],
+            scoring: Scoring::Correctness,
         }
     }
 
-    pub fn tasks(&self, n: usize) -> Vec<Task> {
-        let mut rng = Rng::new(self.seed());
-        let mut out = Vec::with_capacity(n);
-        for i in 0..n {
-            let id = 1_000_000 + i as u64; // never collides with train ids
-            let t = match self {
-                Suite::MathHard | Suite::MathHard2 => {
-                    math::generate(id, 4 + (i % 2) as u8, &mut rng)
-                }
-                Suite::Code => dsl::generate(id, 2 + (i % 2) as u8, &mut rng),
-                Suite::Mixed => {
-                    if i % 2 == 0 {
-                        math::generate(id, 3, &mut rng)
-                    } else {
-                        dsl::generate(id, 2, &mut rng)
-                    }
-                }
-                // Length-follow reuses easy math but scores on budget
-                // adherence, not correctness.
-                Suite::LengthFollow => math::generate(id, 1, &mut rng),
-            };
-            out.push(t);
+    /// LiveCodeBench analogue: held-out code tasks (difficulty 2-3).
+    pub fn code() -> Suite {
+        Suite {
+            name: "CODE (LiveCodeBench analogue)".into(),
+            seed: EVAL_SEED_BASE + 3,
+            entries: vec![("code".into(), 2), ("code".into(), 3)],
+            scoring: Scoring::Correctness,
         }
+    }
+
+    /// GPQA analogue: cross-domain generalization — cycles *every*
+    /// registered env near the top of its ladder, so the suite widens by
+    /// itself as environments are plugged in.
+    pub fn mixed(registry: &Registry) -> Suite {
+        Suite {
+            name: "MIXED (GPQA-Diamond analogue)".into(),
+            seed: EVAL_SEED_BASE + 4,
+            entries: registry
+                .envs()
+                .map(|e| (e.name().to_string(), e.max_difficulty().saturating_sub(1)))
+                .collect(),
+            scoring: Scoring::Correctness,
+        }
+    }
+
+    /// IFEval analogue: length-budget following over easy math prompts.
+    pub fn length_follow() -> Suite {
+        Suite {
+            name: "LENGTH-FOLLOW (IFEval analogue)".into(),
+            seed: EVAL_SEED_BASE + 5,
+            entries: vec![("math".into(), 1)],
+            scoring: Scoring::LengthFollow,
+        }
+    }
+
+    /// The env's derived held-out suite: its own
+    /// [`Environment::eval_difficulties`] ladder under a name-keyed
+    /// held-out seed. This is the eval-suite hook of the plugin API.
+    pub fn for_env(env: &dyn Environment) -> Suite {
+        Suite {
+            name: format!("EVAL-{} (held out)", env.name()),
+            seed: EVAL_SEED_BASE ^ name_seed(env.name()),
+            entries: env
+                .eval_difficulties()
+                .into_iter()
+                .map(|d| (env.name().to_string(), d))
+                .collect(),
+            scoring: Scoring::Correctness,
+        }
+    }
+
+    /// The full evaluation battery: the five classic analogues plus one
+    /// derived suite per registered environment.
+    pub fn standard(registry: &Registry) -> Vec<Suite> {
+        let mut out = vec![
+            Suite::math_hard(),
+            Suite::math_hard2(),
+            Suite::code(),
+            Suite::mixed(registry),
+            Suite::length_follow(),
+        ];
+        out.extend(registry.envs().map(Suite::for_env));
         out
     }
 
-    /// Score one completion for this suite.
-    pub fn score(&self, task: &Task, completion: &str, completion_len: usize, target_len: Option<usize>) -> f64 {
-        match self {
-            Suite::LengthFollow => {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Generate the suite's first `n` tasks through the registry. Ids
+    /// start at 1_000_000 so they never collide with train ids.
+    pub fn tasks(&self, registry: &Registry, n: usize) -> anyhow::Result<Vec<Task>> {
+        anyhow::ensure!(!self.entries.is_empty(), "suite {:?} has no entries", self.name);
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let (env, d) = &self.entries[i % self.entries.len()];
+            out.push(registry.generate(env, 1_000_000 + i as u64, *d, &mut rng)?);
+        }
+        Ok(out)
+    }
+
+    /// Score one completion for this suite (correctness through the
+    /// registry — the same path the reward and TOPLOC checks use).
+    pub fn score(
+        &self,
+        registry: &Registry,
+        task: &Task,
+        completion: &str,
+        completion_len: usize,
+        target_len: Option<usize>,
+    ) -> f64 {
+        match self.scoring {
+            Scoring::LengthFollow => {
                 let target = target_len.unwrap_or(0) as f64;
                 let tol = (target * 0.25).max(8.0);
                 if (completion_len as f64 - target).abs() <= tol {
@@ -86,12 +177,8 @@ impl Suite {
                     0.0
                 }
             }
-            _ => {
-                let ok = match task.kind {
-                    TaskKind::Math => math::verify(task, completion),
-                    TaskKind::Code => dsl::verify(task, completion),
-                };
-                if ok {
+            Scoring::Correctness => {
+                if registry.verify(task, completion) {
                     1.0
                 } else {
                     0.0
@@ -102,57 +189,108 @@ impl Suite {
 }
 
 /// Confirm eval tasks don't collide with a training dataset (prompt-level).
-pub fn overlap_with_train(suite: &Suite, train: &Dataset, n: usize) -> usize {
-    let eval_tasks = suite.tasks(n);
-    eval_tasks
+pub fn overlap_with_train(
+    registry: &Registry,
+    suite: &Suite,
+    train: &Dataset,
+    n: usize,
+) -> anyhow::Result<usize> {
+    let eval_tasks = suite.tasks(registry, n)?;
+    Ok(eval_tasks
         .iter()
         .filter(|e| train.tasks.iter().any(|t| t.prompt == e.prompt))
-        .count()
+        .count())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tasks::dataset::DatasetConfig;
+    use crate::tasks::dataset::{DatasetConfig, EnvMix};
+
+    fn reg() -> Registry {
+        Registry::standard()
+    }
 
     #[test]
     fn suites_are_deterministic_and_distinct() {
-        for s in ALL_SUITES {
-            let a = s.tasks(20);
-            let b = s.tasks(20);
+        let registry = reg();
+        for s in Suite::standard(&registry) {
+            let a = s.tasks(&registry, 20).unwrap();
+            let b = s.tasks(&registry, 20).unwrap();
             assert_eq!(a.len(), 20);
             for (x, y) in a.iter().zip(&b) {
                 assert_eq!(x.prompt, y.prompt);
             }
         }
-        let m1 = Suite::MathHard.tasks(20);
-        let m2 = Suite::MathHard2.tasks(20);
+        let m1 = Suite::math_hard().tasks(&registry, 20).unwrap();
+        let m2 = Suite::math_hard2().tasks(&registry, 20).unwrap();
         assert!(m1.iter().zip(&m2).any(|(a, b)| a.prompt != b.prompt));
     }
 
     #[test]
+    fn every_registered_env_gets_a_derived_suite() {
+        let registry = reg();
+        let suites = Suite::standard(&registry);
+        for env in registry.envs() {
+            let suite = suites
+                .iter()
+                .find(|s| s.name.contains(&format!("EVAL-{}", env.name())))
+                .unwrap_or_else(|| panic!("no derived suite for {}", env.name()));
+            let tasks = suite.tasks(&registry, 10).unwrap();
+            assert!(tasks.iter().all(|t| t.env == env.name()));
+            // The derived ladder is the env's own hook.
+            let ladder = env.eval_difficulties();
+            for (i, t) in tasks.iter().enumerate() {
+                assert_eq!(t.difficulty, ladder[i % ladder.len()].min(env.max_difficulty()));
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_suite_spans_all_envs() {
+        let registry = reg();
+        let tasks = Suite::mixed(&registry).tasks(&registry, 2 * registry.len()).unwrap();
+        for name in registry.names() {
+            assert!(tasks.iter().any(|t| t.env == name), "mixed suite misses {name}");
+        }
+    }
+
+    #[test]
     fn reference_answers_score_one() {
-        for s in [Suite::MathHard, Suite::Code, Suite::Mixed] {
-            for t in s.tasks(15) {
-                assert_eq!(s.score(&t, &t.answer, t.answer.len(), None), 1.0);
+        let registry = reg();
+        for s in Suite::standard(&registry) {
+            if s.scoring != Scoring::Correctness {
+                continue;
+            }
+            for t in s.tasks(&registry, 15).unwrap() {
+                assert_eq!(s.score(&registry, &t, t.answer(), t.answer().len(), None), 1.0);
             }
         }
     }
 
     #[test]
     fn length_follow_scores_budget() {
-        let s = Suite::LengthFollow;
-        let t = &s.tasks(1)[0];
-        assert_eq!(s.score(t, "x", 64, Some(64)), 1.0);
-        assert_eq!(s.score(t, "x", 64, Some(128)), 0.0);
+        let registry = reg();
+        let s = Suite::length_follow();
+        let t = &s.tasks(&registry, 1).unwrap()[0];
+        assert_eq!(s.score(&registry, t, "x", 64, Some(64)), 1.0);
+        assert_eq!(s.score(&registry, t, "x", 64, Some(128)), 0.0);
     }
 
     #[test]
     fn minimal_train_eval_overlap() {
-        let train = Dataset::generate(&DatasetConfig { n_math: 200, n_code: 40, ..Default::default() });
+        let registry = reg();
+        let train = Dataset::generate(
+            &registry,
+            &DatasetConfig {
+                mix: EnvMix::of(&[("math", 200), ("code", 40)]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
         // Hard suites draw from much larger value ranges; incidental prompt
         // collisions with the easy-heavy train set must be rare.
-        let ov = overlap_with_train(&Suite::MathHard, &train, 50);
+        let ov = overlap_with_train(&registry, &Suite::math_hard(), &train, 50).unwrap();
         assert!(ov <= 2, "{ov}");
     }
 }

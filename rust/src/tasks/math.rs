@@ -1,4 +1,5 @@
-//! Arithmetic task generator — the NuminaMath/Deepscaler stand-in.
+//! `MathEnv` ("math"): symbolic arithmetic — the NuminaMath/Deepscaler
+//! stand-in, packaged as one [`Environment`] plugin.
 //!
 //! Difficulty ladder (paper §3.3: dataset difficulty drives RL progress):
 //!   0: single-digit addition            "3+4=?"
@@ -7,11 +8,38 @@
 //!   3: single x double digit product    "7*64=?"
 //!   4: two-op expression, precedence    "5+3*12=?"
 //!   5: parenthesized expression         "(14-6)*7=?"
+//!
+//! Payload: `{"answer": "<integer>"}` — verification is symbolic (the
+//! prompt expression is re-evaluated independently), the stored answer is
+//! only the fallback for unparseable prompts.
 
-use super::{Task, TaskKind};
+use super::Task;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::verifier::Environment;
 
 pub const MAX_DIFFICULTY: u8 = 5;
+
+/// The "math" environment plugin.
+pub struct MathEnv;
+
+impl Environment for MathEnv {
+    fn name(&self) -> &'static str {
+        "math"
+    }
+    fn description(&self) -> &'static str {
+        "symbolic arithmetic (NuminaMath/Deepscaler analogue)"
+    }
+    fn max_difficulty(&self) -> u8 {
+        MAX_DIFFICULTY
+    }
+    fn generate(&self, id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+        generate(id, difficulty, rng)
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        verify(task, completion)
+    }
+}
 
 pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
     let (prompt, value) = match difficulty {
@@ -54,11 +82,10 @@ pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
     };
     Task {
         id,
-        kind: TaskKind::Math,
+        env: "math",
         prompt,
-        answer: value.to_string(),
         difficulty,
-        tests: Vec::new(),
+        payload: Json::obj(vec![("answer", value.to_string().into())]),
     }
 }
 
@@ -69,7 +96,7 @@ pub fn verify(task: &Task, completion: &str) -> bool {
     let got = extract_answer(completion);
     match (got, eval_expr(task.prompt.trim_end_matches("=?"))) {
         (Some(g), Some(want)) => g == want,
-        (Some(g), None) => task.answer.parse::<i64>().map(|w| w == g).unwrap_or(false),
+        (Some(g), None) => task.answer().parse::<i64>().map(|w| w == g).unwrap_or(false),
         _ => false,
     }
 }
@@ -194,7 +221,7 @@ mod tests {
         for d in 0..=MAX_DIFFICULTY {
             for i in 0..50 {
                 let t = generate(i, d, &mut rng);
-                assert!(verify(&t, &t.answer), "{t:?}");
+                assert!(verify(&t, t.answer()), "{t:?}");
                 assert!(!verify(&t, "999999999"), "{t:?}");
             }
         }
@@ -209,7 +236,7 @@ mod tests {
             let expr = t.prompt.trim_end_matches("=?");
             prop::ensure_eq(
                 eval_expr(expr),
-                t.answer.parse::<i64>().ok(),
+                t.answer().parse::<i64>().ok(),
                 "evaluator vs generator",
             )
         });
@@ -219,8 +246,8 @@ mod tests {
     fn verify_accepts_leading_zeros_via_symbolic_eval() {
         let mut rng = Rng::new(3);
         let t = generate(0, 0, &mut rng);
-        let padded = format!("0{}", t.answer);
-        if !t.answer.starts_with('-') {
+        let padded = format!("0{}", t.answer());
+        if !t.answer().starts_with('-') {
             assert!(verify(&t, &padded));
         }
     }

@@ -1,38 +1,66 @@
-//! Training tasks with verifiable rewards (paper §3.1.1).
+//! Training tasks with verifiable rewards (paper §3.1.1) — env-agnostic.
 //!
 //! The paper curates 285k tasks (259k math from NuminaMath-1.5/Deepscaler,
-//! 26k Python coding problems from SYNTHETIC-1). Substitution (DESIGN.md):
-//! synthetic arithmetic tasks verified symbolically, and list-manipulation
-//! programs in a mini stack DSL verified by hidden unit tests — the same
-//! binary-reward structure at a scale a tiny model can learn.
+//! 26k Python coding problems from SYNTHETIC-1); its successors open the
+//! task surface into pluggable environment hubs. This layer mirrors that:
+//! a [`Task`] carries no domain knowledge of its own — just an env id
+//! naming its owning [`crate::verifier::Environment`] plugin, a prompt in
+//! the tokenizer alphabet, and an env-owned JSON payload holding whatever
+//! hidden verification state that env needs (reference answers, unit
+//! tests, generating rules, ...).
+//!
+//! The environments shipped in-tree, one file each:
+//! - [`math`] — symbolic arithmetic (`MathEnv`, "math")
+//! - [`dsl`] — mini stack-DSL programs under hidden unit tests
+//!   (`CodeEnv`, "code")
+//! - [`seq`] — sequence extrapolation from a hidden generating rule
+//!   (`SeqEnv`, "seq")
+//! - [`chain`] — left-to-right multi-step arithmetic chains
+//!   (`ChainEnv`, "chain")
+//!
+//! Adding a fifth is the same shape: one file implementing `Environment`,
+//! one `Registry::register` call — nothing here changes. Dataset assembly
+//! ([`dataset`]) and held-out evaluation ([`eval`]) dispatch purely
+//! through the registry.
+//!
+//! **Payload contract:** every env stores the reference completion under
+//! the `"answer"` key ([`Task::answer`]); all other keys are env-private.
+//! Payloads must round-trip losslessly through JSON text (enforced by a
+//! registry property test) so both swarm sides reconstruct identical
+//! hidden state.
 
+pub mod chain;
 pub mod dataset;
 pub mod dsl;
 pub mod eval;
 pub mod math;
+pub mod seq;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TaskKind {
-    Math,
-    Code,
-}
+use crate::util::json::Json;
 
-/// One verifiable task. `prompt` and `answer` are plain text in the
-/// tokenizer alphabet; code tasks additionally carry hidden unit tests.
+/// One verifiable task. `prompt` is plain text in the tokenizer alphabet;
+/// `payload` is owned by the environment named in `env`.
 #[derive(Clone, Debug)]
 pub struct Task {
     pub id: u64,
-    pub kind: TaskKind,
+    /// Registry key of the owning environment (`verifier::Registry`).
+    pub env: &'static str,
     pub prompt: String,
-    /// Reference answer (math) or reference program (code).
-    pub answer: String,
     /// Difficulty knob used by the generators (0 = easiest).
     pub difficulty: u8,
-    /// Hidden unit tests for code tasks: (input list, expected output).
-    pub tests: Vec<(Vec<i64>, Vec<i64>)>,
+    /// Env-owned hidden state. Contract: `"answer"` holds the reference
+    /// completion; everything else is private to the env's verifier.
+    pub payload: Json,
 }
 
 impl Task {
+    /// The reference completion (the payload's `"answer"` key). Empty for
+    /// a payload violating the contract — which the registry tests treat
+    /// as a broken environment.
+    pub fn answer(&self) -> &str {
+        self.payload.get("answer").and_then(Json::as_str).unwrap_or("")
+    }
+
     /// Render the prompt with an optional thinking-budget prefix
     /// (paper §3.1.2: "Think for N tokens before giving a response" —
     /// here `<N|` in the char vocabulary).

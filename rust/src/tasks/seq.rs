@@ -1,0 +1,260 @@
+//! `SeqEnv` ("seq"): sequence extrapolation — the first environment added
+//! *through* the pluggable registry rather than wired into it. The entire
+//! integration surface is this file plus one `Registry::register` call
+//! (see `verifier::Registry::standard`), which is the point: proof that
+//! "adding an environment = implementing one trait" holds.
+//!
+//! A task shows the first terms of a hidden integer sequence and asks for
+//! the next one (`"3,5,7,9,?"`). The generating rule is *hidden
+//! verification state* in the env-owned payload: the verifier replays the
+//! rule independently instead of trusting the stored answer — the same
+//! symbolic-verification flavor as the math env, over a rule family a
+//! prompt-matcher cannot shortcut.
+//!
+//! Difficulty ladder:
+//!   0: arithmetic, small start/step, 3 shown terms      "2,4,6,?"
+//!   1: arithmetic, larger values, 4 shown terms         "17,29,41,53,?"
+//!   2: geometric (ratio 2-3), 4 shown terms             "3,6,12,24,?"
+//!   3: alternating increments (+a,+b repeating), 5 terms "1,4,6,9,11,?"
+//!   4: second-order (each term = sum of previous two),  "2,3,5,8,13,?"
+//!
+//! Payload: `{"answer": "<next>", "rule": {"kind": ..., ...}, "shown": n}`.
+
+use super::Task;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::verifier::Environment;
+
+pub const MAX_DIFFICULTY: u8 = 4;
+
+/// The "seq" environment plugin.
+pub struct SeqEnv;
+
+impl Environment for SeqEnv {
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+    fn description(&self) -> &'static str {
+        "integer sequence extrapolation from a hidden generating rule"
+    }
+    fn max_difficulty(&self) -> u8 {
+        MAX_DIFFICULTY
+    }
+    fn generate(&self, id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+        generate(id, difficulty, rng)
+    }
+    fn verify(&self, task: &Task, completion: &str) -> bool {
+        verify(task, completion)
+    }
+}
+
+/// A hidden generating rule. Serialized into the task payload and replayed
+/// by the verifier.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rule {
+    /// `a(n+1) = a(n) + step`.
+    Arithmetic { start: i64, step: i64 },
+    /// `a(n+1) = a(n) * ratio`.
+    Geometric { start: i64, ratio: i64 },
+    /// Increments alternate `+a, +b, +a, ...`.
+    Alternating { start: i64, a: i64, b: i64 },
+    /// `a(n+2) = a(n+1) + a(n)` from two seeds.
+    SecondOrder { s0: i64, s1: i64 },
+}
+
+impl Rule {
+    /// First `n` terms plus the answer term, all from the rule alone.
+    pub fn terms(&self, n: usize) -> Vec<i64> {
+        let mut out = Vec::with_capacity(n + 1);
+        match *self {
+            Rule::Arithmetic { start, step } => {
+                for i in 0..=n as i64 {
+                    out.push(start + step * i);
+                }
+            }
+            Rule::Geometric { start, ratio } => {
+                let mut v = start;
+                for _ in 0..=n {
+                    out.push(v);
+                    v *= ratio;
+                }
+            }
+            Rule::Alternating { start, a, b } => {
+                let mut v = start;
+                for i in 0..=n {
+                    out.push(v);
+                    v += if i % 2 == 0 { a } else { b };
+                }
+            }
+            Rule::SecondOrder { s0, s1 } => {
+                let (mut x, mut y) = (s0, s1);
+                for _ in 0..=n {
+                    out.push(x);
+                    let next = x + y;
+                    x = y;
+                    y = next;
+                }
+            }
+        }
+        out
+    }
+
+    fn encode(&self) -> Json {
+        match *self {
+            Rule::Arithmetic { start, step } => Json::obj(vec![
+                ("kind", "arith".into()),
+                ("start", start.into()),
+                ("step", step.into()),
+            ]),
+            Rule::Geometric { start, ratio } => Json::obj(vec![
+                ("kind", "geom".into()),
+                ("start", start.into()),
+                ("ratio", ratio.into()),
+            ]),
+            Rule::Alternating { start, a, b } => Json::obj(vec![
+                ("kind", "alt".into()),
+                ("start", start.into()),
+                ("a", a.into()),
+                ("b", b.into()),
+            ]),
+            Rule::SecondOrder { s0, s1 } => Json::obj(vec![
+                ("kind", "second".into()),
+                ("s0", s0.into()),
+                ("s1", s1.into()),
+            ]),
+        }
+    }
+
+    fn decode(j: &Json) -> Option<Rule> {
+        let int = |k: &str| j.get(k).and_then(Json::as_f64).map(|v| v as i64);
+        match j.get("kind")?.as_str()? {
+            "arith" => Some(Rule::Arithmetic { start: int("start")?, step: int("step")? }),
+            "geom" => Some(Rule::Geometric { start: int("start")?, ratio: int("ratio")? }),
+            "alt" => Some(Rule::Alternating { start: int("start")?, a: int("a")?, b: int("b")? }),
+            "second" => Some(Rule::SecondOrder { s0: int("s0")?, s1: int("s1")? }),
+            _ => None,
+        }
+    }
+}
+
+/// How many sequence terms the prompt shows per difficulty.
+pub fn shown_terms(difficulty: u8) -> usize {
+    match difficulty {
+        0 => 3,
+        1 | 2 => 4,
+        _ => 5,
+    }
+}
+
+pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
+    let rule = match difficulty {
+        0 => Rule::Arithmetic {
+            start: rng.range(0, 10) as i64,
+            step: 1 + rng.range(0, 5) as i64,
+        },
+        1 => Rule::Arithmetic {
+            start: rng.range(0, 60) as i64,
+            step: 2 + rng.range(0, 12) as i64,
+        },
+        2 => Rule::Geometric {
+            start: 1 + rng.range(0, 5) as i64,
+            ratio: 2 + rng.range(0, 2) as i64,
+        },
+        3 => Rule::Alternating {
+            start: rng.range(0, 20) as i64,
+            a: 1 + rng.range(0, 6) as i64,
+            b: 1 + rng.range(0, 6) as i64,
+        },
+        _ => Rule::SecondOrder {
+            s0: 1 + rng.range(0, 7) as i64,
+            s1: 1 + rng.range(0, 7) as i64,
+        },
+    };
+    let n = shown_terms(difficulty);
+    let terms = rule.terms(n);
+    let shown: Vec<String> = terms[..n].iter().map(|t| t.to_string()).collect();
+    let prompt = format!("{},?", shown.join(","));
+    Task {
+        id,
+        env: "seq",
+        prompt,
+        difficulty,
+        payload: Json::obj(vec![
+            ("answer", terms[n].to_string().into()),
+            ("rule", rule.encode()),
+            ("shown", n.into()),
+        ]),
+    }
+}
+
+/// Replay the hidden rule and compare against the completion's final
+/// integer (same tolerant extraction as the math env: filler and a `>`
+/// answer marker are fine, leading zeros count).
+pub fn verify(task: &Task, completion: &str) -> bool {
+    let Some(rule) = task.payload.get("rule").and_then(Rule::decode) else {
+        return false;
+    };
+    let n = task.payload.get("shown").and_then(Json::as_usize).unwrap_or(0);
+    if n == 0 {
+        return false;
+    }
+    let want = *rule.terms(n).last().expect("terms nonempty");
+    super::math::extract_answer(completion) == Some(want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_families_extrapolate() {
+        assert_eq!(Rule::Arithmetic { start: 2, step: 2 }.terms(3), vec![2, 4, 6, 8]);
+        assert_eq!(Rule::Geometric { start: 3, ratio: 2 }.terms(3), vec![3, 6, 12, 24]);
+        assert_eq!(
+            Rule::Alternating { start: 1, a: 3, b: 2 }.terms(4),
+            vec![1, 4, 6, 9, 11]
+        );
+        assert_eq!(Rule::SecondOrder { s0: 2, s1: 3 }.terms(4), vec![2, 3, 5, 8, 13]);
+    }
+
+    #[test]
+    fn generated_tasks_verify_with_reference_answer() {
+        let mut rng = Rng::new(7);
+        for d in 0..=MAX_DIFFICULTY {
+            for i in 0..50 {
+                let t = generate(i, d, &mut rng);
+                assert!(verify(&t, t.answer()), "{t:?}");
+                assert!(!verify(&t, "999999999"), "{t:?}");
+                // The prompt shows exactly the unshown-next-term shape.
+                assert!(t.prompt.ends_with(",?"), "{t:?}");
+                assert_eq!(t.prompt.matches(',').count(), shown_terms(d), "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn verification_replays_the_rule_not_the_stored_answer() {
+        let mut rng = Rng::new(9);
+        let mut t = generate(0, 1, &mut rng);
+        let honest = t.answer().to_string();
+        // Tampering with the stored answer changes nothing: the verifier
+        // recomputes from the rule.
+        if let Json::Obj(m) = &mut t.payload {
+            m.insert("answer".into(), Json::Str("123456".into()));
+        }
+        assert!(verify(&t, &honest));
+        assert!(!verify(&t, "123456"));
+        // Losing the rule makes the task unverifiable (never a free pass).
+        t.payload = Json::obj(vec![("answer", honest.clone().into())]);
+        assert!(!verify(&t, &honest));
+    }
+
+    #[test]
+    fn tolerant_answer_extraction() {
+        let mut rng = Rng::new(11);
+        let t = generate(3, 0, &mut rng);
+        let a = t.answer().to_string();
+        assert!(verify(&t, &format!("~~ > {a}")));
+        assert!(verify(&t, &format!("0{a}")) == !a.starts_with('-'));
+    }
+}

@@ -70,12 +70,21 @@ impl Default for ValidatorConfig {
 
 pub struct Validator {
     pub cfg: ValidatorConfig,
-    pub registry: Registry,
+    pub registry: std::sync::Arc<Registry>,
 }
 
 impl Validator {
+    /// Validator over the standard environment registry.
     pub fn new(cfg: ValidatorConfig) -> Validator {
-        Validator { cfg, registry: Registry::default() }
+        Validator { cfg, registry: std::sync::Arc::new(Registry::default()) }
+    }
+
+    /// Validator over a custom registry (plugin deployments). The
+    /// validation pipeline checks its fingerprint against the dataset's at
+    /// construction — reward re-verification under mismatched env
+    /// semantics would slash honest workers.
+    pub fn with_registry(cfg: ValidatorConfig, registry: std::sync::Arc<Registry>) -> Validator {
+        Validator { cfg, registry }
     }
 
     /// Stage 1 — file-level checks: decode + schema ("parquet check").
@@ -406,7 +415,14 @@ mod tests {
     #[test]
     fn sanity_seed_and_reward_checks() {
         let v = Validator::new(ValidatorConfig { expected_group: 2, ..Default::default() });
-        let dataset = Dataset::generate(&DatasetConfig { n_math: 40, n_code: 0, ..Default::default() });
+        let dataset = Dataset::generate(
+            &Registry::standard(),
+            &DatasetConfig {
+                mix: crate::tasks::dataset::EnvMix::of(&[("math", 40)]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
         let reward_cfg = RewardConfig::default();
 
         // Build an honest submission: tasks drawn from the seed formula,
@@ -421,7 +437,7 @@ mod tests {
                 let mut tokens = vec![crate::data::tokenizer::BOS];
                 tokens.extend(crate::data::tokenizer::encode(&task.prompt));
                 let plen = tokens.len();
-                tokens.extend(crate::data::tokenizer::encode(&task.answer));
+                tokens.extend(crate::data::tokenizer::encode(task.answer()));
                 tokens.push(crate::data::tokenizer::EOS);
                 let n = tokens.len() - plen;
                 let mut w = wire(tokens, plen, true, 0.9);

@@ -208,6 +208,50 @@ pub fn sparkline(values: &[f64]) -> String {
         .collect()
 }
 
+/// Labeled attempt/pass accounting (per-environment task pass rates in
+/// mixed-env runs: `SwarmStats::env_pass`, rendered by `util_table`).
+#[derive(Default)]
+pub struct PassRates {
+    inner: Mutex<BTreeMap<String, (u64, u64)>>,
+}
+
+impl PassRates {
+    pub fn record(&self, key: &str, pass: bool) {
+        self.add(key, 1, pass as u64);
+    }
+
+    pub fn add(&self, key: &str, attempts: u64, passes: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(key.to_string()).or_insert((0, 0));
+        e.0 += attempts;
+        e.1 += passes;
+    }
+
+    /// `(key, attempts, passes)` sorted by key.
+    pub fn snapshot(&self) -> Vec<(String, u64, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &(a, p))| (k.clone(), a, p))
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Table rows `[key, attempts, pass %]` for [`render_table`].
+    pub fn rows(&self) -> Vec<Vec<String>> {
+        self.snapshot()
+            .into_iter()
+            .map(|(k, a, p)| {
+                vec![k, a.to_string(), format!("{:.1}%", 100.0 * p as f64 / a.max(1) as f64)]
+            })
+            .collect()
+    }
+}
+
 /// Registry bundling the standard run counters, shared across subsystems.
 #[derive(Default)]
 pub struct Registry {
@@ -273,6 +317,26 @@ mod tests {
     fn table_renders() {
         let t = render_table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
         assert!(t.contains("a  bb"), "{t}");
+    }
+
+    #[test]
+    fn pass_rates_accumulate_per_key() {
+        let r = PassRates::default();
+        assert!(r.is_empty());
+        r.record("math", true);
+        r.record("math", false);
+        r.record("seq", true);
+        r.add("code", 4, 1);
+        assert_eq!(
+            r.snapshot(),
+            vec![
+                ("code".into(), 4, 1),
+                ("math".into(), 2, 1),
+                ("seq".into(), 1, 1)
+            ]
+        );
+        let rows = r.rows();
+        assert_eq!(rows[1], vec!["math".to_string(), "2".into(), "50.0%".into()]);
     }
 
     #[test]

@@ -1,76 +1,370 @@
-//! GENESYS-style reward environments (paper §2.1.3): a registry mapping
-//! task kinds to verifiers. Adding an environment = implementing one trait.
+//! GENESYS-style reward environments (paper §2.1.3) as a *pluggable
+//! registry*: every task domain the swarm trains on is one self-contained
+//! [`Environment`] plugin, and "adding an environment = implementing one
+//! trait" is literally the integration story — one file implementing
+//! [`Environment`], one `register` call (see `tasks::seq` / `tasks::chain`,
+//! each added exactly this way).
+//!
+//! # The lifecycle trait
+//!
+//! An environment owns its whole task lifecycle:
+//!
+//! - **generate** — mint task `id` at a difficulty level, writing all
+//!   hidden verification state (reference answers, unit tests, generating
+//!   rules, ...) into the task's env-owned JSON payload. The only
+//!   cross-env payload contract is the `"answer"` key: the reference
+//!   completion, used by the pretraining corpus and by tests.
+//! - **verify** — binary-reward check of a completion against the task,
+//!   reading whatever hidden state `generate` stashed in the payload.
+//! - **eval** — `eval_difficulties` derives the env's held-out eval suite
+//!   (`tasks::eval::Suite::for_env`), disjoint from training by seed.
+//! - **corrupt_answer** — pretraining-corpus noise (`coordinator::pretrain`
+//!   renders a deliberately noisy worked-solutions corpus).
+//!
+//! # Determinism contract
+//!
+//! `generate` must be a pure function of `(id, difficulty, rng)`: workers
+//! and validators independently rebuild the *entire dataset* from a seed
+//! and an env mix, and §2.3.3 sample determinism is slashable — if the two
+//! sides disagreed about what task 17 is, an honest worker would be
+//! slashed for "lying" about rewards. The [`Registry::fingerprint`] makes
+//! a registry mismatch *detectable instead of exploitable*: it hashes the
+//! ordered env set (name, version, difficulty surface), both
+//! `tasks::dataset::Dataset` and the validation pipeline carry it, and
+//! construction fails fast on a mismatch before anything can be slashed.
+//! Bump [`Environment::version`] on any change to generation or
+//! verification semantics.
+//!
+//! # Adding an environment
+//!
+//! ```ignore
+//! struct MyEnv;
+//! impl Environment for MyEnv {
+//!     fn name(&self) -> &'static str { "my-env" }
+//!     fn max_difficulty(&self) -> u8 { 3 }
+//!     fn generate(&self, id: u64, d: u8, rng: &mut Rng) -> Task { ... }
+//!     fn verify(&self, task: &Task, completion: &str) -> bool { ... }
+//! }
+//! let mut reg = Registry::standard();
+//! reg.register(Box::new(MyEnv))?;   // now `--env-mix my-env=200,...`
+//! ```
 
-use crate::tasks::{dsl, math, Task, TaskKind};
+use std::collections::BTreeMap;
 
+use sha2::{Digest, Sha256};
+
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// One pluggable task domain: generation, verification, eval derivation
+/// and corpus noise in a single object. See the module docs for the
+/// determinism contract.
 pub trait Environment: Send + Sync {
+    /// Registry key (the `--env-mix` name). Short, stable, unique.
     fn name(&self) -> &'static str;
-    /// Binary verification of a completion against a task.
+
+    /// Human-readable description for tables and logs.
+    fn description(&self) -> &'static str {
+        self.name()
+    }
+
+    /// Highest difficulty level `generate` understands (0 = easiest).
+    /// Requests above this are clamped by the dataset builder.
+    fn max_difficulty(&self) -> u8;
+
+    /// Semantic version folded into the registry fingerprint. Bump on
+    /// *any* change to generation or verification behavior — two parties
+    /// running different task semantics must not fingerprint-match.
+    fn version(&self) -> u32 {
+        1
+    }
+
+    /// Mint task `id` at `difficulty`, drawing randomness only from `rng`.
+    /// All hidden verification state goes into the task payload, which
+    /// must contain the reference completion under `"answer"`.
+    fn generate(&self, id: u64, difficulty: u8, rng: &mut Rng) -> Task;
+
+    /// Binary verification of a completion against a task (§3.1.1:
+    /// deliberately no partial credit).
     fn verify(&self, task: &Task, completion: &str) -> bool;
-}
 
-pub struct MathEnv;
-
-impl Environment for MathEnv {
-    fn name(&self) -> &'static str {
-        "math-symbolic"
+    /// Difficulty ladder of the env's derived held-out eval suite
+    /// (`tasks::eval::Suite::for_env`). Default: the top two levels.
+    fn eval_difficulties(&self) -> Vec<u8> {
+        let top = self.max_difficulty();
+        if top == 0 {
+            vec![0]
+        } else {
+            vec![top - 1, top]
+        }
     }
-    fn verify(&self, task: &Task, completion: &str) -> bool {
-        math::verify(task, completion)
-    }
-}
 
-pub struct CodeEnv;
-
-impl Environment for CodeEnv {
-    fn name(&self) -> &'static str {
-        "code-unit-tests"
-    }
-    fn verify(&self, task: &Task, completion: &str) -> bool {
-        dsl::verify(task, completion)
+    /// Corrupt a reference answer for the noisy pretraining corpus.
+    /// Default: perturb integers, reverse anything else.
+    fn corrupt_answer(&self, answer: &str, rng: &mut Rng) -> String {
+        match answer.parse::<i64>() {
+            Ok(v) => (v + 1 + rng.range(0, 9) as i64).to_string(),
+            Err(_) => answer.chars().rev().collect(),
+        }
     }
 }
 
-/// Registry dispatching tasks to environments.
+/// Dynamic, deterministically-ordered collection of environments: the
+/// single dispatch point for every task touch in the system (dataset
+/// assembly, rollout rewards, TOPLOC reward re-verification, eval suites,
+/// pretraining corpus noise).
+///
+/// Registration order is part of the identity: [`Registry::fingerprint`]
+/// hashes the *ordered* env list, so two parties that register the same
+/// envs in a different order provably differ (their datasets would too —
+/// the mix iterates envs by name, but ids and rng state interleave).
 pub struct Registry {
-    math: MathEnv,
-    code: CodeEnv,
+    envs: Vec<Box<dyn Environment>>,
+    by_name: BTreeMap<&'static str, usize>,
+}
+
+impl Registry {
+    /// An empty registry: the starting point for fully custom env sets.
+    pub fn empty() -> Registry {
+        Registry { envs: Vec::new(), by_name: BTreeMap::new() }
+    }
+
+    /// The standard swarm registry, in canonical order: `math`, `code`,
+    /// `seq`, `chain`. Workers and validators both construct this, so
+    /// their fingerprints match by default.
+    pub fn standard() -> Registry {
+        let mut r = Registry::empty();
+        for env in [
+            Box::new(crate::tasks::math::MathEnv) as Box<dyn Environment>,
+            Box::new(crate::tasks::dsl::CodeEnv),
+            Box::new(crate::tasks::seq::SeqEnv),
+            Box::new(crate::tasks::chain::ChainEnv),
+        ] {
+            r.register(env).expect("standard registry has unique names");
+        }
+        r
+    }
+
+    /// Append an environment. Errors on a duplicate name — silently
+    /// shadowing an env would change task semantics without changing the
+    /// lookup key.
+    pub fn register(&mut self, env: Box<dyn Environment>) -> anyhow::Result<()> {
+        let name = env.name();
+        anyhow::ensure!(
+            !self.by_name.contains_key(name),
+            "environment {name:?} already registered"
+        );
+        self.by_name.insert(name, self.envs.len());
+        self.envs.push(env);
+        Ok(())
+    }
+
+    /// String-keyed lookup.
+    pub fn get(&self, name: &str) -> Option<&dyn Environment> {
+        self.by_name.get(name).map(|&i| self.envs[i].as_ref())
+    }
+
+    /// The environment owning `task` (by its env id).
+    pub fn env_for(&self, task: &Task) -> Option<&dyn Environment> {
+        self.get(task.env)
+    }
+
+    /// Registered envs in registration (= fingerprint) order.
+    pub fn envs(&self) -> impl Iterator<Item = &dyn Environment> {
+        self.envs.iter().map(|e| e.as_ref())
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.envs.iter().map(|e| e.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    /// Generate one task through the named environment (difficulty is
+    /// clamped to the env's ladder).
+    pub fn generate(
+        &self,
+        env: &str,
+        id: u64,
+        difficulty: u8,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Task> {
+        let e = self
+            .get(env)
+            .ok_or_else(|| anyhow::anyhow!("environment {env:?} not registered"))?;
+        Ok(e.generate(id, difficulty.min(e.max_difficulty()), rng))
+    }
+
+    /// Verify a completion through the task's owning environment. A task
+    /// from an unregistered env verifies as `false` — but a registry that
+    /// can produce such tasks is exactly what [`Registry::fingerprint`]
+    /// guards against reaching the reward path at all.
+    pub fn verify(&self, task: &Task, completion: &str) -> bool {
+        match self.env_for(task) {
+            Some(env) => env.verify(task, completion),
+            None => false,
+        }
+    }
+
+    /// Identity hash of the ordered env set: name, version and difficulty
+    /// surface of every env, in registration order, under a domain-
+    /// separation prefix. Two parties whose fingerprints match rebuild
+    /// byte-identical datasets from the same `(seed, mix)`; a mismatch is
+    /// refused at construction time (dataset / generator / validation
+    /// pipeline), long before §2.3.3 sample determinism could slash
+    /// anyone over it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Sha256::new();
+        h.update(b"i2-env-registry-v1");
+        for env in &self.envs {
+            h.update(env.name().as_bytes());
+            h.update([0u8]); // name terminator: ("ab","c") != ("a","bc")
+            h.update(env.version().to_le_bytes());
+            h.update([env.max_difficulty()]);
+            let evals = env.eval_difficulties();
+            h.update((evals.len() as u32).to_le_bytes());
+            h.update(&evals);
+        }
+        let digest = h.finalize();
+        u64::from_le_bytes(digest[..8].try_into().expect("sha256 >= 8 bytes"))
+    }
 }
 
 impl Default for Registry {
     fn default() -> Self {
-        Registry { math: MathEnv, code: CodeEnv }
-    }
-}
-
-impl Registry {
-    pub fn env(&self, kind: TaskKind) -> &dyn Environment {
-        match kind {
-            TaskKind::Math => &self.math,
-            TaskKind::Code => &self.code,
-        }
-    }
-
-    pub fn verify(&self, task: &Task, completion: &str) -> bool {
-        self.env(task.kind).verify(task, completion)
+        Registry::standard()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
+    use crate::tasks::math::MathEnv;
+    use crate::util::json::Json;
+    use crate::util::prop;
 
     #[test]
-    fn registry_dispatches() {
-        let reg = Registry::default();
+    fn registry_dispatches_by_env_id() {
+        let reg = Registry::standard();
+        assert_eq!(reg.names(), vec!["math", "code", "seq", "chain"]);
         let mut rng = Rng::new(1);
-        let mt = math::generate(0, 1, &mut rng);
-        let ct = dsl::generate(1, 1, &mut rng);
-        assert!(reg.verify(&mt, &mt.answer));
-        assert!(reg.verify(&ct, &ct.answer));
-        assert!(!reg.verify(&mt, "nonsense"));
-        assert_eq!(reg.env(TaskKind::Math).name(), "math-symbolic");
-        assert_eq!(reg.env(TaskKind::Code).name(), "code-unit-tests");
+        for name in reg.names() {
+            let t = reg.generate(name, 7, 1, &mut rng).unwrap();
+            assert_eq!(t.env, name);
+            assert!(reg.verify(&t, t.answer()), "{t:?}");
+            assert!(!reg.verify(&t, "zzz nonsense zzz"), "{t:?}");
+        }
+        assert!(reg.generate("nope", 0, 0, &mut rng).is_err());
+        // A task from an env this registry doesn't know never verifies.
+        let mut foreign = reg.generate("math", 0, 0, &mut rng).unwrap();
+        foreign.env = "martian";
+        assert!(!reg.verify(&foreign, foreign.answer()));
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = Registry::standard();
+        assert!(reg.register(Box::new(MathEnv)).is_err());
+        assert_eq!(reg.len(), 4);
+    }
+
+    /// Every env honors the payload contract: `"answer"` holds the
+    /// reference completion, it verifies, and the payload round-trips
+    /// losslessly through JSON text (what makes task state portable).
+    #[test]
+    fn payload_contract_and_json_roundtrip_for_every_env() {
+        let reg = Registry::standard();
+        let mut rng = Rng::new(42);
+        for env in reg.envs() {
+            for d in 0..=env.max_difficulty() {
+                for i in 0..20 {
+                    let t = env.generate(1000 + i, d, &mut rng);
+                    assert!(!t.answer().is_empty(), "{}: no answer in payload", env.name());
+                    assert!(env.verify(&t, t.answer()), "{t:?}");
+                    let back = Json::parse(&t.payload.to_string()).unwrap();
+                    assert_eq!(back, t.payload, "{}: payload not JSON-lossless", env.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        // Same construction -> same fingerprint (the cross-party match).
+        assert_eq!(Registry::standard().fingerprint(), Registry::standard().fingerprint());
+
+        // Different env *set*.
+        let mut subset = Registry::empty();
+        subset.register(Box::new(MathEnv)).unwrap();
+        assert_ne!(subset.fingerprint(), Registry::standard().fingerprint());
+
+        // Different *order*, same set.
+        let mut ab = Registry::empty();
+        ab.register(Box::new(MathEnv)).unwrap();
+        ab.register(Box::new(crate::tasks::dsl::CodeEnv)).unwrap();
+        let mut ba = Registry::empty();
+        ba.register(Box::new(crate::tasks::dsl::CodeEnv)).unwrap();
+        ba.register(Box::new(MathEnv)).unwrap();
+        assert_ne!(ab.fingerprint(), ba.fingerprint());
+
+        // Different env *params* (version bump) under the same name.
+        struct MathV2;
+        impl Environment for MathV2 {
+            fn name(&self) -> &'static str {
+                "math"
+            }
+            fn max_difficulty(&self) -> u8 {
+                crate::tasks::math::MAX_DIFFICULTY
+            }
+            fn version(&self) -> u32 {
+                2
+            }
+            fn generate(&self, id: u64, d: u8, rng: &mut Rng) -> Task {
+                crate::tasks::math::generate(id, d, rng)
+            }
+            fn verify(&self, task: &Task, completion: &str) -> bool {
+                crate::tasks::math::verify(task, completion)
+            }
+        }
+        let mut v1 = Registry::empty();
+        v1.register(Box::new(MathEnv)).unwrap();
+        let mut v2 = Registry::empty();
+        v2.register(Box::new(MathV2)).unwrap();
+        assert_ne!(v1.fingerprint(), v2.fingerprint());
+    }
+
+    /// Property: generation is a pure function of `(id, difficulty, rng
+    /// state)` — two independently-built registries replay byte-identical
+    /// tasks. This is the §2.3.3 slashing precondition at the env level.
+    #[test]
+    fn prop_generation_deterministic_across_registries() {
+        prop::check(
+            "env generation deterministic",
+            64,
+            |rng, _| {
+                let names = Registry::standard().names();
+                let name = *rng.choice(&names);
+                (name, rng.next_u64() % 10_000, rng.usize(8) as u8, rng.next_u64())
+            },
+            |(name, id, difficulty, seed)| {
+                let (a, b) = (Registry::standard(), Registry::standard());
+                let ta = a.generate(name, *id, *difficulty, &mut Rng::new(*seed)).unwrap();
+                let tb = b.generate(name, *id, *difficulty, &mut Rng::new(*seed)).unwrap();
+                prop::ensure_eq(ta.prompt.clone(), tb.prompt.clone(), "prompt")?;
+                prop::ensure_eq(
+                    ta.payload.to_string(),
+                    tb.payload.to_string(),
+                    "payload bytes",
+                )?;
+                prop::ensure_eq(ta.difficulty, tb.difficulty, "difficulty")
+            },
+        );
     }
 }

@@ -6,6 +6,7 @@
 use intellect2::config::RunConfig;
 use intellect2::coordinator::Swarm;
 use intellect2::runtime::Runtime;
+use intellect2::tasks::dataset::EnvMix;
 
 fn artifacts_ready() -> bool {
     Runtime::artifacts_dir("nano").join("spec.json").exists()
@@ -21,8 +22,10 @@ fn tiny_cfg() -> RunConfig {
         max_new_tokens: 10,
         n_workers: 2,
         n_relays: 2,
-        n_math: 40,
-        n_code: 8,
+        // All four registered environments in the mix: generation, TOPLOC
+        // re-verification and training all dispatch through the registry,
+        // so the new seq/chain envs ride the same e2e path as math/code.
+        env_mix: EnvMix::of(&[("math", 30), ("code", 6), ("seq", 6), ("chain", 6)]),
         ..Default::default()
     }
 }
@@ -63,6 +66,14 @@ fn honest_swarm_trains_and_overlaps() {
     let trained: u64 = hist.iter().map(|(_, n)| n).sum();
     assert!(trained > 0, "nothing recorded in the staleness histogram");
     assert!(hist.iter().all(|(lag, _)| *lag <= tiny_cfg().async_level));
+    // Per-env pass rates were recorded for the envs that got verified
+    // rollouts, keyed by registry names only.
+    let envs: Vec<String> =
+        result.stats.env_pass.snapshot().into_iter().map(|(e, _, _)| e).collect();
+    assert!(!envs.is_empty(), "no per-env pass rates recorded");
+    for e in &envs {
+        assert!(["math", "code", "seq", "chain"].contains(&e.as_str()), "{e}");
+    }
 }
 
 #[test]

@@ -19,7 +19,7 @@ use intellect2::coordinator::{group_id_base, RolloutGenerator};
 use intellect2::protocol::{Identity, Ledger};
 use intellect2::rl::rollout_file::{Envelope, Submission};
 use intellect2::runtime::{EngineHost, ParamSet, Runtime};
-use intellect2::tasks::dataset::{Dataset, DatasetConfig};
+use intellect2::tasks::dataset::{Dataset, DatasetConfig, EnvMix};
 use intellect2::toploc::{Validator, ValidatorConfig};
 use intellect2::util::prop::{check, ensure_eq};
 use intellect2::util::rng::Rng;
@@ -60,18 +60,21 @@ impl Fixture {
             model: "nano".into(),
             group_size: 2,
             max_new_tokens: 14,
-            n_math: 40,
-            n_code: 8,
+            // All four registered envs: validation parity must hold on
+            // mixed-env submissions, not just the historical two domains.
+            env_mix: EnvMix::of(&[("math", 30), ("code", 6), ("seq", 6), ("chain", 6)]),
             ..Default::default()
         };
         let host = Arc::new(EngineHost::spawn_size(&cfg.model).unwrap());
-        let dataset = Arc::new(Dataset::generate(&DatasetConfig {
-            seed: cfg.seed,
-            n_math: cfg.n_math,
-            n_code: cfg.n_code,
-            ..Default::default()
-        }));
-        let generator = RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg);
+        let dataset = Arc::new(
+            Dataset::generate(
+                &intellect2::verifier::Registry::standard(),
+                &DatasetConfig { seed: cfg.seed, mix: cfg.env_mix.clone(), ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let generator =
+            RolloutGenerator::from_config(Arc::clone(&host), Arc::clone(&dataset), &cfg).unwrap();
         let params = Arc::new(host.init_params(9).unwrap());
         let ledger = Ledger::new();
         let mut ids = BTreeMap::new();
@@ -190,7 +193,8 @@ impl Fixture {
             self.cfg.max_new_tokens,
             threads,
             bucket,
-        );
+        )
+        .unwrap();
         if signed {
             p.with_signing(self.keys())
         } else {
@@ -375,6 +379,44 @@ fn packed_pipeline_matches_fullpad_reference() {
             "expected the wave to pack into 1..=3 prefill calls, got {calls} (signed={signed})"
         );
     }
+}
+
+/// The registry fingerprint makes a silent env-set mismatch *detectable,
+/// not exploitable*: both the worker-side generator and the validator-side
+/// pipeline refuse to come up against a dataset built from a different
+/// registry — the failure mode where §2.3.3 reward re-verification would
+/// slash honest nodes.
+#[test]
+fn mismatched_registry_refused_at_construction() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let subset = || {
+        let mut r = intellect2::verifier::Registry::empty();
+        r.register(Box::new(intellect2::tasks::math::MathEnv)).unwrap();
+        Arc::new(r)
+    };
+    let err = ValidationPipeline::new(
+        Validator::with_registry(fx.vcfg(), subset()),
+        Arc::clone(&fx.dataset),
+        fx.cfg.reward.clone(),
+        Arc::clone(&fx.host),
+        fx.cfg.max_new_tokens,
+        1,
+        0,
+    )
+    .expect_err("validator over a different registry must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    let err = RolloutGenerator::with_registry(
+        Arc::clone(&fx.host),
+        Arc::clone(&fx.dataset),
+        &fx.cfg,
+        subset(),
+    )
+    .expect_err("generator over a different registry must be refused");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,31 @@
+# Build-time entry points. The request path is pure Rust over the AOT
+# artifacts; Python only runs here.
+
+# Lower every model size's computations to HLO text + spec.json under
+# artifacts/<size>/ (the contract runtime/spec.rs binds).
+#
+# REGENERATE AFTER PULLING THE CONTINUOUS-BATCHING ENGINE: the rollout
+# scheduler (rust/src/runtime/scheduler.rs, `gen-refill` knob) binds two
+# artifact additions —
+#   * decode_step now takes a vectored per-lane `pos: i32[batch_infer]`
+#     (lanes retire on EOS and refill independently, so they are no
+#     longer position-synchronized), and
+#   * a `prefill_kv_{T}` ladder (T = powers of two from the TOPLOC commit
+#     interval through max_seq) that prefills prompts straight into the
+#     decode KV cache with lane routing for GRPO group sharing.
+# Artifact sets lowered before this contract lack both; the runtime
+# detects that (ModelSpec::supports_continuous) and falls back to the
+# static reference engine, so nothing breaks — but the refill speedup
+# only exists after `make artifacts`.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Python-side unit tests (model numerics, AOT signatures, kernels).
+pytest:
+	cd python && python3 -m pytest tests/ -q
+
+# Tier-1 gate (see ROADMAP.md).
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+.PHONY: artifacts pytest tier1

@@ -164,7 +164,11 @@ def artifact_defs(cfg: C.ModelConfig):
                   ("hidden", (bi, t_b, d), "f32")]),
         ))
 
-    # --- decode_step ---
+    # --- decode_step (vectored per-lane positions) ---
+    # pos is i32[B]: under the continuous-batching scheduler each lane
+    # advances independently (retire on EOS, refill with a fresh prompt),
+    # so lanes are not position-synchronized. The static reference path
+    # passes a constant vector.
     def dec_fn(*args):
         n = len(pspecs)
         params = list(args[:n])
@@ -174,12 +178,38 @@ def artifact_defs(cfg: C.ModelConfig):
     kvs = M.kv_shape(cfg)
     defs.append((
         "decode_step", dec_fn,
-        pspecs + [_spec(kvs), _spec((bi,), jnp.int32), _spec((), jnp.int32)],
+        pspecs + [_spec(kvs), _spec((bi,), jnp.int32),
+                  _spec((bi,), jnp.int32)],
         _sig(psig + [("kv", kvs, "f32"), ("tok", (bi,), "i32"),
-                     ("pos", (), "i32")]),
+                     ("pos", (bi,), "i32")]),
         _sig([("logits", (bi, v), "f32"), ("hidden", (bi, d), "f32"),
               ("kv", kvs, "f32")]),
     ))
+
+    # --- prefill_kv ladder (continuous-batching prompt prefill) ---
+    # One bucketed call prefills up to bi unique prompts straight into the
+    # decode KV cache: an L-token prompt costs one prefill_kv_{T} call
+    # (smallest T >= L) instead of L decode steps, and lane_src replicates
+    # a GRPO group's shared prompt forward across its lanes. Unlike the
+    # validator's prefill_{T} ladder this includes the full frame, since
+    # prompts up to max_seq-1 must be coverable.
+    def prefill_kv_fn(*args):
+        n = len(pspecs)
+        params = list(args[:n])
+        kv, tokens, lane_src, lane_mask = args[n:]
+        return M.prefill_kv(cfg, params, kv, tokens, lane_src, lane_mask)
+
+    for t_b in prefill_ladder(t) + [t]:
+        defs.append((
+            f"prefill_kv_{t_b}", prefill_kv_fn,
+            pspecs + [_spec(kvs), _spec((bi, t_b), jnp.int32),
+                      _spec((bi,), jnp.int32), _spec((bi,))],
+            _sig(psig + [("kv", kvs, "f32"), ("tokens", (bi, t_b), "i32"),
+                         ("lane_src", (bi,), "i32"),
+                         ("lane_mask", (bi,), "f32")]),
+            _sig([("logits", (bi, t_b, v), "f32"),
+                  ("hidden", (bi, t_b, d), "f32"), ("kv", kvs, "f32")]),
+        ))
 
     # --- standalone Pallas attention demo (composability proof) ---
     if cfg.name == "nano":

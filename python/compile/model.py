@@ -15,7 +15,10 @@ Computations exported (see aot.py / DESIGN.md for the artifact table):
                   paper §2.1.1)
   prefill         full-sequence logits + final hidden states (TOPLOC
                   validator prefill, sampling checks)
-  decode_step     single-token KV-cache decode (rollout generation)
+  decode_step     single-token KV-cache decode with per-lane positions
+                  (rollout generation under the continuous scheduler)
+  prefill_kv      bucketed prompt prefill straight into the decode KV
+                  cache, with lane routing for GRPO group sharing
 
 Sequence packing (paper §4.1): every train-path computation takes a
 `segs [B,T] i32` array; attention is block-diagonal over segments
@@ -271,7 +274,11 @@ def kv_shape(cfg):
 def decode_step(cfg, flat_params, kv, tok, pos):
     """One autoregressive step with a KV cache.
 
-    kv: f32[L,2,B,T,D]; tok: i32[B] (token at position `pos`); pos: i32 scalar.
+    kv: f32[L,2,B,T,D]; tok: i32[B] (token at position `pos[b]` of lane b);
+    pos: i32[B] — **per-lane** positions. Under the continuous-batching
+    scheduler (rust runtime/scheduler.rs) lanes retire on EOS and refill
+    with fresh prompts, so they are no longer position-synchronized; the
+    static reference path simply passes a constant vector.
     Returns (logits [B,V], hidden [B,D], kv').
 
     The Rust SampleEngine feeds PJRT buffers back in without host round trips
@@ -280,9 +287,10 @@ def decode_step(cfg, flat_params, kv, tok, pos):
     p = unflatten(cfg, flat_params)
     b = tok.shape[0]
     t = cfg.max_seq
-    x = p["tok_emb"][tok] + jnp.take(p["pos_emb"], pos, axis=0)[None, :]
+    lanes = jnp.arange(b)
+    x = p["tok_emb"][tok] + p["pos_emb"][pos]  # [B,D]
 
-    pos_mask = (jnp.arange(t) <= pos)[None, None, :]  # [1,1,T]
+    pos_mask = (jnp.arange(t)[None, :] <= pos[:, None])[:, None, :]  # [B,1,T]
     scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
 
     for i in range(cfg.n_layers):
@@ -291,10 +299,9 @@ def decode_step(cfg, flat_params, kv, tok, pos):
         q = h @ p[pre + "wq"]  # [B,D]
         k = h @ p[pre + "wk"]
         vv = h @ p[pre + "wv"]
-        kv = jax.lax.dynamic_update_slice(
-            kv, k[None, None, :, None, :], (i, 0, 0, pos, 0))
-        kv = jax.lax.dynamic_update_slice(
-            kv, vv[None, None, :, None, :], (i, 1, 0, pos, 0))
+        # Per-lane scatter: lane b writes its k/v at its own position.
+        kv = kv.at[i, 0, lanes, pos].set(k)
+        kv = kv.at[i, 1, lanes, pos].set(vv)
         keys = kv[i, 0]  # [B,T,D]
         vals = kv[i, 1]
         qh = q.reshape(b, cfg.n_heads, cfg.d_head)
@@ -305,6 +312,65 @@ def decode_step(cfg, flat_params, kv, tok, pos):
         probs = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bht,bthd->bhd", probs, vh).reshape(b, cfg.d_model)
         x = x + o @ p[pre + "wo"]
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        h = jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + h @ p[pre + "w2"] + p[pre + "b2"]
+
+    hidden = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = hidden @ p["tok_emb"].T
+    return logits, hidden, kv
+
+
+def prefill_kv(cfg, flat_params, kv, tokens, lane_src, lane_mask):
+    """Prompt prefill into the decode KV cache (continuous batching).
+
+    tokens: i32[B,Tb] — up to B *unique* prompt rows, PAD-padded to the
+    bucket length Tb; lane_src: i32[B] — which computed row lane l's KV
+    comes from (GRPO group sharing: one prompt forward, its per-layer k/v
+    projections replicated across the group's lanes); lane_mask: f32[B] —
+    1.0 installs into lane l, 0.0 leaves that lane's cache untouched (it
+    may hold a live sequence).
+
+    Returns (logits [B,Tb,V], hidden [B,Tb,D], kv'). Positions at/after a
+    row's true prompt length hold pad-derived values in both the outputs
+    and the installed KV; the decode path overwrites each position before
+    ever attending to it, so they are never observed.
+
+    Equivalence contract: for prompt positions, logits/hidden/k/v match
+    what `decode_step` would produce feeding the prompt token by token —
+    prompts are single segments anchored at position 0 (positions are
+    plain 0..Tb-1, the same `pos_emb` rows the decode path uses) and
+    queries attend causally to non-PAD keys only.
+    """
+    p = unflatten(cfg, flat_params)
+    b, tb = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][jnp.arange(tb)][None]
+
+    causal = jnp.tril(jnp.ones((tb, tb), bool))
+    nonpad = tokens != C.PAD_ID
+    mask = causal[None] & nonpad[:, None, :]  # [B,Tb,Tb]
+    neg = jnp.asarray(-1e30, jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    sel = lane_mask[:, None, None] > 0.5  # [B,1,1]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        kf = h @ p[pre + "wk"]  # [B,Tb,D] — the decode path's cache rows
+        vf = h @ p[pre + "wv"]
+        # Install: lane l receives row lane_src[l]'s projections at
+        # positions 0..Tb; unmasked lanes keep their existing cache.
+        kv = kv.at[i, 0, :, :tb, :].set(
+            jnp.where(sel, kf[lane_src], kv[i, 0, :, :tb, :]))
+        kv = kv.at[i, 1, :, :tb, :].set(
+            jnp.where(sel, vf[lane_src], kv[i, 1, :, :tb, :]))
+        q = _heads(h @ p[pre + "wq"], cfg.n_heads)
+        k = _heads(kf, cfg.n_heads)
+        v = _heads(vf, cfg.n_heads)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        s = jnp.where(mask[:, None], s, neg)
+        o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, axis=-1), v)
+        x = x + _unheads(o) @ p[pre + "wo"]
         h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
         h = jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "b1"])
         x = x + h @ p[pre + "w2"] + p[pre + "b2"]

@@ -36,6 +36,36 @@ def test_prefill_ladder_artifacts_emitted():
     assert defs["prefill"][3][-1]["shape"] == [cfg.batch_infer, cfg.max_seq]
 
 
+def test_prefill_kv_ladder_and_vectored_pos():
+    """The continuous-batching contract (rust runtime/scheduler.rs):
+    decode_step's pos input is per-lane i32[batch_infer], and a
+    prefill_kv_{T} ladder — including the full frame, so any prompt up to
+    max_seq-1 is coverable — installs prompt KV with lane routing."""
+    cfg = C.SIZES["nano"]
+    defs = {d[0]: d for d in aot.artifact_defs(cfg)}
+    kvs = list(
+        (cfg.n_layers, 2, cfg.batch_infer, cfg.max_seq, cfg.d_model))
+
+    dec_in = defs["decode_step"][3]
+    pos = next(e for e in dec_in if e["name"] == "pos")
+    assert pos["shape"] == [cfg.batch_infer]  # vectored, not scalar
+    assert pos["dtype"] == "i32"
+
+    for t_b in aot.prefill_ladder(cfg.max_seq) + [cfg.max_seq]:
+        name, _, args, in_sig, out_sig = defs[f"prefill_kv_{t_b}"]
+        assert len(in_sig) == len(args), name
+        by_name = {e["name"]: e for e in in_sig}
+        assert by_name["kv"]["shape"] == kvs
+        assert by_name["tokens"]["shape"] == [cfg.batch_infer, t_b]
+        assert by_name["lane_src"]["dtype"] == "i32"
+        assert by_name["lane_mask"]["dtype"] == "f32"
+        assert by_name["lane_src"]["shape"] == [cfg.batch_infer]
+        # Bucket-shaped outputs (device FLOPs scale with T) + the cache.
+        assert out_sig[0]["shape"] == [cfg.batch_infer, t_b, cfg.vocab]
+        assert out_sig[1]["shape"] == [cfg.batch_infer, t_b, cfg.d_model]
+        assert out_sig[2]["shape"] == kvs
+
+
 def test_signatures_are_complete():
     cfg = C.SIZES["nano"]
     n = len(cfg.param_specs())

@@ -89,8 +89,9 @@ def test_decode_matches_prefill(params):
     kv = jnp.zeros(M.kv_shape(CFG), jnp.float32)
     logits_steps, hidden_steps = [], []
     for pos in range(t):
-        lg, hd, kv = M.decode_step(CFG, params, kv, tokens[:, pos],
-                                   jnp.int32(pos))
+        # Vectored per-lane positions (constant vector = the old lockstep).
+        posv = jnp.full((b,), pos, jnp.int32)
+        lg, hd, kv = M.decode_step(CFG, params, kv, tokens[:, pos], posv)
         logits_steps.append(np.asarray(lg))
         hidden_steps.append(np.asarray(hd))
 
@@ -101,6 +102,108 @@ def test_decode_matches_prefill(params):
                         atol=2e-4)
         assert_allclose(hidden_steps[pos], hidden_pre[:, pos], rtol=2e-4,
                         atol=2e-4)
+
+
+def test_decode_lanes_are_independent(params):
+    """Per-lane positions: a lane's outputs depend only on its own history,
+    not on where other lanes happen to be (the continuous scheduler's
+    correctness premise)."""
+    rng = np.random.default_rng(2)
+    b = CFG.batch_infer
+    seq = rng.integers(3, CFG.vocab, 12).astype(np.int32)
+
+    # Reference: all lanes march in lockstep over the same sequence.
+    kv = jnp.zeros(M.kv_shape(CFG), jnp.float32)
+    ref = []
+    for pos in range(len(seq)):
+        lg, _, kv = M.decode_step(CFG, params, kv,
+                                  jnp.full((b,), seq[pos], jnp.int32),
+                                  jnp.full((b,), pos, jnp.int32))
+        ref.append(np.asarray(lg)[0])
+
+    # Staggered: lane 0 runs the sequence; lane 1 starts 3 steps late and
+    # is fed PAD/pos-0 garbage before that (what idle lanes receive).
+    kv = jnp.zeros(M.kv_shape(CFG), jnp.float32)
+    lag = 3
+    out0, out1 = [], []
+    for step in range(len(seq) + lag):
+        tok = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        if step < len(seq):
+            tok[0], pos[0] = seq[step], step
+        if step >= lag:
+            tok[1], pos[1] = seq[step - lag], step - lag
+        lg, _, kv = M.decode_step(CFG, params, kv, jnp.asarray(tok),
+                                  jnp.asarray(pos))
+        if step < len(seq):
+            out0.append(np.asarray(lg)[0])
+        if step >= lag:
+            out1.append(np.asarray(lg)[1])
+
+    for pos in range(len(seq)):
+        assert_allclose(out0[pos], ref[pos], rtol=1e-5, atol=1e-5)
+        assert_allclose(out1[pos], ref[pos], rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_kv_matches_decode_and_respects_lanes(params):
+    """prefill_kv: (1) prompt-position logits/hidden match token-by-token
+    decode; (2) decode continues seamlessly from the installed cache;
+    (3) unmasked lanes' caches are untouched; (4) lane_src replicates one
+    computed row across several lanes (group sharing)."""
+    rng = np.random.default_rng(3)
+    b = CFG.batch_infer
+    tb = 32
+    plen = 9
+    prompt = rng.integers(3, CFG.vocab, plen).astype(np.int32)
+
+    # Reference: feed the prompt token by token.
+    kv_ref = jnp.zeros(M.kv_shape(CFG), jnp.float32)
+    ref_logits = []
+    for pos in range(plen):
+        lg, _, kv_ref = M.decode_step(CFG, params, kv_ref,
+                                      jnp.full((b,), prompt[pos], jnp.int32),
+                                      jnp.full((b,), pos, jnp.int32))
+        ref_logits.append(np.asarray(lg)[0])
+
+    # prefill_kv: unique row 0 = the prompt, installed into lanes 0 and 1
+    # (group sharing), lane 2+ masked out; pre-poison lane 2's cache to
+    # prove masking preserves it.
+    tokens = np.zeros((b, tb), np.int32)
+    tokens[0, :plen] = prompt
+    kv0 = jnp.zeros(M.kv_shape(CFG), jnp.float32)
+    kv0 = kv0.at[:, :, 2].set(7.25)
+    lane_src = np.zeros(b, np.int32)
+    lane_mask = np.zeros(b, np.float32)
+    lane_mask[0] = lane_mask[1] = 1.0
+    lg, hd, kv1 = M.prefill_kv(CFG, params, kv0, jnp.asarray(tokens),
+                               jnp.asarray(lane_src), jnp.asarray(lane_mask))
+    lg, hd, kv1 = np.asarray(lg), np.asarray(hd), np.asarray(kv1)
+
+    for pos in range(plen):
+        assert_allclose(lg[0, pos], ref_logits[pos], rtol=2e-4, atol=2e-4)
+    # Group sharing: lanes 0 and 1 received identical prompt KV.
+    assert np.array_equal(kv1[:, :, 0, :plen], kv1[:, :, 1, :plen])
+    # Masked lane untouched.
+    assert np.array_equal(kv1[:, :, 2], np.asarray(kv0)[:, :, 2])
+    # Installed KV matches the decode-built reference cache.
+    assert_allclose(kv1[:, :, 0, :plen], np.asarray(kv_ref)[:, :, 0, :plen],
+                    rtol=2e-4, atol=2e-4)
+
+    # Decode continues from the installed cache as if the prompt had been
+    # fed token by token: next-step logits agree with the reference path.
+    nxt = np.zeros(b, np.int32)
+    nxt[0] = nxt[1] = 5
+    pos = np.zeros(b, np.int32)
+    pos[0] = pos[1] = plen
+    lg_cont, _, _ = M.decode_step(CFG, params, jnp.asarray(kv1),
+                                  jnp.asarray(nxt), jnp.asarray(pos))
+    lg_ref, _, _ = M.decode_step(CFG, params, kv_ref,
+                                 jnp.full((b,), 5, jnp.int32),
+                                 jnp.full((b,), plen, jnp.int32))
+    assert_allclose(np.asarray(lg_cont)[0], np.asarray(lg_ref)[0],
+                    rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(lg_cont)[1], np.asarray(lg_ref)[0],
+                    rtol=2e-4, atol=2e-4)
 
 
 def test_pretrain_learns(params):

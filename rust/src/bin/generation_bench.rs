@@ -1,0 +1,146 @@
+//! Continuous-batching vs static-batch rollout generation on a
+//! straggler-heavy workload, measured over the deterministic
+//! [`MockBackend`] so the bench runs engine-free (and therefore in CI,
+//! where no model artifacts are shipped). The scheduler is where the win
+//! lives: the mock charges a dense per-call cost like a real device batch,
+//! so decode-step counts translate directly to wall clock. Emits
+//! `BENCH_generation.json` (rollouts/s, decode_steps, prefill calls /
+//! unique prompt forwards, lane occupancy) for the CI regression gate.
+//!
+//!   cargo run --release --bin generation_bench
+//!
+//! The two paths are also byte-compared here — a mismatch is a hard
+//! error, not a statistic.
+
+use intellect2::runtime::scheduler::{
+    rollout_rng, run_continuous, run_static_reference, GenRequest, GenStats, MockBackend,
+    SchedSpec,
+};
+use intellect2::runtime::GenOpts;
+use intellect2::util::bench::{BenchReport, Bencher};
+use intellect2::util::rng::Rng;
+
+/// A GRPO-shaped workload: `n_tasks` prompts of mixed lengths, each
+/// repeated `group_size` times; the mock's per-sequence EOS rates make
+/// completion lengths wildly uneven (early finishers + stragglers).
+fn workload(sp: &SchedSpec, n_tasks: usize, group_size: usize, seed: u64) -> Vec<GenRequest> {
+    let mut r = Rng::new(seed);
+    let mut reqs = Vec::with_capacity(n_tasks * group_size);
+    for task in 0..n_tasks {
+        let len = 2 + r.usize(56); // 2..58 tokens: spans several buckets
+        let mut prompt = vec![sp.bos_id];
+        prompt.extend((1..len).map(|_| 3 + r.usize(sp.vocab - 3) as i32));
+        for g in 0..group_size {
+            reqs.push(GenRequest {
+                prompt: prompt.clone(),
+                rng: rollout_rng(seed ^ 0x5EED, (task * group_size + g) as u64),
+                prompt_key: task as u64,
+            });
+        }
+    }
+    reqs
+}
+
+fn main() -> anyhow::Result<()> {
+    let sp = SchedSpec {
+        lanes: 8,
+        max_seq: 256,
+        vocab: 64,
+        d_model: 32,
+        pad_id: 0,
+        bos_id: 1,
+        eos_id: 2,
+    };
+    let opts = GenOpts { max_new: 96, temperature: 1.0, commit_interval: 32 };
+    let (n_tasks, group_size) = (12, 4);
+    let reqs = workload(&sp, n_tasks, group_size, 7);
+    let buckets = MockBackend::default_buckets(sp.max_seq);
+    // EOS pressure tuned so some rollouts end after a handful of tokens
+    // while others run to the cap — the mix static batching pads for.
+    let eos_bias = 0.08f32;
+
+    // Correctness first: the two paths must agree byte for byte.
+    let mut st = GenStats::default();
+    let mut ct = GenStats::default();
+    let a = run_static_reference(
+        &mut MockBackend::new(sp, buckets.clone(), eos_bias),
+        &reqs,
+        &opts,
+        &mut st,
+    )?;
+    let b = run_continuous(
+        &mut MockBackend::new(sp, buckets.clone(), eos_bias),
+        &reqs,
+        &opts,
+        &mut ct,
+    )?;
+    for (x, y) in a.iter().zip(&b) {
+        anyhow::ensure!(
+            x.tokens == y.tokens
+                && x.sampled_probs == y.sampled_probs
+                && x.hidden_rows == y.hidden_rows
+                && x.finish == y.finish,
+            "continuous output diverged from the static reference"
+        );
+    }
+    let rollouts = reqs.len() as f64;
+    println!(
+        "workload: {} rollouts ({n_tasks} tasks x {group_size}), completions {}..{} tokens",
+        reqs.len(),
+        a.iter().map(|g| g.completion_len()).min().unwrap(),
+        a.iter().map(|g| g.completion_len()).max().unwrap(),
+    );
+    println!(
+        "static:     {} decode steps, occupancy {:.2}",
+        st.decode_steps,
+        st.occupancy_frac()
+    );
+    println!(
+        "continuous: {} decode steps, {} prefill calls ({} unique forwards), occupancy {:.2}",
+        ct.decode_steps,
+        ct.prefill_calls,
+        ct.prefill_prompts,
+        ct.occupancy_frac()
+    );
+
+    let bench = Bencher::default();
+    let r_static = bench.run_throughput("static-batch generate", rollouts, "rollouts", || {
+        let mut s = GenStats::default();
+        run_static_reference(
+            &mut MockBackend::new(sp, buckets.clone(), eos_bias),
+            &reqs,
+            &opts,
+            &mut s,
+        )
+        .unwrap();
+    });
+    let r_cont = bench.run_throughput("continuous generate", rollouts, "rollouts", || {
+        let mut s = GenStats::default();
+        run_continuous(
+            &mut MockBackend::new(sp, buckets.clone(), eos_bias),
+            &reqs,
+            &opts,
+            &mut s,
+        )
+        .unwrap();
+    });
+    let speedup = r_static.mean_ns / r_cont.mean_ns;
+    println!(
+        "refill speedup: {speedup:.2}x (decode steps {} -> {})",
+        st.decode_steps, ct.decode_steps
+    );
+
+    let mut rep = BenchReport::new("generation");
+    rep.record(&r_static);
+    rep.record(&r_cont);
+    rep.metric("refill_speedup", speedup);
+    rep.metric("decode_steps_static", st.decode_steps as f64);
+    rep.metric("decode_steps_continuous", ct.decode_steps as f64);
+    rep.metric("prefill_calls", ct.prefill_calls as f64);
+    rep.metric("prefill_prompts", ct.prefill_prompts as f64);
+    rep.metric("static_occupancy", st.occupancy_frac());
+    rep.metric("continuous_occupancy", ct.occupancy_frac());
+    let path = rep.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

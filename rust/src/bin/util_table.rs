@@ -69,6 +69,37 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Generation-engine scheduler counters (the gen side of the Fig-3
+    // compute story, next to the validator columns above): decode steps,
+    // bucketed prompt-prefill calls, unique prompt forwards (group-shared
+    // prompts count once per wave, not once per rollout) and decode-lane
+    // occupancy. Both engines fill the decode/occupancy rows; zero
+    // prefill calls (with occupancy dipping on straggler tails) is the
+    // signature of the static reference engine (`--gen-refill false` or
+    // pre-refill artifacts).
+    let s = &result.stats;
+    if s.gen_lane_slots.get() > 0 {
+        let steps = s.gen_decode_steps.get();
+        let decoded = s.decode_tokens.get();
+        let gen_rows = vec![
+            vec!["decode steps".into(), steps.to_string()],
+            vec!["prefill calls".into(), s.gen_prefill_calls.get().to_string()],
+            vec!["unique prompt forwards".into(), s.gen_prefill_prompts.get().to_string()],
+            vec![
+                "lane occupancy".into(),
+                format!(
+                    "{:.1}%",
+                    100.0 * s.gen_lane_active.get() as f64 / s.gen_lane_slots.get().max(1) as f64
+                ),
+            ],
+            vec![
+                "tokens per decode step".into(),
+                format!("{:.2}", decoded as f64 / steps.max(1) as f64),
+            ],
+        ];
+        println!("{}", render_table(&["generation engine", "value"], &gen_rows));
+    }
+
     // Off-policy staleness accounting (the two-step-async correctness knob).
     let hist = result.stats.staleness_hist();
     let trained: u64 = hist.iter().map(|(_, n)| n).sum();

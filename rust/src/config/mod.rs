@@ -20,6 +20,17 @@
 //!   validation (stage 0). Default on — the real swarm slashes on proven
 //!   attribution only; `--require-signed-submissions false` restores the
 //!   legacy trust-the-claimed-address behavior for old fixtures.
+//! - `gen-refill`: continuous-batching rollout generation (default on) —
+//!   prompts prefill straight into the KV cache via the `prefill_kv_{T}`
+//!   ladder, decode lanes refill the step a sequence hits EOS, and GRPO
+//!   groups share one prompt forward per refill wave. `--gen-refill
+//!   false` runs the static-batch reference path. Per-rollout RNG
+//!   streams make the two paths byte-identical on a bit-deterministic
+//!   backend (enforced by the scheduler property tests); on real device
+//!   kernels they agree up to prefill-vs-decode fp rounding at prompt
+//!   positions, which the TOPLOC tolerances absorb. Requires
+//!   vectored-`pos` artifacts (`make artifacts`); older artifact sets
+//!   fall back to the reference path automatically.
 //! - `env-mix`: ordered per-environment task counts for the training
 //!   dataset, e.g. `--env-mix math=900,code=100,seq=200,chain=50`
 //!   (replaces the old hardcoded `n-math`/`n-code` pair). Env names are
@@ -75,6 +86,11 @@ pub struct RunConfig {
     /// multiple of this. 0 = the model's TOPLOC commit interval (so commit
     /// rows always land inside the padded frame).
     pub prefill_bucket_tokens: usize,
+    /// Continuous-batching rollout generation (lane refill + prompt
+    /// prefill-into-KV + group-shared prompt forwards). Off = the static
+    /// reference engine; equivalent outputs either way (bit-identical on
+    /// a deterministic backend, fp-rounding-close on device kernels).
+    pub gen_refill: bool,
     /// Verify submission-envelope signatures (stage 0) against the
     /// ledger's key registry; slash only on proven attribution. On by
     /// default for the real swarm; turn off for legacy unsigned fixtures.
@@ -109,6 +125,7 @@ impl Default for RunConfig {
             broadcast_timeout_secs: 60,
             validator_threads: 4,
             prefill_bucket_tokens: 0,
+            gen_refill: true,
             require_signed_submissions: true,
             lr_warmup_steps: 5,
             offline_filter: false,
@@ -148,6 +165,7 @@ impl RunConfig {
         self.broadcast_timeout_secs = a.u64_or("broadcast-timeout-secs", self.broadcast_timeout_secs);
         self.validator_threads = a.usize_or("validator-threads", self.validator_threads);
         self.prefill_bucket_tokens = a.usize_or("prefill-bucket-tokens", self.prefill_bucket_tokens);
+        self.gen_refill = a.bool_or("gen-refill", self.gen_refill);
         self.require_signed_submissions =
             a.bool_or("require-signed-submissions", self.require_signed_submissions);
         if a.has_flag("offline-filter") {
@@ -205,7 +223,7 @@ mod tests {
             "--model micro --async-level 4 --lr 0.001 --target-short \
              --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000 \
              --validator-threads 8 --prefill-bucket-tokens 64 \
-             --require-signed-submissions false \
+             --require-signed-submissions false --gen-refill false \
              --env-mix math=10,seq=5"
                 .split_whitespace()
                 .map(str::to_string),
@@ -226,8 +244,10 @@ mod tests {
         assert_eq!(c.validator_threads, 8);
         assert_eq!(c.prefill_bucket_tokens, 64);
         assert!(!c.require_signed_submissions);
-        // Default: signatures required.
+        assert!(!c.gen_refill);
+        // Defaults: signatures required, continuous batching on.
         assert!(RunConfig::default().require_signed_submissions);
+        assert!(RunConfig::default().gen_refill);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::data::tokenizer;
 use crate::rl::reward::{self, RewardConfig};
 use crate::rl::rollout_file::{Submission, WireRollout};
 use crate::rl::Rollout;
-use crate::runtime::{EngineHost, Finish, GenOpts, ParamSet};
+use crate::runtime::{rollout_rng, EngineHost, Finish, GenOpts, GenRequest, GenStats, ParamSet};
 use crate::tasks::dataset::{node_sample_seed, Dataset};
 use crate::toploc::Commitment;
 use crate::util::rng::Rng;
@@ -25,6 +25,12 @@ pub struct RolloutGenerator {
     pub registry: Arc<Registry>,
     pub max_new: usize,
     pub temperature: f32,
+    /// Continuous-batching generation (`gen-refill` knob, default on):
+    /// prompt prefill into KV, lane refill on EOS, group-shared prompt
+    /// forwards. Requires artifacts with the vectored-`pos` decode
+    /// contract (`ModelSpec::supports_continuous`); falls back to the
+    /// static reference path otherwise. Both paths are byte-equivalent.
+    pub gen_refill: bool,
 }
 
 impl RolloutGenerator {
@@ -62,13 +68,21 @@ impl RolloutGenerator {
             registry,
             max_new: cfg.max_new_tokens,
             temperature: cfg.temperature,
+            gen_refill: cfg.gen_refill,
         })
     }
 
     /// Generate one submission: `n_prompts` tasks drawn from the fixed
     /// seed, `group_size` completions each (§3.4 groups), with rewards,
     /// probs and TOPLOC commitments attached. `group_base` offsets group
-    /// ids so batches from different nodes stay distinct.
+    /// ids so batches from different nodes stay distinct. Returns the
+    /// submission plus the scheduler's perf accounting (decode steps,
+    /// prefill calls, lane occupancy — surfaced in `SwarmStats`).
+    ///
+    /// Rollout `i` samples from the stream `rollout_rng(gen_seed, i)`, so
+    /// the emitted bytes are identical whether the continuous or the
+    /// static reference engine produced them — the validator's §2.3.3
+    /// recomputation narrative never sees the worker's scheduling.
     pub fn generate_submission(
         &self,
         params: &Arc<ParamSet>,
@@ -78,7 +92,7 @@ impl RolloutGenerator {
         n_prompts: usize,
         group_size: usize,
         group_base: u64,
-    ) -> anyhow::Result<Submission> {
+    ) -> anyhow::Result<(Submission, GenStats)> {
         let spec = self.host.spec();
         let seed = node_sample_seed(node_address, policy_step, submission_idx);
         let task_ids = self.dataset.sample_for(seed, n_prompts);
@@ -110,52 +124,58 @@ impl RolloutGenerator {
         // Generation seed: deterministic in (node, step, submission) so the
         // validator's recomputation narrative holds.
         let gen_seed = seed ^ 0x5EED;
-        let mut rollouts = Vec::with_capacity(prompts.len());
-        let b = spec.batch_infer;
-        for (chunk_idx, chunk) in prompts.chunks(b).enumerate() {
-            let gens = self.host.generate(
-                Arc::clone(params),
-                chunk.to_vec(),
-                opts,
-                gen_seed.wrapping_add(chunk_idx as u64),
-            )?;
-            for (j, g) in gens.iter().enumerate() {
-                let (task_id, group_id, target, _) = metas[chunk_idx * b + j];
-                let task = self.dataset.get(task_id).unwrap();
-                let completion = tokenizer::decode_clean(&g.tokens[g.prompt_len..]);
-                // Rewards are computed on the inference node (§2.1.3).
-                let task_r = reward::task_reward(&self.registry, task, &completion);
-                let pen = reward::length_penalty(
-                    self.reward_cfg.alpha,
-                    g.completion_len(),
-                    target,
-                );
-                let (finish_eos, eos_prob) = match g.finish {
-                    Finish::Eos { prob } => (true, prob),
-                    Finish::MaxLen => (false, 0.0),
-                };
-                rollouts.push(WireRollout {
-                    rollout: Rollout {
-                        task_id,
-                        group_id,
-                        policy_step,
-                        tokens: g.tokens.clone(),
-                        prompt_len: g.prompt_len,
-                        target_len: target,
-                        task_reward: task_r,
-                        length_penalty: pen,
-                        reward: task_r - pen,
-                        advantage: 0.0,
-                        sampled_probs: g.sampled_probs.clone(),
-                        node_address,
-                    },
-                    commitment: Commitment::build(&g.hidden_rows, spec.toploc_topk).encode(),
-                    finish_eos,
-                    eos_prob,
-                });
-            }
+        let refill = self.gen_refill && spec.supports_continuous();
+        let (gens, stats) = if refill {
+            // Continuous batching: all rollouts in one scheduler run.
+            // prompt_key = task index, so a GRPO group's identical prompts
+            // are prefilled once per refill wave and KV-replicated.
+            let requests: Vec<GenRequest> = prompts
+                .into_iter()
+                .enumerate()
+                .map(|(i, prompt)| GenRequest {
+                    prompt,
+                    rng: rollout_rng(gen_seed, i as u64),
+                    prompt_key: metas[i].1,
+                })
+                .collect();
+            self.host.generate_continuous(Arc::clone(params), requests, opts)?
+        } else {
+            // Static reference path (gen-refill off, or pre-refill
+            // artifacts): same per-rollout streams, so same bytes.
+            self.host.generate_streams(Arc::clone(params), prompts, opts, gen_seed, 0)?
+        };
+        let mut rollouts = Vec::with_capacity(gens.len());
+        for (g, &(task_id, group_id, target, _)) in gens.iter().zip(&metas) {
+            let task = self.dataset.get(task_id).unwrap();
+            let completion = tokenizer::decode_clean(&g.tokens[g.prompt_len..]);
+            // Rewards are computed on the inference node (§2.1.3).
+            let task_r = reward::task_reward(&self.registry, task, &completion);
+            let pen = reward::length_penalty(self.reward_cfg.alpha, g.completion_len(), target);
+            let (finish_eos, eos_prob) = match g.finish {
+                Finish::Eos { prob } => (true, prob),
+                Finish::MaxLen => (false, 0.0),
+            };
+            rollouts.push(WireRollout {
+                rollout: Rollout {
+                    task_id,
+                    group_id,
+                    policy_step,
+                    tokens: g.tokens.clone(),
+                    prompt_len: g.prompt_len,
+                    target_len: target,
+                    task_reward: task_r,
+                    length_penalty: pen,
+                    reward: task_r - pen,
+                    advantage: 0.0,
+                    sampled_probs: g.sampled_probs.clone(),
+                    node_address,
+                },
+                commitment: Commitment::build(&g.hidden_rows, spec.toploc_topk).encode(),
+                finish_eos,
+                eos_prob,
+            });
         }
-        Ok(Submission { node_address, step: policy_step, submission_idx, rollouts })
+        Ok((Submission { node_address, step: policy_step, submission_idx, rollouts }, stats))
     }
 }
 
@@ -218,11 +238,12 @@ mod tests {
             .unwrap(),
         );
         let cfg = RunConfig { max_new_tokens: 12, ..Default::default() };
-        let generator = RolloutGenerator::from_config(Arc::clone(&host), dataset, &cfg).unwrap();
+        let mut generator =
+            RolloutGenerator::from_config(Arc::clone(&host), dataset, &cfg).unwrap();
         let params = Arc::new(host.init_params(3).unwrap());
 
-        let a = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
-        let b = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+        let (a, _) = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+        let (b, _) = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
         assert_eq!(a.rollouts.len(), 6);
         for (x, y) in a.rollouts.iter().zip(&b.rollouts) {
             assert_eq!(x.rollout.tokens, y.rollout.tokens);
@@ -239,5 +260,32 @@ mod tests {
         // Encodes to a valid submission file.
         let decoded = Submission::decode(&a.encode()).unwrap();
         assert_eq!(decoded.rollouts.len(), 6);
+
+        // Continuous vs static reference on the real engine. Tokens must
+        // agree (a divergence would need a sampling near-tie flipped by
+        // last-ulp prefill-vs-decode kernel rounding — vanishingly
+        // unlikely at nano scale, and a systematic mismatch is a real
+        // bug); probs get an fp tolerance because the prompt frontier is
+        // computed by a differently-shaped kernel. Bit-exact equivalence
+        // is enforced on the deterministic mock (tests/gen_scheduler.rs).
+        if host.spec().supports_continuous() {
+            generator.gen_refill = false;
+            let (s, st) = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+            assert_eq!(a.rollouts.len(), s.rollouts.len());
+            for (x, y) in a.rollouts.iter().zip(&s.rollouts) {
+                assert_eq!(x.rollout.tokens, y.rollout.tokens);
+                assert_eq!(x.rollout.group_id, y.rollout.group_id);
+                for (p, q) in x.rollout.sampled_probs.iter().zip(&y.rollout.sampled_probs) {
+                    assert!((p - q).abs() < 2e-3, "{p} vs {q}");
+                }
+            }
+            generator.gen_refill = true;
+            let (_, ct) = generator.generate_submission(&params, 42, 1, 0, 2, 3, 100).unwrap();
+            assert!(ct.prefill_calls > 0);
+            // Group sharing: 2 tasks x 3 completions needs at most one
+            // prompt forward per task per wave, never one per rollout.
+            assert!(ct.prefill_prompts < 6);
+            assert!(ct.decode_steps <= st.decode_steps);
+        }
     }
 }

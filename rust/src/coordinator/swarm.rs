@@ -11,6 +11,13 @@
 //! and verified rollouts land in a version-tagged [`RolloutBuffer`] that
 //! enforces the `[current - async_level, current]` staleness window.
 //!
+//! Inference workers generate rollouts through the continuous-batching
+//! decode scheduler (`runtime::scheduler`, `gen-refill` knob): prompts
+//! are prefilled straight into the KV cache, lanes refill the step a
+//! sequence hits EOS, and GRPO groups share one prompt forward per refill
+//! wave. Per-submission decode steps / prefill calls / lane occupancy are
+//! aggregated into [`SwarmStats`].
+//!
 //! Verification runs as a parallel, length-bucketed pipeline
 //! ([`ValidationPipeline`]): uploads land in a bounded FIFO
 //! [`SubmissionQueue`], CPU checks fan out across `validator-threads`
@@ -108,6 +115,21 @@ pub struct SwarmStats {
     pub nodes_slashed: Counter,
     pub broadcast_bytes: Counter,
     pub decode_tokens: Counter,
+    /// Generation-engine perf, aggregated over worker submissions (the
+    /// Fig-3 gen-side mirror of the validator columns in `util_table`):
+    /// `decode_step` artifact calls...
+    pub gen_decode_steps: Counter,
+    /// ...bucketed `prefill_kv_{T}` calls (one per refill wave+bucket)...
+    pub gen_prefill_calls: Counter,
+    /// ...unique prompt forwards inside those calls (group-shared prompts
+    /// count once per wave, not once per rollout)...
+    pub gen_prefill_prompts: Counter,
+    /// ...and decode-lane occupancy: Σ lanes over all decode steps
+    /// (capacity) vs Σ occupied lanes (the continuous scheduler's whole
+    /// point is keeping active/slots near 1.0 under mixed-length,
+    /// early-EOS workloads).
+    pub gen_lane_slots: Counter,
+    pub gen_lane_active: Counter,
     /// Per-environment task pass rates over *verified* rollouts (the
     /// validator re-checked these rewards), keyed by env registry name —
     /// mixed-env runs are unobservable from one aggregate reward number.
@@ -646,7 +668,12 @@ impl Swarm {
                         );
                         *idx += 1;
                         match sub {
-                            Ok(mut sub) => {
+                            Ok((mut sub, gen_stats)) => {
+                                shared.stats.gen_decode_steps.add(gen_stats.decode_steps);
+                                shared.stats.gen_prefill_calls.add(gen_stats.prefill_calls);
+                                shared.stats.gen_prefill_prompts.add(gen_stats.prefill_prompts);
+                                shared.stats.gen_lane_slots.add(gen_stats.lane_slots);
+                                shared.stats.gen_lane_active.add(gen_stats.lane_active);
                                 shared.stats.decode_tokens.add(
                                     sub.rollouts
                                         .iter()
@@ -807,6 +834,11 @@ impl Shared {
         s.nodes_slashed.add(self.stats.nodes_slashed.get());
         s.broadcast_bytes.add(self.stats.broadcast_bytes.get());
         s.decode_tokens.add(self.stats.decode_tokens.get());
+        s.gen_decode_steps.add(self.stats.gen_decode_steps.get());
+        s.gen_prefill_calls.add(self.stats.gen_prefill_calls.get());
+        s.gen_prefill_prompts.add(self.stats.gen_prefill_prompts.get());
+        s.gen_lane_slots.add(self.stats.gen_lane_slots.get());
+        s.gen_lane_active.add(self.stats.gen_lane_active.get());
         for (env, attempts, passes) in self.stats.env_pass.snapshot() {
             s.env_pass.add(&env, attempts, passes);
         }

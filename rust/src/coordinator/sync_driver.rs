@@ -159,7 +159,7 @@ impl SyncPipeline {
             let mut submission_idx = 0u64;
             let mut extra_inference = 0usize;
             while groups_kept < self.cfg.prompts_per_step && submission_idx < 6 {
-                let sub = self.generator.generate_submission(
+                let (sub, _gen_stats) = self.generator.generate_submission(
                     &gen_params,
                     /*node=*/ 0xA11CE,
                     step,

@@ -70,6 +70,14 @@ impl Runtime {
     /// Execute an artifact with host literals; returns the decomposed
     /// output tuple (artifacts are lowered with `return_tuple=True`).
     pub fn call(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.call_refs(name, &refs)
+    }
+
+    /// Like [`Runtime::call`] but borrowing the inputs — hot loops (the
+    /// decode scheduler) keep the parameter literals alive across calls
+    /// instead of cloning the full weight set every step.
+    pub fn call_refs(&self, name: &str, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
         let meta = self.spec.artifact(name)?;
         anyhow::ensure!(
             inputs.len() == meta.inputs.len(),
@@ -78,7 +86,7 @@ impl Runtime {
             meta.inputs.len()
         );
         let exe = self.executable(name)?;
-        let outs = exe.execute::<xla::Literal>(inputs)?;
+        let outs = exe.execute::<&xla::Literal>(inputs)?;
         let mut tuple = outs[0][0].to_literal_sync()?;
         Ok(tuple.decompose_tuple()?)
     }

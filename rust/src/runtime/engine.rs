@@ -5,7 +5,22 @@
 use std::rc::Rc;
 
 use super::client::{first_f32, lit_f32, lit_i32, scalar_f32, scalar_i32, scalar_u32, to_f32, Runtime};
+use super::scheduler::{self, rollout_rng, DecodeBackend, GenRequest, GenStats, SchedSpec};
 use sha2::{Digest, Sha256};
+
+/// Per-row [`GenRequest`]s for the static reference path: stream index =
+/// `stream_base + row`, prompt_key = row (no group sharing implied).
+fn requests_for(prompts: &[Vec<i32>], seed: u64, stream_base: u64) -> Vec<GenRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest {
+            prompt: p.clone(),
+            rng: rollout_rng(seed, stream_base + i as u64),
+            prompt_key: i as u64,
+        })
+        .collect()
+}
 
 /// Host-side parameter set in the canonical order of `spec.param_specs`.
 #[derive(Clone)]
@@ -313,6 +328,108 @@ pub struct SampleEngine {
     pub steps_executed: std::sync::atomic::AtomicU64,
 }
 
+/// [`DecodeBackend`] over the AOT artifacts: a device-resident KV cache
+/// threaded through `decode_step` / `prefill_kv_{T}` calls. Parameter
+/// literals are built **once** per generation run and passed by reference
+/// every call (the old loop cloned the full parameter set every
+/// `decode_step`), and the host-side token/position buffers are reused
+/// across steps.
+struct EngineBackend<'a> {
+    rt: &'a Runtime,
+    params: Vec<xla::Literal>,
+    kv: xla::Literal,
+    /// decode_step's `pos` input: per-lane `i32[batch_infer]` (new
+    /// contract) vs the legacy position-synchronized scalar.
+    pos_per_lane: bool,
+    buckets: Vec<usize>,
+    steps: &'a std::sync::atomic::AtomicU64,
+    posbuf: Vec<i32>,
+    tokbuf: Vec<i32>,
+}
+
+impl DecodeBackend for EngineBackend<'_> {
+    fn spec(&self) -> SchedSpec {
+        SchedSpec::from(&self.rt.spec)
+    }
+
+    fn decode(&mut self, toks: &[i32], pos: &[usize]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let b = self.rt.spec.batch_infer;
+        anyhow::ensure!(toks.len() == b && pos.len() == b, "lane-shaped inputs required");
+        let tok_lit = lit_i32(toks, &[b]);
+        let pos_lit = if self.pos_per_lane {
+            for (dst, &p) in self.posbuf.iter_mut().zip(pos) {
+                *dst = p as i32;
+            }
+            lit_i32(&self.posbuf, &[b])
+        } else {
+            anyhow::ensure!(
+                pos.iter().all(|&p| p == pos[0]),
+                "per-lane positions need the vectored decode_step artifact (run `make artifacts`)"
+            );
+            scalar_i32(pos[0] as i32)
+        };
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 3);
+        refs.extend(self.params.iter());
+        refs.push(&self.kv);
+        refs.push(&tok_lit);
+        refs.push(&pos_lit);
+        let mut outs = self.rt.call_refs("decode_step", &refs)?;
+        self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.kv = outs.pop().unwrap();
+        Ok((to_f32(&outs[0])?, to_f32(&outs[1])?))
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill_kv(
+        &mut self,
+        rows: &[&[i32]],
+        t_b: usize,
+        assign: &[Option<usize>],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let spec = &self.rt.spec;
+        let (b, v, d) = (spec.batch_infer, spec.vocab, spec.d_model);
+        anyhow::ensure!(!rows.is_empty() && rows.len() <= b, "prefill rows outside 1..={b}");
+        anyhow::ensure!(assign.len() == b, "lane-shaped assign required");
+        self.tokbuf.clear();
+        self.tokbuf.resize(b * t_b, spec.pad_id);
+        for (ri, r) in rows.iter().enumerate() {
+            anyhow::ensure!(r.len() <= t_b, "prompt longer than bucket {t_b}");
+            self.tokbuf[ri * t_b..ri * t_b + r.len()].copy_from_slice(r);
+        }
+        // lane_src gathers the computed row each lane's KV comes from
+        // (group sharing: one forward, many lanes); lane_mask guards the
+        // lanes whose caches must not be disturbed.
+        let mut src = vec![0i32; b];
+        let mut mask = vec![0.0f32; b];
+        for (l, a) in assign.iter().enumerate() {
+            if let Some(ri) = *a {
+                anyhow::ensure!(ri < rows.len(), "assign row out of range");
+                src[l] = ri as i32;
+                mask[l] = 1.0;
+            }
+        }
+        let tok_lit = lit_i32(&self.tokbuf, &[b, t_b]);
+        let src_lit = lit_i32(&src, &[b]);
+        let mask_lit = lit_f32(&mask, &[b]);
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 4);
+        refs.extend(self.params.iter());
+        refs.push(&self.kv);
+        refs.push(&tok_lit);
+        refs.push(&src_lit);
+        refs.push(&mask_lit);
+        let mut outs = self.rt.call_refs(&format!("prefill_kv_{t_b}"), &refs)?;
+        self.kv = outs.pop().unwrap();
+        let mut logits = to_f32(&outs[0])?; // [B, t_b, V]
+        let mut hidden = to_f32(&outs[1])?; // [B, t_b, D]
+        logits.truncate(rows.len() * t_b * v);
+        hidden.truncate(rows.len() * t_b * d);
+        Ok((logits, hidden))
+    }
+}
+
 impl SampleEngine {
     pub fn new(rt: Rc<Runtime>, params: ParamSet) -> SampleEngine {
         SampleEngine { rt, params, steps_executed: std::sync::atomic::AtomicU64::new(0) }
@@ -326,108 +443,63 @@ impl SampleEngine {
         self.params = params;
     }
 
-    /// Batched autoregressive generation with a device-side KV cache.
-    /// Up to `batch_infer` prompts per call; prompts must start with BOS.
+    fn backend(&self) -> EngineBackend<'_> {
+        let spec = &self.rt.spec;
+        let (b, t, d) = (spec.batch_infer, spec.max_seq, spec.d_model);
+        let kv_shape = [spec.n_layers, 2, b, t, d];
+        EngineBackend {
+            rt: &self.rt,
+            params: self.params.literals(&self.rt),
+            kv: lit_f32(&vec![0.0f32; kv_shape.iter().product()], &kv_shape),
+            pos_per_lane: spec.decode_pos_per_lane(),
+            buckets: spec.prefill_kv_lengths(),
+            steps: &self.steps_executed,
+            posbuf: vec![0i32; b],
+            tokbuf: Vec::new(),
+        }
+    }
+
+    /// Static-batch autoregressive generation (the `gen-refill off`
+    /// reference path — [`scheduler::run_static_reference`]). Any number
+    /// of prompts (chunked into `batch_infer` lanes internally); prompts
+    /// must start with BOS. Row `i` samples from the per-rollout stream
+    /// `rollout_rng(seed, stream_base + i)`.
     pub fn generate(
         &self,
         prompts: &[Vec<i32>],
         opts: &GenOpts,
-        rng: &mut crate::util::rng::Rng,
-    ) -> anyhow::Result<Vec<Generation>> {
-        let spec = &self.rt.spec;
-        let (b, t, d) = (spec.batch_infer, spec.max_seq, spec.d_model);
-        anyhow::ensure!(!prompts.is_empty() && prompts.len() <= b, "bad prompt batch");
-        let n = prompts.len();
-        let max_prompt = prompts.iter().map(Vec::len).max().unwrap();
-        anyhow::ensure!(max_prompt < t, "prompt too long");
+        seed: u64,
+        stream_base: u64,
+    ) -> anyhow::Result<(Vec<Generation>, GenStats)> {
+        let requests = requests_for(prompts, seed, stream_base);
+        let mut stats = GenStats::default();
+        let gens =
+            scheduler::run_static_reference(&mut self.backend(), &requests, opts, &mut stats)?;
+        Ok((gens, stats))
+    }
 
-        let kv_shape = [spec.n_layers, 2, b, t, d];
-        let mut kv = lit_f32(&vec![0.0f32; kv_shape.iter().product()], &kv_shape);
-        let param_lits = self.params.literals(&self.rt);
-
-        let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
-        let mut done = vec![false; n];
-        let mut finish: Vec<Finish> = vec![Finish::MaxLen; n];
-        let mut probs: Vec<Vec<f32>> = vec![Vec::new(); n];
-        let mut hidden_rows: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
-        let limit: Vec<usize> =
-            prompts.iter().map(|p| (p.len() + opts.max_new).min(t)).collect();
-
-        let mut pos = 0usize;
-        loop {
-            // Feed the token at `pos` for every row (PAD once finished).
-            let mut tok = vec![spec.pad_id; b];
-            for i in 0..n {
-                if pos < seqs[i].len() {
-                    tok[i] = seqs[i][pos];
-                }
-            }
-            let mut inputs = param_lits.clone();
-            inputs.push(kv);
-            inputs.push(lit_i32(&tok, &[b]));
-            inputs.push(scalar_i32(pos as i32));
-            let mut outs = self.rt.call("decode_step", &inputs)?;
-            self.steps_executed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            kv = outs.pop().unwrap();
-            let hidden = to_f32(&outs[1])?; // [B, D]
-            let logits = to_f32(&outs[0])?; // [B, V]
-
-            // Capture hidden rows on the commit grid (§2.1.2: every 32
-            // tokens, plus the final position per sequence).
-            let capture = (pos + 1) % opts.commit_interval == 0;
-
-            for i in 0..n {
-                if done[i] || pos >= seqs[i].len() {
-                    continue;
-                }
-                if capture {
-                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
-                }
-                // Only the frontier row (last position) produces a sample.
-                if pos + 1 != seqs[i].len() {
-                    continue;
-                }
-                if seqs[i].len() >= limit[i] {
-                    done[i] = true;
-                    finish[i] = Finish::MaxLen;
-                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
-                    continue;
-                }
-                // Special tokens PAD/BOS are never sampled (a PAD inside a
-                // sequence would corrupt the validator's prefill
-                // segmentation; real tokenizers restrict them too).
-                let full_row = &logits[i * spec.vocab..(i + 1) * spec.vocab];
-                let mut row = full_row.to_vec();
-                row[spec.pad_id as usize] = f32::NEG_INFINITY;
-                row[spec.bos_id as usize] = f32::NEG_INFINITY;
-                let (next, _) = rng.sample_logits(&row, opts.temperature);
-                // Report the probability under the *unmasked* model
-                // distribution — what the TOPLOC validator recomputes.
-                let p = softmax_prob(full_row, next);
-                seqs[i].push(next as i32);
-                probs[i].push(p);
-                if next as i32 == spec.eos_id {
-                    done[i] = true;
-                    finish[i] = Finish::Eos { prob: softmax_prob(full_row, spec.eos_id as usize) };
-                    hidden_rows[i].push((pos, hidden[i * d..(i + 1) * d].to_vec()));
-                }
-            }
-
-            pos += 1;
-            if pos >= t - 1 || (0..n).all(|i| done[i] && pos >= seqs[i].len()) {
-                break;
-            }
-        }
-
-        Ok((0..n)
-            .map(|i| Generation {
-                tokens: seqs[i].clone(),
-                prompt_len: prompts[i].len(),
-                sampled_probs: probs[i].clone(),
-                hidden_rows: hidden_rows[i].clone(),
-                finish: finish[i].clone(),
-            })
-            .collect())
+    /// Continuously-batched generation ([`scheduler::run_continuous`]):
+    /// prompt prefill into KV, lane refill on EOS, group-shared prompt
+    /// forwards. Equivalent to [`SampleEngine::generate`] on the same
+    /// request streams — bit-identical given bit-deterministic kernels;
+    /// on real devices, prompt-position values agree up to
+    /// prefill-vs-decode kernel rounding (absorbed by the TOPLOC
+    /// tolerances). Requires the vectored-`pos` decode
+    /// artifact plus the `prefill_kv_{T}` ladder
+    /// (`ModelSpec::supports_continuous`; run `make artifacts`).
+    pub fn generate_continuous(
+        &self,
+        requests: &[GenRequest],
+        opts: &GenOpts,
+    ) -> anyhow::Result<(Vec<Generation>, GenStats)> {
+        anyhow::ensure!(
+            self.rt.spec.supports_continuous(),
+            "artifacts predate continuous batching: decode_step pos must be [batch_infer] and \
+             a prefill_kv ladder must be shipped (run `make artifacts`)"
+        );
+        let mut stats = GenStats::default();
+        let gens = scheduler::run_continuous(&mut self.backend(), requests, opts, &mut stats)?;
+        Ok((gens, stats))
     }
 
     /// Validator prefill: full-sequence logits + hidden states in one call

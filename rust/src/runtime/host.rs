@@ -14,8 +14,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::engine::{GenOpts, Generation, GrpoHp, GrpoMetrics, MicroBatch, ParamSet, SampleEngine, TrainEngine};
+use super::scheduler::{GenRequest, GenStats};
 use super::spec::ModelSpec;
-use crate::util::rng::Rng;
 
 enum Req {
     Generate {
@@ -23,7 +23,14 @@ enum Req {
         prompts: Vec<Vec<i32>>,
         opts: GenOpts,
         seed: u64,
-        reply: Sender<anyhow::Result<Vec<Generation>>>,
+        stream_base: u64,
+        reply: Sender<anyhow::Result<(Vec<Generation>, GenStats)>>,
+    },
+    GenerateContinuous {
+        params: Arc<ParamSet>,
+        requests: Vec<GenRequest>,
+        opts: GenOpts,
+        reply: Sender<anyhow::Result<(Vec<Generation>, GenStats)>>,
     },
     Prefill {
         params: Arc<ParamSet>,
@@ -99,10 +106,13 @@ impl EngineHost {
             let mut sample = SampleEngine::new(rt.clone(), ParamSet { tensors: Vec::new() });
             while let Ok(req) = rx.recv() {
                 match req {
-                    Req::Generate { params, prompts, opts, seed, reply } => {
+                    Req::Generate { params, prompts, opts, seed, stream_base, reply } => {
                         sample.set_params((*params).clone());
-                        let mut rng = Rng::new(seed);
-                        let _ = reply.send(sample.generate(&prompts, &opts, &mut rng));
+                        let _ = reply.send(sample.generate(&prompts, &opts, seed, stream_base));
+                    }
+                    Req::GenerateContinuous { params, requests, opts, reply } => {
+                        sample.set_params((*params).clone());
+                        let _ = reply.send(sample.generate_continuous(&requests, &opts));
                     }
                     Req::Prefill { params, tokens, reply } => {
                         sample.set_params((*params).clone());
@@ -183,6 +193,8 @@ impl EngineHost {
         rx.recv().map_err(closed)?
     }
 
+    /// Static-batch generation, rollout streams starting at index 0 (see
+    /// [`EngineHost::generate_streams`] for the full contract).
     pub fn generate(
         &self,
         params: Arc<ParamSet>,
@@ -190,8 +202,44 @@ impl EngineHost {
         opts: GenOpts,
         seed: u64,
     ) -> anyhow::Result<Vec<Generation>> {
+        Ok(self.generate_streams(params, prompts, opts, seed, 0)?.0)
+    }
+
+    /// Static-batch reference generation: row `i` samples from the
+    /// per-rollout stream `rollout_rng(seed, stream_base + i)` — the same
+    /// streams the continuous path uses, so the two are equivalent (see
+    /// [`EngineHost::generate_continuous`] for the fp caveat).
+    /// Prompts beyond `batch_infer` are chunked internally.
+    pub fn generate_streams(
+        &self,
+        params: Arc<ParamSet>,
+        prompts: Vec<Vec<i32>>,
+        opts: GenOpts,
+        seed: u64,
+        stream_base: u64,
+    ) -> anyhow::Result<(Vec<Generation>, GenStats)> {
         let (reply, rx) = channel();
-        self.tx.send(Req::Generate { params, prompts, opts, seed, reply }).map_err(closed)?;
+        self.tx
+            .send(Req::Generate { params, prompts, opts, seed, stream_base, reply })
+            .map_err(closed)?;
+        rx.recv().map_err(closed)?
+    }
+
+    /// Continuously-batched generation (`gen-refill`): prompt prefill into
+    /// KV, lane refill on EOS, group-shared prompt forwards — see
+    /// [`super::scheduler`]. Outputs are in request order and equivalent
+    /// to the static reference path on the same streams (bit-identical up
+    /// to prefill-vs-decode kernel rounding on real devices).
+    pub fn generate_continuous(
+        &self,
+        params: Arc<ParamSet>,
+        requests: Vec<GenRequest>,
+        opts: GenOpts,
+    ) -> anyhow::Result<(Vec<Generation>, GenStats)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::GenerateContinuous { params, requests, opts, reply })
+            .map_err(closed)?;
         rx.recv().map_err(closed)?
     }
 

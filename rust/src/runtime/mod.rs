@@ -1,10 +1,52 @@
 //! PJRT runtime: loads the AOT artifacts (HLO text) produced by
 //! `python/compile/aot.py` and exposes typed engines to the coordinator.
 //! Start-to-finish self-contained: after `make artifacts`, no Python.
+//!
+//! # Generation topology (continuous batching)
+//!
+//! Rollout generation — the swarm's dominant compute (§2.1.2 / Fig 3) —
+//! runs through the [`scheduler`] module's continuously-batched
+//! [`scheduler::run_continuous`] path by default (`gen-refill` knob):
+//!
+//! - **Vectored decode contract**: `decode_step` takes `pos: i32[B]`, one
+//!   position per `batch_infer` lane, because lanes advance independently
+//!   once refill decouples them. `ModelSpec::decode_pos_per_lane` detects
+//!   the contract; pre-refill artifacts (scalar `pos`) still run the
+//!   static reference path.
+//! - **Prompt prefill into KV**: the `prefill_kv_{T}` artifact ladder
+//!   computes an entire prompt forward in one bucketed call, returns its
+//!   per-position logits/hidden (commit-grid rows + the first frontier
+//!   sample) and installs the per-layer k/v projections into assigned
+//!   lanes of the persistent decode cache — an L-token prompt costs one
+//!   call instead of L decode steps.
+//! - **Lane refill**: the step a sequence hits EOS or its length limit,
+//!   its lane is retired and the next pending prompt is prefilled into it;
+//!   occupancy never drops while prompts are pending.
+//! - **Group-shared prompt KV**: GRPO groups repeat one prompt
+//!   `group_size` times (§3.4); a refill wave computes each unique prompt
+//!   once and replicates the KV rows across the group's lanes via the
+//!   artifact's `lane_src` gather input.
+//! - **Lane-invariant determinism**: sampling draws from per-rollout RNG
+//!   streams keyed by `(gen_seed, rollout_index)`
+//!   ([`scheduler::rollout_rng`]), so tokens, `sampled_probs` and TOPLOC
+//!   commitments are byte-identical whatever the lane assignment or swarm
+//!   load — the §2.3.3 fixed-sampling check stays slashable. The kept
+//!   static-batch loop ([`scheduler::run_static_reference`]) is the
+//!   equivalence oracle, enforced by engine-free property tests over
+//!   [`scheduler::MockBackend`].
+//!
+//! # Threading
+//!
+//! `xla::PjRtClient` is `Rc`-based and thread-confined, so a [`Runtime`]
+//! stays on the thread that created it; cross-thread access goes through
+//! [`EngineHost`], which owns a `Runtime` on a dedicated thread and serves
+//! requests over channels — one inference server per node, exactly like a
+//! real deployment.
 
 pub mod client;
 pub mod engine;
 pub mod host;
+pub mod scheduler;
 pub mod spec;
 
 pub use client::Runtime;
@@ -13,4 +55,5 @@ pub use engine::{
     TrainEngine, TrainState,
 };
 pub use host::{EngineHost, HostTrainState};
+pub use scheduler::{rollout_rng, GenRequest, GenStats};
 pub use spec::ModelSpec;

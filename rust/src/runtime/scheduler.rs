@@ -1,0 +1,724 @@
+//! Continuous-batching decode scheduler — the rollout-generation hot path
+//! (§2.1.2: generation, not verification, is the swarm's dominant compute).
+//!
+//! The old `SampleEngine::generate` was a static-batch loop: every chunk of
+//! `batch_infer` prompts marched in position lockstep, prompts were fed one
+//! token per `decode_step`, and a chunk ran until its *longest* row
+//! finished, so decode cost scaled with `chunks x longest row`. This module
+//! replaces that with a continuously-batched scheduler whose cost scales
+//! with total tokens generated:
+//!
+//! - **Prompt prefill into KV** — an L-token prompt costs one bucketed
+//!   `prefill_kv_{T}` call (the smallest compiled `T >= L`) instead of L
+//!   decode steps. The artifact computes the prompt forward, returns its
+//!   logits/hidden rows (commit-grid rows and the first frontier sample
+//!   come from these) and installs the per-layer k/v projections directly
+//!   into the persistent decode cache.
+//! - **Lane refill** — [`run_continuous`] owns the `batch_infer` decode
+//!   lanes. The step a lane's sequence hits EOS / its length limit, the
+//!   lane is retired and the next pending prompt is prefilled into it
+//!   before the following `decode_step`; occupancy never drops while
+//!   prompts are pending. This requires the vectored decode contract:
+//!   `pos` is `i32[batch_infer]` (one position per lane), since lanes are
+//!   no longer position-synchronized.
+//! - **Group-shared prompt KV** — GRPO groups repeat one prompt
+//!   `group_size` times by construction (§3.4). A refill wave deduplicates
+//!   identical prompts (by [`GenRequest::prompt_key`]), computes each
+//!   unique prompt's forward once, and replicates its KV rows across the
+//!   group's lanes through the artifact's `lane_src` gather input.
+//!
+//! **Determinism survives scheduling.** Sampling uses per-rollout RNG
+//! streams keyed by `(gen_seed, rollout_index)` ([`rollout_rng`]), and
+//! every rollout's observable outputs (tokens, `sampled_probs`, TOPLOC
+//! hidden-row commitments, finish reason) are functions of its own prompt,
+//! its own stream and the model — never of lane assignment, co-tenants or
+//! swarm load. That keeps the paper's §2.3.3 fixed-sampling check
+//! *slashable*: a validator can recompute a rollout bit-for-bit without
+//! knowing how the worker's scheduler happened to pack it. The kept
+//! static-batch path ([`run_static_reference`]) is the equivalence oracle:
+//! property tests drive both paths over [`MockBackend`] (a deterministic
+//! host-side stand-in model, so the tests run engine-free in CI) and
+//! require byte-identical outputs. On real device kernels one fp boundary
+//! remains — prompt-position logits/hidden come from the prefill forward
+//! rather than per-token decode, and differently-shaped kernels can round
+//! differently in the last ulp — which the TOPLOC tolerances absorb
+//! (`toploc/mod.rs`); everything the *scheduler* decides (lane
+//! assignment, refill order, group sharing) is bit-invariant everywhere.
+//!
+//! Both paths are generic over [`DecodeBackend`]; the real engine binding
+//! lives in [`super::engine::SampleEngine`].
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::engine::{softmax_prob, Finish, GenOpts, Generation};
+use crate::util::rng::Rng;
+
+/// Per-rollout RNG stream: deterministic in `(gen_seed, rollout_index)`
+/// and nothing else, so emitted tokens are invariant to lane assignment,
+/// chunking and swarm load (§2.3.3 sample determinism).
+pub fn rollout_rng(gen_seed: u64, rollout_index: u64) -> Rng {
+    Rng::new(gen_seed).fold(rollout_index)
+}
+
+/// One generation request (one rollout) for the scheduler paths.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Prompt tokens (BOS-first, no padding, `len < max_seq`).
+    pub prompt: Vec<i32>,
+    /// This rollout's private sampling stream (see [`rollout_rng`]).
+    pub rng: Rng,
+    /// Requests with equal keys carry byte-identical prompts (GRPO group
+    /// members); a refill wave prefills such prompts once and replicates
+    /// the KV rows. Keys never cross a `run_*` call, so any per-call
+    /// unique id (e.g. the task's index in the submission) works.
+    pub prompt_key: u64,
+}
+
+/// Model-shape constants the scheduler needs, decoupled from `ModelSpec`
+/// so the mock backend and the property tests run engine-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedSpec {
+    /// Decode lanes (`batch_infer`).
+    pub lanes: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+}
+
+impl From<&super::spec::ModelSpec> for SchedSpec {
+    fn from(s: &super::spec::ModelSpec) -> SchedSpec {
+        SchedSpec {
+            lanes: s.batch_infer,
+            max_seq: s.max_seq,
+            vocab: s.vocab,
+            d_model: s.d_model,
+            pad_id: s.pad_id,
+            bos_id: s.bos_id,
+            eos_id: s.eos_id,
+        }
+    }
+}
+
+/// What the scheduler needs from a model runtime. The KV cache is owned by
+/// the backend (device-resident for the real engine) and is only ever
+/// written at a lane's current position before it is read, so lane reuse
+/// never leaks a previous occupant's state.
+pub trait DecodeBackend {
+    fn spec(&self) -> SchedSpec;
+
+    /// One decode step over all lanes: `toks[l]` is fed at position
+    /// `pos[l]` of lane `l` (PAD at position 0 for idle lanes). Returns
+    /// `(logits, hidden)` as `[lanes * vocab]` / `[lanes * d_model]`.
+    fn decode(&mut self, toks: &[i32], pos: &[usize]) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Bucket lengths with a compiled `prefill_kv_{T}` artifact, ascending.
+    /// Empty = no prompt-prefill support; the scheduler then feeds prompts
+    /// through `decode` one token at a time (still with lane refill).
+    fn prefill_buckets(&self) -> &[usize];
+
+    /// Prefill `rows` unique prompts (each `len <= t_b`, `rows.len() <=
+    /// lanes`) in one bucketed call and install the resulting KV at
+    /// positions `0..t_b` of every lane `l` with `assign[l] = Some(row)`
+    /// (other lanes' caches untouched). Returns per-unique-row outputs
+    /// `(logits [rows * t_b * vocab], hidden [rows * t_b * d_model])`.
+    /// Positions at/after a row's true prompt length hold pad-derived
+    /// values; the decode path overwrites them before ever attending.
+    fn prefill_kv(
+        &mut self,
+        rows: &[&[i32]],
+        t_b: usize,
+        assign: &[Option<usize>],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+}
+
+/// Perf accounting for one scheduler run (surfaced per submission in
+/// `SwarmStats` — the generation-side mirror of the validator columns).
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    /// `decode_step` artifact invocations.
+    pub decode_steps: u64,
+    /// `prefill_kv_{T}` artifact invocations.
+    pub prefill_calls: u64,
+    /// Unique prompt forwards computed across all prefill calls — with
+    /// group sharing this tracks tasks-per-wave, not rollouts.
+    pub prefill_prompts: u64,
+    /// Σ lanes over all decode steps (capacity).
+    pub lane_slots: u64,
+    /// Σ occupied lanes over all decode steps.
+    pub lane_active: u64,
+    /// Per decode step: (occupied lanes, requests still pending before the
+    /// step) — the refill-invariant trace the scheduler tests assert on.
+    pub occupancy: Vec<(u32, u32)>,
+}
+
+impl GenStats {
+    /// Fraction of decode-lane slots that carried a live sequence.
+    pub fn occupancy_frac(&self) -> f64 {
+        self.lane_active as f64 / self.lane_slots.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-rollout core semantics (shared by both paths)
+
+/// One rollout's accumulator. `observe` is the *exact* per-row semantics
+/// of the historical static loop — grid capture, frontier sampling with
+/// PAD/BOS masked, unmasked-model probabilities, final-row capture on
+/// EOS/limit — so any scheduler that feeds each position's model outputs
+/// in order reproduces the reference byte for byte.
+struct RolloutCore {
+    seq: Vec<i32>,
+    prompt_len: usize,
+    limit: usize,
+    probs: Vec<f32>,
+    rows: Vec<(usize, Vec<f32>)>,
+    finish: Finish,
+    done: bool,
+    rng: Rng,
+}
+
+impl RolloutCore {
+    fn new(req: &GenRequest, opts: &GenOpts, max_seq: usize) -> RolloutCore {
+        RolloutCore {
+            prompt_len: req.prompt.len(),
+            limit: (req.prompt.len() + opts.max_new).min(max_seq),
+            seq: req.prompt.clone(),
+            probs: Vec::new(),
+            rows: Vec::new(),
+            finish: Finish::MaxLen,
+            done: false,
+            rng: req.rng.clone(),
+        }
+    }
+
+    /// Process position `pos` given the model's logits/hidden row at that
+    /// position. Captures commit-grid rows, and at the frontier
+    /// (`pos + 1 == seq.len()`) either finishes on the length limit or
+    /// samples the next token from this rollout's private stream.
+    fn observe(
+        &mut self,
+        pos: usize,
+        logits: &[f32],
+        hidden: &[f32],
+        opts: &GenOpts,
+        sp: &SchedSpec,
+    ) {
+        if self.done || pos >= self.seq.len() {
+            return;
+        }
+        // Hidden rows on the commit grid (§2.1.2: every commit_interval
+        // tokens, plus the final position per sequence).
+        if (pos + 1) % opts.commit_interval == 0 {
+            self.rows.push((pos, hidden.to_vec()));
+        }
+        if pos + 1 != self.seq.len() {
+            return; // mid-prompt: capture only
+        }
+        if self.seq.len() >= self.limit {
+            self.done = true;
+            self.finish = Finish::MaxLen;
+            self.rows.push((pos, hidden.to_vec()));
+            return;
+        }
+        // Special tokens PAD/BOS are never sampled (a PAD inside a
+        // sequence would corrupt the validator's prefill segmentation).
+        let mut masked = logits.to_vec();
+        masked[sp.pad_id as usize] = f32::NEG_INFINITY;
+        masked[sp.bos_id as usize] = f32::NEG_INFINITY;
+        let (next, _) = self.rng.sample_logits(&masked, opts.temperature);
+        // Report the probability under the *unmasked* model distribution —
+        // what the TOPLOC validator recomputes.
+        let p = softmax_prob(logits, next);
+        self.seq.push(next as i32);
+        self.probs.push(p);
+        if next as i32 == sp.eos_id {
+            self.done = true;
+            self.finish = Finish::Eos { prob: softmax_prob(logits, sp.eos_id as usize) };
+            self.rows.push((pos, hidden.to_vec()));
+        }
+    }
+
+    fn into_generation(self) -> Generation {
+        Generation {
+            tokens: self.seq,
+            prompt_len: self.prompt_len,
+            sampled_probs: self.probs,
+            hidden_rows: self.rows,
+            finish: self.finish,
+        }
+    }
+}
+
+fn check_requests(requests: &[GenRequest], sp: &SchedSpec) -> anyhow::Result<()> {
+    anyhow::ensure!(!requests.is_empty(), "empty request batch");
+    for r in requests {
+        anyhow::ensure!(
+            !r.prompt.is_empty() && r.prompt.len() < sp.max_seq,
+            "prompt length {} outside 1..{}",
+            r.prompt.len(),
+            sp.max_seq
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Static-batch reference path
+
+/// The historical static-batch loop (the `gen-refill off` path and the
+/// equivalence oracle): requests run in `lanes`-sized chunks, every row of
+/// a chunk marches in position lockstep, prompts are fed one token per
+/// decode step, and a chunk runs until its slowest row finishes (drained
+/// rows keep burning their lane — exactly the waste [`run_continuous`]
+/// removes). Output-equivalent to the continuous path by construction of
+/// [`RolloutCore::observe`]; byte-equality is enforced by tests.
+pub fn run_static_reference<B: DecodeBackend>(
+    backend: &mut B,
+    requests: &[GenRequest],
+    opts: &GenOpts,
+    stats: &mut GenStats,
+) -> anyhow::Result<Vec<Generation>> {
+    let sp = backend.spec();
+    let (b, t, v, d) = (sp.lanes, sp.max_seq, sp.vocab, sp.d_model);
+    check_requests(requests, &sp)?;
+    let mut out = Vec::with_capacity(requests.len());
+    let mut toks = vec![sp.pad_id; b];
+    let mut posv = vec![0usize; b];
+    for chunk in requests.chunks(b) {
+        let mut cores: Vec<RolloutCore> =
+            chunk.iter().map(|r| RolloutCore::new(r, opts, t)).collect();
+        let mut pos = 0usize;
+        loop {
+            // Feed the token at `pos` for every row (PAD once finished).
+            for l in 0..b {
+                toks[l] = sp.pad_id;
+                posv[l] = pos;
+            }
+            for (i, c) in cores.iter().enumerate() {
+                if pos < c.seq.len() {
+                    toks[i] = c.seq[pos];
+                }
+            }
+            let active = cores.iter().filter(|c| !c.done).count();
+            stats.occupancy.push((active as u32, 0));
+            stats.lane_slots += b as u64;
+            stats.lane_active += active as u64;
+            let (logits, hidden) = backend.decode(&toks, &posv)?;
+            stats.decode_steps += 1;
+            for (i, c) in cores.iter_mut().enumerate() {
+                c.observe(pos, &logits[i * v..(i + 1) * v], &hidden[i * d..(i + 1) * d], opts, &sp);
+            }
+            pos += 1;
+            if pos >= t - 1 || cores.iter().all(|c| c.done && pos >= c.seq.len()) {
+                break;
+            }
+        }
+        out.extend(cores.into_iter().map(RolloutCore::into_generation));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Continuous path
+
+/// Continuous-batching generation: prompt prefill into KV, lane refill on
+/// EOS/limit, group-shared prompt forwards (module docs). Outputs are in
+/// request order and byte-identical to [`run_static_reference`].
+pub fn run_continuous<B: DecodeBackend>(
+    backend: &mut B,
+    requests: &[GenRequest],
+    opts: &GenOpts,
+    stats: &mut GenStats,
+) -> anyhow::Result<Vec<Generation>> {
+    let sp = backend.spec();
+    let (b, t, v, d) = (sp.lanes, sp.max_seq, sp.vocab, sp.d_model);
+    check_requests(requests, &sp)?;
+    let mut cores: Vec<RolloutCore> =
+        requests.iter().map(|r| RolloutCore::new(r, opts, t)).collect();
+    let mut pending: VecDeque<usize> = (0..requests.len()).collect();
+    // lanes[l] = request index occupying lane l; feed[l] = its next
+    // position to feed (per-lane `pos` — lanes are not synchronized).
+    let mut lanes: Vec<Option<usize>> = vec![None; b];
+    let mut feed = vec![0usize; b];
+    let mut toks = vec![sp.pad_id; b];
+    let mut posv = vec![0usize; b];
+    loop {
+        refill(
+            backend, requests, &mut cores, &mut lanes, &mut feed, &mut pending, opts, &sp, stats,
+        )?;
+        let active = lanes.iter().filter(|l| l.is_some()).count();
+        if active == 0 {
+            debug_assert!(pending.is_empty());
+            break;
+        }
+        for l in 0..b {
+            match lanes[l] {
+                Some(r) => {
+                    toks[l] = cores[r].seq[feed[l]];
+                    posv[l] = feed[l];
+                }
+                None => {
+                    toks[l] = sp.pad_id;
+                    posv[l] = 0;
+                }
+            }
+        }
+        stats.occupancy.push((active as u32, pending.len() as u32));
+        stats.lane_slots += b as u64;
+        stats.lane_active += active as u64;
+        let (logits, hidden) = backend.decode(&toks, &posv)?;
+        stats.decode_steps += 1;
+        for l in 0..b {
+            let Some(r) = lanes[l] else { continue };
+            let pos = feed[l];
+            let (lg, hd) = (&logits[l * v..(l + 1) * v], &hidden[l * d..(l + 1) * d]);
+            cores[r].observe(pos, lg, hd, opts, &sp);
+            if cores[r].done {
+                lanes[l] = None; // retired the step its sequence ended
+            } else if pos + 1 >= t - 1 {
+                // The reference loop never feeds position t-1: sequences
+                // reaching it stop as MaxLen with no final commit row.
+                cores[r].done = true;
+                lanes[l] = None;
+            } else {
+                feed[l] = pos + 1;
+            }
+        }
+    }
+    Ok(cores.into_iter().map(RolloutCore::into_generation).collect())
+}
+
+/// Fill every free lane from the pending queue. With prefill support, a
+/// wave of pending prompts is partitioned by covering bucket, identical
+/// prompts are deduplicated (computed once, KV replicated across the
+/// group's lanes) and each bucket costs one `prefill_kv_{T}` call; a
+/// prompt no bucket covers — or all prompts, when no `prefill_kv`
+/// artifacts are shipped — falls back to token-by-token feeding through
+/// `decode`. Rollouts that finish *during* prefill (EOS on the first
+/// sample, limit already met) free their lane immediately, and the loop
+/// re-fills it, so occupancy never drops while prompts are pending.
+fn refill<B: DecodeBackend>(
+    backend: &mut B,
+    requests: &[GenRequest],
+    cores: &mut [RolloutCore],
+    lanes: &mut [Option<usize>],
+    feed: &mut [usize],
+    pending: &mut VecDeque<usize>,
+    opts: &GenOpts,
+    sp: &SchedSpec,
+    stats: &mut GenStats,
+) -> anyhow::Result<()> {
+    let (t, v, d) = (sp.max_seq, sp.vocab, sp.d_model);
+    loop {
+        let free: Vec<usize> =
+            (0..lanes.len()).filter(|&l| lanes[l].is_none()).collect();
+        if free.is_empty() || pending.is_empty() {
+            return Ok(());
+        }
+        let wave: Vec<usize> =
+            (0..free.len()).filter_map(|_| pending.pop_front()).collect();
+        // Partition the wave by the cheapest covering prefill bucket;
+        // uncovered prompts decode token-by-token from position 0.
+        let mut by_bucket: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let mut uncovered: Vec<usize> = Vec::new();
+        let buckets = backend.prefill_buckets().to_vec();
+        for &r in &wave {
+            match buckets.iter().find(|&&x| x >= requests[r].prompt.len()) {
+                Some(&t_b) => by_bucket.entry(t_b).or_default().push(r),
+                None => uncovered.push(r),
+            }
+        }
+        let mut free_iter = free.into_iter();
+        for r in uncovered {
+            let l = free_iter.next().expect("wave <= free lanes");
+            lanes[l] = Some(r);
+            feed[l] = 0;
+        }
+        for (t_b, members) in by_bucket {
+            // Unique prompts in first-seen order: group members share a
+            // prompt_key, so each task's forward is computed once and its
+            // KV rows are replicated across the group's lanes.
+            let mut rows: Vec<&[i32]> = Vec::new();
+            let mut seen: Vec<(u64, usize)> = Vec::new();
+            let mut assign: Vec<Option<usize>> = vec![None; lanes.len()];
+            let mut placed: Vec<(usize, usize, usize)> = Vec::new(); // (req, lane, row)
+            for &r in &members {
+                let key = requests[r].prompt_key;
+                let hit = seen
+                    .iter()
+                    .find(|&&(k, i)| k == key && rows[i] == requests[r].prompt.as_slice())
+                    .map(|&(_, i)| i);
+                let row = match hit {
+                    Some(i) => i,
+                    None => {
+                        rows.push(&requests[r].prompt);
+                        seen.push((key, rows.len() - 1));
+                        rows.len() - 1
+                    }
+                };
+                let l = free_iter.next().expect("wave <= free lanes");
+                assign[l] = Some(row);
+                lanes[l] = Some(r);
+                placed.push((r, l, row));
+            }
+            let (logits, hidden) = backend.prefill_kv(&rows, t_b, &assign)?;
+            stats.prefill_calls += 1;
+            stats.prefill_prompts += rows.len() as u64;
+            for (r, l, row) in placed {
+                let plen = requests[r].prompt.len();
+                // Replay the prompt positions from the prefill outputs:
+                // commit-grid captures, then the frontier sample at
+                // plen-1 — the same observe sequence the reference path
+                // runs one decode step at a time.
+                for pos in 0..plen {
+                    cores[r].observe(
+                        pos,
+                        &logits[(row * t_b + pos) * v..(row * t_b + pos + 1) * v],
+                        &hidden[(row * t_b + pos) * d..(row * t_b + pos + 1) * d],
+                        opts,
+                        sp,
+                    );
+                }
+                if cores[r].done {
+                    lanes[l] = None;
+                } else if plen >= t - 1 {
+                    // First sampled token sits at position t-1, which the
+                    // reference loop never feeds: stop as MaxLen.
+                    cores[r].done = true;
+                    lanes[l] = None;
+                } else {
+                    feed[l] = plen;
+                }
+            }
+        }
+        // Instantly-finished rollouts freed lanes above; loop to refill.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic mock backend (tests + generation_bench)
+
+/// Engine-free stand-in model: logits and hidden rows are pure functions
+/// of a lane's token history prefix, so prefill-sourced and decode-sourced
+/// outputs are bit-identical — which is exactly the property the scheduler
+/// equivalence tests need to check *scheduling* (lane refill, prefill
+/// replay, RNG streams) rather than kernel numerics. The per-call cost is
+/// `O(lanes * (vocab + d_model))` regardless of how many lanes are live,
+/// mirroring a dense device batch, so step counts translate to time.
+///
+/// EOS pressure grows with completion length at a per-sequence rate, so a
+/// mixed workload retires lanes at very different times (the
+/// straggler-heavy mix continuous batching exists for).
+pub struct MockBackend {
+    sp: SchedSpec,
+    buckets: Vec<usize>,
+    hist: Vec<Vec<i32>>,
+    /// EOS-logit pressure per generated token (0.0 = near-never ends).
+    pub eos_bias: f32,
+}
+
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    h ^ (h >> 33)
+}
+
+impl MockBackend {
+    pub fn new(sp: SchedSpec, buckets: Vec<usize>, eos_bias: f32) -> MockBackend {
+        let hist = vec![Vec::new(); sp.lanes];
+        MockBackend { sp, buckets, hist, eos_bias }
+    }
+
+    /// Power-of-two buckets from 16 up to and including max_seq (the same
+    /// ladder shape the AOT harness emits).
+    pub fn default_buckets(max_seq: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut t = 16;
+        while t < max_seq {
+            out.push(t);
+            t *= 2;
+        }
+        out.push(max_seq);
+        out
+    }
+
+    fn row(&self, hist: &[i32]) -> (Vec<f32>, Vec<f32>) {
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for &t in hist {
+            h = (h ^ (t as u32 as u64)).wrapping_mul(0x1000_0000_01B3);
+        }
+        // Per-sequence EOS rate from the first few tokens: different
+        // rollouts finish at very different lengths (stragglers).
+        let head = hist.iter().take(4).fold(0u64, |a, &t| {
+            (a ^ (t as u32 as u64)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        });
+        let rate = 0.5 + (mix(head) % 1000) as f32 / 666.0; // [0.5, 2.0)
+        let mut logits = vec![0.0f32; self.sp.vocab];
+        for (j, l) in logits.iter_mut().enumerate() {
+            *l = (mix(h ^ (j as u64).wrapping_mul(0x9E37_79B9)) % 4000) as f32 / 1000.0 - 2.0;
+        }
+        logits[self.sp.eos_id as usize] += self.eos_bias * rate * hist.len() as f32;
+        let mut hidden = vec![0.0f32; self.sp.d_model];
+        for (k, x) in hidden.iter_mut().enumerate() {
+            *x = (mix(h ^ (k as u64).wrapping_mul(0x85EB_CA6B)) % 2000) as f32 / 1000.0 - 1.0;
+        }
+        (logits, hidden)
+    }
+}
+
+impl DecodeBackend for MockBackend {
+    fn spec(&self) -> SchedSpec {
+        self.sp
+    }
+
+    fn decode(&mut self, toks: &[i32], pos: &[usize]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, v, d) = (self.sp.lanes, self.sp.vocab, self.sp.d_model);
+        anyhow::ensure!(toks.len() == b && pos.len() == b, "lane-shaped inputs required");
+        let mut logits = vec![0.0f32; b * v];
+        let mut hidden = vec![0.0f32; b * d];
+        for l in 0..b {
+            // Writing at pos then attending to <= pos means the effective
+            // history is the prefix through pos; anything the scheduler
+            // left beyond it is stale garbage a real cache would mask, so
+            // model it by truncation. Feeding past the written frontier
+            // would *read* garbage — that is a scheduler bug, so error.
+            anyhow::ensure!(
+                pos[l] <= self.hist[l].len(),
+                "lane {l} feeds position {} past its KV frontier {}",
+                pos[l],
+                self.hist[l].len()
+            );
+            self.hist[l].truncate(pos[l]);
+            self.hist[l].push(toks[l]);
+            let (lg, hd) = self.row(&self.hist[l]);
+            logits[l * v..(l + 1) * v].copy_from_slice(&lg);
+            hidden[l * d..(l + 1) * d].copy_from_slice(&hd);
+        }
+        Ok((logits, hidden))
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill_kv(
+        &mut self,
+        rows: &[&[i32]],
+        t_b: usize,
+        assign: &[Option<usize>],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (v, d) = (self.sp.vocab, self.sp.d_model);
+        anyhow::ensure!(rows.len() <= self.sp.lanes, "more unique rows than lanes");
+        anyhow::ensure!(assign.len() == self.sp.lanes, "lane-shaped assign required");
+        for r in rows {
+            anyhow::ensure!(r.len() <= t_b, "prompt longer than bucket {t_b}");
+        }
+        let mut logits = vec![0.0f32; rows.len() * t_b * v];
+        let mut hidden = vec![0.0f32; rows.len() * t_b * d];
+        for (ri, r) in rows.iter().enumerate() {
+            for pos in 0..r.len() {
+                let (lg, hd) = self.row(&r[..=pos]);
+                logits[(ri * t_b + pos) * v..(ri * t_b + pos + 1) * v].copy_from_slice(&lg);
+                hidden[(ri * t_b + pos) * d..(ri * t_b + pos + 1) * d].copy_from_slice(&hd);
+            }
+        }
+        for (l, a) in assign.iter().enumerate() {
+            if let Some(ri) = *a {
+                anyhow::ensure!(ri < rows.len(), "assign row out of range");
+                self.hist[l] = rows[ri].to_vec();
+            }
+        }
+        Ok((logits, hidden))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp() -> SchedSpec {
+        SchedSpec { lanes: 4, max_seq: 64, vocab: 16, d_model: 8, pad_id: 0, bos_id: 1, eos_id: 2 }
+    }
+
+    fn reqs(n: usize, seed: u64) -> Vec<GenRequest> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let len = 1 + r.usize(10);
+                let mut prompt = vec![1i32];
+                prompt.extend((1..len).map(|_| 3 + r.usize(12) as i32));
+                let rng = rollout_rng(seed ^ 0x5EED, i as u64);
+                GenRequest { prompt, rng, prompt_key: i as u64 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rollout_rng_streams_are_distinct_and_stable() {
+        let mut a = rollout_rng(7, 0);
+        let mut a2 = rollout_rng(7, 0);
+        let mut b = rollout_rng(7, 1);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        assert_ne!(rollout_rng(7, 0).next_u64(), b.next_u64());
+        assert_ne!(rollout_rng(8, 0).next_u64(), rollout_rng(7, 0).next_u64());
+    }
+
+    #[test]
+    fn continuous_matches_static_reference() {
+        let sp = sp();
+        let opts = GenOpts { max_new: 20, temperature: 1.0, commit_interval: 8 };
+        let requests = reqs(9, 3);
+        let mut st = GenStats::default();
+        let mut ct = GenStats::default();
+        let a = run_static_reference(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut st,
+        )
+        .unwrap();
+        let b = run_continuous(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut ct,
+        )
+        .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.sampled_probs, y.sampled_probs);
+            assert_eq!(x.hidden_rows, y.hidden_rows);
+            assert_eq!(x.finish, y.finish);
+        }
+        assert!(ct.prefill_calls > 0);
+        assert!(ct.decode_steps <= st.decode_steps);
+    }
+
+    #[test]
+    fn mock_rejects_feeding_past_frontier() {
+        let sp = sp();
+        let mut m = MockBackend::new(sp, vec![], 0.0);
+        // Position 1 before position 0 was ever written.
+        let err = m.decode(&[3, 0, 0, 0], &[1, 0, 0, 0]).unwrap_err();
+        assert!(err.to_string().contains("KV frontier"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_oversized_prompts_rejected() {
+        let sp = sp();
+        let opts = GenOpts::default();
+        let mut m = MockBackend::new(sp, vec![], 0.0);
+        let bad = vec![GenRequest { prompt: vec![], rng: Rng::new(1), prompt_key: 0 }];
+        assert!(run_continuous(&mut m, &bad, &opts, &mut GenStats::default()).is_err());
+        let long =
+            vec![GenRequest { prompt: vec![1; sp.max_seq], rng: Rng::new(1), prompt_key: 0 }];
+        assert!(run_continuous(&mut m, &long, &opts, &mut GenStats::default()).is_err());
+        assert!(run_static_reference(&mut m, &[], &opts, &mut GenStats::default()).is_err());
+    }
+}

@@ -193,6 +193,44 @@ impl ModelSpec {
         Ok((name, t))
     }
 
+    /// Sequence lengths of the available *generation-side* prompt-prefill
+    /// artifacts (`prefill_kv_{T}`), ascending. These are distinct from
+    /// the validator's `prefill_{T}` ladder: they additionally take the
+    /// decode KV cache plus lane-routing inputs and install the prompt's
+    /// per-layer k/v projections into assigned lanes.
+    pub fn prefill_kv_lengths(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|(name, _)| name.strip_prefix("prefill_kv_").and_then(|t| t.parse().ok()))
+            .filter(|&t| t > 0 && t <= self.max_seq)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Does `decode_step` use the vectored per-lane position contract
+    /// (`pos: i32[batch_infer]`)? The continuous scheduler retires and
+    /// refills lanes independently, so lanes are not position-synchronized;
+    /// artifacts generated before that contract carry a scalar `pos` and
+    /// only support the static reference path.
+    pub fn decode_pos_per_lane(&self) -> bool {
+        self.artifact("decode_step")
+            .ok()
+            .and_then(|m| m.inputs.iter().find(|s| s.name == "pos"))
+            .map(|s| s.shape == vec![self.batch_infer])
+            .unwrap_or(false)
+    }
+
+    /// Can the continuous-batching generation path run on these artifacts?
+    /// Needs the vectored-`pos` decode contract and at least one
+    /// `prefill_kv_{T}` bucket; otherwise the runtime falls back to the
+    /// static reference path (regenerate with `make artifacts`).
+    pub fn supports_continuous(&self) -> bool {
+        self.decode_pos_per_lane() && !self.prefill_kv_lengths().is_empty()
+    }
+
     /// Total bytes of one parameter set (f32) — what SHARDCAST broadcasts.
     pub fn params_bytes(&self) -> usize {
         self.n_params * 4
@@ -247,6 +285,39 @@ mod tests {
         assert_eq!(s.prefill_artifact_for(65).unwrap(), ("prefill_128".to_string(), 128));
         assert_eq!(s.prefill_artifact_for(200).unwrap(), ("prefill".to_string(), 256));
         assert!(s.prefill_artifact_for(257).is_err());
+    }
+
+    #[test]
+    fn continuous_support_detection() {
+        let mut s = ModelSpec::parse(SAMPLE).unwrap();
+        let meta = s.artifacts[0].1.clone();
+        // Seed-era artifacts: no prefill_kv ladder, no decode_step.
+        assert!(s.prefill_kv_lengths().is_empty());
+        assert!(!s.decode_pos_per_lane());
+        assert!(!s.supports_continuous());
+        // prefill_kv ladder alone is not enough (junk/overlong ignored)...
+        s.artifacts.push(("prefill_kv_64".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_kv_128".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_kv_9999".to_string(), meta.clone()));
+        s.artifacts.push(("prefill_kv_x".to_string(), meta.clone()));
+        assert_eq!(s.prefill_kv_lengths(), vec![64, 128]);
+        // ...and the generation ladder must not leak into the validator's.
+        assert!(s.prefill_lengths().is_empty());
+        assert!(!s.supports_continuous());
+        // Legacy scalar-pos decode_step: still static-only.
+        let mut legacy = meta.clone();
+        legacy.inputs = vec![TensorSig { name: "pos".into(), shape: vec![], dtype: "i32".into() }];
+        s.artifacts.push(("decode_step".to_string(), legacy));
+        assert!(!s.decode_pos_per_lane());
+        assert!(!s.supports_continuous());
+        // Vectored per-lane pos ([batch_infer]) completes the contract.
+        s.artifacts.retain(|(n, _)| n != "decode_step");
+        let mut vectored = meta;
+        vectored.inputs =
+            vec![TensorSig { name: "pos".into(), shape: vec![16], dtype: "i32".into() }];
+        s.artifacts.push(("decode_step".to_string(), vectored));
+        assert!(s.decode_pos_per_lane());
+        assert!(s.supports_continuous());
     }
 
     #[test]

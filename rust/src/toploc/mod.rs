@@ -62,6 +62,27 @@
 //! covering each call (`ModelSpec::prefill_artifact_for`), falling back
 //! to the full frame when only `prefill` is shipped — packing still wins
 //! there by filling all lanes and issuing fewer calls.
+//!
+//! # Generation side: scheduling never reaches the wire
+//!
+//! The commitments this module audits are produced by the workers'
+//! continuous-batching decode scheduler (`runtime::scheduler`, `gen-refill`
+//! knob): sequences share `batch_infer` lanes, retire on EOS, and prompts
+//! are prefilled straight into the KV cache (one bucketed `prefill_kv_{T}`
+//! call per refill wave, GRPO groups sharing one prompt forward). None of
+//! that is observable here, by construction: sampling draws from
+//! per-rollout RNG streams keyed by `(gen_seed, rollout_index)`
+//! (`runtime::scheduler::rollout_rng`), and each rollout's tokens,
+//! `sampled_probs` and commit-grid hidden rows are functions of its own
+//! prompt and stream only — byte-identical whether the worker ran the
+//! continuous engine, the static reference engine, or either under
+//! different load. That lane-invariance is what keeps the §2.3.3
+//! fixed-sampling check *slashable*: the validator recomputes a rollout
+//! without knowing (or caring) how the worker's scheduler packed it.
+//! Commit-grid rows for prompt positions come from the prefill forward
+//! rather than per-token decode; the two agree exactly up to kernel-shape
+//! fp rounding, which the stage-4 tolerances absorb — the same argument
+//! the validator's own bucketed `prefill_{T}` ladder already relies on.
 
 pub mod commitment;
 pub mod pipeline;

@@ -189,10 +189,12 @@ pub struct BenchFigure {
 
 /// Is a smaller value of this metric an improvement? Keyed off the naming
 /// conventions the benches actually use: `*_waste`, `*_fraction`/`*_frac`,
-/// `*_calls_*`, `*_overhead*` and raw `*_ns` timings shrink when things
-/// get better; throughputs, speedups and gains grow.
+/// `*_calls_*`, `*_overhead*`, raw `*_ns` timings, and the generation
+/// scheduler's `*_steps` / `*_prompts` work counts (decode_steps,
+/// prefill_calls, prefill_prompts in `BENCH_generation.json`) shrink when
+/// things get better; throughputs, speedups, occupancies and gains grow.
 fn lower_is_better(key: &str) -> bool {
-    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns"]
+    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts"]
         .iter()
         .any(|marker| key.contains(marker))
 }
@@ -346,5 +348,18 @@ mod tests {
         let empty = Json::parse(r#"{"bench":"x","metrics":{},"results":[]}"#).unwrap();
         assert!(compare_bench_docs(&empty, &doc(2.0, 0.1, 100.0)).is_empty());
         assert!(compare_bench_docs(&doc(0.0, 0.0, 0.0), &doc(2.0, 0.1, 100.0)).is_empty());
+    }
+
+    #[test]
+    fn generation_figures_have_directions() {
+        // BENCH_generation.json figures: work counts shrink when the
+        // scheduler improves, throughput/occupancy/speedup grow.
+        let work = ["decode_steps_continuous", "prefill_calls", "prefill_prompts"];
+        for key in work {
+            assert!(lower_is_better(key), "{key}");
+        }
+        for key in ["refill_speedup", "continuous_occupancy", "rollouts_per_s_continuous"] {
+            assert!(!lower_is_better(key), "{key}");
+        }
     }
 }

@@ -98,6 +98,7 @@ impl Fixture {
                     group_id_base(id.address, step, idx),
                 )
                 .unwrap()
+                .0
         };
         let mut honest = Vec::new();
         for seed in [11u64, 22, 33] {

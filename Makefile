@@ -28,4 +28,10 @@ pytest:
 tier1:
 	cd rust && cargo build --release && cargo test -q
 
-.PHONY: artifacts pytest tier1
+# swarmlint: the from-scratch determinism / slashability gate over the
+# trust-critical modules (rust/src/analysis; rules documented there).
+# Binding in CI — run it locally before pushing.
+lint:
+	cd rust && cargo run --release --bin swarmlint
+
+.PHONY: artifacts pytest tier1 lint

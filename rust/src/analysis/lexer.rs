@@ -1,0 +1,425 @@
+//! A total, lossless Rust token scanner.
+//!
+//! Built from scratch (no syn/proc-macro2 offline) for the swarmlint rules
+//! engine, which only needs token-level structure: identifiers, literals,
+//! comments (kept as tokens — annotations live in them), and punctuation.
+//!
+//! Two properties the rules engine relies on, both tested:
+//!
+//! - **Total**: every input produces a token stream; malformed or
+//!   unterminated constructs degrade into best-effort tokens rather than
+//!   errors. The linter must never panic on the tree it audits.
+//! - **Lossless**: concatenating `text` over all tokens (whitespace
+//!   included) reproduces the input exactly, which is what lets fixture
+//!   tests and the roundtrip property pin the scanner's behavior on the
+//!   classic traps: raw strings, nested block comments, lifetimes vs char
+//!   literals, and macro bodies.
+
+/// Token class. `Ident` covers keywords too — the rules engine matches on
+/// text where it cares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// `'a`, `'static`, loop labels — the quote plus identifier chars.
+    Lifetime,
+    /// `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// `"..."`, `b"..."` (escapes kept verbatim).
+    Str,
+    /// `r"..."`, `r#"..."#`, `br#"..."#` (any guard depth).
+    RawStr,
+    Num,
+    LineComment,
+    BlockComment,
+    Whitespace,
+    /// Single punctuation character (compound operators arrive as runs).
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Token {
+    /// Significant tokens are what the rules walk; comments are read
+    /// separately for annotations.
+    pub fn is_significant(&self) -> bool {
+        !matches!(
+            self.kind,
+            TokKind::Whitespace | TokKind::LineComment | TokKind::BlockComment
+        )
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+struct Scanner {
+    cs: Vec<char>,
+    i: usize,
+    line: u32,
+}
+
+impl Scanner {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self, out: &mut String) {
+        if let Some(&c) = self.cs.get(self.i) {
+            if c == '\n' {
+                self.line += 1;
+            }
+            out.push(c);
+            self.i += 1;
+        }
+    }
+
+    fn bump_while(&mut self, out: &mut String, f: impl Fn(char) -> bool) {
+        while self.peek(0).map(&f).unwrap_or(false) {
+            self.bump(out);
+        }
+    }
+
+    fn line_comment(&mut self, out: &mut String) {
+        self.bump_while(out, |c| c != '\n');
+    }
+
+    fn block_comment(&mut self, out: &mut String) {
+        // Consume the opening `/*`, then balance nested pairs. EOF inside
+        // a comment terminates the token (total, not an error).
+        self.bump(out);
+        self.bump(out);
+        let mut depth = 1usize;
+        while depth > 0 && self.i < self.cs.len() {
+            if self.peek(0) == Some('/') && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump(out);
+                self.bump(out);
+            } else if self.peek(0) == Some('*') && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump(out);
+                self.bump(out);
+            } else {
+                self.bump(out);
+            }
+        }
+    }
+
+    /// `"..."` with backslash escapes; the opening quote is next.
+    fn string(&mut self, out: &mut String) {
+        self.bump(out);
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump(out);
+                self.bump(out);
+            } else if c == '"' {
+                self.bump(out);
+                break;
+            } else {
+                self.bump(out);
+            }
+        }
+    }
+
+    /// `#`-guarded raw string; `self.i` is at the first `#` or the quote.
+    fn raw_string(&mut self, out: &mut String) {
+        let mut guards = 0usize;
+        while self.peek(0) == Some('#') {
+            guards += 1;
+            self.bump(out);
+        }
+        self.bump(out); // opening quote
+        loop {
+            match self.peek(0) {
+                None => break,
+                Some('"') => {
+                    self.bump(out);
+                    let mut seen = 0usize;
+                    while seen < guards && self.peek(0) == Some('#') {
+                        seen += 1;
+                        self.bump(out);
+                    }
+                    if seen == guards {
+                        break;
+                    }
+                }
+                Some(_) => self.bump(out),
+            }
+        }
+    }
+
+    /// After an opening `'` that is known to start a char literal.
+    fn char_literal(&mut self, out: &mut String) {
+        self.bump(out);
+        if self.peek(0) == Some('\\') {
+            self.bump(out);
+            self.bump(out);
+        } else {
+            self.bump(out);
+        }
+        // `'\u{1F600}'` and friends: anything up to the closing quote.
+        self.bump_while(out, |c| c != '\'');
+        self.bump(out);
+    }
+
+    fn number(&mut self, out: &mut String) {
+        let radix_prefix = self.peek(0) == Some('0')
+            && matches!(self.peek(1), Some('x') | Some('o') | Some('b'));
+        if radix_prefix {
+            self.bump(out);
+            self.bump(out);
+            self.bump_while(out, |c| c.is_ascii_hexdigit() || c == '_');
+        } else {
+            self.bump_while(out, |c| c.is_ascii_digit() || c == '_');
+            // Fractional part only when followed by a digit (`0..n` and
+            // `1.max(2)` must leave the dot alone).
+            let frac = self.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false);
+            if self.peek(0) == Some('.') && frac {
+                self.bump(out);
+                self.bump_while(out, |c| c.is_ascii_digit() || c == '_');
+            }
+            // Exponent, optionally signed (`1e3`, `1e-3`, `2.5E+10`).
+            let exp_digit_at = match self.peek(1) {
+                Some('+') | Some('-') => 2,
+                _ => 1,
+            };
+            if matches!(self.peek(0), Some('e') | Some('E'))
+                && self.peek(exp_digit_at).map(|c| c.is_ascii_digit()).unwrap_or(false)
+            {
+                for _ in 0..exp_digit_at {
+                    self.bump(out);
+                }
+                self.bump_while(out, |c| c.is_ascii_digit() || c == '_');
+            }
+        }
+        // Type suffix (`u64`, `f32`, `usize`).
+        self.bump_while(out, is_ident_continue);
+    }
+}
+
+/// Tokenize `src` completely; never fails.
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut s = Scanner { cs: src.chars().collect(), i: 0, line: 1 };
+    let mut toks: Vec<Token> = Vec::new();
+    while s.i < s.cs.len() {
+        let line = s.line;
+        let mut text = String::new();
+        let c = match s.peek(0) {
+            Some(c) => c,
+            None => break,
+        };
+        let kind = if c.is_whitespace() {
+            s.bump_while(&mut text, char::is_whitespace);
+            TokKind::Whitespace
+        } else if c == '/' && s.peek(1) == Some('/') {
+            s.line_comment(&mut text);
+            TokKind::LineComment
+        } else if c == '/' && s.peek(1) == Some('*') {
+            s.block_comment(&mut text);
+            TokKind::BlockComment
+        } else if c == '"' {
+            s.string(&mut text);
+            TokKind::Str
+        } else if c == '\'' {
+            // `'a` / `'static` are lifetimes; `'x'` / `'\n'` are chars.
+            // Disambiguate with two characters of lookahead: a quote two
+            // ahead (or a backslash next) means char literal.
+            let next = s.peek(1);
+            let is_char = match next {
+                Some('\\') => true,
+                Some(n) if is_ident_continue(n) => s.peek(2) == Some('\''),
+                Some(_) => true, // `'+'`, `' '`, ...
+                None => true,
+            };
+            if is_char {
+                s.char_literal(&mut text);
+                TokKind::Char
+            } else {
+                s.bump(&mut text);
+                s.bump_while(&mut text, is_ident_continue);
+                TokKind::Lifetime
+            }
+        } else if c.is_ascii_digit() {
+            s.number(&mut text);
+            TokKind::Num
+        } else if is_ident_start(c) {
+            s.bump_while(&mut text, is_ident_continue);
+            // An identifier can actually be the prefix of a literal:
+            // `r"…"`, `r#"…"#`, `br#"…"#`, `b"…"`, `b'x'`, or a raw
+            // identifier `r#name`.
+            let raw_prefix = text == "r" || text == "br";
+            if raw_prefix && s.peek(0) == Some('"') {
+                s.raw_string(&mut text);
+                TokKind::RawStr
+            } else if raw_prefix && s.peek(0) == Some('#') {
+                let mut g = 0usize;
+                while s.peek(g) == Some('#') {
+                    g += 1;
+                }
+                if s.peek(g) == Some('"') {
+                    s.raw_string(&mut text);
+                    TokKind::RawStr
+                } else {
+                    // Raw identifier `r#try`: keep scanning ident chars.
+                    s.bump(&mut text);
+                    s.bump_while(&mut text, is_ident_continue);
+                    TokKind::Ident
+                }
+            } else if text == "b" && s.peek(0) == Some('"') {
+                s.string(&mut text);
+                TokKind::Str
+            } else if text == "b" && s.peek(0) == Some('\'') {
+                s.char_literal(&mut text);
+                TokKind::Char
+            } else {
+                TokKind::Ident
+            }
+        } else {
+            s.bump(&mut text);
+            TokKind::Punct
+        };
+        toks.push(Token { kind, text, line });
+    }
+    toks
+}
+
+/// Lossless-ness check used by tests: token texts concatenate back to the
+/// exact input.
+pub fn rejoin(toks: &[Token]) -> String {
+    toks.iter().map(|t| t.text.as_str()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .into_iter()
+            .filter(Token::is_significant)
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn roundtrips_simple_source() {
+        let src = "fn main() {\n    let x = 1 + 2; // done\n}\n";
+        assert_eq!(rejoin(&lex(src)), src);
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_guards() {
+        let src = r##"let s = r#"contains "quotes" and \ backslash"#;"##;
+        let ts = kinds(src);
+        let raw = ts.iter().find(|(k, _)| *k == TokKind::RawStr).unwrap();
+        assert!(raw.1.starts_with("r#\""));
+        assert!(raw.1.ends_with("\"#"));
+        assert_eq!(rejoin(&lex(src)), src);
+    }
+
+    #[test]
+    fn raw_string_contents_are_not_code() {
+        // An `.unwrap()` inside a raw string must be literal text, not an
+        // Ident token the rules engine could trip on.
+        let src = r#"let s = r"x.unwrap()";"#;
+        let ts = kinds(src);
+        assert!(!ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "unwrap"));
+    }
+
+    #[test]
+    fn nested_block_comments_balance() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        let ts = lex(src);
+        let comment = ts.iter().find(|t| t.kind == TokKind::BlockComment).unwrap();
+        assert_eq!(comment.text, "/* outer /* inner */ still comment */");
+        assert_eq!(rejoin(&ts), src);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let n = '\\n'; c }";
+        let ts = kinds(src);
+        let lifetimes: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        let chars: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Char)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        assert_eq!(chars, vec!["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn static_lifetime_and_labels() {
+        let src = "let x: &'static str = s; 'outer: loop { break 'outer; }";
+        let ts = kinds(src);
+        let lifetimes: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'static", "'outer", "'outer"]);
+    }
+
+    #[test]
+    fn macro_bodies_lex_as_tokens() {
+        let src = "crate::warn!(\"pool\", \"job {} panicked\", id); panic!(\"boom\");";
+        let ts = kinds(src);
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "warn"));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "panic"));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Str && t.contains("panicked")));
+        assert_eq!(rejoin(&lex(src)), src);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_range_or_method_dots() {
+        let src = "for i in 0..10 { let y = 1.max(2); let f = 2.5_f32; let e = 1e-3; }";
+        let ts = kinds(src);
+        let nums: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "1", "2", "2.5_f32", "1e-3"]);
+        assert_eq!(rejoin(&lex(src)), src);
+    }
+
+    #[test]
+    fn byte_literals_and_hex() {
+        let src = "let m = b\"I2SE\"; let c = b'+'; let h = 0xFF_u32;";
+        let ts = kinds(src);
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Str && t == "b\"I2SE\""));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Char && t == "b'+'"));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Num && t == "0xFF_u32"));
+    }
+
+    #[test]
+    fn unterminated_constructs_do_not_panic() {
+        for src in ["\"abc", "/* never closed", "r#\"open", "'", "b\"", "1e-"] {
+            let ts = lex(src);
+            assert_eq!(rejoin(&ts), src, "lossless on {src:?}");
+        }
+    }
+
+    #[test]
+    fn line_tracking_counts_comment_newlines() {
+        let src = "a\n/* 1\n2\n3 */\nb";
+        let ts = lex(src);
+        let b = ts.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 5);
+    }
+}

@@ -1,0 +1,117 @@
+//! Whole-crate lock-acquisition map (rule `lock-order`).
+//!
+//! Deadlock prevention here is hand-rolled — `util::pool`'s condvar join,
+//! `coordinator::validation`'s bounded ingest queue, the shardcast relay
+//! table — so the invariant "locks nest only along the declared order" is
+//! enforced by this map instead of a runtime detector. Each file's scan
+//! (see `rules::scan_locks`) yields its `.lock()` sites, classed as
+//! `module::receiver`, plus every *nested* acquisition observed while
+//! another guard is lexically live. This module turns those edges into
+//! violations when they contradict [`super::rules::Config::lock_order`]:
+//!
+//! - nesting the **same class** twice is always a violation (self-deadlock
+//!   on a non-reentrant `std::sync::Mutex`);
+//! - an edge between declared classes must step **strictly forward** in
+//!   the order list;
+//! - an edge touching an **undeclared** class is a violation — declaring
+//!   the hierarchy is part of adding a nested lock.
+//!
+//! The scan is lexical: a guard held across a call into another module's
+//! locking code is invisible. The rendered map is the audit surface for
+//! those seams — reviewers can see every class a function touches.
+
+use super::rules::{apply_suppressions_pub, FileReport, LockEdge, Rule, Violation};
+
+/// Why an edge is illegal, or `None` when it follows the declared order.
+pub fn edge_problem(e: &LockEdge, order: &[String]) -> Option<String> {
+    if e.held == e.acquired {
+        return Some(format!(
+            "nested acquisition of the same lock class `{}` (self-deadlock)",
+            e.held
+        ));
+    }
+    let held = order.iter().position(|c| c == &e.held);
+    let acquired = order.iter().position(|c| c == &e.acquired);
+    match (held, acquired) {
+        (Some(h), Some(a)) if h < a => None,
+        (Some(_), Some(_)) => Some(format!(
+            "`{}` acquired while `{}` is held — against the declared lock order",
+            e.acquired, e.held
+        )),
+        _ => Some(format!(
+            "nested acquisition `{}` -> `{}` uses a class missing from the declared lock order",
+            e.held, e.acquired
+        )),
+    }
+}
+
+/// Turn illegal edges into (suppressible) `lock-order` violations, in
+/// place. `allow` annotations for lock-order are line-targeted only: the
+/// line is the inner acquisition's.
+pub fn check_edges(reports: &mut [FileReport], order: &[String]) {
+    for r in reports.iter_mut() {
+        let mut found: Vec<Violation> = Vec::new();
+        for e in &r.lock_edges {
+            if let Some(message) = edge_problem(e, order) {
+                found.push(Violation {
+                    file: r.file.clone(),
+                    line: e.line,
+                    rule: Rule::LockOrder,
+                    message,
+                    suppressed: false,
+                    justification: None,
+                });
+            }
+        }
+        if !found.is_empty() {
+            apply_suppressions_pub(&mut found, &mut r.annotations, &[]);
+            r.violations.extend(found);
+            r.violations.sort_by_key(|v| (v.line, v.rule));
+        }
+    }
+}
+
+/// Human-readable whole-crate map: per-file acquisition counts by class,
+/// then every nested edge with its status.
+pub fn render_map(reports: &[FileReport], order: &[String]) -> String {
+    let mut out = String::new();
+    let total: usize = reports.iter().map(|r| r.lock_sites.len()).sum();
+    let files = reports.iter().filter(|r| !r.lock_sites.is_empty()).count();
+    out.push_str(&format!("lock map: {total} acquisition sites in {files} files\n"));
+    for r in reports {
+        if r.lock_sites.is_empty() {
+            continue;
+        }
+        let mut by_class: Vec<(String, usize)> = Vec::new();
+        for s in &r.lock_sites {
+            match by_class.iter_mut().find(|(c, _)| c == &s.class) {
+                Some((_, n)) => *n += 1,
+                None => by_class.push((s.class.clone(), 1)),
+            }
+        }
+        let rendered: Vec<String> =
+            by_class.iter().map(|(c, n)| format!("{c} x{n}")).collect();
+        out.push_str(&format!("  {}: {}\n", r.file, rendered.join(", ")));
+    }
+    let mut any = false;
+    for r in reports {
+        for e in &r.lock_edges {
+            if !any {
+                out.push_str("nested acquisitions:\n");
+                any = true;
+            }
+            let status = match edge_problem(e, order) {
+                None => "ok (declared order)".to_string(),
+                Some(m) => format!("VIOLATION: {m}"),
+            };
+            out.push_str(&format!(
+                "  {}:{} {} -> {} [{}]\n",
+                r.file, e.line, e.held, e.acquired, status
+            ));
+        }
+    }
+    if !any {
+        out.push_str("nested acquisitions: none\n");
+    }
+    out
+}

@@ -1,0 +1,126 @@
+//! `swarmlint` — a from-scratch static-analysis gate for the swarm's
+//! trust-critical paths.
+//!
+//! Every trust guarantee in this repo rests on invariants no compiler
+//! checks: TOPLOC slashing (paper §2.3.3) is only sound if validator
+//! verdicts and sampled tokens are **bit-for-bit reproducible**, and the
+//! signed-envelope gate is only sound if untrusted bytes can never crash
+//! the validator. Earlier PRs enforced these by hand — PR 1 fixed
+//! `HashSet` iteration feeding group ids, PR 2 converted decode panics on
+//! hostile rollout files into reject verdicts — but each was a one-off
+//! audit. This module makes the audit mechanical: a total, lossless Rust
+//! [`lexer`], a token-level [`rules`] engine, a whole-crate [`lockmap`],
+//! and the `swarmlint` binary that scans `rust/src` and fails CI on any
+//! unsuppressed violation.
+//!
+//! # The rules
+//!
+//! Rules R1–R4 apply inside the *trust-critical modules* declared in
+//! [`rules::repo_config`] (`toploc`, `coordinator/validation`,
+//! `rl/rollout_file`, `verifier`, `tasks`, `runtime/scheduler`,
+//! `util/rng`); R5 applies crate-wide. Test modules are exempt.
+//!
+//! - **R1 `unordered-iter`** — no iteration over `HashMap`/`HashSet`.
+//!   Hash iteration order is unspecified and differs across processes
+//!   (and std versions), so anything it feeds — serialized bytes, hashed
+//!   fingerprints, verdict ordering — diverges between worker and
+//!   validator. The PR-1 bug class: group ids derived from a `HashSet`
+//!   walk validated locally and failed remotely. Use `BTreeMap`/`BTreeSet`
+//!   or sort before iterating.
+//! - **R2 `wall-clock`** — no `SystemTime`/`Instant` (or entropy sources:
+//!   `thread_rng`, `from_entropy`, `getrandom`, and this repo's `now_ms`)
+//!   in trust modules. A commitment, wire byte, or RNG seed derived from
+//!   the clock cannot be recomputed by the validator; all randomness must
+//!   flow from [`crate::util::rng::Rng`] seeded constructors (`new` /
+//!   `fold`).
+//! - **R3 `panic-path`** — no `.unwrap()` / `.expect(..)` /
+//!   `panic!`-family macros, nor direct indexing of `&[u8]` parameters,
+//!   in trust-module code. Untrusted submission bytes must surface as a
+//!   reject `Verdict`, never a panic: a panicking validator is an
+//!   unslashable denial of service. This is the PR-2 bug class (decode
+//!   panics on truncated rollout files). The mutex-poison idiom
+//!   (`.lock().unwrap()` and friends) is exempt — poisoning means a
+//!   sibling validator thread already panicked, which the
+//!   `util::pool` panic firewall converts to an engine-failure verdict.
+//! - **R4 `float-fold`** — no `.sum()` / `.product()` in trust modules.
+//!   Float addition is non-associative; an accumulation whose order is
+//!   not pinned can flip a tolerance comparison between worker and
+//!   validator. Float folds go through [`crate::util::numeric`]
+//!   (`fold_f32` / `fold_f64`, documented left-to-right); integer sums
+//!   are order-independent and get annotated instead.
+//! - **R5 `lock-order`** — every `.lock()` site is classed as
+//!   `module::receiver` and nested acquisitions (a lock taken while a
+//!   guard is lexically live) must follow the declared hierarchy in
+//!   [`rules::repo_config`]. Same-class nesting is always flagged
+//!   (non-reentrant mutex self-deadlock); undeclared classes in an edge
+//!   are flagged too. See [`lockmap`] for the map rendering.
+//!
+//! # Suppressions
+//!
+//! A violation is suppressible only by an inline annotation that names
+//! the rule and justifies itself:
+//!
+//! ```text
+//! // swarmlint: allow(panic-path) — slot invariant: every pool job
+//! // writes its slot before wait_idle returns.
+//! ```
+//!
+//! The annotation governs the line it trails, or — when written on its
+//! own line — the first code line below it. The `allow-fn(<rule>)` form,
+//! placed above a `fn` item, covers that whole function (used for byte
+//! parsers whose every index is bounds-guarded, where per-line noise
+//! would drown the signal). A justification is mandatory: an annotation
+//! without one (or naming an unknown rule) is itself a `bad-annotation`
+//! violation, which nothing can suppress. The binary prints a summary
+//! table of every suppression so review sees the full waiver list.
+//!
+//! # Running
+//!
+//! `make lint` or `cargo run --release --bin swarmlint` (CI runs it as a
+//! binding job). Exit code 1 on any unsuppressed violation, with the
+//! whole-crate lock map and the suppression table on stdout.
+
+pub mod lexer;
+pub mod lockmap;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+/// All `.rs` files under `root`, sorted by relative path so reports and
+/// exit behavior are deterministic.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Analyze every file under `root` (the crate's `src/` directory) with
+/// the given config, including cross-file lock-order checking.
+pub fn analyze_tree(
+    root: &Path,
+    cfg: &rules::Config,
+) -> std::io::Result<Vec<rules::FileReport>> {
+    let mut reports = Vec::new();
+    for path in collect_rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        reports.push(rules::analyze_source(&rel, &src, cfg));
+    }
+    lockmap::check_edges(&mut reports, &cfg.lock_order);
+    Ok(reports)
+}

@@ -1,0 +1,894 @@
+//! The swarmlint rules engine: token-stream checks for the determinism and
+//! slashability invariants of the trust-critical modules.
+//!
+//! See [`crate::analysis`] for the rule catalogue and the annotation
+//! syntax. Everything here is heuristic *token-level* analysis — no type
+//! information — tuned to this repository's idioms; the limitations of
+//! each check are documented on its scan function.
+
+use super::lexer::{lex, TokKind, Token};
+
+/// The rule catalogue. `BadAnnotation` is the meta-rule: a suppression
+/// comment that does not parse (or lacks a justification) is itself a
+/// violation and can never be suppressed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    UnorderedIter,
+    WallClock,
+    PanicPath,
+    FloatFold,
+    LockOrder,
+    BadAnnotation,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::PanicPath => "panic-path",
+            Rule::FloatFold => "float-fold",
+            Rule::LockOrder => "lock-order",
+            Rule::BadAnnotation => "bad-annotation",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "unordered-iter" => Some(Rule::UnorderedIter),
+            "wall-clock" => Some(Rule::WallClock),
+            "panic-path" => Some(Rule::PanicPath),
+            "float-fold" => Some(Rule::FloatFold),
+            "lock-order" => Some(Rule::LockOrder),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+    /// True when a matching `swarmlint: allow` annotation covers it.
+    pub suppressed: bool,
+    /// The annotation's justification, when suppressed.
+    pub justification: Option<String>,
+}
+
+/// A parsed `// swarmlint: allow(<rules>) — <justification>` comment.
+#[derive(Clone, Debug)]
+pub struct Annotation {
+    /// Line of the comment itself.
+    pub line: u32,
+    /// Line the annotation governs: its own line for a trailing comment,
+    /// else the first code line below it.
+    pub target_line: u32,
+    /// `allow-fn` form: covers the whole function starting at the target
+    /// line (for e.g. byte parsers whose every index is bounds-guarded).
+    pub fn_scoped: bool,
+    pub rules: Vec<Rule>,
+    pub justification: String,
+    /// Set when the annotation suppressed at least one violation.
+    pub used: bool,
+}
+
+/// One `.lock()` acquisition, classed by `module::receiver`.
+#[derive(Clone, Debug)]
+pub struct LockSite {
+    pub class: String,
+    pub line: u32,
+}
+
+/// A nested acquisition: `acquired` taken while `held` is live.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LockEdge {
+    pub held: String,
+    pub acquired: String,
+    pub line: u32,
+}
+
+pub struct Config {
+    /// Path prefixes (relative to `src/`) where R1–R4 apply.
+    pub trust_prefixes: Vec<String>,
+    /// Declared lock hierarchy, outermost first. Nested acquisitions must
+    /// step strictly forward in this list; see [`super::lockmap`].
+    pub lock_order: Vec<String>,
+}
+
+/// The repository's gate configuration: the trust-critical module set from
+/// the determinism contract (see [`crate::toploc`]) plus `util::rng`, the
+/// RNG provider everything else's reproducibility rests on.
+pub fn repo_config() -> Config {
+    let trust = [
+        "toploc/",
+        "coordinator/validation.rs",
+        "rl/rollout_file.rs",
+        "verifier/",
+        "tasks/",
+        "runtime/scheduler.rs",
+        "util/rng.rs",
+    ];
+    // Outermost → innermost. A lock may only be taken while holding locks
+    // that appear strictly earlier in this list.
+    let order = [
+        "coordinator/swarm::versions",
+        "coordinator/validation::inner",
+        "coordinator/validation::slots",
+        "rl/buffer::inner",
+        "protocol/orchestrator::inner",
+        "protocol/ledger::inner",
+        "protocol/discovery::inner",
+        "protocol/worker::blobs",
+        "shardcast/client::relays",
+        "shardcast/client::rng",
+        "http/server::buckets",
+        "util/metrics::rows",
+        "util/metrics::inner",
+        "util/pool::rx",
+        "util/pool::counts",
+        "util/pool::results",
+        "coordinator/swarm::trained_by_lag",
+    ];
+    Config {
+        trust_prefixes: trust.iter().map(|s| s.to_string()).collect(),
+        lock_order: order.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+pub struct FileReport {
+    pub file: String,
+    pub violations: Vec<Violation>,
+    pub annotations: Vec<Annotation>,
+    pub lock_sites: Vec<LockSite>,
+    pub lock_edges: Vec<LockEdge>,
+}
+
+impl FileReport {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Violation> {
+        self.violations.iter().filter(|v| !v.suppressed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File context: significant tokens + structural facts.
+
+struct FnSpan {
+    /// Line of the `fn` keyword (annotation anchor for `allow-fn`).
+    line: u32,
+    /// Significant-token index range of the body, inclusive braces.
+    body: (usize, usize),
+    first_line: u32,
+    last_line: u32,
+    /// Names of `&[u8]` parameters (untrusted byte buffers).
+    byte_params: Vec<String>,
+}
+
+struct Cx {
+    sig: Vec<Token>,
+    /// Brace depth *before* each significant token.
+    depth: Vec<u32>,
+    /// Inside a `#[cfg(test)]` / `#[test]` item.
+    exempt: Vec<bool>,
+    fns: Vec<FnSpan>,
+}
+
+impl Cx {
+    fn t(&self, i: usize) -> &str {
+        self.sig.get(i).map(|t| t.text.as_str()).unwrap_or("")
+    }
+
+    fn kind(&self, i: usize) -> Option<TokKind> {
+        self.sig.get(i).map(|t| t.kind)
+    }
+
+    fn line(&self, i: usize) -> u32 {
+        self.sig.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    fn is_ident(&self, i: usize) -> bool {
+        self.kind(i) == Some(TokKind::Ident)
+    }
+}
+
+/// Matching close brace/bracket/paren for the opener at `open`, scanning
+/// significant tokens. Returns the last index on unbalanced input.
+fn matching(sig: &[Token], open: usize, open_ch: &str, close_ch: &str) -> usize {
+    let mut depth = 0i64;
+    for (i, t) in sig.iter().enumerate().skip(open) {
+        if t.text == open_ch {
+            depth += 1;
+        } else if t.text == close_ch {
+            depth -= 1;
+            if depth <= 0 {
+                return i;
+            }
+        }
+    }
+    sig.len().saturating_sub(1)
+}
+
+fn build_cx(src: &str) -> (Cx, Vec<Token>) {
+    let all = lex(src);
+    let sig: Vec<Token> = all.iter().filter(|t| t.is_significant()).cloned().collect();
+    let mut depth = Vec::with_capacity(sig.len());
+    let mut d = 0u32;
+    for t in &sig {
+        depth.push(d);
+        if t.text == "{" {
+            d += 1;
+        } else if t.text == "}" {
+            d = d.saturating_sub(1);
+        }
+    }
+    let mut cx = Cx { sig, depth, exempt: Vec::new(), fns: Vec::new() };
+    cx.exempt = mark_test_exempt(&cx);
+    cx.fns = find_fns(&cx);
+    (cx, all)
+}
+
+/// Mark the token range of every item carrying `#[cfg(test)]` or
+/// `#[test]`. Convention in this repo: test modules are `#[cfg(test)] mod
+/// tests { ... }` at the end of each file.
+fn mark_test_exempt(cx: &Cx) -> Vec<bool> {
+    let n = cx.sig.len();
+    let mut exempt = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let is_attr = cx.t(i) == "#" && cx.t(i + 1) == "[";
+        let is_test_attr = is_attr
+            && (cx.t(i + 2) == "test"
+                || (cx.t(i + 2) == "cfg" && cx.t(i + 3) == "(" && cx.t(i + 4) == "test"));
+        if !is_test_attr {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = matching(&cx.sig, i + 1, "[", "]") + 1;
+        // Skip any further attributes on the same item.
+        while cx.t(j) == "#" && cx.t(j + 1) == "[" {
+            j = matching(&cx.sig, j + 1, "[", "]") + 1;
+        }
+        // The item runs to its body's closing brace, or to `;`.
+        let mut end = j;
+        while end < n && cx.t(end) != "{" && cx.t(end) != ";" {
+            end += 1;
+        }
+        if cx.t(end) == "{" {
+            end = matching(&cx.sig, end, "{", "}");
+        }
+        for flag in exempt.iter_mut().take((end + 1).min(n)).skip(start) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    exempt
+}
+
+/// Record every `fn` item: its line, body token range, and which of its
+/// parameters are `&[u8]` slices (untrusted byte buffers for R3's
+/// indexing check).
+fn find_fns(cx: &Cx) -> Vec<FnSpan> {
+    let n = cx.sig.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !(cx.t(i) == "fn" && cx.is_ident(i + 1)) {
+            i += 1;
+            continue;
+        }
+        let fn_line = cx.line(i);
+        // Find the parameter list.
+        let mut p = i + 2;
+        while p < n && cx.t(p) != "(" && cx.t(p) != "{" && cx.t(p) != ";" {
+            p += 1;
+        }
+        if cx.t(p) != "(" {
+            i += 1;
+            continue;
+        }
+        let close = matching(&cx.sig, p, "(", ")");
+        let mut byte_params = Vec::new();
+        let mut pd = 0i32;
+        for j in p..=close {
+            match cx.t(j) {
+                "(" => pd += 1,
+                ")" => pd -= 1,
+                ":" if pd == 1 && cx.t(j + 1) != ":" && cx.t(j.wrapping_sub(1)) != ":" => {
+                    // `name: <type>` at the top level of the param list.
+                    let mut ty = j + 1;
+                    while matches!(cx.t(ty), "&" | "mut") || cx.kind(ty) == Some(TokKind::Lifetime)
+                    {
+                        ty += 1;
+                    }
+                    if cx.t(ty) == "[" && cx.t(ty + 1) == "u8" && cx.t(ty + 2) == "]"
+                        && cx.is_ident(j.wrapping_sub(1))
+                    {
+                        byte_params.push(cx.t(j - 1).to_string());
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Body (or `;` for trait method declarations).
+        let mut b = close + 1;
+        while b < n && cx.t(b) != "{" && cx.t(b) != ";" {
+            b += 1;
+        }
+        if cx.t(b) == "{" {
+            let end = matching(&cx.sig, b, "{", "}");
+            out.push(FnSpan {
+                line: fn_line,
+                body: (b, end),
+                first_line: fn_line,
+                last_line: cx.line(end),
+                byte_params,
+            });
+            i += 2; // nested fns are found too; spans may overlap
+        } else {
+            i = b + 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Annotations.
+
+fn parse_annotations(all: &[Token], file: &str) -> (Vec<Annotation>, Vec<Violation>) {
+    let mut anns = Vec::new();
+    let mut bad = Vec::new();
+    let mut last_sig_line = 0u32;
+    // (comment index in `all`, trailing?) for each candidate.
+    let mut candidates: Vec<(usize, bool)> = Vec::new();
+    for (i, t) in all.iter().enumerate() {
+        if t.is_significant() {
+            last_sig_line = t.line;
+        } else if t.kind == TokKind::LineComment
+            && t.text.contains("swarmlint:")
+            // Doc comments (`///`, `//!`) describe the syntax — e.g. the
+            // rule catalogue in analysis/mod.rs — and are never waivers.
+            && !t.text.starts_with("///")
+            && !t.text.starts_with("//!")
+        {
+            candidates.push((i, t.line == last_sig_line));
+        }
+    }
+    for (i, trailing) in candidates {
+        let t = &all[i];
+        let target_line = if trailing {
+            t.line
+        } else {
+            all.iter()
+                .skip(i)
+                .find(|x| x.is_significant())
+                .map(|x| x.line)
+                .unwrap_or(t.line)
+        };
+        match parse_allow(&t.text) {
+            Ok((fn_scoped, rules, justification)) => anns.push(Annotation {
+                line: t.line,
+                target_line,
+                fn_scoped,
+                rules,
+                justification,
+                used: false,
+            }),
+            Err(msg) => bad.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: Rule::BadAnnotation,
+                message: msg,
+                suppressed: false,
+                justification: None,
+            }),
+        }
+    }
+    (anns, bad)
+}
+
+/// Parse `swarmlint: allow(<r>[, <r>]*) — <justification>` out of a line
+/// comment. `allow-fn` scopes to the function below instead of one line.
+fn parse_allow(comment: &str) -> Result<(bool, Vec<Rule>, String), String> {
+    let after = match comment.split_once("swarmlint:") {
+        Some((_, rest)) => rest.trim_start(),
+        None => return Err("no swarmlint: marker".into()),
+    };
+    let (fn_scoped, rest) = if let Some(r) = after.strip_prefix("allow-fn(") {
+        (true, r)
+    } else if let Some(r) = after.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return Err(format!("expected allow(...) or allow-fn(...), got `{after}`"));
+    };
+    let (inside, tail) = match rest.split_once(')') {
+        Some(x) => x,
+        None => return Err("unclosed allow(".into()),
+    };
+    let mut rules = Vec::new();
+    for name in inside.split(',') {
+        let name = name.trim();
+        match Rule::parse(name) {
+            Some(r) => rules.push(r),
+            None => return Err(format!("unknown rule `{name}`")),
+        }
+    }
+    if rules.is_empty() {
+        return Err("empty rule list".into());
+    }
+    let justification: String = tail
+        .trim_start_matches(|c: char| c.is_whitespace() || matches!(c, '-' | '—' | '–' | ':'))
+        .trim()
+        .to_string();
+    if justification.is_empty() {
+        return Err("missing justification after allow(...)".into());
+    }
+    Ok((fn_scoped, rules, justification))
+}
+
+// ---------------------------------------------------------------------------
+// R1 unordered-iter.
+
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// R1: iterating a `HashMap`/`HashSet` in a trust module. Heuristic
+/// binding discovery — `name: HashMap<...>` annotations (fields, params,
+/// lets) and `name = HashMap::new()` initializers; containers nested
+/// inside wrappers (`RefCell<HashMap<..>>`) or behind generic positions
+/// are not tracked. Membership ops (`contains`, `get`, `insert`, `len`)
+/// are fine — only order-revealing iteration is flagged.
+fn scan_unordered_iter(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
+    let n = cx.sig.len();
+    // Pass 1: names bound to hash containers.
+    let mut bound: Vec<String> = Vec::new();
+    for i in 0..n {
+        if cx.exempt[i] || !(cx.t(i) == "HashMap" || cx.t(i) == "HashSet") {
+            continue;
+        }
+        let mut j = i;
+        // Walk back over a leading path (`std::collections::HashMap`).
+        while j >= 2 && cx.t(j - 1) == ":" && cx.t(j - 2) == ":" {
+            j -= 2;
+            if j >= 1 && cx.is_ident(j - 1) {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = cx.t(j - 1);
+        let name = if prev == ":" && j >= 2 && cx.is_ident(j - 2) {
+            Some(cx.t(j - 2).to_string())
+        } else if prev == "=" {
+            // `let [mut] name = HashMap::new()` or `path.name = ...`.
+            let mut k = j - 1;
+            let mut name = None;
+            let mut steps = 0;
+            while k > 0 && steps < 12 {
+                k -= 1;
+                steps += 1;
+                if cx.t(k) == ";" || cx.t(k) == "{" || cx.t(k) == "}" {
+                    break;
+                }
+                if cx.t(k) == "let" {
+                    let mut m = k + 1;
+                    while matches!(cx.t(m), "mut" | "(") {
+                        m += 1;
+                    }
+                    if cx.is_ident(m) {
+                        name = Some(cx.t(m).to_string());
+                    }
+                    break;
+                }
+            }
+            name.or_else(|| {
+                if j >= 2 && cx.is_ident(j - 2) {
+                    Some(cx.t(j - 2).to_string())
+                } else {
+                    None
+                }
+            })
+        } else {
+            None
+        };
+        if let Some(nm) = name {
+            if !bound.contains(&nm) {
+                bound.push(nm);
+            }
+        }
+    }
+    if bound.is_empty() {
+        return;
+    }
+    // Pass 2: order-revealing uses of those names.
+    for i in 0..n {
+        if cx.exempt[i] || !cx.is_ident(i) {
+            continue;
+        }
+        let name = cx.t(i);
+        if name == "for" {
+            // `for pat in <expr> {` — flag bound names inside <expr>.
+            let mut j = i + 1;
+            let mut guard = 0;
+            while j < n && cx.t(j) != "in" && cx.t(j) != "{" && guard < 24 {
+                j += 1;
+                guard += 1;
+            }
+            if cx.t(j) != "in" {
+                continue;
+            }
+            let mut k = j + 1;
+            let mut guard = 0;
+            while k < n && cx.t(k) != "{" && cx.t(k) != ";" && guard < 24 {
+                if cx.is_ident(k) && bound.iter().any(|b| b == cx.t(k)) {
+                    out.push(Violation {
+                        file: file.to_string(),
+                        line: cx.line(k),
+                        rule: Rule::UnorderedIter,
+                        message: format!(
+                            "for-loop over unordered container `{}`",
+                            cx.t(k)
+                        ),
+                        suppressed: false,
+                        justification: None,
+                    });
+                    break;
+                }
+                k += 1;
+                guard += 1;
+            }
+        } else if bound.iter().any(|b| b == name)
+            && cx.t(i + 1) == "."
+            && ITER_METHODS.contains(&cx.t(i + 2))
+            && cx.t(i + 3) == "("
+        {
+            out.push(Violation {
+                file: file.to_string(),
+                line: cx.line(i),
+                rule: Rule::UnorderedIter,
+                message: format!(
+                    "`{}.{}()` iterates an unordered container",
+                    name,
+                    cx.t(i + 2)
+                ),
+                suppressed: false,
+                justification: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R2 wall-clock.
+
+const WALL_CLOCK_IDENTS: [&str; 6] =
+    ["SystemTime", "Instant", "thread_rng", "from_entropy", "getrandom", "now_ms"];
+
+/// R2: wall-clock or entropy sources in trust modules. Commitments, wire
+/// bytes and RNG seeds must be functions of the submission alone; any
+/// time-derived value is irreproducible by the validator. RNG must come
+/// from `util::rng::Rng` seeded constructors.
+fn scan_wall_clock(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
+    for i in 0..cx.sig.len() {
+        if cx.exempt[i] || !cx.is_ident(i) {
+            continue;
+        }
+        if WALL_CLOCK_IDENTS.contains(&cx.t(i)) {
+            out.push(Violation {
+                file: file.to_string(),
+                line: cx.line(i),
+                rule: Rule::WallClock,
+                message: format!("`{}` in a trust-critical module", cx.t(i)),
+                suppressed: false,
+                justification: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R3 panic-path.
+
+/// Methods whose `.unwrap()` is the mutex-poison idiom, not input
+/// handling: poisoning means another validator thread already panicked,
+/// which the panic firewall (`util::pool`) turns into an engine-failure
+/// verdict — propagating it is correct and cannot be attacker-triggered.
+const POISON_METHODS: [&str; 6] = ["lock", "read", "write", "join", "wait", "wait_timeout"];
+
+fn is_poison_chain(cx: &Cx, dot: usize) -> bool {
+    // `dot` is the `.` before unwrap/expect; exempt `<recv>.m(...).unwrap()`
+    // when m is a poison-returning method.
+    if dot == 0 || cx.t(dot - 1) != ")" {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut i = dot - 1;
+    loop {
+        match cx.t(i) {
+            ")" => depth += 1,
+            "(" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i > 0 && POISON_METHODS.contains(&cx.t(i - 1));
+                }
+            }
+            _ => {}
+        }
+        if i == 0 {
+            return false;
+        }
+        i -= 1;
+    }
+}
+
+/// R3: panics reachable in trust-module code. Untrusted bytes must turn
+/// into reject verdicts — a panicking validator is an unslashable DoS.
+/// Flags `.unwrap()` / `.expect(` (minus the poison idiom), panic-family
+/// macros, and — inside functions taking `&[u8]` — direct indexing of
+/// those buffers. `assert!`/`debug_assert!` are deliberately not flagged.
+fn scan_panic_path(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
+    let n = cx.sig.len();
+    let mut push = |line: u32, message: String, out: &mut Vec<Violation>| {
+        out.push(Violation {
+            file: file.to_string(),
+            line,
+            rule: Rule::PanicPath,
+            message,
+            suppressed: false,
+            justification: None,
+        });
+    };
+    for i in 0..n {
+        if cx.exempt[i] || !cx.is_ident(i) {
+            continue;
+        }
+        match cx.t(i) {
+            "unwrap" if cx.t(i + 1) == "(" && i > 0 && cx.t(i - 1) == "." => {
+                if !is_poison_chain(cx, i - 1) {
+                    push(cx.line(i), "`.unwrap()` on a trust path".into(), out);
+                }
+            }
+            "expect" if cx.t(i + 1) == "(" && i > 0 && cx.t(i - 1) == "." => {
+                if !is_poison_chain(cx, i - 1) {
+                    push(cx.line(i), "`.expect(..)` on a trust path".into(), out);
+                }
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" if cx.t(i + 1) == "!" => {
+                push(cx.line(i), format!("`{}!` on a trust path", cx.t(i)), out);
+            }
+            _ => {}
+        }
+    }
+    // Unchecked indexing of untrusted byte buffers.
+    for f in &cx.fns {
+        if f.byte_params.is_empty() {
+            continue;
+        }
+        for i in f.body.0..=f.body.1.min(n.saturating_sub(1)) {
+            if cx.exempt[i] || !cx.is_ident(i) {
+                continue;
+            }
+            if f.byte_params.iter().any(|p| p == cx.t(i))
+                && cx.t(i + 1) == "["
+                && (i == 0 || cx.t(i - 1) != ".")
+            {
+                push(
+                    cx.line(i),
+                    format!("indexing untrusted byte buffer `{}`", cx.t(i)),
+                    out,
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R4 float-fold.
+
+/// R4: `.sum()` / `.product()` in trust modules. Iterator folds have an
+/// order fixed by the iterator, but nothing in the code states it, and a
+/// refactor to an unordered source silently changes results; commitment /
+/// verdict float accumulation must go through `util::numeric` fold
+/// helpers. Integer sums are order-independent — annotate those.
+fn scan_float_fold(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
+    for i in 0..cx.sig.len() {
+        if cx.exempt[i] || !cx.is_ident(i) {
+            continue;
+        }
+        let t = cx.t(i);
+        if (t == "sum" || t == "product")
+            && i > 0
+            && cx.t(i - 1) == "."
+            && (cx.t(i + 1) == "(" || (cx.t(i + 1) == ":" && cx.t(i + 2) == ":"))
+        {
+            out.push(Violation {
+                file: file.to_string(),
+                line: cx.line(i),
+                rule: Rule::FloatFold,
+                message: format!("`.{t}()` — use util::numeric fold helpers for floats"),
+                suppressed: false,
+                justification: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R5 lock-order (per-file scan; cross-file aggregation in `lockmap`).
+
+struct Guard {
+    class: String,
+    name: Option<String>,
+    depth: u32,
+    temp: bool,
+}
+
+/// Track `.lock()` acquisitions and which guards are live when each one
+/// happens. A `let g = x.lock().unwrap();` guard lives to the end of its
+/// block (or an explicit `drop(g)`); a lock consumed inside a larger
+/// expression lives to the end of its statement. Purely lexical: a guard
+/// held across a call into another module is invisible here — the lock
+/// map report exists so humans can audit those seams.
+fn scan_locks(cx: &Cx, module: &str) -> (Vec<LockSite>, Vec<LockEdge>) {
+    let n = cx.sig.len();
+    let mut sites = Vec::new();
+    let mut edges = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0u32;
+    let mut stmt_let: Option<String> = None;
+    for i in 0..n {
+        match cx.t(i) {
+            "{" => {
+                depth += 1;
+                stmt_let = None;
+            }
+            "}" => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+                stmt_let = None;
+            }
+            ";" => {
+                guards.retain(|g| !(g.temp && g.depth == depth));
+                stmt_let = None;
+            }
+            "let" => {
+                let mut m = i + 1;
+                while matches!(cx.t(m), "mut" | "(") {
+                    m += 1;
+                }
+                if cx.is_ident(m) {
+                    stmt_let = Some(cx.t(m).to_string());
+                }
+            }
+            "drop" if cx.t(i + 1) == "(" && cx.is_ident(i + 2) && cx.t(i + 3) == ")" => {
+                let victim = cx.t(i + 2).to_string();
+                guards.retain(|g| g.name.as_deref() != Some(victim.as_str()));
+            }
+            "lock"
+                if cx.t(i + 1) == "(" && cx.t(i + 2) == ")" && i > 0 && cx.t(i - 1) == "." =>
+            {
+                if cx.exempt[i] {
+                    continue;
+                }
+                let receiver =
+                    if i >= 2 && cx.is_ident(i - 2) { cx.t(i - 2) } else { "<expr>" };
+                let class = format!("{module}::{receiver}");
+                let line = cx.line(i);
+                for g in &guards {
+                    edges.push(LockEdge {
+                        held: g.class.clone(),
+                        acquired: class.clone(),
+                        line,
+                    });
+                }
+                sites.push(LockSite { class: class.clone(), line });
+                // Guard extent: bound to a `let` if the unwrap/expect
+                // chain ends the statement, else a temporary.
+                let mut j = i + 3;
+                while cx.t(j) == "."
+                    && matches!(cx.t(j + 1), "unwrap" | "expect")
+                    && cx.t(j + 2) == "("
+                {
+                    j = matching(&cx.sig, j + 2, "(", ")") + 1;
+                }
+                let bound = stmt_let.is_some() && cx.t(j) == ";";
+                guards.push(Guard {
+                    class,
+                    name: if bound { stmt_let.clone() } else { None },
+                    depth,
+                    temp: !bound,
+                });
+            }
+            _ => {}
+        }
+    }
+    (sites, edges)
+}
+
+// ---------------------------------------------------------------------------
+// Entry point.
+
+fn module_key(rel_path: &str) -> String {
+    let p = rel_path.strip_suffix(".rs").unwrap_or(rel_path);
+    p.strip_suffix("/mod").unwrap_or(p).to_string()
+}
+
+fn is_trusted(rel_path: &str, cfg: &Config) -> bool {
+    cfg.trust_prefixes.iter().any(|p| rel_path.starts_with(p.as_str()))
+}
+
+/// Analyze one source file (path relative to `src/`, unix separators).
+/// Lock-order *edges* are collected here; turning them into violations
+/// happens in [`super::lockmap::check_edges`] so the whole-crate map stays
+/// in one place.
+pub fn analyze_source(rel_path: &str, src: &str, cfg: &Config) -> FileReport {
+    let (cx, all) = build_cx(src);
+    let mut violations = Vec::new();
+    if is_trusted(rel_path, cfg) {
+        scan_unordered_iter(&cx, rel_path, &mut violations);
+        scan_wall_clock(&cx, rel_path, &mut violations);
+        scan_panic_path(&cx, rel_path, &mut violations);
+        scan_float_fold(&cx, rel_path, &mut violations);
+    }
+    let (lock_sites, lock_edges) = scan_locks(&cx, &module_key(rel_path));
+    let (mut annotations, mut bad) = parse_annotations(&all, rel_path);
+    violations.append(&mut bad);
+    // Lock-order edge violations are appended by the caller (lockmap) and
+    // suppressed through the same annotation table, so expose it.
+    apply_suppressions(&mut violations, &mut annotations, &cx);
+    violations.sort_by_key(|v| (v.line, v.rule));
+    FileReport { file: rel_path.to_string(), violations, annotations, lock_sites, lock_edges }
+}
+
+/// Match violations against annotations; used by `analyze_source` and
+/// again by `lockmap` after edge violations are appended.
+pub(crate) fn apply_suppressions_pub(
+    violations: &mut [Violation],
+    annotations: &mut [Annotation],
+    fn_ranges: &[(u32, u32, u32)],
+) {
+    for v in violations.iter_mut() {
+        if v.rule == Rule::BadAnnotation || v.suppressed {
+            continue;
+        }
+        for a in annotations.iter_mut() {
+            if !a.rules.contains(&v.rule) {
+                continue;
+            }
+            let hit = if a.fn_scoped {
+                fn_ranges
+                    .iter()
+                    .any(|&(fl, first, last)| {
+                        fl == a.target_line && v.line >= first && v.line <= last
+                    })
+            } else {
+                a.target_line == v.line
+            };
+            if hit {
+                a.used = true;
+                v.suppressed = true;
+                v.justification = Some(a.justification.clone());
+                break;
+            }
+        }
+    }
+}
+
+fn apply_suppressions(violations: &mut [Violation], annotations: &mut [Annotation], cx: &Cx) {
+    let ranges: Vec<(u32, u32, u32)> =
+        cx.fns.iter().map(|f| (f.line, f.first_line, f.last_line)).collect();
+    apply_suppressions_pub(violations, annotations, &ranges);
+}

@@ -1,0 +1,102 @@
+//! swarmlint — the determinism / slashability lint gate.
+//!
+//! Scans the crate sources (`src/`, or `rust/src/` when run from the repo
+//! root) with the rules in [`intellect2::analysis`] and exits nonzero on
+//! any unsuppressed violation. Prints the whole-crate lock map and the
+//! suppression summary table either way, so `make lint` doubles as the
+//! audit report reviewers read.
+//!
+//!   swarmlint [--root <dir>] [--quiet]
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use intellect2::analysis::{analyze_tree, lockmap, rules};
+use intellect2::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let quiet = args.has_flag("quiet");
+    let root = if let Some(r) = args.get("root") {
+        r.to_string()
+    } else if Path::new("src").is_dir() {
+        "src".to_string()
+    } else if Path::new("rust/src").is_dir() {
+        "rust/src".to_string()
+    } else {
+        eprintln!("swarmlint: no src/ or rust/src/ here; pass --root <dir>");
+        return ExitCode::FAILURE;
+    };
+    let cfg = rules::repo_config();
+    let reports = match analyze_tree(Path::new(&root), &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("swarmlint: failed to read {root}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut n_unsuppressed = 0usize;
+    let mut n_suppressed = 0usize;
+    for r in &reports {
+        for v in &r.violations {
+            if v.suppressed {
+                n_suppressed += 1;
+            } else {
+                n_unsuppressed += 1;
+                println!("{}:{} [{}] {}", v.file, v.line, v.rule.name(), v.message);
+            }
+        }
+    }
+
+    if !quiet {
+        println!();
+        print!("{}", lockmap::render_map(&reports, &cfg.lock_order));
+        println!();
+        println!("suppressions ({n_suppressed} violations under annotation):");
+        let mut any = false;
+        for r in &reports {
+            for a in &r.annotations {
+                if !a.used {
+                    continue;
+                }
+                any = true;
+                let scope = if a.fn_scoped { "fn" } else { "line" };
+                let names: Vec<&str> = a.rules.iter().map(|x| x.name()).collect();
+                println!(
+                    "  {}:{} [{}] ({}) {}",
+                    r.file,
+                    a.line,
+                    names.join(","),
+                    scope,
+                    a.justification
+                );
+            }
+        }
+        if !any {
+            println!("  none");
+        }
+        for r in &reports {
+            for a in &r.annotations {
+                if !a.used {
+                    println!(
+                        "::warning::{}:{} unused swarmlint annotation ({})",
+                        r.file,
+                        a.line,
+                        a.justification
+                    );
+                }
+            }
+        }
+        println!();
+    }
+
+    let files = reports.len();
+    if n_unsuppressed == 0 {
+        println!("swarmlint: clean ({files} files, {n_suppressed} suppressed)");
+        ExitCode::SUCCESS
+    } else {
+        println!("swarmlint: {n_unsuppressed} unsuppressed violation(s) in {files} files");
+        ExitCode::FAILURE
+    }
+}

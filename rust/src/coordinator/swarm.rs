@@ -842,7 +842,11 @@ impl Shared {
         for (env, attempts, passes) in self.stats.env_pass.snapshot() {
             s.env_pass.add(&env, attempts, passes);
         }
-        *s.trained_by_lag.lock().unwrap() = self.stats.trained_by_lag.lock().unwrap().clone();
+        // Two statements, not one: the source guard is released before the
+        // destination lock is taken (same lock class — nesting them is a
+        // self-deadlock pattern under swarmlint `lock-order`).
+        let hist = self.stats.trained_by_lag.lock().unwrap().clone();
+        *s.trained_by_lag.lock().unwrap() = hist;
         Arc::new(s)
     }
 }

@@ -28,7 +28,7 @@
 //! dropped unjudged (never slashed), even if a sibling call saw a check
 //! fail.
 
-use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -180,8 +180,11 @@ impl SubmissionQueue {
 #[derive(Default)]
 pub struct ReplayGuard {
     /// step → set of (node, submission_idx) first sightings; keyed by
-    /// step so pruning to the staleness window is one range split.
-    seen: BTreeMap<u64, HashSet<(u64, u64)>>,
+    /// step so pruning to the staleness window is one range split. The
+    /// inner set is ordered too (swarmlint `unordered-iter`): guard
+    /// contents feed logs and state snapshots, which must not vary by
+    /// hasher seed across validator processes.
+    seen: BTreeMap<u64, BTreeSet<(u64, u64)>>,
 }
 
 impl ReplayGuard {
@@ -203,11 +206,25 @@ impl ReplayGuard {
     }
 
     pub fn len(&self) -> usize {
-        self.seen.values().map(HashSet::len).sum()
+        // swarmlint: allow(float-fold) — usize sum; integer addition is
+        // associative, only float folds need a pinned order.
+        self.seen.values().map(BTreeSet::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Every recorded sighting as `(step, node, submission_idx)`, in
+    /// deterministic (fully ordered) traversal order.
+    pub fn entries(&self) -> Vec<(u64, u64, u64)> {
+        let mut out = Vec::with_capacity(self.len());
+        for (step, ids) in &self.seen {
+            for (node, idx) in ids {
+                out.push((*step, *node, *idx));
+            }
+        }
+        out
     }
 }
 
@@ -365,7 +382,10 @@ fn cpu_stages(
     // are discarded (their whole group with them) rather than slashing the
     // node. Systematic early truncation still surfaces as the node's
     // contributions evaporating.
-    let mut bad_groups: HashSet<u64> = HashSet::new();
+    // Ordered set (swarmlint `unordered-iter`): group membership checks
+    // don't iterate, but keeping trust-path containers ordered by policy
+    // beats auditing each future use.
+    let mut bad_groups: BTreeSet<u64> = BTreeSet::new();
     for w in &sub.rollouts {
         if validator.check_termination(w, max_new, max_seq).is_err() {
             bad_groups.insert(w.rollout.group_id);
@@ -540,6 +560,9 @@ impl ValidationPipeline {
                 let mut slots = slots.lock().unwrap();
                 std::mem::take(&mut *slots)
                     .into_iter()
+                    // swarmlint: allow(panic-path) — wait_idle returns only after
+                    // every pool job wrote its slot; a hole is our scheduling bug,
+                    // not hostile input, and must not be silently dropped.
                     .map(|o| o.expect("cpu stage completed"))
                     .collect()
             }
@@ -579,6 +602,8 @@ impl ValidationPipeline {
             let Some(params) = version_params(version) else {
                 let now = current_step();
                 for &i in subs {
+                    // swarmlint: allow(panic-path) — assemble-loop invariant:
+                    // verdicts[i] is None exactly while pending[i] is Some.
                     let sub = pending[i].take().expect("pending submission");
                     verdicts[i] = Some(if version > now + 1 {
                         Verdict::Reject {
@@ -600,6 +625,8 @@ impl ValidationPipeline {
             };
             let mut lanes = Vec::new();
             for &i in subs {
+                // swarmlint: allow(panic-path) — assemble-loop invariant:
+                // every index grouped under a version is still pending.
                 let rollouts = &pending[i].as_ref().expect("pending submission").rollouts;
                 for (ri, w) in rollouts.iter().enumerate() {
                     lanes.push(LaneReq { sub: i, rollout: ri, len: w.rollout.tokens.len() });
@@ -624,10 +651,10 @@ impl ValidationPipeline {
                 let t = call.seq_len;
                 let mut padded = vec![self.spec.pad_id; live.len() * t];
                 for (lane, l) in live.iter().enumerate() {
-                    let toks =
-                        &pending[l.sub].as_ref().expect("pending submission").rollouts[l.rollout]
-                            .rollout
-                            .tokens;
+                    // swarmlint: allow(panic-path) — lanes are built from
+                    // pending entries and `doomed` filtered the taken ones.
+                    let psub = pending[l.sub].as_ref().expect("pending submission");
+                    let toks = &psub.rollouts[l.rollout].rollout.tokens;
                     padded[lane * t..lane * t + toks.len()].copy_from_slice(toks);
                 }
                 self.prefill_calls.inc();
@@ -653,6 +680,8 @@ impl ValidationPipeline {
                     {
                         continue;
                     }
+                    // swarmlint: allow(panic-path) — same lane invariant as the
+                    // padding loop above: live lanes index pending submissions.
                     let w = &pending[l.sub].as_ref().expect("pending submission").rollouts
                         [l.rollout];
                     let h = &hidden[lane * stride * d..(lane + 1) * stride * d];
@@ -693,6 +722,8 @@ impl ValidationPipeline {
             if verdicts[i].is_some() {
                 continue;
             }
+            // swarmlint: allow(panic-path) — the guard above: no verdict yet
+            // means this submission was never taken out of pending.
             let sub = pending[i].take().expect("pending submission");
             let node = sub.node_address;
             verdicts[i] = Some(if let Some(why) = engine_failed[i].take() {
@@ -703,6 +734,8 @@ impl ValidationPipeline {
                 Verdict::Accept(sub)
             });
         }
+        // swarmlint: allow(panic-path) — the sweep above assigns a verdict
+        // to every remaining None; a hole is a pipeline bug worth crashing.
         verdicts.into_iter().map(|v| v.expect("verdict assigned")).collect()
     }
 }
@@ -901,6 +934,25 @@ mod tests {
         // after its step left the window, where stage 1–2 reject it as
         // stale before buffering.
         assert!(g.first_sighting(7, 3, 0));
+    }
+
+    #[test]
+    fn replay_guard_traversal_order_is_insertion_independent() {
+        // Regression for the unordered-iter class: guard contents must
+        // come out in one canonical order no matter the arrival order
+        // (hash-seeded iteration varied across validator processes).
+        let sightings = [(9u64, 2u64, 1u64), (3, 7, 0), (9, 1, 0), (3, 2, 5), (9, 2, 0)];
+        let mut fwd = ReplayGuard::new();
+        for &(n, s, i) in &sightings {
+            fwd.first_sighting(n, s, i);
+        }
+        let mut rev = ReplayGuard::new();
+        for &(n, s, i) in sightings.iter().rev() {
+            rev.first_sighting(n, s, i);
+        }
+        let want = vec![(1, 9, 0), (2, 3, 5), (2, 9, 0), (2, 9, 1), (7, 3, 0)];
+        assert_eq!(fwd.entries(), want);
+        assert_eq!(rev.entries(), want);
     }
 
     #[test]

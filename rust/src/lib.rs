@@ -24,12 +24,17 @@
 //! - [`toploc`]: trustless inference verification (§2.3) — the validator
 //!   enforces the same staleness window as the trainer buffer.
 //! - [`protocol`]: ledger/discovery/orchestrator/worker lifecycle (§2.4).
+//! - [`analysis`]: `swarmlint` — a from-scratch lexer + rules engine that
+//!   lints this crate's own sources for determinism / slashability
+//!   hazards (unordered iteration, wall-clock inputs, panics on untrusted
+//!   bytes, order-unspecified float folds, lock-order violations).
 //! - [`coordinator`]: PRIME-RL — the asynchronous RL pipeline itself
 //!   (§2.1, §3.2): a deterministic async-k driver for experiments and the
 //!   free-running swarm whose trainer is genuinely two-step asynchronous
 //!   (training of step s+1 overlaps broadcasting of step s's weights,
 //!   with measured per-step overlap in `SwarmResult`).
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -11,11 +11,16 @@
 //! captured header invalidates the signature. Verification happens in the
 //! validation pipeline's stage 0 against the ledger's key registry.
 
+// Trust-critical parse path: hostile uploads must decode to Err, never
+// panic (swarmlint `panic-path`; clippy mirrors the gate in CI).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use sha2::{Digest, Sha256};
 
 use super::Rollout;
 use crate::data::rpq::{Column, DType, RpqFile, Schema};
 use crate::protocol::identity::{hmac_verify, Identity};
+use crate::util::wire::Cursor;
 
 /// A rollout plus the trust metadata the validator consumes.
 #[derive(Clone, Debug)]
@@ -118,22 +123,19 @@ impl Envelope {
     /// do not carry a version-1 envelope at all (legacy raw `rpq` uploads
     /// land here); no signature or digest checking happens yet.
     pub fn parse(bytes: &[u8]) -> Option<(Envelope, &[u8])> {
-        if bytes.len() < ENVELOPE_HEADER_LEN
-            || bytes[..4] != ENVELOPE_MAGIC
-            || bytes[4] != ENVELOPE_VERSION
-        {
+        let mut c = Cursor::new(bytes);
+        if c.array::<4>()? != ENVELOPE_MAGIC || c.u8()? != ENVELOPE_VERSION {
             return None;
         }
-        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
-        let arr_at = |o: usize| -> [u8; 32] { bytes[o..o + 32].try_into().unwrap() };
         let env = Envelope {
-            node_address: u64_at(5),
-            step: u64_at(13),
-            submission_idx: u64_at(21),
-            payload_digest: arr_at(29),
-            sig: arr_at(61),
+            node_address: c.u64_le()?,
+            step: c.u64_le()?,
+            submission_idx: c.u64_le()?,
+            payload_digest: c.array::<32>()?,
+            sig: c.array::<32>()?,
         };
-        Some((env, &bytes[ENVELOPE_HEADER_LEN..]))
+        debug_assert_eq!(c.offset(), ENVELOPE_HEADER_LEN);
+        Some((env, bytes.get(c.offset()..)?))
     }
 
     /// Does the signed digest cover exactly these payload bytes?
@@ -248,29 +250,49 @@ impl Submission {
         f.validate_schema(&schema())?;
         let n = f.n_rows();
         anyhow::ensure!(n > 0, "empty submission");
-        let u64s = |name: &str| f.col(name).unwrap().as_u64().unwrap().to_vec();
-        let f32s = |name: &str| f.col(name).unwrap().as_f32().unwrap().to_vec();
-        let node = u64s("node");
-        let step = u64s("step");
-        let sub = u64s("submission_idx");
+        // validate_schema already pinned names and dtypes, but the parse
+        // path stays structurally panic-free regardless: a missing or
+        // mistyped column is an Err, never an unwrap.
+        let missing = |name: &str| anyhow::anyhow!("column {name} missing or mistyped");
+        let u64s = |name: &str| -> anyhow::Result<Vec<u64>> {
+            Ok(f.col(name).and_then(|c| c.as_u64()).ok_or_else(|| missing(name))?.to_vec())
+        };
+        let f32s = |name: &str| -> anyhow::Result<Vec<f32>> {
+            Ok(f.col(name).and_then(|c| c.as_f32()).ok_or_else(|| missing(name))?.to_vec())
+        };
+        let node = u64s("node")?;
+        let step = u64s("step")?;
+        let sub = u64s("submission_idx")?;
         anyhow::ensure!(
             node.windows(2).all(|w| w[0] == w[1])
                 && step.windows(2).all(|w| w[0] == w[1])
                 && sub.windows(2).all(|w| w[0] == w[1]),
             "mixed node/step/submission in one file"
         );
-        let task_id = u64s("task_id");
-        let group_id = u64s("group_id");
-        let prompt_len = u64s("prompt_len");
-        let target_len = u64s("target_len");
-        let finish = u64s("finish_eos");
-        let tokens = f.col("tokens").unwrap().as_i32_list().unwrap().to_vec();
-        let task_reward = f32s("task_reward");
-        let length_penalty = f32s("length_penalty");
-        let reward = f32s("reward");
-        let eos_prob = f32s("eos_prob");
-        let probs = f.col("sampled_probs").unwrap().as_f32_list().unwrap().to_vec();
-        let commits = f.col("commitment").unwrap().as_bytes().unwrap().to_vec();
+        let task_id = u64s("task_id")?;
+        let group_id = u64s("group_id")?;
+        let prompt_len = u64s("prompt_len")?;
+        let target_len = u64s("target_len")?;
+        let finish = u64s("finish_eos")?;
+        let tokens = f
+            .col("tokens")
+            .and_then(|c| c.as_i32_list())
+            .ok_or_else(|| missing("tokens"))?
+            .to_vec();
+        let task_reward = f32s("task_reward")?;
+        let length_penalty = f32s("length_penalty")?;
+        let reward = f32s("reward")?;
+        let eos_prob = f32s("eos_prob")?;
+        let probs = f
+            .col("sampled_probs")
+            .and_then(|c| c.as_f32_list())
+            .ok_or_else(|| missing("sampled_probs"))?
+            .to_vec();
+        let commits = f
+            .col("commitment")
+            .and_then(|c| c.as_bytes())
+            .ok_or_else(|| missing("commitment"))?
+            .to_vec();
 
         let rollouts = (0..n)
             .map(|i| {
@@ -447,6 +469,36 @@ mod tests {
         // Envelope wrapping an intact payload: the payload's own claim.
         let signed = Envelope::seal(&id, 1, 0, &sample_submission().encode());
         assert_eq!(Submission::peek_node_address(&signed), Some(0xAB));
+    }
+
+    #[test]
+    fn hostile_bytes_error_out_instead_of_panicking() {
+        use crate::util::rng::Rng;
+        // Every prefix and every random mutation of a valid signed upload
+        // must flow through parse/decode/peek as a clean miss or an Err —
+        // a panicking validator is an unslashable denial of service.
+        let id = Identity::from_seed(11);
+        let bytes = sample_submission().encode_signed(&id);
+        for cut in 0..bytes.len().min(ENVELOPE_HEADER_LEN + 64) {
+            let p = &bytes[..cut];
+            let _ = Envelope::parse(p);
+            let _ = Submission::peek_node_address(p);
+            let _ = Submission::decode(p);
+        }
+        let mut rng = Rng::new(12);
+        for _ in 0..300 {
+            let mut b = bytes.clone();
+            for _ in 0..1 + rng.usize(3) {
+                let i = rng.usize(b.len());
+                b[i] = b[i].wrapping_add(1 + rng.next_u32() as u8 % 255);
+            }
+            if let Some((env, payload)) = Envelope::parse(&b) {
+                let _ = env.digest_matches(payload);
+                let _ = env.verify_sig(&id.secret());
+                let _ = Submission::decode(payload);
+            }
+            let _ = Submission::peek_node_address(&b);
+        }
     }
 
     #[test]

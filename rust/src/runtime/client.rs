@@ -3,7 +3,7 @@
 //! /opt/xla-example/load_hlo (HLO text -> HloModuleProto -> compile).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -20,7 +20,9 @@ pub struct Runtime {
     pub spec: ModelSpec,
     client: xla::PjRtClient,
     dir: PathBuf,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Ordered map: compile-cache traversal (debug dumps, future warmup
+    /// sweeps) stays deterministic across processes.
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -31,7 +33,7 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("read {}/spec.json: {e} (run `make artifacts`)", dir.display()))?;
         let spec = ModelSpec::parse(&spec_text)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Rc::new(Runtime { spec, client, dir, exes: RefCell::new(HashMap::new()) }))
+        Ok(Rc::new(Runtime { spec, client, dir, exes: RefCell::new(BTreeMap::new()) }))
     }
 
     /// Locate the artifacts directory from the repo root (tests/examples).

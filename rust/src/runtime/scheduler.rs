@@ -433,6 +433,8 @@ fn refill<B: DecodeBackend>(
         }
         let mut free_iter = free.into_iter();
         for r in uncovered {
+            // swarmlint: allow(panic-path) — wave construction capped the
+            // wave at the free-lane count; exhaustion is a scheduler bug.
             let l = free_iter.next().expect("wave <= free lanes");
             lanes[l] = Some(r);
             feed[l] = 0;
@@ -459,6 +461,8 @@ fn refill<B: DecodeBackend>(
                         rows.len() - 1
                     }
                 };
+                // swarmlint: allow(panic-path) — same wave-size invariant
+                // as the uncovered loop above.
                 let l = free_iter.next().expect("wave <= free lanes");
                 assign[l] = Some(row);
                 lanes[l] = Some(r);

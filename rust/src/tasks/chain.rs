@@ -92,6 +92,8 @@ pub fn generate(id: u64, difficulty: u8, rng: &mut Rng) -> Task {
             ops.push(("-".into(), 1 + rng.range(0, add_hi) as i64));
         }
     }
+    // swarmlint: allow(panic-path) — ops come from the bounded generator
+    // above, not from the wire; fold only errors on hostile programs.
     let answer = fold(start, &ops).expect("generated ops are well-formed and bounded");
     let prompt = {
         let mut s = start.to_string();

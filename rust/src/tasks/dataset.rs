@@ -57,6 +57,8 @@ impl EnvMix {
     }
 
     pub fn total(&self) -> usize {
+        // swarmlint: allow(float-fold) — usize sum; integer addition is
+        // order-independent.
         self.0.iter().map(|(_, c)| c).sum()
     }
 

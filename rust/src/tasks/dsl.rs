@@ -87,6 +87,8 @@ pub fn apply_op(op: &str, mut xs: Vec<i64>) -> Result<Vec<i64>, DslError> {
         "inc" => xs.into_iter().map(|x| bound(x + 1)).collect(),
         "dec" => xs.into_iter().map(|x| bound(x - 1)).collect(),
         "dbl" => xs.into_iter().map(|x| bound(x * 2)).collect(),
+        // swarmlint: allow(float-fold) — i64 sum; integer addition is
+        // order-independent (and `bound` rejects overflow-range results).
         "sum" => Ok(vec![bound(xs.iter().sum())?]),
         "max" => xs.iter().max().map(|&m| vec![m]).ok_or(DslError::EmptyList("max")),
         "min" => xs.iter().min().map(|&m| vec![m]).ok_or(DslError::EmptyList("min")),

@@ -134,6 +134,8 @@ pub fn eval_expr(src: &str) -> Option<i64> {
     }
 }
 
+// swarmlint: allow-fn(panic-path) — every b[*pos] below is behind a
+// `*pos < b.len()` bound check; the parser is total over hostile bytes.
 fn parse_sum(b: &[u8], pos: &mut usize) -> Option<i64> {
     let mut acc = parse_prod(b, pos)?;
     while *pos < b.len() {
@@ -152,6 +154,7 @@ fn parse_sum(b: &[u8], pos: &mut usize) -> Option<i64> {
     Some(acc)
 }
 
+// swarmlint: allow-fn(panic-path) — bounds-guarded indexing, as above.
 fn parse_prod(b: &[u8], pos: &mut usize) -> Option<i64> {
     let mut acc = parse_atom(b, pos)?;
     while *pos < b.len() && b[*pos] == b'*' {
@@ -161,6 +164,7 @@ fn parse_prod(b: &[u8], pos: &mut usize) -> Option<i64> {
     Some(acc)
 }
 
+// swarmlint: allow-fn(panic-path) — bounds-guarded indexing, as above.
 fn parse_atom(b: &[u8], pos: &mut usize) -> Option<i64> {
     if *pos >= b.len() {
         return None;

@@ -8,6 +8,12 @@
 //! a tolerance — robust to GPU nondeterminism / tensor-parallel layout
 //! while reliably detecting different weights or quantized models.
 
+// Trust-critical parse path: untrusted bytes must never panic (swarmlint
+// `panic-path`; CI-matched editor feedback via clippy).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::util::wire::Cursor;
+
 pub const TOPK: usize = 8;
 /// Minimum index overlap (out of TOPK) for a row to match.
 pub const MIN_OVERLAP: usize = 6;
@@ -87,27 +93,28 @@ impl Commitment {
         out
     }
 
+    /// Decode untrusted commitment bytes. Every read goes through the
+    /// panic-free [`Cursor`]: truncation at any boundary is an `Err` (a
+    /// reject verdict upstream), never an out-of-bounds panic.
     pub fn decode(bytes: &[u8]) -> anyhow::Result<Commitment> {
-        anyhow::ensure!(bytes.len() >= 2, "commitment truncated");
-        let n = u16::from_le_bytes(bytes[..2].try_into().unwrap()) as usize;
-        let mut pos = 2;
-        let mut rows = Vec::with_capacity(n);
+        fn want<T>(v: Option<T>) -> anyhow::Result<T> {
+            v.ok_or_else(|| anyhow::anyhow!("commitment truncated"))
+        }
+        let mut c = Cursor::new(bytes);
+        let n = want(c.u16_le())? as usize;
+        let mut rows = Vec::with_capacity(n.min(1024));
         for _ in 0..n {
-            anyhow::ensure!(pos + 5 <= bytes.len(), "commitment truncated");
-            let p = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
-            let k = bytes[pos + 4] as usize;
-            pos += 5;
-            anyhow::ensure!(pos + k * 8 <= bytes.len(), "commitment truncated");
+            let p = want(c.u32_le())?;
+            let k = want(c.u8())? as usize;
             let mut idx = Vec::with_capacity(k);
             let mut val = Vec::with_capacity(k);
             for _ in 0..k {
-                idx.push(u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
-                val.push(f32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap()));
-                pos += 8;
+                idx.push(want(c.u32_le())?);
+                val.push(want(c.f32_le())?);
             }
             rows.push(CommitRow { pos: p, idx, val });
         }
-        anyhow::ensure!(pos == bytes.len(), "trailing bytes in commitment");
+        anyhow::ensure!(c.remaining() == 0, "trailing bytes in commitment");
         Ok(Commitment { rows })
     }
 
@@ -321,5 +328,32 @@ mod tests {
         }
         assert_eq!(topk_abs(&[], 4), (Vec::new(), Vec::new()));
         assert_eq!(topk_abs(&[1.0, 2.0], 0), (Vec::new(), Vec::new()));
+    }
+
+    #[test]
+    fn decode_truncation_is_error_not_panic() {
+        let mut rng = Rng::new(9);
+        let bytes = Commitment::build(&hidden_rows(&mut rng, 4, 16), TOPK).encode();
+        for cut in 0..bytes.len() {
+            assert!(Commitment::decode(&bytes[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        assert!(Commitment::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn decode_mutation_fuzz_never_panics() {
+        // Hostile commitments must surface as Err, never a validator panic.
+        let mut rng = Rng::new(10);
+        let base = Commitment::build(&hidden_rows(&mut rng, 3, 8), TOPK).encode();
+        for _ in 0..500 {
+            let mut b = base.clone();
+            for _ in 0..1 + rng.usize(4) {
+                let i = rng.usize(b.len());
+                b[i] = b[i].wrapping_add(1 + rng.next_u32() as u8 % 255);
+            }
+            let _ = Commitment::decode(&b);
+            let grown = [b.as_slice(), &[0u8; 7]].concat();
+            let _ = Commitment::decode(&grown);
+        }
     }
 }

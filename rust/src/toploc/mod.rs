@@ -83,6 +83,40 @@
 //! rather than per-token decode; the two agree exactly up to kernel-shape
 //! fp rounding, which the stage-4 tolerances absorb — the same argument
 //! the validator's own bucketed `prefill_{T}` ladder already relies on.
+//!
+//! # The determinism contract
+//!
+//! Slashing (§2.3.3) is only sound if a verdict is a pure function of
+//! the submission bytes and the published policy weights — any other
+//! input makes "validator A slashed what validator B accepted" possible,
+//! and the swarm's economics collapse to whichever validator you drew.
+//! Code on the verdict path therefore obeys four rules, enforced
+//! mechanically by `swarmlint` (see [`crate::analysis`]) as a binding CI
+//! gate:
+//!
+//! 1. **No unordered iteration** — `HashMap`/`HashSet` walk order varies
+//!    per process (seeded hasher), so anything it feeds — group ids,
+//!    serialized bytes, verdict ordering — diverges between validators.
+//!    Ordered containers (`BTreeMap`/`BTreeSet`) or explicit sorts only.
+//! 2. **No wall-clock or ambient entropy** — `SystemTime`/`Instant`
+//!    readings and OS randomness cannot be recomputed by a second
+//!    validator. All randomness flows from [`crate::util::rng::Rng`]
+//!    seeded constructors; the staleness *policy* input (`current_step`)
+//!    enters as an explicit argument, never a clock read.
+//! 3. **No panics on untrusted bytes** — a hostile submission must
+//!    surface as a reject [`validator::Rejection`] / verdict, never a
+//!    panic: a crashing validator is an unslashable denial of service
+//!    (and a poisoned one acquits by absence). Parsing goes through
+//!    [`crate::util::wire::Cursor`]; float comparisons use `total_cmp`.
+//! 4. **Pinned float accumulation** — float addition is non-associative,
+//!    so tolerance comparisons are only reproducible if the fold order
+//!    is fixed. Accumulations on the verdict path use
+//!    [`crate::util::numeric`]'s documented left-to-right folds.
+//!
+//! The same contract covers the worker-side generation path (tokens,
+//! `sampled_probs`, commitments): the worker must be able to reproduce
+//! its own bytes under the validator's recomputation, or honest work
+//! gets slashed.
 
 pub mod commitment;
 pub mod pipeline;

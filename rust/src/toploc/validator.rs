@@ -3,6 +3,10 @@
 //! here; the validator *node* (coordinator::validator) feeds it prefill
 //! outputs from the runtime.
 
+// Trust-critical verdict path: hostile submissions must never panic the
+// validator (swarmlint `panic-path`; clippy mirrors the gate in CI).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use super::commitment::Commitment;
 use crate::rl::reward::RewardConfig;
 use crate::rl::rollout_file::{Submission, WireRollout};
@@ -263,6 +267,16 @@ impl Validator {
                 // would be NaN and poison z (the old global-max code
                 // treated -inf logits as probability 0; keep that).
             }
+            // A row of all -inf (or logits pushed until exp overflows the
+            // rescaled normalizer) makes every q below NaN or inf. Those
+            // NaNs would flow into the tail expectation and the median,
+            // where `NaN > tol` is false — i.e. a hostile row would *pass*
+            // every later comparison. Reject the row outright instead.
+            if !z.is_finite() || z <= 0.0 {
+                return Err(Rejection::ValueBounds(format!(
+                    "non-finite softmax normalizer at position {pos}"
+                )));
+            }
             // Pass 2: p(sampled) and the sub-threshold tail mass.
             let sampled = r.tokens[pos] as usize;
             let mut p = 0.0f32;
@@ -289,8 +303,11 @@ impl Validator {
             return Err(Rejection::SamplingBimodal { low_frac: low as f64 / n });
         }
         // Median via selection instead of a full sort of the error vector.
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: any NaN an attacker
+        // sneaks into the error vector sorts largest instead of panicking
+        // the validator mid-verdict.
         let mid = errs.len() / 2;
-        let (_, median, _) = errs.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        let (_, median, _) = errs.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
         let median = *median;
         if median > self.cfg.prob_median_tol {
             return Err(Rejection::ProbMismatch { median_err: median });
@@ -378,6 +395,25 @@ mod tests {
         // Mass is uniform over the remaining 7 tokens.
         w.rollout.sampled_probs = vec![1.0 / 7.0; 4];
         v.check_sampling(&w, &logits, vocab).unwrap();
+    }
+
+    #[test]
+    fn sampling_check_rejects_all_neg_infinity_row() {
+        // An entire row of -inf gives z = 0; every q would be NaN, and
+        // since `NaN > tol` is false the row would slip past both the
+        // bimodality and the median comparison. It must reject instead.
+        let v = Validator::new(ValidatorConfig::default());
+        let vocab = 8;
+        let mut w = wire(vec![1, 3, 4, 5, 6], 1, false, 0.0);
+        w.rollout.sampled_probs = vec![0.125; 4];
+        let mut logits = vec![0.0f32; 5 * vocab];
+        for x in &mut logits[2 * vocab..3 * vocab] {
+            *x = f32::NEG_INFINITY;
+        }
+        match v.check_sampling(&w, &logits, vocab) {
+            Err(Rejection::ValueBounds(msg)) => assert!(msg.contains("normalizer")),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -7,9 +7,11 @@ pub mod cli;
 pub mod json;
 pub mod logger;
 pub mod metrics;
+pub mod numeric;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod wire;
 
 /// Monotonic milliseconds since process start (cheap wall-clock for logs).
 pub fn now_ms() -> u64 {

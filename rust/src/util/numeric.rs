@@ -1,0 +1,49 @@
+//! Canonical float accumulation for commitment / verdict code.
+//!
+//! Float addition is not associative, so any sum whose *order* is
+//! unspecified (or tied to iteration order of an unordered container) can
+//! differ between the worker that produced a value and the validator that
+//! recomputes it — enough to flip a tolerance check and make a slashing
+//! verdict irreproducible. Trust-critical code must fold floats through
+//! these helpers (swarmlint rule `float-fold`): a documented left-to-right
+//! fold over an explicitly ordered iterator, identical on every host.
+
+/// Left-to-right sum of `f64` terms, in exactly the order yielded.
+pub fn fold_f64<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    xs.into_iter().fold(0.0, |acc, x| acc + x)
+}
+
+/// Left-to-right sum of `f32` terms, in exactly the order yielded.
+pub fn fold_f32<I: IntoIterator<Item = f32>>(xs: I) -> f32 {
+    xs.into_iter().fold(0.0, |acc, x| acc + x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_sequential_addition() {
+        let xs = [1.0e16, 1.0, -1.0e16, 1.0];
+        let mut acc = 0.0;
+        for x in xs {
+            acc += x;
+        }
+        assert_eq!(fold_f64(xs), acc);
+    }
+
+    #[test]
+    fn order_sensitivity_is_why_this_exists() {
+        // The same multiset of terms, two orders, two answers: exactly the
+        // hazard the canonical fold pins down.
+        let a = fold_f64([1.0e16, 1.0, -1.0e16]);
+        let b = fold_f64([1.0e16, -1.0e16, 1.0]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn f32_fold_left_to_right() {
+        let xs = [0.1f32, 0.2, 0.3];
+        assert_eq!(fold_f32(xs), ((0.0 + 0.1) + 0.2) + 0.3);
+    }
+}

@@ -104,7 +104,9 @@ impl Rng {
 
     /// Sample an index from unnormalized non-negative weights.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
+        // Canonical left-to-right fold (swarmlint `float-fold`): sampling
+        // feeds slashable token streams, so accumulation order is pinned.
+        let total: f64 = crate::util::numeric::fold_f64(weights.iter().copied());
         if total <= 0.0 {
             return self.usize(weights.len());
         }
@@ -124,12 +126,12 @@ impl Rng {
         let t = temperature.max(1e-4);
         let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let exps: Vec<f64> = logits.iter().map(|&l| (((l - max) / t) as f64).exp()).collect();
-        let z: f64 = exps.iter().sum();
+        let z: f64 = crate::util::numeric::fold_f64(exps.iter().copied());
         let idx = self.weighted(&exps);
         // Report the *untempered* model probability (what TOPLOC's sampling
         // checks reason about).
         let exps1: Vec<f64> = logits.iter().map(|&l| ((l - max) as f64).exp()).collect();
-        let z1: f64 = exps1.iter().sum();
+        let z1: f64 = crate::util::numeric::fold_f64(exps1.iter().copied());
         let _ = z;
         (idx, (exps1[idx] / z1) as f32)
     }

@@ -1,0 +1,108 @@
+//! Panic-free little-endian byte cursor for parsing untrusted wire bytes.
+//!
+//! Every reader returns `Option`: a truncated or malformed buffer surfaces
+//! as `None` for the caller to turn into a reject verdict, never as an
+//! out-of-bounds panic (swarmlint rule `panic-path` — a panicking validator
+//! is an unslashable denial of service on the audit loop).
+
+/// Forward-only reader over an untrusted byte slice.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left unread.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len().saturating_sub(self.pos)
+    }
+
+    /// Next `n` bytes, advancing past them.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.bytes.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+
+    /// Fixed-size array read (the `try_into` that cannot be mis-sized).
+    pub fn array<const N: usize>(&mut self) -> Option<[u8; N]> {
+        let s = self.take(N)?;
+        let mut out = [0u8; N];
+        out.copy_from_slice(s);
+        Some(out)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        Some(self.array::<1>()?[0])
+    }
+
+    pub fn u16_le(&mut self) -> Option<u16> {
+        Some(u16::from_le_bytes(self.array()?))
+    }
+
+    pub fn u32_le(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.array()?))
+    }
+
+    pub fn u64_le(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.array()?))
+    }
+
+    pub fn f32_le(&mut self) -> Option<f32> {
+        Some(f32::from_le_bytes(self.array()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_in_order() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&7u16.to_le_bytes());
+        b.extend_from_slice(&9u32.to_le_bytes());
+        b.extend_from_slice(&11u64.to_le_bytes());
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        b.push(42);
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.u16_le(), Some(7));
+        assert_eq!(c.u32_le(), Some(9));
+        assert_eq!(c.u64_le(), Some(11));
+        assert_eq!(c.f32_le(), Some(1.5));
+        assert_eq!(c.u8(), Some(42));
+        assert_eq!(c.remaining(), 0);
+        assert_eq!(c.u8(), None);
+    }
+
+    #[test]
+    fn truncation_is_none_not_panic() {
+        for len in 0..8 {
+            let b = vec![0u8; len];
+            let mut c = Cursor::new(&b);
+            assert_eq!(c.u64_le(), None, "len {len}");
+            // A failed read consumes nothing.
+            assert_eq!(c.offset(), 0);
+        }
+    }
+
+    #[test]
+    fn take_past_end_is_none() {
+        let b = [1u8, 2, 3];
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.take(2), Some(&[1u8, 2][..]));
+        assert_eq!(c.take(2), None);
+        assert_eq!(c.take(1), Some(&[3u8][..]));
+        assert_eq!(c.take(usize::MAX), None); // overflow-safe
+    }
+}

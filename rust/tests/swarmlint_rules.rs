@@ -1,0 +1,390 @@
+//! Fixture tests for the swarmlint rules engine: every rule firing on a
+//! minimal positive fixture and staying quiet on the idiomatic negative,
+//! the suppression machinery, the lock-order checker, and — the binding
+//! part — the whole `src/` tree coming up clean, which is the same check
+//! CI runs via the `swarmlint` binary.
+
+use std::path::Path;
+
+use intellect2::analysis::rules::{analyze_source, repo_config, Config, Rule};
+use intellect2::analysis::{analyze_tree, lexer, lockmap};
+
+/// Analyze `src` as a trust-critical file; return unsuppressed rule hits.
+fn lint_trusted(src: &str) -> Vec<Rule> {
+    let cfg = repo_config();
+    analyze_source("toploc/fixture.rs", src, &cfg).unsuppressed().map(|v| v.rule).collect()
+}
+
+/// Analyze `src` as a file *outside* the trust set.
+fn lint_untrusted(src: &str) -> Vec<Rule> {
+    let cfg = repo_config();
+    analyze_source("viz/fixture.rs", src, &cfg).unsuppressed().map(|v| v.rule).collect()
+}
+
+// --- R1: unordered-iter ----------------------------------------------------
+
+#[test]
+fn unordered_iter_fires_on_hash_container_walks() {
+    let src = r#"
+        use std::collections::{HashMap, HashSet};
+        fn f() {
+            let m: HashMap<u64, u64> = HashMap::new();
+            for (k, v) in m.iter() { println!("{k}{v}"); }
+            let s = HashSet::<u64>::new();
+            let v: Vec<u64> = s.into_iter().collect();
+        }
+    "#;
+    let hits = lint_trusted(src);
+    assert!(hits.iter().filter(|r| **r == Rule::UnorderedIter).count() >= 3, "{hits:?}");
+}
+
+#[test]
+fn unordered_iter_quiet_on_btree_and_lookups() {
+    let src = r#"
+        use std::collections::{BTreeMap, HashMap};
+        fn f(m: &HashMap<u64, u64>, b: &BTreeMap<u64, u64>) -> Option<u64> {
+            let _ = b.iter().count(); // ordered: fine
+            m.get(&3).copied() // point lookup, no iteration: fine
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+}
+
+#[test]
+fn trust_rules_do_not_apply_outside_trust_modules() {
+    let src = r#"
+        use std::collections::HashMap;
+        fn f(m: HashMap<u64, u64>) {
+            for k in m.keys() { println!("{k}"); }
+            let x: Option<u64> = None;
+            x.unwrap();
+        }
+    "#;
+    assert_eq!(lint_untrusted(src), vec![]);
+    assert!(!lint_trusted(src).is_empty());
+}
+
+// --- R2: wall-clock --------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_on_time_and_entropy_sources() {
+    let src = r#"
+        fn f() -> u64 {
+            let t = std::time::Instant::now();
+            let s = std::time::SystemTime::now();
+            crate::util::now_ms()
+        }
+    "#;
+    let hits = lint_trusted(src);
+    assert!(hits.iter().filter(|r| **r == Rule::WallClock).count() >= 3, "{hits:?}");
+}
+
+#[test]
+fn wall_clock_quiet_on_seeded_rng_and_duration_types() {
+    let src = r#"
+        use crate::util::rng::Rng;
+        fn f(seed: u64) -> u64 {
+            let mut rng = Rng::new(seed);
+            let _d = std::time::Duration::from_millis(5); // a span, not a reading
+            rng.next_u64()
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+}
+
+// --- R3: panic-path --------------------------------------------------------
+
+#[test]
+fn panic_path_fires_on_unwrap_expect_panic_and_byte_indexing() {
+    let src = r#"
+        fn parse(bytes: &[u8]) -> u8 {
+            let x: Option<u8> = None;
+            x.unwrap();
+            x.expect("nope");
+            if bytes.is_empty() { panic!("empty"); }
+            bytes[0]
+        }
+    "#;
+    let hits = lint_trusted(src);
+    assert!(hits.iter().filter(|r| **r == Rule::PanicPath).count() >= 4, "{hits:?}");
+}
+
+#[test]
+fn panic_path_quiet_on_poison_idiom_checked_access_and_tests() {
+    let src = r#"
+        use std::sync::Mutex;
+        fn f(m: &Mutex<u64>, bytes: &[u8]) -> Option<u8> {
+            let g = m.lock().unwrap(); // poison idiom: exempt
+            let _ = *g;
+            bytes.get(0).copied() // checked access: fine
+        }
+        #[cfg(test)]
+        mod tests {
+            #[test]
+            fn t() {
+                let x: Option<u8> = Some(1);
+                x.unwrap(); // tests may panic freely
+            }
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+}
+
+#[test]
+fn panic_path_indexing_only_flags_byte_params() {
+    // Indexing a local Vec (length under our control) is not the
+    // untrusted-byte pattern the rule targets.
+    let src = r#"
+        fn f(n: usize) -> u64 {
+            let v: Vec<u64> = (0..n as u64).collect();
+            if v.is_empty() { 0 } else { v[0] }
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+}
+
+// --- R4: float-fold --------------------------------------------------------
+
+#[test]
+fn float_fold_fires_on_sum_and_product() {
+    let src = r#"
+        fn f(xs: &[f64]) -> f64 {
+            let a: f64 = xs.iter().sum();
+            let b: f64 = xs.iter().product();
+            a + b + xs.iter().sum::<f64>()
+        }
+    "#;
+    let hits = lint_trusted(src);
+    assert!(hits.iter().filter(|r| **r == Rule::FloatFold).count() >= 3, "{hits:?}");
+}
+
+#[test]
+fn float_fold_quiet_on_canonical_fold() {
+    let src = r#"
+        fn f(xs: &[f64]) -> f64 {
+            crate::util::numeric::fold_f64(xs.iter().copied())
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+}
+
+// --- suppressions ----------------------------------------------------------
+
+#[test]
+fn annotation_suppresses_trailing_and_next_line_targets() {
+    let src = r#"
+        fn f(xs: &[usize]) -> usize {
+            let a: usize = xs.iter().sum(); // swarmlint: allow(float-fold) — usize sum
+            // swarmlint: allow(float-fold) — usize sum, order-free
+            let b: usize = xs.iter().sum();
+            a + b
+        }
+    "#;
+    let cfg = repo_config();
+    let rep = analyze_source("toploc/fixture.rs", src, &cfg);
+    assert_eq!(rep.unsuppressed().count(), 0);
+    assert_eq!(rep.violations.iter().filter(|v| v.suppressed).count(), 2);
+    assert!(rep.annotations.iter().all(|a| a.used));
+}
+
+#[test]
+fn allow_fn_covers_the_whole_function_and_nothing_else() {
+    let src = r#"
+        // swarmlint: allow-fn(panic-path) — every index is bounds-guarded
+        fn covered(b: &[u8]) -> u8 {
+            if b.len() > 2 { b[0] + b[1] } else { 0 }
+        }
+        fn uncovered(b: &[u8]) -> u8 {
+            b[0]
+        }
+    "#;
+    let cfg = repo_config();
+    let rep = analyze_source("toploc/fixture.rs", src, &cfg);
+    let open: Vec<_> = rep.unsuppressed().collect();
+    assert_eq!(open.len(), 1, "{open:?}");
+    assert_eq!(open[0].rule, Rule::PanicPath);
+    assert!(rep.violations.iter().filter(|v| v.suppressed).count() >= 2);
+}
+
+#[test]
+fn annotation_without_justification_is_a_bad_annotation() {
+    let src = r#"
+        fn f(xs: &[f64]) -> f64 {
+            // swarmlint: allow(float-fold)
+            let a: f64 = xs.iter().sum();
+            // swarmlint: allow(no-such-rule) — whatever
+            let b: f64 = xs.iter().sum();
+            a + b
+        }
+    "#;
+    let hits = lint_trusted(src);
+    assert!(hits.iter().filter(|r| **r == Rule::BadAnnotation).count() == 2, "{hits:?}");
+    // The malformed annotations suppress nothing: the sums still fire.
+    assert!(hits.iter().filter(|r| **r == Rule::FloatFold).count() == 2, "{hits:?}");
+}
+
+#[test]
+fn unused_annotations_are_reported_not_silently_dropped() {
+    let src = r#"
+        fn f() -> u64 {
+            // swarmlint: allow(panic-path) — stale waiver, nothing fires
+            7
+        }
+    "#;
+    let cfg = repo_config();
+    let rep = analyze_source("toploc/fixture.rs", src, &cfg);
+    assert_eq!(rep.unsuppressed().count(), 0);
+    assert_eq!(rep.annotations.len(), 1);
+    assert!(!rep.annotations[0].used);
+}
+
+// --- R5: lock-order --------------------------------------------------------
+
+fn lock_cfg() -> Config {
+    Config {
+        trust_prefixes: vec![],
+        lock_order: vec!["m::outer".to_string(), "m::inner".to_string()],
+    }
+}
+
+fn lock_check(src: &str, cfg: &Config) -> Vec<String> {
+    let mut reports = vec![analyze_source("m.rs", src, cfg)];
+    lockmap::check_edges(&mut reports, &cfg.lock_order);
+    reports[0].unsuppressed().map(|v| v.message.clone()).collect()
+}
+
+#[test]
+fn lock_order_allows_declared_nesting_and_rejects_reversal() {
+    let ok = r#"
+        fn f(s: &S) {
+            let g = s.outer.lock().unwrap();
+            let h = s.inner.lock().unwrap();
+            drop(h);
+            drop(g);
+        }
+    "#;
+    assert_eq!(lock_check(ok, &lock_cfg()), Vec::<String>::new());
+
+    let reversed = r#"
+        fn f(s: &S) {
+            let g = s.inner.lock().unwrap();
+            let h = s.outer.lock().unwrap();
+        }
+    "#;
+    let msgs = lock_check(reversed, &lock_cfg());
+    assert_eq!(msgs.len(), 1, "{msgs:?}");
+    assert!(msgs[0].contains("against the declared lock order"), "{msgs:?}");
+}
+
+#[test]
+fn lock_order_flags_same_class_nesting_as_self_deadlock() {
+    let src = r#"
+        fn f(s: &S) {
+            let g = s.inner.lock().unwrap();
+            let h = s.inner.lock().unwrap();
+        }
+    "#;
+    let msgs = lock_check(src, &lock_cfg());
+    assert_eq!(msgs.len(), 1, "{msgs:?}");
+    assert!(msgs[0].contains("self-deadlock"), "{msgs:?}");
+}
+
+#[test]
+fn lock_order_flags_undeclared_classes_in_edges() {
+    let src = r#"
+        fn f(s: &S) {
+            let g = s.outer.lock().unwrap();
+            let h = s.mystery.lock().unwrap();
+        }
+    "#;
+    let msgs = lock_check(src, &lock_cfg());
+    assert_eq!(msgs.len(), 1, "{msgs:?}");
+    assert!(msgs[0].contains("missing from the declared lock order"), "{msgs:?}");
+}
+
+#[test]
+fn lock_temporaries_release_at_statement_end() {
+    // A chained (unbound) guard dies at the `;`, so sequential statements
+    // that each take a lock do not nest — the swarm.rs stats-merge idiom.
+    let src = r#"
+        fn f(s: &S) {
+            let snapshot = s.inner.lock().unwrap().clone();
+            let mut g = s.inner.lock().unwrap();
+            *g = snapshot;
+        }
+    "#;
+    assert_eq!(lock_check(src, &lock_cfg()), Vec::<String>::new());
+}
+
+#[test]
+fn dropped_guards_stop_generating_edges() {
+    let src = r#"
+        fn f(s: &S) {
+            let g = s.inner.lock().unwrap();
+            drop(g);
+            let h = s.outer.lock().unwrap();
+        }
+    "#;
+    assert_eq!(lock_check(src, &lock_cfg()), Vec::<String>::new());
+}
+
+// --- the binding gate ------------------------------------------------------
+
+fn src_root() -> &'static Path {
+    // Integration tests run with CWD = the package root (`rust/`).
+    Path::new("src")
+}
+
+#[test]
+fn whole_tree_is_swarmlint_clean() {
+    let cfg = repo_config();
+    let reports = analyze_tree(src_root(), &cfg).expect("src/ readable");
+    assert!(reports.len() > 30, "walked only {} files", reports.len());
+    let mut open = Vec::new();
+    for r in &reports {
+        for v in r.unsuppressed() {
+            open.push(format!("{}:{} [{}] {}", v.file, v.line, v.rule.name(), v.message));
+        }
+    }
+    assert!(open.is_empty(), "unsuppressed swarmlint violations:\n{}", open.join("\n"));
+}
+
+#[test]
+fn tree_lock_edges_all_follow_declared_order() {
+    let cfg = repo_config();
+    let reports = analyze_tree(src_root(), &cfg).expect("src/ readable");
+    let map = lockmap::render_map(&reports, &cfg.lock_order);
+    assert!(!map.contains("VIOLATION"), "{map}");
+    // The map is non-trivial: the crate really does hold locks.
+    let sites: usize = reports.iter().map(|r| r.lock_sites.len()).sum();
+    assert!(sites >= 40, "only {sites} lock sites found — scan regressed?");
+}
+
+#[test]
+fn every_tree_annotation_is_used_and_justified() {
+    let cfg = repo_config();
+    let reports = analyze_tree(src_root(), &cfg).expect("src/ readable");
+    let mut stale = Vec::new();
+    for r in &reports {
+        for a in &r.annotations {
+            assert!(!a.justification.is_empty(), "{}:{} lacks justification", r.file, a.line);
+            if !a.used {
+                stale.push(format!("{}:{}", r.file, a.line));
+            }
+        }
+    }
+    assert!(stale.is_empty(), "stale annotations: {stale:?}");
+}
+
+#[test]
+fn lexer_roundtrips_every_source_file() {
+    // Totality + losslessness over the real codebase: lexing any file in
+    // src/ and re-joining the token texts reproduces it byte for byte.
+    let files = intellect2::analysis::collect_rs_files(src_root()).expect("src/ readable");
+    assert!(files.len() > 30);
+    for path in files {
+        let src = std::fs::read_to_string(&path).expect("readable");
+        let toks = lexer::lex(&src);
+        assert_eq!(lexer::rejoin(&toks), src, "lossy lex of {}", path.display());
+    }
+}

@@ -1,0 +1,99 @@
+//! Churn goodput benchmark: run the torture harness twice — once
+//! fault-free, once with process churn (worker crash + relay kill + fresh
+//! join every step) and request-level fault injection on every relay —
+//! and compare throughput. Engine-free (synthetic checkpoints), so it
+//! runs in CI without model artifacts. Emits `BENCH_churn.json` for the
+//! regression gate.
+//!
+//!   cargo run --release --bin churn_bench
+//!
+//! Hard gates (exit non-zero, not statistics):
+//! - both runs complete every step within the per-step deadline;
+//! - no honest node is slashed under churn;
+//! - goodput under churn stays >= 50% of the fault-free baseline.
+
+use intellect2::coordinator::{run_churn, ChurnConfig};
+use intellect2::http::FaultSpec;
+use intellect2::util::bench::BenchReport;
+
+fn main() -> anyhow::Result<()> {
+    let base_cfg = ChurnConfig::default();
+    let churn_cfg = ChurnConfig {
+        churn: true,
+        server_faults: Some(FaultSpec {
+            fault_rate: 0.25,
+            burst_len: 2,
+            hang_ms: 150,
+            ..FaultSpec::default()
+        }),
+        ..ChurnConfig::default()
+    };
+
+    println!("baseline: {} steps, fault-free ...", base_cfg.steps);
+    let base = run_churn(&base_cfg)?;
+    anyhow::ensure!(
+        base.steps_completed == base_cfg.steps,
+        "baseline incomplete: {} of {} steps",
+        base.steps_completed,
+        base_cfg.steps
+    );
+    println!(
+        "baseline: {} tasks in {:.2}s ({} retries)",
+        base.tasks_completed, base.elapsed_secs, base.fetch_retries
+    );
+
+    println!("churn: {} steps, crash+kill+join per step, faulty relays ...", churn_cfg.steps);
+    let churn = run_churn(&churn_cfg)?;
+    println!(
+        "churn: {} tasks in {:.2}s ({} retries, {} crashed, {} joined, {} relays killed, \
+         {} evicted, {} requeued, {} reparents)",
+        churn.tasks_completed,
+        churn.elapsed_secs,
+        churn.fetch_retries,
+        churn.workers_crashed,
+        churn.workers_joined,
+        churn.relays_killed,
+        churn.workers_evicted,
+        churn.tasks_requeued,
+        churn.reparent_events
+    );
+    anyhow::ensure!(
+        churn.steps_completed == churn_cfg.steps,
+        "churn run incomplete: {} of {} steps",
+        churn.steps_completed,
+        churn_cfg.steps
+    );
+    anyhow::ensure!(
+        churn.honest_slashed == 0,
+        "{} honest node(s) slashed under churn",
+        churn.honest_slashed
+    );
+
+    // Goodput: completed steps per wall-clock second, churn over baseline.
+    let base_rate = base.steps_completed as f64 / base.elapsed_secs;
+    let churn_rate = churn.steps_completed as f64 / churn.elapsed_secs;
+    let goodput_ratio = churn_rate / base_rate;
+    // Mean extra wall clock per step that recovery (eviction, requeue,
+    // failover, re-parenting) costs under churn.
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let recovery_overhead = mean(&churn.step_secs) - mean(&base.step_secs);
+    println!(
+        "goodput: {churn_rate:.2} vs {base_rate:.2} steps/s ({:.0}% of fault-free), \
+         +{recovery_overhead:.3}s/step recovery",
+        goodput_ratio * 100.0
+    );
+    anyhow::ensure!(
+        goodput_ratio >= 0.5,
+        "goodput under churn fell below 50% of fault-free ({:.0}%)",
+        goodput_ratio * 100.0
+    );
+
+    let mut rep = BenchReport::new("churn");
+    rep.metric("goodput_ratio", goodput_ratio);
+    rep.metric("steps_completed", churn.steps_completed as f64);
+    rep.metric("recovery_overhead", recovery_overhead.max(0.0));
+    rep.metric("fetch_retry_calls", churn.fetch_retries as f64);
+    let path = rep.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! Churn-torture harness: the full protocol + SHARDCAST stack (ledger,
+//! discovery, orchestrator, heartbeating workers, origin + relay tree)
+//! driven through a deterministic churn schedule — workers crash mid-task,
+//! relays die and are replaced, fresh workers join — with optional
+//! server-side fault injection ([`crate::http::FaultInjector`]) layered on
+//! top. Engine-free by construction (tasks are checkpoint fetches with
+//! synthetic payloads), so it runs in CI without model artifacts.
+//!
+//! Victim selection and payload bytes all derive from
+//! [`crate::util::rng::Rng`] streams of one seed, so a torture run is
+//! replayable: same seed, same crashes, same kills, same join order.
+//!
+//! The invariants a torture run must uphold (asserted by
+//! `tests/churn_e2e.rs` and gated in the `churn_bench` bin):
+//! - every step's task quota completes (orphaned tasks are requeued by the
+//!   health sweep, not lost);
+//! - no honest node ends up slashed on the ledger (churn is not cheating);
+//! - goodput under churn stays within a constant factor of fault-free.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::{FaultInjector, FaultPlan, FaultSpec, ServerConfig};
+use crate::protocol::{
+    DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker,
+};
+use crate::shardcast::{Origin, Relay, ShardcastClient};
+use crate::util::json::Json;
+use crate::util::metrics::Counter;
+use crate::util::rng::Rng;
+
+/// Churn-pick domains (streams of the shared [`FaultPlan`]).
+const DOMAIN_WORKER_CRASH: u64 = 1;
+const DOMAIN_RELAY_KILL: u64 = 2;
+
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    pub seed: u64,
+    /// Checkpoint steps to publish and fully distribute.
+    pub steps: u64,
+    pub n_relays: usize,
+    pub n_workers: usize,
+    /// Synthetic checkpoint size.
+    pub payload_bytes: usize,
+    pub shard_bytes: usize,
+    /// Fetch tasks enqueued per step (> `n_workers` keeps survivors busy
+    /// while an evicted worker's orphan waits out the health sweep).
+    pub tasks_per_step: usize,
+    /// Process-level churn: crash a worker, kill a relay and join a fresh
+    /// worker every step.
+    pub churn: bool,
+    /// Request-level faults injected into every relay server.
+    pub server_faults: Option<FaultSpec>,
+    /// Per-step liveness deadline; a step that cannot finish its quota in
+    /// this window ends the run early (reported, not hung).
+    pub step_timeout: Duration,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> ChurnConfig {
+        ChurnConfig {
+            seed: 7,
+            steps: 5,
+            n_relays: 3,
+            n_workers: 3,
+            payload_bytes: 64 * 1024,
+            shard_bytes: 8 * 1024,
+            tasks_per_step: 12,
+            churn: false,
+            server_faults: None,
+            step_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a torture run survived and what it cost.
+#[derive(Debug, Clone)]
+pub struct ChurnReport {
+    /// Steps whose full task quota completed within the deadline.
+    pub steps_completed: u64,
+    /// Fetch tasks that completed (may exceed the quota under churn: a
+    /// crashed worker's orphan re-executes on another worker).
+    pub tasks_completed: u64,
+    /// Failed fetch attempts absorbed by retry/failover.
+    pub fetch_retries: u64,
+    /// Re-parent events observed on relays still alive at the end.
+    pub reparent_events: u64,
+    pub workers_crashed: u64,
+    pub workers_joined: u64,
+    pub relays_killed: u64,
+    pub relays_restarted: u64,
+    /// Evictions by the orchestrator's health sweep.
+    pub workers_evicted: u64,
+    /// Orphaned tasks requeued on eviction ([`Orchestrator::tasks_requeued`]).
+    pub tasks_requeued: u64,
+    /// Workers slashed on the ledger — must stay 0: churn is not cheating.
+    pub honest_slashed: u64,
+    pub elapsed_secs: f64,
+    pub step_secs: Vec<f64>,
+}
+
+struct WorkerSlot {
+    worker: Worker,
+    address: u64,
+}
+
+/// Boot a worker, get it invited + admitted, and start its heartbeat loop
+/// with a fetch-task handler that downloads checkpoints through the live
+/// relay directory.
+#[allow(clippy::too_many_arguments)]
+fn join_worker(
+    identity: Identity,
+    ledger: &Ledger,
+    discovery_url: &str,
+    orch: &Orchestrator,
+    orch_url: &str,
+    relay_dir: &Arc<Mutex<Vec<String>>>,
+    tasks_ok: &Arc<Counter>,
+    retries: &Arc<Counter>,
+    seed: u64,
+) -> anyhow::Result<WorkerSlot> {
+    let mut worker = Worker::boot(identity, ledger, 1, discovery_url, 8)?;
+    orch.sweep_discovery(discovery_url, "pool-token");
+    anyhow::ensure!(worker.is_invited(), "worker {} not invited", worker.identity.address);
+    let address = worker.identity.address;
+    let dir = Arc::clone(relay_dir);
+    let tasks_ok = Arc::clone(tasks_ok);
+    let retries = Arc::clone(retries);
+    worker.start_heartbeat(
+        orch_url.to_string(),
+        Duration::from_millis(25),
+        Arc::new(move |task, _vol| {
+            let step = task
+                .payload
+                .get("step")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("fetch task without step"))?;
+            // The worker reports a task done even when the handler errors,
+            // so resilience lives here: keep retrying with a fresh relay
+            // directory snapshot until the checkpoint lands or a liveness
+            // deadline passes.
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                let urls: Vec<String> = dir.lock().unwrap().clone();
+                let sc = ShardcastClient::new(
+                    &format!("churn-{address}"),
+                    &urls,
+                    seed ^ address ^ step,
+                    false,
+                );
+                match sc.fetch_checkpoint(step) {
+                    Ok((bytes, report)) => {
+                        retries.add(report.retries as u64);
+                        tasks_ok.inc();
+                        return Ok(format!("step {step}: {} bytes", bytes.len()));
+                    }
+                    Err(e) => {
+                        retries.inc();
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "fetch {step} never succeeded: {e}"
+                        );
+                        std::thread::sleep(Duration::from_millis(40));
+                    }
+                }
+            }
+        }),
+    );
+    Ok(WorkerSlot { worker, address })
+}
+
+fn start_relay(
+    slot: usize,
+    generation: u64,
+    parents: Vec<String>,
+    faults: &Option<FaultSpec>,
+    seed: u64,
+) -> anyhow::Result<Relay> {
+    let cfg = ServerConfig {
+        faults: faults
+            .clone()
+            .map(|spec| FaultInjector::from_seed(seed ^ (0xFA00 + slot as u64), spec)),
+        ..Default::default()
+    };
+    Relay::start_with_parents(
+        &format!("churn-r{slot}g{generation}"),
+        parents,
+        cfg,
+        Duration::from_millis(10),
+    )
+}
+
+/// Run the torture schedule described by `cfg`.
+pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
+    anyhow::ensure!(cfg.n_relays >= 2, "need >= 2 relays for kill/failover churn");
+    anyhow::ensure!(cfg.n_workers >= 2, "need >= 2 workers for crash churn");
+    let t0 = Instant::now();
+    let plan = FaultPlan::new(cfg.seed, cfg.server_faults.clone().unwrap_or_default());
+
+    // --- control plane ---
+    let ledger = Ledger::new();
+    let owner = Identity::from_seed(cfg.seed ^ 0x0FF1CE);
+    ledger.register_key(&owner);
+    ledger.submit(
+        Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address },
+        &owner,
+    )?;
+    let discovery = DiscoveryServer::start("pool-token", 600_000)?;
+    let mut orch = Orchestrator::new(owner, ledger.clone(), 1, 100);
+    orch.max_missed = 2; // fast eviction — churn recovery is the point
+    let orch_srv = OrchestratorServer::start(orch.clone())?;
+
+    // --- shardcast tier: chain topology with the origin as everyone's
+    // fallback parent, so killing relay k forces its child to re-parent ---
+    let origin = Origin::start(ServerConfig::default())?;
+    let relay_dir: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut relays: Vec<Option<Relay>> = Vec::new();
+    for slot in 0..cfg.n_relays {
+        let parents = match relays.last().and_then(|r| r.as_ref()) {
+            Some(prev) => vec![prev.url(), origin.url()],
+            None => vec![origin.url()],
+        };
+        let r = start_relay(slot, 0, parents, &cfg.server_faults, cfg.seed)?;
+        relay_dir.lock().unwrap().push(r.url());
+        relays.push(Some(r));
+    }
+
+    // --- workers ---
+    let tasks_ok = Arc::new(Counter::default());
+    let retries = Arc::new(Counter::default());
+    let mut workers: Vec<Option<WorkerSlot>> = Vec::new();
+    let mut all_addresses: Vec<u64> = Vec::new();
+    for wi in 0..cfg.n_workers {
+        let slot = join_worker(
+            Identity::from_seed(cfg.seed ^ (0xBEEF + wi as u64)),
+            &ledger,
+            &discovery.url(),
+            &orch,
+            &orch_srv.url(),
+            &relay_dir,
+            &tasks_ok,
+            &retries,
+            cfg.seed,
+        )?;
+        all_addresses.push(slot.address);
+        workers.push(Some(slot));
+    }
+
+    let mut report = ChurnReport {
+        steps_completed: 0,
+        tasks_completed: 0,
+        fetch_retries: 0,
+        reparent_events: 0,
+        workers_crashed: 0,
+        workers_joined: 0,
+        relays_killed: 0,
+        relays_restarted: 0,
+        workers_evicted: 0,
+        tasks_requeued: 0,
+        honest_slashed: 0,
+        elapsed_secs: 0.0,
+        step_secs: Vec::new(),
+    };
+
+    let mut tasks_created: u64 = 0;
+    let mut joined: u64 = 0;
+    'steps: for step in 1..=cfg.steps {
+        let t_step = Instant::now();
+        // Deterministic synthetic checkpoint for this step.
+        let mut prng = Rng::new(cfg.seed).fold(step);
+        let payload: Vec<u8> = (0..cfg.payload_bytes).map(|_| prng.range(0, 256) as u8).collect();
+        origin.publish(step, &payload, cfg.shard_bytes);
+
+        // Enqueue the step's quota first, give the 25 ms heartbeats a
+        // moment to pick tasks up, and only then churn — so crashes land
+        // mid-task and relay kills land mid-download.
+        for _ in 0..cfg.tasks_per_step {
+            orch.create_task("fetch", Json::obj(vec![("step", step.into())]));
+            tasks_created += 1;
+        }
+
+        if cfg.churn {
+            std::thread::sleep(Duration::from_millis(60));
+
+            // Restart one slot that died in an earlier step, so the tier
+            // keeps roughly constant size across the run. Its preferred
+            // parent may be the relay killed below — then the fallback
+            // chain (-> origin) is what keeps it mirroring.
+            if let Some(slot) = (0..relays.len()).find(|&i| relays[i].is_none()) {
+                let live_parent = relays.iter().flatten().next().map(Relay::url);
+                let parents = match live_parent {
+                    Some(p) => vec![p, origin.url()],
+                    None => vec![origin.url()],
+                };
+                let r = start_relay(slot, step, parents, &cfg.server_faults, cfg.seed)?;
+                relay_dir.lock().unwrap().push(r.url());
+                relays[slot] = Some(r);
+                report.relays_restarted += 1;
+            }
+
+            // Kill one live relay (never the last one standing): clients
+            // lose it mid-run and must fail over + quarantine it.
+            let live: Vec<usize> = (0..relays.len()).filter(|&i| relays[i].is_some()).collect();
+            if live.len() > 1 {
+                let victim = live[plan.pick(DOMAIN_RELAY_KILL, step, live.len())];
+                if let Some(r) = relays[victim].take() {
+                    let url = r.url();
+                    drop(r);
+                    relay_dir.lock().unwrap().retain(|u| u != &url);
+                    report.relays_killed += 1;
+                }
+            }
+
+            // Crash a worker — preferring one that holds a task, so the
+            // orphan-requeue path is exercised.
+            let holding = orch.nodes_with_tasks();
+            let live: Vec<usize> = (0..workers.len()).filter(|&i| workers[i].is_some()).collect();
+            if live.len() > 1 {
+                let by_addr = |addr: u64| {
+                    live.iter()
+                        .copied()
+                        .find(|&i| workers[i].as_ref().is_some_and(|w| w.address == addr))
+                };
+                let victim = holding
+                    .get(plan.pick(DOMAIN_WORKER_CRASH, step, holding.len().max(1)))
+                    .copied()
+                    .and_then(by_addr)
+                    .unwrap_or_else(|| live[plan.pick(DOMAIN_WORKER_CRASH, step, live.len())]);
+                if let Some(mut w) = workers[victim].take() {
+                    w.worker.shutdown();
+                    report.workers_crashed += 1;
+                }
+            }
+
+            // A fresh worker joins the swarm mid-run.
+            joined += 1;
+            let slot = join_worker(
+                Identity::from_seed(cfg.seed ^ (0x7A11_0000 + joined)),
+                &ledger,
+                &discovery.url(),
+                &orch,
+                &orch_srv.url(),
+                &relay_dir,
+                &tasks_ok,
+                &retries,
+                cfg.seed,
+            )?;
+            all_addresses.push(slot.address);
+            workers.push(Some(slot));
+            report.workers_joined += 1;
+        }
+
+        // Wait out the step's quota, sweeping for dead nodes as we go (the
+        // sweep is what requeues a crashed worker's orphaned task).
+        while tasks_ok.get() < tasks_created {
+            if t_step.elapsed() > cfg.step_timeout {
+                crate::warn!(
+                    "churn",
+                    "step {step}: {} of {tasks_created} tasks after {:?} — ending run",
+                    tasks_ok.get(),
+                    cfg.step_timeout
+                );
+                break 'steps;
+            }
+            report.workers_evicted += orch.health_sweep().len() as u64;
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        report.steps_completed += 1;
+        report.step_secs.push(t_step.elapsed().as_secs_f64());
+    }
+
+    // --- teardown + verdicts ---
+    for w in workers.iter_mut().flatten() {
+        w.worker.shutdown();
+    }
+    report.tasks_completed = tasks_ok.get();
+    report.fetch_retries = retries.get();
+    report.reparent_events = relays.iter().flatten().map(Relay::reparent_count).sum();
+    report.tasks_requeued = orch.tasks_requeued.get();
+    report.honest_slashed =
+        all_addresses.iter().filter(|&&a| ledger.is_slashed(1, a)).count() as u64;
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}

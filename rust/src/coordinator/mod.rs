@@ -3,6 +3,7 @@
 //! pipeline driver, and the full free-running decentralized swarm.
 
 pub mod batcher;
+pub mod churn;
 pub mod gen;
 pub mod pretrain;
 pub mod step;
@@ -11,6 +12,7 @@ pub mod sync_driver;
 pub mod validation;
 
 pub use batcher::{train_on_rollouts, StepReport};
+pub use churn::{run_churn, ChurnConfig, ChurnReport};
 pub use gen::{group_id_base, RolloutGenerator};
 pub use step::{filter_groups, record_step, FilterOutcome};
 pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};

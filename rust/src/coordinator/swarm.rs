@@ -130,6 +130,16 @@ pub struct SwarmStats {
     /// early-EOS workloads).
     pub gen_lane_slots: Counter,
     pub gen_lane_active: Counter,
+    /// Workers evicted by the orchestrator's missed-heartbeat sweep during
+    /// the run (churn visibility: crashes show up here, not as hangs).
+    pub churn_workers_evicted: Counter,
+    /// Tasks orphaned by evicted/slashed holders and requeued (mirrors
+    /// [`Orchestrator::tasks_requeued`] at run end).
+    pub churn_tasks_requeued: Counter,
+    /// Failed checkpoint-fetch attempts absorbed by retry/failover across
+    /// all workers (non-zero under relay churn; the checkpoints still
+    /// arrived).
+    pub churn_fetch_retries: Counter,
     /// Per-environment task pass rates over *verified* rollouts (the
     /// validator re-checked these rewards), keyed by env registry name —
     /// mixed-env runs are unobservable from one aggregate reward number.
@@ -630,6 +640,7 @@ impl Swarm {
                             if held_version.as_ref().map(|(v, _)| *v) != Some(latest) {
                                 match sc.fetch_checkpoint(latest) {
                                     Ok((bytes, report)) => {
+                                        shared.stats.churn_fetch_retries.add(report.retries as u64);
                                         match ParamSet::from_bytes_spec(host.spec(), &bytes) {
                                             Ok(p) => {
                                                 worker.volume.put("weights", bytes);
@@ -776,7 +787,8 @@ impl Swarm {
                 "rollouts_dropped_stale",
                 shared.stats.rollouts_dropped_stale.get() as f64,
             );
-            orch.health_sweep();
+            let evicted_nodes = orch.health_sweep();
+            shared.stats.churn_workers_evicted.add(evicted_nodes.len() as u64);
             crate::info!(
                 "swarm",
                 "step {step}: task_r {:.3} wait {batch_ready_secs:.1}s train {train_secs:.1}s verified {} stale-dropped {} slashed {}",
@@ -803,6 +815,7 @@ impl Swarm {
             }
         }
         shared.stats.merge_staleness(&shared.buffer.stats());
+        shared.stats.churn_tasks_requeued.add(orch.tasks_requeued.get());
 
         Ok(SwarmResult {
             series,
@@ -839,6 +852,9 @@ impl Shared {
         s.gen_prefill_prompts.add(self.stats.gen_prefill_prompts.get());
         s.gen_lane_slots.add(self.stats.gen_lane_slots.get());
         s.gen_lane_active.add(self.stats.gen_lane_active.get());
+        s.churn_workers_evicted.add(self.stats.churn_workers_evicted.get());
+        s.churn_tasks_requeued.add(self.stats.churn_tasks_requeued.get());
+        s.churn_fetch_retries.add(self.stats.churn_fetch_retries.get());
         for (env, attempts, passes) in self.stats.env_pass.snapshot() {
             s.env_pass.add(&env, attempts, passes);
         }

@@ -3,9 +3,11 @@
 //! all share 127.0.0.1, so the node id plays the role of the source IP).
 
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
 use std::time::Duration;
 
+use super::faults::{Fault, FaultInjector};
 use super::Response;
 
 #[derive(Clone)]
@@ -15,6 +17,11 @@ pub struct HttpClient {
     /// Simulated ingress bandwidth in bytes/sec (0 = unshaped); models a
     /// heterogeneous worker's downlink (§4.2).
     pub ingress_bytes_per_sec: u64,
+    /// Optional client-side fault plane: models an unreliable egress link.
+    /// Only [`Fault::Refuse`] (request fails before the wire) and
+    /// [`Fault::Delay`] apply here — the other classes are server
+    /// behaviors.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl HttpClient {
@@ -23,11 +30,17 @@ impl HttpClient {
             node_id: node_id.to_string(),
             timeout: Duration::from_secs(30),
             ingress_bytes_per_sec: 0,
+            faults: None,
         }
     }
 
     pub fn with_ingress(mut self, bps: u64) -> HttpClient {
         self.ingress_bytes_per_sec = bps;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> HttpClient {
+        self.faults = Some(faults);
         self
     }
 
@@ -44,12 +57,37 @@ impl HttpClient {
     }
 
     pub fn request(&self, method: &str, url: &str, body: Vec<u8>) -> anyhow::Result<Response> {
+        match self.faults.as_ref().and_then(|f| f.next_fault()) {
+            Some(Fault::Refuse) => anyhow::bail!("fault injection: connection refused ({url})"),
+            Some(Fault::Delay { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+            _ => {}
+        }
         let rest = url.strip_prefix("http://").ok_or_else(|| anyhow::anyhow!("bad url: {url}"))?;
         let (host, path) = match rest.split_once('/') {
             Some((h, p)) => (h, format!("/{p}")),
             None => (rest, "/".to_string()),
         };
-        let mut stream = TcpStream::connect(host)?;
+        // Resolve ourselves so the connect honors `self.timeout` — a bare
+        // `TcpStream::connect` waits out the OS default (minutes against a
+        // black-holing peer), which stalls every retry loop above us.
+        let mut stream = None;
+        let mut last: Option<std::io::Error> = None;
+        for addr in host.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&addr, self.timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let mut stream = match stream {
+            Some(s) => s,
+            None => match last {
+                Some(e) => return Err(anyhow::anyhow!("connect {host}: {e}")),
+                None => anyhow::bail!("connect {host}: no addresses resolved"),
+            },
+        };
         stream.set_read_timeout(Some(self.timeout))?;
         stream.set_write_timeout(Some(self.timeout))?;
 
@@ -134,6 +172,67 @@ mod tests {
         let t_slow = t0.elapsed();
         assert!(t_slow > t_fast, "{t_slow:?} vs {t_fast:?}");
         assert!(t_slow.as_secs_f64() > 0.15);
+    }
+
+    #[test]
+    fn connect_honors_timeout_against_non_accepting_socket() {
+        // 10.255.255.1 is an RFC-1918 black hole on CI runners: SYNs are
+        // dropped (or administratively refused), never answered. With the
+        // old bare `TcpStream::connect` this hung for the OS default
+        // (minutes); with `connect_timeout` it must fail within our budget.
+        let mut c = HttpClient::new("t");
+        c.timeout = std::time::Duration::from_millis(300);
+        let t0 = std::time::Instant::now();
+        let r = c.get("http://10.255.255.1:9/x");
+        let dt = t0.elapsed();
+        assert!(r.is_err());
+        assert!(dt < std::time::Duration::from_secs(5), "connect took {dt:?}");
+    }
+
+    #[test]
+    fn refused_port_errors_fast() {
+        // Bind-then-drop guarantees an unused loopback port: connecting
+        // gets an immediate RST, not a timeout.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let c = HttpClient::new("t");
+        let t0 = std::time::Instant::now();
+        assert!(c.get(&format!("http://{addr}/")).is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn client_side_fault_injection_refuses_deterministically() {
+        use crate::http::faults::{FaultInjector, FaultSpec};
+        let srv =
+            HttpServer::start(ServerConfig::default(), |_| super::Response::ok("hi")).unwrap();
+        let spec = FaultSpec {
+            fault_rate: 1.0,
+            burst_len: 1,
+            w_refuse: 1.0,
+            w_hang: 0.0,
+            w_5xx: 0.0,
+            w_truncate: 0.0,
+            w_delay: 0.0,
+            ..Default::default()
+        };
+        let run = |seed: u64| -> Vec<bool> {
+            let c = HttpClient::new("t").with_faults(FaultInjector::from_seed(seed, spec.clone()));
+            (0..20).map(|_| c.get(&srv.url()).is_ok()).collect()
+        };
+        // All-refuse spec: every request dies before the wire.
+        assert!(run(1).iter().all(|ok| !ok));
+        // Partial rate replays identically across runs with the same seed.
+        let spec2 = FaultSpec { fault_rate: 0.5, ..spec };
+        let partial = |seed: u64| -> Vec<bool> {
+            let c = HttpClient::new("t").with_faults(FaultInjector::from_seed(seed, spec2.clone()));
+            (0..30).map(|_| c.get(&srv.url()).is_ok()).collect()
+        };
+        assert_eq!(partial(7), partial(7));
+        assert!(partial(7).iter().any(|ok| *ok));
+        assert!(partial(7).iter().any(|ok| !ok));
     }
 
     #[test]

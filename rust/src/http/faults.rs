@@ -1,0 +1,269 @@
+//! Deterministic, seeded fault injection for the HTTP substrate.
+//!
+//! The paper trains over "a dynamic, heterogeneous swarm of permissionless
+//! compute contributors" (§2.4) — relays restart, workers vanish mid-task,
+//! WAN links black-hole. This module is the chaos plane that makes those
+//! failures testable: a [`FaultPlan`] maps every request index to an
+//! optional [`Fault`], as a *pure function* of `(seed, index)` driven by
+//! [`crate::util::rng::Rng`]. Two injectors built from the same seed and
+//! spec produce byte-identical fault schedules, no matter how requests are
+//! interleaved across threads — index `i` always gets the same fault —
+//! so every chaos run replays exactly.
+//!
+//! Scheduling is per *window* of `burst_len` consecutive requests: one RNG
+//! draw (from `Rng::new(seed).fold(window)`) decides the whole window, so
+//! 5xx storms and refusal outages arrive in realistic contiguous bursts
+//! rather than i.i.d. sprinkles.
+//!
+//! Process-level churn (crashing a relay or worker outright) cannot be
+//! injected at the request layer; harnesses drive it from the same plan
+//! via [`FaultPlan::pick`], which deterministically selects the victim for
+//! a given step.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::metrics::Counter;
+use crate::util::rng::Rng;
+
+/// One injected failure, applied to a single HTTP request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Drop the connection without reading the request (the TCP-level
+    /// behavior of a crashed or refusing peer).
+    Refuse,
+    /// Read the request, then hold the connection open for `ms` without
+    /// responding, then drop it (a hung peer; exercises client timeouts).
+    Hang { ms: u64 },
+    /// Respond with this 5xx status instead of invoking the handler.
+    Status(u16),
+    /// Serve the real response head (full `content-length`) but only the
+    /// first half of the body, then drop the connection (mid-body
+    /// truncation; the client sees a short read).
+    Truncate,
+    /// Sleep `ms`, then handle normally (added latency).
+    Delay { ms: u64 },
+}
+
+/// Fault mix for a plan: how often a window is faulty and the relative
+/// weight of each fault class when it is.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Probability that a burst window is faulty at all.
+    pub fault_rate: f64,
+    /// Number of consecutive requests covered by one scheduling decision.
+    pub burst_len: u64,
+    pub w_refuse: f64,
+    pub w_hang: f64,
+    pub w_5xx: f64,
+    pub w_truncate: f64,
+    pub w_delay: f64,
+    /// How long a [`Fault::Hang`] holds the connection.
+    pub hang_ms: u64,
+    /// Upper bound on [`Fault::Delay`] latency.
+    pub max_delay_ms: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            fault_rate: 0.2,
+            burst_len: 3,
+            w_refuse: 1.0,
+            w_hang: 0.5,
+            w_5xx: 2.0,
+            w_truncate: 1.0,
+            w_delay: 2.0,
+            hang_ms: 300,
+            max_delay_ms: 50,
+        }
+    }
+}
+
+/// A deterministic fault schedule: `fault_at(idx)` is a pure function of
+/// `(seed, spec, idx)`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan { seed, spec }
+    }
+
+    /// The fault (if any) scheduled for the `idx`-th request an injector
+    /// sees. Requests in the same `burst_len` window share one decision.
+    pub fn fault_at(&self, idx: u64) -> Option<Fault> {
+        let window = idx / self.spec.burst_len.max(1);
+        let mut rng = Rng::new(self.seed).fold(window);
+        if !rng.bool(self.spec.fault_rate) {
+            return None;
+        }
+        let s = &self.spec;
+        let weights = [s.w_refuse, s.w_hang, s.w_5xx, s.w_truncate, s.w_delay];
+        Some(match rng.weighted(&weights) {
+            0 => Fault::Refuse,
+            1 => Fault::Hang { ms: s.hang_ms },
+            2 => Fault::Status(if rng.bool(0.5) { 500 } else { 503 }),
+            3 => Fault::Truncate,
+            _ => Fault::Delay { ms: 1 + rng.range(0, s.max_delay_ms.max(1)) },
+        })
+    }
+
+    /// Deterministic victim selection for process-level churn: which of
+    /// `n` candidates crashes at `step` in the given `domain` (a caller-
+    /// chosen stream id separating e.g. worker-crash picks from
+    /// relay-kill picks). Pure in `(seed, domain, step, n)`.
+    pub fn pick(&self, domain: u64, step: u64, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let mut rng = Rng::new(self.seed).fold(domain).fold(step.wrapping_add(0x51E9));
+        rng.usize(n)
+    }
+}
+
+/// Per-injector fault accounting (what actually fired, by class).
+#[derive(Default)]
+pub struct FaultStats {
+    pub injected: Counter,
+    pub refused: Counter,
+    pub hung: Counter,
+    pub served_5xx: Counter,
+    pub truncated: Counter,
+    pub delayed: Counter,
+}
+
+/// Threads a [`FaultPlan`] through a server or client: each request takes
+/// the next index off an atomic counter and looks up its scheduled fault.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    next_idx: AtomicU64,
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector { plan, next_idx: AtomicU64::new(0), stats: FaultStats::default() })
+    }
+
+    pub fn from_seed(seed: u64, spec: FaultSpec) -> Arc<FaultInjector> {
+        FaultInjector::new(FaultPlan::new(seed, spec))
+    }
+
+    /// The fault for the next request, advancing the request index. The
+    /// index assignment depends on arrival order, but the *schedule* does
+    /// not: index `i` maps to the same fault on every run.
+    pub fn next_fault(&self) -> Option<Fault> {
+        let idx = self.next_idx.fetch_add(1, Ordering::SeqCst);
+        let f = self.plan.fault_at(idx);
+        if let Some(fault) = f {
+            self.stats.injected.inc();
+            match fault {
+                Fault::Refuse => self.stats.refused.inc(),
+                Fault::Hang { .. } => self.stats.hung.inc(),
+                Fault::Status(_) => self.stats.served_5xx.inc(),
+                Fault::Truncate => self.stats.truncated.inc(),
+                Fault::Delay { .. } => self.stats.delayed.inc(),
+            };
+        }
+        f
+    }
+
+    /// Requests seen so far (assigned indices).
+    pub fn requests_seen(&self) -> u64 {
+        self.next_idx.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn identical_seeds_replay_identical_schedules() {
+        // Property: for arbitrary (seed, spec knobs), two independently
+        // constructed plans agree on every index — the replayability
+        // contract the whole chaos layer rests on.
+        prop::check(
+            "fault_plan_replay",
+            50,
+            |rng, _size| (rng.next_u64(), rng.f64(), 1 + rng.range(0, 8)),
+            |&(seed, rate, burst)| {
+                let spec = FaultSpec { fault_rate: rate, burst_len: burst, ..Default::default() };
+                let a = FaultPlan::new(seed, spec.clone());
+                let b = FaultPlan::new(seed, spec);
+                for idx in 0..2_000u64 {
+                    prop::ensure(
+                        a.fault_at(idx) == b.fault_at(idx),
+                        &format!("schedules diverge at idx {idx}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = FaultSpec { fault_rate: 0.5, ..Default::default() };
+        let a = FaultPlan::new(1, spec.clone());
+        let b = FaultPlan::new(2, spec);
+        let diverged = (0..500).any(|i| a.fault_at(i) != b.fault_at(i));
+        assert!(diverged);
+    }
+
+    #[test]
+    fn faults_arrive_in_aligned_bursts() {
+        let spec = FaultSpec { fault_rate: 0.5, burst_len: 4, ..Default::default() };
+        let plan = FaultPlan::new(9, spec);
+        for window in 0..200u64 {
+            let first = plan.fault_at(window * 4);
+            for off in 1..4 {
+                assert_eq!(plan.fault_at(window * 4 + off), first, "window {window} not uniform");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let none = FaultPlan::new(3, FaultSpec { fault_rate: 0.0, ..Default::default() });
+        assert!((0..500).all(|i| none.fault_at(i).is_none()));
+        let all = FaultPlan::new(3, FaultSpec { fault_rate: 1.0, ..Default::default() });
+        assert!((0..500).all(|i| all.fault_at(i).is_some()));
+    }
+
+    #[test]
+    fn injector_counts_by_class() {
+        let spec = FaultSpec { fault_rate: 1.0, burst_len: 1, ..Default::default() };
+        let inj = FaultInjector::from_seed(11, spec);
+        for _ in 0..100 {
+            let _ = inj.next_fault();
+        }
+        assert_eq!(inj.requests_seen(), 100);
+        assert_eq!(inj.stats.injected.get(), 100);
+        let by_class = inj.stats.refused.get()
+            + inj.stats.hung.get()
+            + inj.stats.served_5xx.get()
+            + inj.stats.truncated.get()
+            + inj.stats.delayed.get();
+        assert_eq!(by_class, 100);
+    }
+
+    #[test]
+    fn pick_is_deterministic_and_in_range() {
+        let plan = FaultPlan::new(77, FaultSpec::default());
+        for step in 0..100u64 {
+            let a = plan.pick(1, step, 5);
+            let b = plan.pick(1, step, 5);
+            assert_eq!(a, b);
+            assert!(a < 5);
+            // Different domains make independent choices somewhere.
+        }
+        let differs = (0..100).any(|s| plan.pick(1, s, 5) != plan.pick(2, s, 5));
+        assert!(differs);
+    }
+}

@@ -5,11 +5,19 @@
 //!   bandwidth shaping, per-IP rate limiting and an allowlist firewall;
 //! - the orchestrator / discovery-service APIs (§2.4);
 //! - the PRIME-RL step-counter endpoint inference workers poll (§2.1.2).
+//!
+//! Both halves carry optional hooks for the deterministic fault plane
+//! ([`faults`]): a seeded [`FaultInjector`] can refuse, hang, 5xx,
+//! truncate or delay requests on either side, replaying byte-identically
+//! from its seed — the chaos substrate the churn e2e and `churn_bench`
+//! drive.
 
 pub mod client;
+pub mod faults;
 pub mod server;
 
 pub use client::HttpClient;
+pub use faults::{Fault, FaultInjector, FaultPlan, FaultSpec};
 pub use server::{HttpServer, ServerConfig};
 
 use std::collections::BTreeMap;

@@ -11,6 +11,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::faults::{Fault, FaultInjector};
 use super::{parse_request, write_response, Request, Response};
 use crate::util::metrics::Counter;
 
@@ -31,6 +32,10 @@ pub struct ServerConfig {
     pub egress_bytes_per_sec: u64,
     pub max_body: usize,
     pub worker_threads: usize,
+    /// Deterministic fault plane (chaos testing): when set, each incoming
+    /// request consumes the injector's next scheduled fault — refused,
+    /// hung, 5xx'd, truncated or delayed before the handler ever runs.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ServerConfig {
@@ -42,6 +47,7 @@ impl Default for ServerConfig {
             egress_bytes_per_sec: 0,
             max_body: 256 << 20,
             worker_threads: 4,
+            faults: None,
         }
     }
 }
@@ -76,7 +82,23 @@ impl HttpServer {
     where
         H: Fn(&Request) -> Response + Send + Sync + 'static,
     {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        HttpServer::serve(TcpListener::bind("127.0.0.1:0")?, cfg, handler)
+    }
+
+    /// Bind a *specific* address — the restart path: a service that died
+    /// can come back on the port its clients already hold (the churn
+    /// harness restarts the orchestrator this way).
+    pub fn start_on<H>(addr: &str, cfg: ServerConfig, handler: H) -> anyhow::Result<HttpServer>
+    where
+        H: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        HttpServer::serve(TcpListener::bind(addr)?, cfg, handler)
+    }
+
+    fn serve<H>(listener: TcpListener, cfg: ServerConfig, handler: H) -> anyhow::Result<HttpServer>
+    where
+        H: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -162,11 +184,31 @@ fn handle_conn(
 ) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(20)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    // Fault plane: one scheduled fault per connection, consumed up front so
+    // `Refuse` can drop the socket without reading a byte (what a crashed
+    // peer looks like from the client side).
+    let fault = cfg.faults.as_ref().and_then(|f| f.next_fault());
+    if fault == Some(Fault::Refuse) {
+        return;
+    }
     let req = match parse_request(&mut stream, cfg.max_body) {
         Ok(r) => r,
         Err(_) => return,
     };
     stats.requests.inc();
+    match fault {
+        Some(Fault::Hang { ms }) => {
+            // Accept-then-hang: read the request, never answer, drop.
+            std::thread::sleep(Duration::from_millis(ms));
+            return;
+        }
+        Some(Fault::Status(code)) => {
+            let _ = write_response(&mut stream, &Response::error(code, "fault injection"));
+            return;
+        }
+        Some(Fault::Delay { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+        _ => {}
+    }
     let key = req.header("x-node-id").map(|s| s.to_string()).unwrap_or_else(|| req.peer.clone());
 
     // Firewall: only currently-active pool members get through.
@@ -199,6 +241,23 @@ fn handle_conn(
 
     let resp = handler(&req);
     stats.bytes_out.add(resp.body.len() as u64);
+
+    if fault == Some(Fault::Truncate) {
+        // Mid-body truncation: the head promises the full content-length,
+        // the body stops halfway, the socket drops — the client's
+        // `read_exact` must surface a short read, not hand back a prefix.
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            resp.status,
+            Response::status_text(resp.status),
+            resp.body.len()
+        );
+        if stream.write_all(head.as_bytes()).is_ok() {
+            let _ = stream.write_all(&resp.body[..resp.body.len() / 2]);
+            let _ = stream.flush();
+        }
+        return;
+    }
 
     let bps = egress.load(Ordering::SeqCst);
     if bps == 0 {
@@ -292,6 +351,77 @@ mod tests {
         let good = HttpClient::new("good-node");
         assert_eq!(good.get(&format!("{}/", srv.url())).unwrap().status, 200);
         assert_eq!(srv.stats.rejected_firewall.get(), 1);
+    }
+
+    #[test]
+    fn server_faults_fire_and_replay_deterministically() {
+        use crate::http::faults::{FaultInjector, FaultSpec};
+        // Mixed spec over every class; hang kept short so the test is fast.
+        let spec = FaultSpec {
+            fault_rate: 0.6,
+            burst_len: 2,
+            hang_ms: 50,
+            max_delay_ms: 5,
+            ..Default::default()
+        };
+        let outcomes = |seed: u64| -> Vec<String> {
+            let cfg = ServerConfig {
+                faults: Some(FaultInjector::from_seed(seed, spec.clone())),
+                ..Default::default()
+            };
+            let body = vec![9u8; 32 * 1024];
+            let srv = HttpServer::start(cfg, move |_| Response::ok(body.clone())).unwrap();
+            let mut client = HttpClient::new("chaos");
+            client.timeout = Duration::from_millis(500);
+            (0..24)
+                .map(|_| match client.get(&srv.url()) {
+                    Ok(r) => format!("status {}", r.status),
+                    Err(_) => "error".to_string(),
+                })
+                .collect()
+        };
+        let a = outcomes(42);
+        let b = outcomes(42);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        // The mix actually exercised both failure and success paths.
+        assert!(a.iter().any(|o| o == "status 200"), "{a:?}");
+        assert!(a.iter().any(|o| o != "status 200"), "{a:?}");
+    }
+
+    #[test]
+    fn truncated_response_is_a_client_error_not_a_prefix() {
+        use crate::http::faults::{FaultInjector, FaultSpec};
+        let spec = FaultSpec {
+            fault_rate: 1.0,
+            burst_len: 1,
+            w_refuse: 0.0,
+            w_hang: 0.0,
+            w_5xx: 0.0,
+            w_truncate: 1.0,
+            w_delay: 0.0,
+            ..Default::default()
+        };
+        let faults = Some(FaultInjector::from_seed(5, spec));
+        let cfg = ServerConfig { faults, ..Default::default() };
+        let srv = HttpServer::start(cfg, |_| Response::ok(vec![1u8; 64 * 1024])).unwrap();
+        let mut client = HttpClient::new("t");
+        client.timeout = Duration::from_millis(500);
+        assert!(client.get(&srv.url()).is_err(), "short body must not parse as success");
+    }
+
+    #[test]
+    fn start_on_rebinds_a_fixed_address() {
+        // Reserve a port by bind-then-drop, then serve on it explicitly —
+        // the restart scenario: clients keep a fixed URL across a bounce.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let srv =
+            HttpServer::start_on(&addr, ServerConfig::default(), |_| Response::ok("up")).unwrap();
+        assert_eq!(srv.addr, addr);
+        let c = HttpClient::new("t");
+        assert_eq!(c.get(&srv.url()).unwrap().body, b"up");
     }
 
     #[test]

@@ -1,6 +1,29 @@
 //! The Prime Intellect protocol (paper §2.4): ledger, discovery service,
 //! orchestrator and worker software — permissionless compute coordination
 //! ("a decentralized SLURM").
+//!
+//! # Failure model
+//!
+//! Nodes are expected to vanish without warning and the control plane to
+//! bounce. The protocol layer keeps training *live* (work is never lost,
+//! only delayed) and *safe* (honest nodes are never slashed for churn):
+//!
+//! - **Worker crash mid-task** — the orchestrator's health sweep evicts
+//!   nodes whose heartbeats stop and requeues the task they held at the
+//!   front of the queue, so another worker picks it up next heartbeat
+//!   (`tasks_requeued` counts these).
+//! - **Orchestrator restart** — workers treat heartbeat failures as
+//!   transient: they track the consecutive-failure streak, log once per
+//!   streak, and keep beating. When the orchestrator returns on the same
+//!   address, the next heartbeat re-delivers task state with no worker
+//!   restart required.
+//! - **Eviction of a live node** (e.g. a long GC pause) — the node's next
+//!   heartbeat is rejected, but re-registration through discovery +
+//!   orchestrator admission brings it back into the pool; eviction is
+//!   quarantine, not a ban.
+//!
+//! Byzantine behavior (bad signatures, forged rollouts) is *not* churn:
+//! it goes through the slashing path on the ledger instead.
 
 pub mod discovery;
 pub mod identity;

@@ -44,7 +44,9 @@ struct NodeState {
     status: NodeStatus,
     last_heartbeat_ms: u64,
     missed: u32,
-    current_task: Option<u64>,
+    /// The full spec of the task this node holds, so eviction can requeue
+    /// it instead of losing the work with the node.
+    current_task: Option<TaskSpec>,
     logs: VecDeque<String>,
 }
 
@@ -77,6 +79,9 @@ pub struct Orchestrator {
     pub max_missed: u32,
     /// Heartbeats refused from never-invited or slashed senders.
     pub heartbeats_rejected: Arc<Counter>,
+    /// Tasks orphaned by an evicted/slashed holder and pushed back to the
+    /// front of the queue (the churn-survival counter: requeued, not lost).
+    pub tasks_requeued: Arc<Counter>,
 }
 
 pub struct OrchestratorServer {
@@ -98,6 +103,7 @@ impl Orchestrator {
             heartbeat_timeout_ms,
             max_missed: 3,
             heartbeats_rejected: Arc::new(Counter::default()),
+            tasks_requeued: Arc::new(Counter::default()),
         }
     }
 
@@ -233,13 +239,13 @@ impl Orchestrator {
             }
         }
         if let Some(done) = task_done {
-            if state.current_task == Some(done) {
+            if state.current_task.as_ref().map(|t| t.id) == Some(done) {
                 state.current_task = None;
             }
         }
         if state.current_task.is_none() {
             if let Some(task) = inner.queue.pop_front() {
-                inner.nodes.get_mut(&node).unwrap().current_task = Some(task.id);
+                inner.nodes.get_mut(&node).unwrap().current_task = Some(task.clone());
                 return Ok(Some(task));
             }
         }
@@ -248,9 +254,15 @@ impl Orchestrator {
 
     /// Health sweep: count missed heartbeats, mark dead + evict from the
     /// ledger after `max_missed` (§2.4.2). Returns evicted node addresses.
+    ///
+    /// Any task an evicted node was holding is requeued at the *front* of
+    /// the queue (it is the oldest outstanding work), so the next idle
+    /// heartbeat picks it up — a crashed worker delays its task by one
+    /// eviction window, never loses it.
     pub fn health_sweep(&self) -> Vec<u64> {
         let now = crate::util::now_ms();
         let mut evicted = Vec::new();
+        let mut orphans: Vec<TaskSpec> = Vec::new();
         let mut inner = self.inner.lock().unwrap();
         for (&addr, st) in inner.nodes.iter_mut() {
             if st.status == NodeStatus::Dead {
@@ -261,9 +273,16 @@ impl Orchestrator {
                 st.last_heartbeat_ms = now;
                 if st.missed >= self.max_missed {
                     st.status = NodeStatus::Dead;
+                    if let Some(task) = st.current_task.take() {
+                        orphans.push(task);
+                    }
                     evicted.push(addr);
                 }
             }
+        }
+        for task in orphans.into_iter().rev() {
+            self.tasks_requeued.inc();
+            inner.queue.push_front(task);
         }
         drop(inner);
         for addr in &evicted {
@@ -275,14 +294,21 @@ impl Orchestrator {
     }
 
     /// Slash a node after a TOPLOC rejection (§2.4.2 inference validation).
+    /// A held task is requeued — the *node* is untrusted, the task spec is
+    /// the pool's own work and goes back to the queue.
     pub fn slash(&self, node: u64, reason: &str) {
         let _ = self.ledger.submit(
             Tx::Slash { pool_id: self.pool_id, node, reason: reason.to_string() },
             &self.identity,
         );
         let mut inner = self.inner.lock().unwrap();
-        if let Some(st) = inner.nodes.get_mut(&node) {
+        let orphan = inner.nodes.get_mut(&node).and_then(|st| {
             st.status = NodeStatus::Dead;
+            st.current_task.take()
+        });
+        if let Some(task) = orphan {
+            self.tasks_requeued.inc();
+            inner.queue.push_front(task);
         }
     }
 
@@ -313,6 +339,30 @@ impl Orchestrator {
 
     pub fn queue_len(&self) -> usize {
         self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Active nodes currently holding a task. The churn harness picks its
+    /// crash victims from these, so a kill always orphans real work.
+    pub fn nodes_with_tasks(&self) -> Vec<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .iter()
+            .filter(|(_, s)| s.status == NodeStatus::Active && s.current_task.is_some())
+            .map(|(a, _)| *a)
+            .collect()
+    }
+
+    /// Tasks currently assigned to live nodes (not queued, not finished).
+    pub fn tasks_in_flight(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .values()
+            .filter(|s| s.status != NodeStatus::Dead && s.current_task.is_some())
+            .count()
     }
 }
 
@@ -371,6 +421,18 @@ impl OrchestratorServer {
     pub fn start(orch: Orchestrator) -> anyhow::Result<OrchestratorServer> {
         let o = orch.clone();
         let server = HttpServer::start(
+            ServerConfig { worker_threads: 2, ..Default::default() },
+            move |req| handle(&o, req),
+        )?;
+        Ok(OrchestratorServer { orch, server })
+    }
+
+    /// Restart path: serve on a *fixed* address so workers holding the old
+    /// URL reconnect as soon as the orchestrator comes back after a bounce.
+    pub fn start_on(orch: Orchestrator, addr: &str) -> anyhow::Result<OrchestratorServer> {
+        let o = orch.clone();
+        let server = HttpServer::start_on(
+            addr,
             ServerConfig { worker_threads: 2, ..Default::default() },
             move |req| handle(&o, req),
         )?;
@@ -455,6 +517,47 @@ mod tests {
         o.admit(7);
         assert_eq!(o.status(7), Some(NodeStatus::Invited));
         assert!(o.heartbeat(7, None, None).is_ok());
+    }
+
+    #[test]
+    fn eviction_requeues_orphaned_task_for_another_worker() {
+        let o = orch();
+        o.admit(1);
+        o.admit(2);
+        o.create_task("rollout", Json::Str("orphan-me".into()));
+        // Node 1 takes the task, then crashes (stops heartbeating).
+        let t = o.heartbeat(1, None, None).unwrap().unwrap();
+        assert_eq!(t.id, 0);
+        assert_eq!(o.nodes_with_tasks(), vec![1]);
+        assert_eq!(o.tasks_in_flight(), 1);
+        // Node 2 stays alive through the sweeps; only node 1 is evicted.
+        for _ in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(35));
+            assert!(o.heartbeat(2, None, None).unwrap().is_none());
+            o.health_sweep();
+        }
+        assert_eq!(o.status(1), Some(NodeStatus::Dead));
+        assert_eq!(o.tasks_requeued.get(), 1);
+        assert_eq!(o.queue_len(), 1);
+        assert_eq!(o.tasks_in_flight(), 0);
+        // The surviving worker picks the orphan up and completes it.
+        let t = o.heartbeat(2, None, None).unwrap().unwrap();
+        assert_eq!(t.id, 0);
+        assert_eq!(t.payload.as_str().unwrap(), "orphan-me");
+        assert!(o.heartbeat(2, None, Some(0)).unwrap().is_none());
+        assert_eq!(o.tasks_in_flight(), 0);
+        assert_eq!(o.queue_len(), 0);
+    }
+
+    #[test]
+    fn slash_requeues_held_task() {
+        let o = orch();
+        o.admit(3);
+        o.create_task("rollout", Json::Null);
+        o.heartbeat(3, None, None).unwrap().unwrap();
+        o.slash(3, "toploc rejection");
+        assert_eq!(o.queue_len(), 1);
+        assert_eq!(o.tasks_requeued.get(), 1);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! "shared volume" (persistent weights across restarts) is an in-memory
 //! blob store the handler can use.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::identity::{Identity, SigCheck};
@@ -14,6 +14,7 @@ use super::orchestrator::{invite_message, TaskSpec};
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
 use crate::rl::rollout_file::Submission;
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
 
 #[derive(Clone, Debug)]
 pub struct HardwareSpec {
@@ -95,6 +96,12 @@ pub struct Worker {
     stop: Arc<AtomicBool>,
     hb_thread: Option<std::thread::JoinHandle<()>>,
     pub tasks_completed: Arc<std::sync::atomic::AtomicU64>,
+    /// Current streak of consecutive failed heartbeats (transport error or
+    /// non-200). Resets to 0 on the first success — an orchestrator bounce
+    /// shows up as a rise-then-reset, not a dead worker.
+    pub hb_consecutive_failures: Arc<AtomicU64>,
+    /// All heartbeat failures over the worker's lifetime.
+    pub hb_failures_total: Arc<Counter>,
 }
 
 impl Worker {
@@ -168,6 +175,8 @@ impl Worker {
             stop: Arc::new(AtomicBool::new(false)),
             hb_thread: None,
             tasks_completed: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+            hb_consecutive_failures: Arc::new(AtomicU64::new(0)),
+            hb_failures_total: Arc::new(Counter::default()),
         })
     }
 
@@ -202,6 +211,8 @@ impl Worker {
         let address = self.identity.address;
         let volume = self.volume.clone();
         let completed = Arc::clone(&self.tasks_completed);
+        let hb_streak = Arc::clone(&self.hb_consecutive_failures);
+        let hb_total = Arc::clone(&self.hb_failures_total);
         let t = std::thread::Builder::new()
             .name(format!("i2-worker-{address}"))
             .spawn(move || {
@@ -217,8 +228,9 @@ impl Worker {
                         body.push(("log", l.into()));
                     }
                     let resp = client.post_json(&format!("{orchestrator_url}/heartbeat"), &Json::obj(body));
-                    if let Ok(r) = resp {
-                        if r.status == 200 {
+                    match resp {
+                        Ok(r) if r.status == 200 => {
+                            hb_streak.store(0, Ordering::SeqCst);
                             if let Ok(j) = Json::parse(std::str::from_utf8(&r.body).unwrap_or("")) {
                                 if let Some(task_id) = j.get("task_id").and_then(Json::as_u64) {
                                     let task = TaskSpec {
@@ -233,6 +245,31 @@ impl Worker {
                                     done = Some(task_id);
                                     completed.fetch_add(1, Ordering::SeqCst);
                                 }
+                            }
+                        }
+                        // The orchestrator being down or refusing us is
+                        // transient: keep beating (it may restart on the
+                        // same address, or re-invite us after eviction),
+                        // log only the first failure of each streak.
+                        Ok(r) => {
+                            let streak = hb_streak.fetch_add(1, Ordering::SeqCst);
+                            hb_total.inc();
+                            if streak == 0 {
+                                crate::warn!(
+                                    "worker",
+                                    "node {address}: heartbeat refused (status {}), retrying",
+                                    r.status
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            let streak = hb_streak.fetch_add(1, Ordering::SeqCst);
+                            hb_total.inc();
+                            if streak == 0 {
+                                crate::warn!(
+                                    "worker",
+                                    "node {address}: heartbeat failed ({e}), retrying"
+                                );
                             }
                         }
                     }
@@ -352,6 +389,48 @@ mod tests {
         let r = c.post_json(&format!("{url}/invite"), &body(&sig)).unwrap();
         assert_eq!(r.status, 200);
         assert!(worker.is_invited());
+    }
+
+    #[test]
+    fn worker_survives_orchestrator_restart() {
+        let (ledger, owner) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        let orch = Orchestrator::new(owner, ledger.clone(), 1, 5_000);
+        // Reserve a fixed port (bind-then-drop, no connections made), but
+        // do NOT start the orchestrator server yet: the worker beats into
+        // a refused port first.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut worker = Worker::boot(Identity::from_seed(7), &ledger, 1, &discovery.url(), 8).unwrap();
+        orch.admit(worker.identity.address);
+        let handler: Arc<TaskHandler> = Arc::new(|task, _| Ok(format!("ran {}", task.id)));
+        worker.start_heartbeat(
+            format!("http://{addr}"),
+            std::time::Duration::from_millis(15),
+            handler,
+        );
+        // Failures accumulate while the orchestrator is down; the streak
+        // counter exposes them.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while worker.hb_failures_total.get() < 2 {
+            assert!(std::time::Instant::now() < deadline, "no heartbeat failures recorded");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(worker.hb_consecutive_failures.load(Ordering::SeqCst) >= 1);
+
+        // Orchestrator (re)starts on the address the worker already holds;
+        // the worker resumes pulling tasks with no restart of its own.
+        let _srv = OrchestratorServer::start_on(orch.clone(), &addr).unwrap();
+        orch.create_task("echo", Json::Null);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while worker.tasks_completed.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "task never ran after restart");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(worker.hb_consecutive_failures.load(Ordering::SeqCst), 0);
+        worker.shutdown();
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! sampling beats greedy-fastest both under contention and without it
 //! (multiple concurrent connections aggregate bandwidth) — reproduced by
 //! `benches/shardcast_bench.rs`.
+//!
+//! Churn hardening: every fetch (manifest and shards) retries under the
+//! shared [`RetryPolicy`], failing over to a freshly-sampled relay each
+//! attempt; a relay that fails [`QUARANTINE_AFTER`] times in a row is
+//! quarantined out of the sampling pool until it serves again (it re-earns
+//! trust through the desperation probe that fires when *every* relay is
+//! quarantined). A relay dying mid-checkpoint therefore costs a few
+//! retries, not the download.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -14,11 +22,15 @@ use std::time::Instant;
 use super::manifest::Manifest;
 use crate::http::HttpClient;
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
+use crate::util::retry::RetryPolicy;
 use crate::util::rng::Rng;
 
 const EMA_ALPHA: f64 = 0.3;
 /// Healing factor: relative score bonus per second of idleness.
 const HEAL_PER_SEC: f64 = 0.25;
+/// Consecutive failures after which a relay leaves the sampling pool.
+pub const QUARANTINE_AFTER: u32 = 3;
 
 #[derive(Debug, Clone)]
 struct RelayEstimate {
@@ -26,12 +38,19 @@ struct RelayEstimate {
     bandwidth: f64, // bytes/sec EMA
     success: f64,   // EMA of {0,1}
     last_used: Instant,
+    /// Failures since the last success; >= [`QUARANTINE_AFTER`] means
+    /// quarantined (skipped by `pick_relay` while alternatives exist).
+    consecutive_failures: u32,
 }
 
 impl RelayEstimate {
     fn score(&self) -> f64 {
         let idle = self.last_used.elapsed().as_secs_f64();
         (self.success * self.bandwidth).max(1.0) * (1.0 + HEAL_PER_SEC * idle)
+    }
+
+    fn quarantined(&self) -> bool {
+        self.consecutive_failures >= QUARANTINE_AFTER
     }
 }
 
@@ -48,6 +67,10 @@ pub struct ShardcastClient {
     pub http: HttpClient,
     relays: Mutex<Vec<RelayEstimate>>,
     rng: Mutex<Rng>,
+    /// Times any relay crossed the quarantine threshold.
+    pub quarantine_events: Counter,
+    /// Failed attempts across all fetches (manifest + shards).
+    pub fetch_retries: Counter,
 }
 
 impl ShardcastClient {
@@ -73,9 +96,16 @@ impl ShardcastClient {
                 bandwidth,
                 success: 1.0,
                 last_used: Instant::now(),
+                consecutive_failures: 0,
             });
         }
-        ShardcastClient { http, relays: Mutex::new(relays), rng: Mutex::new(Rng::new(seed)) }
+        ShardcastClient {
+            http,
+            relays: Mutex::new(relays),
+            rng: Mutex::new(Rng::new(seed)),
+            quarantine_events: Counter::default(),
+            fetch_retries: Counter::default(),
+        }
     }
 
     pub fn with_ingress(mut self, bps: u64) -> ShardcastClient {
@@ -83,11 +113,37 @@ impl ShardcastClient {
         self
     }
 
+    /// Replace the relay set (the self-healing tree re-forms under churn
+    /// and a relay directory pushes the new URLs). Estimates for surviving
+    /// URLs are kept; new URLs start optimistic; gone URLs are dropped.
+    /// `urls` must be non-empty.
+    pub fn set_relays(&self, urls: &[String]) {
+        let mut relays = self.relays.lock().unwrap();
+        relays.retain(|r| urls.contains(&r.url));
+        for url in urls {
+            if !relays.iter().any(|r| &r.url == url) {
+                relays.push(RelayEstimate {
+                    url: url.clone(),
+                    bandwidth: 1e6,
+                    success: 1.0,
+                    last_used: Instant::now(),
+                    consecutive_failures: 0,
+                });
+            }
+        }
+    }
+
     fn pick_relay(&self) -> String {
         let relays = self.relays.lock().unwrap();
-        let weights: Vec<f64> = relays.iter().map(RelayEstimate::score).collect();
-        let idx = self.rng.lock().unwrap().weighted(&weights);
-        relays[idx].url.clone()
+        let n = relays.len();
+        let healthy: Vec<usize> = (0..n).filter(|&i| !relays[i].quarantined()).collect();
+        // Every relay quarantined = total-outage mode: sample among all of
+        // them (this desperation probe is also how a recovered relay gets
+        // the request that clears its quarantine).
+        let pool: Vec<usize> = if healthy.is_empty() { (0..n).collect() } else { healthy };
+        let weights: Vec<f64> = pool.iter().map(|&i| relays[i].score()).collect();
+        let k = self.rng.lock().unwrap().weighted(&weights);
+        relays[pool[k]].url.clone()
     }
 
     fn update(&self, url: &str, success: bool, bytes: usize, secs: f64) {
@@ -95,9 +151,17 @@ impl ShardcastClient {
         if let Some(r) = relays.iter_mut().find(|r| r.url == url) {
             r.last_used = Instant::now();
             r.success = (1.0 - EMA_ALPHA) * r.success + EMA_ALPHA * if success { 1.0 } else { 0.0 };
-            if success && secs > 0.0 {
-                let sample = bytes as f64 / secs;
-                r.bandwidth = (1.0 - EMA_ALPHA) * r.bandwidth + EMA_ALPHA * sample;
+            if success {
+                r.consecutive_failures = 0;
+                if secs > 0.0 {
+                    let sample = bytes as f64 / secs;
+                    r.bandwidth = (1.0 - EMA_ALPHA) * r.bandwidth + EMA_ALPHA * sample;
+                }
+            } else {
+                r.consecutive_failures += 1;
+                if r.consecutive_failures == QUARANTINE_AFTER {
+                    self.quarantine_events.inc();
+                }
             }
         }
     }
@@ -108,6 +172,17 @@ impl ShardcastClient {
             .unwrap()
             .iter()
             .map(|r| (r.url.clone(), r.bandwidth, r.success))
+            .collect()
+    }
+
+    /// URLs currently quarantined out of the sampling pool.
+    pub fn quarantined(&self) -> Vec<String> {
+        self.relays
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.quarantined())
+            .map(|r| r.url.clone())
             .collect()
     }
 
@@ -135,54 +210,75 @@ impl ShardcastClient {
     /// Download + verify checkpoint `step`. On integrity failure returns an
     /// error — per §2.2.3 the worker should move on to the next checkpoint
     /// instead of retrying the same one.
+    ///
+    /// Transport failures are survivable: the manifest and every shard
+    /// retry under the shared [`RetryPolicy`] budgets, each attempt
+    /// failing over to a freshly-sampled relay, so one dead relay costs
+    /// retries (and its quarantine), not the checkpoint.
     pub fn fetch_checkpoint(&self, step: u64) -> anyhow::Result<(Vec<u8>, DownloadReport)> {
         let t0 = Instant::now();
-        let url = self.pick_relay();
-        let resp = self.http.get(&format!("{url}/manifest?step={step}"))?;
-        anyhow::ensure!(resp.status == 200, "manifest {step}: status {}", resp.status);
-        let manifest = Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)?;
+        // Backoff jitter stream: deterministic per (client seed, step), and
+        // independent of the relay-sampling stream.
+        let mut jrng = self.rng.lock().unwrap().fold(0xBACC0FF ^ step);
+        let mut retries = 0usize;
+
+        // Manifest: failed over across relays, not pinned to one sample —
+        // the checkpoint must survive the first relay we ask being down.
+        let manifest = RetryPolicy::shardcast_manifest().run(
+            &format!("manifest {step}"),
+            &mut jrng,
+            |_| {
+                let url = self.pick_relay();
+                let resp = match self.http.get(&format!("{url}/manifest?step={step}")) {
+                    Ok(r) if r.status == 200 => r,
+                    Ok(r) => {
+                        self.update(&url, false, 0, 0.0);
+                        retries += 1;
+                        anyhow::bail!("from {url}: status {}", r.status);
+                    }
+                    Err(e) => {
+                        self.update(&url, false, 0, 0.0);
+                        retries += 1;
+                        anyhow::bail!("from {url}: {e}");
+                    }
+                };
+                Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)
+            },
+        )?;
 
         let mut shards: Vec<Vec<u8>> = vec![Vec::new(); manifest.n_shards()];
         let mut per_relay: Vec<(String, usize)> = Vec::new();
-        let mut retries = 0usize;
+        let shard_policy = RetryPolicy::shardcast_shard();
         for idx in 0..manifest.n_shards() {
-            let mut attempts = 0;
-            loop {
+            shards[idx] = shard_policy.run(&format!("shard {step}/{idx}"), &mut jrng, |_| {
                 let url = self.pick_relay();
                 let t = Instant::now();
-                let result = self.http.get(&format!("{url}/shard?step={step}&idx={idx}"));
-                match result {
+                match self.http.get(&format!("{url}/shard?step={step}&idx={idx}")) {
                     Ok(r) if r.status == 200 => {
                         self.update(&url, true, r.body.len(), t.elapsed().as_secs_f64());
                         match per_relay.iter_mut().find(|(u, _)| *u == url) {
                             Some((_, n)) => *n += 1,
                             None => per_relay.push((url.clone(), 1)),
                         }
-                        shards[idx] = r.body;
-                        break;
+                        Ok(r.body)
                     }
                     Ok(r) => {
                         // 503 = still streaming on that relay; 429 = rate
-                        // limited; both count against its estimate.
+                        // limited; both count against its estimate and
+                        // fail over.
                         self.update(&url, false, 0, 0.0);
                         retries += 1;
-                        attempts += 1;
-                        anyhow::ensure!(
-                            attempts < 200,
-                            "shard {idx}: giving up (last status {})",
-                            r.status
-                        );
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        anyhow::bail!("from {url}: status {}", r.status)
                     }
                     Err(e) => {
                         self.update(&url, false, 0, 0.0);
                         retries += 1;
-                        attempts += 1;
-                        anyhow::ensure!(attempts < 200, "shard {idx}: {e}");
+                        anyhow::bail!("from {url}: {e}")
                     }
                 }
-            }
+            })?;
         }
+        self.fetch_retries.add(retries as u64);
         let payload = manifest.assemble(&shards)?;
         let report = DownloadReport {
             step,
@@ -302,5 +398,88 @@ mod tests {
             bw(&slow.url())
         );
         assert!(fast_n + slow_n > 0);
+    }
+
+    #[test]
+    fn fetch_fails_over_when_a_relay_is_down() {
+        // One of two relays is dead before the fetch starts: the manifest
+        // and every shard must fail over to the survivor, the dead relay
+        // must end up quarantined, and its estimate must collapse. With
+        // QUARANTINE_AFTER = 3 < the manifest policy's 6 attempts, success
+        // is guaranteed for any RNG seed: the dead relay can eat at most 3
+        // attempts before it leaves the sampling pool.
+        let payload: Vec<u8> = (0..300_000u32).map(|i| (i % 11) as u8).collect();
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &payload, 8 * 1024);
+        let poll = Duration::from_millis(5);
+        let alive = Relay::start("alive", origin.url(), ServerConfig::default(), poll).unwrap();
+        let dead = Relay::start("dead", origin.url(), ServerConfig::default(), poll).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !(alive.store.is_complete(1) && dead.store.is_complete(1)) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let urls = vec![dead.url(), alive.url()];
+        let dead_url = dead.url();
+        drop(dead); // port closes: connections now refused
+
+        let client = ShardcastClient::new("worker-4", &urls, 17, false);
+        let (got, report) = client.fetch_checkpoint(1).unwrap();
+        assert_eq!(got, payload);
+        assert!(report.retries >= 1, "no failover retries recorded: {report:?}");
+        assert_eq!(client.fetch_retries.get(), report.retries as u64);
+        assert!(
+            client.quarantined().contains(&dead_url),
+            "dead relay not quarantined: {:?}",
+            client.quarantined()
+        );
+        let est = client.estimates();
+        let succ = |url: &str| est.iter().find(|(u, _, _)| u == url).map(|(_, _, s)| *s).unwrap();
+        assert!(succ(&dead_url) < succ(&alive.url()), "estimate did not collapse: {est:?}");
+    }
+
+    #[test]
+    fn relay_death_mid_download_completes_from_survivors() {
+        // Kill a relay *between shards* of an in-flight fetch: the client
+        // sees connection errors partway through, fails over, and still
+        // assembles a byte-identical checkpoint from the survivor.
+        let payload: Vec<u8> = (0..400_000u32).map(|i| (i % 17) as u8).collect();
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &payload, 8 * 1024);
+        // Egress shaping stretches the download (~50 shards at ~1 MiB/s
+        // aggregate ≈ 0.4 s+) so the kill below lands mid-fetch.
+        let shaped = ServerConfig { egress_bytes_per_sec: 512 * 1024, ..Default::default() };
+        let doomed =
+            Relay::start("doomed", origin.url(), shaped.clone(), Duration::from_millis(5)).unwrap();
+        let survivor =
+            Relay::start("survivor", origin.url(), shaped, Duration::from_millis(5)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !(doomed.store.is_complete(1) && survivor.store.is_complete(1)) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let urls = vec![doomed.url(), survivor.url()];
+        let doomed_url = doomed.url();
+        let victim = std::sync::Arc::new(Mutex::new(Some(doomed)));
+        let killer = {
+            let victim = std::sync::Arc::clone(&victim);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(120));
+                victim.lock().unwrap().take();
+            })
+        };
+
+        let client = ShardcastClient::new("worker-5", &urls, 23, false);
+        let (got, report) = client.fetch_checkpoint(1).unwrap();
+        killer.join().unwrap();
+        assert_eq!(got, payload);
+        assert!(report.retries >= 1, "kill did not force any retries: {report:?}");
+        assert!(client.quarantine_events.get() >= 1, "dead relay never quarantined");
+        let est = client.estimates();
+        let succ = |url: &str| est.iter().find(|(u, _, _)| u == url).map(|(_, _, s)| *s).unwrap();
+        assert!(
+            succ(&doomed_url) < succ(&survivor.url()),
+            "dead relay's estimate did not collapse: {est:?}"
+        );
     }
 }

@@ -1,6 +1,35 @@
 //! SHARDCAST (paper §2.2): HTTP tree-topology broadcast of policy weights
 //! from the training node to decentralized inference workers — sharded,
 //! pipelined, checksummed, rate-limited and firewalled.
+//!
+//! # Failure model
+//!
+//! The relay tier and its clients assume an unreliable swarm and treat the
+//! following faults as *survivable* (they cost retries, never the
+//! checkpoint):
+//!
+//! - **Relay death mid-download** — [`ShardcastClient`] retries every
+//!   manifest/shard request under [`crate::util::retry::RetryPolicy`]
+//!   budgets, failing over to a freshly-sampled relay per attempt. A relay
+//!   that fails [`client::QUARANTINE_AFTER`] times in a row is quarantined
+//!   out of the sampling pool (it re-earns trust via the desperation probe
+//!   that fires when every relay is quarantined).
+//! - **Upstream death inside the tree** — a [`Relay`] started with
+//!   [`server::Relay::start_with_parents`] rotates to its next candidate
+//!   parent after [`server::REPARENT_AFTER`] consecutive failed pull
+//!   cycles, and resumes half-mirrored checkpoints shard-by-shard from the
+//!   new parent.
+//! - **Slow/streaming peers** — 503 "shard not yet available" responses
+//!   back off under the same retry policies (pipelining means a parent may
+//!   legitimately lag by a few shards).
+//!
+//! *Not* survivable by design: payload corruption. A checksum mismatch in
+//! [`Manifest::assemble`] fails the fetch outright — per §2.2.3 the worker
+//! skips to the next checkpoint rather than re-trusting a lying relay.
+//!
+//! All retry schedules draw jitter from the deterministic
+//! [`crate::util::rng::Rng`], so chaos runs driven by
+//! [`crate::http::FaultPlan`] replay exactly.
 
 pub mod client;
 pub mod manifest;

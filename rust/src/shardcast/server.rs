@@ -8,14 +8,22 @@
 //!   GET /manifest?step=N       - manifest (or latest when step omitted)
 //!   GET /shard?step=N&idx=I    - shard bytes (503 while still streaming in)
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::manifest::Manifest;
 use super::store::Store;
 use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
+use crate::util::retry::RetryPolicy;
+use crate::util::rng::Rng;
 
 pub const PROBE_BYTES: usize = 16 * 1024;
+
+/// Consecutive failed pull cycles after which a relay abandons its current
+/// parent and rotates to the next one in its parent list.
+pub const REPARENT_AFTER: u32 = 2;
 
 fn handle(store: &Store, req: &Request) -> Response {
     match req.path.as_str() {
@@ -80,12 +88,22 @@ impl Origin {
 
 /// Relay server: pulls new checkpoints from a parent (origin or another
 /// relay — tree topology) in a pipelined fashion and serves workers.
+///
+/// Self-healing: a relay built with [`Relay::start_with_parents`] holds an
+/// ordered list of candidate parents. After [`REPARENT_AFTER`] consecutive
+/// failed pull cycles it rotates to the next candidate, so a dead upstream
+/// costs a few poll intervals, not the subtree. Partially-mirrored
+/// checkpoints are resumed from the new parent (only fully-complete steps
+/// are skipped by the puller).
 pub struct Relay {
     pub store: Store,
     pub server: HttpServer,
     pub name: String,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    stop: Arc<AtomicBool>,
     puller: Option<std::thread::JoinHandle<()>>,
+    parents: Vec<String>,
+    parent_idx: Arc<AtomicUsize>,
+    reparent_events: Arc<Counter>,
 }
 
 impl Relay {
@@ -95,32 +113,90 @@ impl Relay {
         cfg: ServerConfig,
         poll_interval: std::time::Duration,
     ) -> anyhow::Result<Relay> {
+        Relay::start_with_parents(name, vec![parent_url], cfg, poll_interval)
+    }
+
+    /// Start a relay with an ordered list of fallback parents (first entry
+    /// is the preferred upstream).
+    pub fn start_with_parents(
+        name: &str,
+        parents: Vec<String>,
+        cfg: ServerConfig,
+        poll_interval: std::time::Duration,
+    ) -> anyhow::Result<Relay> {
+        anyhow::ensure!(!parents.is_empty(), "relay {name}: empty parent list");
         let store = Store::new();
         let s = store.clone();
         let server = HttpServer::start(cfg, move |req| handle(&s, req))?;
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        let parent_idx = Arc::new(AtomicUsize::new(0));
+        let reparent_events = Arc::new(Counter::default());
         let puller = {
             let store = store.clone();
             let stop = Arc::clone(&stop);
+            let parents = parents.clone();
+            let parent_idx = Arc::clone(&parent_idx);
+            let reparent_events = Arc::clone(&reparent_events);
             let client = HttpClient::new(&format!("relay-{name}"));
+            let name = name.to_string();
+            // Deterministic backoff jitter, seeded from the relay's name.
+            let seed = name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
             std::thread::Builder::new().name(format!("i2-relay-{name}")).spawn(move || {
-                while !stop.load(std::sync::atomic::Ordering::SeqCst) {
-                    if let Err(e) = pull_once(&client, &parent_url, &store) {
-                        crate::debug!("shardcast", "relay pull: {e}");
+                let mut rng = Rng::new(seed);
+                let mut failures = 0u32;
+                while !stop.load(Ordering::SeqCst) {
+                    let parent = parents[parent_idx.load(Ordering::SeqCst) % parents.len()].clone();
+                    match pull_once(&client, &parent, &store, &mut rng) {
+                        Ok(()) => failures = 0,
+                        Err(e) => {
+                            failures += 1;
+                            crate::debug!("shardcast", "relay {name} pull from {parent}: {e}");
+                            if failures >= REPARENT_AFTER && parents.len() > 1 {
+                                let next = (parent_idx.load(Ordering::SeqCst) + 1) % parents.len();
+                                parent_idx.store(next, Ordering::SeqCst);
+                                reparent_events.inc();
+                                failures = 0;
+                                crate::warn!(
+                                    "shardcast",
+                                    "relay {name}: re-parenting {parent} -> {} after repeated \
+                                     pull failures",
+                                    parents[next]
+                                );
+                            }
+                        }
                     }
                     std::thread::sleep(poll_interval);
                 }
             })?
         };
-        Ok(Relay { store, server, name: name.to_string(), stop, puller: Some(puller) })
+        Ok(Relay {
+            store,
+            server,
+            name: name.to_string(),
+            stop,
+            puller: Some(puller),
+            parents,
+            parent_idx,
+            reparent_events,
+        })
     }
 
     pub fn url(&self) -> String {
         self.server.url()
     }
 
+    /// The parent URL this relay is currently pulling from.
+    pub fn current_parent(&self) -> String {
+        self.parents[self.parent_idx.load(Ordering::SeqCst) % self.parents.len()].clone()
+    }
+
+    /// How many times this relay abandoned a dead upstream.
+    pub fn reparent_count(&self) -> u64 {
+        self.reparent_events.get()
+    }
+
     pub fn stop(&mut self) {
-        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.puller.take() {
             let _ = t.join();
         }
@@ -136,39 +212,51 @@ impl Drop for Relay {
 /// One pull cycle: mirror any parent checkpoint we don't have yet,
 /// publishing the manifest immediately and shards as they arrive so
 /// children can start downloading before we finish (pipelining, §2.2).
-fn pull_once(client: &HttpClient, parent: &str, store: &Store) -> anyhow::Result<()> {
+///
+/// Only *fully-mirrored* steps are skipped: a checkpoint left half-pulled
+/// by a dying parent is resumed (missing shards only) on the next cycle —
+/// possibly from a different parent after re-parenting.
+fn pull_once(
+    client: &HttpClient,
+    parent: &str,
+    store: &Store,
+    rng: &mut Rng,
+) -> anyhow::Result<()> {
     let resp = client.get(&format!("{parent}/versions"))?;
     anyhow::ensure!(resp.status == 200, "versions: {}", resp.status);
     let versions = Json::parse(std::str::from_utf8(&resp.body)?)?;
-    let steps: Vec<u64> = versions.as_arr().unwrap_or(&[]).iter().filter_map(Json::as_u64).collect();
+    let steps: Vec<u64> =
+        versions.as_arr().unwrap_or(&[]).iter().filter_map(Json::as_u64).collect();
     for step in steps {
-        if store.manifest(step).is_some() {
+        if store.is_complete(step) {
             continue;
         }
-        let resp = client.get(&format!("{parent}/manifest?step={step}"))?;
-        if resp.status != 200 {
-            continue;
-        }
-        let manifest = Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)?;
-        let n = manifest.n_shards();
-        store.publish_manifest(manifest);
-        for idx in 0..n {
-            // Parent may itself still be streaming: retry 503s briefly.
-            let mut attempts = 0;
-            loop {
-                let r = client.get(&format!("{parent}/shard?step={step}&idx={idx}"))?;
-                match r.status {
-                    200 => {
-                        store.put_shard(step, idx, Arc::new(r.body));
-                        break;
-                    }
-                    503 if attempts < 50 => {
-                        attempts += 1;
-                        std::thread::sleep(std::time::Duration::from_millis(20));
-                    }
-                    _ => anyhow::bail!("shard {step}/{idx}: status {}", r.status),
+        let manifest = match store.manifest(step) {
+            Some(m) => m,
+            None => {
+                let resp = client.get(&format!("{parent}/manifest?step={step}"))?;
+                if resp.status != 200 {
+                    continue;
                 }
+                let m = Manifest::from_json(&Json::parse(std::str::from_utf8(&resp.body)?)?)?;
+                store.publish_manifest(m.clone());
+                m
             }
+        };
+        let policy = RetryPolicy::relay_pull();
+        for idx in 0..manifest.n_shards() {
+            if store.shard(step, idx).is_some() {
+                continue;
+            }
+            // Parent may itself still be streaming this shard (503):
+            // retry under the shared backoff policy instead of the old
+            // fixed 20 ms poll loop.
+            let body = policy.run(&format!("pull shard {step}/{idx}"), rng, |_| {
+                let r = client.get(&format!("{parent}/shard?step={step}&idx={idx}"))?;
+                anyhow::ensure!(r.status == 200, "status {}", r.status);
+                Ok(r.body)
+            })?;
+            store.put_shard(step, idx, Arc::new(body));
         }
     }
     Ok(())
@@ -233,5 +321,39 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "tier2 never completed");
             std::thread::sleep(Duration::from_millis(10));
         }
+    }
+
+    #[test]
+    fn relay_reparents_when_upstream_dies() {
+        // Tree: origin -> tier1 -> tier2, with tier2 holding the origin as
+        // a fallback parent. Kill tier1 between checkpoints: tier2 must
+        // rotate to the origin and keep mirroring new steps.
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &vec![4u8; 40_000], 8 * 1024);
+        let tier1 = Relay::start("t1", origin.url(), ServerConfig::default(),
+                                 Duration::from_millis(10)).unwrap();
+        let tier2 = Relay::start_with_parents(
+            "t2",
+            vec![tier1.url(), origin.url()],
+            ServerConfig::default(),
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !tier2.store.is_complete(1) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never mirrored step 1");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(tier2.current_parent(), tier1.url());
+
+        drop(tier1); // upstream dies; its port now refuses connections
+        origin.publish(2, &vec![5u8; 40_000], 8 * 1024);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !tier2.store.is_complete(2) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never healed after re-parent");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(tier2.current_parent(), origin.url());
+        assert!(tier2.reparent_count() >= 1);
     }
 }

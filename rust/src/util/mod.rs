@@ -10,6 +10,7 @@ pub mod metrics;
 pub mod numeric;
 pub mod pool;
 pub mod prop;
+pub mod retry;
 pub mod rng;
 pub mod wire;
 

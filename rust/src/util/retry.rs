@@ -1,0 +1,201 @@
+//! Shared retry/backoff policy for the swarm's network paths.
+//!
+//! Every retry loop in the crate used to be ad-hoc: `sleep(10ms)` with a
+//! 200-attempt cap in the shardcast client, a 50x20ms poll in the relay
+//! puller, and a busy-loop (no sleep at all) on transport errors — which
+//! hammers a refused port as fast as `connect()` can fail. [`RetryPolicy`]
+//! replaces them with one shape: capped exponential backoff, deterministic
+//! jitter drawn from [`crate::util::rng::Rng`] (so chaos runs under the
+//! fault plane replay byte-identically), and a total-deadline budget so a
+//! dead dependency fails in bounded wall-clock time instead of
+//! `attempts x max_delay`.
+//!
+//! Retries never reach the wire protocol: a retried request is a brand-new
+//! HTTP request, so commitments and signed envelopes stay byte-identical
+//! whether the first attempt succeeded or the fifth did.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Maximum number of attempts (>= 1); the first try counts.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles every retry after.
+    pub base_delay_ms: u64,
+    /// Cap on a single backoff sleep.
+    pub max_delay_ms: u64,
+    /// Fraction of each delay randomized away (0..=1): the actual sleep is
+    /// uniform in `[delay * (1 - jitter), delay]`. Jitter decorrelates
+    /// clients that failed at the same instant (thundering herd on a relay
+    /// that just came back).
+    pub jitter: f64,
+    /// Total wall-clock budget across all attempts and sleeps in
+    /// milliseconds (0 = no budget). Once an upcoming sleep would cross
+    /// the budget, the policy gives up instead of sleeping.
+    pub total_budget_ms: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, base_delay_ms: u64, max_delay_ms: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base_delay_ms,
+            max_delay_ms,
+            jitter: 0.5,
+            total_budget_ms: 0,
+        }
+    }
+
+    pub fn with_budget(mut self, total_budget_ms: u64) -> RetryPolicy {
+        self.total_budget_ms = total_budget_ms;
+        self
+    }
+
+    /// Shard downloads: a 503 means the relay is still streaming the shard
+    /// in from its parent, so waiting is productive — but back off rather
+    /// than hammer (the old loop polled every 10 ms, 200 times).
+    pub fn shardcast_shard() -> RetryPolicy {
+        RetryPolicy::new(12, 10, 400).with_budget(15_000)
+    }
+
+    /// Manifest fetches: cheap requests, failing over across relays; a few
+    /// fast attempts beat a long budget (the caller moves to the next
+    /// checkpoint on total failure).
+    pub fn shardcast_manifest() -> RetryPolicy {
+        RetryPolicy::new(6, 20, 300).with_budget(5_000)
+    }
+
+    /// Relay pull-from-parent: the puller thread re-runs every poll
+    /// interval anyway, so keep individual pulls bounded.
+    pub fn relay_pull() -> RetryPolicy {
+        RetryPolicy::new(8, 20, 500).with_budget(10_000)
+    }
+
+    /// The backoff delay after attempt `attempt` (0-based), jittered.
+    pub fn delay_ms(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let exp = attempt.min(16);
+        let raw = self
+            .base_delay_ms
+            .saturating_mul(1u64 << exp)
+            .min(self.max_delay_ms.max(self.base_delay_ms));
+        let cut = (raw as f64 * self.jitter.clamp(0.0, 1.0) * rng.f64()) as u64;
+        raw - cut
+    }
+
+    /// Run `op` until it succeeds, attempts run out, or the budget is
+    /// spent. `op` receives the 0-based attempt index. The returned error
+    /// is the last failure, tagged with `what` and the attempt count.
+    pub fn run<T>(
+        &self,
+        what: &str,
+        rng: &mut Rng,
+        mut op: impl FnMut(u32) -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        let start = Instant::now();
+        let attempts = self.max_attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        let mut ran = 0u32;
+        for attempt in 0..attempts {
+            ran = attempt + 1;
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 == attempts {
+                break;
+            }
+            let delay = self.delay_ms(attempt, rng);
+            if self.total_budget_ms > 0 {
+                let spent = start.elapsed().as_millis() as u64;
+                if spent + delay >= self.total_budget_ms {
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(delay));
+        }
+        Err(match last {
+            Some(e) => anyhow::anyhow!("{what}: gave up after {ran} attempts: {e}"),
+            None => anyhow::anyhow!("{what}: no attempts configured"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_are_capped_exponential() {
+        let p = RetryPolicy { jitter: 0.0, ..RetryPolicy::new(10, 10, 100) };
+        let mut rng = Rng::new(1);
+        let delays: Vec<u64> = (0..6).map(|a| p.delay_ms(a, &mut rng)).collect();
+        assert_eq!(delays, vec![10, 20, 40, 80, 100, 100]);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let p = RetryPolicy::new(10, 10, 1000);
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let da: Vec<u64> = (0..8).map(|i| p.delay_ms(i, &mut a)).collect();
+        let db: Vec<u64> = (0..8).map(|i| p.delay_ms(i, &mut b)).collect();
+        assert_eq!(da, db);
+        // Jittered delays stay within [delay/2, delay] for jitter = 0.5.
+        for (i, d) in da.iter().enumerate() {
+            let raw = (10u64 << i.min(16)).min(1000);
+            assert!(*d <= raw && *d >= raw / 2, "attempt {i}: {d} not in [{}, {raw}]", raw / 2);
+        }
+    }
+
+    #[test]
+    fn run_retries_until_success() {
+        let p = RetryPolicy { base_delay_ms: 1, max_delay_ms: 2, ..RetryPolicy::new(5, 1, 2) };
+        let mut rng = Rng::new(3);
+        let mut calls = 0;
+        let out: anyhow::Result<u32> = p.run("flaky", &mut rng, |attempt| {
+            calls += 1;
+            anyhow::ensure!(attempt >= 2, "not yet");
+            Ok(attempt)
+        });
+        assert_eq!(out.unwrap(), 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn run_reports_last_error_after_exhaustion() {
+        let p = RetryPolicy { base_delay_ms: 1, max_delay_ms: 1, ..RetryPolicy::new(3, 1, 1) };
+        let mut rng = Rng::new(4);
+        let err = p
+            .run("doomed", &mut rng, |a| -> anyhow::Result<()> {
+                anyhow::bail!("failure #{a}")
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("doomed"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+        assert!(err.contains("failure #2"), "{err}");
+    }
+
+    #[test]
+    fn budget_stops_before_attempts_run_out() {
+        let p = RetryPolicy {
+            max_attempts: 100,
+            base_delay_ms: 50,
+            max_delay_ms: 50,
+            jitter: 0.0,
+            total_budget_ms: 120,
+        };
+        let mut rng = Rng::new(5);
+        let t0 = Instant::now();
+        let mut calls = 0u32;
+        let _ = p.run("budgeted", &mut rng, |_| -> anyhow::Result<()> {
+            calls += 1;
+            anyhow::bail!("down")
+        });
+        // 100 attempts x 50ms would be 5s; the budget cuts it to ~120ms.
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(calls < 10, "{calls}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Cheat-EV gate: proves the trust-weighted sampling gate is safe to ship
+//! at any configured rate, or fails CI trying. Engine-free (the catch is
+//! stage 2's CPU reward re-verification), so it runs on a bare checkout.
+//!
+//!   cargo run --release --bin cheat_ev_bench
+//!
+//! Hard gates (exit non-zero, not statistics), per sampling rate in
+//! {1.0, 0.25, 0.1}:
+//! - the analytic per-cheat expected value is negative with the stake the
+//!   run actually bonded: `(1 - p) * reward < p * stake`;
+//! - every node that submitted a fabricated-reward submission ends the
+//!   run slashed with its full stake forfeited;
+//! - no honest node is slashed;
+//! - at rate 1.0 the gated pipeline's verdict stream is byte-identical to
+//!   the ungated (pre-sampling) pipeline over the same upload bytes.
+//!
+//! Emits `BENCH_cheatev.json` with the per-rate EV margins and the
+//! realized spot-check skip share, for the perf/safety trajectory.
+
+use intellect2::coordinator::{run_cheat_ev, CheatEvConfig, CheatEvReport};
+use intellect2::util::bench::BenchReport;
+
+fn gate(rate: f64) -> anyhow::Result<CheatEvReport> {
+    let cfg = CheatEvConfig { sampling_rate: rate, ..Default::default() };
+    let r = run_cheat_ev(&cfg)?;
+    println!(
+        "rate {rate:.2}: {} uploads — {} fully verified, {} skipped, {} escalated; \
+         stake {} units vs {} units/submission",
+        r.uploads, r.sampled_full, r.skipped, r.escalated, r.stake, r.per_sub_reward
+    );
+    for n in r.nodes.iter().filter(|n| n.is_cheater()) {
+        println!(
+            "  {:?}: {} cheats ({} admitted, {} units banked), slashed={}, forfeited {}",
+            n.strategy, n.cheats_submitted, n.cheats_admitted, n.cheat_gain, n.slashed,
+            n.forfeited
+        );
+    }
+    anyhow::ensure!(
+        r.analytic_cheat_ev() < 0.0,
+        "rate {rate}: cheating is positive-EV ({:+.2} units/cheat) — stake sizing broken",
+        r.analytic_cheat_ev()
+    );
+    anyhow::ensure!(
+        r.cheaters_escaped() == 0,
+        "rate {rate}: {} cheater(s) finished the run unslashed",
+        r.cheaters_escaped()
+    );
+    anyhow::ensure!(
+        r.honest_slashed() == 0,
+        "rate {rate}: {} honest node(s) slashed",
+        r.honest_slashed()
+    );
+    for n in r.nodes.iter().filter(|n| n.cheats_submitted > 0) {
+        anyhow::ensure!(
+            n.forfeited == r.stake,
+            "rate {rate}: {:?} slashed but only {} of {} stake units forfeited",
+            n.strategy,
+            n.forfeited,
+            r.stake
+        );
+    }
+    Ok(r)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rep = BenchReport::new("cheatev");
+
+    let full = gate(1.0)?;
+    anyhow::ensure!(
+        full.skipped == 0,
+        "rate 1.0 must disable spot-check exemption ({} skips)",
+        full.skipped
+    );
+    anyhow::ensure!(
+        full.gated_fingerprints == full.baseline_fingerprints,
+        "rate 1.0 verdicts diverge from the pre-sampling pipeline: {} gated vs {} baseline",
+        full.gated_fingerprints.len(),
+        full.baseline_fingerprints.len()
+    );
+    println!(
+        "rate 1.00: verdict stream identical to ungated pipeline ({} verdicts)",
+        full.gated_fingerprints.len()
+    );
+
+    let quarter = gate(0.25)?;
+    let tenth = gate(0.1)?;
+
+    // EV margin = how many reward units below break-even a cheat sits
+    // (positive = safe; the gates above already enforce > 0).
+    rep.metric("cheat_ev_margin_rate100", -full.analytic_cheat_ev());
+    rep.metric("cheat_ev_margin_rate25", -quarter.analytic_cheat_ev());
+    rep.metric("cheat_ev_margin_rate10", -tenth.analytic_cheat_ev());
+    // Realized adversarial outcomes (worst cheater's profit, negated so
+    // higher = safer; zero cheaters escaped is gated above).
+    rep.metric("cheater_worst_loss_rate10", -(tenth.worst_realized_profit() as f64));
+    // Throughput side of the story: share of uploads the gate exempted
+    // from stages 1-5 (higher = more validator compute saved).
+    rep.metric("spotcheck_skip_share_rate25", quarter.skipped as f64 / quarter.uploads as f64);
+    rep.metric("spotcheck_skip_share_rate10", tenth.skipped as f64 / tenth.uploads as f64);
+    let path = rep.write()?;
+    println!("wrote {}", path.display());
+    println!("cheat-EV gate: all rates safe (negative EV, cheaters slashed, honest intact)");
+    Ok(())
+}

@@ -10,13 +10,18 @@
 //! Hard gates (exit non-zero, not statistics):
 //! - both runs complete every step within the per-step deadline;
 //! - no honest node is slashed under churn;
-//! - goodput under churn stays >= 50% of the fault-free baseline.
+//! - goodput under churn stays >= 50% of the fault-free baseline;
+//! - the churn run samples its payload audits (rate 0.25): some fetches
+//!   are fully audited, some admitted unaudited, and every audit passes
+//!   (an audit mismatch fails the fetch task, stalling the step quota).
 
 use intellect2::coordinator::{run_churn, ChurnConfig};
 use intellect2::http::FaultSpec;
 use intellect2::util::bench::BenchReport;
 
 fn main() -> anyhow::Result<()> {
+    // Baseline audits every fetch (rate 1.0); the churn run exercises the
+    // commitment-sampled audit path on top of process + request faults.
     let base_cfg = ChurnConfig::default();
     let churn_cfg = ChurnConfig {
         churn: true,
@@ -26,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             hang_ms: 150,
             ..FaultSpec::default()
         }),
+        sampling_rate: 0.25,
         ..ChurnConfig::default()
     };
 
@@ -68,6 +74,25 @@ fn main() -> anyhow::Result<()> {
         "{} honest node(s) slashed under churn",
         churn.honest_slashed
     );
+    println!(
+        "audits: baseline {}/{} full, churn {} full + {} skipped at rate {}",
+        base.audits_full,
+        base.audits_full + base.audits_skipped,
+        churn.audits_full,
+        churn.audits_skipped,
+        churn_cfg.sampling_rate
+    );
+    anyhow::ensure!(
+        base.audits_skipped == 0,
+        "baseline at rate 1.0 skipped {} audits",
+        base.audits_skipped
+    );
+    anyhow::ensure!(
+        churn.audits_full > 0 && churn.audits_skipped > 0,
+        "sampled auditing degenerate: {} full / {} skipped",
+        churn.audits_full,
+        churn.audits_skipped
+    );
 
     // Goodput: completed steps per wall-clock second, churn over baseline.
     let base_rate = base.steps_completed as f64 / base.elapsed_secs;
@@ -93,6 +118,10 @@ fn main() -> anyhow::Result<()> {
     rep.metric("steps_completed", churn.steps_completed as f64);
     rep.metric("recovery_overhead", recovery_overhead.max(0.0));
     rep.metric("fetch_retry_calls", churn.fetch_retries as f64);
+    rep.metric(
+        "audit_coverage",
+        churn.audits_full as f64 / (churn.audits_full + churn.audits_skipped).max(1) as f64,
+    );
     let path = rep.write()?;
     println!("wrote {}", path.display());
     Ok(())

@@ -100,6 +100,25 @@ fn main() -> anyhow::Result<()> {
         println!("{}", render_table(&["generation engine", "value"], &gen_rows));
     }
 
+    // Trust-weighted sampled validation: how the gate split the upload
+    // stream (full verification vs spot-check-exempt vs re-escalated) and
+    // how many rollouts were admitted on stake + trust alone. Zero rows
+    // mean the gate never armed (`--sampling-rate 1.0`, the default).
+    let gated = s.submissions_sampled_full.get() + s.submissions_skipped_unverified.get();
+    if gated > 0 {
+        let share = |n: u64| format!("{n} ({:.0}%)", 100.0 * n as f64 / gated as f64);
+        let gate_rows = vec![
+            vec!["fully verified".into(), share(s.submissions_sampled_full.get())],
+            vec!["skipped (stake-backed)".into(), share(s.submissions_skipped_unverified.get())],
+            vec!["re-escalated".into(), s.submissions_escalated.get().to_string()],
+            vec![
+                "rollouts admitted unverified".into(),
+                s.rollouts_admitted_unverified.get().to_string(),
+            ],
+        ];
+        println!("{}", render_table(&["sampled validation", "submissions"], &gate_rows));
+    }
+
     // Off-policy staleness accounting (the two-step-async correctness knob).
     let hist = result.stats.staleness_hist();
     let trained: u64 = hist.iter().map(|(_, n)| n).sum();

@@ -31,6 +31,19 @@
 //!   positions, which the TOPLOC tolerances absorb. Requires
 //!   vectored-`pos` artifacts (`make artifacts`); older artifact sets
 //!   fall back to the reference path automatically.
+//! - `sampling-rate`: floor fraction of a *proven* node's uploads that
+//!   still get full six-stage verification (trust-weighted sampled
+//!   validation). 1.0 (default) = verify everything; 0.1 = spot-check a
+//!   tenth once a node's clean streak has earned promotion. New, unsigned
+//!   or recently-flagged nodes are always fully verified regardless.
+//! - `trust-promotion-streak`: consecutive fully-verified clean
+//!   submissions a node needs before its verification probability starts
+//!   decaying toward `sampling-rate`; any reject resets the streak (full
+//!   re-escalation).
+//! - `trust-stake-margin`: safety factor on the minimum stake that keeps
+//!   cheating negative-EV at the configured `sampling-rate` (see
+//!   `protocol::min_negative_ev_stake`). Workers bond this stake on
+//!   joining; a slash forfeits it.
 //! - `env-mix`: ordered per-environment task counts for the training
 //!   dataset, e.g. `--env-mix math=900,code=100,seq=200,chain=50`
 //!   (replaces the old hardcoded `n-math`/`n-code` pair). Env names are
@@ -95,6 +108,17 @@ pub struct RunConfig {
     /// ledger's key registry; slash only on proven attribution. On by
     /// default for the real swarm; turn off for legacy unsigned fixtures.
     pub require_signed_submissions: bool,
+    /// Trust-weighted sampled validation: floor fraction of a proven
+    /// node's uploads entering the full pipeline. 1.0 disables sampling
+    /// (every upload fully verified — the safe default); requires
+    /// `require_signed_submissions` (no provable identity, no trust).
+    pub sampling_rate: f64,
+    /// Clean streak needed before verification probability decays below
+    /// 1.0 (`TrustState::verify_probability`); rejects reset it.
+    pub trust_promotion_streak: u64,
+    /// Safety factor sizing the stake bond that keeps cheating
+    /// negative-EV at `sampling_rate` (`min_negative_ev_stake`).
+    pub trust_stake_margin: f64,
     pub lr_warmup_steps: u64,
     /// Offline difficulty filter (pass@k band) applied before training.
     pub offline_filter: bool,
@@ -127,6 +151,9 @@ impl Default for RunConfig {
             prefill_bucket_tokens: 0,
             gen_refill: true,
             require_signed_submissions: true,
+            sampling_rate: 1.0,
+            trust_promotion_streak: 8,
+            trust_stake_margin: 2.0,
             lr_warmup_steps: 5,
             offline_filter: false,
         }
@@ -168,6 +195,10 @@ impl RunConfig {
         self.gen_refill = a.bool_or("gen-refill", self.gen_refill);
         self.require_signed_submissions =
             a.bool_or("require-signed-submissions", self.require_signed_submissions);
+        self.sampling_rate = a.f64_or("sampling-rate", self.sampling_rate).clamp(0.0, 1.0);
+        self.trust_promotion_streak =
+            a.u64_or("trust-promotion-streak", self.trust_promotion_streak).max(1);
+        self.trust_stake_margin = a.f64_or("trust-stake-margin", self.trust_stake_margin).max(1.0);
         if a.has_flag("offline-filter") {
             self.offline_filter = true;
         }
@@ -224,6 +255,7 @@ mod tests {
              --batch-timeout-secs 7 --broadcast-timeout-secs 9 --origin-egress-bps 5000 \
              --validator-threads 8 --prefill-bucket-tokens 64 \
              --require-signed-submissions false --gen-refill false \
+             --sampling-rate 0.25 --trust-promotion-streak 12 --trust-stake-margin 3.5 \
              --env-mix math=10,seq=5"
                 .split_whitespace()
                 .map(str::to_string),
@@ -245,9 +277,24 @@ mod tests {
         assert_eq!(c.prefill_bucket_tokens, 64);
         assert!(!c.require_signed_submissions);
         assert!(!c.gen_refill);
-        // Defaults: signatures required, continuous batching on.
+        assert_eq!(c.sampling_rate, 0.25);
+        assert_eq!(c.trust_promotion_streak, 12);
+        assert_eq!(c.trust_stake_margin, 3.5);
+        // Defaults: signatures required, continuous batching on, sampling
+        // off (every upload fully verified).
         assert!(RunConfig::default().require_signed_submissions);
         assert!(RunConfig::default().gen_refill);
+        assert_eq!(RunConfig::default().sampling_rate, 1.0);
+        // Out-of-range knobs are clamped, not trusted.
+        let a = Args::parse(
+            "--sampling-rate 7.5 --trust-promotion-streak 0 --trust-stake-margin 0.1"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let c = RunConfig::default().apply_args(&a);
+        assert_eq!(c.sampling_rate, 1.0);
+        assert_eq!(c.trust_promotion_streak, 1);
+        assert_eq!(c.trust_stake_margin, 1.0);
     }
 
     #[test]

@@ -1,0 +1,459 @@
+//! Cheat-EV harness: an engine-free adversarial economy that proves the
+//! trust-weighted sampling gate is safe to run at any configured rate.
+//!
+//! The question sampled validation must answer is not "do we catch every
+//! cheat?" (we deliberately do not — that is the whole throughput win)
+//! but "is cheating *profitable*?". This module stands up the real
+//! ingredients — a [`Ledger`] with stake bonding and trust history, a
+//! [`SamplingGate`] seeded from a validator commitment, and the CPU
+//! projection of the TOPLOC pipeline
+//! ([`validate_submission_cpu`][validation::validate_submission_cpu],
+//! whose stage-2 reward re-verification is the economically relevant
+//! catch) — and drives honest and cheating workers through a multi-step
+//! run. No model artifacts, no engine: it runs in CI as a binding gate
+//! (`cargo run --release --bin cheat_ev_bench`).
+//!
+//! The economic argument it certifies, per cheat submission worth `R`
+//! reward units caught with probability at least the floor rate `p`:
+//!
+//! ```text
+//! EV(cheat) = (1 - p) * R  -  p * stake   < 0
+//!        iff  stake > R * (1 - p) / p
+//! ```
+//!
+//! [`min_negative_ev_stake`] sizes the bond above that bound with a
+//! safety margin, so a worker's best strategy at *any* trust level is
+//! honesty. The harness checks the realized run agrees: every node that
+//! ever submitted a cheat ends the run slashed with its stake forfeited,
+//! no honest node is slashed, and at rate 1.0 the gated pipeline's
+//! verdict stream is byte-identical to the ungated baseline.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::validation::{
+    self, GateOutcome, SamplerConfig, SamplingGate, SigOracle, TrustOracle, ValidatorCommitment,
+    Verdict,
+};
+use crate::data::tokenizer::{encode, BOS, EOS};
+use crate::protocol::{min_negative_ev_stake, Identity, Ledger, Tx};
+use crate::rl::reward::RewardConfig;
+use crate::rl::rollout_file::{Submission, WireRollout};
+use crate::rl::Rollout;
+use crate::tasks::dataset::{node_sample_seed, Dataset, DatasetConfig, EnvMix};
+use crate::toploc::{Commitment, Validator, ValidatorConfig};
+use crate::verifier::Registry;
+
+/// Worker behavior in the adversarial run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Honest,
+    /// Cheats from its very first submission. New nodes carry zero trust,
+    /// so the gate fully verifies them — this one is caught immediately.
+    Eager,
+    /// Builds genuine trust first, then claims full reward on fabricated
+    /// answers the moment its verification probability dips below 1.
+    Sleeper,
+    /// Like [`Strategy::Sleeper`], but enters the run with a long
+    /// pre-recorded clean history, so its verification probability sits at
+    /// the configured floor from step 0 — the worst case the stake sizing
+    /// has to cover.
+    DeepSleeper,
+}
+
+/// Knobs for one adversarial run. The defaults mirror the swarm's
+/// (`sampling-rate`, `trust-promotion-streak`, `trust-stake-margin`).
+#[derive(Clone, Debug)]
+pub struct CheatEvConfig {
+    pub seed: u64,
+    /// Floor verification rate handed to the gate *and* to the stake
+    /// sizing (the bond must cover the lowest rate the gate can reach).
+    pub sampling_rate: f64,
+    pub promotion_streak: u64,
+    pub stake_margin: f64,
+    /// Policy steps to simulate; each live node uploads once per step.
+    pub steps: u64,
+    pub prompts_per_sub: usize,
+    pub group_size: usize,
+    /// Worker roster. Order fixes node addresses, so runs with the same
+    /// seed and roster are replayable end to end.
+    pub roster: Vec<Strategy>,
+}
+
+impl Default for CheatEvConfig {
+    fn default() -> CheatEvConfig {
+        CheatEvConfig {
+            seed: 0xC4EA7,
+            sampling_rate: 0.1,
+            promotion_streak: 4,
+            stake_margin: 2.0,
+            // Enough cheat opportunities that a floor-rate cheater's
+            // survival odds are negligible: a deep sleeper skates past a
+            // full check with probability (1 - 0.1)^120 ~ 3e-6 per run,
+            // and the run is deterministic per seed anyway.
+            steps: 120,
+            prompts_per_sub: 2,
+            group_size: 2,
+            roster: vec![
+                Strategy::Honest,
+                Strategy::Honest,
+                Strategy::Eager,
+                Strategy::Sleeper,
+                Strategy::DeepSleeper,
+            ],
+        }
+    }
+}
+
+/// Where one worker ended the run.
+#[derive(Clone, Debug)]
+pub struct NodeOutcome {
+    pub address: u64,
+    pub strategy: Strategy,
+    pub slashed: bool,
+    /// Submissions uploaded with fabricated rewards.
+    pub cheats_submitted: u64,
+    /// Cheat submissions the gate admitted unverified (spot-check misses).
+    pub cheats_admitted: u64,
+    /// Reward units (one per rollout) banked from admitted cheats.
+    pub cheat_gain: u64,
+    /// Stake bonded at registration.
+    pub stake: u64,
+    /// Stake forfeited to slashes.
+    pub forfeited: u64,
+}
+
+impl NodeOutcome {
+    pub fn is_cheater(&self) -> bool {
+        self.strategy != Strategy::Honest
+    }
+
+    /// Realized cheat profit in reward units: what the node banked from
+    /// admitted cheats minus the stake it lost. Negative means cheating
+    /// did not pay *in this run* (the analytic gate covers expectation).
+    pub fn realized_profit(&self) -> i64 {
+        self.cheat_gain as i64 - self.forfeited as i64
+    }
+}
+
+/// Everything the CI gate and the bench JSON need from one run.
+#[derive(Clone, Debug)]
+pub struct CheatEvReport {
+    pub sampling_rate: f64,
+    /// Reward units per submission (`prompts_per_sub * group_size`).
+    pub per_sub_reward: u64,
+    /// Stake each worker bonded ([`min_negative_ev_stake`] at the floor).
+    pub stake: u64,
+    pub nodes: Vec<NodeOutcome>,
+    pub uploads: u64,
+    pub sampled_full: u64,
+    pub skipped: u64,
+    pub escalated: u64,
+    /// Verdict fingerprints from the gated run, in upload order (gate
+    /// early-rejects and full-pipeline verdicts; skips produce none).
+    pub gated_fingerprints: Vec<(&'static str, Option<u64>, String)>,
+    /// Fingerprints from replaying the *identical* upload stream through
+    /// the ungated CPU pipeline — the pre-sampling baseline. At rate 1.0
+    /// the two streams must be byte-identical.
+    pub baseline_fingerprints: Vec<(&'static str, Option<u64>, String)>,
+}
+
+impl CheatEvReport {
+    pub fn honest_slashed(&self) -> u64 {
+        self.nodes.iter().filter(|n| !n.is_cheater() && n.slashed).count() as u64
+    }
+
+    /// Cheaters that submitted at least one cheat and were never slashed
+    /// — must be zero for the run to certify the configuration.
+    pub fn cheaters_escaped(&self) -> u64 {
+        self.nodes.iter().filter(|n| n.cheats_submitted > 0 && !n.slashed).count() as u64
+    }
+
+    /// Analytic per-cheat expected value at the floor rate, in reward
+    /// units: `(1 - p) * R - p * stake`. The CI gate requires this to be
+    /// negative — by [`min_negative_ev_stake`]'s construction it is, at
+    /// any configured rate, and this method recomputes it from the run's
+    /// *actual* stake so a sizing regression cannot hide.
+    pub fn analytic_cheat_ev(&self) -> f64 {
+        let p = self.sampling_rate.clamp(1e-6, 1.0);
+        (1.0 - p) * self.per_sub_reward as f64 - p * self.stake as f64
+    }
+
+    /// Worst realized cheat profit across the roster (units; negative
+    /// when every cheater lost more stake than it banked).
+    pub fn worst_realized_profit(&self) -> i64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_cheater())
+            .map(NodeOutcome::realized_profit)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Build one wire-honest submission for `(node, step)`: tasks drawn from
+/// the §2.3.3 seed formula, group ids from the deterministic base, the
+/// reference answer as the completion. When `cheat` is set the completion
+/// is fabricated but the claimed rewards stay at 1.0 — exactly the lie
+/// stage 2's reward re-verification catches.
+fn build_submission(
+    dataset: &Dataset,
+    cfg: &CheatEvConfig,
+    node: u64,
+    step: u64,
+    cheat: bool,
+) -> Submission {
+    let seed = node_sample_seed(node, step, 0);
+    let base = crate::rl::group_id_base(node, step, 0);
+    let ids = dataset.sample_for(seed, cfg.prompts_per_sub);
+    let mut rollouts = Vec::new();
+    for (pi, id) in ids.iter().enumerate() {
+        let task = dataset.get(*id).expect("sampled id in dataset");
+        for _ in 0..cfg.group_size {
+            let mut tokens = vec![BOS];
+            tokens.extend(encode(&task.prompt));
+            let plen = tokens.len();
+            if cheat {
+                // A completion the verifier scores 0 — claimed as 1.0.
+                tokens.extend(encode("wrong"));
+            } else {
+                tokens.extend(encode(task.answer()));
+            }
+            tokens.push(EOS);
+            let n = tokens.len() - plen;
+            rollouts.push(WireRollout {
+                rollout: Rollout {
+                    task_id: *id,
+                    group_id: base + pi as u64,
+                    policy_step: step,
+                    tokens,
+                    prompt_len: plen,
+                    target_len: None,
+                    task_reward: 1.0,
+                    length_penalty: 0.0,
+                    reward: 1.0,
+                    advantage: 0.0,
+                    sampled_probs: vec![0.5; n],
+                    node_address: node,
+                },
+                commitment: Commitment::default().encode(),
+                finish_eos: true,
+                eos_prob: 0.9,
+            });
+        }
+    }
+    Submission { node_address: node, step, submission_idx: 0, rollouts }
+}
+
+struct NodeState {
+    identity: Identity,
+    strategy: Strategy,
+    cheats_submitted: u64,
+    cheats_admitted: u64,
+    cheat_gain: u64,
+}
+
+/// Run the adversarial economy described by `cfg` and report what every
+/// strategy earned and lost.
+pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
+    let dataset = Dataset::generate(
+        &Registry::standard(),
+        &DatasetConfig { seed: cfg.seed, mix: EnvMix::of(&[("math", 40)]), ..Default::default() },
+    )?;
+    let validator =
+        Validator::new(ValidatorConfig { expected_group: cfg.group_size, ..Default::default() });
+    let reward_cfg = RewardConfig::default();
+    let (max_new, max_seq) = (128usize, 512usize);
+
+    // --- ledger: pool, identities, stake bonds ---
+    let ledger = Ledger::new();
+    let owner = Identity::from_seed(cfg.seed ^ 0xB055);
+    ledger.register_key(&owner);
+    ledger.submit(
+        Tx::CreatePool { domain: "cheat-ev".into(), pool_id: 1, owner: owner.address },
+        &owner,
+    )?;
+    let per_sub_reward = (cfg.prompts_per_sub * cfg.group_size) as u64;
+    let stake = min_negative_ev_stake(per_sub_reward, cfg.sampling_rate, cfg.stake_margin);
+    let mut nodes: Vec<NodeState> = Vec::new();
+    for (i, &strategy) in cfg.roster.iter().enumerate() {
+        let identity = Identity::from_seed(cfg.seed ^ (0x1D00 + i as u64));
+        ledger.register_key(&identity);
+        ledger.submit(Tx::Register { pool_id: 1, node: identity.address }, &identity)?;
+        ledger.submit(
+            Tx::Stake { pool_id: 1, node: identity.address, units: stake },
+            &identity,
+        )?;
+        if strategy == Strategy::DeepSleeper {
+            // A long clean record from "before" the run: decays the
+            // verification probability to the configured floor.
+            for _ in 0..cfg.promotion_streak * 64 {
+                ledger.record_verification(1, identity.address, true);
+            }
+        }
+        nodes.push(NodeState {
+            identity,
+            strategy,
+            cheats_submitted: 0,
+            cheats_admitted: 0,
+            cheat_gain: 0,
+        });
+    }
+
+    // --- gate + signing oracle, wired exactly like the swarm's ---
+    let trust_ledger = ledger.clone();
+    let trust: Arc<TrustOracle> = Arc::new(move |node| trust_ledger.trust(1, node));
+    let gate = SamplingGate::new(
+        ValidatorCommitment::new(cfg.seed ^ 0x5A3D),
+        SamplerConfig { sampling_rate: cfg.sampling_rate, promotion_streak: cfg.promotion_streak },
+        trust,
+    );
+    let sig_ledger = ledger.clone();
+    let signing: Arc<SigOracle> = Arc::new(move |addr, msg: &[u8], sig: &[u8; 32]| {
+        sig_ledger.check_address_sig(addr, msg, sig)
+    });
+
+    // --- the run: every live node uploads once per step ---
+    let mut uploads = 0u64;
+    let mut recorded: Vec<(u64, Vec<u8>)> = Vec::new();
+    let mut gated_fingerprints = Vec::new();
+    for step in 0..cfg.steps {
+        for node in &mut nodes {
+            let addr = node.identity.address;
+            if ledger.is_slashed(1, addr) {
+                continue;
+            }
+            let t = ledger.trust(1, addr);
+            let p = t.verify_probability(cfg.sampling_rate, cfg.promotion_streak);
+            let cheat = match node.strategy {
+                Strategy::Honest => false,
+                Strategy::Eager => true,
+                // Sleepers only cheat once full verification has relaxed.
+                Strategy::Sleeper | Strategy::DeepSleeper => p < 1.0,
+            };
+            let sub = build_submission(&dataset, cfg, addr, step, cheat);
+            let bytes = sub.encode_signed(&node.identity);
+            recorded.push((step, bytes.clone()));
+            uploads += 1;
+            if cheat {
+                node.cheats_submitted += 1;
+            }
+            match gate.gate(Some(&signing), &validator, bytes) {
+                GateOutcome::Full(b) => {
+                    let v = validation::validate_submission_cpu(
+                        &validator, Some(&signing), &b, &dataset, &reward_cfg, step, max_new,
+                        max_seq,
+                    );
+                    match &v {
+                        Verdict::Accept(s) => {
+                            ledger.record_verification(1, s.node_address, true);
+                        }
+                        Verdict::Reject { node: Some(n), why } => {
+                            ledger.record_verification(1, *n, false);
+                            ledger.submit(
+                                Tx::Slash { pool_id: 1, node: *n, reason: why.clone() },
+                                &owner,
+                            )?;
+                        }
+                        _ => {}
+                    }
+                    gated_fingerprints.push(v.fingerprint());
+                }
+                GateOutcome::Skip(s) => {
+                    // Admitted on stake + trust: claimed rewards are
+                    // banked unverified. For a cheater this is the payoff
+                    // the stake sizing must dominate.
+                    if cheat {
+                        node.cheats_admitted += 1;
+                        node.cheat_gain += s.rollouts.len() as u64;
+                    }
+                }
+                GateOutcome::Done(v) => gated_fingerprints.push(v.fingerprint()),
+            }
+        }
+    }
+
+    // --- baseline: the identical upload stream, ungated ---
+    let baseline_fingerprints = recorded
+        .iter()
+        .map(|(step, bytes)| {
+            validation::validate_submission_cpu(
+                &validator, Some(&signing), bytes, &dataset, &reward_cfg, *step, max_new, max_seq,
+            )
+            .fingerprint()
+        })
+        .collect();
+
+    let outcomes = nodes
+        .iter()
+        .map(|n| NodeOutcome {
+            address: n.identity.address,
+            strategy: n.strategy,
+            slashed: ledger.is_slashed(1, n.identity.address),
+            cheats_submitted: n.cheats_submitted,
+            cheats_admitted: n.cheats_admitted,
+            cheat_gain: n.cheat_gain,
+            stake,
+            forfeited: ledger.forfeited(1, n.identity.address),
+        })
+        .collect();
+    Ok(CheatEvReport {
+        sampling_rate: cfg.sampling_rate,
+        per_sub_reward,
+        stake,
+        nodes: outcomes,
+        uploads,
+        sampled_full: gate.sampled_full.get(),
+        skipped: gate.skipped.get(),
+        escalated: gate.escalated.get(),
+        gated_fingerprints,
+        baseline_fingerprints,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_rate_matches_ungated_baseline_and_catches_eager_cheat() {
+        let cfg = CheatEvConfig { sampling_rate: 1.0, steps: 12, ..Default::default() };
+        let r = run_cheat_ev(&cfg).unwrap();
+        // Rate 1.0 disables skipping entirely...
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.sampled_full, r.uploads);
+        // ...and the gated verdict stream is byte-identical to running the
+        // same uploads through the ungated pipeline.
+        assert_eq!(r.gated_fingerprints, r.baseline_fingerprints);
+        // The eager cheater is caught on its first upload; sleepers never
+        // see a relaxed verification probability, so they never defect.
+        let eager = r.nodes.iter().find(|n| n.strategy == Strategy::Eager).unwrap();
+        assert!(eager.slashed && eager.cheat_gain == 0 && eager.forfeited == r.stake);
+        for n in r.nodes.iter().filter(|n| n.strategy != Strategy::Eager) {
+            assert!(!n.slashed, "{:?} slashed at rate 1.0", n.strategy);
+            assert_eq!(n.cheats_submitted, 0);
+        }
+        assert!(r.analytic_cheat_ev() < 0.0);
+    }
+
+    #[test]
+    fn sampled_rate_still_makes_every_cheater_lose() {
+        let r = run_cheat_ev(&CheatEvConfig::default()).unwrap();
+        assert_eq!(r.sampling_rate, 0.1);
+        // Sampling actually skipped work (honest proven nodes exist), and
+        // every upload was either fully verified or spot-check exempted
+        // (nothing in this harness fails stage 0).
+        assert!(r.skipped > 0, "no submission was ever spot-check exempted");
+        assert_eq!(r.sampled_full + r.skipped, r.uploads);
+        // Every strategy that defected ended slashed; honest nodes never.
+        assert_eq!(r.honest_slashed(), 0);
+        assert_eq!(r.cheaters_escaped(), 0);
+        let deep = r.nodes.iter().find(|n| n.strategy == Strategy::DeepSleeper).unwrap();
+        assert!(deep.cheats_submitted > 0, "deep sleeper never defected");
+        assert!(deep.slashed && deep.forfeited == r.stake);
+        // The stake sizing makes the *expected* cheat value negative at
+        // the floor rate even though individual skips were admitted.
+        assert!(r.analytic_cheat_ev() < 0.0, "EV {} not negative", r.analytic_cheat_ev());
+    }
+}

@@ -15,11 +15,15 @@
 //! - every step's task quota completes (orphaned tasks are requeued by the
 //!   health sweep, not lost);
 //! - no honest node ends up slashed on the ledger (churn is not cheating);
-//! - goodput under churn stays within a constant factor of fault-free.
+//! - goodput under churn stays within a constant factor of fault-free;
+//! - every commitment-selected fetch passes a byte-for-byte payload audit
+//!   ([`ChurnConfig::sampling_rate`]; selection mirrors the validation
+//!   pipeline's trust-weighted sampling gate).
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::validation::ValidatorCommitment;
 use crate::http::{FaultInjector, FaultPlan, FaultSpec, ServerConfig};
 use crate::protocol::{
     DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker,
@@ -51,6 +55,12 @@ pub struct ChurnConfig {
     pub churn: bool,
     /// Request-level faults injected into every relay server.
     pub server_faults: Option<FaultSpec>,
+    /// Fraction of completed fetches whose payload is fully audited
+    /// (re-derived from the publisher's seed and compared byte for byte).
+    /// Selection comes from a validator commitment over `(step, node)`,
+    /// so workers cannot predict which downloads get checked; `1.0`
+    /// audits every fetch.
+    pub sampling_rate: f64,
     /// Per-step liveness deadline; a step that cannot finish its quota in
     /// this window ends the run early (reported, not hung).
     pub step_timeout: Duration,
@@ -68,6 +78,7 @@ impl Default for ChurnConfig {
             tasks_per_step: 12,
             churn: false,
             server_faults: None,
+            sampling_rate: 1.0,
             step_timeout: Duration::from_secs(30),
         }
     }
@@ -95,8 +106,23 @@ pub struct ChurnReport {
     pub tasks_requeued: u64,
     /// Workers slashed on the ledger — must stay 0: churn is not cheating.
     pub honest_slashed: u64,
+    /// Completed fetches whose payload was fully audited (commitment-
+    /// selected at [`ChurnConfig::sampling_rate`]) — every one matched.
+    pub audits_full: u64,
+    /// Completed fetches admitted without a payload audit.
+    pub audits_skipped: u64,
     pub elapsed_secs: f64,
     pub step_secs: Vec<f64>,
+}
+
+/// Shared spot-check spec for every worker's fetch handler.
+struct AuditSpec {
+    commitment: ValidatorCommitment,
+    rate: f64,
+    payload_bytes: usize,
+    seed: u64,
+    full: Counter,
+    skipped: Counter,
 }
 
 struct WorkerSlot {
@@ -117,6 +143,7 @@ fn join_worker(
     relay_dir: &Arc<Mutex<Vec<String>>>,
     tasks_ok: &Arc<Counter>,
     retries: &Arc<Counter>,
+    audit: &Arc<AuditSpec>,
     seed: u64,
 ) -> anyhow::Result<WorkerSlot> {
     let mut worker = Worker::boot(identity, ledger, 1, discovery_url, 8)?;
@@ -126,6 +153,7 @@ fn join_worker(
     let dir = Arc::clone(relay_dir);
     let tasks_ok = Arc::clone(tasks_ok);
     let retries = Arc::clone(retries);
+    let audit = Arc::clone(audit);
     worker.start_heartbeat(
         orch_url.to_string(),
         Duration::from_millis(25),
@@ -151,6 +179,25 @@ fn join_worker(
                 match sc.fetch_checkpoint(step) {
                     Ok((bytes, report)) => {
                         retries.add(report.retries as u64);
+                        // Trust-weighted spot-check: commitment-selected
+                        // fetches re-derive the publisher's deterministic
+                        // payload and compare byte for byte; the rest are
+                        // admitted unaudited (shardcast's own digests
+                        // still ran) and counted as such.
+                        if audit.commitment.selects(step, address, 0, audit.rate) {
+                            let mut prng = Rng::new(audit.seed).fold(step);
+                            let expect: Vec<u8> = (0..audit.payload_bytes)
+                                .map(|_| prng.range(0, 256) as u8)
+                                .collect();
+                            anyhow::ensure!(
+                                bytes == expect,
+                                "step {step}: fetched checkpoint fails audit ({} bytes)",
+                                bytes.len()
+                            );
+                            audit.full.inc();
+                        } else {
+                            audit.skipped.inc();
+                        }
                         tasks_ok.inc();
                         return Ok(format!("step {step}: {} bytes", bytes.len()));
                     }
@@ -228,6 +275,14 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
     // --- workers ---
     let tasks_ok = Arc::new(Counter::default());
     let retries = Arc::new(Counter::default());
+    let audit = Arc::new(AuditSpec {
+        commitment: ValidatorCommitment::new(cfg.seed ^ 0xA0D1),
+        rate: cfg.sampling_rate,
+        payload_bytes: cfg.payload_bytes,
+        seed: cfg.seed,
+        full: Counter::default(),
+        skipped: Counter::default(),
+    });
     let mut workers: Vec<Option<WorkerSlot>> = Vec::new();
     let mut all_addresses: Vec<u64> = Vec::new();
     for wi in 0..cfg.n_workers {
@@ -240,6 +295,7 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
             &relay_dir,
             &tasks_ok,
             &retries,
+            &audit,
             cfg.seed,
         )?;
         all_addresses.push(slot.address);
@@ -258,6 +314,8 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
         workers_evicted: 0,
         tasks_requeued: 0,
         honest_slashed: 0,
+        audits_full: 0,
+        audits_skipped: 0,
         elapsed_secs: 0.0,
         step_secs: Vec::new(),
     };
@@ -343,6 +401,7 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
                 &relay_dir,
                 &tasks_ok,
                 &retries,
+                &audit,
                 cfg.seed,
             )?;
             all_addresses.push(slot.address);
@@ -379,6 +438,8 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
     report.tasks_requeued = orch.tasks_requeued.get();
     report.honest_slashed =
         all_addresses.iter().filter(|&&a| ledger.is_slashed(1, a)).count() as u64;
+    report.audits_full = audit.full.get();
+    report.audits_skipped = audit.skipped.get();
     report.elapsed_secs = t0.elapsed().as_secs_f64();
     Ok(report)
 }

@@ -3,6 +3,7 @@
 //! pipeline driver, and the full free-running decentralized swarm.
 
 pub mod batcher;
+pub mod cheatev;
 pub mod churn;
 pub mod gen;
 pub mod pretrain;
@@ -12,9 +13,13 @@ pub mod sync_driver;
 pub mod validation;
 
 pub use batcher::{train_on_rollouts, StepReport};
+pub use cheatev::{run_cheat_ev, CheatEvConfig, CheatEvReport, NodeOutcome, Strategy};
 pub use churn::{run_churn, ChurnConfig, ChurnReport};
 pub use gen::{group_id_base, RolloutGenerator};
 pub use step::{filter_groups, record_step, FilterOutcome};
 pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};
 pub use sync_driver::SyncPipeline;
-pub use validation::{ReplayGuard, SigOracle, SubmissionQueue, ValidationPipeline, Verdict};
+pub use validation::{
+    GateOutcome, ReplayGuard, SamplerConfig, SamplingGate, SigOracle, SubmissionQueue,
+    TrustOracle, ValidationPipeline, ValidatorCommitment, Verdict,
+};

@@ -33,6 +33,17 @@
 //! binds the policy step, and an in-window re-post is deduplicated by a
 //! first-seen `ReplayGuard` on `(node, step, submission_idx)`
 //! (`require-signed-submissions` knob, on by default).
+//!
+//! With `sampling-rate < 1.0`, a trust-weighted [`SamplingGate`] runs
+//! before the pipeline: new/flagged nodes are always fully verified,
+//! proven nodes decay to spot-checks selected by the validator's
+//! commit-reveal secret (unpredictable to workers, replayable by
+//! auditors), and skipped uploads are admitted on stage 0 + schema alone
+//! with their claimed rewards flagged unverified in `env_pass`. Workers
+//! bond a stake (`Tx::Stake`) sized by `min_negative_ev_stake` so a
+//! cheat caught at the sampling floor costs more than every skipped
+//! cheat earned — the cheat-EV CI gate (`coordinator::cheatev`) proves
+//! this end to end at rates {1.0, 0.25, 0.1}.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -44,7 +55,8 @@ use crate::coordinator::gen::{group_id_base, RolloutGenerator};
 use crate::coordinator::pretrain;
 use crate::coordinator::step::record_step;
 use crate::coordinator::validation::{
-    SubmissionQueue, ValidationPipeline, Verdict, SUBMISSION_QUEUE_CAP, VALIDATION_WAVE,
+    GateOutcome, SamplerConfig, SamplingGate, SubmissionQueue, TrustOracle, ValidationPipeline,
+    ValidatorCommitment, Verdict, SUBMISSION_QUEUE_CAP, VALIDATION_WAVE,
 };
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
 use crate::protocol::{DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker};
@@ -140,6 +152,19 @@ pub struct SwarmStats {
     /// all workers (non-zero under relay churn; the checkpoints still
     /// arrived).
     pub churn_fetch_retries: Counter,
+    /// Sampled validation (`sampling-rate < 1.0`): uploads the gate routed
+    /// into the full six-stage pipeline...
+    pub submissions_sampled_full: Counter,
+    /// ...uploads admitted on stage 0 + schema alone (spot-check exempt;
+    /// their rewards are *claimed*, tracked under "(unverified)" env_pass
+    /// keys)...
+    pub submissions_skipped_unverified: Counter,
+    /// ...and full verifications forced by a reject on record
+    /// (re-escalation: the node's streak has not re-earned promotion).
+    pub submissions_escalated: Counter,
+    /// Rollouts buffered from skipped submissions — trained on under
+    /// claimed rewards, backed by the sender's slashable stake.
+    pub rollouts_admitted_unverified: Counter,
     /// Per-environment task pass rates over *verified* rollouts (the
     /// validator re-checked these rewards), keyed by env registry name —
     /// mixed-env runs are unobservable from one aggregate reward number.
@@ -421,7 +446,7 @@ impl Swarm {
             // fingerprint mismatch aborts the run here, loudly, instead
             // of killing a background thread.
             let mut pipeline = ValidationPipeline::new(
-                Validator::with_registry(vcfg, Arc::clone(&self.registry)),
+                Validator::with_registry(vcfg.clone(), Arc::clone(&self.registry)),
                 Arc::clone(&dataset),
                 reward_cfg,
                 host,
@@ -439,6 +464,37 @@ impl Swarm {
                     },
                 ));
             }
+            // Trust-weighted sampling pre-stage, only when sampling is on
+            // AND identities are provable — without signatures there is no
+            // identity to hang trust on, so everything stays fully
+            // verified. At rate 1.0 no gate exists and the wave reaches
+            // the pipeline byte-identically to the pre-sampling swarm.
+            let gate = (require_signed && cfg.sampling_rate < 1.0).then(|| {
+                let trust_ledger = ledger.clone();
+                let trust: Arc<TrustOracle> = Arc::new(move |node| trust_ledger.trust(1, node));
+                SamplingGate::new(
+                    // Commit-reveal secret: derived from the run seed here
+                    // (a production validator would draw it privately and
+                    // publish only the hash). Workers never see it.
+                    ValidatorCommitment::new(cfg.seed ^ 0x5E1EC7),
+                    SamplerConfig {
+                        sampling_rate: cfg.sampling_rate,
+                        promotion_streak: cfg.trust_promotion_streak,
+                    },
+                    trust,
+                )
+            });
+            let gate_validator = Validator::with_registry(vcfg, Arc::clone(&self.registry));
+            // The gate re-runs stage 0 itself (selection is keyed on the
+            // *proven* identity), so it gets its own oracle handle.
+            let gate_signing: Option<Arc<crate::coordinator::validation::SigOracle>> =
+                require_signed.then(|| {
+                    let l = ledger.clone();
+                    Arc::new(move |addr: u64, msg: &[u8], sig: &[u8; 32]| {
+                        l.check_address_sig(addr, msg, sig)
+                    }) as Arc<crate::coordinator::validation::SigOracle>
+                });
+            let trust_ledger = ledger.clone();
             std::thread::Builder::new().name("i2-validator".into()).spawn(move || {
                 // In-window replay dedup: a captured valid envelope can be
                 // re-posted before its step ages out; each (node, step,
@@ -457,7 +513,81 @@ impl Swarm {
                     let versions =
                         |v: u64| shared.versions.lock().unwrap().get(&v).cloned();
                     replay_guard.advance(current().saturating_sub(async_level));
-                    for verdict in pipeline.validate_batch(wave, &current, &versions) {
+                    // Sampling pre-stage: route each raw upload. No gate
+                    // (rate 1.0 / unsigned mode) means the whole wave goes
+                    // to the pipeline — byte-identical to pre-sampling.
+                    let mut fulls: Vec<Vec<u8>> = Vec::new();
+                    let mut skips = Vec::new();
+                    let mut early: Vec<Verdict> = Vec::new();
+                    match &gate {
+                        None => fulls = wave,
+                        Some(g) => {
+                            for bytes in wave {
+                                match g.gate(gate_signing.as_ref(), &gate_validator, bytes) {
+                                    GateOutcome::Full(b) => fulls.push(b),
+                                    GateOutcome::Done(v) => early.push(v),
+                                    GateOutcome::Skip(sub) => skips.push(sub),
+                                }
+                            }
+                        }
+                    }
+                    // Skipped-but-admitted path: stage 0 proved the sender
+                    // and the payload decoded; replay + staleness checks
+                    // still apply before the claimed rewards are buffered.
+                    for sub in skips {
+                        if !replay_guard.first_sighting(
+                            sub.node_address,
+                            sub.step,
+                            sub.submission_idx,
+                        ) {
+                            shared.stats.submissions_replayed.inc();
+                            continue;
+                        }
+                        let now = current();
+                        if sub.step > now + 1 {
+                            // No published checkpoint could have produced
+                            // this: a proven fabrication — trust cannot buy
+                            // a pass on arithmetic.
+                            shared.stats.submissions_rejected.inc();
+                            shared.stats.nodes_slashed.inc();
+                            let why =
+                                format!("unpublished policy version {} (current {now})", sub.step);
+                            crate::warn!("validator", "rejecting node {}: {why}", sub.node_address);
+                            trust_ledger.record_verification(1, sub.node_address, false);
+                            orch.slash(sub.node_address, &why);
+                            continue;
+                        }
+                        if sub.step + async_level < now {
+                            shared.stats.submissions_stale.inc();
+                            shared
+                                .stats
+                                .rollouts_dropped_stale
+                                .add(sub.rollouts.len() as u64);
+                            continue;
+                        }
+                        let n = sub.rollouts.len();
+                        shared.stats.rollouts_admitted_unverified.add(n as u64);
+                        // Observability must not shrink to the sampled
+                        // subset: claimed rewards are tracked per-env,
+                        // explicitly flagged as unverified.
+                        for w in &sub.rollouts {
+                            if let Some(task) = dataset.get(w.rollout.task_id) {
+                                shared.stats.env_pass.record(
+                                    &format!("{} (unverified)", task.env),
+                                    w.rollout.task_reward > 0.5,
+                                );
+                            }
+                        }
+                        let version = sub.step;
+                        let rollouts = sub.rollouts.into_iter().map(|w| w.rollout).collect();
+                        if let Admission::TooStale { .. } =
+                            shared.buffer.push(version, rollouts)
+                        {
+                            shared.stats.rollouts_dropped_stale.add(n as u64);
+                        }
+                    }
+                    let judged = pipeline.validate_batch(fulls, &current, &versions);
+                    for verdict in early.into_iter().chain(judged) {
                         match verdict {
                             Verdict::Accept(sub) => {
                                 if !replay_guard.first_sighting(
@@ -481,6 +611,16 @@ impl Swarm {
                                 let n = sub.rollouts.len();
                                 shared.stats.submissions_accepted.inc();
                                 shared.stats.rollouts_verified.add(n as u64);
+                                if require_signed {
+                                    // Clean full verification extends the
+                                    // node's trust streak (decays its
+                                    // future verify probability).
+                                    trust_ledger.record_verification(
+                                        1,
+                                        sub.node_address,
+                                        true,
+                                    );
+                                }
                                 // Per-env pass rates over verified rollouts
                                 // (rewards were re-checked in stage 2).
                                 for w in &sub.rollouts {
@@ -536,6 +676,11 @@ impl Swarm {
                                 shared.stats.submissions_rejected.inc();
                                 shared.stats.nodes_slashed.inc();
                                 crate::warn!("validator", "rejecting node {node}: {why}");
+                                if require_signed {
+                                    // Reject: streak zeroed, node back on
+                                    // full verification (re-escalation).
+                                    trust_ledger.record_verification(1, node, false);
+                                }
                                 orch.slash(node, &why);
                             }
                             Verdict::Reject { node: None, why } => {
@@ -572,6 +717,13 @@ impl Swarm {
                         }
                     }
                 }
+                // Gate counters surface once, at shutdown (stats_arc runs
+                // after this thread joins).
+                if let Some(g) = &gate {
+                    shared.stats.submissions_sampled_full.add(g.sampled_full.get());
+                    shared.stats.submissions_skipped_unverified.add(g.skipped.get());
+                    shared.stats.submissions_escalated.add(g.escalated.get());
+                }
             })?
         };
 
@@ -584,6 +736,25 @@ impl Swarm {
             let mut worker = Worker::boot(identity, &ledger, 1, &discovery.url(), 8)?;
             orch.sweep_discovery(&discovery.url(), "pool-token");
             anyhow::ensure!(worker.is_invited(), "worker {wi} not invited");
+            if cfg.require_signed_submissions {
+                // Bond the stake that keeps cheating negative-EV at the
+                // configured sampling floor: one submission can claim at
+                // most rollouts-per-submission reward units, and a cheat
+                // is caught with probability >= sampling_rate (new and
+                // flagged nodes sit at 1.0), so forfeiting this stake
+                // costs more than every skipped cheat could earn.
+                let per_sub = (cfg.prompts_per_step.div_ceil(cfg.n_workers)
+                    * cfg.group_size) as u64;
+                let stake = crate::protocol::min_negative_ev_stake(
+                    per_sub,
+                    cfg.sampling_rate,
+                    cfg.trust_stake_margin,
+                );
+                ledger.submit(
+                    Tx::Stake { pool_id: 1, node: worker.identity.address, units: stake },
+                    &worker.identity,
+                )?;
+            }
             // Heartbeat loop (health only; rollout work is the main loop).
             worker.start_heartbeat(
                 _orch_srv.url(),
@@ -855,6 +1026,10 @@ impl Shared {
         s.churn_workers_evicted.add(self.stats.churn_workers_evicted.get());
         s.churn_tasks_requeued.add(self.stats.churn_tasks_requeued.get());
         s.churn_fetch_retries.add(self.stats.churn_fetch_retries.get());
+        s.submissions_sampled_full.add(self.stats.submissions_sampled_full.get());
+        s.submissions_skipped_unverified.add(self.stats.submissions_skipped_unverified.get());
+        s.submissions_escalated.add(self.stats.submissions_escalated.get());
+        s.rollouts_admitted_unverified.add(self.stats.rollouts_admitted_unverified.get());
         for (env, attempts, passes) in self.stats.env_pass.snapshot() {
             s.env_pass.add(&env, attempts, passes);
         }

@@ -32,7 +32,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::protocol::SigCheck;
+use crate::protocol::{SigCheck, TrustState};
 use crate::rl::reward::RewardConfig;
 use crate::rl::rollout_file::{Envelope, Submission};
 use crate::runtime::{EngineHost, ModelSpec, ParamSet};
@@ -41,6 +41,7 @@ use crate::toploc::pipeline::{plan_prefills, LaneReq};
 use crate::toploc::{Rejection, Validator};
 use crate::util::metrics::Counter;
 use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
 
 /// Max submissions validated per pipeline wave: bounds verdict latency
 /// while leaving plenty of cross-submission material for lane packing.
@@ -225,6 +226,194 @@ impl ReplayGuard {
             }
         }
         out
+    }
+}
+
+/// The validator's commit-reveal secret for sample selection.
+///
+/// Selection must be *deterministic* (so a revealed secret lets anyone
+/// replay exactly which submissions were checked — the validator cannot
+/// bias the sample after seeing uploads) yet *unpredictable* (so a worker
+/// cannot enumerate its own rollouts and cheat only on the unchecked
+/// ones). Both follow from one secret: the validator publishes
+/// `commitment()` (a hash of the secret) before the step, selects with
+/// the secret, and reveals it after uploads close. The selection stream
+/// is pure [`Rng`] folds over `(secret, step, node, submission_idx)` —
+/// no wall-clock, no ambient entropy — so it survives `swarmlint` and
+/// replays byte-identically on any machine.
+pub struct ValidatorCommitment {
+    secret: u64,
+}
+
+impl ValidatorCommitment {
+    pub fn new(secret: u64) -> ValidatorCommitment {
+        ValidatorCommitment { secret }
+    }
+
+    /// The public commitment to publish before uploads: a hash of the
+    /// secret. Workers can verify a later reveal against this, but cannot
+    /// recover the selection stream from it.
+    pub fn commitment(&self) -> [u8; 32] {
+        use sha2::{Digest, Sha256};
+        Sha256::digest(self.secret.to_le_bytes()).into()
+    }
+
+    /// Reveal the secret (post-upload): auditors replay `selects` calls.
+    pub fn reveal(&self) -> u64 {
+        self.secret
+    }
+
+    /// The uniform draw in `[0, 1)` for one submission identity.
+    pub fn draw(&self, step: u64, node: u64, submission_idx: u64) -> f64 {
+        Rng::new(self.secret).fold(step).fold(node).fold(submission_idx).f64()
+    }
+
+    /// Whether `(step, node, submission_idx)` enters full verification at
+    /// probability `p`. `p >= 1` always selects (draws live in `[0, 1)`).
+    pub fn selects(&self, step: u64, node: u64, submission_idx: u64, p: f64) -> bool {
+        self.draw(step, node, submission_idx) < p
+    }
+}
+
+/// Knobs for the sampling pre-stage (config: `sampling-rate`,
+/// `trust-promotion-streak`).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    /// Floor fraction of a proven node's submissions that still get full
+    /// verification. `1.0` disables sampling (every upload is checked).
+    pub sampling_rate: f64,
+    /// Clean-streak length a node must hold before its verification
+    /// probability starts decaying (see [`TrustState::verify_probability`]).
+    pub promotion_streak: u64,
+}
+
+/// Trust lookup for the gate: node address → verification history (the
+/// swarm wires this to `Ledger::trust`). A boxed closure rather than the
+/// ledger itself so engine-free harnesses and tests can substitute
+/// synthetic histories.
+pub type TrustOracle = dyn Fn(u64) -> TrustState + Send + Sync;
+
+/// What the sampling pre-stage decided for one upload.
+pub enum GateOutcome {
+    /// Selected for the full six-stage pipeline (raw bytes pass through).
+    Full(Vec<u8>),
+    /// Spot-check exempt this time: stage 0 proved the sender and the
+    /// payload decoded cleanly, so the decoded submission may be admitted
+    /// to the `RolloutBuffer` with its *claimed* rewards (flagged
+    /// unverified in stats). The caller still owes it a replay check.
+    Skip(Submission),
+    /// Settled before selection: forged/unsigned envelopes, undecodable
+    /// payloads, or identity lies — cheap proof beats any sampling rate.
+    Done(Verdict),
+}
+
+/// The sampling pre-stage: decides, per upload, whether the six-stage
+/// pipeline runs or the submission is admitted on stake + trust.
+///
+/// Ordering matters for safety: stage 0 (envelope) runs *first*, so an
+/// upload nobody provably signed can never skip past verification, and
+/// trust is keyed by the proven — not claimed — sender. In legacy
+/// unsigned mode there is no identity to hang trust on, so everything is
+/// fully verified regardless of the configured rate.
+pub struct SamplingGate {
+    commitment: ValidatorCommitment,
+    cfg: SamplerConfig,
+    trust: Arc<TrustOracle>,
+    /// Uploads routed into the full pipeline.
+    pub sampled_full: Counter,
+    /// Uploads admitted without stages 1–5 (stage 0 + decode only).
+    pub skipped: Counter,
+    /// Full verifications forced by a reject on record (re-escalation):
+    /// the node's streak has not yet re-crossed the promotion threshold.
+    pub escalated: Counter,
+}
+
+impl SamplingGate {
+    pub fn new(
+        commitment: ValidatorCommitment,
+        cfg: SamplerConfig,
+        trust: Arc<TrustOracle>,
+    ) -> SamplingGate {
+        SamplingGate {
+            commitment,
+            cfg,
+            trust,
+            sampled_full: Counter::default(),
+            skipped: Counter::default(),
+            escalated: Counter::default(),
+        }
+    }
+
+    /// Gate one raw upload. `validator` is only used for payload decoding
+    /// on the skip path (stage 1's schema check still applies — a skipped
+    /// submission must at least be *well-formed* before its rewards are
+    /// trusted).
+    pub fn gate(
+        &self,
+        signing: Option<&Arc<SigOracle>>,
+        validator: &Validator,
+        bytes: Vec<u8>,
+    ) -> GateOutcome {
+        let env = match check_envelope(signing, &bytes) {
+            Stage0::Done(v) => return GateOutcome::Done(v),
+            Stage0::Payload { proven, .. } => match proven {
+                // No provable sender (legacy mode): trust has nothing to
+                // key on, so sampling never applies.
+                None => {
+                    self.sampled_full.inc();
+                    return GateOutcome::Full(bytes);
+                }
+                Some(env) => env,
+            },
+        };
+        let t = (self.trust)(env.node_address);
+        let p = t.verify_probability(self.cfg.sampling_rate, self.cfg.promotion_streak);
+        if p >= 1.0 {
+            if t.rejects > 0 {
+                self.escalated.inc();
+            }
+            self.sampled_full.inc();
+            return GateOutcome::Full(bytes);
+        }
+        if self.commitment.selects(env.step, env.node_address, env.submission_idx, p) {
+            self.sampled_full.inc();
+            return GateOutcome::Full(bytes);
+        }
+        // Skip path: the envelope is already proven (stage 0 ran above);
+        // the payload must still decode and agree with the identity the
+        // signature proves. Both failures are the signer's to answer for.
+        // swarmlint: allow(panic-path) — check_envelope proved an envelope
+        // is present, so re-parsing the same bytes cannot fail.
+        let (_, payload) = Envelope::parse(&bytes).expect("envelope re-parse");
+        let sub = match validator.check_file(payload) {
+            Ok(sub) => sub,
+            Err(e) => {
+                return GateOutcome::Done(Verdict::Reject {
+                    node: Some(env.node_address),
+                    why: format!("{e:?}"),
+                });
+            }
+        };
+        if sub.node_address != env.node_address
+            || sub.step != env.step
+            || sub.submission_idx != env.submission_idx
+        {
+            return GateOutcome::Done(Verdict::Reject {
+                node: Some(env.node_address),
+                why: format!(
+                    "payload claims node {}/step {}/idx {} but the envelope proves \
+                     node {}/step {}/idx {}",
+                    sub.node_address,
+                    sub.step,
+                    sub.submission_idx,
+                    env.node_address,
+                    env.step,
+                    env.submission_idx
+                ),
+            });
+        }
+        self.skipped.inc();
+        GateOutcome::Skip(sub)
     }
 }
 
@@ -822,6 +1011,34 @@ pub fn validate_submission_fullpad(
     Verdict::Accept(sub)
 }
 
+/// Stages 0–3 alone (envelope, schema, sanity, termination) — the CPU
+/// projection of the pipeline, for engine-free harnesses. Stage 2's
+/// reward re-verification is in here, and it is the economically relevant
+/// catch: a worker claiming reward for a wrong answer is caught by pure
+/// CPU replay of the task verifier, no prefill needed. The cheat-EV CI
+/// gate (`coordinator::cheatev`) drives this against the sampling gate
+/// and the ledger's stake accounting. `Accept` here means "passed every
+/// check that doesn't need the engine" — the full pipeline may still
+/// reject on stages 4–5.
+#[allow(clippy::too_many_arguments)]
+pub fn validate_submission_cpu(
+    validator: &Validator,
+    signing: Option<&Arc<SigOracle>>,
+    bytes: &[u8],
+    dataset: &Dataset,
+    reward_cfg: &RewardConfig,
+    current: u64,
+    max_new: usize,
+    max_seq: usize,
+) -> Verdict {
+    match cpu_stages_guarded(
+        validator, dataset, reward_cfg, signing, bytes, current, max_new, max_seq,
+    ) {
+        CpuOutcome::Done(v) => v,
+        CpuOutcome::Ready(sub) => Verdict::Accept(sub),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -913,6 +1130,197 @@ mod tests {
             }
             _ => panic!("post-signing tamper must be Forged"),
         }
+    }
+
+    fn tiny_submission(node: u64, step: u64, idx: u64) -> crate::rl::rollout_file::Submission {
+        use crate::rl::rollout_file::WireRollout;
+        use crate::rl::Rollout;
+        Submission {
+            node_address: node,
+            step,
+            submission_idx: idx,
+            rollouts: vec![WireRollout {
+                rollout: Rollout {
+                    task_id: 1,
+                    group_id: crate::rl::group_id_base(node, step, idx),
+                    policy_step: step,
+                    tokens: vec![1, 5, 2],
+                    prompt_len: 1,
+                    target_len: None,
+                    task_reward: 1.0,
+                    length_penalty: 0.0,
+                    reward: 1.0,
+                    advantage: 0.0,
+                    sampled_probs: vec![0.5, 0.5],
+                    node_address: node,
+                },
+                commitment: Vec::new(),
+                finish_eos: true,
+                eos_prob: 0.9,
+            }],
+        }
+    }
+
+    fn one_key_oracle(id: &Identity) -> Arc<SigOracle> {
+        let keys = std::collections::BTreeMap::from([(id.address, id.secret())]);
+        Arc::new(move |addr, msg: &[u8], sig: &[u8; 32]| match keys.get(&addr) {
+            None => SigCheck::NoKey,
+            Some(key) if crate::protocol::identity::hmac_verify(key, msg, sig) => SigCheck::Valid,
+            Some(_) => SigCheck::Mismatch,
+        })
+    }
+
+    #[test]
+    fn sampling_gate_routes_by_trust_and_selection() {
+        use crate::toploc::{Validator, ValidatorConfig};
+        let worker = Identity::from_seed(5);
+        let validator = Validator::new(ValidatorConfig::default());
+        let oracle = one_key_oracle(&worker);
+        let signing = Some(&oracle);
+        // Trust oracle: a long-proven clean history for everyone.
+        let proven: Arc<TrustOracle> = Arc::new(|_| TrustState {
+            clean_streak: 1000,
+            verified_clean: 1000,
+            rejects: 0,
+        });
+        let cfg = SamplerConfig { sampling_rate: 0.25, promotion_streak: 8 };
+        let gate =
+            SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, Arc::clone(&proven));
+
+        // A proven node's uploads split into Full / Skip exactly as the
+        // commitment dictates, and every Skip decodes to the submission.
+        let (mut fulls, mut skips) = (0u64, 0u64);
+        for idx in 0..200 {
+            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
+            match gate.gate(signing, &validator, bytes) {
+                GateOutcome::Full(_) => fulls += 1,
+                GateOutcome::Skip(sub) => {
+                    skips += 1;
+                    assert_eq!(sub.node_address, worker.address);
+                    assert_eq!(sub.submission_idx, idx);
+                }
+                GateOutcome::Done(_) => panic!("clean upload must not settle in the gate"),
+            }
+        }
+        assert_eq!(fulls, gate.sampled_full.get());
+        assert_eq!(skips, gate.skipped.get());
+        assert!(fulls > 20 && skips > 100, "rate 0.25 over 200: {fulls} full / {skips} skip");
+
+        // New node (default trust): always Full, never skipped.
+        let fresh: Arc<TrustOracle> = Arc::new(|_| TrustState::default());
+        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, fresh);
+        for idx in 0..20 {
+            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
+            assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+        }
+        assert_eq!(gate.escalated.get(), 0);
+
+        // Flagged node (reject on record, streak not yet re-promoted):
+        // full verification, counted as escalated.
+        let flagged: Arc<TrustOracle> = Arc::new(|_| TrustState {
+            clean_streak: 2,
+            verified_clean: 500,
+            rejects: 1,
+        });
+        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, flagged);
+        let bytes = tiny_submission(worker.address, 3, 0).encode_signed(&worker);
+        assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+        assert_eq!(gate.escalated.get(), 1);
+
+        // Rate 1.0: sampling disabled, everything Full even when proven.
+        let gate = SamplingGate::new(
+            ValidatorCommitment::new(0xC0FFEE),
+            SamplerConfig { sampling_rate: 1.0, promotion_streak: 8 },
+            proven,
+        );
+        for idx in 0..50 {
+            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
+            assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+        }
+        assert_eq!(gate.skipped.get(), 0);
+    }
+
+    #[test]
+    fn sampling_gate_never_skips_unproven_or_lying_uploads() {
+        use crate::toploc::{Validator, ValidatorConfig};
+        let worker = Identity::from_seed(5);
+        let stranger = Identity::from_seed(6);
+        let validator = Validator::new(ValidatorConfig::default());
+        let oracle = one_key_oracle(&worker);
+        let signing = Some(&oracle);
+        // Effectively-zero verify probability: every proven upload takes
+        // the skip path, so any Full/Done below is the gate's own doing.
+        let proven: Arc<TrustOracle> = Arc::new(|_| TrustState {
+            clean_streak: u64::MAX,
+            verified_clean: u64::MAX,
+            rejects: 0,
+        });
+        let cfg = SamplerConfig { sampling_rate: 0.0, promotion_streak: 8 };
+        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, proven);
+
+        // Unsigned upload with signing required: settles as Unsigned.
+        let raw = tiny_submission(worker.address, 3, 0).encode();
+        match gate.gate(signing, &validator, raw) {
+            GateOutcome::Done(Verdict::Unsigned { .. }) => {}
+            _ => panic!("unsigned upload must settle in stage 0"),
+        }
+        // Unregistered signer: Forged, trust never consulted.
+        let sealed = tiny_submission(stranger.address, 3, 0).encode_signed(&stranger);
+        match gate.gate(signing, &validator, sealed) {
+            GateOutcome::Done(Verdict::Forged { claimed, .. }) => {
+                assert_eq!(claimed, stranger.address)
+            }
+            _ => panic!("forged upload must settle in stage 0"),
+        }
+        // Proven envelope over a payload claiming a different identity:
+        // skip path catches the lie (proven Reject), no admission.
+        let mut lying = tiny_submission(worker.address, 3, 0);
+        lying.node_address = stranger.address;
+        lying.rollouts[0].rollout.node_address = stranger.address;
+        let payload = lying.encode();
+        let bytes = Envelope::seal(&worker, 3, 0, &payload);
+        match gate.gate(signing, &validator, bytes) {
+            GateOutcome::Done(Verdict::Reject { node, why }) => {
+                assert_eq!(node, Some(worker.address));
+                assert!(why.contains("envelope proves"), "{why}");
+            }
+            _ => panic!("identity lie must be a proven reject"),
+        }
+        // Undecodable payload under a valid envelope: proven Reject.
+        let bytes = Envelope::seal(&worker, 3, 1, b"not an rpq file");
+        match gate.gate(signing, &validator, bytes) {
+            GateOutcome::Done(Verdict::Reject { node, .. }) => {
+                assert_eq!(node, Some(worker.address))
+            }
+            _ => panic!("garbage payload must be a proven reject"),
+        }
+        // Legacy mode (no signing): sampling never applies — Full.
+        let raw2 = tiny_submission(worker.address, 3, 0).encode();
+        assert!(matches!(gate.gate(None, &validator, raw2), GateOutcome::Full(_)));
+        assert_eq!(gate.skipped.get(), 0);
+    }
+
+    #[test]
+    fn commitment_selection_is_deterministic_and_committing() {
+        let c = ValidatorCommitment::new(42);
+        let again = ValidatorCommitment::new(42);
+        for step in 0..4u64 {
+            for node in [7u64, 9, 1000] {
+                for idx in 0..8u64 {
+                    assert_eq!(
+                        c.selects(step, node, idx, 0.25),
+                        again.selects(step, node, idx, 0.25)
+                    );
+                }
+            }
+        }
+        // The published commitment binds the secret without revealing it.
+        assert_eq!(c.commitment(), again.commitment());
+        assert_ne!(c.commitment(), ValidatorCommitment::new(43).commitment());
+        assert_eq!(c.reveal(), 42);
+        // p >= 1 always selects; p == 0 never does.
+        assert!(c.selects(1, 2, 3, 1.0));
+        assert!(!c.selects(1, 2, 3, 0.0));
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub enum Tx {
     Register { pool_id: u64, node: u64 },
     Invite { pool_id: u64, node: u64, orchestrator: u64 },
     Contribution { pool_id: u64, node: u64, units: u64 },
+    /// Bond `units` of stake behind future submissions. Forfeited in full
+    /// on slash — sized (see [`min_negative_ev_stake`]) so that cheating
+    /// is negative-EV even when only a fraction of uploads is verified.
+    Stake { pool_id: u64, node: u64, units: u64 },
     Slash { pool_id: u64, node: u64, reason: String },
     Evict { pool_id: u64, node: u64 },
 }
@@ -31,9 +35,60 @@ impl Tx {
             Tx::Register { node, .. } => *node,
             Tx::Invite { orchestrator, .. } => *orchestrator,
             Tx::Contribution { node, .. } => *node,
+            Tx::Stake { node, .. } => *node,
             Tx::Slash { .. } | Tx::Evict { .. } => 0, // pool owner, resolved below
         }
     }
+}
+
+/// Per-(pool, node) verification history driving trust-weighted sampled
+/// validation. Pure integers — the verify probability is *derived* from
+/// these counters at query time, so the ledger replays deterministically.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrustState {
+    /// Consecutive fully-verified clean submissions since the last reject
+    /// (or since registration). Reset to zero by any reject.
+    pub clean_streak: u64,
+    /// Lifetime fully-verified clean submissions.
+    pub verified_clean: u64,
+    /// Lifetime rejects. Nonzero means the node has been flagged at least
+    /// once; until its streak re-crosses the promotion threshold it is
+    /// back on full verification (re-escalation).
+    pub rejects: u64,
+}
+
+impl TrustState {
+    /// Probability that this node's next submission is fully verified.
+    ///
+    /// New, low-trust, or recently-flagged nodes (streak below
+    /// `promotion_streak`) are always fully verified. Proven nodes decay
+    /// smoothly as `promotion_streak / clean_streak`, floored at
+    /// `rate_floor` (the configured `sampling-rate`). A reject zeroes the
+    /// streak, which re-escalates the node to full verification until it
+    /// earns promotion again.
+    pub fn verify_probability(&self, rate_floor: f64, promotion_streak: u64) -> f64 {
+        let promotion = promotion_streak.max(1);
+        if self.clean_streak < promotion {
+            return 1.0;
+        }
+        let decayed = promotion as f64 / self.clean_streak as f64;
+        decayed.max(rate_floor.clamp(0.0, 1.0))
+    }
+}
+
+/// Minimum stake (in reward units) that makes cheating negative-EV at the
+/// floor verification rate `min_rate`, with safety factor `margin`.
+///
+/// A cheat that would gain `reward_units` when unverified is caught with
+/// probability at least `min_rate` (the sampling floor — trust decay never
+/// drops below it, and new/flagged nodes sit at 1.0). Expected value of one
+/// cheat: `reward * (1 - p) - stake * p`, negative iff
+/// `stake > reward * (1 - p) / p`. We scale that bound by `margin` and add
+/// one unit so the inequality is strict even after integer rounding.
+pub fn min_negative_ev_stake(reward_units: u64, min_rate: f64, margin: f64) -> u64 {
+    let p = min_rate.clamp(1e-6, 1.0);
+    let bound = reward_units as f64 * (1.0 - p) / p * margin.max(1.0);
+    bound.ceil() as u64 + 1
 }
 
 #[derive(Clone, Debug)]
@@ -55,6 +110,9 @@ struct Inner {
     members: BTreeMap<u64, Vec<u64>>,    // pool -> active nodes
     slashed: BTreeMap<u64, Vec<u64>>,    // pool -> slashed nodes
     contributions: BTreeMap<(u64, u64), u64>, // (pool, node) -> units
+    stakes: BTreeMap<(u64, u64), u64>,        // (pool, node) -> bonded units
+    forfeits: BTreeMap<(u64, u64), u64>,      // (pool, node) -> stake lost to slashes
+    trust: BTreeMap<(u64, u64), TrustState>,  // (pool, node) -> verification history
 }
 
 /// Shared-handle ledger.
@@ -136,7 +194,9 @@ impl Ledger {
                     return Err(LedgerError::BadSignature);
                 }
             }
-            Tx::Register { pool_id, node } | Tx::Contribution { pool_id, node, .. } => {
+            Tx::Register { pool_id, node }
+            | Tx::Contribution { pool_id, node, .. }
+            | Tx::Stake { pool_id, node, .. } => {
                 if !inner.pools.contains_key(pool_id) {
                     return Err(LedgerError::UnknownPool(*pool_id));
                 }
@@ -171,10 +231,18 @@ impl Ledger {
             Tx::Contribution { pool_id, node, units } => {
                 *inner.contributions.entry((*pool_id, *node)).or_default() += units;
             }
+            Tx::Stake { pool_id, node, units } => {
+                *inner.stakes.entry((*pool_id, *node)).or_default() += units;
+            }
             Tx::Slash { pool_id, node, .. } => {
                 inner.slashed.entry(*pool_id).or_default().push(*node);
                 if let Some(m) = inner.members.get_mut(pool_id) {
                     m.retain(|n| n != node);
+                }
+                // The bonded stake is forfeited in full: this is what makes
+                // sampled verification safe (see `min_negative_ev_stake`).
+                if let Some(stake) = inner.stakes.remove(&(*pool_id, *node)) {
+                    *inner.forfeits.entry((*pool_id, *node)).or_default() += stake;
                 }
             }
             Tx::Evict { pool_id, node } => {
@@ -215,6 +283,41 @@ impl Ledger {
 
     pub fn contribution(&self, pool_id: u64, node: u64) -> u64 {
         self.inner.lock().unwrap().contributions.get(&(pool_id, node)).copied().unwrap_or(0)
+    }
+
+    /// Stake currently bonded by `node` in `pool_id` (0 if none, or if it
+    /// was forfeited to a slash).
+    pub fn stake_of(&self, pool_id: u64, node: u64) -> u64 {
+        self.inner.lock().unwrap().stakes.get(&(pool_id, node)).copied().unwrap_or(0)
+    }
+
+    /// Stake `node` has lost to slashes in `pool_id` (EV accounting).
+    pub fn forfeited(&self, pool_id: u64, node: u64) -> u64 {
+        self.inner.lock().unwrap().forfeits.get(&(pool_id, node)).copied().unwrap_or(0)
+    }
+
+    /// Verification history of `node` in `pool_id`. Nodes with no history
+    /// get the default state (zero streak — always fully verified).
+    pub fn trust(&self, pool_id: u64, node: u64) -> TrustState {
+        self.inner.lock().unwrap().trust.get(&(pool_id, node)).copied().unwrap_or_default()
+    }
+
+    /// Record the outcome of one *fully verified* submission. `clean`
+    /// extends the node's streak; a reject zeroes it and bumps the reject
+    /// count, which re-escalates the node to full verification. Skipped
+    /// (spot-check-exempt) submissions are deliberately NOT recorded: only
+    /// verification evidence moves trust, so a node cannot launder trust
+    /// through uploads that were never checked.
+    pub fn record_verification(&self, pool_id: u64, node: u64, clean: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let t = inner.trust.entry((pool_id, node)).or_default();
+        if clean {
+            t.clean_streak += 1;
+            t.verified_clean += 1;
+        } else {
+            t.clean_streak = 0;
+            t.rejects += 1;
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -332,6 +435,91 @@ mod tests {
         );
         assert_eq!(ledger.pool_owner(1), Some(owner.address));
         assert_eq!(ledger.pool_owner(9), None);
+    }
+
+    #[test]
+    fn trust_decays_from_full_to_floor_with_clean_history() {
+        let (ledger, _owner, node) = setup();
+        ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node).unwrap();
+        let (floor, promo) = (0.1, 8);
+        // New node: full verification.
+        assert_eq!(ledger.trust(1, node.address).verify_probability(floor, promo), 1.0);
+        // Below the promotion threshold the probability stays pinned at 1.
+        for i in 0..promo {
+            let p = ledger.trust(1, node.address).verify_probability(floor, promo);
+            assert_eq!(p, 1.0, "streak {i}");
+            ledger.record_verification(1, node.address, true);
+        }
+        // At the threshold the decay starts: promo/streak, monotone down.
+        let mut prev = ledger.trust(1, node.address).verify_probability(floor, promo);
+        assert_eq!(prev, 1.0); // streak == promo -> promo/streak == 1
+        for _ in 0..200 {
+            ledger.record_verification(1, node.address, true);
+            let p = ledger.trust(1, node.address).verify_probability(floor, promo);
+            assert!(p <= prev && p >= floor);
+            prev = p;
+        }
+        // Long-proven node sits at the configured floor, never below it.
+        assert_eq!(prev, floor);
+        let t = ledger.trust(1, node.address);
+        assert_eq!(t.verified_clean, promo + 200);
+        assert_eq!(t.rejects, 0);
+    }
+
+    #[test]
+    fn reject_reescalates_to_full_verification() {
+        let (ledger, _owner, node) = setup();
+        ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node).unwrap();
+        for _ in 0..50 {
+            ledger.record_verification(1, node.address, true);
+        }
+        assert!(ledger.trust(1, node.address).verify_probability(0.1, 8) < 0.2);
+        // One reject: streak zeroed, back to full verification.
+        ledger.record_verification(1, node.address, false);
+        let t = ledger.trust(1, node.address);
+        assert_eq!(t.clean_streak, 0);
+        assert_eq!(t.rejects, 1);
+        assert_eq!(t.verify_probability(0.1, 8), 1.0);
+        // It must earn the whole streak again before decaying.
+        for _ in 0..7 {
+            ledger.record_verification(1, node.address, true);
+            assert_eq!(ledger.trust(1, node.address).verify_probability(0.1, 8), 1.0);
+        }
+    }
+
+    #[test]
+    fn stake_bonds_and_is_forfeited_on_slash() {
+        let (ledger, owner, node) = setup();
+        ledger.submit(Tx::Register { pool_id: 1, node: node.address }, &node).unwrap();
+        ledger.submit(Tx::Stake { pool_id: 1, node: node.address, units: 40 }, &node).unwrap();
+        ledger.submit(Tx::Stake { pool_id: 1, node: node.address, units: 2 }, &node).unwrap();
+        assert_eq!(ledger.stake_of(1, node.address), 42);
+        assert_eq!(ledger.forfeited(1, node.address), 0);
+        // Nobody can stake on someone else's behalf.
+        let other = Identity::from_seed(3);
+        ledger.register_key(&other);
+        assert_eq!(
+            ledger.submit(Tx::Stake { pool_id: 1, node: node.address, units: 1 }, &other),
+            Err(LedgerError::BadSignature)
+        );
+        ledger
+            .submit(Tx::Slash { pool_id: 1, node: node.address, reason: "toploc".into() }, &owner)
+            .unwrap();
+        assert_eq!(ledger.stake_of(1, node.address), 0);
+        assert_eq!(ledger.forfeited(1, node.address), 42);
+        assert!(ledger.verify_chain());
+    }
+
+    #[test]
+    fn min_stake_makes_cheating_negative_ev() {
+        for &(reward, rate) in &[(1u64, 1.0f64), (1, 0.25), (1, 0.1), (7, 0.25), (100, 0.1)] {
+            let stake = min_negative_ev_stake(reward, rate, 2.0);
+            // EV of one cheat at the floor catch rate must be negative.
+            let ev = reward as f64 * (1.0 - rate) - stake as f64 * rate;
+            assert!(ev < 0.0, "reward {reward} rate {rate} stake {stake} ev {ev}");
+        }
+        // Full verification still demands a nonzero bond (strictness +1).
+        assert_eq!(min_negative_ev_stake(10, 1.0, 2.0), 1);
     }
 
     #[test]

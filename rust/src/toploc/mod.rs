@@ -63,6 +63,51 @@
 //! to the full frame when only `prefill` is shipped — packing still wins
 //! there by filling all lanes and issuing fewer calls.
 //!
+//! # Sampled verification: the trust-weighted pre-stage
+//!
+//! With `sampling-rate < 1.0` a pre-stage
+//! (`coordinator::validation::SamplingGate`) runs *before* the pipeline
+//! above and decides, per submission, whether stages 1–5 run at all.
+//! Stage 0 is never sampled away: every upload's envelope is verified,
+//! and a skipped submission additionally has its payload decoded and its
+//! claimed identity cross-checked before its *claimed* rewards are
+//! admitted to the rollout buffer (counted `rollouts_admitted_unverified`
+//! and flagged "(unverified)" in the per-env pass table).
+//!
+//! **Trust model** (`protocol::TrustState`): a node's verification
+//! probability starts at 1.0 and stays there until it banks
+//! `trust-promotion-streak` consecutive fully-verified clean submissions;
+//! past promotion it decays as `promotion_streak / clean_streak` down to
+//! the `sampling-rate` floor. Any reject zeroes the streak and bumps a
+//! lifetime reject count — the node is re-escalated to full verification
+//! and must re-earn the entire streak. Skipped submissions deliberately
+//! do not move trust: only verification evidence counts, so a node cannot
+//! launder trust through uploads that were never checked.
+//!
+//! **Unpredictable but replayable selection**: which submissions are
+//! audited is drawn from a validator secret committed (hash published)
+//! before uploads and revealed after
+//! (`coordinator::validation::ValidatorCommitment`). The draw is a pure
+//! function of `(secret, step, node, submission_idx)`, so any auditor
+//! holding the reveal reproduces the exact audit set bit-for-bit (the
+//! determinism contract below extends to selection), while a worker
+//! without the secret cannot tell which of its uploads will be checked —
+//! `tests/sampling_selection.rs` pins both properties.
+//!
+//! **Why cheating stays negative-EV**: a cheat caught by a spot check
+//! forfeits the node's entire stake. With per-submission reward `R`,
+//! verification probability `p`, and stake `S`, the cheat's expected
+//! value is `(1-p)·R - p·S`, negative iff `S > R·(1-p)/p`. The swarm
+//! sizes stakes with `protocol::min_negative_ev_stake` at the *floor*
+//! rate (the cheater's best case) times a safety margin
+//! (`trust-stake-margin`), so the inequality holds at every trust level
+//! and every configured `sampling-rate`. The CI `cheat-ev` job
+//! (`bin/cheat_ev_bench`, `coordinator::cheatev`) proves it end-to-end:
+//! eager, sleeper and deep-sleeper cheaters all finish with negative
+//! realized value at rates 1.0/0.25/0.1, no honest node is slashed, and
+//! at rate 1.0 the gated verdict stream is byte-identical to the ungated
+//! pipeline's.
+//!
 //! # Generation side: scheduling never reaches the wire
 //!
 //! The commitments this module audits are produced by the workers'

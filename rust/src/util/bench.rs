@@ -189,12 +189,19 @@ pub struct BenchFigure {
 
 /// Is a smaller value of this metric an improvement? Keyed off the naming
 /// conventions the benches actually use: `*_waste`, `*_fraction`/`*_frac`,
-/// `*_calls_*`, `*_overhead*`, raw `*_ns` timings, and the generation
-/// scheduler's `*_steps` / `*_prompts` work counts (decode_steps,
-/// prefill_calls, prefill_prompts in `BENCH_generation.json`) shrink when
-/// things get better; throughputs, speedups, occupancies and gains grow.
+/// `*_calls_*`, `*_overhead*`, raw `*_ns` timings, cost ratios spelled
+/// `*_per_*` (validator_compute_per_verified_token in
+/// `BENCH_toploc.json`), and the generation scheduler's `*_steps` /
+/// `*_prompts` work counts (decode_steps, prefill_calls, prefill_prompts
+/// in `BENCH_generation.json`) shrink when things get better;
+/// throughputs, speedups, occupancies and gains grow. One carve-out: a
+/// `*_per_s`/`*_per_sec` suffix is a throughput (rollouts_per_s_*), not a
+/// cost ratio, despite carrying the `_per_` marker.
 fn lower_is_better(key: &str) -> bool {
-    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts"]
+    if key.contains("_per_s") {
+        return false;
+    }
+    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts", "_per_"]
         .iter()
         .any(|marker| key.contains(marker))
 }
@@ -361,5 +368,17 @@ mod tests {
         for key in ["refill_speedup", "continuous_occupancy", "rollouts_per_s_continuous"] {
             assert!(!lower_is_better(key), "{key}");
         }
+    }
+
+    #[test]
+    fn sampled_validation_figures_have_directions() {
+        // BENCH_toploc.json's sampling figures: compute spent per admitted
+        // token shrinks as sampling bites (a `_per_` cost ratio), while
+        // the sampled-mode speedup grows — and the `_per_s*` throughput
+        // carve-out must keep rollouts/sec figures higher-is-better.
+        assert!(lower_is_better("validator_compute_per_verified_token"));
+        assert!(!lower_is_better("sampled_speedup"));
+        assert!(!lower_is_better("verify_rollouts_per_sec"));
+        assert!(!lower_is_better("rollouts_per_s_continuous"));
     }
 }

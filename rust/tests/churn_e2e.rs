@@ -21,6 +21,9 @@ fn churn_torture_swarm_completes() {
             hang_ms: 150,
             ..FaultSpec::default()
         }),
+        // Torture the sampled-audit path too: only commitment-selected
+        // fetches are byte-audited, the rest are admitted unaudited.
+        sampling_rate: 0.25,
         step_timeout: Duration::from_secs(60),
         ..ChurnConfig::default()
     };
@@ -45,6 +48,12 @@ fn churn_torture_swarm_completes() {
 
     // Safety: churn is not cheating — no honest node was slashed.
     assert_eq!(report.honest_slashed, 0, "{report:?}");
+
+    // Sampled auditing: every completed fetch was either fully audited or
+    // consciously skipped (and every audit that ran passed, or the step
+    // quota above could not have completed).
+    assert_eq!(report.audits_full + report.audits_skipped, report.tasks_completed, "{report:?}");
+    assert!(report.audits_skipped > 0, "rate 0.25 never skipped an audit: {report:?}");
 }
 
 #[test]
@@ -58,4 +67,7 @@ fn fault_free_baseline_is_clean() {
     assert_eq!(report.workers_evicted, 0, "{report:?}");
     assert_eq!(report.tasks_requeued, 0, "{report:?}");
     assert_eq!(report.honest_slashed, 0, "{report:?}");
+    // Default rate 1.0: every fetch is audited, none skipped.
+    assert_eq!(report.audits_full, report.tasks_completed, "{report:?}");
+    assert_eq!(report.audits_skipped, 0, "{report:?}");
 }

@@ -1,0 +1,135 @@
+//! Property tests for the trust-weighted sampling pre-stage's selection
+//! function: the commitment-seeded draw must be (a) byte-identical across
+//! replays — any auditor holding the revealed secret reproduces exactly
+//! the validator's audit set — and (b) unpredictable without the secret —
+//! a worker enumerating guesses does no better than chance at telling
+//! which of its uploads will be spot-checked. Engine-free; runs in CI
+//! without model artifacts.
+
+use intellect2::coordinator::validation::{SamplerConfig, ValidatorCommitment};
+use intellect2::protocol::{Ledger, TrustState};
+use sha2::{Digest, Sha256};
+
+/// A small deterministic identity grid: (step, node, submission_idx)
+/// triples spanning several steps, nodes and per-step upload indices.
+fn identity_grid() -> Vec<(u64, u64, u64)> {
+    let mut ids = Vec::new();
+    for step in 0..40u64 {
+        for node in 0..10u64 {
+            for idx in 0..5u64 {
+                ids.push((step, node.wrapping_mul(0x9E37_79B9).rotate_left(7), idx));
+            }
+        }
+    }
+    ids
+}
+
+#[test]
+fn selection_is_byte_identical_across_replays() {
+    let secret = 0xA11CE_u64;
+    // Two independently-constructed commitments from the same revealed
+    // secret: every draw must match to the bit, and therefore every
+    // select decision at every rate.
+    let a = ValidatorCommitment::new(secret);
+    let b = ValidatorCommitment::new(a.reveal());
+    for &(step, node, idx) in &identity_grid() {
+        let da = a.draw(step, node, idx);
+        let db = b.draw(step, node, idx);
+        assert_eq!(da.to_bits(), db.to_bits(), "draw diverged at ({step},{node},{idx})");
+        for rate in [0.0, 0.05, 0.1, 0.25, 0.5, 0.99, 1.0, 2.0] {
+            assert_eq!(
+                a.selects(step, node, idx, rate),
+                b.selects(step, node, idx, rate),
+                "selects diverged at ({step},{node},{idx}) rate {rate}"
+            );
+        }
+        // Draws live in [0, 1): p >= 1 must select unconditionally.
+        assert!((0.0..1.0).contains(&da));
+        assert!(a.selects(step, node, idx, 1.0));
+    }
+}
+
+#[test]
+fn commitment_binds_the_secret() {
+    let c = ValidatorCommitment::new(0xC0FFEE);
+    // The published commitment is exactly the hash of the later reveal,
+    // so workers can verify the validator did not re-roll its secret
+    // after seeing the uploads.
+    let expect: [u8; 32] = Sha256::digest(c.reveal().to_le_bytes()).into();
+    assert_eq!(c.commitment(), expect);
+    // And it actually binds: a different secret commits differently.
+    assert_ne!(c.commitment(), ValidatorCommitment::new(0xC0FFEF).commitment());
+}
+
+#[test]
+fn selection_is_chance_level_without_the_secret() {
+    let truth = ValidatorCommitment::new(0x5EC2E7);
+    let ids = identity_grid();
+    let rate = 0.25f64;
+    // Chance agreement between two independent Bernoulli(p) streams:
+    // p^2 + (1-p)^2. A guesser that recovered any structure would beat
+    // this; one that did not sits inside the sampling noise around it.
+    let chance = rate * rate + (1.0 - rate) * (1.0 - rate);
+    for guess_seed in [0u64, 1, 42, 0x5EC2E6, 0x5EC2E8, u64::MAX] {
+        let guess = ValidatorCommitment::new(guess_seed);
+        let agree = ids
+            .iter()
+            .filter(|&&(s, n, i)| guess.selects(s, n, i, rate) == truth.selects(s, n, i, rate))
+            .count() as f64
+            / ids.len() as f64;
+        // 2000 trials: 4 sigma is ~0.043; allow 0.06 for slack.
+        assert!(
+            (agree - chance).abs() < 0.06,
+            "wrong-secret {guess_seed:#x} agreement {agree:.3} not chance-level ({chance:.3})"
+        );
+        // In particular, no wrong secret reproduces the audit set.
+        assert!(agree < 1.0);
+    }
+    // Neighbouring identities under the TRUE secret are also decorrelated:
+    // knowing your previous upload was audited says nothing about the
+    // next one (selection is per-(step, node, idx), not per-node-sticky).
+    let selected = ids.iter().filter(|&&(s, n, i)| truth.selects(s, n, i, rate)).count() as f64
+        / ids.len() as f64;
+    assert!((selected - rate).abs() < 0.05, "selection share {selected:.3} far from {rate}");
+}
+
+#[test]
+fn trust_lifecycle_decay_promotion_and_re_escalation() {
+    let ledger = Ledger::default();
+    let (pool, node) = (1u64, 7u64);
+    let cfg = SamplerConfig { sampling_rate: 0.1, promotion_streak: 4 };
+    let p = |t: TrustState| t.verify_probability(cfg.sampling_rate, cfg.promotion_streak);
+
+    // New node: full verification until the streak *passes* promotion
+    // (at exactly the promotion streak, promo/streak is still 1.0).
+    for _ in 0..=cfg.promotion_streak {
+        assert_eq!(p(ledger.trust(pool, node)), 1.0);
+        ledger.record_verification(pool, node, true);
+    }
+    // Past promotion the probability decays monotonically toward the
+    // floor and never dips below it.
+    let mut prev = p(ledger.trust(pool, node));
+    assert!(prev < 1.0, "no decay after {} clean records", cfg.promotion_streak + 1);
+    for _ in 0..200 {
+        ledger.record_verification(pool, node, true);
+        let cur = p(ledger.trust(pool, node));
+        assert!(cur <= prev && cur >= cfg.sampling_rate, "decay not monotone: {prev} -> {cur}");
+        prev = cur;
+    }
+    assert_eq!(prev, cfg.sampling_rate, "long clean streak should reach the floor");
+
+    // One reject re-escalates to full verification immediately, no matter
+    // how much history the node had banked.
+    ledger.record_verification(pool, node, false);
+    let t = ledger.trust(pool, node);
+    assert_eq!(t.clean_streak, 0);
+    assert_eq!(t.rejects, 1);
+    assert_eq!(p(t), 1.0);
+    // And the node must re-earn the whole streak (plus one) to see a
+    // sub-1.0 probability again.
+    for _ in 0..=cfg.promotion_streak {
+        assert_eq!(p(ledger.trust(pool, node)), 1.0);
+        ledger.record_verification(pool, node, true);
+    }
+    assert!(p(ledger.trust(pool, node)) < 1.0);
+}

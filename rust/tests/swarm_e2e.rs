@@ -100,6 +100,47 @@ fn evil_worker_is_slashed_and_excluded() {
 }
 
 #[test]
+fn evil_worker_is_slashed_under_sampling() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Spot-check rate 0.25 with instant promotion: proven-honest nodes
+    // decay off full verification as fast as they can, while the cheater
+    // (zero trust, then flagged) is always fully verified — sampling must
+    // not change the adversarial outcome.
+    let cfg = RunConfig { sampling_rate: 0.25, trust_promotion_streak: 1, ..tiny_cfg() };
+    let swarm = Swarm::new(cfg).unwrap();
+    let result = swarm.run(5, true).unwrap();
+    assert!(
+        result.stats.submissions_rejected.get() >= 1,
+        "rejected={}",
+        result.stats.submissions_rejected.get()
+    );
+    assert!(result.stats.nodes_slashed.get() >= 1);
+    // The gate was armed (rate < 1.0) and fully verified at least the
+    // cheater's uploads.
+    assert!(result.stats.submissions_sampled_full.get() >= 1);
+    // Skip-admission bookkeeping is consistent: a skipped submission's
+    // claimed rewards land in the buffer and in the per-env pass table,
+    // explicitly flagged as unverified.
+    if result.stats.submissions_skipped_unverified.get() > 0 {
+        assert!(result.stats.rollouts_admitted_unverified.get() > 0);
+        let envs: Vec<String> =
+            result.stats.env_pass.snapshot().into_iter().map(|(e, _, _)| e).collect();
+        assert!(
+            envs.iter().any(|e| e.ends_with("(unverified)")),
+            "skipped submissions not flagged per-env: {envs:?}"
+        );
+    } else {
+        assert_eq!(result.stats.rollouts_admitted_unverified.get(), 0);
+    }
+    // Honest training still made progress and the audit chain holds.
+    assert_eq!(result.series.get("task_reward").len(), 2);
+    assert!(result.ledger.verify_chain());
+}
+
+#[test]
 fn broadcast_overlaps_next_training_step() {
     if !artifacts_ready() {
         eprintln!("skipping: run `make artifacts`");

@@ -13,10 +13,11 @@ use std::sync::Arc;
 
 use intellect2::config::RunConfig;
 use intellect2::coordinator::validation::{
-    validate_submission_fullpad, SigOracle, ValidationPipeline, Verdict,
+    validate_submission_fullpad, GateOutcome, SamplerConfig, SamplingGate, SigOracle,
+    TrustOracle, ValidationPipeline, ValidatorCommitment, Verdict,
 };
 use intellect2::coordinator::{group_id_base, RolloutGenerator};
-use intellect2::protocol::{Identity, Ledger};
+use intellect2::protocol::{Identity, Ledger, TrustState};
 use intellect2::rl::rollout_file::{Envelope, Submission};
 use intellect2::runtime::{EngineHost, ParamSet, Runtime};
 use intellect2::tasks::dataset::{Dataset, DatasetConfig, EnvMix};
@@ -550,6 +551,62 @@ fn replayed_envelopes_age_out() {
         "step-rewritten replay must be forged: {:?}",
         v[0].fingerprint()
     );
+}
+
+/// Sampling pre-stage transparency: at rate 1.0 the gate must be a pure
+/// pass-through — no upload is ever spot-check exempted, not even for a
+/// node with unbounded clean trust, and the verdict set over the full
+/// adversarial mix is identical to the ungated pipeline's. (The gate
+/// settles stage-0 failures itself, so equality is over the verdict
+/// *sets*; the swarm only constructs a gate at rates below 1.0, where
+/// positional order is not preserved anyway.)
+#[test]
+fn sampling_gate_at_rate_one_is_verdict_transparent() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = Fixture::build();
+    let batch = mixed_batch(&fx, true);
+    let ungated = fx.pipeline(4, 0, true).validate_batch(batch.clone(), &|| 1, &fx.lookup());
+    let mut want = fingerprints(&ungated);
+
+    // The most skip-friendly trust imaginable: an endless clean record.
+    // Rate 1.0 must still clamp every node to full verification.
+    let trust: Arc<TrustOracle> = Arc::new(|_| TrustState {
+        clean_streak: u64::MAX,
+        verified_clean: u64::MAX,
+        rejects: 0,
+    });
+    let gate = SamplingGate::new(
+        ValidatorCommitment::new(0xFEED),
+        SamplerConfig { sampling_rate: 1.0, promotion_streak: 8 },
+        trust,
+    );
+    let validator = Validator::new(fx.vcfg());
+    let keys = fx.keys();
+    let mut fulls: Vec<Vec<u8>> = Vec::new();
+    let mut got = Vec::new();
+    for bytes in batch.clone() {
+        match gate.gate(Some(&keys), &validator, bytes.clone()) {
+            // Pass-through is byte-identical: the pipeline sees exactly
+            // the upload the worker signed.
+            GateOutcome::Full(b) => {
+                assert_eq!(b, bytes, "gate must not rewrite upload bytes");
+                fulls.push(b);
+            }
+            GateOutcome::Done(v) => got.push(v.fingerprint()),
+            GateOutcome::Skip(_) => panic!("rate 1.0 must never skip verification"),
+        }
+    }
+    assert_eq!(gate.skipped.get(), 0);
+    assert_eq!(gate.sampled_full.get(), fulls.len() as u64);
+    got.extend(fingerprints(
+        &fx.pipeline(4, 0, true).validate_batch(fulls, &|| 1, &fx.lookup()),
+    ));
+    want.sort();
+    got.sort();
+    assert_eq!(got, want, "gated verdict set diverged from the ungated pipeline");
 }
 
 #[test]

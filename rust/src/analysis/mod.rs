@@ -18,7 +18,9 @@
 //! Rules R1–R4 apply inside the *trust-critical modules* declared in
 //! [`rules::repo_config`] (`toploc`, `coordinator/validation`,
 //! `rl/rollout_file`, `verifier`, `tasks`, `runtime/scheduler`,
-//! `util/rng`); R5 applies crate-wide. Test modules are exempt.
+//! `util/rng`); R5 applies crate-wide; R6 applies inside the
+//! *worker-side modules* (`protocol/worker`, `coordinator/gen`,
+//! `runtime/scheduler`). Test modules are exempt.
 //!
 //! - **R1 `unordered-iter`** — no iteration over `HashMap`/`HashSet`.
 //!   Hash iteration order is unspecified and differs across processes
@@ -54,6 +56,15 @@
 //!   [`rules::repo_config`]. Same-class nesting is always flagged
 //!   (non-reentrant mutex self-deadlock); undeclared classes in an edge
 //!   are flagged too. See [`lockmap`] for the map rendering.
+//! - **R6 `validator-secret`** — worker-side modules must never reference
+//!   the validator's commit-reveal audit-selection machinery
+//!   (`ValidatorCommitment`, or the secret-derivation constant
+//!   `0x5E1EC7`). Sampled validation stays negative-EV only while a
+//!   worker cannot predict which of its uploads will be audited; the sim
+//!   derives the commitment secret from the shared run seed, which is
+//!   sound precisely because this rule guarantees no worker code path
+//!   reads it. `coordinator/churn` is coordinator-side and exempt — its
+//!   fault harness legitimately constructs commitments.
 //!
 //! # Suppressions
 //!

@@ -18,6 +18,7 @@ pub enum Rule {
     PanicPath,
     FloatFold,
     LockOrder,
+    ValidatorSecret,
     BadAnnotation,
 }
 
@@ -29,6 +30,7 @@ impl Rule {
             Rule::PanicPath => "panic-path",
             Rule::FloatFold => "float-fold",
             Rule::LockOrder => "lock-order",
+            Rule::ValidatorSecret => "validator-secret",
             Rule::BadAnnotation => "bad-annotation",
         }
     }
@@ -40,6 +42,7 @@ impl Rule {
             "panic-path" => Some(Rule::PanicPath),
             "float-fold" => Some(Rule::FloatFold),
             "lock-order" => Some(Rule::LockOrder),
+            "validator-secret" => Some(Rule::ValidatorSecret),
             _ => None,
         }
     }
@@ -92,6 +95,14 @@ pub struct LockEdge {
 pub struct Config {
     /// Path prefixes (relative to `src/`) where R1–R4 apply.
     pub trust_prefixes: Vec<String>,
+    /// Path prefixes (relative to `src/`) of *worker-side* code, where R6
+    /// applies: these modules must never reference the validator's
+    /// commit-reveal audit-selection machinery. The sim derives the
+    /// commitment secret from the shared run seed (see
+    /// `coordinator/swarm.rs`), which is sound only because no worker
+    /// code path can read it — this list is what makes that claim
+    /// mechanical.
+    pub worker_prefixes: Vec<String>,
     /// Declared lock hierarchy, outermost first. Nested acquisitions must
     /// step strictly forward in this list; see [`super::lockmap`].
     pub lock_order: Vec<String>,
@@ -110,6 +121,11 @@ pub fn repo_config() -> Config {
         "runtime/scheduler.rs",
         "util/rng.rs",
     ];
+    // Worker-side code: everything a node operator runs to generate and
+    // upload rollouts. `coordinator/churn.rs` is deliberately absent — it
+    // is the coordinator-side fault harness and legitimately constructs
+    // commitments to test validator recovery.
+    let workers = ["protocol/worker.rs", "coordinator/gen.rs", "runtime/scheduler.rs"];
     // Outermost → innermost. A lock may only be taken while holding locks
     // that appear strictly earlier in this list.
     let order = [
@@ -133,6 +149,7 @@ pub fn repo_config() -> Config {
     ];
     Config {
         trust_prefixes: trust.iter().map(|s| s.to_string()).collect(),
+        worker_prefixes: workers.iter().map(|s| s.to_string()).collect(),
         lock_order: order.iter().map(|s| s.to_string()).collect(),
     }
 }
@@ -727,6 +744,44 @@ fn scan_float_fold(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
 }
 
 // ---------------------------------------------------------------------------
+// R6 validator-secret.
+
+/// R6: references to the validator's commit-reveal machinery in
+/// worker-side modules. The sampled-validation gate's security argument
+/// requires that workers cannot predict which uploads are audited; the
+/// sim derives the commitment secret from the public run seed, which is
+/// sound *only if* no worker code path touches it. Flags the
+/// `ValidatorCommitment` type and the secret-derivation XOR constant
+/// (`0x5E1EC7`) anywhere in a worker module.
+fn scan_validator_secret(cx: &Cx, file: &str, out: &mut Vec<Violation>) {
+    for i in 0..cx.sig.len() {
+        if cx.exempt[i] {
+            continue;
+        }
+        let t = cx.t(i);
+        let hit = if cx.is_ident(i) {
+            t == "ValidatorCommitment"
+        } else {
+            // The derivation constant in any radix/case (`0x5E1EC7`).
+            t.to_ascii_uppercase().contains("5E1EC7")
+        };
+        if hit {
+            out.push(Violation {
+                file: file.to_string(),
+                line: cx.line(i),
+                rule: Rule::ValidatorSecret,
+                message: format!(
+                    "`{t}` in worker-side code: workers must not be able to \
+                     derive the audit-selection secret"
+                ),
+                suppressed: false,
+                justification: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // R5 lock-order (per-file scan; cross-file aggregation in `lockmap`).
 
 struct Guard {
@@ -830,6 +885,10 @@ fn is_trusted(rel_path: &str, cfg: &Config) -> bool {
     cfg.trust_prefixes.iter().any(|p| rel_path.starts_with(p.as_str()))
 }
 
+fn is_worker(rel_path: &str, cfg: &Config) -> bool {
+    cfg.worker_prefixes.iter().any(|p| rel_path.starts_with(p.as_str()))
+}
+
 /// Analyze one source file (path relative to `src/`, unix separators).
 /// Lock-order *edges* are collected here; turning them into violations
 /// happens in [`super::lockmap::check_edges`] so the whole-crate map stays
@@ -842,6 +901,9 @@ pub fn analyze_source(rel_path: &str, src: &str, cfg: &Config) -> FileReport {
         scan_wall_clock(&cx, rel_path, &mut violations);
         scan_panic_path(&cx, rel_path, &mut violations);
         scan_float_fold(&cx, rel_path, &mut violations);
+    }
+    if is_worker(rel_path, cfg) {
+        scan_validator_secret(&cx, rel_path, &mut violations);
     }
     let (lock_sites, lock_edges) = scan_locks(&cx, &module_key(rel_path));
     let (mut annotations, mut bad) = parse_annotations(&all, rel_path);

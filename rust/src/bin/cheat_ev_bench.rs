@@ -10,6 +10,9 @@
 //!   run actually bonded: `(1 - p) * reward < p * stake`;
 //! - every node that submitted a fabricated-reward submission ends the
 //!   run slashed with its full stake forfeited;
+//! - deterministic lies — inflated rollout counts past the quota,
+//!   out-of-bounds claimed rewards — never bank a unit, sampled or not
+//!   (the gate's cheap CPU checks run on the skip path too);
 //! - no honest node is slashed;
 //! - at rate 1.0 the gated pipeline's verdict stream is byte-identical to
 //!   the ungated (pre-sampling) pipeline over the same upload bytes.
@@ -17,16 +20,22 @@
 //! Emits `BENCH_cheatev.json` with the per-rate EV margins and the
 //! realized spot-check skip share, for the perf/safety trajectory.
 
-use intellect2::coordinator::{run_cheat_ev, CheatEvConfig, CheatEvReport};
+use intellect2::coordinator::{run_cheat_ev, CheatEvConfig, CheatEvReport, Strategy};
 use intellect2::util::bench::BenchReport;
 
 fn gate(rate: f64) -> anyhow::Result<CheatEvReport> {
     let cfg = CheatEvConfig { sampling_rate: rate, ..Default::default() };
     let r = run_cheat_ev(&cfg)?;
     println!(
-        "rate {rate:.2}: {} uploads — {} fully verified, {} skipped, {} escalated; \
-         stake {} units vs {} units/submission",
-        r.uploads, r.sampled_full, r.skipped, r.escalated, r.stake, r.per_sub_reward
+        "rate {rate:.2}: {} uploads — {} fully verified, {} skipped, {} escalated, \
+         {} settled deterministically unsampled; stake {} units vs {} units/submission",
+        r.uploads,
+        r.sampled_full,
+        r.skipped,
+        r.escalated,
+        r.rejected_unsampled,
+        r.stake,
+        r.per_sub_reward
     );
     for n in r.nodes.iter().filter(|n| n.is_cheater()) {
         println!(
@@ -57,6 +66,22 @@ fn gate(rate: f64) -> anyhow::Result<CheatEvReport> {
             n.strategy,
             n.forfeited,
             r.stake
+        );
+    }
+    // Deterministic lies (count inflation, out-of-bounds claims) must
+    // never bank a single unit — the gate's cheap CPU checks run on the
+    // skip path too, so losing the selection draw buys nothing.
+    for n in r
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.strategy, Strategy::Inflator | Strategy::BoundsLiar))
+    {
+        anyhow::ensure!(
+            n.cheats_admitted == 0 && n.cheat_gain == 0,
+            "rate {rate}: {:?} got a deterministic lie admitted ({} subs, {} units)",
+            n.strategy,
+            n.cheats_admitted,
+            n.cheat_gain
         );
     }
     Ok(r)

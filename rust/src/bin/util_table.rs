@@ -104,12 +104,18 @@ fn main() -> anyhow::Result<()> {
     // stream (full verification vs spot-check-exempt vs re-escalated) and
     // how many rollouts were admitted on stake + trust alone. Zero rows
     // mean the gate never armed (`--sampling-rate 1.0`, the default).
-    let gated = s.submissions_sampled_full.get() + s.submissions_skipped_unverified.get();
+    let gated = s.submissions_sampled_full.get()
+        + s.submissions_skipped_unverified.get()
+        + s.submissions_rejected_unsampled.get();
     if gated > 0 {
         let share = |n: u64| format!("{n} ({:.0}%)", 100.0 * n as f64 / gated as f64);
         let gate_rows = vec![
             vec!["fully verified".into(), share(s.submissions_sampled_full.get())],
             vec!["skipped (stake-backed)".into(), share(s.submissions_skipped_unverified.get())],
+            vec![
+                "rejected unsampled (deterministic)".into(),
+                s.submissions_rejected_unsampled.get().to_string(),
+            ],
             vec!["re-escalated".into(), s.submissions_escalated.get().to_string()],
             vec![
                 "rollouts admitted unverified".into(),

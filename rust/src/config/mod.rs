@@ -36,6 +36,9 @@
 //!   validation). 1.0 (default) = verify everything; 0.1 = spot-check a
 //!   tenth once a node's clean streak has earned promotion. New, unsigned
 //!   or recently-flagged nodes are always fully verified regardless.
+//!   Clamped below to `protocol::MIN_SAMPLING_RATE` — a rate of 0 would
+//!   size stakes against a verification probability the gate never
+//!   actually enforces.
 //! - `trust-promotion-streak`: consecutive fully-verified clean
 //!   submissions a node needs before its verification probability starts
 //!   decaying toward `sampling-rate`; any reject resets the streak (full
@@ -59,6 +62,12 @@ use crate::util::cli::Args;
 pub struct RunConfig {
     /// Model size key under artifacts/ ("nano", "micro", "small", ...).
     pub model: String,
+    /// Run seed: every RNG stream (data sampling, generation, fault
+    /// injection) derives from it. The sim *also* derives the sampled-
+    /// validation commit-reveal secret from it (`coordinator/swarm.rs`) —
+    /// acceptable only because swarmlint's `validator-secret` rule proves
+    /// no worker-side module can read the derivation; a real deployment
+    /// must source that secret from validator-local entropy instead.
     pub seed: u64,
     /// GRPO group size (completions per prompt; paper: 16).
     pub group_size: usize,
@@ -195,7 +204,13 @@ impl RunConfig {
         self.gen_refill = a.bool_or("gen-refill", self.gen_refill);
         self.require_signed_submissions =
             a.bool_or("require-signed-submissions", self.require_signed_submissions);
-        self.sampling_rate = a.f64_or("sampling-rate", self.sampling_rate).clamp(0.0, 1.0);
+        // Floor shared with the trust decay and the stake sizing
+        // (`protocol::MIN_SAMPLING_RATE`): a configured 0 would make the
+        // EV bound reference a verification probability the gate never
+        // reaches. The three clamps agree by construction.
+        self.sampling_rate = a
+            .f64_or("sampling-rate", self.sampling_rate)
+            .clamp(crate::protocol::MIN_SAMPLING_RATE, 1.0);
         self.trust_promotion_streak =
             a.u64_or("trust-promotion-streak", self.trust_promotion_streak).max(1);
         self.trust_stake_margin = a.f64_or("trust-stake-margin", self.trust_stake_margin).max(1.0);
@@ -295,6 +310,11 @@ mod tests {
         assert_eq!(c.sampling_rate, 1.0);
         assert_eq!(c.trust_promotion_streak, 1);
         assert_eq!(c.trust_stake_margin, 1.0);
+        // Rate 0 ("never verify promoted nodes") clamps up to the shared
+        // floor the trust decay and stake sizing also enforce.
+        let a = Args::parse("--sampling-rate 0.0".split_whitespace().map(str::to_string));
+        let c = RunConfig::default().apply_args(&a);
+        assert_eq!(c.sampling_rate, crate::protocol::MIN_SAMPLING_RATE);
     }
 
     #[test]

@@ -60,6 +60,18 @@ pub enum Strategy {
     /// the configured floor from step 0 — the worst case the stake sizing
     /// has to cover.
     DeepSleeper,
+    /// Deep-trusted node that inflates its rollout *count* past the
+    /// per-worker quota once skips begin — the task stream is
+    /// prefix-stable, so without the per-submission cap the extra rollouts
+    /// would pass the seed check and claim unbounded reward against a
+    /// fixed stake. Must be caught at the gate on its *first* defection,
+    /// skip or no skip (the cap is a deterministic check).
+    Inflator,
+    /// Deep-trusted node that keeps the honest rollout count but claims a
+    /// reward far outside the environment's bounds (1e30 per rollout).
+    /// Like [`Strategy::Inflator`], a deterministic lie: the gate's
+    /// value-bounds check rejects it even on a would-be skip.
+    BoundsLiar,
 }
 
 /// Knobs for one adversarial run. The defaults mirror the swarm's
@@ -101,6 +113,8 @@ impl Default for CheatEvConfig {
                 Strategy::Eager,
                 Strategy::Sleeper,
                 Strategy::DeepSleeper,
+                Strategy::Inflator,
+                Strategy::BoundsLiar,
             ],
         }
     }
@@ -150,6 +164,10 @@ pub struct CheatEvReport {
     pub sampled_full: u64,
     pub skipped: u64,
     pub escalated: u64,
+    /// Uploads that lost the selection draw but failed one of the gate's
+    /// deterministic checks (cap, bounds, seed, group ids): settled at the
+    /// gate — neither fully sampled nor admitted.
+    pub rejected_unsampled: u64,
     /// Verdict fingerprints from the gated run, in upload order (gate
     /// early-rejects and full-pipeline verdicts; skips produce none).
     pub gated_fingerprints: Vec<(&'static str, Option<u64>, String)>,
@@ -192,21 +210,41 @@ impl CheatEvReport {
     }
 }
 
-/// Build one wire-honest submission for `(node, step)`: tasks drawn from
-/// the §2.3.3 seed formula, group ids from the deterministic base, the
-/// reference answer as the completion. When `cheat` is set the completion
-/// is fabricated but the claimed rewards stay at 1.0 — exactly the lie
-/// stage 2's reward re-verification catches.
+/// The lie (if any) baked into one upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Lie {
+    /// Wire-honest: reference answer, true rewards, quota-sized.
+    None,
+    /// Fabricated completion claimed at reward 1.0 — only stage 2's
+    /// expensive reward replay can tell, so this is the lie sampling
+    /// deliberately lets through and stake must price in.
+    FakeAnswer,
+    /// 4x the quota of rollouts, each claiming 1.0. The task stream is
+    /// prefix-stable, so every extra prompt still matches the seed draw —
+    /// only the per-submission cap stops the claimable value.
+    InflateCount,
+    /// Honest completions but a claimed reward of 1e30 per rollout —
+    /// caught by the deterministic value-bounds check.
+    RewardBounds,
+}
+
+/// Build one submission for `(node, step)`: tasks drawn from the §2.3.3
+/// seed formula, group ids from the deterministic base, the reference
+/// answer as the completion — except where `lie` says otherwise.
 fn build_submission(
     dataset: &Dataset,
     cfg: &CheatEvConfig,
     node: u64,
     step: u64,
-    cheat: bool,
+    lie: Lie,
 ) -> Submission {
     let seed = node_sample_seed(node, step, 0);
     let base = crate::rl::group_id_base(node, step, 0);
-    let ids = dataset.sample_for(seed, cfg.prompts_per_sub);
+    let n_prompts = match lie {
+        Lie::InflateCount => cfg.prompts_per_sub * 4,
+        _ => cfg.prompts_per_sub,
+    };
+    let ids = dataset.sample_for(seed, n_prompts);
     let mut rollouts = Vec::new();
     for (pi, id) in ids.iter().enumerate() {
         let task = dataset.get(*id).expect("sampled id in dataset");
@@ -214,7 +252,7 @@ fn build_submission(
             let mut tokens = vec![BOS];
             tokens.extend(encode(&task.prompt));
             let plen = tokens.len();
-            if cheat {
+            if lie == Lie::FakeAnswer {
                 // A completion the verifier scores 0 — claimed as 1.0.
                 tokens.extend(encode("wrong"));
             } else {
@@ -222,6 +260,7 @@ fn build_submission(
             }
             tokens.push(EOS);
             let n = tokens.len() - plen;
+            let claimed = if lie == Lie::RewardBounds { 1e30 } else { 1.0 };
             rollouts.push(WireRollout {
                 rollout: Rollout {
                     task_id: *id,
@@ -230,9 +269,9 @@ fn build_submission(
                     tokens,
                     prompt_len: plen,
                     target_len: None,
-                    task_reward: 1.0,
+                    task_reward: claimed,
                     length_penalty: 0.0,
-                    reward: 1.0,
+                    reward: claimed,
                     advantage: 0.0,
                     sampled_probs: vec![0.5; n],
                     node_address: node,
@@ -257,12 +296,17 @@ struct NodeState {
 /// Run the adversarial economy described by `cfg` and report what every
 /// strategy earned and lost.
 pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
-    let dataset = Dataset::generate(
+    let dataset = Arc::new(Dataset::generate(
         &Registry::standard(),
         &DatasetConfig { seed: cfg.seed, mix: EnvMix::of(&[("math", 40)]), ..Default::default() },
-    )?;
-    let validator =
-        Validator::new(ValidatorConfig { expected_group: cfg.group_size, ..Default::default() });
+    )?);
+    let validator = Validator::new(ValidatorConfig {
+        expected_group: cfg.group_size,
+        // The quota every honest worker generates — what the stake sizing
+        // below assumes a submission can claim at most.
+        max_rollouts_per_sub: cfg.prompts_per_sub * cfg.group_size,
+        ..Default::default()
+    });
     let reward_cfg = RewardConfig::default();
     let (max_new, max_seq) = (128usize, 512usize);
 
@@ -285,9 +329,13 @@ pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
             Tx::Stake { pool_id: 1, node: identity.address, units: stake },
             &identity,
         )?;
-        if strategy == Strategy::DeepSleeper {
+        if matches!(
+            strategy,
+            Strategy::DeepSleeper | Strategy::Inflator | Strategy::BoundsLiar
+        ) {
             // A long clean record from "before" the run: decays the
-            // verification probability to the configured floor.
+            // verification probability to the configured floor — every
+            // deep strategy defects from its best possible position.
             for _ in 0..cfg.promotion_streak * 64 {
                 ledger.record_verification(1, identity.address, true);
             }
@@ -308,6 +356,10 @@ pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
         ValidatorCommitment::new(cfg.seed ^ 0x5A3D),
         SamplerConfig { sampling_rate: cfg.sampling_rate, promotion_streak: cfg.promotion_streak },
         trust,
+        Arc::clone(&dataset),
+        reward_cfg.clone(),
+        max_new,
+        max_seq,
     );
     let sig_ledger = ledger.clone();
     let signing: Arc<SigOracle> = Arc::new(move |addr, msg: &[u8], sig: &[u8; 32]| {
@@ -326,20 +378,29 @@ pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
             }
             let t = ledger.trust(1, addr);
             let p = t.verify_probability(cfg.sampling_rate, cfg.promotion_streak);
-            let cheat = match node.strategy {
-                Strategy::Honest => false,
-                Strategy::Eager => true,
-                // Sleepers only cheat once full verification has relaxed.
-                Strategy::Sleeper | Strategy::DeepSleeper => p < 1.0,
+            let lie = match node.strategy {
+                Strategy::Honest => Lie::None,
+                Strategy::Eager => Lie::FakeAnswer,
+                // The patient strategies only defect once full
+                // verification has relaxed.
+                Strategy::Sleeper | Strategy::DeepSleeper => {
+                    if p < 1.0 { Lie::FakeAnswer } else { Lie::None }
+                }
+                Strategy::Inflator => {
+                    if p < 1.0 { Lie::InflateCount } else { Lie::None }
+                }
+                Strategy::BoundsLiar => {
+                    if p < 1.0 { Lie::RewardBounds } else { Lie::None }
+                }
             };
-            let sub = build_submission(&dataset, cfg, addr, step, cheat);
+            let sub = build_submission(&dataset, cfg, addr, step, lie);
             let bytes = sub.encode_signed(&node.identity);
             recorded.push((step, bytes.clone()));
             uploads += 1;
-            if cheat {
+            if lie != Lie::None {
                 node.cheats_submitted += 1;
             }
-            match gate.gate(Some(&signing), &validator, bytes) {
+            match gate.gate(Some(&signing), &validator, step, bytes) {
                 GateOutcome::Full(b) => {
                     let v = validation::validate_submission_cpu(
                         &validator, Some(&signing), &b, &dataset, &reward_cfg, step, max_new,
@@ -363,13 +424,27 @@ pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
                 GateOutcome::Skip(s) => {
                     // Admitted on stake + trust: claimed rewards are
                     // banked unverified. For a cheater this is the payoff
-                    // the stake sizing must dominate.
-                    if cheat {
+                    // the stake sizing must dominate. Only the reward lie
+                    // can land here — deterministic lies (count, bounds)
+                    // reject at the gate even on a lost draw.
+                    if lie != Lie::None {
                         node.cheats_admitted += 1;
                         node.cheat_gain += s.rollouts.len() as u64;
                     }
                 }
-                GateOutcome::Done(v) => gated_fingerprints.push(v.fingerprint()),
+                // Mirrors the swarm's verdict loop: a gate reject with a
+                // proven sender zeroes trust and slashes the bond; stale /
+                // unattributed outcomes settle without slashing.
+                GateOutcome::Done(v) => {
+                    if let Verdict::Reject { node: Some(n), why } = &v {
+                        ledger.record_verification(1, *n, false);
+                        ledger.submit(
+                            Tx::Slash { pool_id: 1, node: *n, reason: why.clone() },
+                            &owner,
+                        )?;
+                    }
+                    gated_fingerprints.push(v.fingerprint());
+                }
             }
         }
     }
@@ -407,6 +482,7 @@ pub fn run_cheat_ev(cfg: &CheatEvConfig) -> Result<CheatEvReport> {
         sampled_full: gate.sampled_full.get(),
         skipped: gate.skipped.get(),
         escalated: gate.escalated.get(),
+        rejected_unsampled: gate.rejected_unsampled.get(),
         gated_fingerprints,
         baseline_fingerprints,
     })
@@ -442,10 +518,10 @@ mod tests {
         let r = run_cheat_ev(&CheatEvConfig::default()).unwrap();
         assert_eq!(r.sampling_rate, 0.1);
         // Sampling actually skipped work (honest proven nodes exist), and
-        // every upload was either fully verified or spot-check exempted
-        // (nothing in this harness fails stage 0).
+        // every upload was fully verified, spot-check exempted, or settled
+        // by a deterministic check at the gate (nothing fails stage 0).
         assert!(r.skipped > 0, "no submission was ever spot-check exempted");
-        assert_eq!(r.sampled_full + r.skipped, r.uploads);
+        assert_eq!(r.sampled_full + r.skipped + r.rejected_unsampled, r.uploads);
         // Every strategy that defected ended slashed; honest nodes never.
         assert_eq!(r.honest_slashed(), 0);
         assert_eq!(r.cheaters_escaped(), 0);
@@ -455,5 +531,27 @@ mod tests {
         // The stake sizing makes the *expected* cheat value negative at
         // the floor rate even though individual skips were admitted.
         assert!(r.analytic_cheat_ev() < 0.0, "EV {} not negative", r.analytic_cheat_ev());
+    }
+
+    #[test]
+    fn deterministic_lies_never_profit_even_when_unsampled() {
+        // The review scenario: a deep-trusted node tries to beat the
+        // stake bound not by lying about rewards within bounds but by
+        // inflating the claim itself — more rollouts than the quota, or
+        // out-of-bounds reward values. Both are deterministic CPU checks,
+        // so they must be caught on the *first* defection regardless of
+        // the selection draw: zero admitted, zero banked, slashed.
+        let r = run_cheat_ev(&CheatEvConfig::default()).unwrap();
+        for s in [Strategy::Inflator, Strategy::BoundsLiar] {
+            let n = r.nodes.iter().find(|n| n.strategy == s).unwrap();
+            assert_eq!(n.cheats_submitted, 1, "{s:?} defected more than once");
+            assert_eq!(n.cheats_admitted, 0, "{s:?} had a lie admitted");
+            assert_eq!(n.cheat_gain, 0, "{s:?} banked units from a lie");
+            assert!(n.slashed && n.forfeited == r.stake, "{s:?} kept its stake");
+        }
+        // And the gate actually settled defections without sampling them
+        // (at rate 0.1 at least one of the two loses the draw with
+        // overwhelming probability for this seed; pin it).
+        assert!(r.rejected_unsampled > 0, "every deterministic lie won the draw");
     }
 }

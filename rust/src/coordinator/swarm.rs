@@ -155,13 +155,17 @@ pub struct SwarmStats {
     /// Sampled validation (`sampling-rate < 1.0`): uploads the gate routed
     /// into the full six-stage pipeline...
     pub submissions_sampled_full: Counter,
-    /// ...uploads admitted on stage 0 + schema alone (spot-check exempt;
-    /// their rewards are *claimed*, tracked under "(unverified)" env_pass
-    /// keys)...
+    /// ...uploads admitted without reward replay / engine stages (stage 0
+    /// + schema + the deterministic CPU checks; their rewards are
+    /// *claimed*, tracked under "(unverified)" env_pass keys)...
     pub submissions_skipped_unverified: Counter,
-    /// ...and full verifications forced by a reject on record
-    /// (re-escalation: the node's streak has not re-earned promotion).
+    /// ...full verifications forced by a reject on record (re-escalation:
+    /// the node's streak has not re-earned promotion)...
     pub submissions_escalated: Counter,
+    /// ...and uploads that lost the selection draw but failed one of the
+    /// gate's deterministic checks — settled at the gate, neither sampled
+    /// nor skipped.
+    pub submissions_rejected_unsampled: Counter,
     /// Rollouts buffered from skipped submissions — trained on under
     /// claimed rewards, backed by the sender's slashable stake.
     pub rollouts_admitted_unverified: Counter,
@@ -435,6 +439,15 @@ impl Swarm {
                 // TOPLOC enforces the same off-policy window as the trainer
                 // buffer (§3.2) — not just exact-version existence.
                 max_policy_lag: cfg.async_level,
+                // Per-submission rollout cap = the per-worker quota every
+                // worker (including the evil one) actually generates. The
+                // stake sized below assumes a submission can claim at most
+                // this many reward units; the validator enforces it on the
+                // full path and the sampling gate's skip path alike, so a
+                // skipped upload cannot inflate its claimable value past
+                // what the bond prices in.
+                max_rollouts_per_sub: cfg.prompts_per_step.div_ceil(cfg.n_workers)
+                    * cfg.group_size,
                 ..Default::default()
             };
             let max_new = cfg.max_new_tokens;
@@ -473,15 +486,25 @@ impl Swarm {
                 let trust_ledger = ledger.clone();
                 let trust: Arc<TrustOracle> = Arc::new(move |node| trust_ledger.trust(1, node));
                 SamplingGate::new(
-                    // Commit-reveal secret: derived from the run seed here
-                    // (a production validator would draw it privately and
-                    // publish only the hash). Workers never see it.
+                    // Commit-reveal secret: SIM-ONLY derivation from the
+                    // run seed — anyone holding the shared RunConfig can
+                    // reconstruct the selection stream. Sound here only
+                    // because the whole swarm is one deterministic process
+                    // and no worker code path reads it: swarmlint's
+                    // `validator-secret` rule rejects any reference to
+                    // `ValidatorCommitment` (or this XOR constant) from
+                    // worker modules. A production validator draws the
+                    // secret privately and publishes only `commitment()`.
                     ValidatorCommitment::new(cfg.seed ^ 0x5E1EC7),
                     SamplerConfig {
                         sampling_rate: cfg.sampling_rate,
                         promotion_streak: cfg.trust_promotion_streak,
                     },
                     trust,
+                    Arc::clone(&dataset),
+                    cfg.reward.clone(),
+                    max_new,
+                    self.host.spec().max_seq,
                 )
             });
             let gate_validator = Validator::with_registry(vcfg, Arc::clone(&self.registry));
@@ -523,7 +546,12 @@ impl Swarm {
                         None => fulls = wave,
                         Some(g) => {
                             for bytes in wave {
-                                match g.gate(gate_signing.as_ref(), &gate_validator, bytes) {
+                                match g.gate(
+                                    gate_signing.as_ref(),
+                                    &gate_validator,
+                                    current(),
+                                    bytes,
+                                ) {
                                     GateOutcome::Full(b) => fulls.push(b),
                                     GateOutcome::Done(v) => early.push(v),
                                     GateOutcome::Skip(sub) => skips.push(sub),
@@ -532,8 +560,10 @@ impl Swarm {
                         }
                     }
                     // Skipped-but-admitted path: stage 0 proved the sender
-                    // and the payload decoded; replay + staleness checks
-                    // still apply before the claimed rewards are buffered.
+                    // and every deterministic CPU check passed in the gate
+                    // (sanity-minus-reward-replay, overlong, termination);
+                    // replay + staleness checks still apply before the
+                    // claimed rewards are buffered.
                     for sub in skips {
                         if !replay_guard.first_sighting(
                             sub.node_address,
@@ -566,6 +596,13 @@ impl Swarm {
                             continue;
                         }
                         let n = sub.rollouts.len();
+                        if n == 0 {
+                            // Every group soft-dropped by the gate's
+                            // termination screen: nothing to buffer, and
+                            // deliberately no trust movement — a skipped
+                            // upload is not verification evidence.
+                            continue;
+                        }
                         shared.stats.rollouts_admitted_unverified.add(n as u64);
                         // Observability must not shrink to the sampled
                         // subset: claimed rewards are tracked per-env,
@@ -723,6 +760,10 @@ impl Swarm {
                     shared.stats.submissions_sampled_full.add(g.sampled_full.get());
                     shared.stats.submissions_skipped_unverified.add(g.skipped.get());
                     shared.stats.submissions_escalated.add(g.escalated.get());
+                    shared
+                        .stats
+                        .submissions_rejected_unsampled
+                        .add(g.rejected_unsampled.get());
                 }
             })?
         };
@@ -1029,6 +1070,7 @@ impl Shared {
         s.submissions_sampled_full.add(self.stats.submissions_sampled_full.get());
         s.submissions_skipped_unverified.add(self.stats.submissions_skipped_unverified.get());
         s.submissions_escalated.add(self.stats.submissions_escalated.get());
+        s.submissions_rejected_unsampled.add(self.stats.submissions_rejected_unsampled.get());
         s.rollouts_admitted_unverified.add(self.stats.rollouts_admitted_unverified.get());
         for (env, attempts, passes) in self.stats.env_pass.snapshot() {
             s.env_pass.add(&env, attempts, passes);

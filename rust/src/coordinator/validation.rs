@@ -297,13 +297,22 @@ pub type TrustOracle = dyn Fn(u64) -> TrustState + Send + Sync;
 pub enum GateOutcome {
     /// Selected for the full six-stage pipeline (raw bytes pass through).
     Full(Vec<u8>),
-    /// Spot-check exempt this time: stage 0 proved the sender and the
-    /// payload decoded cleanly, so the decoded submission may be admitted
-    /// to the `RolloutBuffer` with its *claimed* rewards (flagged
-    /// unverified in stats). The caller still owes it a replay check.
+    /// Spot-check exempt this time: stage 0 proved the sender, the payload
+    /// decoded cleanly, and every *deterministic* CPU check passed —
+    /// sanity minus the env reward replay ([`Validator::check_sanity_pre`]:
+    /// staleness, seed/rollout-count, group ids, value/reward bounds, the
+    /// per-submission rollout cap) plus the stage-3 termination screen
+    /// (failing groups already soft-dropped, exactly as on the full path).
+    /// Only then may the submission's *claimed* rewards be admitted to the
+    /// `RolloutBuffer` (flagged unverified in stats): what was sampled
+    /// away is solely the expensive reward replay and the engine stages,
+    /// whose lies are the ones stake + spot checks price in. May carry
+    /// zero rollouts (all groups termination-dropped) — callers must not
+    /// treat that as verification evidence.
     Skip(Submission),
     /// Settled before selection: forged/unsigned envelopes, undecodable
-    /// payloads, or identity lies — cheap proof beats any sampling rate.
+    /// payloads, identity lies, or a deterministic-check failure on the
+    /// skip path — cheap proof beats any sampling rate.
     Done(Verdict),
 }
 
@@ -319,13 +328,25 @@ pub struct SamplingGate {
     commitment: ValidatorCommitment,
     cfg: SamplerConfig,
     trust: Arc<TrustOracle>,
+    /// Deterministic-check inputs for the skip path: a skipped submission
+    /// still runs every cheap CPU check (see [`GateOutcome::Skip`]) —
+    /// only the env reward replay and the engine stages are sampled away.
+    dataset: Arc<Dataset>,
+    reward_cfg: RewardConfig,
+    max_new: usize,
+    max_seq: usize,
     /// Uploads routed into the full pipeline.
     pub sampled_full: Counter,
-    /// Uploads admitted without stages 1–5 (stage 0 + decode only).
+    /// Uploads admitted without reward replay / engine stages (stage 0 +
+    /// decode + the deterministic CPU checks only).
     pub skipped: Counter,
     /// Full verifications forced by a reject on record (re-escalation):
     /// the node's streak has not yet re-crossed the promotion threshold.
     pub escalated: Counter,
+    /// Uploads that lost the selection draw but *failed* a deterministic
+    /// check: settled (rejected/stale) at the gate without ever counting
+    /// as sampled or skipped.
+    pub rejected_unsampled: Counter,
 }
 
 impl SamplingGate {
@@ -333,25 +354,37 @@ impl SamplingGate {
         commitment: ValidatorCommitment,
         cfg: SamplerConfig,
         trust: Arc<TrustOracle>,
+        dataset: Arc<Dataset>,
+        reward_cfg: RewardConfig,
+        max_new: usize,
+        max_seq: usize,
     ) -> SamplingGate {
         SamplingGate {
             commitment,
             cfg,
             trust,
+            dataset,
+            reward_cfg,
+            max_new,
+            max_seq,
             sampled_full: Counter::default(),
             skipped: Counter::default(),
             escalated: Counter::default(),
+            rejected_unsampled: Counter::default(),
         }
     }
 
-    /// Gate one raw upload. `validator` is only used for payload decoding
-    /// on the skip path (stage 1's schema check still applies — a skipped
-    /// submission must at least be *well-formed* before its rewards are
-    /// trusted).
+    /// Gate one raw upload. On the skip path `validator` runs stage 1's
+    /// schema check *and* the deterministic subset of stages 2–3
+    /// ([`Validator::check_sanity_pre`] + overlong/termination screens):
+    /// a submission only rides on stake + trust past the checks a replay
+    /// could not run from the file alone. `current` is the trainer's
+    /// policy version — the same staleness input the full pipeline gets.
     pub fn gate(
         &self,
         signing: Option<&Arc<SigOracle>>,
         validator: &Validator,
+        current: u64,
         bytes: Vec<u8>,
     ) -> GateOutcome {
         let env = match check_envelope(signing, &bytes) {
@@ -411,6 +444,53 @@ impl SamplingGate {
                     env.submission_idx
                 ),
             });
+        }
+        // Deterministic CPU checks, mirroring `cpu_stages` minus the env
+        // reward replay. Without these, a skipped upload could claim
+        // arbitrarily many rollouts at arbitrary reward values under
+        // colliding group ids — unbounded claimable value against a fixed
+        // forfeitable stake, which breaks the negative-EV sizing
+        // (`protocol::min_negative_ev_stake` assumes at most the
+        // per-submission cap in reward units per upload).
+        let node = env.node_address;
+        if let Err(e) =
+            validator.check_sanity_pre(&sub, &self.dataset, &self.reward_cfg, current, self.max_new)
+        {
+            self.rejected_unsampled.inc();
+            return GateOutcome::Done(match e {
+                Rejection::StalePolicy { submitted, current } => {
+                    Verdict::Stale { node, submitted, current, n_rollouts: sub.rollouts.len() }
+                }
+                other => Verdict::Reject { node: Some(node), why: format!("{other:?}") },
+            });
+        }
+        if let Some((i, w)) =
+            sub.rollouts.iter().enumerate().find(|(_, w)| w.rollout.tokens.len() > self.max_seq)
+        {
+            self.rejected_unsampled.inc();
+            return GateOutcome::Done(Verdict::Reject {
+                node: Some(node),
+                why: format!(
+                    "rollout {i}: {} tokens exceeds max_seq {}",
+                    w.rollout.tokens.len(),
+                    self.max_seq
+                ),
+            });
+        }
+        // Stage-3 termination screen, soft exactly as on the full path:
+        // failing groups are discarded, never slashed. The submission may
+        // come out empty — still a Skip (the caller drops it from the
+        // buffer), never an Accept: a skipped upload must not manufacture
+        // clean-verification trust evidence.
+        let mut sub = sub;
+        let mut bad_groups: BTreeSet<u64> = BTreeSet::new();
+        for w in &sub.rollouts {
+            if validator.check_termination(w, self.max_new, self.max_seq).is_err() {
+                bad_groups.insert(w.rollout.group_id);
+            }
+        }
+        if !bad_groups.is_empty() {
+            sub.rollouts.retain(|w| !bad_groups.contains(&w.rollout.group_id));
         }
         self.skipped.inc();
         GateOutcome::Skip(sub)

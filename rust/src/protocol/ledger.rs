@@ -57,22 +57,36 @@ pub struct TrustState {
     pub rejects: u64,
 }
 
+/// Hard floor on the effective verification probability, shared by
+/// everything that reasons about it: [`TrustState::verify_probability`]
+/// never returns less than this, [`min_negative_ev_stake`] never sizes a
+/// bond for a rate below it, and the config layer clamps `sampling-rate`
+/// up to it. One constant, three call sites — so the probability the EV
+/// bound assumes is always a probability the gate actually enforces. A
+/// configured rate of 0 ("never verify promoted nodes") would otherwise
+/// make the trust decay `promotion_streak / clean_streak` the only floor,
+/// which decays without bound as the streak grows: the stake sized
+/// against `1e-6` would correspond to no real verification probability.
+pub const MIN_SAMPLING_RATE: f64 = 1e-3;
+
 impl TrustState {
     /// Probability that this node's next submission is fully verified.
     ///
     /// New, low-trust, or recently-flagged nodes (streak below
     /// `promotion_streak`) are always fully verified. Proven nodes decay
     /// smoothly as `promotion_streak / clean_streak`, floored at
-    /// `rate_floor` (the configured `sampling-rate`). A reject zeroes the
-    /// streak, which re-escalates the node to full verification until it
-    /// earns promotion again.
+    /// `rate_floor` (the configured `sampling-rate`) — itself floored at
+    /// [`MIN_SAMPLING_RATE`], so the probability the stake sizing assumes
+    /// is a probability this function can actually return. A reject
+    /// zeroes the streak, which re-escalates the node to full
+    /// verification until it earns promotion again.
     pub fn verify_probability(&self, rate_floor: f64, promotion_streak: u64) -> f64 {
         let promotion = promotion_streak.max(1);
         if self.clean_streak < promotion {
             return 1.0;
         }
         let decayed = promotion as f64 / self.clean_streak as f64;
-        decayed.max(rate_floor.clamp(0.0, 1.0))
+        decayed.max(rate_floor.clamp(MIN_SAMPLING_RATE, 1.0))
     }
 }
 
@@ -85,8 +99,12 @@ impl TrustState {
 /// cheat: `reward * (1 - p) - stake * p`, negative iff
 /// `stake > reward * (1 - p) / p`. We scale that bound by `margin` and add
 /// one unit so the inequality is strict even after integer rounding.
+///
+/// `min_rate` is clamped to the same [`MIN_SAMPLING_RATE`] floor
+/// [`TrustState::verify_probability`] enforces, so the `p` in the bound is
+/// the worst rate the gate can actually reach — never a fictitious one.
 pub fn min_negative_ev_stake(reward_units: u64, min_rate: f64, margin: f64) -> u64 {
-    let p = min_rate.clamp(1e-6, 1.0);
+    let p = min_rate.clamp(MIN_SAMPLING_RATE, 1.0);
     let bound = reward_units as f64 * (1.0 - p) / p * margin.max(1.0);
     bound.ceil() as u64 + 1
 }
@@ -520,6 +538,25 @@ mod tests {
         }
         // Full verification still demands a nonzero bond (strictness +1).
         assert_eq!(min_negative_ev_stake(10, 1.0, 2.0), 1);
+    }
+
+    #[test]
+    fn rate_zero_floors_to_a_real_verification_probability() {
+        // A configured sampling-rate of 0 must not open a gap between the
+        // rate stakes are sized for and the rate the gate enforces: both
+        // clamp to the same MIN_SAMPLING_RATE floor.
+        let deep = TrustState { clean_streak: u64::MAX, verified_clean: u64::MAX, rejects: 0 };
+        let p = deep.verify_probability(0.0, 8);
+        assert_eq!(p, MIN_SAMPLING_RATE, "floor at rate 0 must be the shared constant");
+        assert_eq!(
+            min_negative_ev_stake(100, 0.0, 2.0),
+            min_negative_ev_stake(100, MIN_SAMPLING_RATE, 2.0),
+            "stake at rate 0 must be sized against the same floor the gate enforces"
+        );
+        // And the EV bound holds at the probability actually reachable.
+        let stake = min_negative_ev_stake(100, 0.0, 2.0);
+        let ev = 100.0 * (1.0 - p) - stake as f64 * p;
+        assert!(ev < 0.0, "stake {stake} leaves positive EV {ev} at the real floor {p}");
     }
 
     #[test]

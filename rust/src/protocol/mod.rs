@@ -33,6 +33,6 @@ pub mod worker;
 
 pub use discovery::{DiscoveryServer, DiscoveryService, NodeInfo};
 pub use identity::{Identity, SigCheck};
-pub use ledger::{min_negative_ev_stake, Ledger, LedgerError, TrustState, Tx};
+pub use ledger::{min_negative_ev_stake, Ledger, LedgerError, TrustState, Tx, MIN_SAMPLING_RATE};
 pub use orchestrator::{NodeStatus, Orchestrator, OrchestratorServer, TaskSpec};
 pub use worker::{HardwareSpec, SharedVolume, TaskHandler, Worker};

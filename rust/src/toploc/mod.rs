@@ -67,12 +67,20 @@
 //!
 //! With `sampling-rate < 1.0` a pre-stage
 //! (`coordinator::validation::SamplingGate`) runs *before* the pipeline
-//! above and decides, per submission, whether stages 1–5 run at all.
-//! Stage 0 is never sampled away: every upload's envelope is verified,
-//! and a skipped submission additionally has its payload decoded and its
-//! claimed identity cross-checked before its *claimed* rewards are
-//! admitted to the rollout buffer (counted `rollouts_admitted_unverified`
-//! and flagged "(unverified)" in the per-env pass table).
+//! above and decides, per submission, whether the *expensive* checks run
+//! at all. Only the env reward replay (stage 2's costly half) and the
+//! engine stages (4–5) are ever sampled away. Everything deterministic
+//! and cheap always runs, skip or no skip: stage 0 (envelope), stage 1
+//! (decode/schema), the identity cross-check, and the deterministic
+//! subset of stages 2–3 ([`Validator::check_sanity_pre`]: staleness,
+//! seed/rollout-count, group ids, value/reward bounds, the
+//! per-submission rollout cap, plus the overlong and termination
+//! screens). Only then are a skipped submission's *claimed* rewards
+//! admitted to the rollout buffer (counted
+//! `rollouts_admitted_unverified` and flagged "(unverified)" in the
+//! per-env pass table). The cap matters economically: the task stream is
+//! prefix-stable, so without it a skipped upload could claim unboundedly
+//! many seed-consistent rollouts against a fixed stake.
 //!
 //! **Trust model** (`protocol::TrustState`): a node's verification
 //! probability starts at 1.0 and stays there until it banks
@@ -101,7 +109,11 @@
 //! sizes stakes with `protocol::min_negative_ev_stake` at the *floor*
 //! rate (the cheater's best case) times a safety margin
 //! (`trust-stake-margin`), so the inequality holds at every trust level
-//! and every configured `sampling-rate`. The CI `cheat-ev` job
+//! and every configured `sampling-rate`. `R` is a real bound, not an
+//! assumption: the validator's `max_rollouts_per_sub` cap (set to the
+//! per-worker quota) and the value-bounds check are enforced on the skip
+//! path too, so no submission can *claim* more reward units than the
+//! stake was sized against. The CI `cheat-ev` job
 //! (`bin/cheat_ev_bench`, `coordinator::cheatev`) proves it end-to-end:
 //! eager, sleeper and deep-sleeper cheaters all finish with negative
 //! realized value at rates 1.0/0.25/0.1, no honest node is slashed, and

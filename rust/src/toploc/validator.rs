@@ -54,6 +54,15 @@ pub struct ValidatorConfig {
     pub max_policy_lag: u64,
     /// Group size each submission must carry per prompt.
     pub expected_group: usize,
+    /// Hard cap on rollouts per submission (0 = unlimited). The seed
+    /// check pins *which* tasks a submission of a given size must carry,
+    /// but the task stream is prefix-stable — nothing stops a node from
+    /// drawing more prompts than its quota and claiming reward on all of
+    /// them. Stake sizing (`protocol::min_negative_ev_stake`) assumes a
+    /// bounded reward per submission, so the swarm sets this to the
+    /// per-worker quota and the validator enforces it — on the full path
+    /// and on the sampling gate's spot-check-exempt path alike.
+    pub max_rollouts_per_sub: usize,
 }
 
 impl Default for ValidatorConfig {
@@ -68,6 +77,7 @@ impl Default for ValidatorConfig {
             prob_median_tol: 0.10,
             max_policy_lag: 5,
             expected_group: 4,
+            max_rollouts_per_sub: 0,
         }
     }
 }
@@ -106,8 +116,54 @@ impl Validator {
         current_step: u64,
         max_completion: usize,
     ) -> Result<(), Rejection> {
+        self.sanity_checks(sub, dataset, reward_cfg, current_step, max_completion, true)
+    }
+
+    /// The cheap deterministic subset of stage 2, for the sampling gate's
+    /// spot-check-exempt path: staleness, the per-submission rollout cap,
+    /// fixed-data-sampling seed match, group-id enforcement, and every
+    /// value-bounds check — everything except the env reward replay (the
+    /// one stage-2 check whose cost scales with completion length).
+    /// Sampling may only buy a pass on *expensive* re-verification; a
+    /// skipped upload that fails any of these carries a provable lie and
+    /// is slashed like a fully-verified one, so claimed rewards admitted
+    /// on trust stay bounded by exactly the assumptions
+    /// [`protocol::min_negative_ev_stake`](crate::protocol::min_negative_ev_stake)
+    /// sizes stakes under.
+    pub fn check_sanity_pre(
+        &self,
+        sub: &Submission,
+        dataset: &Dataset,
+        reward_cfg: &RewardConfig,
+        current_step: u64,
+        max_completion: usize,
+    ) -> Result<(), Rejection> {
+        self.sanity_checks(sub, dataset, reward_cfg, current_step, max_completion, false)
+    }
+
+    /// Shared stage-2 body. `replay_rewards` gates only the env reward
+    /// re-verification; check order is otherwise identical on both paths
+    /// so full-pipeline verdicts never depend on which caller ran first.
+    fn sanity_checks(
+        &self,
+        sub: &Submission,
+        dataset: &Dataset,
+        reward_cfg: &RewardConfig,
+        current_step: u64,
+        max_completion: usize,
+        replay_rewards: bool,
+    ) -> Result<(), Rejection> {
         if sub.step + self.cfg.max_policy_lag < current_step {
             return Err(Rejection::StalePolicy { submitted: sub.step, current: current_step });
+        }
+        // Per-submission volume cap: bounds the reward a single upload can
+        // claim, which the negative-EV stake sizing relies on.
+        let cap = self.cfg.max_rollouts_per_sub;
+        if cap > 0 && sub.rollouts.len() > cap {
+            return Err(Rejection::ValueBounds(format!(
+                "{} rollouts exceeds per-submission cap {cap}",
+                sub.rollouts.len()
+            )));
         }
         // Fixed data sampling: reproduce the node's draw. Each sampled task
         // id must appear expected_group times (grouped by prompt).
@@ -171,15 +227,21 @@ impl Validator {
             }) {
                 return Err(Rejection::ValueBounds("illegal token id in sequence".into()));
             }
-            // Re-verify the claimed task reward against the environment.
+            // Re-verify the claimed task reward against the environment —
+            // the one expensive stage-2 check, and the only one the
+            // sampling gate's skip path is allowed to defer to spot
+            // checks. The task lookup itself stays on both paths (a
+            // nonexistent task id is a cheap, deterministic lie).
             let task = match dataset.get(r.task_id) {
                 Some(t) => t,
                 None => return Err(Rejection::ValueBounds(format!("unknown task {}", r.task_id))),
             };
-            let completion = crate::data::tokenizer::decode_clean(&r.tokens[r.prompt_len..]);
-            let want_reward = crate::rl::reward::task_reward(&self.registry, task, &completion);
-            if (want_reward - r.task_reward).abs() > 1e-4 {
-                return Err(Rejection::RewardMismatch { task_id: r.task_id });
+            if replay_rewards {
+                let completion = crate::data::tokenizer::decode_clean(&r.tokens[r.prompt_len..]);
+                let want_reward = crate::rl::reward::task_reward(&self.registry, task, &completion);
+                if (want_reward - r.task_reward).abs() > 1e-4 {
+                    return Err(Rejection::RewardMismatch { task_id: r.task_id });
+                }
             }
         }
         Ok(())
@@ -547,6 +609,134 @@ mod tests {
         assert!(matches!(
             v.check_sanity(&headless, &dataset, &reward_cfg, 3, 128),
             Err(Rejection::ValueBounds(_))
+        ));
+    }
+
+    /// Build an honest submission for the cap / cheap-subset tests:
+    /// `n_prompts` tasks from the seed formula, `cheat_rewards` fabricates
+    /// completions while still claiming 1.0 (the lie only the expensive
+    /// reward replay can catch).
+    fn seeded_submission(
+        dataset: &Dataset,
+        n_prompts: usize,
+        group: usize,
+        cheat_rewards: bool,
+    ) -> Submission {
+        let seed = node_sample_seed(9, 3, 0);
+        let base = crate::rl::group_id_base(9, 3, 0);
+        let ids = dataset.sample_for(seed, n_prompts);
+        let mut rollouts = Vec::new();
+        for (pi, id) in ids.iter().enumerate() {
+            let task = dataset.get(*id).unwrap();
+            for _ in 0..group {
+                let mut tokens = vec![crate::data::tokenizer::BOS];
+                tokens.extend(crate::data::tokenizer::encode(&task.prompt));
+                let plen = tokens.len();
+                if cheat_rewards {
+                    tokens.extend(crate::data::tokenizer::encode("wrong"));
+                } else {
+                    tokens.extend(crate::data::tokenizer::encode(task.answer()));
+                }
+                tokens.push(crate::data::tokenizer::EOS);
+                let n = tokens.len() - plen;
+                let mut w = wire(tokens, plen, true, 0.9);
+                w.rollout.task_id = *id;
+                w.rollout.group_id = base + pi as u64;
+                w.rollout.task_reward = 1.0;
+                w.rollout.reward = 1.0;
+                w.rollout.sampled_probs = vec![0.5; n];
+                rollouts.push(w);
+            }
+        }
+        Submission { node_address: 9, step: 3, submission_idx: 0, rollouts }
+    }
+
+    #[test]
+    fn rollout_cap_bounds_claimable_reward_per_submission() {
+        let dataset = Dataset::generate(
+            &Registry::standard(),
+            &DatasetConfig {
+                mix: crate::tasks::dataset::EnvMix::of(&[("math", 40)]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let reward_cfg = RewardConfig::default();
+        let v = Validator::new(ValidatorConfig {
+            expected_group: 2,
+            max_rollouts_per_sub: 4,
+            ..Default::default()
+        });
+
+        // At the quota: passes both the full and the cheap path.
+        let quota = seeded_submission(&dataset, 2, 2, false);
+        v.check_sanity(&quota, &dataset, &reward_cfg, 3, 128).unwrap();
+        v.check_sanity_pre(&quota, &dataset, &reward_cfg, 3, 128).unwrap();
+
+        // Inflated: the task stream is prefix-stable, so the extra prompts
+        // still match the seed draw — only the cap stops the submission
+        // from claiming unbounded reward units. Both paths reject.
+        let inflated = seeded_submission(&dataset, 8, 2, false);
+        for r in [
+            v.check_sanity(&inflated, &dataset, &reward_cfg, 3, 128),
+            v.check_sanity_pre(&inflated, &dataset, &reward_cfg, 3, 128),
+        ] {
+            match r {
+                Err(Rejection::ValueBounds(msg)) => assert!(msg.contains("cap"), "{msg}"),
+                other => panic!("inflated submission not capped: {other:?}"),
+            }
+        }
+
+        // Uncapped config (0) keeps legacy behavior.
+        let v0 = Validator::new(ValidatorConfig { expected_group: 2, ..Default::default() });
+        v0.check_sanity(&inflated, &dataset, &reward_cfg, 3, 128).unwrap();
+    }
+
+    #[test]
+    fn cheap_subset_catches_everything_but_reward_lies() {
+        let dataset = Dataset::generate(
+            &Registry::standard(),
+            &DatasetConfig {
+                mix: crate::tasks::dataset::EnvMix::of(&[("math", 40)]),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let reward_cfg = RewardConfig::default();
+        let v = Validator::new(ValidatorConfig { expected_group: 2, ..Default::default() });
+        let sub = seeded_submission(&dataset, 2, 2, false);
+
+        // A fabricated completion claimed at 1.0 is exactly what the
+        // cheap subset is allowed to miss (spot checks + stake cover it)…
+        let liar = seeded_submission(&dataset, 2, 2, true);
+        v.check_sanity_pre(&liar, &dataset, &reward_cfg, 3, 128).unwrap();
+        assert!(matches!(
+            v.check_sanity(&liar, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::RewardMismatch { .. })
+        ));
+
+        // …while every deterministic lie still rejects without any replay.
+        let mut bounds = sub.clone();
+        bounds.rollouts[1].rollout.reward = 1e30;
+        assert!(matches!(
+            v.check_sanity_pre(&bounds, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::ValueBounds(_))
+        ));
+        let mut thief = sub.clone();
+        thief.rollouts[2].rollout.group_id = crate::rl::group_id_base(8, 3, 0);
+        assert!(matches!(
+            v.check_sanity_pre(&thief, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::GroupIdMismatch { .. })
+        ));
+        let mut cherry = sub.clone();
+        cherry.rollouts[0].rollout.task_id += 1;
+        assert!(matches!(
+            v.check_sanity_pre(&cherry, &dataset, &reward_cfg, 3, 128),
+            Err(Rejection::SeedMismatch)
+        ));
+        assert!(matches!(
+            v.check_sanity_pre(&sub, &dataset, &reward_cfg, 99, 128),
+            Err(Rejection::StalePolicy { .. })
         ));
     }
 }

@@ -168,6 +168,54 @@ fn float_fold_quiet_on_canonical_fold() {
     assert_eq!(lint_trusted(src), vec![]);
 }
 
+// --- R6: validator-secret --------------------------------------------------
+
+/// Analyze `src` as a worker-side file.
+fn lint_worker(src: &str) -> Vec<Rule> {
+    let cfg = repo_config();
+    analyze_source("protocol/worker.rs", src, &cfg).unsuppressed().map(|v| v.rule).collect()
+}
+
+#[test]
+fn validator_secret_fires_on_commitment_type_and_derivation_constant() {
+    let src = r#"
+        use crate::coordinator::validation::ValidatorCommitment;
+        fn f(seed: u64) -> u64 {
+            seed ^ 0x5E1EC7
+        }
+    "#;
+    let hits = lint_worker(src);
+    assert!(hits.iter().filter(|r| **r == Rule::ValidatorSecret).count() >= 2, "{hits:?}");
+    // Lowercase hex spells the same secret.
+    let lower = "fn g(seed: u64) -> u64 { seed ^ 0x5e1ec7 }";
+    assert_eq!(lint_worker(lower), vec![Rule::ValidatorSecret]);
+}
+
+#[test]
+fn validator_secret_only_applies_to_worker_modules() {
+    // The validator itself (and the coordinator-side churn harness)
+    // legitimately hold commitments; the rule is about the worker side.
+    let src = r#"
+        fn f(c: &ValidatorCommitment) -> [u8; 32] {
+            c.commit_hash()
+        }
+    "#;
+    assert_eq!(lint_trusted(src), vec![]);
+    let cfg = repo_config();
+    let churn: Vec<Rule> = analyze_source("coordinator/churn.rs", src, &cfg)
+        .unsuppressed()
+        .map(|v| v.rule)
+        .collect();
+    assert_eq!(churn, vec![]);
+    assert_eq!(lint_worker(src), vec![Rule::ValidatorSecret]);
+}
+
+#[test]
+fn validator_secret_parse_round_trips() {
+    assert_eq!(Rule::parse("validator-secret"), Some(Rule::ValidatorSecret));
+    assert_eq!(Rule::ValidatorSecret.name(), "validator-secret");
+}
+
 // --- suppressions ----------------------------------------------------------
 
 #[test]
@@ -243,6 +291,7 @@ fn unused_annotations_are_reported_not_silently_dropped() {
 fn lock_cfg() -> Config {
     Config {
         trust_prefixes: vec![],
+        worker_prefixes: vec![],
         lock_order: vec!["m::outer".to_string(), "m::inner".to_string()],
     }
 }

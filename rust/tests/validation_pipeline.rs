@@ -582,13 +582,17 @@ fn sampling_gate_at_rate_one_is_verdict_transparent() {
         ValidatorCommitment::new(0xFEED),
         SamplerConfig { sampling_rate: 1.0, promotion_streak: 8 },
         trust,
+        Arc::clone(&fx.dataset),
+        fx.cfg.reward.clone(),
+        fx.cfg.max_new_tokens,
+        fx.host.spec().max_seq,
     );
     let validator = Validator::new(fx.vcfg());
     let keys = fx.keys();
     let mut fulls: Vec<Vec<u8>> = Vec::new();
     let mut got = Vec::new();
     for bytes in batch.clone() {
-        match gate.gate(Some(&keys), &validator, bytes.clone()) {
+        match gate.gate(Some(&keys), &validator, 1, bytes.clone()) {
             // Pass-through is byte-identical: the pipeline sees exactly
             // the upload the worker signed.
             GateOutcome::Full(b) => {

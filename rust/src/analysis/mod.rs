@@ -18,7 +18,9 @@
 //! Rules R1–R4 apply inside the *trust-critical modules* declared in
 //! [`rules::repo_config`] (`toploc`, `coordinator/validation`,
 //! `rl/rollout_file`, `verifier`, `tasks`, `runtime/scheduler`,
-//! `util/rng`); R5 applies crate-wide; R6 applies inside the
+//! `serving` — served responses are slashable, so its deadline math takes
+//! the clock reading as an argument rather than sampling ambient time —
+//! and `util/rng`); R5 applies crate-wide; R6 applies inside the
 //! *worker-side modules* (`protocol/worker`, `coordinator/gen`,
 //! `runtime/scheduler`). Test modules are exempt.
 //!

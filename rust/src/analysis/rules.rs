@@ -119,6 +119,7 @@ pub fn repo_config() -> Config {
         "verifier/",
         "tasks/",
         "runtime/scheduler.rs",
+        "serving/",
         "util/rng.rs",
     ];
     // Worker-side code: everything a node operator runs to generate and

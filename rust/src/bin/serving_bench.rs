@@ -1,0 +1,130 @@
+//! Serving-SLO benchmark: drive mixed user-query + RL-rollout load
+//! through the serve harness (front-door router, priority lane refill,
+//! signed responses spot-checked by the sampling gate) three ways —
+//! serve-free baseline, mixed load, and mixed load with a forging
+//! server — and emit `BENCH_serving.json` for the regression gate.
+//! Engine-free (MockBackend) and clock-simulated, so every figure is
+//! deterministic and CI-stable.
+//!
+//!   cargo run --release --bin serving_bench
+//!
+//! Hard gates (exit non-zero, not statistics):
+//! - every submitted query is served, and served within its SLO;
+//! - the RL quota completes and stays byte-identical to the solo
+//!   static-reference run under serve co-tenancy;
+//! - mixed-load RL goodput stays >= 70% of the serve-free baseline;
+//! - the forging server is slashed; honest servers never are, and the
+//!   forged query is re-served by an honest worker.
+
+use intellect2::coordinator::{run_serve_load, ServeLoadConfig};
+use intellect2::util::bench::BenchReport;
+
+fn main() -> anyhow::Result<()> {
+    let mixed_cfg = ServeLoadConfig::default();
+    let base_cfg = ServeLoadConfig { queries_per_step: 0, ..ServeLoadConfig::default() };
+    let forger_cfg = ServeLoadConfig { forger: Some(2), ..ServeLoadConfig::default() };
+
+    println!(
+        "baseline: {} steps x {} workers x {} rollouts, no user traffic ...",
+        base_cfg.steps, base_cfg.n_workers, base_cfg.rl_rollouts_per_worker
+    );
+    let base = run_serve_load(&base_cfg)?;
+    anyhow::ensure!(base.rl_byte_equal, "baseline RL bytes diverged from static reference");
+    println!(
+        "baseline: {} rollouts, {} RL tokens over {} ticks ({:.4} tokens/tick)",
+        base.rl_rollouts,
+        base.rl_tokens,
+        base.backend_ticks,
+        base.rl_goodput()
+    );
+
+    println!(
+        "mixed: + {} queries/step (max_new {}, SLO {}ms) ...",
+        mixed_cfg.queries_per_step, mixed_cfg.max_new, mixed_cfg.slo_ms
+    );
+    let mixed = run_serve_load(&mixed_cfg)?;
+    let ttft_p50 = mixed.ttft_percentile_ms(0.5);
+    let ttft_p99 = mixed.ttft_percentile_ms(0.99);
+    println!(
+        "mixed: {}/{} queries served ({} tokens), TTFT p50 {}ms p99 {}ms, {} verified + {} \
+         spot-check skipped",
+        mixed.queries_served,
+        mixed.queries_submitted,
+        mixed.served_tokens,
+        ttft_p50,
+        ttft_p99,
+        mixed.serve_verified,
+        mixed.serve_skipped
+    );
+    anyhow::ensure!(
+        mixed.queries_served == mixed.queries_submitted,
+        "{} of {} queries never served",
+        mixed.queries_submitted - mixed.queries_served,
+        mixed.queries_submitted
+    );
+    anyhow::ensure!(
+        mixed.deadlines_missed == 0,
+        "{} served queries blew their SLO",
+        mixed.deadlines_missed
+    );
+    anyhow::ensure!(mixed.rl_byte_equal, "serve co-tenancy changed RL rollout bytes");
+    anyhow::ensure!(
+        mixed.rl_rollouts == base.rl_rollouts && mixed.rl_tokens == base.rl_tokens,
+        "RL quota changed under serve load: {} rollouts / {} tokens vs {} / {}",
+        mixed.rl_rollouts,
+        mixed.rl_tokens,
+        base.rl_rollouts,
+        base.rl_tokens
+    );
+    anyhow::ensure!(mixed.honest_slashed == 0, "honest server slashed under mixed load");
+
+    // Goodput retention: RL tokens per backend call, mixed over baseline.
+    let retention = mixed.rl_goodput() / base.rl_goodput();
+    println!(
+        "goodput: {:.4} vs {:.4} RL tokens/tick ({:.0}% retained)",
+        mixed.rl_goodput(),
+        base.rl_goodput(),
+        retention * 100.0
+    );
+    anyhow::ensure!(
+        retention >= 0.7,
+        "RL goodput under serve load fell below 70% of serve-free ({:.0}%)",
+        retention * 100.0
+    );
+
+    println!("forger: worker {} forges its served completions ...", 2);
+    let forged = run_serve_load(&forger_cfg)?;
+    println!(
+        "forger: {} rejected, {} forger slashed / {} honest slashed, {}/{} queries still served",
+        forged.serve_rejected,
+        forged.forged_slashed,
+        forged.honest_slashed,
+        forged.queries_served,
+        forged.queries_submitted
+    );
+    anyhow::ensure!(forged.forged_slashed == 1, "forging server escaped the slash");
+    anyhow::ensure!(forged.honest_slashed == 0, "honest server slashed in the forger run");
+    anyhow::ensure!(
+        forged.queries_served == forged.queries_submitted,
+        "forged query was dropped instead of re-served"
+    );
+
+    // Served tokens per simulated second of fleet time (ticks are the
+    // simulated clock; tick_ms converts to wall-equivalent seconds).
+    let sim_secs = (mixed.backend_ticks * mixed_cfg.tick_ms) as f64 / 1e3;
+    let served_tokens_per_s = mixed.served_tokens as f64 / sim_secs.max(1e-9);
+
+    let mut rep = BenchReport::new("serving");
+    rep.metric("ttft_p50_ms", ttft_p50 as f64);
+    rep.metric("ttft_p99_ms", ttft_p99 as f64);
+    rep.metric("served_tokens_per_s", served_tokens_per_s);
+    rep.metric("rl_goodput_retention", retention);
+    rep.metric("queries_served", mixed.queries_served as f64);
+    rep.metric(
+        "serve_token_share",
+        mixed.served_tokens as f64 / (mixed.served_tokens + mixed.rl_tokens).max(1) as f64,
+    );
+    let path = rep.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -125,6 +125,39 @@ fn main() -> anyhow::Result<()> {
         println!("{}", render_table(&["sampled validation", "submissions"], &gate_rows));
     }
 
+    // Serve mode: the same fleet answering user traffic. The swarm run
+    // above is rollout-only, so the serving columns come from the
+    // engine-free mixed-load harness (same scheduler, same trust stack,
+    // simulated SLO clock — deterministic figures).
+    let serve_cfg = intellect2::coordinator::ServeLoadConfig::default();
+    let serve = intellect2::coordinator::run_serve_load(&serve_cfg)?;
+    let serve_ticks_ms = (serve.backend_ticks * serve_cfg.tick_ms).max(1) as f64;
+    let serve_rows = vec![
+        vec![
+            "queries served".into(),
+            format!("{} of {}", serve.queries_served, serve.queries_submitted),
+        ],
+        vec!["TTFT p50".into(), format!("{} ms", serve.ttft_percentile_ms(0.5))],
+        vec!["TTFT p99".into(), format!("{} ms", serve.ttft_percentile_ms(0.99))],
+        vec![
+            "served tokens/s".into(),
+            format!("{:.0}", serve.served_tokens as f64 / (serve_ticks_ms / 1e3)),
+        ],
+        vec![
+            "serve share of lane slots".into(),
+            format!(
+                "{:.1}%",
+                100.0 * serve.served_tokens as f64
+                    / (serve.served_tokens + serve.rl_tokens).max(1) as f64
+            ),
+        ],
+        vec![
+            "spot-checks".into(),
+            format!("{} full + {} skipped", serve.serve_verified, serve.serve_skipped),
+        ],
+    ];
+    println!("{}", render_table(&["serving (mixed-load harness)", "value"], &serve_rows));
+
     // Off-policy staleness accounting (the two-step-async correctness knob).
     let hist = result.stats.staleness_hist();
     let trained: u64 = hist.iter().map(|(_, n)| n).sum();

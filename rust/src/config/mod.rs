@@ -131,6 +131,11 @@ pub struct RunConfig {
     pub lr_warmup_steps: u64,
     /// Offline difficulty filter (pass@k band) applied before training.
     pub offline_filter: bool,
+    /// Serve mode: decode lanes each worker advertises for user traffic
+    /// on its heartbeats (`serving::ServeCapacity`). 0 — the default for
+    /// the RL-only swarm — advertises nothing, so the orchestrator never
+    /// routes queries and the wire format matches pre-serving builds.
+    pub serve_lanes: u32,
 }
 
 impl Default for RunConfig {
@@ -165,6 +170,7 @@ impl Default for RunConfig {
             trust_stake_margin: 2.0,
             lr_warmup_steps: 5,
             offline_filter: false,
+            serve_lanes: 0,
         }
     }
 }
@@ -214,6 +220,7 @@ impl RunConfig {
         self.trust_promotion_streak =
             a.u64_or("trust-promotion-streak", self.trust_promotion_streak).max(1);
         self.trust_stake_margin = a.f64_or("trust-stake-margin", self.trust_stake_margin).max(1.0);
+        self.serve_lanes = a.u64_or("serve-lanes", u64::from(self.serve_lanes)) as u32;
         if a.has_flag("offline-filter") {
             self.offline_filter = true;
         }

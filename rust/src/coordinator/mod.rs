@@ -7,6 +7,7 @@ pub mod cheatev;
 pub mod churn;
 pub mod gen;
 pub mod pretrain;
+pub mod serve;
 pub mod step;
 pub mod swarm;
 pub mod sync_driver;
@@ -16,10 +17,11 @@ pub use batcher::{train_on_rollouts, StepReport};
 pub use cheatev::{run_cheat_ev, CheatEvConfig, CheatEvReport, NodeOutcome, Strategy};
 pub use churn::{run_churn, ChurnConfig, ChurnReport};
 pub use gen::{group_id_base, RolloutGenerator};
+pub use serve::{run_serve_load, ServeLoadConfig, ServeLoadReport};
 pub use step::{filter_groups, record_step, FilterOutcome};
 pub use swarm::{StepTiming, Swarm, SwarmResult, SwarmStats};
 pub use sync_driver::SyncPipeline;
 pub use validation::{
-    GateOutcome, ReplayGuard, SamplerConfig, SamplingGate, SigOracle, SubmissionQueue,
-    TrustOracle, ValidationPipeline, ValidatorCommitment, Verdict,
+    GateOutcome, ReplayGuard, SamplerConfig, SamplingGate, ServeGateOutcome, SigOracle,
+    SubmissionQueue, TrustOracle, ValidationPipeline, ValidatorCommitment, Verdict,
 };

@@ -796,10 +796,18 @@ impl Swarm {
                     &worker.identity,
                 )?;
             }
-            // Heartbeat loop (health only; rollout work is the main loop).
-            worker.start_heartbeat(
+            // Heartbeat loop (health only; rollout work is the main
+            // loop). With `--serve-lanes > 0` each beat also advertises
+            // serving capacity, making the worker eligible for routed
+            // user queries (serve mode; `crate::serving`).
+            let serve_cap = (cfg.serve_lanes > 0).then(|| crate::serving::ServeCapacity {
+                free_lanes: cfg.serve_lanes,
+                max_tokens: self.host.spec().max_seq as u32,
+            });
+            worker.start_heartbeat_with_capacity(
                 _orch_srv.url(),
                 Duration::from_millis(300),
+                serve_cap,
                 Arc::new(|_, _| Ok("hb".into())),
             );
 

@@ -36,6 +36,7 @@ use crate::protocol::{SigCheck, TrustState};
 use crate::rl::reward::RewardConfig;
 use crate::rl::rollout_file::{Envelope, Submission};
 use crate::runtime::{EngineHost, ModelSpec, ParamSet};
+use crate::serving::{serve_submission_idx, ServedResponse};
 use crate::tasks::dataset::Dataset;
 use crate::toploc::pipeline::{plan_prefills, LaneReq};
 use crate::toploc::{Rejection, Validator};
@@ -316,6 +317,24 @@ pub enum GateOutcome {
     Done(Verdict),
 }
 
+/// What the serve spot-check decided for one signed [`ServedResponse`]
+/// upload (see [`SamplingGate::gate_served`]).
+pub enum ServeGateOutcome {
+    /// Admitted on stake + trust: stage 0 proved the signer, the response
+    /// decoded cleanly and passed every cheap deterministic check, but the
+    /// completion was *not* recomputed this time.
+    Skip(ServedResponse),
+    /// Selected for full verification and the deterministic recompute
+    /// reproduced the served completion token for token.
+    Verified(ServedResponse),
+    /// An identical `(node, step, query)` served response was already
+    /// accepted — dropped, never slashed (same policy as rollout replays).
+    Replay { node: u64, query_id: u64 },
+    /// Settled: forged/unsigned envelope, staleness, a proven cheap-check
+    /// lie, or a recompute mismatch (the slashing outcome).
+    Done(Verdict),
+}
+
 /// The sampling pre-stage: decides, per upload, whether the six-stage
 /// pipeline runs or the submission is admitted on stake + trust.
 ///
@@ -347,6 +366,10 @@ pub struct SamplingGate {
     /// check: settled (rejected/stale) at the gate without ever counting
     /// as sampled or skipped.
     pub rejected_unsampled: Counter,
+    /// Served responses routed into full deterministic recompute.
+    pub served_full: Counter,
+    /// Served responses admitted on stake + trust (cheap checks only).
+    pub served_skipped: Counter,
 }
 
 impl SamplingGate {
@@ -371,6 +394,8 @@ impl SamplingGate {
             skipped: Counter::default(),
             escalated: Counter::default(),
             rejected_unsampled: Counter::default(),
+            served_full: Counter::default(),
+            served_skipped: Counter::default(),
         }
     }
 
@@ -494,6 +519,157 @@ impl SamplingGate {
         }
         self.skipped.inc();
         GateOutcome::Skip(sub)
+    }
+
+    /// Spot-check one signed served response through the same trust
+    /// machinery as rollout uploads. Serve-mode completions are
+    /// deterministic in public fields (`serving::serve_rng(step,
+    /// query_id)` over the response's own prompt), so `recompute` — any
+    /// closure that replays the decode under the claimed policy step —
+    /// returns the full expected token sequence and a mismatch is a
+    /// *proven* forgery by the envelope's signer: the slashing outcome.
+    ///
+    /// Ordering mirrors [`SamplingGate::gate`]: stage 0 (envelope) first,
+    /// then decode + identity agreement, staleness, the cheap
+    /// deterministic checks every response must pass (probs shape/range,
+    /// EOS-termination plausibility against
+    /// [`Validator`](crate::toploc::Validator)'s `eos_prob_min`), then the
+    /// replay guard (keyed on the [`serve_submission_idx`]-namespaced
+    /// index, so serve replays can never shadow rollout replays), and only
+    /// then the trust-weighted selection draw. `recompute` failing is an
+    /// [`Verdict::EngineFailure`] — our side broke, nothing proven, no
+    /// slash. In legacy unsigned mode there is no identity to hang trust
+    /// on, so every response is fully recomputed.
+    pub fn gate_served(
+        &self,
+        signing: Option<&Arc<SigOracle>>,
+        validator: &crate::toploc::Validator,
+        current: u64,
+        replay: &mut ReplayGuard,
+        bytes: &[u8],
+        recompute: &dyn Fn(&ServedResponse) -> anyhow::Result<Vec<i32>>,
+    ) -> ServeGateOutcome {
+        let (payload, proven) = match check_envelope(signing, bytes) {
+            Stage0::Done(v) => return ServeGateOutcome::Done(v),
+            Stage0::Payload { payload, proven } => (payload, proven),
+        };
+        let resp = match ServedResponse::decode(payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // With a verified envelope the garbage is provably the
+                // signer's; without one there is no attribution.
+                return ServeGateOutcome::Done(Verdict::Reject {
+                    node: proven.as_ref().map(|env| env.node_address),
+                    why: format!("served response: {e}"),
+                });
+            }
+        };
+        if let Some(env) = &proven {
+            if resp.node_address != env.node_address
+                || resp.step != env.step
+                || serve_submission_idx(resp.query_id) != env.submission_idx
+            {
+                return ServeGateOutcome::Done(Verdict::Reject {
+                    node: Some(env.node_address),
+                    why: format!(
+                        "served response claims node {}/step {}/query {} but the envelope \
+                         proves node {}/step {}/idx {:#x}",
+                        resp.node_address,
+                        resp.step,
+                        resp.query_id,
+                        env.node_address,
+                        env.step,
+                        env.submission_idx
+                    ),
+                });
+            }
+        }
+        let node = resp.node_address;
+        // Staleness: the same off-policy window rollouts live under — a
+        // response decoded under an aged-out policy is dropped, not
+        // slashed (liveness, not dishonesty).
+        if resp.step + validator.cfg.max_policy_lag < current {
+            return ServeGateOutcome::Done(Verdict::Stale {
+                node,
+                submitted: resp.step,
+                current,
+                n_rollouts: 1,
+            });
+        }
+        // Cheap deterministic checks: shape lies no replay is needed to
+        // catch. Token-alphabet checks deliberately stay out — serving
+        // prompts are model-alphabet, not the RL task tokenizer's.
+        let completion_len = resp.tokens.len() - resp.prompt_len;
+        if resp.sampled_probs.len() != completion_len {
+            self.rejected_unsampled.inc();
+            return ServeGateOutcome::Done(Verdict::Reject {
+                node: Some(node),
+                why: format!(
+                    "{} sampled probs for a {completion_len}-token completion",
+                    resp.sampled_probs.len()
+                ),
+            });
+        }
+        if !resp.sampled_probs.iter().all(|p| (0.0..=1.0).contains(p) && p.is_finite()) {
+            self.rejected_unsampled.inc();
+            return ServeGateOutcome::Done(Verdict::Reject {
+                node: Some(node),
+                why: "sampled prob outside [0,1]".into(),
+            });
+        }
+        if resp.finish_eos
+            && (resp.tokens.last() != Some(&crate::data::tokenizer::EOS)
+                || resp.eos_prob <= validator.cfg.eos_prob_min)
+        {
+            self.rejected_unsampled.inc();
+            return ServeGateOutcome::Done(Verdict::Reject {
+                node: Some(node),
+                why: format!("implausible EOS termination (p={})", resp.eos_prob),
+            });
+        }
+        // Replay guard, shared keyspace with rollouts: SERVE_IDX_BIT keeps
+        // the identities disjoint, so a re-posted served response can
+        // never evict or shadow a rollout sighting (or vice versa).
+        if !replay.first_sighting(node, resp.step, serve_submission_idx(resp.query_id)) {
+            return ServeGateOutcome::Replay { node, query_id: resp.query_id };
+        }
+        // Trust-weighted selection — proven senders only.
+        let full = match &proven {
+            None => true,
+            Some(env) => {
+                let t = (self.trust)(node);
+                let p = t.verify_probability(self.cfg.sampling_rate, self.cfg.promotion_streak);
+                if p >= 1.0 {
+                    if t.rejects > 0 {
+                        self.escalated.inc();
+                    }
+                    true
+                } else {
+                    self.commitment.selects(env.step, node, env.submission_idx, p)
+                }
+            }
+        };
+        if !full {
+            self.served_skipped.inc();
+            return ServeGateOutcome::Skip(resp);
+        }
+        self.served_full.inc();
+        match recompute(&resp) {
+            Err(e) => ServeGateOutcome::Done(Verdict::EngineFailure {
+                node: Some(node),
+                why: format!("serve recompute: {e}"),
+            }),
+            Ok(want) if want == resp.tokens => ServeGateOutcome::Verified(resp),
+            Ok(want) => ServeGateOutcome::Done(Verdict::Reject {
+                node: Some(node),
+                why: format!(
+                    "served completion does not match deterministic recompute \
+                     ({} claimed vs {} recomputed tokens)",
+                    resp.tokens.len(),
+                    want.len()
+                ),
+            }),
+        }
     }
 }
 
@@ -1212,16 +1388,61 @@ mod tests {
         }
     }
 
-    fn tiny_submission(node: u64, step: u64, idx: u64) -> crate::rl::rollout_file::Submission {
+    /// Dataset the gate's skip-path sanity checks run against (the gate
+    /// fixtures draw their task ids from it so `check_sanity_pre` passes).
+    fn gate_dataset() -> Arc<Dataset> {
+        use crate::tasks::dataset::{DatasetConfig, EnvMix};
+        Arc::new(
+            Dataset::generate(
+                &crate::verifier::Registry::standard(),
+                &DatasetConfig { seed: 11, mix: EnvMix::of(&[("math", 40)]), ..Default::default() },
+            )
+            .unwrap(),
+        )
+    }
+
+    /// Gate over `dataset` with `expected_group = 1` (fixtures carry one
+    /// rollout per upload) and room for the tiny test sequences.
+    fn gate_over(
+        dataset: &Arc<Dataset>,
+        rate: f64,
+        trust: Arc<TrustOracle>,
+    ) -> (SamplingGate, crate::toploc::Validator) {
+        use crate::toploc::{Validator, ValidatorConfig};
+        let cfg = SamplerConfig { sampling_rate: rate, promotion_streak: 8 };
+        let gate = SamplingGate::new(
+            ValidatorCommitment::new(0xC0FFEE),
+            cfg,
+            trust,
+            Arc::clone(dataset),
+            RewardConfig::default(),
+            64,
+            64,
+        );
+        (gate, Validator::new(ValidatorConfig { expected_group: 1, ..Default::default() }))
+    }
+
+    /// One wire-honest single-rollout submission: task id from the §2.3.3
+    /// seed draw, group id from the deterministic base — it passes every
+    /// deterministic check the skip path runs (the reference answer is
+    /// irrelevant there: reward replay is exactly what skipping defers).
+    fn tiny_submission(
+        dataset: &Dataset,
+        node: u64,
+        step: u64,
+        idx: u64,
+    ) -> crate::rl::rollout_file::Submission {
         use crate::rl::rollout_file::WireRollout;
         use crate::rl::Rollout;
+        let seed = crate::tasks::dataset::node_sample_seed(node, step, idx);
+        let task_id = dataset.sample_for(seed, 1)[0];
         Submission {
             node_address: node,
             step,
             submission_idx: idx,
             rollouts: vec![WireRollout {
                 rollout: Rollout {
-                    task_id: 1,
+                    task_id,
                     group_id: crate::rl::group_id_base(node, step, idx),
                     policy_step: step,
                     tokens: vec![1, 5, 2],
@@ -1252,9 +1473,8 @@ mod tests {
 
     #[test]
     fn sampling_gate_routes_by_trust_and_selection() {
-        use crate::toploc::{Validator, ValidatorConfig};
         let worker = Identity::from_seed(5);
-        let validator = Validator::new(ValidatorConfig::default());
+        let dataset = gate_dataset();
         let oracle = one_key_oracle(&worker);
         let signing = Some(&oracle);
         // Trust oracle: a long-proven clean history for everyone.
@@ -1263,16 +1483,14 @@ mod tests {
             verified_clean: 1000,
             rejects: 0,
         });
-        let cfg = SamplerConfig { sampling_rate: 0.25, promotion_streak: 8 };
-        let gate =
-            SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, Arc::clone(&proven));
+        let (gate, validator) = gate_over(&dataset, 0.25, Arc::clone(&proven));
 
         // A proven node's uploads split into Full / Skip exactly as the
         // commitment dictates, and every Skip decodes to the submission.
         let (mut fulls, mut skips) = (0u64, 0u64);
         for idx in 0..200 {
-            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
-            match gate.gate(signing, &validator, bytes) {
+            let bytes = tiny_submission(&dataset, worker.address, 3, idx).encode_signed(&worker);
+            match gate.gate(signing, &validator, 3, bytes) {
                 GateOutcome::Full(_) => fulls += 1,
                 GateOutcome::Skip(sub) => {
                     skips += 1;
@@ -1288,10 +1506,10 @@ mod tests {
 
         // New node (default trust): always Full, never skipped.
         let fresh: Arc<TrustOracle> = Arc::new(|_| TrustState::default());
-        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, fresh);
+        let (gate, _) = gate_over(&dataset, 0.25, fresh);
         for idx in 0..20 {
-            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
-            assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+            let bytes = tiny_submission(&dataset, worker.address, 3, idx).encode_signed(&worker);
+            assert!(matches!(gate.gate(signing, &validator, 3, bytes), GateOutcome::Full(_)));
         }
         assert_eq!(gate.escalated.get(), 0);
 
@@ -1302,30 +1520,25 @@ mod tests {
             verified_clean: 500,
             rejects: 1,
         });
-        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, flagged);
-        let bytes = tiny_submission(worker.address, 3, 0).encode_signed(&worker);
-        assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+        let (gate, _) = gate_over(&dataset, 0.25, flagged);
+        let bytes = tiny_submission(&dataset, worker.address, 3, 0).encode_signed(&worker);
+        assert!(matches!(gate.gate(signing, &validator, 3, bytes), GateOutcome::Full(_)));
         assert_eq!(gate.escalated.get(), 1);
 
         // Rate 1.0: sampling disabled, everything Full even when proven.
-        let gate = SamplingGate::new(
-            ValidatorCommitment::new(0xC0FFEE),
-            SamplerConfig { sampling_rate: 1.0, promotion_streak: 8 },
-            proven,
-        );
+        let (gate, _) = gate_over(&dataset, 1.0, proven);
         for idx in 0..50 {
-            let bytes = tiny_submission(worker.address, 3, idx).encode_signed(&worker);
-            assert!(matches!(gate.gate(signing, &validator, bytes), GateOutcome::Full(_)));
+            let bytes = tiny_submission(&dataset, worker.address, 3, idx).encode_signed(&worker);
+            assert!(matches!(gate.gate(signing, &validator, 3, bytes), GateOutcome::Full(_)));
         }
         assert_eq!(gate.skipped.get(), 0);
     }
 
     #[test]
     fn sampling_gate_never_skips_unproven_or_lying_uploads() {
-        use crate::toploc::{Validator, ValidatorConfig};
         let worker = Identity::from_seed(5);
         let stranger = Identity::from_seed(6);
-        let validator = Validator::new(ValidatorConfig::default());
+        let dataset = gate_dataset();
         let oracle = one_key_oracle(&worker);
         let signing = Some(&oracle);
         // Effectively-zero verify probability: every proven upload takes
@@ -1335,18 +1548,17 @@ mod tests {
             verified_clean: u64::MAX,
             rejects: 0,
         });
-        let cfg = SamplerConfig { sampling_rate: 0.0, promotion_streak: 8 };
-        let gate = SamplingGate::new(ValidatorCommitment::new(0xC0FFEE), cfg, proven);
+        let (gate, validator) = gate_over(&dataset, 0.0, proven);
 
         // Unsigned upload with signing required: settles as Unsigned.
-        let raw = tiny_submission(worker.address, 3, 0).encode();
-        match gate.gate(signing, &validator, raw) {
+        let raw = tiny_submission(&dataset, worker.address, 3, 0).encode();
+        match gate.gate(signing, &validator, 3, raw) {
             GateOutcome::Done(Verdict::Unsigned { .. }) => {}
             _ => panic!("unsigned upload must settle in stage 0"),
         }
         // Unregistered signer: Forged, trust never consulted.
-        let sealed = tiny_submission(stranger.address, 3, 0).encode_signed(&stranger);
-        match gate.gate(signing, &validator, sealed) {
+        let sealed = tiny_submission(&dataset, stranger.address, 3, 0).encode_signed(&stranger);
+        match gate.gate(signing, &validator, 3, sealed) {
             GateOutcome::Done(Verdict::Forged { claimed, .. }) => {
                 assert_eq!(claimed, stranger.address)
             }
@@ -1354,12 +1566,12 @@ mod tests {
         }
         // Proven envelope over a payload claiming a different identity:
         // skip path catches the lie (proven Reject), no admission.
-        let mut lying = tiny_submission(worker.address, 3, 0);
+        let mut lying = tiny_submission(&dataset, worker.address, 3, 0);
         lying.node_address = stranger.address;
         lying.rollouts[0].rollout.node_address = stranger.address;
         let payload = lying.encode();
         let bytes = Envelope::seal(&worker, 3, 0, &payload);
-        match gate.gate(signing, &validator, bytes) {
+        match gate.gate(signing, &validator, 3, bytes) {
             GateOutcome::Done(Verdict::Reject { node, why }) => {
                 assert_eq!(node, Some(worker.address));
                 assert!(why.contains("envelope proves"), "{why}");
@@ -1368,16 +1580,188 @@ mod tests {
         }
         // Undecodable payload under a valid envelope: proven Reject.
         let bytes = Envelope::seal(&worker, 3, 1, b"not an rpq file");
-        match gate.gate(signing, &validator, bytes) {
+        match gate.gate(signing, &validator, 3, bytes) {
             GateOutcome::Done(Verdict::Reject { node, .. }) => {
                 assert_eq!(node, Some(worker.address))
             }
             _ => panic!("garbage payload must be a proven reject"),
         }
         // Legacy mode (no signing): sampling never applies — Full.
-        let raw2 = tiny_submission(worker.address, 3, 0).encode();
-        assert!(matches!(gate.gate(None, &validator, raw2), GateOutcome::Full(_)));
+        let raw2 = tiny_submission(&dataset, worker.address, 3, 0).encode();
+        assert!(matches!(gate.gate(None, &validator, 3, raw2), GateOutcome::Full(_)));
         assert_eq!(gate.skipped.get(), 0);
+    }
+
+    /// One wire-honest served response: EOS-terminated, probs shaped to
+    /// the completion, tokens free of any tokenizer-alphabet constraint
+    /// (serving is model-alphabet).
+    fn served(worker: &Identity, step: u64, query_id: u64) -> crate::serving::ServedResponse {
+        ServedResponse {
+            query_id,
+            node_address: worker.address,
+            step,
+            tokens: vec![9, 5, 7, 2],
+            prompt_len: 2,
+            sampled_probs: vec![0.5, 0.9],
+            commitment: vec![1, 2, 3],
+            finish_eos: true,
+            eos_prob: 0.9,
+        }
+    }
+
+    #[test]
+    fn serve_gate_slashes_forged_completions_and_passes_honest_ones() {
+        let worker = Identity::from_seed(5);
+        let stranger = Identity::from_seed(6);
+        let dataset = gate_dataset();
+        let oracle = one_key_oracle(&worker);
+        let signing = Some(&oracle);
+        let proven: Arc<TrustOracle> = Arc::new(|_| TrustState {
+            clean_streak: 1000,
+            verified_clean: 1000,
+            rejects: 0,
+        });
+        // Rate 1.0: every served response is recomputed.
+        let (gate, validator) = gate_over(&dataset, 1.0, proven);
+        let mut replay = ReplayGuard::new();
+        let honest: &dyn Fn(&ServedResponse) -> anyhow::Result<Vec<i32>> =
+            &|r| Ok(r.tokens.clone());
+
+        // Honest response, recompute agrees: Verified.
+        let bytes = served(&worker, 3, 0).encode_signed(&worker);
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, honest) {
+            ServeGateOutcome::Verified(r) => {
+                assert_eq!(r.query_id, 0);
+                assert_eq!(r.node_address, worker.address);
+            }
+            _ => panic!("honest served response must verify"),
+        }
+        assert_eq!(gate.served_full.get(), 1);
+
+        // Re-posting the identical accepted response: Replay, not a slash.
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, honest) {
+            ServeGateOutcome::Replay { node, query_id } => {
+                assert_eq!((node, query_id), (worker.address, 0));
+            }
+            _ => panic!("duplicate served response must be a replay"),
+        }
+
+        // Forged completion: recompute disagrees — proven Reject by the
+        // signer, exactly the slashing outcome rollout forgeries get.
+        let bytes = served(&worker, 3, 1).encode_signed(&worker);
+        let forged: &dyn Fn(&ServedResponse) -> anyhow::Result<Vec<i32>> =
+            &|_| Ok(vec![9, 5, 8, 2]);
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, forged) {
+            ServeGateOutcome::Done(Verdict::Reject { node, why }) => {
+                assert_eq!(node, Some(worker.address));
+                assert!(why.contains("recompute"), "{why}");
+            }
+            _ => panic!("forged served completion must be a proven reject"),
+        }
+
+        // Recompute infrastructure failure: EngineFailure, never a slash.
+        let bytes = served(&worker, 3, 2).encode_signed(&worker);
+        let broken: &dyn Fn(&ServedResponse) -> anyhow::Result<Vec<i32>> =
+            &|_| anyhow::bail!("backend down");
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, broken) {
+            ServeGateOutcome::Done(Verdict::EngineFailure { node, .. }) => {
+                assert_eq!(node, Some(worker.address));
+            }
+            _ => panic!("recompute failure must settle as EngineFailure"),
+        }
+
+        // Unsigned / stranger-signed envelopes settle in stage 0.
+        let raw = served(&worker, 3, 3).encode();
+        assert!(matches!(
+            gate.gate_served(signing, &validator, 3, &mut replay, &raw, honest),
+            ServeGateOutcome::Done(Verdict::Unsigned { .. })
+        ));
+        let sealed = served(&stranger, 3, 3).encode_signed(&stranger);
+        assert!(matches!(
+            gate.gate_served(signing, &validator, 3, &mut replay, &sealed, honest),
+            ServeGateOutcome::Done(Verdict::Forged { .. })
+        ));
+
+        // Aged-out policy step: Stale (liveness, not dishonesty).
+        let bytes = served(&worker, 3, 4).encode_signed(&worker);
+        assert!(matches!(
+            gate.gate_served(signing, &validator, 100, &mut replay, &bytes, honest),
+            ServeGateOutcome::Done(Verdict::Stale { .. })
+        ));
+    }
+
+    #[test]
+    fn serve_gate_skip_path_still_catches_cheap_lies() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let worker = Identity::from_seed(5);
+        let stranger = Identity::from_seed(6);
+        let dataset = gate_dataset();
+        let oracle = one_key_oracle(&worker);
+        let signing = Some(&oracle);
+        let proven: Arc<TrustOracle> = Arc::new(|_| TrustState {
+            clean_streak: u64::MAX,
+            verified_clean: u64::MAX,
+            rejects: 0,
+        });
+        // Rate 0.0 over a maxed-out trust history: every clean response
+        // takes the skip path, so the recompute closure must never run.
+        let (gate, validator) = gate_over(&dataset, 0.0, proven);
+        let mut replay = ReplayGuard::new();
+        let recomputes = AtomicU64::new(0);
+        let counting: &dyn Fn(&ServedResponse) -> anyhow::Result<Vec<i32>> = &|r| {
+            recomputes.fetch_add(1, Ordering::SeqCst);
+            Ok(r.tokens.clone())
+        };
+
+        let bytes = served(&worker, 3, 0).encode_signed(&worker);
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, counting) {
+            ServeGateOutcome::Skip(r) => assert_eq!(r.query_id, 0),
+            _ => panic!("proven node at rate 0 must skip"),
+        }
+        assert_eq!(recomputes.load(Ordering::SeqCst), 0);
+        assert_eq!(gate.served_skipped.get(), 1);
+
+        // Identity lie under a valid envelope: proven Reject, no skip.
+        let mut lying = served(&worker, 3, 1);
+        lying.node_address = stranger.address;
+        let bytes = Envelope::seal(&worker, 3, serve_submission_idx(1), &lying.encode());
+        match gate.gate_served(signing, &validator, 3, &mut replay, &bytes, counting) {
+            ServeGateOutcome::Done(Verdict::Reject { node, why }) => {
+                assert_eq!(node, Some(worker.address));
+                assert!(why.contains("envelope"), "{why}");
+            }
+            _ => panic!("identity lie must be a proven reject"),
+        }
+
+        // Probs shaped wrong for the completion: cheap reject.
+        let mut short = served(&worker, 3, 2);
+        short.sampled_probs.pop();
+        let bytes = short.encode_signed(&worker);
+        assert!(matches!(
+            gate.gate_served(signing, &validator, 3, &mut replay, &bytes, counting),
+            ServeGateOutcome::Done(Verdict::Reject { .. })
+        ));
+
+        // EOS-termination lie: claims finish_eos but does not end in EOS.
+        let mut no_eos = served(&worker, 3, 3);
+        no_eos.tokens = vec![9, 5, 7, 8];
+        let bytes = no_eos.encode_signed(&worker);
+        assert!(matches!(
+            gate.gate_served(signing, &validator, 3, &mut replay, &bytes, counting),
+            ServeGateOutcome::Done(Verdict::Reject { .. })
+        ));
+        assert_eq!(gate.rejected_unsampled.get(), 2);
+        assert_eq!(recomputes.load(Ordering::SeqCst), 0);
+
+        // Legacy unsigned mode: no identity to trust, so even at rate 0
+        // the completion is fully recomputed.
+        let raw = served(&worker, 3, 4).encode();
+        assert!(matches!(
+            gate.gate_served(None, &validator, 3, &mut replay, &raw, counting),
+            ServeGateOutcome::Verified(_)
+        ));
+        assert_eq!(recomputes.load(Ordering::SeqCst), 1);
+        assert_eq!(gate.served_full.get(), 1);
     }
 
     #[test]

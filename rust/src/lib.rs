@@ -24,6 +24,10 @@
 //! - [`toploc`]: trustless inference verification (§2.3) — the validator
 //!   enforces the same staleness window as the trainer buffer.
 //! - [`protocol`]: ledger/discovery/orchestrator/worker lifecycle (§2.4).
+//! - [`serving`]: serve mode — user queries dispatched onto the same
+//!   worker fleet co-tenant with RL rollouts (front-door router, per-node
+//!   capacity advertisement, deadline/SLO clock, signed + spot-checked
+//!   responses riding the rollout trust machinery).
 //! - [`analysis`]: `swarmlint` — a from-scratch lexer + rules engine that
 //!   lints this crate's own sources for determinism / slashability
 //!   hazards (unordered iteration, wall-clock inputs, panics on untrusted
@@ -42,6 +46,7 @@ pub mod http;
 pub mod protocol;
 pub mod rl;
 pub mod runtime;
+pub mod serving;
 pub mod shardcast;
 pub mod tasks;
 pub mod toploc;

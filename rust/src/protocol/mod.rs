@@ -24,6 +24,23 @@
 //!
 //! Byzantine behavior (bad signatures, forged rollouts) is *not* churn:
 //! it goes through the slashing path on the ledger instead.
+//!
+//! # Serving topology
+//!
+//! The orchestrator doubles as the serve-mode front door (see
+//! [`crate::serving`]): user queries enter through `POST /query` /
+//! [`Orchestrator::submit_query`] and wait in a
+//! [`crate::serving::ServeRouter`] inside the orchestrator's state lock.
+//! No second transport exists — assignment rides the heartbeat/
+//! [`TaskSpec`] pull flow as `kind = "serve"` tasks, handed out *ahead
+//! of* the regular task queue, and only to nodes whose heartbeat
+//! advertised a [`crate::serving::ServeCapacity`] covering the query
+//! ([`Orchestrator::heartbeat_with_capacity`], sent by
+//! [`Worker::start_heartbeat_with_capacity`]). The failure model above
+//! extends unchanged: a slashed or evicted holder's in-flight queries
+//! requeue at the front (they have waited longest) and deadline
+//! accounting runs on the orchestrator's injected
+//! [`crate::serving::SloClock`], never ambient time.
 
 pub mod discovery;
 pub mod identity;

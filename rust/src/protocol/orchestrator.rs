@@ -8,6 +8,20 @@
 //! cannot heartbeat itself into the pool and receive tasks — that would
 //! bypass the invite flow entirely. Such heartbeats are refused (HTTP
 //! 403) and counted in [`Orchestrator::heartbeats_rejected`].
+//!
+//! # Serve mode (front-door router)
+//!
+//! The orchestrator doubles as the serving front door: user queries enter
+//! through [`Orchestrator::submit_query`] (HTTP `POST /query`) and land in
+//! a [`ServeRouter`] inside the state lock. Workers advertise per-node
+//! serving capacity on each heartbeat (`serve_lanes` / `serve_max_tokens`
+//! fields), and at handout time a routed query *preempts* the regular
+//! task queue — it leaves as a `kind = "serve"` [`TaskSpec`] on the same
+//! pull flow. Deadlines run on an injected SLO clock
+//! ([`Orchestrator::slo_clock`]); eviction and slashing recover a dead
+//! worker's in-flight query back into the router (counted under
+//! [`Orchestrator::tasks_requeued`], like any orphaned task) unless its
+//! deadline already passed, in which case it is dropped as expired.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -15,6 +29,7 @@ use std::sync::{Arc, Mutex};
 use super::identity::Identity;
 use super::ledger::{Ledger, Tx};
 use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
+use crate::serving::{ServeCapacity, ServeRequest, ServeRouter, SloClock, SERVE_TASK_KIND};
 use crate::util::json::Json;
 use crate::util::metrics::Counter;
 
@@ -54,6 +69,9 @@ struct Inner {
     nodes: BTreeMap<u64, NodeState>,
     queue: VecDeque<TaskSpec>,
     next_task_id: u64,
+    /// Serve-mode front door: queued user queries + capacity table +
+    /// in-flight deadline tracking (drained ahead of `queue` at handout).
+    router: ServeRouter,
 }
 
 /// Why a heartbeat was refused (no state was recorded for the sender).
@@ -81,7 +99,12 @@ pub struct Orchestrator {
     pub heartbeats_rejected: Arc<Counter>,
     /// Tasks orphaned by an evicted/slashed holder and pushed back to the
     /// front of the queue (the churn-survival counter: requeued, not lost).
+    /// Serve queries recovered into the router count here too.
     pub tasks_requeued: Arc<Counter>,
+    /// Injected SLO time source for serve-query deadline math (R2: the
+    /// router never reads the wall clock itself). Defaults to real time;
+    /// replace *before* cloning/serving to run deadlines on test ticks.
+    pub slo_clock: SloClock,
 }
 
 pub struct OrchestratorServer {
@@ -96,6 +119,7 @@ impl Orchestrator {
                 nodes: BTreeMap::new(),
                 queue: VecDeque::new(),
                 next_task_id: 0,
+                router: ServeRouter::default(),
             })),
             identity: Arc::new(identity),
             ledger,
@@ -104,6 +128,7 @@ impl Orchestrator {
             max_missed: 3,
             heartbeats_rejected: Arc::new(Counter::default()),
             tasks_requeued: Arc::new(Counter::default()),
+            slo_clock: Arc::new(crate::util::now_ms),
         }
     }
 
@@ -212,10 +237,26 @@ impl Orchestrator {
         log: Option<String>,
         task_done: Option<u64>,
     ) -> Result<Option<TaskSpec>, HeartbeatRejected> {
+        self.heartbeat_with_capacity(node, log, task_done, None)
+    }
+
+    /// [`Orchestrator::heartbeat`] with serve-capacity advertisement: a
+    /// node offering `capacity` becomes eligible for routed user queries,
+    /// which are handed out *ahead of* the regular task queue (serve
+    /// traffic preempts pending RL work at assignment time). A node that
+    /// never advertises never receives serve tasks.
+    pub fn heartbeat_with_capacity(
+        &self,
+        node: u64,
+        log: Option<String>,
+        task_done: Option<u64>,
+        capacity: Option<ServeCapacity>,
+    ) -> Result<Option<TaskSpec>, HeartbeatRejected> {
         if self.ledger.is_slashed(self.pool_id, node) {
             self.heartbeats_rejected.inc();
             return Err(HeartbeatRejected::Slashed);
         }
+        let now_slo = (self.slo_clock)();
         let mut inner = self.inner.lock().unwrap();
         let Some(state) = inner.nodes.get_mut(&node) else {
             drop(inner);
@@ -238,12 +279,33 @@ impl Orchestrator {
                 state.logs.pop_front();
             }
         }
+        let mut finished: Option<TaskSpec> = None;
         if let Some(done) = task_done {
             if state.current_task.as_ref().map(|t| t.id) == Some(done) {
-                state.current_task = None;
+                finished = state.current_task.take();
             }
         }
-        if state.current_task.is_none() {
+        let idle = state.current_task.is_none();
+        if let Some(cap) = capacity {
+            inner.router.advertise(node, cap);
+        }
+        // A finished serve task settles its query's deadline accounting.
+        if let Some(t) = &finished {
+            if t.kind == SERVE_TASK_KIND {
+                if let Some(q) = ServeRequest::from_json(&t.payload) {
+                    inner.router.complete(q.query_id, now_slo);
+                }
+            }
+        }
+        if idle {
+            // User queries first: the router is the priority queue.
+            if let Some(q) = inner.router.assign(node, now_slo) {
+                let id = inner.next_task_id;
+                inner.next_task_id += 1;
+                let task = TaskSpec { id, kind: SERVE_TASK_KIND.to_string(), payload: q.to_json() };
+                inner.nodes.get_mut(&node).unwrap().current_task = Some(task.clone());
+                return Ok(Some(task));
+            }
             if let Some(task) = inner.queue.pop_front() {
                 inner.nodes.get_mut(&node).unwrap().current_task = Some(task.clone());
                 return Ok(Some(task));
@@ -252,15 +314,45 @@ impl Orchestrator {
         Ok(None)
     }
 
+    /// Front-door entry for a user query: allocate an id, stamp the
+    /// absolute deadline (`now + slo_ms` on the injected clock) and queue
+    /// it for routed dispatch. `None` if the query is unserviceable
+    /// (zero-length SLO).
+    pub fn submit_query(&self, prompt: Vec<i32>, max_new: u32, slo_ms: u64) -> Option<u64> {
+        let now = (self.slo_clock)();
+        let mut inner = self.inner.lock().unwrap();
+        let query_id = inner.router.next_query_id();
+        let req =
+            ServeRequest { query_id, prompt, max_new, deadline_ms: now.saturating_add(slo_ms) };
+        inner.router.submit(req, now).then_some(query_id)
+    }
+
+    /// Serve-router observability: `(pending, in_flight, completed,
+    /// deadlines_missed, expired, requeued)`.
+    pub fn serve_stats(&self) -> (u64, u64, u64, u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (
+            inner.router.pending() as u64,
+            inner.router.assigned() as u64,
+            inner.router.queries_completed.get(),
+            inner.router.deadlines_missed.get(),
+            inner.router.queries_expired.get(),
+            inner.router.queries_requeued.get(),
+        )
+    }
+
     /// Health sweep: count missed heartbeats, mark dead + evict from the
     /// ledger after `max_missed` (§2.4.2). Returns evicted node addresses.
     ///
     /// Any task an evicted node was holding is requeued at the *front* of
     /// the queue (it is the oldest outstanding work), so the next idle
     /// heartbeat picks it up — a crashed worker delays its task by one
-    /// eviction window, never loses it.
+    /// eviction window, never loses it. A serve query the node was holding
+    /// re-enters the *router* queue the same way (unless its deadline
+    /// already passed), and the node's capacity advertisement is dropped.
     pub fn health_sweep(&self) -> Vec<u64> {
         let now = crate::util::now_ms();
+        let now_slo = (self.slo_clock)();
         let mut evicted = Vec::new();
         let mut orphans: Vec<TaskSpec> = Vec::new();
         let mut inner = self.inner.lock().unwrap();
@@ -274,7 +366,11 @@ impl Orchestrator {
                 if st.missed >= self.max_missed {
                     st.status = NodeStatus::Dead;
                     if let Some(task) = st.current_task.take() {
-                        orphans.push(task);
+                        // Serve queries are recovered through the router
+                        // below; only generic tasks ride the task queue.
+                        if task.kind != SERVE_TASK_KIND {
+                            orphans.push(task);
+                        }
                     }
                     evicted.push(addr);
                 }
@@ -283,6 +379,9 @@ impl Orchestrator {
         for task in orphans.into_iter().rev() {
             self.tasks_requeued.inc();
             inner.queue.push_front(task);
+        }
+        for &addr in &evicted {
+            self.tasks_requeued.add(inner.router.requeue_node(addr, now_slo));
         }
         drop(inner);
         for addr in &evicted {
@@ -295,21 +394,27 @@ impl Orchestrator {
 
     /// Slash a node after a TOPLOC rejection (§2.4.2 inference validation).
     /// A held task is requeued — the *node* is untrusted, the task spec is
-    /// the pool's own work and goes back to the queue.
+    /// the pool's own work and goes back to the queue. A held serve query
+    /// re-enters the router queue the same way (the *user's* query is not
+    /// the cheater's property), and the node stops looking assignable.
     pub fn slash(&self, node: u64, reason: &str) {
         let _ = self.ledger.submit(
             Tx::Slash { pool_id: self.pool_id, node, reason: reason.to_string() },
             &self.identity,
         );
+        let now_slo = (self.slo_clock)();
         let mut inner = self.inner.lock().unwrap();
         let orphan = inner.nodes.get_mut(&node).and_then(|st| {
             st.status = NodeStatus::Dead;
             st.current_task.take()
         });
         if let Some(task) = orphan {
-            self.tasks_requeued.inc();
-            inner.queue.push_front(task);
+            if task.kind != SERVE_TASK_KIND {
+                self.tasks_requeued.inc();
+                inner.queue.push_front(task);
+            }
         }
+        self.tasks_requeued.add(inner.router.requeue_node(node, now_slo));
     }
 
     pub fn status(&self, node: u64) -> Option<NodeStatus> {
@@ -375,7 +480,18 @@ fn handle(orch: &Orchestrator, req: &Request) -> Response {
             };
             let log = j.get("log").and_then(Json::as_str).map(str::to_string);
             let done = j.get("task_done").and_then(Json::as_u64);
-            match orch.heartbeat(node, log, done) {
+            // Optional serve-capacity advertisement (both fields or none).
+            let capacity = match (
+                j.get("serve_lanes").and_then(Json::as_u64),
+                j.get("serve_max_tokens").and_then(Json::as_u64),
+            ) {
+                (Some(lanes), Some(max_tokens)) => Some(ServeCapacity {
+                    free_lanes: lanes.min(u64::from(u32::MAX)) as u32,
+                    max_tokens: max_tokens.min(u64::from(u32::MAX)) as u32,
+                }),
+                _ => None,
+            };
+            match orch.heartbeat_with_capacity(node, log, done, capacity) {
                 Ok(Some(task)) => Response::json(&Json::obj(vec![
                     ("task_id", task.id.into()),
                     ("kind", task.kind.into()),
@@ -383,6 +499,20 @@ fn handle(orch: &Orchestrator, req: &Request) -> Response {
                 ])),
                 Ok(None) => Response::json(&Json::obj(vec![("task_id", Json::Null)])),
                 Err(why) => Response::error(403, &format!("heartbeat refused: {why:?}")),
+            }
+        }
+        ("POST", "/query") => {
+            let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+            let Some(prompt) = j.get("prompt").and_then(Json::as_arr).map(|a| {
+                a.iter().filter_map(|t| t.as_u64().map(|v| v as u32 as i32)).collect::<Vec<i32>>()
+            }) else {
+                return Response::error(400, "missing prompt");
+            };
+            let max_new = j.get("max_new").and_then(Json::as_u64).unwrap_or(64) as u32;
+            let slo_ms = j.get("slo_ms").and_then(Json::as_u64).unwrap_or(10_000);
+            match orch.submit_query(prompt, max_new, slo_ms) {
+                Some(query_id) => Response::json(&Json::obj(vec![("query_id", query_id.into())])),
+                None => Response::error(400, "query refused (unserviceable SLO)"),
             }
         }
         ("POST", "/task") => {
@@ -580,6 +710,169 @@ mod tests {
         o.slash(9, "toploc rejection");
         assert_eq!(o.status(9), Some(NodeStatus::Dead));
         assert!(o.ledger.is_slashed(1, 9));
+    }
+
+    /// Fixture with a deterministic SLO clock: deadlines advance only
+    /// when the test bumps the returned atomic (heartbeat liveness still
+    /// runs on real time — the two clocks are independent by design).
+    fn serve_orch() -> (Orchestrator, Arc<std::sync::atomic::AtomicU64>) {
+        let mut o = orch();
+        let tick = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let t = tick.clone();
+        o.slo_clock = Arc::new(move || t.load(std::sync::atomic::Ordering::SeqCst));
+        (o, tick)
+    }
+
+    fn cap() -> ServeCapacity {
+        ServeCapacity { free_lanes: 2, max_tokens: 128 }
+    }
+
+    #[test]
+    fn serve_queries_preempt_the_task_queue() {
+        let (o, _) = serve_orch();
+        o.admit(10);
+        o.admit(11);
+        o.create_task("rollout", Json::Null);
+        let qid = o.submit_query(vec![1, 2, 3], 8, 1_000).unwrap();
+        // The serving node gets the query *before* the queued RL task.
+        let t = o.heartbeat_with_capacity(10, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(t.kind, SERVE_TASK_KIND);
+        let q = ServeRequest::from_json(&t.payload).unwrap();
+        assert_eq!((q.query_id, q.prompt, q.max_new), (qid, vec![1, 2, 3], 8));
+        // Finishing it settles deadline accounting and frees the node for
+        // the RL task it skipped.
+        let t2 = o.heartbeat_with_capacity(10, None, Some(t.id), Some(cap())).unwrap().unwrap();
+        assert_eq!(t2.kind, "rollout");
+        let (_, _, completed, missed, _, _) = o.serve_stats();
+        assert_eq!((completed, missed), (1, 0));
+        // A node that never advertised capacity never receives queries.
+        o.submit_query(vec![1], 4, 1_000).unwrap();
+        assert!(o.heartbeat(11, None, None).unwrap().is_none());
+        assert_eq!(o.serve_stats().0, 1);
+    }
+
+    #[test]
+    fn eviction_requeues_orphaned_serve_query_into_router() {
+        let (o, _) = serve_orch();
+        o.admit(1);
+        o.admit(2);
+        let qid = o.submit_query(vec![1, 2], 8, 1_000_000).unwrap();
+        let t = o.heartbeat_with_capacity(1, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(t.kind, SERVE_TASK_KIND);
+        // Holder crashes: the query re-enters the *router* queue (not the
+        // generic task queue) and counts as a requeued task.
+        for _ in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(35));
+            assert!(o.heartbeat(2, None, None).unwrap().is_none());
+            o.health_sweep();
+        }
+        assert_eq!(o.status(1), Some(NodeStatus::Dead));
+        assert_eq!(o.tasks_requeued.get(), 1);
+        assert_eq!(o.queue_len(), 0);
+        let (pending, in_flight, _, _, _, requeued) = o.serve_stats();
+        assert_eq!((pending, in_flight, requeued), (1, 0, 1));
+        // The survivor picks the same query up.
+        let t = o.heartbeat_with_capacity(2, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(t.kind, SERVE_TASK_KIND);
+        assert_eq!(ServeRequest::from_json(&t.payload).unwrap().query_id, qid);
+    }
+
+    #[test]
+    fn slash_requeues_held_serve_query_and_forgets_capacity() {
+        let (o, _) = serve_orch();
+        o.admit(3);
+        o.admit(4);
+        let qid = o.submit_query(vec![5, 6], 4, 1_000_000).unwrap();
+        let t = o.heartbeat_with_capacity(3, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(t.kind, SERVE_TASK_KIND);
+        o.slash(3, "forged served response");
+        assert_eq!(o.queue_len(), 0); // router, not the generic queue
+        assert_eq!(o.tasks_requeued.get(), 1);
+        assert_eq!(o.serve_stats().5, 1);
+        // An honest node inherits the query; the slashed node's heartbeats
+        // (and stale capacity) are gone.
+        assert_eq!(o.heartbeat(3, None, None).unwrap_err(), HeartbeatRejected::Slashed);
+        let t = o.heartbeat_with_capacity(4, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(ServeRequest::from_json(&t.payload).unwrap().query_id, qid);
+    }
+
+    #[test]
+    fn deadline_expired_serve_queries_drop_instead_of_requeueing() {
+        let (o, tick) = serve_orch();
+        o.admit(1);
+        // Unserviceable SLO: refused at the front door.
+        assert_eq!(o.submit_query(vec![1], 4, 0), None);
+        // Serviceable query assigned, then its holder dies *after* the
+        // deadline passed: the orphan is dropped as expired, not requeued.
+        o.submit_query(vec![1, 2], 4, 100).unwrap();
+        let t = o.heartbeat_with_capacity(1, None, None, Some(cap())).unwrap().unwrap();
+        assert_eq!(t.kind, SERVE_TASK_KIND);
+        tick.store(200, std::sync::atomic::Ordering::SeqCst);
+        for _ in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(35));
+            o.health_sweep();
+        }
+        assert_eq!(o.status(1), Some(NodeStatus::Dead));
+        assert_eq!(o.tasks_requeued.get(), 0);
+        let (pending, in_flight, _, _, expired, requeued) = o.serve_stats();
+        assert_eq!((pending, in_flight, expired, requeued), (0, 0, 2, 0));
+        // A late *completion* (node alive, answer after deadline) is
+        // counted as a missed deadline, not an expiry.
+        tick.store(0, std::sync::atomic::Ordering::SeqCst);
+        o.admit(2);
+        o.submit_query(vec![1, 2], 4, 100).unwrap();
+        let t = o.heartbeat_with_capacity(2, None, None, Some(cap())).unwrap().unwrap();
+        tick.store(500, std::sync::atomic::Ordering::SeqCst);
+        o.heartbeat_with_capacity(2, None, Some(t.id), Some(cap())).unwrap();
+        let (_, _, completed, missed, _, _) = o.serve_stats();
+        assert_eq!((completed, missed), (1, 1));
+    }
+
+    #[test]
+    fn http_front_door_serves_queries() {
+        let (o, _) = serve_orch();
+        let srv = OrchestratorServer::start(o.clone()).unwrap();
+        let c = HttpClient::new("user");
+        // Submit a query over HTTP.
+        let r = c
+            .post_json(
+                &format!("{}/query", srv.url()),
+                &Json::obj(vec![
+                    ("prompt", Json::Arr(vec![1u64.into(), 2u64.into()])),
+                    ("max_new", 8u64.into()),
+                    ("slo_ms", 5_000u64.into()),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let qid = Json::parse(std::str::from_utf8(&r.body).unwrap())
+            .unwrap()
+            .get("query_id")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        // A capacity-advertising heartbeat pulls it as a serve task.
+        o.admit(5);
+        let hb = c
+            .post_json(
+                &format!("{}/heartbeat", srv.url()),
+                &Json::obj(vec![
+                    ("node", 5u64.into()),
+                    ("serve_lanes", 2u64.into()),
+                    ("serve_max_tokens", 128u64.into()),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(hb.status, 200);
+        let j = Json::parse(std::str::from_utf8(&hb.body).unwrap()).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), SERVE_TASK_KIND);
+        let q = ServeRequest::from_json(j.get("payload").unwrap()).unwrap();
+        assert_eq!((q.query_id, q.prompt), (qid, vec![1, 2]));
+        // Malformed front-door requests are a clean 400.
+        let bad = c
+            .post_json(&format!("{}/query", srv.url()), &Json::obj(vec![("max_new", 8u64.into())]))
+            .unwrap();
+        assert_eq!(bad.status, 400);
     }
 
     #[test]

@@ -207,6 +207,22 @@ impl Worker {
         interval: std::time::Duration,
         handler: Arc<TaskHandler>,
     ) {
+        self.start_heartbeat_with_capacity(orchestrator_url, interval, None, handler);
+    }
+
+    /// [`Worker::start_heartbeat`], advertising serving capacity on every
+    /// beat: a `Some(capacity)` worker tells the orchestrator how many
+    /// decode lanes it keeps free for user traffic and the longest
+    /// sequence it will serve, making it eligible for routed `kind =
+    /// "serve"` tasks (which the handler executes like any other task).
+    /// `None` preserves the exact pre-serving wire format.
+    pub fn start_heartbeat_with_capacity(
+        &mut self,
+        orchestrator_url: String,
+        interval: std::time::Duration,
+        capacity: Option<crate::serving::ServeCapacity>,
+        handler: Arc<TaskHandler>,
+    ) {
         let stop = Arc::clone(&self.stop);
         let address = self.identity.address;
         let volume = self.volume.clone();
@@ -221,6 +237,10 @@ impl Worker {
                 let mut log: Option<String> = None;
                 while !stop.load(Ordering::SeqCst) {
                     let mut body = vec![("node", Json::from(address))];
+                    if let Some(cap) = capacity {
+                        body.push(("serve_lanes", u64::from(cap.free_lanes).into()));
+                        body.push(("serve_max_tokens", u64::from(cap.max_tokens).into()));
+                    }
                     if let Some(d) = done.take() {
                         body.push(("task_done", d.into()));
                     }
@@ -430,6 +450,48 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
         assert_eq!(worker.hb_consecutive_failures.load(Ordering::SeqCst), 0);
+        worker.shutdown();
+    }
+
+    #[test]
+    fn capacity_advertising_worker_pulls_serve_task() {
+        let (ledger, owner) = pool();
+        let discovery = DiscoveryServer::start("tok", 60_000).unwrap();
+        let orch = Orchestrator::new(owner, ledger.clone(), 1, 5_000);
+        let orch_srv = OrchestratorServer::start(orch.clone()).unwrap();
+        let mut worker = Worker::boot(Identity::from_seed(7), &ledger, 1, &discovery.url(), 8).unwrap();
+        orch.admit(worker.identity.address);
+        // A user query is queued before the worker ever beats; the
+        // capacity-advertising heartbeat pulls it as a serve task.
+        let qid = orch.submit_query(vec![1, 2, 3], 8, 60_000).unwrap();
+        let served = Arc::new(Mutex::new(Vec::new()));
+        let sv = served.clone();
+        let handler: Arc<TaskHandler> = Arc::new(move |task, _| {
+            let q = crate::serving::ServeRequest::from_json(&task.payload)
+                .ok_or_else(|| anyhow::anyhow!("bad serve payload"))?;
+            anyhow::ensure!(task.kind == crate::serving::SERVE_TASK_KIND);
+            sv.lock().unwrap().push(q.query_id);
+            Ok(format!("served {}", q.query_id))
+        });
+        worker.start_heartbeat_with_capacity(
+            orch_srv.url(),
+            std::time::Duration::from_millis(10),
+            Some(crate::serving::ServeCapacity { free_lanes: 2, max_tokens: 128 }),
+            handler,
+        );
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while worker.tasks_completed.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "query never served");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(*served.lock().unwrap(), vec![qid]);
+        // The completion heartbeat settles deadline accounting.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while orch.serve_stats().2 == 0 {
+            assert!(std::time::Instant::now() < deadline, "completion never reported");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(orch.serve_stats().3, 0, "served within a 60s SLO");
         worker.shutdown();
     }
 

@@ -35,6 +35,23 @@
 //!   equivalence oracle, enforced by engine-free property tests over
 //!   [`scheduler::MockBackend`].
 //!
+//! # Serving co-tenancy (priority refill)
+//!
+//! Serve mode (see [`crate::serving`]) runs user queries through the
+//! *same* scheduler as RL rollouts, not a second engine:
+//! [`scheduler::run_continuous_prioritized`] takes a per-request
+//! priority flag, and at every lane-refill wave flagged requests (user
+//! queries) are admitted ahead of all pending unflagged prompts (RL
+//! work). Decode ticks are shared — co-tenancy changes *lane admission
+//! order only*, so time-to-first-token drops for queries while the
+//! lane-invariant determinism above keeps every RL rollout's bytes
+//! identical to its solo run (the serve harness in
+//! `coordinator::serve` enforces this against
+//! [`scheduler::run_static_reference`] under mixed load).
+//! [`scheduler::GenStats::first_token_ticks`] records when each
+//! request sampled its first token, which is what `serving_bench`
+//! turns into p50/p99 TTFT on the simulated clock.
+//!
 //! # Threading
 //!
 //! `xla::PjRtClient` is `Rc`-based and thread-confined, so a [`Runtime`]

@@ -152,12 +152,25 @@ pub struct GenStats {
     /// Per decode step: (occupied lanes, requests still pending before the
     /// step) — the refill-invariant trace the scheduler tests assert on.
     pub occupancy: Vec<(u32, u32)>,
+    /// Per request: backend-call tick (`decode_steps + prefill_calls` at
+    /// that moment) when the request's first *completion* token was
+    /// sampled, in request order. Requests that never sample (prompt
+    /// already at the length limit) are absent. Serving converts ticks to
+    /// wall time for time-to-first-token; pure accounting, no effect on
+    /// scheduling or outputs.
+    pub first_token_ticks: Vec<(u32, u64)>,
 }
 
 impl GenStats {
     /// Fraction of decode-lane slots that carried a live sequence.
     pub fn occupancy_frac(&self) -> f64 {
         self.lane_active as f64 / self.lane_slots.max(1) as f64
+    }
+
+    /// The tick (backend calls issued so far) at which request `req`
+    /// sampled its first completion token, if it ever did.
+    pub fn first_token_tick(&self, req: usize) -> Option<u64> {
+        self.first_token_ticks.iter().find(|&&(r, _)| r as usize == req).map(|&(_, t)| t)
     }
 }
 
@@ -178,6 +191,9 @@ struct RolloutCore {
     finish: Finish,
     done: bool,
     rng: Rng,
+    /// Backend-call tick at which the first completion token was sampled
+    /// (TTFT accounting — see [`GenStats::first_token_ticks`]).
+    first_tick: Option<u64>,
 }
 
 impl RolloutCore {
@@ -191,13 +207,16 @@ impl RolloutCore {
             finish: Finish::MaxLen,
             done: false,
             rng: req.rng.clone(),
+            first_tick: None,
         }
     }
 
     /// Process position `pos` given the model's logits/hidden row at that
     /// position. Captures commit-grid rows, and at the frontier
     /// (`pos + 1 == seq.len()`) either finishes on the length limit or
-    /// samples the next token from this rollout's private stream.
+    /// samples the next token from this rollout's private stream. `tick`
+    /// is the caller's backend-call count, recorded when the first
+    /// completion token appears; it never influences outputs.
     fn observe(
         &mut self,
         pos: usize,
@@ -205,6 +224,7 @@ impl RolloutCore {
         hidden: &[f32],
         opts: &GenOpts,
         sp: &SchedSpec,
+        tick: u64,
     ) {
         if self.done || pos >= self.seq.len() {
             return;
@@ -234,6 +254,9 @@ impl RolloutCore {
         let p = softmax_prob(logits, next);
         self.seq.push(next as i32);
         self.probs.push(p);
+        if self.first_tick.is_none() {
+            self.first_tick = Some(tick);
+        }
         if next as i32 == sp.eos_id {
             self.done = true;
             self.finish = Finish::Eos { prob: softmax_prob(logits, sp.eos_id as usize) };
@@ -308,12 +331,26 @@ pub fn run_static_reference<B: DecodeBackend>(
             stats.lane_active += active as u64;
             let (logits, hidden) = backend.decode(&toks, &posv)?;
             stats.decode_steps += 1;
+            let tick = stats.decode_steps + stats.prefill_calls;
             for (i, c) in cores.iter_mut().enumerate() {
-                c.observe(pos, &logits[i * v..(i + 1) * v], &hidden[i * d..(i + 1) * d], opts, &sp);
+                c.observe(
+                    pos,
+                    &logits[i * v..(i + 1) * v],
+                    &hidden[i * d..(i + 1) * d],
+                    opts,
+                    &sp,
+                    tick,
+                );
             }
             pos += 1;
             if pos >= t - 1 || cores.iter().all(|c| c.done && pos >= c.seq.len()) {
                 break;
+            }
+        }
+        let base = out.len();
+        for (i, c) in cores.iter().enumerate() {
+            if let Some(tk) = c.first_tick {
+                stats.first_token_ticks.push(((base + i) as u32, tk));
             }
         }
         out.extend(cores.into_iter().map(RolloutCore::into_generation));
@@ -333,12 +370,43 @@ pub fn run_continuous<B: DecodeBackend>(
     opts: &GenOpts,
     stats: &mut GenStats,
 ) -> anyhow::Result<Vec<Generation>> {
+    run_continuous_prioritized(backend, requests, &[], opts, stats)
+}
+
+/// [`run_continuous`] with a priority refill hook (the serve-mode
+/// co-tenancy entry point): requests whose `priority` flag is set jump the
+/// pending queue, so a user query waiting on time-to-first-token takes the
+/// next free lane ahead of pending RL prompts. Priorities reorder *lane
+/// admission only* — every rollout's observable outputs are functions of
+/// its own prompt and private RNG stream (module docs), so RL rollouts
+/// produce byte-identical tokens/probs/commitments whether or not user
+/// queries share the batch, and an empty `priority` slice makes this
+/// function exactly [`run_continuous`]. Outputs stay in request order.
+pub fn run_continuous_prioritized<B: DecodeBackend>(
+    backend: &mut B,
+    requests: &[GenRequest],
+    priority: &[bool],
+    opts: &GenOpts,
+    stats: &mut GenStats,
+) -> anyhow::Result<Vec<Generation>> {
     let sp = backend.spec();
     let (b, t, v, d) = (sp.lanes, sp.max_seq, sp.vocab, sp.d_model);
     check_requests(requests, &sp)?;
+    anyhow::ensure!(
+        priority.is_empty() || priority.len() == requests.len(),
+        "priority slice length {} != {} requests",
+        priority.len(),
+        requests.len()
+    );
+    let is_priority = |i: usize| priority.get(i).copied().unwrap_or(false);
     let mut cores: Vec<RolloutCore> =
         requests.iter().map(|r| RolloutCore::new(r, opts, t)).collect();
-    let mut pending: VecDeque<usize> = (0..requests.len()).collect();
+    // Priority-marked requests first (stable within each class), so the
+    // next refill wave admits them ahead of the RL backlog.
+    let mut pending: VecDeque<usize> = (0..requests.len())
+        .filter(|&i| is_priority(i))
+        .chain((0..requests.len()).filter(|&i| !is_priority(i)))
+        .collect();
     // lanes[l] = request index occupying lane l; feed[l] = its next
     // position to feed (per-lane `pos` — lanes are not synchronized).
     let mut lanes: Vec<Option<usize>> = vec![None; b];
@@ -371,11 +439,12 @@ pub fn run_continuous<B: DecodeBackend>(
         stats.lane_active += active as u64;
         let (logits, hidden) = backend.decode(&toks, &posv)?;
         stats.decode_steps += 1;
+        let tick = stats.decode_steps + stats.prefill_calls;
         for l in 0..b {
             let Some(r) = lanes[l] else { continue };
             let pos = feed[l];
             let (lg, hd) = (&logits[l * v..(l + 1) * v], &hidden[l * d..(l + 1) * d]);
-            cores[r].observe(pos, lg, hd, opts, &sp);
+            cores[r].observe(pos, lg, hd, opts, &sp, tick);
             if cores[r].done {
                 lanes[l] = None; // retired the step its sequence ended
             } else if pos + 1 >= t - 1 {
@@ -386,6 +455,11 @@ pub fn run_continuous<B: DecodeBackend>(
             } else {
                 feed[l] = pos + 1;
             }
+        }
+    }
+    for (i, c) in cores.iter().enumerate() {
+        if let Some(tk) = c.first_tick {
+            stats.first_token_ticks.push((i as u32, tk));
         }
     }
     Ok(cores.into_iter().map(RolloutCore::into_generation).collect())
@@ -471,6 +545,7 @@ fn refill<B: DecodeBackend>(
             let (logits, hidden) = backend.prefill_kv(&rows, t_b, &assign)?;
             stats.prefill_calls += 1;
             stats.prefill_prompts += rows.len() as u64;
+            let tick = stats.decode_steps + stats.prefill_calls;
             for (r, l, row) in placed {
                 let plen = requests[r].prompt.len();
                 // Replay the prompt positions from the prefill outputs:
@@ -484,6 +559,7 @@ fn refill<B: DecodeBackend>(
                         &hidden[(row * t_b + pos) * d..(row * t_b + pos + 1) * d],
                         opts,
                         sp,
+                        tick,
                     );
                 }
                 if cores[r].done {
@@ -702,6 +778,152 @@ mod tests {
         }
         assert!(ct.prefill_calls > 0);
         assert!(ct.decode_steps <= st.decode_steps);
+    }
+
+    #[test]
+    fn prioritized_with_no_priorities_is_run_continuous() {
+        let sp = sp();
+        let opts = GenOpts { max_new: 20, temperature: 1.0, commit_interval: 8 };
+        let requests = reqs(9, 11);
+        let mut sa = GenStats::default();
+        let mut sb = GenStats::default();
+        let a = run_continuous(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut sa,
+        )
+        .unwrap();
+        let b = run_continuous_prioritized(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &[],
+            &opts,
+            &mut sb,
+        )
+        .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.sampled_probs, y.sampled_probs);
+            assert_eq!(x.hidden_rows, y.hidden_rows);
+        }
+        assert_eq!(sa.decode_steps, sb.decode_steps);
+        assert_eq!(sa.occupancy, sb.occupancy);
+        assert_eq!(sa.first_token_ticks, sb.first_token_ticks);
+    }
+
+    #[test]
+    fn priority_request_jumps_the_refill_queue() {
+        // 9 requests, 4 lanes: the last request normally waits for a lane.
+        // Marked priority, it must ride the *first* refill wave — its first
+        // token appears no later than any unprioritized request's.
+        let sp = sp();
+        let opts = GenOpts { max_new: 20, temperature: 1.0, commit_interval: 8 };
+        let requests = reqs(9, 3);
+        let mut priority = vec![false; 9];
+        priority[8] = true;
+        let mut plain = GenStats::default();
+        run_continuous(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut plain,
+        )
+        .unwrap();
+        let mut pri = GenStats::default();
+        run_continuous_prioritized(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &priority,
+            &opts,
+            &mut pri,
+        )
+        .unwrap();
+        let tick8 = pri.first_token_tick(8).unwrap();
+        for i in 0..8 {
+            assert!(tick8 <= pri.first_token_tick(i).unwrap(), "request {i} beat the query");
+        }
+        assert!(tick8 < plain.first_token_tick(8).unwrap(), "priority did not shorten TTFT");
+        // A bad priority slice is rejected, not misapplied.
+        assert!(run_continuous_prioritized(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &[true],
+            &opts,
+            &mut GenStats::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rl_outputs_invariant_under_serve_cotenancy() {
+        // The serving contract (§2.3.3 extended to co-tenancy): adding a
+        // priority user query to a batch must not change any RL rollout's
+        // observable outputs — tokens, probs, commit rows, finish — even
+        // though every lane assignment shifts.
+        let sp = sp();
+        let opts = GenOpts { max_new: 20, temperature: 1.0, commit_interval: 8 };
+        let rl = reqs(8, 5);
+        let solo = run_continuous(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &rl,
+            &opts,
+            &mut GenStats::default(),
+        )
+        .unwrap();
+        let mut mixed_reqs = rl.clone();
+        mixed_reqs.push(GenRequest {
+            prompt: vec![1, 7, 9, 4],
+            rng: Rng::new(0xD00D),
+            prompt_key: 1000,
+        });
+        let mut priority = vec![false; 9];
+        priority[8] = true;
+        let mixed = run_continuous_prioritized(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &mixed_reqs,
+            &priority,
+            &opts,
+            &mut GenStats::default(),
+        )
+        .unwrap();
+        for (x, y) in solo.iter().zip(mixed.iter().take(8)) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.sampled_probs, y.sampled_probs);
+            assert_eq!(x.hidden_rows, y.hidden_rows);
+            assert_eq!(x.finish, y.finish);
+        }
+        assert!(mixed[8].tokens.len() > mixed[8].prompt_len, "query produced no completion");
+    }
+
+    #[test]
+    fn first_token_ticks_cover_all_sampling_requests() {
+        let sp = sp();
+        let opts = GenOpts { max_new: 20, temperature: 1.0, commit_interval: 8 };
+        let requests = reqs(9, 3);
+        let mut stats = GenStats::default();
+        run_continuous(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut stats,
+        )
+        .unwrap();
+        // Every request here has room to sample at least one token.
+        for i in 0..9 {
+            let t = stats.first_token_tick(i).unwrap();
+            assert!(t >= 1 && t <= stats.decode_steps + stats.prefill_calls);
+        }
+        // The static path records them too (same observe semantics).
+        let mut st = GenStats::default();
+        run_static_reference(
+            &mut MockBackend::new(sp, MockBackend::default_buckets(sp.max_seq), 0.3),
+            &requests,
+            &opts,
+            &mut st,
+        )
+        .unwrap();
+        assert_eq!(st.first_token_ticks.len(), 9);
     }
 
     #[test]

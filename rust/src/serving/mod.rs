@@ -1,0 +1,110 @@
+//! Serve mode: user-traffic inference on the RL swarm (the ROADMAP's
+//! "second workload"). The same fleet that generates RL rollouts answers
+//! user queries co-tenant on the continuous-batching scheduler — lloom's
+//! client → executor → validator shape, carried by the protocol layer we
+//! already trust for rollouts.
+//!
+//! # Topology
+//!
+//! - **Front door** — user queries ([`ServeRequest`]) enter through the
+//!   orchestrator's `POST /query` route and land in the [`ServeRouter`]'s
+//!   FIFO. No new transport: assignment rides the existing heartbeat /
+//!   `TaskSpec` pull flow as `kind = "serve"` tasks, handed out *ahead of*
+//!   the regular task queue.
+//! - **Capacity advertisement** — workers annotate each heartbeat with
+//!   their serving capacity ([`ServeCapacity`]: free decode lanes,
+//!   supported max tokens). The router only assigns a query to a node
+//!   whose advertised capacity covers `prompt + max_new`; nodes that
+//!   advertise nothing serve nothing and behave exactly as before.
+//! - **Priority refill** — on the worker, the query joins the next
+//!   generation batch with its priority flag set
+//!   (`runtime::scheduler::run_continuous_prioritized`), so it takes the
+//!   next free decode lane ahead of pending RL prompts. Decode ticks are
+//!   shared; only *lane admission order* changes, and per-rollout RNG
+//!   streams keep every RL rollout's wire output byte-identical under
+//!   co-tenancy.
+//! - **Trust** — a served response ([`ServedResponse`]) travels in the
+//!   same HMAC-signed [`crate::rl::rollout_file::Envelope`] as a rollout
+//!   submission, carries a TOPLOC commitment, and is spot-checked by the
+//!   validator through the `SamplingGate` (`coordinator::validation`):
+//!   completions are deterministic in `(step, query_id)` via
+//!   [`serve_rng`], so a sampled check recomputes the completion and a
+//!   forged response slashes its signer. Replay protection shares the
+//!   rollout `ReplayGuard` keyspace through [`serve_submission_idx`].
+//!
+//! # SLO clock
+//!
+//! Deadline math never reads ambient wall-clock time (swarmlint rule R2
+//! binds on this module): every router method takes an explicit
+//! `now_ms`, and hosts inject a [`SloClock`] at the orchestrator — real
+//! time in production, a deterministic counter in tests.
+
+pub mod router;
+pub mod wire;
+
+pub use router::{ServeCapacity, ServeRouter};
+pub use wire::{ServeRequest, ServedResponse, SERVED_MAGIC};
+
+use crate::util::rng::Rng;
+
+/// Injected time source for deadline/SLO math, in milliseconds from an
+/// epoch the host chooses (R2: trust modules never read wall-clock time
+/// ambiently). The orchestrator defaults to real time and tests inject
+/// deterministic ticks.
+pub type SloClock = std::sync::Arc<dyn Fn() -> u64 + Send + Sync>;
+
+/// `TaskSpec.kind` of a routed serve task on the heartbeat channel.
+pub const SERVE_TASK_KIND: &str = "serve";
+
+/// High bit namespacing served responses inside the envelope
+/// `submission_idx` field: rollout submissions count 0, 1, 2, … per
+/// node/step, so serve envelopes live in the disjoint upper half and a
+/// replayed served response can never collide with (or shadow) a rollout
+/// submission in the validator's `ReplayGuard`.
+pub const SERVE_IDX_BIT: u64 = 1 << 63;
+
+/// Envelope `submission_idx` for a served query (see [`SERVE_IDX_BIT`]).
+pub fn serve_submission_idx(query_id: u64) -> u64 {
+    SERVE_IDX_BIT | (query_id & !SERVE_IDX_BIT)
+}
+
+/// Domain separator for serve-mode sampling streams (distinct from the
+/// rollout `gen_seed` domain, so a query can never alias an RL rollout's
+/// stream).
+const SERVE_RNG_DOMAIN: u64 = 0x5E7E_F00D;
+
+/// The sampling stream for serving `query_id` at policy `step`:
+/// deterministic in public response fields only, so a validator — or any
+/// auditor — recomputes a served completion without knowing which worker
+/// served it or how its scheduler packed the lanes (the same §2.3.3
+/// fixed-sampling property rollouts have).
+pub fn serve_rng(step: u64, query_id: u64) -> Rng {
+    Rng::new(step ^ SERVE_RNG_DOMAIN).fold(query_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_rng_streams_are_distinct_and_stable() {
+        assert_eq!(serve_rng(3, 7).next_u64(), serve_rng(3, 7).next_u64());
+        assert_ne!(serve_rng(3, 7).next_u64(), serve_rng(3, 8).next_u64());
+        assert_ne!(serve_rng(3, 7).next_u64(), serve_rng(4, 7).next_u64());
+        // Never aliases a rollout stream of the same numerology.
+        assert_ne!(
+            serve_rng(3, 7).next_u64(),
+            crate::runtime::scheduler::rollout_rng(3, 7).next_u64()
+        );
+    }
+
+    #[test]
+    fn serve_idx_is_namespaced() {
+        assert_eq!(serve_submission_idx(0), SERVE_IDX_BIT);
+        assert_eq!(serve_submission_idx(5) & !SERVE_IDX_BIT, 5);
+        // Rollout submission indices are small; the bit keeps the spaces
+        // disjoint even for adversarially-large query ids.
+        assert_eq!(serve_submission_idx(SERVE_IDX_BIT | 5), SERVE_IDX_BIT | 5);
+        assert_ne!(serve_submission_idx(3), 3);
+    }
+}

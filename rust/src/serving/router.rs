@@ -1,0 +1,268 @@
+//! Front-door request router: queues user queries, matches them against
+//! worker-advertised serving capacity, and tracks per-query deadlines on
+//! the injected SLO clock. The orchestrator owns one of these inside its
+//! state lock and drains it *ahead of* the regular task queue at
+//! heartbeat time, so a pending user query preempts pending RL work.
+//!
+//! Deadline math takes `now` explicitly everywhere (R2: no ambient
+//! clock reads in trust modules), and iteration is deterministic
+//! (`VecDeque` / `BTreeMap` only — R1): replaying the same heartbeat
+//! order against the same clock yields the same assignments.
+
+// Hostile/absent state must surface as None/0, never as a panic
+// (swarmlint `panic-path`; clippy mirrors the gate in CI).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::metrics::Counter;
+
+use super::wire::ServeRequest;
+
+/// Per-node serving capacity, advertised on every heartbeat: how many
+/// decode lanes the node keeps free for user traffic and the longest
+/// `prompt + max_new` it will take. A node that never advertises is not
+/// a serving node and the router never assigns to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeCapacity {
+    /// Decode lanes currently available for serve traffic.
+    pub free_lanes: u32,
+    /// Longest total sequence (prompt + completion) the node supports.
+    pub max_tokens: u32,
+}
+
+/// A query assigned to a node, awaiting its completion report.
+#[derive(Clone, Debug)]
+struct InFlight {
+    node: u64,
+    request: ServeRequest,
+}
+
+/// FIFO query router with capacity matching and deadline accounting.
+/// All mutation is driven by the orchestrator under its state lock; every
+/// method takes the SLO clock's current reading explicitly.
+#[derive(Default)]
+pub struct ServeRouter {
+    queue: VecDeque<ServeRequest>,
+    in_flight: BTreeMap<u64, InFlight>,
+    capacity: BTreeMap<u64, ServeCapacity>,
+    next_query_id: u64,
+    /// Queries accepted at the front door.
+    pub queries_submitted: Counter,
+    /// Assignments handed to workers (requeues count again).
+    pub queries_assigned: Counter,
+    /// Completions reported back, on time or not.
+    pub queries_completed: Counter,
+    /// Completions that arrived after their deadline.
+    pub deadlines_missed: Counter,
+    /// Queries dropped because their deadline passed before completion
+    /// (in queue, or orphaned past recovery).
+    pub queries_expired: Counter,
+    /// Orphaned queries re-entered at the queue front after their holder
+    /// was evicted or slashed.
+    pub queries_requeued: Counter,
+}
+
+impl ServeRouter {
+    /// Allocate a router-unique query id for a front-door request.
+    pub fn next_query_id(&mut self) -> u64 {
+        let id = self.next_query_id;
+        self.next_query_id += 1;
+        id
+    }
+
+    /// Accept a query at the front door. Returns `false` (and counts an
+    /// expiry) if the deadline already passed — an unserviceable query is
+    /// refused immediately rather than queued to fail.
+    pub fn submit(&mut self, request: ServeRequest, now: u64) -> bool {
+        if now >= request.deadline_ms {
+            self.queries_expired.inc();
+            return false;
+        }
+        self.queries_submitted.inc();
+        self.queue.push_back(request);
+        true
+    }
+
+    /// Record `node`'s latest advertised capacity.
+    pub fn advertise(&mut self, node: u64, capacity: ServeCapacity) {
+        self.capacity.insert(node, capacity);
+    }
+
+    /// `node`'s last advertised capacity, if any.
+    pub fn capacity_of(&self, node: u64) -> Option<ServeCapacity> {
+        self.capacity.get(&node).copied()
+    }
+
+    /// Drop `node` from the capacity table (evicted/slashed nodes must
+    /// not look assignable on stale advertisements).
+    pub fn forget(&mut self, node: u64) {
+        self.capacity.remove(&node);
+    }
+
+    /// Hand `node` the first queued query its advertised capacity covers,
+    /// dropping dead queries (deadline passed) encountered on the way.
+    /// FIFO across the queue; a query no live node can cover stays queued
+    /// until it expires rather than starving younger ones behind it.
+    pub fn assign(&mut self, node: u64, now: u64) -> Option<ServeRequest> {
+        let cap = self.capacity.get(&node).copied()?;
+        if cap.free_lanes == 0 {
+            return None;
+        }
+        let mut picked: Option<usize> = None;
+        let mut i = 0;
+        while i < self.queue.len() {
+            let Some(req) = self.queue.get(i) else { break };
+            if now >= req.deadline_ms {
+                self.queue.remove(i);
+                self.queries_expired.inc();
+                continue; // same index now holds the next query
+            }
+            if req.max_total_tokens() <= u64::from(cap.max_tokens) {
+                picked = Some(i);
+                break;
+            }
+            i += 1;
+        }
+        let request = self.queue.remove(picked?)?;
+        self.queries_assigned.inc();
+        self.in_flight.insert(request.query_id, InFlight { node, request: request.clone() });
+        Some(request)
+    }
+
+    /// A worker reported `query_id` answered. Returns whether the answer
+    /// landed within its deadline (`None`: unknown query — already
+    /// expired, requeued, or never assigned).
+    pub fn complete(&mut self, query_id: u64, now: u64) -> Option<bool> {
+        let inf = self.in_flight.remove(&query_id)?;
+        self.queries_completed.inc();
+        let on_time = now <= inf.request.deadline_ms;
+        if !on_time {
+            self.deadlines_missed.inc();
+        }
+        Some(on_time)
+    }
+
+    /// Recover every query `node` was holding (eviction/slash path):
+    /// still-live queries re-enter at the queue *front* — they have been
+    /// waiting longest — and dead ones are dropped as expired. Also
+    /// forgets the node's capacity. Returns how many were requeued.
+    pub fn requeue_node(&mut self, node: u64, now: u64) -> u64 {
+        self.forget(node);
+        let orphaned: Vec<u64> = self
+            .in_flight
+            .iter()
+            .filter(|(_, inf)| inf.node == node)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut requeued = 0;
+        // Reverse order keeps front-pushed orphans in their original
+        // relative order (the same `.rev()` idiom as task requeue).
+        for id in orphaned.into_iter().rev() {
+            let Some(inf) = self.in_flight.remove(&id) else { continue };
+            if now >= inf.request.deadline_ms {
+                self.queries_expired.inc();
+            } else {
+                self.queue.push_front(inf.request);
+                self.queries_requeued.inc();
+                requeued += 1;
+            }
+        }
+        requeued
+    }
+
+    /// Queries waiting for assignment.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queries assigned and not yet completed.
+    pub fn assigned(&self) -> usize {
+        self.in_flight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize, max_new: u32, deadline_ms: u64) -> ServeRequest {
+        ServeRequest { query_id: id, prompt: vec![1; plen], max_new, deadline_ms }
+    }
+
+    #[test]
+    fn fifo_assignment_respects_capacity() {
+        let mut r = ServeRouter::default();
+        assert!(r.submit(req(0, 4, 100, 1000), 0)); // needs 104 tokens
+        assert!(r.submit(req(1, 4, 8, 1000), 0)); // needs 12
+        // No capacity advertised: nothing to assign.
+        assert_eq!(r.assign(7, 10), None);
+        // Small node skips the big query but serves the small one (FIFO
+        // among coverable queries).
+        r.advertise(7, ServeCapacity { free_lanes: 1, max_tokens: 64 });
+        assert_eq!(r.assign(7, 10).map(|q| q.query_id), Some(1));
+        // Big node picks up the head-of-line query.
+        r.advertise(8, ServeCapacity { free_lanes: 2, max_tokens: 256 });
+        assert_eq!(r.assign(8, 10).map(|q| q.query_id), Some(0));
+        assert_eq!(r.pending(), 0);
+        assert_eq!(r.assigned(), 2);
+        // Zero advertised lanes = not assignable.
+        r.submit(req(2, 4, 8, 1000), 0);
+        r.advertise(9, ServeCapacity { free_lanes: 0, max_tokens: 256 });
+        assert_eq!(r.assign(9, 10), None);
+    }
+
+    #[test]
+    fn deadlines_expire_and_complete_on_time_or_late() {
+        let mut r = ServeRouter::default();
+        // Already dead at the front door: refused.
+        assert!(!r.submit(req(0, 2, 4, 100), 100));
+        assert_eq!(r.queries_expired.get(), 1);
+        // Dies in queue: dropped at assignment time.
+        assert!(r.submit(req(1, 2, 4, 200), 0));
+        assert!(r.submit(req(2, 2, 4, 900), 0));
+        r.advertise(7, ServeCapacity { free_lanes: 1, max_tokens: 64 });
+        assert_eq!(r.assign(7, 500).map(|q| q.query_id), Some(2));
+        assert_eq!(r.queries_expired.get(), 2);
+        // On-time and late completions are told apart.
+        assert_eq!(r.complete(2, 899), Some(true));
+        r.submit(req(3, 2, 4, 1000), 950);
+        r.assign(7, 960).unwrap();
+        assert_eq!(r.complete(3, 2000), Some(false));
+        assert_eq!(r.deadlines_missed.get(), 1);
+        // Unknown query: None.
+        assert_eq!(r.complete(99, 0), None);
+    }
+
+    #[test]
+    fn requeue_recovers_orphans_in_order_and_drops_dead_ones() {
+        let mut r = ServeRouter::default();
+        r.advertise(7, ServeCapacity { free_lanes: 4, max_tokens: 64 });
+        for id in 0..3 {
+            r.submit(req(id, 2, 4, if id == 1 { 50 } else { 1000 }), 0);
+            r.assign(7, 10).unwrap();
+        }
+        assert_eq!(r.assigned(), 3);
+        // Node dies at t=100: query 1's deadline (50) has passed.
+        assert_eq!(r.requeue_node(7, 100), 2);
+        assert_eq!(r.queries_expired.get(), 1);
+        assert_eq!(r.assigned(), 0);
+        // Orphans re-enter at the front in their original order, and the
+        // dead node's capacity is forgotten.
+        assert_eq!(r.capacity_of(7), None);
+        assert_eq!(r.assign(7, 100), None);
+        r.advertise(8, ServeCapacity { free_lanes: 4, max_tokens: 64 });
+        assert_eq!(r.assign(8, 100).map(|q| q.query_id), Some(0));
+        assert_eq!(r.assign(8, 100).map(|q| q.query_id), Some(2));
+        // Requeue of a node holding nothing is a no-op.
+        assert_eq!(r.requeue_node(9, 100), 0);
+    }
+
+    #[test]
+    fn query_ids_are_unique() {
+        let mut r = ServeRouter::default();
+        assert_eq!(r.next_query_id(), 0);
+        assert_eq!(r.next_query_id(), 1);
+        assert_eq!(r.next_query_id(), 2);
+    }
+}

@@ -1,0 +1,275 @@
+//! Wire types for serve mode: the user query the router dispatches
+//! ([`ServeRequest`], JSON — it rides `TaskSpec.payload` through the
+//! heartbeat flow) and the signed response a worker uploads
+//! ([`ServedResponse`], binary — it rides the same HMAC-signed
+//! [`Envelope`] as a rollout submission, with a TOPLOC commitment, so the
+//! validator's stage 0 and the slashing path apply unchanged).
+
+// Trust-critical parse path: hostile uploads must decode to Err, never
+// panic (swarmlint `panic-path`; clippy mirrors the gate in CI).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use crate::protocol::identity::Identity;
+use crate::rl::rollout_file::Envelope;
+use crate::util::json::Json;
+use crate::util::wire::Cursor;
+
+use super::serve_submission_idx;
+
+/// Served-response wire magic ("INTELLECT-2 Served Response").
+pub const SERVED_MAGIC: [u8; 4] = *b"I2SR";
+
+/// Served-response wire version this build emits and accepts.
+pub const SERVED_VERSION: u8 = 1;
+
+/// One user query, as routed to a worker. Serialized as JSON because it
+/// travels inside `TaskSpec.payload` on the heartbeat channel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRequest {
+    /// Front-door-assigned id, unique per router lifetime; also the
+    /// sampling-stream key (`serve_rng(step, query_id)`).
+    pub query_id: u64,
+    /// Prompt token ids (BOS-first, same alphabet as RL prompts).
+    pub prompt: Vec<i32>,
+    /// Completion-length cap for this query.
+    pub max_new: u32,
+    /// Absolute SLO deadline in milliseconds on the router's injected
+    /// clock; queries past it are dropped, not served.
+    pub deadline_ms: u64,
+}
+
+impl ServeRequest {
+    /// Serialize for `TaskSpec.payload`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("query_id", self.query_id.into()),
+            (
+                "prompt",
+                Json::Arr(self.prompt.iter().map(|&t| Json::from(t as u32 as u64)).collect()),
+            ),
+            ("max_new", u64::from(self.max_new).into()),
+            ("deadline_ms", self.deadline_ms.into()),
+        ])
+    }
+
+    /// Parse a `TaskSpec.payload` back into a query. `None` on any
+    /// structural defect — a malformed serve task is dropped, never
+    /// panicked on.
+    pub fn from_json(j: &Json) -> Option<ServeRequest> {
+        let prompt = j
+            .get("prompt")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_u64().map(|v| v as u32 as i32))
+            .collect::<Option<Vec<i32>>>()?;
+        Some(ServeRequest {
+            query_id: j.get("query_id")?.as_u64()?,
+            prompt,
+            max_new: u32::try_from(j.get("max_new")?.as_u64()?).ok()?,
+            deadline_ms: j.get("deadline_ms")?.as_u64()?,
+        })
+    }
+
+    /// Tokens this query may occupy on a lane (prompt + completion cap) —
+    /// what the router matches against advertised capacity.
+    pub fn max_total_tokens(&self) -> u64 {
+        self.prompt.len() as u64 + u64::from(self.max_new)
+    }
+}
+
+/// A worker's answer to one [`ServeRequest`]: the full token sequence,
+/// per-token sampling probabilities and a TOPLOC commitment — the same
+/// observables a rollout carries, because the same spot-check story
+/// covers both (`SamplingGate::gate_served`).
+///
+/// Wire layout (little-endian):
+/// `"I2SR" | u8 version | u64 query_id | u64 node | u64 step |
+/// u32 prompt_len | u8 finish_eos | f32 eos_prob | u32 n_tokens |
+/// i32 tokens[n] | u32 n_probs | f32 probs[n] | u32 n_commit |
+/// u8 commitment[n]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServedResponse {
+    pub query_id: u64,
+    /// Serving node (must match the envelope's proven sender).
+    pub node_address: u64,
+    /// Policy version the completion was decoded under.
+    pub step: u64,
+    /// Prompt + completion token ids.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Model probability of each sampled completion token.
+    pub sampled_probs: Vec<f32>,
+    /// Encoded TOPLOC commitment over the decode's hidden rows.
+    pub commitment: Vec<u8>,
+    /// True if the completion terminated on EOS (else length cap).
+    pub finish_eos: bool,
+    /// Model probability of EOS at the terminating step.
+    pub eos_prob: f32,
+}
+
+impl ServedResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            4 + 1 + 3 * 8 + 4 + 1 + 4 + 4 * (self.tokens.len() + self.sampled_probs.len() + 3)
+                + self.commitment.len(),
+        );
+        out.extend_from_slice(&SERVED_MAGIC);
+        out.push(SERVED_VERSION);
+        out.extend_from_slice(&self.query_id.to_le_bytes());
+        out.extend_from_slice(&self.node_address.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(self.prompt_len as u32).to_le_bytes());
+        out.push(u8::from(self.finish_eos));
+        out.extend_from_slice(&self.eos_prob.to_le_bytes());
+        out.extend_from_slice(&(self.tokens.len() as u32).to_le_bytes());
+        for t in &self.tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.sampled_probs.len() as u32).to_le_bytes());
+        for p in &self.sampled_probs {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.commitment.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.commitment);
+        out
+    }
+
+    /// Sign + serialize for upload: the payload wrapped in a signed
+    /// [`Envelope`] under `identity`'s key, with the `submission_idx`
+    /// namespaced by [`super::SERVE_IDX_BIT`] so serve replays and rollout
+    /// replays can never shadow each other in the `ReplayGuard`.
+    pub fn encode_signed(&self, identity: &Identity) -> Vec<u8> {
+        Envelope::seal(identity, self.step, serve_submission_idx(self.query_id), &self.encode())
+    }
+
+    /// Decode + structurally validate untrusted payload bytes. Everything
+    /// the gate consumes downstream is made safe here: lengths are
+    /// cross-checked against the buffer (a hostile header cannot force a
+    /// huge allocation) and `prompt_len < tokens.len()` is enforced.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<ServedResponse> {
+        let mut c = Cursor::new(bytes);
+        let bad = || anyhow::anyhow!("truncated served response");
+        anyhow::ensure!(
+            c.array::<4>().ok_or_else(bad)? == SERVED_MAGIC,
+            "not a served response (bad magic)"
+        );
+        anyhow::ensure!(c.u8().ok_or_else(bad)? == SERVED_VERSION, "unknown version");
+        let query_id = c.u64_le().ok_or_else(bad)?;
+        let node_address = c.u64_le().ok_or_else(bad)?;
+        let step = c.u64_le().ok_or_else(bad)?;
+        let prompt_len = c.u32_le().ok_or_else(bad)? as usize;
+        let finish_eos = c.u8().ok_or_else(bad)? != 0;
+        let eos_prob = c.f32_le().ok_or_else(bad)?;
+        let n_tokens = c.u32_le().ok_or_else(bad)? as usize;
+        anyhow::ensure!(n_tokens.saturating_mul(4) <= c.remaining(), "token count exceeds buffer");
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(c.u32_le().ok_or_else(bad)? as i32);
+        }
+        let n_probs = c.u32_le().ok_or_else(bad)? as usize;
+        anyhow::ensure!(n_probs.saturating_mul(4) <= c.remaining(), "prob count exceeds buffer");
+        let mut sampled_probs = Vec::with_capacity(n_probs);
+        for _ in 0..n_probs {
+            sampled_probs.push(c.f32_le().ok_or_else(bad)?);
+        }
+        let n_commit = c.u32_le().ok_or_else(bad)? as usize;
+        let commitment = c.take(n_commit).ok_or_else(bad)?.to_vec();
+        anyhow::ensure!(c.remaining() == 0, "trailing bytes after served response");
+        anyhow::ensure!(!tokens.is_empty(), "empty served response");
+        anyhow::ensure!(
+            prompt_len >= 1 && prompt_len < tokens.len(),
+            "prompt_len {prompt_len} outside 1..{}",
+            tokens.len()
+        );
+        Ok(ServedResponse {
+            query_id,
+            node_address,
+            step,
+            tokens,
+            prompt_len,
+            sampled_probs,
+            commitment,
+            finish_eos,
+            eos_prob,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_response() -> ServedResponse {
+        ServedResponse {
+            query_id: 42,
+            node_address: 0xAB,
+            step: 4,
+            tokens: vec![1, 5, 7, 9, 2],
+            prompt_len: 2,
+            sampled_probs: vec![0.5, 0.25, 0.75],
+            commitment: vec![1, 2, 3],
+            finish_eos: true,
+            eos_prob: 0.9,
+        }
+    }
+
+    #[test]
+    fn request_json_roundtrip() {
+        let req = ServeRequest {
+            query_id: 9,
+            prompt: vec![1, 3, 5],
+            max_new: 32,
+            deadline_ms: 12_345,
+        };
+        assert_eq!(ServeRequest::from_json(&req.to_json()), Some(req.clone()));
+        assert_eq!(req.max_total_tokens(), 35);
+        // Structural defects are a clean miss.
+        assert_eq!(ServeRequest::from_json(&Json::obj(vec![("query_id", 1u64.into())])), None);
+        assert_eq!(ServeRequest::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn response_roundtrip_and_signed_envelope() {
+        let r = sample_response();
+        assert_eq!(ServedResponse::decode(&r.encode()).unwrap(), r);
+
+        let id = Identity::from_seed(7);
+        let mut signed = sample_response();
+        signed.node_address = id.address;
+        let bytes = signed.encode_signed(&id);
+        let (env, payload) = Envelope::parse(&bytes).unwrap();
+        assert_eq!(env.node_address, id.address);
+        assert_eq!(env.step, signed.step);
+        assert_eq!(env.submission_idx, serve_submission_idx(signed.query_id));
+        assert!(env.digest_matches(payload));
+        assert!(env.verify_sig(&id.secret()));
+        assert_eq!(ServedResponse::decode(payload).unwrap(), signed);
+    }
+
+    #[test]
+    fn hostile_response_bytes_error_out() {
+        use crate::util::rng::Rng;
+        let bytes = sample_response().encode();
+        for cut in 0..bytes.len() {
+            let _ = ServedResponse::decode(&bytes[..cut]);
+        }
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let mut b = bytes.clone();
+            for _ in 0..1 + rng.usize(3) {
+                let i = rng.usize(b.len());
+                b[i] = b[i].wrapping_add(1 + rng.next_u32() as u8 % 255);
+            }
+            let _ = ServedResponse::decode(&b); // Err or Ok, never panic
+        }
+        // A hostile length header cannot force a huge allocation.
+        let mut huge = bytes.clone();
+        let n_tok_off = 4 + 1 + 24 + 4 + 1 + 4;
+        huge[n_tok_off..n_tok_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ServedResponse::decode(&huge).is_err());
+        // prompt_len must leave at least one completion token.
+        let mut bad = sample_response();
+        bad.prompt_len = bad.tokens.len();
+        assert!(ServedResponse::decode(&bad.encode()).is_err());
+    }
+}

@@ -196,14 +196,19 @@ pub struct BenchFigure {
 /// in `BENCH_generation.json`) shrink when things get better;
 /// throughputs, speedups, occupancies and gains grow. One carve-out: a
 /// `*_per_s`/`*_per_sec` suffix is a throughput (rollouts_per_s_*), not a
-/// cost ratio, despite carrying the `_per_` marker.
+/// cost ratio, despite carrying the `_per_` marker. Serving latencies
+/// (`*_ms` wall milliseconds and the `*_p50`/`*_p99` percentile figures
+/// in `BENCH_serving.json`) shrink when serving gets better.
 fn lower_is_better(key: &str) -> bool {
     if key.contains("_per_s") {
         return false;
     }
-    ["_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts", "_per_"]
-        .iter()
-        .any(|marker| key.contains(marker))
+    [
+        "_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts",
+        "_per_", "_ms", "_p50", "_p99",
+    ]
+    .iter()
+    .any(|marker| key.contains(marker))
 }
 
 /// Old-vs-new delta for one figure; `delta_frac` is `(new - old) / old`,
@@ -380,5 +385,18 @@ mod tests {
         assert!(!lower_is_better("sampled_speedup"));
         assert!(!lower_is_better("verify_rollouts_per_sec"));
         assert!(!lower_is_better("rollouts_per_s_continuous"));
+    }
+
+    #[test]
+    fn serving_figures_have_directions() {
+        // BENCH_serving.json figures: latency percentiles shrink when
+        // serving improves; tokens/sec and goodput retention grow. The
+        // `_per_s` carve-out must survive the `_ms`/`_p50`/`_p99` markers.
+        for key in ["ttft_p50_ms", "ttft_p99_ms", "serve_wall_ms"] {
+            assert!(lower_is_better(key), "{key}");
+        }
+        for key in ["served_tokens_per_s", "rl_goodput_retention", "queries_served"] {
+            assert!(!lower_is_better(key), "{key}");
+        }
     }
 }

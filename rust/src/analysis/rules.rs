@@ -137,10 +137,16 @@ pub fn repo_config() -> Config {
         "protocol/orchestrator::inner",
         "protocol/ledger::inner",
         "protocol/discovery::inner",
+        "protocol/gossip::view",
+        "protocol/gossip::seeds",
+        "protocol/gossip::rng",
         "protocol/worker::blobs",
+        "protocol/worker::gossip_seed",
+        "shardcast/server::parents",
         "shardcast/client::relays",
         "shardcast/client::rng",
         "http/server::buckets",
+        "http/faults::cuts",
         "util/metrics::rows",
         "util/metrics::inner",
         "util/pool::rx",

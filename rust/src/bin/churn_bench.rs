@@ -14,8 +14,19 @@
 //! - the churn run samples its payload audits (rate 0.25): some fetches
 //!   are fully audited, some admitted unaudited, and every audit passes
 //!   (an audit mismatch fails the fetch task, stalling the step quota).
+//!
+//! The tree leg (`BENCH_shardcast.json`) runs the gossip-formed SHARDCAST
+//! tree twice under an identical mid-epoch fault schedule (hub relay
+//! killed + a survivor partitioned from its new parent) — once with full
+//! raw broadcast, once with delta + q8 encoding — and gates on:
+//! - delivery_rate == 1.0 on both legs (every live worker assembles a
+//!   checksum-valid checkpoint for every step);
+//! - membership converged by gossip alone: zero hits on the central
+//!   discovery list endpoint, final views == the true live set;
+//! - no honest node slashed;
+//! - delta + q8 cuts measured origin egress >= 40% vs full broadcast.
 
-use intellect2::coordinator::{run_churn, ChurnConfig};
+use intellect2::coordinator::{run_churn, run_tree_churn, ChurnConfig, TreeChurnConfig};
 use intellect2::http::FaultSpec;
 use intellect2::util::bench::BenchReport;
 
@@ -124,5 +135,98 @@ fn main() -> anyhow::Result<()> {
     );
     let path = rep.write()?;
     println!("wrote {}", path.display());
+
+    // --- Tree leg: gossip-formed SHARDCAST tree under relay kill + partition.
+    // Both legs share seed and fault schedule; only the wire encoding differs,
+    // so the egress delta isolates what delta + q8 actually saves.
+    let full_cfg = TreeChurnConfig { delta: false, quantize: false, ..TreeChurnConfig::default() };
+    let enc_cfg = TreeChurnConfig::default();
+
+    println!(
+        "tree/full: {} steps, {} relays, kill+partition at step {} ...",
+        full_cfg.steps, full_cfg.n_relays, full_cfg.fault_step
+    );
+    let full = run_tree_churn(&full_cfg)?;
+    println!(
+        "tree/full: {}/{} deliveries, {} origin bytes, reform in {} step(s)",
+        full.deliveries, full.delivery_attempts, full.origin_egress_bytes, full.reform_latency_steps
+    );
+    println!("tree/delta+q8: {} steps, same fault schedule ...", enc_cfg.steps);
+    let enc = run_tree_churn(&enc_cfg)?;
+    println!(
+        "tree/delta+q8: {}/{} deliveries ({} delta shards), {} origin bytes, \
+         reform in {} step(s)",
+        enc.deliveries,
+        enc.delivery_attempts,
+        enc.delta_shards,
+        enc.origin_egress_bytes,
+        enc.reform_latency_steps
+    );
+
+    let legs = [("full", &full, full_cfg.steps), ("delta+q8", &enc, enc_cfg.steps)];
+    for (name, leg, steps) in legs {
+        anyhow::ensure!(
+            leg.steps_completed == steps,
+            "tree/{name} incomplete: {} of {} steps",
+            leg.steps_completed,
+            steps
+        );
+        anyhow::ensure!(
+            leg.delivery_rate == 1.0,
+            "tree/{name} dropped checkpoints: delivery rate {:.3}",
+            leg.delivery_rate
+        );
+        anyhow::ensure!(
+            leg.relays_killed == 1 && leg.partitions_cut == 1,
+            "tree/{name} fault schedule not exercised: {} killed, {} cut",
+            leg.relays_killed,
+            leg.partitions_cut
+        );
+        anyhow::ensure!(
+            leg.partition_refusals > 0,
+            "tree/{name} partition never refused a connection"
+        );
+        anyhow::ensure!(
+            leg.reparent_events >= 1,
+            "tree/{name} never re-parented around the fault"
+        );
+        anyhow::ensure!(
+            leg.honest_slashed == 0,
+            "tree/{name}: {} honest node(s) slashed",
+            leg.honest_slashed
+        );
+        anyhow::ensure!(
+            leg.gossip_converged,
+            "tree/{name} gossip views did not converge to the live set"
+        );
+        anyhow::ensure!(
+            leg.list_calls == 0,
+            "tree/{name} fell back to the central list endpoint {} time(s)",
+            leg.list_calls
+        );
+        anyhow::ensure!(leg.invites_via_gossip > 0, "tree/{name} invited no workers via gossip");
+    }
+    anyhow::ensure!(enc.delta_shards > 0, "encoded leg never served a delta shard");
+
+    let savings = 1.0 - enc.origin_egress_bytes as f64 / full.origin_egress_bytes.max(1) as f64;
+    println!(
+        "origin egress: {} -> {} bytes ({:.0}% saved)",
+        full.origin_egress_bytes,
+        enc.origin_egress_bytes,
+        savings * 100.0
+    );
+    anyhow::ensure!(
+        savings >= 0.40,
+        "delta + q8 saved only {:.0}% origin egress (need >= 40%)",
+        savings * 100.0
+    );
+
+    let mut tree_rep = BenchReport::new("shardcast");
+    tree_rep.metric("origin_egress_bytes", enc.origin_egress_bytes as f64);
+    tree_rep.metric("delta_egress_savings", savings);
+    tree_rep.metric("reform_latency_steps", enc.reform_latency_steps as f64);
+    tree_rep.metric("delivery_rate", enc.delivery_rate);
+    let tree_path = tree_rep.write()?;
+    println!("wrote {}", tree_path.display());
     Ok(())
 }

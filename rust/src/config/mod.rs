@@ -91,6 +91,13 @@ pub struct RunConfig {
     /// Swarm shape (threaded e2e driver).
     pub n_workers: usize,
     pub n_relays: usize,
+    /// Per-node fan-out bound when planning the SHARDCAST relay tree
+    /// (`shardcast::plan_tree`); clamped to >= 1.
+    pub shardcast_fanout: usize,
+    /// Publish per-shard delta wires against the previous checkpoint.
+    /// Transport-only: assembled checkpoints are byte-identical, only the
+    /// origin's egress shrinks.
+    pub delta_encoding: bool,
     /// Simulated per-worker downlink in bytes/sec (0 = unshaped).
     pub worker_ingress_bps: u64,
     /// Simulated origin uplink in bytes/sec (0 = unshaped): makes the
@@ -157,6 +164,8 @@ impl Default for RunConfig {
             env_mix: EnvMix::of(&[("math", 400), ("code", 60), ("seq", 50), ("chain", 50)]),
             n_workers: 3,
             n_relays: 2,
+            shardcast_fanout: 2,
+            delta_encoding: false,
             worker_ingress_bps: 0,
             origin_egress_bps: 0,
             batch_timeout_secs: 120,
@@ -198,6 +207,8 @@ impl RunConfig {
         self.hp.ent_coef = a.f32_or("ent-coef", self.hp.ent_coef);
         self.n_workers = a.usize_or("workers", self.n_workers);
         self.n_relays = a.usize_or("relays", self.n_relays);
+        self.shardcast_fanout = a.usize_or("shardcast-fanout", self.shardcast_fanout);
+        self.delta_encoding = a.bool_or("delta-encoding", self.delta_encoding);
         if let Some(mix) = a.get("env-mix") {
             self.env_mix = EnvMix::parse(mix).expect("--env-mix");
         }

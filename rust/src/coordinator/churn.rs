@@ -20,18 +20,25 @@
 //!   ([`ChurnConfig::sampling_rate`]; selection mirrors the validation
 //!   pipeline's trust-weighted sampling gate).
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::validation::ValidatorCommitment;
-use crate::http::{FaultInjector, FaultPlan, FaultSpec, ServerConfig};
+use crate::http::{FaultInjector, FaultPlan, FaultSpec, Partition, ServerConfig};
 use crate::protocol::{
-    DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker,
+    DiscoveryServer, GossipAgent, GossipConfig, GossipServer, HardwareSpec, Identity, Ledger,
+    Orchestrator, OrchestratorServer, PeerRole, Tx, Worker,
 };
-use crate::shardcast::{Origin, Relay, ShardcastClient};
+use crate::shardcast::{
+    dequantize_q8, encode_delta, plan_tree, quantize_q8, reform, Manifest, Origin, Relay,
+    RelayPeer, ShardcastClient, TreePlan,
+};
 use crate::util::json::Json;
 use crate::util::metrics::Counter;
 use crate::util::rng::Rng;
+use crate::util::Clock;
 
 /// Churn-pick domains (streams of the shared [`FaultPlan`]).
 const DOMAIN_WORKER_CRASH: u64 = 1;
@@ -440,6 +447,537 @@ pub fn run_churn(cfg: &ChurnConfig) -> anyhow::Result<ChurnReport> {
         all_addresses.iter().filter(|&&a| ledger.is_slashed(1, a)).count() as u64;
     report.audits_full = audit.full.get();
     report.audits_skipped = audit.skipped.get();
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Tree-churn harness: a gossip-bootstrapped swarm distributing per-step
+// checkpoints through a planned SHARDCAST tree that is killed, partitioned
+// and re-formed mid-epoch, with optional delta + q8 wire encoding. Drives
+// the `churn_bench` tree leg and `tests/churn_e2e.rs`.
+// ---------------------------------------------------------------------------
+
+/// Logical milliseconds advanced per tree-churn step (the shared injected
+/// clock that discovery TTLs and gossip record expiry run on).
+const TREE_STEP_MS: u64 = 1_000;
+/// Gossip record TTL in logical ms — records survive a few missed steps,
+/// then age out of every view symmetrically.
+const TREE_GOSSIP_TTL_MS: u64 = 5_000;
+/// Harness steps a partition cut stays live before healing.
+const PARTITION_STEPS: u64 = 2;
+
+#[derive(Clone, Debug)]
+pub struct TreeChurnConfig {
+    pub seed: u64,
+    pub steps: u64,
+    pub n_relays: usize,
+    pub n_workers: usize,
+    /// Synthetic checkpoint size. Must be a multiple of 4: the payload is
+    /// generated as little-endian `f32`s so q8 quantization is meaningful.
+    pub payload_bytes: usize,
+    pub shard_bytes: usize,
+    /// Per-node fan-out bound for the planned tree.
+    pub fanout: usize,
+    /// Publish per-shard delta wires against the previous checkpoint.
+    pub delta: bool,
+    /// Quantize checkpoints to q8 before the manifest is built.
+    pub quantize: bool,
+    /// Fraction of floats rewritten per step — in contiguous spans, the
+    /// way RL policy updates move layer-locally, so most q8 blocks (and
+    /// hence most delta wires) stay near-empty.
+    pub mutation_frac: f64,
+    /// Step at which one hub relay is killed and a partition is cut
+    /// between a surviving relay and its new preferred parent (0 = no
+    /// faults).
+    pub fault_step: u64,
+    /// Per-step delivery deadline shared by all workers.
+    pub step_timeout: Duration,
+}
+
+impl Default for TreeChurnConfig {
+    fn default() -> TreeChurnConfig {
+        TreeChurnConfig {
+            seed: 11,
+            steps: 6,
+            n_relays: 4,
+            n_workers: 3,
+            payload_bytes: 64 * 1024,
+            shard_bytes: 8 * 1024,
+            fanout: 2,
+            delta: true,
+            quantize: true,
+            mutation_frac: 0.05,
+            fault_step: 3,
+            step_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a tree-torture run survived and what the origin paid for it.
+#[derive(Debug, Clone, Default)]
+pub struct TreeChurnReport {
+    /// Steps on which *every* worker assembled the checkpoint in time.
+    pub steps_completed: u64,
+    pub deliveries: u64,
+    pub delivery_attempts: u64,
+    /// `deliveries / delivery_attempts` — the binding gate wants 1.0.
+    pub delivery_rate: f64,
+    /// Total bytes the origin server sent (manifest polls + shards +
+    /// delta wires to the tier-1 relays — workers never touch it).
+    pub origin_egress_bytes: u64,
+    /// Bytes workers actually pulled over the wire (delta wires where the
+    /// ladder hit, full shards where it fell back).
+    pub worker_wire_bytes: u64,
+    /// Worker-side shards satisfied by a `/delta` wire.
+    pub delta_shards: u64,
+    pub relays_killed: u64,
+    pub partitions_cut: u64,
+    /// Connections dropped by live partition cuts — proves the cut bit.
+    pub partition_refusals: u64,
+    /// Parent rotations on relays still alive at the end.
+    pub reparent_events: u64,
+    /// Steps from the fault until every surviving relay had fully
+    /// mirrored the current checkpoint again (0 = same step).
+    pub reform_latency_steps: u64,
+    /// Invites delivered off the orchestrator's own gossip view.
+    pub invites_via_gossip: u64,
+    /// Gossip records rejected across all agents (bad sig / expired).
+    pub gossip_rejected: u64,
+    /// After the dead relay aged out: every live agent's view held
+    /// exactly the live membership.
+    pub gossip_converged: bool,
+    /// Hits on the central discovery list endpoint — must stay 0.
+    pub list_calls: u64,
+    /// Honest participants slashed on the ledger — must stay 0.
+    pub honest_slashed: u64,
+    pub elapsed_secs: f64,
+}
+
+struct TreeWorker {
+    worker: Worker,
+    gossip: GossipServer,
+    address: u64,
+    /// Previously assembled (step, published bytes) — the delta base this
+    /// worker can offer on its next fetch.
+    prev: Option<(u64, Vec<u8>)>,
+}
+
+/// Project the Relay-role records of a gossip view onto the tree
+/// planner's input, keeping only relays this harness actually booted.
+fn relay_peers_from(agent: &GossipAgent, names: &BTreeMap<u64, String>) -> Vec<RelayPeer> {
+    agent
+        .peers_with_role(PeerRole::Relay)
+        .into_iter()
+        .filter_map(|r| {
+            names.get(&r.address).map(|n| RelayPeer {
+                name: n.clone(),
+                url: r.endpoint.clone(),
+                uplink_mbps: r.uplink_mbps,
+                pull_latency_ms: 0,
+            })
+        })
+        .collect()
+}
+
+/// Run the tree-torture schedule described by `cfg`.
+///
+/// Membership converges through gossip alone (the discovery list endpoint
+/// is never consulted — [`TreeChurnReport::list_calls`] proves it), the
+/// relay tree is planned from the gossiped view's advertised uplinks, and
+/// at [`TreeChurnConfig::fault_step`] a hub relay dies *and* a surviving
+/// relay is partitioned from its new preferred parent — mid-broadcast.
+/// Every worker must still assemble a checksum-valid checkpoint for every
+/// step.
+pub fn run_tree_churn(cfg: &TreeChurnConfig) -> anyhow::Result<TreeChurnReport> {
+    anyhow::ensure!(cfg.n_relays >= 3, "need >= 3 relays for a tree worth re-forming");
+    anyhow::ensure!(cfg.n_workers >= 2, "need >= 2 workers");
+    anyhow::ensure!(
+        cfg.payload_bytes > 0 && cfg.payload_bytes % 4 == 0,
+        "payload must be f32-aligned"
+    );
+    let t0 = Instant::now();
+
+    // Logical time: one injected clock shared by discovery and every
+    // gossip agent — advanced by the harness, never slept on.
+    let cell = Arc::new(AtomicU64::new(1_000));
+    let clock: Clock = {
+        let c = Arc::clone(&cell);
+        Arc::new(move || c.load(Ordering::SeqCst))
+    };
+    // Epidemic fan-out large enough to cover the whole swarm per tick:
+    // convergence becomes deterministic instead of merely very likely.
+    let gossip_fanout = cfg.n_relays + cfg.n_workers + 2;
+
+    // --- control plane (discovery is register-only in this harness) ---
+    let ledger = Ledger::new();
+    let owner = Identity::from_seed(cfg.seed ^ 0x0FF1CE);
+    ledger.register_key(&owner);
+    ledger.submit(
+        Tx::CreatePool { domain: "dist-rl".into(), pool_id: 1, owner: owner.address },
+        &owner,
+    )?;
+    let discovery = DiscoveryServer::start_with_clock("pool-token", 600_000, Arc::clone(&clock))?;
+    let orch = Orchestrator::new(owner, ledger.clone(), 1, 100);
+    let orch_srv = OrchestratorServer::start(orch.clone())?;
+    // The orchestrator's gossip half signs with the same pool-owner key
+    // (`Identity::from_seed` is deterministic).
+    let orch_gossip = GossipServer::start(
+        Arc::new(Identity::from_seed(cfg.seed ^ 0x0FF1CE)),
+        ledger.clone(),
+        GossipConfig {
+            role: PeerRole::Orchestrator,
+            endpoint: orch_srv.url(),
+            ttl_ms: TREE_GOSSIP_TTL_MS,
+            fanout: gossip_fanout,
+            seed: cfg.seed,
+            ..GossipConfig::default()
+        },
+        Arc::clone(&clock),
+    )?;
+
+    // --- origin + relay tier: every server shares one Partition handle,
+    // so cuts can sever any (client, server-domain) edge mid-run ---
+    let partition = Partition::new();
+    let origin = Origin::start(ServerConfig {
+        partition: Some(Arc::clone(&partition)),
+        domain: "origin".into(),
+        ..ServerConfig::default()
+    })?;
+    let mut uprng = Rng::new(cfg.seed ^ 0x0B15);
+    let mut relays: Vec<Option<Relay>> = Vec::new();
+    let mut relay_gossip: Vec<Option<GossipServer>> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut addr_names: BTreeMap<u64, String> = BTreeMap::new();
+    for slot in 0..cfg.n_relays {
+        let name = format!("t{slot}");
+        let relay = Relay::start_with_parents(
+            &name,
+            vec![origin.url()],
+            ServerConfig {
+                partition: Some(Arc::clone(&partition)),
+                domain: name.clone(),
+                ..ServerConfig::default()
+            },
+            Duration::from_millis(10),
+        )?;
+        let id = Arc::new(Identity::from_seed(cfg.seed ^ (0x0E1A_0000 + slot as u64)));
+        ledger.register_key(&id);
+        addr_names.insert(id.address, name.clone());
+        let gs = GossipServer::start(
+            Arc::clone(&id),
+            ledger.clone(),
+            GossipConfig {
+                role: PeerRole::Relay,
+                endpoint: relay.url(),
+                // Heterogeneous advertised uplinks: what the planner ranks.
+                uplink_mbps: 50 + uprng.range(0, 950),
+                ttl_ms: TREE_GOSSIP_TTL_MS,
+                fanout: gossip_fanout,
+                seed: cfg.seed ^ slot as u64,
+                ..GossipConfig::default()
+            },
+            Arc::clone(&clock),
+        )?;
+        gs.agent.add_seed(&orch_gossip.url());
+        relays.push(Some(relay));
+        relay_gossip.push(Some(gs));
+        names.push(name);
+    }
+
+    // --- workers: boot (registers with discovery — the allowed half),
+    // gossip from the public bootnode URL, get invited *through gossip* ---
+    let mut workers: Vec<TreeWorker> = Vec::new();
+    let mut wseed = cfg.seed ^ 0xBEEF;
+    while workers.len() < cfg.n_workers {
+        let seed_i = wseed;
+        wseed = wseed.wrapping_add(1);
+        // Hardware-gated boot: skip simulated-incompatible identities.
+        let Ok(worker) = Worker::boot(Identity::from_seed(seed_i), &ledger, 1, &discovery.url(), 8)
+        else {
+            continue;
+        };
+        let address = worker.identity.address;
+        let endpoint = worker
+            .endpoint()
+            .ok_or_else(|| anyhow::anyhow!("worker {address} has no invite endpoint"))?;
+        let hw = HardwareSpec::detect(address);
+        let gs = GossipServer::start(
+            Arc::new(Identity::from_seed(seed_i)),
+            ledger.clone(),
+            GossipConfig {
+                role: PeerRole::Worker,
+                endpoint,
+                uplink_mbps: hw.uplink_mbps,
+                vram_gb: hw.vram_gb,
+                ttl_ms: TREE_GOSSIP_TTL_MS,
+                fanout: gossip_fanout,
+                seed: seed_i,
+            },
+            Arc::clone(&clock),
+        )?;
+        gs.agent.add_seed(&orch_gossip.url());
+        workers.push(TreeWorker { worker, gossip: gs, address, prev: None });
+    }
+
+    let tick_all = |relay_gossip: &[Option<GossipServer>], workers: &[TreeWorker]| {
+        orch_gossip.agent.tick();
+        for gs in relay_gossip.iter().flatten() {
+            gs.agent.tick();
+        }
+        for w in workers {
+            w.gossip.agent.tick();
+        }
+    };
+
+    // Membership + admission bootstrap, all through gossip: epidemic
+    // rounds until the orchestrator's own view holds every worker, then
+    // signed invites (each carrying the gossip bootstrap URL) off that
+    // view. The central list endpoint is never consulted.
+    let mut report = TreeChurnReport::default();
+    for _round in 0..8 {
+        tick_all(&relay_gossip, &workers);
+        report.invites_via_gossip += orch
+            .sweep_gossip(&orch_gossip.agent.peers_with_role(PeerRole::Worker), &orch_gossip.url())
+            as u64;
+        if workers.iter().all(|w| w.worker.is_invited()) {
+            break;
+        }
+    }
+    for w in &workers {
+        anyhow::ensure!(w.worker.is_invited(), "worker {} never invited via gossip", w.address);
+        anyhow::ensure!(
+            w.worker.gossip_seed().as_deref() == Some(orch_gossip.url().as_str()),
+            "worker {}: invite did not carry the gossip bootstrap URL",
+            w.address
+        );
+    }
+
+    // Plan the initial tree from the *gossiped* relay records.
+    let relay_peers = relay_peers_from(&orch_gossip.agent, &addr_names);
+    anyhow::ensure!(
+        relay_peers.len() == cfg.n_relays,
+        "orchestrator's gossip view holds {} of {} relays",
+        relay_peers.len(),
+        cfg.n_relays
+    );
+    let mut plan = plan_tree(&origin.url(), &relay_peers, cfg.fanout);
+    let apply = |plan: &TreePlan, relays: &[Option<Relay>], names: &[String]| {
+        for (slot, r) in relays.iter().enumerate() {
+            if let (Some(r), Some(cands)) = (r.as_ref(), plan.parents.get(&names[slot])) {
+                r.set_parents(cands.clone());
+            }
+        }
+    };
+    apply(&plan, &relays, &names);
+
+    // --- step loop ---
+    let n_floats = cfg.payload_bytes / 4;
+    let mut frng = Rng::new(cfg.seed ^ 0xF10A7);
+    let mut floats: Vec<f32> = (0..n_floats).map(|_| (frng.f64() * 2.0 - 1.0) as f32).collect();
+    let mut origin_prev: Option<(u64, Vec<u8>)> = None;
+    let mut reform_pending = false;
+    for step in 1..=cfg.steps {
+        cell.fetch_add(TREE_STEP_MS, Ordering::SeqCst);
+        partition.advance_to(step);
+        tick_all(&relay_gossip, &workers);
+        report.invites_via_gossip += orch
+            .sweep_gossip(&orch_gossip.agent.peers_with_role(PeerRole::Worker), &orch_gossip.url())
+            as u64;
+
+        // Evolve the checkpoint in a few contiguous spans, encode, publish.
+        if step > 1 {
+            let span = ((n_floats as f64) * cfg.mutation_frac / 4.0).ceil() as usize;
+            for _ in 0..4 {
+                let start = frng.usize(n_floats.saturating_sub(span).max(1));
+                for f in floats.iter_mut().skip(start).take(span) {
+                    *f = (frng.f64() * 2.0 - 1.0) as f32;
+                }
+            }
+        }
+        let raw: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let published = if cfg.quantize { quantize_q8(&raw) } else { raw };
+        let (manifest, shards) = Manifest::build(step, &published, cfg.shard_bytes);
+        let manifest = if cfg.quantize { manifest.with_encoding("q8") } else { manifest };
+        match origin_prev.as_ref().filter(|_| cfg.delta) {
+            Some((bstep, bbytes)) => {
+                let wires: Vec<Vec<u8>> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let lo = (i * cfg.shard_bytes).min(bbytes.len());
+                        let hi = ((i + 1) * cfg.shard_bytes).min(bbytes.len());
+                        encode_delta(&bbytes[lo..hi], s)
+                    })
+                    .collect();
+                origin.store.publish_full_with_deltas(manifest.with_base(*bstep), shards, wires);
+            }
+            None => origin.store.publish_full(manifest, shards),
+        }
+        if cfg.delta {
+            origin_prev = Some((step, published.clone()));
+        }
+
+        if step == cfg.fault_step {
+            // Let the broadcast get part-way down the tree first.
+            std::thread::sleep(Duration::from_millis(30));
+
+            // Kill a hub: the first live relay that currently has
+            // children, so a whole subtree loses its preferred parent.
+            let victim = (0..relays.len())
+                .filter(|&i| relays[i].is_some())
+                .find(|&i| plan.children_of(&names[i]) > 0)
+                .or_else(|| (0..relays.len()).find(|&i| relays[i].is_some()));
+            if let Some(v) = victim {
+                relays[v] = None; // Drop stops the puller and the server.
+                relay_gossip[v] = None;
+                report.relays_killed += 1;
+
+                // Re-form over the survivors of the gossiped view. The
+                // victim's record has not expired yet — the dead-list
+                // drops it, exactly as a quarantine decision would.
+                let peers = relay_peers_from(&orch_gossip.agent, &addr_names);
+                plan = reform(&origin.url(), &peers, std::slice::from_ref(&names[v]), cfg.fanout);
+                apply(&plan, &relays, &names);
+                reform_pending = true;
+
+                // And partition one survivor from its *new* preferred
+                // parent, so re-formation has to ride the fallback
+                // rotation (REPARENT_AFTER) mid-epoch.
+                let cut_slot = (0..relays.len()).filter(|&i| relays[i].is_some()).find(|&i| {
+                    plan.parents
+                        .get(&names[i])
+                        .and_then(|c| c.first())
+                        .is_some_and(|p| *p != origin.url())
+                });
+                if let Some(cs) = cut_slot {
+                    let parent_url = plan.parents[&names[cs]][0].clone();
+                    let parent_domain = (0..relays.len())
+                        .find(|&i| relays[i].as_ref().is_some_and(|r| r.url() == parent_url))
+                        .map(|i| names[i].clone())
+                        .unwrap_or_else(|| "origin".to_string());
+                    partition.cut(
+                        &format!("relay-{}", names[cs]),
+                        &parent_domain,
+                        PARTITION_STEPS,
+                    );
+                    report.partitions_cut += 1;
+                }
+            }
+        }
+
+        // Harness-driven fetches: every worker must assemble this step's
+        // checkpoint through the (possibly re-forming) relay tier.
+        let urls: Vec<String> = relays.iter().flatten().map(Relay::url).collect();
+        let step_deadline = Instant::now() + cfg.step_timeout;
+        let mut delivered = 0usize;
+        for w in &mut workers {
+            report.delivery_attempts += 1;
+            let sc = ShardcastClient::new(
+                &format!("tw-{}", w.address),
+                &urls,
+                cfg.seed ^ w.address ^ step,
+                false,
+            );
+            let base_owned = w.prev.clone();
+            loop {
+                let base = base_owned.as_ref().map(|(s, b)| (*s, b.as_slice()));
+                match sc.fetch_checkpoint_with_base(step, base) {
+                    Ok((bytes, rep)) => {
+                        anyhow::ensure!(
+                            bytes == published,
+                            "step {step}: worker {} assembled {} bytes that fail the audit",
+                            w.address,
+                            bytes.len()
+                        );
+                        if cfg.quantize {
+                            anyhow::ensure!(
+                                dequantize_q8(&bytes)?.len() == cfg.payload_bytes,
+                                "step {step}: q8 checkpoint does not dequantize back to size"
+                            );
+                        }
+                        report.worker_wire_bytes += rep.wire_bytes as u64;
+                        report.delta_shards += rep.delta_shards as u64;
+                        report.deliveries += 1;
+                        delivered += 1;
+                        w.prev = Some((step, bytes));
+                        break;
+                    }
+                    Err(e) => {
+                        if Instant::now() > step_deadline {
+                            crate::warn!(
+                                "churn",
+                                "tree step {step}: worker {} never assembled the checkpoint: {e}",
+                                w.address
+                            );
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+        }
+        if delivered == workers.len() {
+            report.steps_completed += 1;
+        }
+
+        // Re-formation is *done* when every surviving relay has fully
+        // mirrored the current checkpoint again.
+        if reform_pending {
+            let deadline = Instant::now() + Duration::from_secs(3);
+            loop {
+                if relays.iter().flatten().all(|r| r.store.is_complete(step)) {
+                    report.reform_latency_steps = step - cfg.fault_step;
+                    reform_pending = false;
+                    break;
+                }
+                if Instant::now() > deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(15));
+            }
+        }
+    }
+    if reform_pending {
+        report.reform_latency_steps = cfg.steps.saturating_sub(cfg.fault_step) + 1;
+    }
+
+    // --- teardown + verdicts: age the dead relay's records out, then
+    // every live agent's view must hold exactly the live membership ---
+    cell.fetch_add(TREE_GOSSIP_TTL_MS + TREE_STEP_MS, Ordering::SeqCst);
+    for _ in 0..3 {
+        tick_all(&relay_gossip, &workers);
+    }
+    let expected: BTreeSet<u64> = std::iter::once(orch_gossip.agent.address())
+        .chain(relay_gossip.iter().flatten().map(|gs| gs.agent.address()))
+        .chain(workers.iter().map(|w| w.address))
+        .collect();
+    let converged = |agent: &GossipAgent| {
+        let got: BTreeSet<u64> = agent.live_peers().iter().map(|r| r.address).collect();
+        got == expected
+    };
+    report.gossip_converged = converged(&orch_gossip.agent)
+        && relay_gossip.iter().flatten().all(|gs| converged(&gs.agent))
+        && workers.iter().all(|w| converged(&w.gossip.agent));
+
+    for w in &mut workers {
+        w.worker.shutdown();
+    }
+    report.reparent_events = relays.iter().flatten().map(Relay::reparent_count).sum();
+    report.partition_refusals = partition.refused.get();
+    report.list_calls = discovery.service.list_calls.get();
+    report.origin_egress_bytes = origin.server.stats.bytes_out.get();
+    report.gossip_rejected = orch_gossip.agent.rejected.get()
+        + relay_gossip.iter().flatten().map(|gs| gs.agent.rejected.get()).sum::<u64>()
+        + workers.iter().map(|w| w.gossip.agent.rejected.get()).sum::<u64>();
+    report.honest_slashed = workers.iter().filter(|w| ledger.is_slashed(1, w.address)).count()
+        as u64
+        + addr_names.keys().filter(|&&a| ledger.is_slashed(1, a)).count() as u64;
+    report.delivery_rate = if report.delivery_attempts == 0 {
+        1.0
+    } else {
+        report.deliveries as f64 / report.delivery_attempts as f64
+    };
     report.elapsed_secs = t0.elapsed().as_secs_f64();
     Ok(report)
 }

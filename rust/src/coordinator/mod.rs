@@ -15,7 +15,9 @@ pub mod validation;
 
 pub use batcher::{train_on_rollouts, StepReport};
 pub use cheatev::{run_cheat_ev, CheatEvConfig, CheatEvReport, NodeOutcome, Strategy};
-pub use churn::{run_churn, ChurnConfig, ChurnReport};
+pub use churn::{
+    run_churn, run_tree_churn, ChurnConfig, ChurnReport, TreeChurnConfig, TreeChurnReport,
+};
 pub use gen::{group_id_base, RolloutGenerator};
 pub use serve::{run_serve_load, ServeLoadConfig, ServeLoadReport};
 pub use step::{filter_groups, record_step, FilterOutcome};

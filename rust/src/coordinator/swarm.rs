@@ -59,10 +59,15 @@ use crate::coordinator::validation::{
     ValidatorCommitment, Verdict, SUBMISSION_QUEUE_CAP, VALIDATION_WAVE,
 };
 use crate::http::{HttpClient, HttpServer, Response, ServerConfig};
-use crate::protocol::{DiscoveryServer, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker};
+use crate::protocol::{
+    DiscoveryServer, HardwareSpec, Identity, Ledger, Orchestrator, OrchestratorServer, Tx, Worker,
+};
 use crate::rl::buffer::{Admission, RolloutBuffer, StalenessStats};
 use crate::runtime::{EngineHost, HostTrainState, ParamSet};
-use crate::shardcast::{BroadcastRecord, Broadcaster, Origin, Relay, ShardcastClient};
+use crate::shardcast::{
+    plan_tree, BroadcastEncoding, BroadcastRecord, Broadcaster, Origin, Relay, RelayPeer,
+    ShardcastClient,
+};
 use crate::tasks::dataset::{Dataset, DatasetConfig};
 use crate::toploc::{Validator, ValidatorConfig};
 use crate::util::json::Json;
@@ -369,11 +374,32 @@ impl Swarm {
                 )
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // Plan the relay tree from the same simulated hardware metadata
+        // the nodes advertise (§2.4.1), fan-out-bounded, and push each
+        // relay its candidate-parent list (origin always last).
+        let relay_peers: Vec<RelayPeer> = relays
+            .iter()
+            .enumerate()
+            .map(|(i, r)| RelayPeer {
+                name: r.name.clone(),
+                url: r.url(),
+                uplink_mbps: HardwareSpec::detect(cfg.seed ^ (0x8E1A + i as u64)).uplink_mbps,
+                pull_latency_ms: 0,
+            })
+            .collect();
+        let tree = plan_tree(&origin.url(), &relay_peers, cfg.shardcast_fanout);
+        for r in &relays {
+            if let Some(cands) = tree.parents.get(&r.name) {
+                r.set_parents(cands.clone());
+            }
+        }
         let relay_urls: Vec<String> = relays.iter().map(Relay::url).collect();
 
         // Background broadcast thread: the trainer hands checkpoints over
         // and immediately returns to training (two-step async, §3.2).
-        let broadcaster = Broadcaster::start(
+        // Delta encoding is transport-only, so it is safe to toggle here:
+        // workers assemble byte-identical checkpoints either way.
+        let broadcaster = Broadcaster::start_with_encoding(
             origin.store.clone(),
             relays.iter().map(|r| r.store.clone()).collect(),
             64 * 1024,
@@ -381,6 +407,7 @@ impl Swarm {
             // Backpressure at the async level: the trainer may run at most
             // this many checkpoints ahead of the broadcast tier.
             cfg.async_level.max(1) as usize,
+            BroadcastEncoding { delta: cfg.delta_encoding, quantize: false },
         )?;
         let epoch = broadcaster.epoch();
 

@@ -21,7 +21,7 @@
 //! a given step.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::util::metrics::Counter;
 use crate::util::rng::Rng;
@@ -122,6 +122,82 @@ impl FaultPlan {
         }
         let mut rng = Rng::new(self.seed).fold(domain).fold(step.wrapping_add(0x51E9));
         rng.usize(n)
+    }
+}
+
+/// One directional netsplit: requests whose source domain matches `src`
+/// arriving at a server whose domain matches `dst` are refused while the
+/// cut is live. Domains match by prefix (`""`/`"*"` match anything), so a
+/// harness can sever one relay (`"relay-tree-r1"`), a whole tier
+/// (`"relay-"`), or everything (`"*"`).
+#[derive(Clone, Debug)]
+struct Cut {
+    src: String,
+    dst: String,
+    /// First step index at which the cut no longer applies.
+    until_step: u64,
+}
+
+/// Netsplit fault plane: a set of (src-domain, dst-domain) pairs that
+/// Refuse for N steps. Unlike [`FaultPlan`] (seeded, per-request), cuts
+/// are placed explicitly by the harness at known step indices and heal
+/// themselves when the shared step counter passes `until_step` — a
+/// partition is scheduled topology damage, not random noise, so replays
+/// are trivially deterministic.
+///
+/// Servers consult [`Partition::severed`] after reading the request (the
+/// source identity rides the `x-node-id` header), then drop the socket —
+/// from the client side a severed link looks exactly like
+/// [`Fault::Refuse`].
+#[derive(Default)]
+pub struct Partition {
+    cuts: Mutex<Vec<Cut>>,
+    step: AtomicU64,
+    /// Requests dropped by a live cut.
+    pub refused: Counter,
+}
+
+impl Partition {
+    pub fn new() -> Arc<Partition> {
+        Arc::new(Partition::default())
+    }
+
+    /// Sever `src -> dst` for the next `steps` steps (from the current
+    /// step counter). Directional: cut both ways for a full netsplit.
+    pub fn cut(&self, src: &str, dst: &str, steps: u64) {
+        let until_step = self.step.load(Ordering::SeqCst).saturating_add(steps);
+        self.cuts.lock().unwrap().push(Cut {
+            src: src.to_string(),
+            dst: dst.to_string(),
+            until_step,
+        });
+    }
+
+    /// Advance the shared step counter (harness-driven, once per churn
+    /// step); expired cuts heal and are dropped.
+    pub fn advance_to(&self, step: u64) {
+        self.step.store(step, Ordering::SeqCst);
+        self.cuts.lock().unwrap().retain(|c| c.until_step > step);
+    }
+
+    fn domain_matches(pat: &str, domain: &str) -> bool {
+        pat.is_empty() || pat == "*" || domain.starts_with(pat)
+    }
+
+    /// Is the `src -> dst` link severed right now?
+    pub fn severed(&self, src: &str, dst: &str) -> bool {
+        let step = self.step.load(Ordering::SeqCst);
+        self.cuts.lock().unwrap().iter().any(|c| {
+            c.until_step > step
+                && Partition::domain_matches(&c.src, src)
+                && Partition::domain_matches(&c.dst, dst)
+        })
+    }
+
+    /// Cuts currently live (for harness reporting).
+    pub fn live_cuts(&self) -> usize {
+        let step = self.step.load(Ordering::SeqCst);
+        self.cuts.lock().unwrap().iter().filter(|c| c.until_step > step).count()
     }
 }
 
@@ -251,6 +327,29 @@ mod tests {
             + inj.stats.truncated.get()
             + inj.stats.delayed.get();
         assert_eq!(by_class, 100);
+    }
+
+    #[test]
+    fn partition_cuts_match_by_prefix_and_heal_by_step() {
+        let p = Partition::new();
+        p.advance_to(5);
+        p.cut("relay-tree-r1", "origin", 2); // live for steps 5, 6
+        p.cut("worker-", "relay-", 1); // tier-wide, one step
+        assert!(p.severed("relay-tree-r1", "origin"));
+        assert!(p.severed("relay-tree-r1-puller", "origin"), "prefix must match");
+        assert!(!p.severed("relay-tree-r2", "origin"));
+        assert!(!p.severed("origin", "relay-tree-r1"), "cuts are directional");
+        assert!(p.severed("worker-42", "relay-tree-r2"));
+        assert_eq!(p.live_cuts(), 2);
+        p.advance_to(6);
+        assert!(!p.severed("worker-42", "relay-tree-r2"), "one-step cut healed");
+        assert!(p.severed("relay-tree-r1", "origin"));
+        p.advance_to(7);
+        assert_eq!(p.live_cuts(), 0);
+        assert!(!p.severed("relay-tree-r1", "origin"));
+        // Wildcards sever everything.
+        p.cut("*", "*", 3);
+        assert!(p.severed("anyone", "anywhere"));
     }
 
     #[test]

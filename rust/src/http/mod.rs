@@ -17,7 +17,7 @@ pub mod faults;
 pub mod server;
 
 pub use client::HttpClient;
-pub use faults::{Fault, FaultInjector, FaultPlan, FaultSpec};
+pub use faults::{Fault, FaultInjector, FaultPlan, FaultSpec, Partition};
 pub use server::{HttpServer, ServerConfig};
 
 use std::collections::BTreeMap;

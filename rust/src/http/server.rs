@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::faults::{Fault, FaultInjector};
+use super::faults::{Fault, FaultInjector, Partition};
 use super::{parse_request, write_response, Request, Response};
 use crate::util::metrics::Counter;
 
@@ -36,6 +36,13 @@ pub struct ServerConfig {
     /// request consumes the injector's next scheduled fault — refused,
     /// hung, 5xx'd, truncated or delayed before the handler ever runs.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Netsplit plane: requests whose `x-node-id` is severed from this
+    /// server's [`ServerConfig::domain`] by a live [`Partition`] cut are
+    /// dropped without a response (the client sees a refused peer).
+    pub partition: Option<Arc<Partition>>,
+    /// This server's partition domain (matched as the `dst` side of
+    /// cuts). Empty = matches only wildcard cuts.
+    pub domain: String,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +55,8 @@ impl Default for ServerConfig {
             max_body: 256 << 20,
             worker_threads: 4,
             faults: None,
+            partition: None,
+            domain: String::new(),
         }
     }
 }
@@ -210,6 +219,17 @@ fn handle_conn(
         _ => {}
     }
     let key = req.header("x-node-id").map(|s| s.to_string()).unwrap_or_else(|| req.peer.clone());
+
+    // Netsplit plane: a live partition cut between the requester's domain
+    // and this server's drops the socket, response-less — a severed WAN
+    // link, not an HTTP error. (The request must be read first: the src
+    // identity rides the x-node-id header.)
+    if let Some(p) = &cfg.partition {
+        if p.severed(&key, &cfg.domain) {
+            p.refused.inc();
+            return;
+        }
+    }
 
     // Firewall: only currently-active pool members get through.
     if cfg.firewall_enabled {
@@ -407,6 +427,28 @@ mod tests {
         let mut client = HttpClient::new("t");
         client.timeout = Duration::from_millis(500);
         assert!(client.get(&srv.url()).is_err(), "short body must not parse as success");
+    }
+
+    #[test]
+    fn partition_severs_one_direction_then_heals() {
+        use crate::http::Partition;
+        let partition = Partition::new();
+        let cfg = ServerConfig {
+            partition: Some(Arc::clone(&partition)),
+            domain: "origin".into(),
+            ..Default::default()
+        };
+        let srv = echo_server(cfg);
+        let mut cut_off = HttpClient::new("relay-tree-r1");
+        cut_off.timeout = Duration::from_millis(400);
+        let bystander = HttpClient::new("relay-tree-r2");
+        partition.advance_to(1);
+        partition.cut("relay-tree-r1", "origin", 1);
+        assert!(cut_off.get(&srv.url()).is_err(), "severed link must refuse");
+        assert_eq!(bystander.get(&srv.url()).unwrap().status, 200, "cut is pairwise");
+        assert!(partition.refused.get() >= 1);
+        partition.advance_to(2);
+        assert_eq!(cut_off.get(&srv.url()).unwrap().status, 200, "cut heals after N steps");
     }
 
     #[test]

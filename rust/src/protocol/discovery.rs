@@ -2,12 +2,20 @@
 //! invite endpoint); only the orchestrator — authenticated by token — can
 //! list them, so worker addresses stay hidden from other workers
 //! (DoS-surface reduction). In-memory store with TTL = the Redis stand-in.
+//!
+//! With gossip membership ([`super::gossip`]) the list endpoint is a
+//! bootstrap convenience, not a dependency: [`DiscoveryService::list_calls`]
+//! counts every `GET /nodes` hit so harnesses can *prove* the swarm
+//! converged without it. TTL expiry runs on an injected [`Clock`] — test
+//! time is advanced, never slept through.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::http::{HttpServer, Request, Response, ServerConfig};
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
+use crate::util::Clock;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeInfo {
@@ -30,6 +38,10 @@ struct Inner {
 pub struct DiscoveryService {
     inner: Arc<Mutex<Inner>>,
     pub token: String,
+    clock: Clock,
+    /// Hits on the central `GET /nodes` list endpoint — the SPOF the
+    /// gossip layer exists to remove; tree harnesses assert this stays 0.
+    pub list_calls: Arc<Counter>,
 }
 
 pub struct DiscoveryServer {
@@ -39,10 +51,15 @@ pub struct DiscoveryServer {
 
 impl DiscoveryService {
     fn sweep(&self) {
+        let now = (self.clock)();
         let mut inner = self.inner.lock().unwrap();
-        let now = crate::util::now_ms();
         let ttl = inner.ttl_ms;
         inner.nodes.retain(|_, n| now.saturating_sub(n.registered_ms) < ttl);
+    }
+
+    /// Now on the service's injected clock (stamps registrations).
+    pub fn now_ms(&self) -> u64 {
+        (self.clock)()
     }
 
     pub fn register(&self, info: NodeInfo) {
@@ -75,11 +92,14 @@ fn handle(svc: &DiscoveryService, req: &Request) -> Response {
                 gpu: j.get("gpu").and_then(Json::as_str).unwrap_or("sim").to_string(),
                 vram_gb: g("vram_gb").unwrap_or(24),
                 uplink_mbps: g("uplink_mbps").unwrap_or(100),
-                registered_ms: crate::util::now_ms(),
+                registered_ms: svc.now_ms(),
             });
             Response::ok("ok")
         }
         ("GET", "/nodes") => {
+            // Every hit counts, authorized or not: the gossip-convergence
+            // gates assert the swarm never needed this endpoint at all.
+            svc.list_calls.inc();
             // Authorized components only (the orchestrator).
             if req.query.get("token").map(String::as_str) != Some(svc.token.as_str()) {
                 return Response::error(401, "unauthorized");
@@ -105,9 +125,21 @@ fn handle(svc: &DiscoveryService, req: &Request) -> Response {
 
 impl DiscoveryServer {
     pub fn start(token: &str, ttl_ms: u64) -> anyhow::Result<DiscoveryServer> {
+        DiscoveryServer::start_with_clock(token, ttl_ms, crate::util::real_clock())
+    }
+
+    /// [`DiscoveryServer::start`] with an injected clock, so TTL expiry is
+    /// testable by advancing time instead of sleeping through it.
+    pub fn start_with_clock(
+        token: &str,
+        ttl_ms: u64,
+        clock: Clock,
+    ) -> anyhow::Result<DiscoveryServer> {
         let service = DiscoveryService {
             inner: Arc::new(Mutex::new(Inner { nodes: BTreeMap::new(), ttl_ms })),
             token: token.to_string(),
+            clock,
+            list_calls: Arc::new(Counter::default()),
         };
         let svc = service.clone();
         let server = HttpServer::start(
@@ -149,17 +181,45 @@ mod tests {
     }
 
     #[test]
-    fn ttl_expiry() {
-        let d = DiscoveryServer::start("t", 1).unwrap();
+    fn ttl_expiry_on_injected_clock() {
+        // Deterministic: TTL is crossed by *advancing the clock*, not by
+        // sleeping and hoping the scheduler cooperates.
+        let cell = Arc::new(std::sync::atomic::AtomicU64::new(1_000));
+        let c = Arc::clone(&cell);
+        let clock: Clock = Arc::new(move || c.load(std::sync::atomic::Ordering::SeqCst));
+        let d = DiscoveryServer::start_with_clock("t", 500, clock).unwrap();
         d.service.register(NodeInfo {
             address: 1,
             endpoint: "e".into(),
             gpu: "g".into(),
             vram_gb: 8,
             uplink_mbps: 50,
-            registered_ms: crate::util::now_ms(),
+            registered_ms: d.service.now_ms(),
         });
-        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(d.service.list().len(), 1);
+        // One tick short of the TTL: still listed.
+        cell.store(1_499, std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(d.service.list().len(), 1);
+        // At the TTL boundary: swept.
+        cell.store(1_500, std::sync::atomic::Ordering::SeqCst);
         assert!(d.service.list().is_empty());
+    }
+
+    #[test]
+    fn list_endpoint_hits_are_counted() {
+        let d = DiscoveryServer::start("tok", 60_000).unwrap();
+        let c = HttpClient::new("counter-probe");
+        assert_eq!(d.service.list_calls.get(), 0);
+        let _ = c.get(&format!("{}/nodes?token=tok", d.url()));
+        let _ = c.get(&format!("{}/nodes?token=wrong", d.url()));
+        // Authorized and unauthorized hits both count — the gossip gate
+        // cares that nobody *needed* the endpoint, not who was told no.
+        assert_eq!(d.service.list_calls.get(), 2);
+        // Registration does not touch the list counter.
+        let _ = c.post_json(
+            &format!("{}/register", d.url()),
+            &Json::obj(vec![("address", 9u64.into()), ("endpoint", "e".into())]),
+        );
+        assert_eq!(d.service.list_calls.get(), 2);
     }
 }

@@ -1,0 +1,578 @@
+//! Gossip membership (§2.4.1, decentralized): workers, relays and the
+//! orchestrator exchange signed, TTL'd peer records peer-to-peer so the
+//! swarm converges on a live membership view without the central
+//! discovery service's list endpoint being a single point of failure.
+//!
+//! Epidemic push/pull over the in-tree HTTP stack: each [`GossipAgent`]
+//! `tick()` refreshes its own record, picks a seeded-deterministic
+//! fan-out of peers from its current view (plus bootstrap seeds — the
+//! invite flow hands workers the orchestrator's gossip URL), POSTs its
+//! whole live view, and absorbs the responder's view in return.
+//!
+//! Trust model: every record is signed by its subject over the canonical
+//! [`gossip_message`] and verified against the ledger's key registry
+//! ([`super::Ledger::check_address_sig`]) before it enters a view —
+//! gossip spreads *liveness*, never *authority*. A forged or replayed
+//! record dies at the first honest hop; invites remain the orchestrator's
+//! signed prerogative ([`super::orchestrator::invite_message`]). Records
+//! carry explicit `expires_ms` stamped from the *subject's* injected
+//! [`Clock`], so stale entries age out of every view symmetrically and no
+//! decision path reads ambient time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::identity::{Identity, SigCheck};
+use super::ledger::Ledger;
+use crate::http::{HttpClient, HttpServer, Request, Response, ServerConfig};
+use crate::util::json::Json;
+use crate::util::metrics::Counter;
+use crate::util::rng::Rng;
+use crate::util::Clock;
+
+/// What a peer *is* in the swarm — drives parent selection (relays feed
+/// the tree planner) and invite sweeps (the orchestrator invites workers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerRole {
+    Worker,
+    Relay,
+    Origin,
+    Orchestrator,
+}
+
+impl PeerRole {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PeerRole::Worker => "worker",
+            PeerRole::Relay => "relay",
+            PeerRole::Origin => "origin",
+            PeerRole::Orchestrator => "orchestrator",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PeerRole> {
+        match s {
+            "worker" => Some(PeerRole::Worker),
+            "relay" => Some(PeerRole::Relay),
+            "origin" => Some(PeerRole::Origin),
+            "orchestrator" => Some(PeerRole::Orchestrator),
+            _ => None,
+        }
+    }
+}
+
+/// Canonical signing payload for a peer record. Everything that matters
+/// is under the signature: endpoint/gossip URLs (no traffic redirection),
+/// hardware claims (no inflating your way into hub duty), version +
+/// expiry (no replaying an old record to resurrect a dead peer).
+pub fn gossip_message(
+    address: u64,
+    endpoint: &str,
+    gossip_url: &str,
+    role: PeerRole,
+    uplink_mbps: u64,
+    vram_gb: u64,
+    version: u64,
+    expires_ms: u64,
+) -> Vec<u8> {
+    format!(
+        "gossip:{address}:{endpoint}:{gossip_url}:{}:{uplink_mbps}:{vram_gb}:{version}:{expires_ms}",
+        role.as_str()
+    )
+    .into_bytes()
+}
+
+/// One signed, TTL'd membership claim: "`address` is alive, reachable at
+/// `endpoint` (service) / `gossip` (membership plane), with this
+/// hardware, until `expires_ms`".
+#[derive(Clone, Debug, PartialEq)]
+pub struct PeerRecord {
+    pub address: u64,
+    /// Service endpoint: invite URL for workers, shardcast URL for
+    /// relays/origin, API URL for the orchestrator.
+    pub endpoint: String,
+    /// Where this peer's own gossip agent listens.
+    pub gossip: String,
+    pub role: PeerRole,
+    /// Advertised hardware (§2.4.1) — feeds the tree planner's
+    /// parent-selection score and the orchestrator's admission filter.
+    pub uplink_mbps: u64,
+    pub vram_gb: u64,
+    /// Monotone per-subject freshness counter; newer wins in every view.
+    pub version: u64,
+    /// Absolute expiry on the subject's clock.
+    pub expires_ms: u64,
+    pub sig: [u8; 32],
+}
+
+impl PeerRecord {
+    fn message(&self) -> Vec<u8> {
+        gossip_message(
+            self.address,
+            &self.endpoint,
+            &self.gossip,
+            self.role,
+            self.uplink_mbps,
+            self.vram_gb,
+            self.version,
+            self.expires_ms,
+        )
+    }
+
+    pub fn verify(&self, ledger: &Ledger) -> bool {
+        ledger.check_address_sig(self.address, &self.message(), &self.sig) == SigCheck::Valid
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("address", self.address.into()),
+            ("endpoint", self.endpoint.clone().into()),
+            ("gossip", self.gossip.clone().into()),
+            ("role", self.role.as_str().into()),
+            ("uplink_mbps", self.uplink_mbps.into()),
+            ("vram_gb", self.vram_gb.into()),
+            ("version", self.version.into()),
+            ("expires_ms", self.expires_ms.into()),
+            ("sig", Json::hex(&self.sig)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<PeerRecord> {
+        let g = |k: &str| j.get(k).and_then(Json::as_u64);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let sig_bytes = j
+            .get("sig")
+            .and_then(Json::as_hex_bytes)
+            .ok_or_else(|| anyhow::anyhow!("missing sig"))?;
+        let sig: [u8; 32] =
+            sig_bytes.try_into().map_err(|_| anyhow::anyhow!("bad sig length"))?;
+        Ok(PeerRecord {
+            address: g("address").ok_or_else(|| anyhow::anyhow!("missing address"))?,
+            endpoint: s("endpoint").ok_or_else(|| anyhow::anyhow!("missing endpoint"))?,
+            gossip: s("gossip").unwrap_or_default(),
+            role: s("role")
+                .as_deref()
+                .and_then(PeerRole::parse)
+                .ok_or_else(|| anyhow::anyhow!("bad role"))?,
+            uplink_mbps: g("uplink_mbps").unwrap_or(0),
+            vram_gb: g("vram_gb").unwrap_or(0),
+            version: g("version").unwrap_or(0),
+            expires_ms: g("expires_ms").unwrap_or(0),
+            sig,
+        })
+    }
+}
+
+/// Static half of an agent's own advertisement.
+#[derive(Clone, Debug)]
+pub struct GossipConfig {
+    pub role: PeerRole,
+    /// Service endpoint to advertise (see [`PeerRecord::endpoint`]).
+    pub endpoint: String,
+    pub uplink_mbps: u64,
+    pub vram_gb: u64,
+    /// How long a record stays live without refresh.
+    pub ttl_ms: u64,
+    /// Peers contacted per `tick` (seeded-deterministic selection).
+    pub fanout: usize,
+    /// Seed for the fan-out sampling stream.
+    pub seed: u64,
+}
+
+impl Default for GossipConfig {
+    fn default() -> GossipConfig {
+        GossipConfig {
+            role: PeerRole::Worker,
+            endpoint: String::new(),
+            uplink_mbps: 100,
+            vram_gb: 24,
+            ttl_ms: 30_000,
+            fanout: 3,
+            seed: 0,
+        }
+    }
+}
+
+struct AgentInner {
+    identity: Arc<Identity>,
+    ledger: Ledger,
+    cfg: GossipConfig,
+    clock: Clock,
+    /// address -> freshest verified record. Guard discipline: snapshot
+    /// and drop before any network call or other lock.
+    view: Mutex<BTreeMap<u64, PeerRecord>>,
+    /// Bootstrap gossip URLs (contacted even before any record names
+    /// them — how a freshly invited worker finds the swarm).
+    seeds: Mutex<Vec<String>>,
+    rng: Mutex<Rng>,
+    version: AtomicU64,
+    http: HttpClient,
+    gossip_url: std::sync::OnceLock<String>,
+}
+
+/// Shared-handle gossip participant (clone = same agent).
+#[derive(Clone)]
+pub struct GossipAgent {
+    inner: Arc<AgentInner>,
+    /// Records rejected for bad/unknown signatures or being expired on
+    /// arrival.
+    pub rejected: Arc<Counter>,
+    /// Records absorbed into the view (new or fresher version).
+    pub absorbed: Arc<Counter>,
+}
+
+/// A [`GossipAgent`] plus the HTTP server exposing its `POST /gossip`
+/// push/pull endpoint.
+pub struct GossipServer {
+    pub agent: GossipAgent,
+    pub server: HttpServer,
+}
+
+impl GossipAgent {
+    fn new(identity: Arc<Identity>, ledger: Ledger, cfg: GossipConfig, clock: Clock) -> GossipAgent {
+        let seed = cfg.seed ^ identity.address.wrapping_mul(0x6055);
+        GossipAgent {
+            inner: Arc::new(AgentInner {
+                http: HttpClient::new(&format!("gossip-{}", identity.address)),
+                identity,
+                ledger,
+                cfg,
+                clock,
+                view: Mutex::new(BTreeMap::new()),
+                seeds: Mutex::new(Vec::new()),
+                rng: Mutex::new(Rng::new(seed)),
+                version: AtomicU64::new(0),
+                gossip_url: std::sync::OnceLock::new(),
+            }),
+            rejected: Arc::new(Counter::default()),
+            absorbed: Arc::new(Counter::default()),
+        }
+    }
+
+    pub fn address(&self) -> u64 {
+        self.inner.identity.address
+    }
+
+    pub fn gossip_url(&self) -> String {
+        self.inner.gossip_url.get().cloned().unwrap_or_default()
+    }
+
+    /// Add a bootstrap gossip URL (idempotent).
+    pub fn add_seed(&self, url: &str) {
+        let mut seeds = self.inner.seeds.lock().unwrap();
+        if !seeds.iter().any(|s| s == url) {
+            seeds.push(url.to_string());
+        }
+    }
+
+    /// Build + sign this agent's own record, freshly versioned and
+    /// expiring `ttl_ms` from the injected clock's now.
+    fn self_record(&self) -> PeerRecord {
+        let version = self.inner.version.fetch_add(1, Ordering::SeqCst) + 1;
+        let expires_ms = (self.inner.clock)() + self.inner.cfg.ttl_ms;
+        let gossip = self.gossip_url();
+        let msg = gossip_message(
+            self.address(),
+            &self.inner.cfg.endpoint,
+            &gossip,
+            self.inner.cfg.role,
+            self.inner.cfg.uplink_mbps,
+            self.inner.cfg.vram_gb,
+            version,
+            expires_ms,
+        );
+        PeerRecord {
+            address: self.address(),
+            endpoint: self.inner.cfg.endpoint.clone(),
+            gossip,
+            role: self.inner.cfg.role,
+            uplink_mbps: self.inner.cfg.uplink_mbps,
+            vram_gb: self.inner.cfg.vram_gb,
+            version,
+            expires_ms,
+            sig: self.inner.identity.sign(&msg),
+        }
+    }
+
+    /// Verify + merge incoming records. Rejects bad signatures and
+    /// records already expired on this agent's clock; otherwise freshest
+    /// version wins. Returns how many records changed the view.
+    pub fn absorb(&self, records: &[PeerRecord]) -> usize {
+        let now = (self.inner.clock)();
+        let mut accepted = Vec::new();
+        for r in records {
+            if r.expires_ms <= now || !r.verify(&self.inner.ledger) {
+                self.rejected.inc();
+                continue;
+            }
+            accepted.push(r.clone());
+        }
+        let mut changed = 0usize;
+        let mut view = self.inner.view.lock().unwrap();
+        for r in accepted {
+            let fresher = view.get(&r.address).map_or(true, |old| r.version > old.version);
+            if fresher {
+                view.insert(r.address, r);
+                changed += 1;
+            }
+        }
+        drop(view);
+        self.absorbed.add(changed as u64);
+        changed
+    }
+
+    /// Sweep expired records and return the live view (self included).
+    pub fn live_peers(&self) -> Vec<PeerRecord> {
+        let now = (self.inner.clock)();
+        let mut view = self.inner.view.lock().unwrap();
+        view.retain(|_, r| r.expires_ms > now);
+        view.values().cloned().collect()
+    }
+
+    /// Live peers holding a given role.
+    pub fn peers_with_role(&self, role: PeerRole) -> Vec<PeerRecord> {
+        self.live_peers().into_iter().filter(|r| r.role == role).collect()
+    }
+
+    /// One epidemic round: refresh own record, pick a seeded fan-out of
+    /// targets from the live view + bootstrap seeds, push the whole view,
+    /// absorb each response. Returns how many peers were contacted
+    /// successfully.
+    pub fn tick(&self) -> usize {
+        let own = self.self_record();
+        self.absorb(&[own]);
+        let snapshot = self.live_peers();
+
+        let me = self.gossip_url();
+        let mut targets: Vec<String> = snapshot
+            .iter()
+            .filter(|r| r.address != self.address() && !r.gossip.is_empty())
+            .map(|r| r.gossip.clone())
+            .collect();
+        let seeds = self.inner.seeds.lock().unwrap().clone();
+        for s in seeds {
+            if !targets.contains(&s) {
+                targets.push(s);
+            }
+        }
+        targets.retain(|t| *t != me);
+        let fanout = self.inner.cfg.fanout.max(1);
+        let picks = {
+            let mut rng = self.inner.rng.lock().unwrap();
+            if targets.len() > fanout {
+                // Partial Fisher-Yates: deterministic in (seed, call no.).
+                for i in 0..fanout {
+                    let j = i + rng.usize(targets.len() - i);
+                    targets.swap(i, j);
+                }
+                targets.truncate(fanout);
+            }
+            targets
+        };
+
+        let body = Json::obj(vec![(
+            "records",
+            Json::Arr(snapshot.iter().map(PeerRecord::to_json).collect()),
+        )]);
+        let mut reached = 0usize;
+        for url in picks {
+            let Ok(resp) = self.inner.http.post_json(&format!("{url}/gossip"), &body) else {
+                continue;
+            };
+            if resp.status != 200 {
+                continue;
+            }
+            if let Ok(j) = Json::parse(std::str::from_utf8(&resp.body).unwrap_or("")) {
+                self.absorb(&parse_records(&j));
+            }
+            reached += 1;
+        }
+        reached
+    }
+}
+
+fn parse_records(j: &Json) -> Vec<PeerRecord> {
+    j.get("records")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|r| PeerRecord::from_json(r).ok())
+        .collect()
+}
+
+fn handle(agent: &GossipAgent, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/gossip") => {
+            let Ok(j) = req.json() else { return Response::error(400, "bad json") };
+            agent.absorb(&parse_records(&j));
+            let live = agent.live_peers();
+            Response::json(&Json::obj(vec![(
+                "records",
+                Json::Arr(live.iter().map(PeerRecord::to_json).collect()),
+            )]))
+        }
+        _ => Response::error(404, "unknown endpoint"),
+    }
+}
+
+impl GossipServer {
+    pub fn start(
+        identity: Arc<Identity>,
+        ledger: Ledger,
+        cfg: GossipConfig,
+        clock: Clock,
+    ) -> anyhow::Result<GossipServer> {
+        let agent = GossipAgent::new(identity, ledger, cfg, clock);
+        let handler_agent = agent.clone();
+        let server = HttpServer::start(
+            ServerConfig { worker_threads: 2, ..Default::default() },
+            move |req| handle(&handler_agent, req),
+        )?;
+        let _ = agent.inner.gossip_url.set(server.url());
+        Ok(GossipServer { agent, server })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as ClockCell;
+
+    fn fake_clock() -> (Arc<ClockCell>, Clock) {
+        let cell = Arc::new(ClockCell::new(1_000));
+        let c = Arc::clone(&cell);
+        (cell, Arc::new(move || c.load(Ordering::SeqCst)))
+    }
+
+    fn agent_on(
+        seed: u64,
+        ledger: &Ledger,
+        role: PeerRole,
+        clock: Clock,
+    ) -> (Arc<Identity>, GossipServer) {
+        let id = Arc::new(Identity::from_seed(seed));
+        ledger.register_key(&id);
+        let cfg = GossipConfig {
+            role,
+            endpoint: format!("http://svc-{seed}"),
+            uplink_mbps: 100 + seed,
+            vram_gb: 24,
+            ttl_ms: 10_000,
+            fanout: 2,
+            seed,
+        };
+        let gs = GossipServer::start(Arc::clone(&id), ledger.clone(), cfg, clock).unwrap();
+        (id, gs)
+    }
+
+    #[test]
+    fn record_roundtrip_and_signature_gate() {
+        let (_, clock) = fake_clock();
+        let ledger = Ledger::new();
+        let (_, a) = agent_on(1, &ledger, PeerRole::Worker, Arc::clone(&clock));
+        let rec = a.agent.self_record();
+        assert!(rec.verify(&ledger));
+        let parsed =
+            PeerRecord::from_json(&Json::parse(&rec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed, rec);
+
+        // Tampering with any signed field kills the record at verify.
+        let mut evil = rec.clone();
+        evil.uplink_mbps = 999_999;
+        assert!(!evil.verify(&ledger));
+        let mut moved = rec.clone();
+        moved.endpoint = "http://attacker".into();
+        assert!(!moved.verify(&ledger));
+
+        // Unknown signer (never registered) is rejected too.
+        let ghost_id = Identity::from_seed(777);
+        let msg = gossip_message(ghost_id.address, "e", "g", PeerRole::Worker, 1, 1, 1, 9_999);
+        let ghost = PeerRecord {
+            address: ghost_id.address,
+            endpoint: "e".into(),
+            gossip: "g".into(),
+            role: PeerRole::Worker,
+            uplink_mbps: 1,
+            vram_gb: 1,
+            version: 1,
+            expires_ms: 9_999,
+            sig: ghost_id.sign(&msg),
+        };
+        assert!(!ghost.verify(&ledger));
+        let (_, b) = agent_on(2, &ledger, PeerRole::Worker, clock);
+        assert_eq!(b.agent.absorb(&[evil, ghost]), 0);
+        assert_eq!(b.agent.rejected.get(), 2);
+    }
+
+    #[test]
+    fn ttl_expiry_is_deterministic_on_injected_clock() {
+        let (cell, clock) = fake_clock();
+        let ledger = Ledger::new();
+        let (_, a) = agent_on(3, &ledger, PeerRole::Relay, Arc::clone(&clock));
+        let (_, b) = agent_on(4, &ledger, PeerRole::Worker, clock);
+        let rec = a.agent.self_record(); // expires at 1_000 + 10_000
+        assert_eq!(b.agent.absorb(&[rec.clone()]), 1);
+        assert_eq!(b.agent.live_peers().len(), 1);
+        // Advance past expiry: no sleeping, no flakes.
+        cell.store(11_001, Ordering::SeqCst);
+        assert!(b.agent.live_peers().is_empty());
+        // Expired-on-arrival records never enter the view.
+        assert_eq!(b.agent.absorb(&[rec]), 0);
+        assert_eq!(b.agent.rejected.get(), 1);
+    }
+
+    #[test]
+    fn newer_version_wins_older_is_ignored() {
+        let (_, clock) = fake_clock();
+        let ledger = Ledger::new();
+        let (_, a) = agent_on(5, &ledger, PeerRole::Worker, Arc::clone(&clock));
+        let (_, b) = agent_on(6, &ledger, PeerRole::Worker, clock);
+        let v1 = a.agent.self_record();
+        let v2 = a.agent.self_record();
+        assert!(v2.version > v1.version);
+        assert_eq!(b.agent.absorb(&[v2.clone()]), 1);
+        // Replaying the stale record cannot roll the view back.
+        assert_eq!(b.agent.absorb(&[v1]), 0);
+        let view = b.agent.live_peers();
+        assert_eq!(view.len(), 1);
+        assert_eq!(view[0].version, v2.version);
+    }
+
+    #[test]
+    fn view_converges_through_a_seed_peer_only() {
+        // Star bootstrap: every agent knows only the orchestrator's
+        // gossip URL. After a few ticks, everyone must know everyone —
+        // with zero calls to any central list endpoint (there is none
+        // here to call).
+        let (_, clock) = fake_clock();
+        let ledger = Ledger::new();
+        let (_, hub) = agent_on(10, &ledger, PeerRole::Orchestrator, Arc::clone(&clock));
+        let spokes: Vec<(Arc<Identity>, GossipServer)> = (11..15)
+            .map(|s| agent_on(s, &ledger, PeerRole::Worker, Arc::clone(&clock)))
+            .collect();
+        for (_, gs) in &spokes {
+            gs.agent.add_seed(&hub.url());
+        }
+        for _round in 0..4 {
+            hub.agent.tick();
+            for (_, gs) in &spokes {
+                gs.agent.tick();
+            }
+        }
+        let expected = 1 + spokes.len();
+        for gs in std::iter::once(&hub).chain(spokes.iter().map(|(_, g)| g)) {
+            assert_eq!(
+                gs.agent.live_peers().len(),
+                expected,
+                "agent {} never converged",
+                gs.agent.address()
+            );
+        }
+        assert_eq!(hub.agent.peers_with_role(PeerRole::Worker).len(), spokes.len());
+    }
+}

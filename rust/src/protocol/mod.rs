@@ -1,6 +1,33 @@
 //! The Prime Intellect protocol (paper §2.4): ledger, discovery service,
-//! orchestrator and worker software — permissionless compute coordination
-//! ("a decentralized SLURM").
+//! gossip membership, orchestrator and worker software — permissionless
+//! compute coordination ("a decentralized SLURM").
+//!
+//! # Gossip membership vs invite authority
+//!
+//! Two separate trust planes, deliberately not merged:
+//!
+//! - **Membership is gossiped** ([`gossip`]): who is alive, where, with
+//!   what hardware. Signed, TTL'd [`gossip::PeerRecord`]s spread
+//!   epidemically between workers, relays and the orchestrator; every
+//!   record is verified against the ledger's key registry before entering
+//!   a view, and records expire on their subject's injected clock. The
+//!   central discovery service degrades to a bootstrap convenience — its
+//!   list endpoint counts its own hits ([`DiscoveryService::list_calls`])
+//!   precisely so harnesses can prove the swarm converges without it.
+//! - **Admission is invited** ([`orchestrator::invite_message`]): knowing
+//!   a peer exists grants nothing. Joining the pool still requires an
+//!   invite signed by the pool owner's ledger key, validated by the
+//!   worker against [`Ledger::pool_owner`] — whether the orchestrator
+//!   found the candidate via the token-gated discovery list
+//!   ([`Orchestrator::sweep_discovery`]) or via its own gossip view
+//!   ([`Orchestrator::sweep_gossip`]). The accepted invite also carries
+//!   the orchestrator's gossip URL, so membership bootstrap inherits the
+//!   invite signature's trust instead of needing its own.
+//!
+//! A forged peer record can therefore waste at most one verification per
+//! honest hop; it cannot admit a node, redirect traffic (endpoints are
+//! under the record signature), or resurrect an expired identity (replays
+//! lose to the freshness version and the TTL).
 //!
 //! # Failure model
 //!
@@ -43,12 +70,14 @@
 //! [`crate::serving::SloClock`], never ambient time.
 
 pub mod discovery;
+pub mod gossip;
 pub mod identity;
 pub mod ledger;
 pub mod orchestrator;
 pub mod worker;
 
 pub use discovery::{DiscoveryServer, DiscoveryService, NodeInfo};
+pub use gossip::{GossipAgent, GossipConfig, GossipServer, PeerRecord, PeerRole};
 pub use identity::{Identity, SigCheck};
 pub use ledger::{min_negative_ev_stake, Ledger, LedgerError, TrustState, Tx, MIN_SAMPLING_RATE};
 pub use orchestrator::{NodeStatus, Orchestrator, OrchestratorServer, TaskSpec};

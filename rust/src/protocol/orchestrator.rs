@@ -155,6 +155,62 @@ impl Orchestrator {
         }
     }
 
+    /// Should `addr` get an invite? Known-and-alive nodes are skipped; an
+    /// evicted (Dead) node is eligible for re-invitation — that is its
+    /// only way back in, since its heartbeats are refused. Slashed nodes
+    /// never are.
+    fn invite_eligible(&self, addr: u64) -> bool {
+        let known_alive = self
+            .inner
+            .lock()
+            .unwrap()
+            .nodes
+            .get(&addr)
+            .is_some_and(|s| s.status != NodeStatus::Dead);
+        !known_alive && !self.ledger.is_slashed(self.pool_id, addr)
+    }
+
+    /// Sign + deliver one invite to `endpoint`; records the ledger Tx and
+    /// admits the node if the worker accepted. A non-empty `gossip_seed`
+    /// rides along so the invited worker can bootstrap its gossip agent
+    /// from the orchestrator (invite authority and membership bootstrap
+    /// travel in one signed envelope).
+    fn deliver_invite(
+        &self,
+        client: &HttpClient,
+        addr: u64,
+        endpoint: &str,
+        gossip_seed: &str,
+    ) -> bool {
+        // Signed invite (signatures travel hex — see util::json).
+        let sig = self.identity.sign(&invite_message(addr, self.pool_id, "dist-rl"));
+        let mut pairs = vec![
+            ("pool_id", self.pool_id.into()),
+            ("domain", "dist-rl".into()),
+            ("node", addr.into()),
+            ("sig", Json::hex(&sig)),
+        ];
+        if !gossip_seed.is_empty() {
+            pairs.push(("gossip", gossip_seed.into()));
+        }
+        let body = Json::obj(pairs);
+        match client.post_json(&format!("{endpoint}/invite"), &body) {
+            Ok(r) if r.status == 200 => {
+                let _ = self.ledger.submit(
+                    Tx::Invite {
+                        pool_id: self.pool_id,
+                        node: addr,
+                        orchestrator: self.identity.address,
+                    },
+                    &self.identity,
+                );
+                self.admit(addr);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Periodic discovery sweep: invite any registered node we don't know.
     /// The invite carries a signature over (node, pool, domain) which the
     /// worker validates on the ledger (§2.4.2).
@@ -177,39 +233,32 @@ impl Orchestrator {
             ) else {
                 continue;
             };
-            // Known-and-alive nodes are skipped; an evicted (Dead) node is
-            // eligible for re-invitation — that is its only way back in,
-            // since its heartbeats are refused.
-            let known_alive = self
-                .inner
-                .lock()
-                .unwrap()
-                .nodes
-                .get(&addr)
-                .is_some_and(|s| s.status != NodeStatus::Dead);
-            if known_alive {
+            if self.invite_eligible(addr) && self.deliver_invite(&client, addr, endpoint, "") {
+                invited += 1;
+            }
+        }
+        invited
+    }
+
+    /// Gossip-driven invite sweep: same authority, decentralized
+    /// membership source. Walks worker-role records from the
+    /// orchestrator's *own gossip view* (signature-verified on absorb) —
+    /// no call to the discovery service's central list endpoint — and
+    /// invites every eligible one, seeding its gossip agent with
+    /// `gossip_seed` (normally the orchestrator's own gossip URL).
+    pub fn sweep_gossip(
+        &self,
+        peers: &[super::gossip::PeerRecord],
+        gossip_seed: &str,
+    ) -> usize {
+        let client = HttpClient::new("orchestrator");
+        let mut invited = 0;
+        for p in peers {
+            if p.role != super::gossip::PeerRole::Worker || !self.invite_eligible(p.address) {
                 continue;
             }
-            if self.ledger.is_slashed(self.pool_id, addr) {
-                continue;
-            }
-            // Signed invite (signatures travel hex — see util::json).
-            let sig = self.identity.sign(&invite_message(addr, self.pool_id, "dist-rl"));
-            let body = Json::obj(vec![
-                ("pool_id", self.pool_id.into()),
-                ("domain", "dist-rl".into()),
-                ("node", addr.into()),
-                ("sig", Json::hex(&sig)),
-            ]);
-            if let Ok(r) = client.post_json(&format!("{endpoint}/invite"), &body) {
-                if r.status == 200 {
-                    let _ = self.ledger.submit(
-                        Tx::Invite { pool_id: self.pool_id, node: addr, orchestrator: self.identity.address },
-                        &self.identity,
-                    );
-                    self.admit(addr);
-                    invited += 1;
-                }
+            if self.deliver_invite(&client, p.address, &p.endpoint, gossip_seed) {
+                invited += 1;
             }
         }
         invited

@@ -93,6 +93,10 @@ pub struct Worker {
     pub volume: SharedVolume,
     invite_server: Option<HttpServer>,
     invited: Arc<AtomicBool>,
+    /// Gossip bootstrap URL carried by the accepted invite (the
+    /// orchestrator's gossip agent) — where this worker's own gossip
+    /// agent should aim its first ticks.
+    gossip_seed: Arc<Mutex<Option<String>>>,
     stop: Arc<AtomicBool>,
     hb_thread: Option<std::thread::JoinHandle<()>>,
     pub tasks_completed: Arc<std::sync::atomic::AtomicU64>,
@@ -122,9 +126,11 @@ impl Worker {
             hardware.vram_gb
         );
         let invited = Arc::new(AtomicBool::new(false));
+        let gossip_seed: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         // Invite webserver: the worker doesn't know the orchestrator's
         // endpoint in advance (DoS protection, §2.4.2).
         let inv = Arc::clone(&invited);
+        let seed_slot = Arc::clone(&gossip_seed);
         let address = identity.address;
         let invite_ledger = ledger.clone();
         let invite_server = HttpServer::start(
@@ -140,6 +146,12 @@ impl Worker {
                     // the pool's actual owner for *this* pool.
                     if invite_authorized(&invite_ledger, address, pool_id, &j).is_none() {
                         return Response::error(403, "invalid invite signature");
+                    }
+                    // Membership bootstrap rides the accepted invite: the
+                    // orchestrator's gossip URL (if any) is only trusted
+                    // because the signature above checked out.
+                    if let Some(g) = j.get("gossip").and_then(Json::as_str) {
+                        *seed_slot.lock().unwrap() = Some(g.to_string());
                     }
                     inv.store(true, Ordering::SeqCst);
                     return Response::ok("accepted");
@@ -172,6 +184,7 @@ impl Worker {
             volume: SharedVolume::default(),
             invite_server: Some(invite_server),
             invited,
+            gossip_seed,
             stop: Arc::new(AtomicBool::new(false)),
             hb_thread: None,
             tasks_completed: Arc::new(std::sync::atomic::AtomicU64::new(0)),
@@ -182,6 +195,12 @@ impl Worker {
 
     pub fn is_invited(&self) -> bool {
         self.invited.load(Ordering::SeqCst)
+    }
+
+    /// Gossip bootstrap URL from the accepted invite (None until an
+    /// invite carrying one arrives).
+    pub fn gossip_seed(&self) -> Option<String> {
+        self.gossip_seed.lock().unwrap().clone()
     }
 
     /// The invite webserver's URL (what the worker registered with

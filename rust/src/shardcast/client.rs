@@ -19,6 +19,8 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use sha2::{Digest, Sha256};
+
 use super::manifest::Manifest;
 use crate::http::HttpClient;
 use crate::util::json::Json;
@@ -57,10 +59,18 @@ impl RelayEstimate {
 #[derive(Debug)]
 pub struct DownloadReport {
     pub step: u64,
+    /// Assembled checkpoint size (after delta decode, before dequantize).
     pub bytes: usize,
     pub seconds: f64,
     pub per_relay_shards: Vec<(String, usize)>,
     pub retries: usize,
+    /// Bytes actually received on the shard plane (delta wires + full
+    /// shard bodies) — the egress the relay tier really paid for this
+    /// download. Equals the sum of shard sizes on a pure full-shard
+    /// fetch, (much) less when deltas were used.
+    pub wire_bytes: usize,
+    /// How many shards arrived as delta wires rather than full pulls.
+    pub delta_shards: usize,
 }
 
 pub struct ShardcastClient {
@@ -216,6 +226,22 @@ impl ShardcastClient {
     /// failing over to a freshly-sampled relay, so one dead relay costs
     /// retries (and its quarantine), not the checkpoint.
     pub fn fetch_checkpoint(&self, step: u64) -> anyhow::Result<(Vec<u8>, DownloadReport)> {
+        self.fetch_checkpoint_with_base(step, None)
+    }
+
+    /// Like [`ShardcastClient::fetch_checkpoint`], but when the caller
+    /// still holds the assembled payload of an earlier checkpoint it can
+    /// offer it as a delta base. If the manifest advertises the *same*
+    /// `base_step`, each shard is first attempted as a `/delta` wire
+    /// (decoded against the re-chunked base, verified against the
+    /// manifest's per-shard digest); any miss falls back to the full
+    /// `/shard` pull, so the result is byte-identical either way — only
+    /// `wire_bytes` changes.
+    pub fn fetch_checkpoint_with_base(
+        &self,
+        step: u64,
+        base: Option<(u64, &[u8])>,
+    ) -> anyhow::Result<(Vec<u8>, DownloadReport)> {
         let t0 = Instant::now();
         // Backoff jitter stream: deterministic per (client seed, step), and
         // independent of the relay-sampling stream.
@@ -246,10 +272,42 @@ impl ShardcastClient {
             },
         )?;
 
+        // Delta eligibility: the manifest's advertised base must be the
+        // exact step the caller holds — shard geometry is shared across
+        // steps, so re-chunking the base payload at the manifest's
+        // shard_bytes reproduces the base shards the publisher diffed
+        // against.
+        let base_shards: Option<Vec<&[u8]>> = match (manifest.base_step, base) {
+            (Some(mb), Some((cb, payload))) if mb == cb => {
+                Some(payload.chunks(manifest.shard_bytes.max(1)).collect())
+            }
+            _ => None,
+        };
+
         let mut shards: Vec<Vec<u8>> = vec![Vec::new(); manifest.n_shards()];
         let mut per_relay: Vec<(String, usize)> = Vec::new();
+        let mut wire_bytes = 0usize;
+        let mut delta_shards = 0usize;
         let shard_policy = RetryPolicy::shardcast_shard();
         for idx in 0..manifest.n_shards() {
+            // One delta attempt, no retry: a 404 / decode failure /
+            // digest mismatch just drops to the full-shard ladder below.
+            // Failures are *not* charged to the relay's estimate — a
+            // relay without a delta wire is not an unhealthy relay.
+            if let Some(bs) = &base_shards {
+                if let Some((full, wire_len, url)) =
+                    self.try_delta_shard(&manifest, bs, step, idx)
+                {
+                    wire_bytes += wire_len;
+                    delta_shards += 1;
+                    match per_relay.iter_mut().find(|(u, _)| *u == url) {
+                        Some((_, n)) => *n += 1,
+                        None => per_relay.push((url, 1)),
+                    }
+                    shards[idx] = full;
+                    continue;
+                }
+            }
             shards[idx] = shard_policy.run(&format!("shard {step}/{idx}"), &mut jrng, |_| {
                 let url = self.pick_relay();
                 let t = Instant::now();
@@ -277,6 +335,7 @@ impl ShardcastClient {
                     }
                 }
             })?;
+            wire_bytes += shards[idx].len();
         }
         self.fetch_retries.add(retries as u64);
         let payload = manifest.assemble(&shards)?;
@@ -286,8 +345,37 @@ impl ShardcastClient {
             seconds: t0.elapsed().as_secs_f64(),
             per_relay_shards: per_relay,
             retries,
+            wire_bytes,
+            delta_shards,
         };
         Ok((payload, report))
+    }
+
+    /// One delta attempt for `(step, idx)`: fetch the wire from a sampled
+    /// relay, decode against the caller's base shard, verify against the
+    /// manifest digest. Returns `(full_shard, wire_len, relay_url)` on
+    /// success, `None` to fall back to the full-shard pull.
+    fn try_delta_shard(
+        &self,
+        manifest: &Manifest,
+        base_shards: &[&[u8]],
+        step: u64,
+        idx: usize,
+    ) -> Option<(Vec<u8>, usize, String)> {
+        let url = self.pick_relay();
+        let t = Instant::now();
+        let r = self.http.get(&format!("{url}/delta?step={step}&idx={idx}")).ok()?;
+        if r.status != 200 {
+            return None;
+        }
+        let base_bytes: &[u8] = base_shards.get(idx).copied().unwrap_or(&[]);
+        let full = super::encoding::decode_delta(base_bytes, &r.body).ok()?;
+        let digest: [u8; 32] = Sha256::digest(&full).into();
+        if digest != manifest.shard_sha256[idx] {
+            return None;
+        }
+        self.update(&url, true, r.body.len(), t.elapsed().as_secs_f64());
+        Some((full, r.body.len(), url))
     }
 }
 
@@ -481,5 +569,67 @@ mod tests {
             succ(&doomed_url) < succ(&survivor.url()),
             "dead relay's estimate did not collapse: {est:?}"
         );
+    }
+
+    #[test]
+    fn delta_and_full_paths_assemble_identical_bytes() {
+        // Property at the heart of the encoding contract: a worker that
+        // downloads step 2 via per-shard deltas against its held step-1
+        // payload must end up with *byte-identical* output (and identical
+        // digests) to a worker that pulled every shard in full — deltas
+        // are a transport optimization, never a semantic change.
+        let base_payload: Vec<u8> = (0..120_000u32).map(|i| (i % 249) as u8).collect();
+        let mut cur_payload = base_payload.clone();
+        for pos in [5_000usize, 60_000, 119_999] {
+            cur_payload[pos] ^= 0x33;
+        }
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &base_payload, 8 * 1024);
+        let (m2, sh2) = Manifest::build(2, &cur_payload, 8 * 1024);
+        let wires: Vec<Vec<u8>> = sh2
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let b = origin.store.shard(1, i).unwrap();
+                crate::shardcast::encoding::encode_delta(&b, s)
+            })
+            .collect();
+        origin.store.publish_full_with_deltas(m2.clone().with_base(1), sh2, wires);
+
+        let relay = Relay::start("dr", origin.url(), ServerConfig::default(),
+                                 Duration::from_millis(5)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !(relay.store.is_complete(1) && relay.store.is_complete(2)) {
+            assert!(Instant::now() < deadline, "relay never mirrored both steps");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        let client = ShardcastClient::new("worker-6", &[relay.url()], 11, false);
+        let (held_base, _) = client.fetch_checkpoint(1).unwrap();
+        assert_eq!(held_base, base_payload);
+        let (full, full_rep) = client.fetch_checkpoint(2).unwrap();
+        let (via_delta, delta_rep) =
+            client.fetch_checkpoint_with_base(2, Some((1, &held_base))).unwrap();
+        assert_eq!(full, via_delta, "delta and full decode paths diverged");
+        assert_eq!(
+            Sha256::digest(&full)[..],
+            Sha256::digest(&via_delta)[..],
+            "checksum mismatch between paths"
+        );
+        assert_eq!(full_rep.delta_shards, 0);
+        assert_eq!(full_rep.wire_bytes, cur_payload.len());
+        assert_eq!(delta_rep.delta_shards, m2.n_shards(), "{delta_rep:?}");
+        assert!(
+            delta_rep.wire_bytes * 2 < full_rep.wire_bytes,
+            "sparse delta saved too little: {} vs {}",
+            delta_rep.wire_bytes,
+            full_rep.wire_bytes
+        );
+        // A base the manifest does not advertise (stale by one step) must
+        // fall back to full pulls and still agree byte-for-byte.
+        let (stale, stale_rep) =
+            client.fetch_checkpoint_with_base(2, Some((0, &held_base))).unwrap();
+        assert_eq!(stale, full);
+        assert_eq!(stale_rep.delta_shards, 0);
     }
 }

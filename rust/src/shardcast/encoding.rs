@@ -1,0 +1,270 @@
+//! Wire encodings that cut SHARDCAST origin egress (§2.2; INTELLECT-1
+//! shipped int8-reduced weights for the same reason).
+//!
+//! Two independent reductions compose here:
+//!
+//! - **Per-shard deltas** ([`encode_delta`] / [`decode_delta`]): the
+//!   publisher XORs each shard against the same-index shard of a *base*
+//!   checkpoint version and run-length-encodes the zero runs. RL policy
+//!   weights change a little every step, so consecutive checkpoints share
+//!   most of their bytes and the delta wire is a fraction of the shard.
+//!   The codec is exactly invertible: `decode_delta(base, encode_delta
+//!   (base, cur)) == cur`, byte for byte, so the manifest's per-shard and
+//!   assembled digests (computed over the *decoded* shards) still gate
+//!   integrity — a corrupt or truncated wire fails the checksum, never
+//!   panics.
+//! - **Block-quantized payloads** ([`quantize_q8`] / [`dequantize_q8`]):
+//!   an f32 weight blob becomes int8 codes plus one f32 scale per
+//!   [`Q8_BLOCK`] values (~4x smaller). Quantization happens *before*
+//!   manifest build, so the published checkpoint IS the quantized blob:
+//!   full fetches and delta fetches reconstruct the identical bytes and
+//!   the §2.2.3 checksum contract is untouched. Consumers that need f32
+//!   weights dequantize after verification.
+//!
+//! Both encoders are pure functions of their inputs — a relay that had to
+//! fall back to a full-shard pull can recompute the same delta wire the
+//! origin would have produced and keep serving deltas to its own subtree.
+
+/// Values per quantization block (one f32 scale amortized over each).
+pub const Q8_BLOCK: usize = 64;
+
+/// Delta wire markers (first byte of the wire).
+const WIRE_RAW: u8 = 0x00;
+const WIRE_XRLE: u8 = 0x01;
+
+/// Encode `cur` against `base` as `XOR + zero-RLE`. When the encoded form
+/// would not actually be smaller (the shards share few bytes, or `base`
+/// is shorter than `cur`), falls back to an escaped raw copy — the wire
+/// is never more than `1 + cur.len()` bytes.
+///
+/// Wire grammar after the marker byte (`WIRE_XRLE`): a sequence of
+/// `(zero_run: u32 LE, lit_len: u32 LE, lit_bytes)` groups over the XOR
+/// stream, covering exactly `cur.len()` bytes.
+pub fn encode_delta(base: &[u8], cur: &[u8]) -> Vec<u8> {
+    let xor: Vec<u8> = cur
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| b ^ base.get(i).copied().unwrap_or(0))
+        .collect();
+    let mut wire = Vec::with_capacity(cur.len() / 4 + 16);
+    wire.push(WIRE_XRLE);
+    let mut i = 0usize;
+    while i < xor.len() {
+        let zero_start = i;
+        while i < xor.len() && xor[i] == 0 {
+            i += 1;
+        }
+        let lit_start = i;
+        while i < xor.len() && xor[i] != 0 {
+            i += 1;
+        }
+        wire.extend_from_slice(&((lit_start - zero_start) as u32).to_le_bytes());
+        wire.extend_from_slice(&((i - lit_start) as u32).to_le_bytes());
+        wire.extend_from_slice(&xor[lit_start..i]);
+    }
+    if wire.len() >= cur.len() + 1 {
+        let mut raw = Vec::with_capacity(cur.len() + 1);
+        raw.push(WIRE_RAW);
+        raw.extend_from_slice(cur);
+        return raw;
+    }
+    wire
+}
+
+/// Invert [`encode_delta`]: reconstruct the full shard bytes from `base`
+/// and the delta wire. Untrusted input: every malformed shape (unknown
+/// marker, truncated group header, literal overrun) is an `Err`, not a
+/// panic — the caller treats it like a checksum failure and falls back to
+/// a full-shard fetch.
+pub fn decode_delta(base: &[u8], wire: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let (&marker, body) = wire.split_first().ok_or_else(|| anyhow::anyhow!("empty delta wire"))?;
+    match marker {
+        WIRE_RAW => Ok(body.to_vec()),
+        WIRE_XRLE => {
+            let mut out = Vec::new();
+            let mut p = 0usize;
+            while p < body.len() {
+                anyhow::ensure!(p + 8 <= body.len(), "truncated delta group header");
+                let zeros =
+                    u32::from_le_bytes(body[p..p + 4].try_into().unwrap()) as usize;
+                let lits =
+                    u32::from_le_bytes(body[p + 4..p + 8].try_into().unwrap()) as usize;
+                p += 8;
+                anyhow::ensure!(p + lits <= body.len(), "truncated delta literals");
+                let start = out.len();
+                for k in 0..zeros {
+                    out.push(base.get(start + k).copied().unwrap_or(0));
+                }
+                let start = out.len();
+                for (k, &x) in body[p..p + lits].iter().enumerate() {
+                    out.push(x ^ base.get(start + k).copied().unwrap_or(0));
+                }
+                p += lits;
+                anyhow::ensure!(out.len() <= (u32::MAX as usize), "delta output overrun");
+            }
+            Ok(out)
+        }
+        m => anyhow::bail!("unknown delta wire marker {m:#x}"),
+    }
+}
+
+/// Quantize an f32 blob (little-endian, length a multiple of 4) to the
+/// `q8` payload encoding: per block of [`Q8_BLOCK`] values, one f32 scale
+/// followed by that many int8 codes (`code = round(v / scale)`, scale =
+/// absmax/127). Trailing bytes that do not form a whole f32 are carried
+/// verbatim after the blocks. Roughly 4x smaller than the input.
+pub fn quantize_q8(payload: &[u8]) -> Vec<u8> {
+    let n_floats = payload.len() / 4;
+    let tail = &payload[n_floats * 4..];
+    let mut out = Vec::with_capacity(payload.len() / 4 + 16);
+    out.extend_from_slice(&(n_floats as u32).to_le_bytes());
+    for block in 0..n_floats.div_ceil(Q8_BLOCK) {
+        let lo = block * Q8_BLOCK;
+        let hi = (lo + Q8_BLOCK).min(n_floats);
+        let vals: Vec<f32> = (lo..hi)
+            .map(|i| f32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap()))
+            .collect();
+        let absmax = vals.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        out.extend_from_slice(&scale.to_le_bytes());
+        for v in vals {
+            let q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            out.push(q as u8);
+        }
+    }
+    out.extend_from_slice(tail);
+    out
+}
+
+/// Reconstruct approximate f32 bytes from a `q8` blob. Lossy relative to
+/// the pre-quantization weights (bounded by scale/2 per value) but a pure
+/// function of the blob — every worker that verified the same checkpoint
+/// dequantizes to identical f32 bytes. Malformed blobs error.
+pub fn dequantize_q8(blob: &[u8]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(blob.len() >= 4, "q8 blob too short");
+    let n_floats = u32::from_le_bytes(blob[..4].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n_floats * 4);
+    let mut p = 4usize;
+    let mut produced = 0usize;
+    while produced < n_floats {
+        anyhow::ensure!(p + 4 <= blob.len(), "q8 blob truncated at scale");
+        let scale = f32::from_le_bytes(blob[p..p + 4].try_into().unwrap());
+        p += 4;
+        let take = (n_floats - produced).min(Q8_BLOCK);
+        anyhow::ensure!(p + take <= blob.len(), "q8 blob truncated at codes");
+        for &code in &blob[p..p + take] {
+            let v = (code as i8) as f32 * scale;
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        p += take;
+        produced += take;
+    }
+    out.extend_from_slice(&blob[p..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn delta_roundtrip_arbitrary_pairs() {
+        // Property: decode(base, encode(base, cur)) == cur for arbitrary
+        // lengths (including mismatched base/cur lengths) and change
+        // densities — the byte-identity the checksum contract rests on.
+        prop::check(
+            "delta_roundtrip",
+            60,
+            |rng, size| {
+                let blen = rng.usize(size * 40 + 2);
+                let clen = rng.usize(size * 40 + 2);
+                let base: Vec<u8> = (0..blen).map(|_| rng.range(0, 256) as u8).collect();
+                let mut cur: Vec<u8> = base.iter().copied().take(clen).collect();
+                while cur.len() < clen {
+                    cur.push(rng.range(0, 256) as u8);
+                }
+                // Sparse mutations so zero-RLE has runs to chew on.
+                for _ in 0..rng.usize(8) {
+                    if !cur.is_empty() {
+                        let i = rng.usize(cur.len());
+                        cur[i] ^= 1 + rng.range(0, 255) as u8;
+                    }
+                }
+                (base, cur)
+            },
+            |(base, cur)| {
+                let wire = encode_delta(base, cur);
+                let back = decode_delta(base, &wire).map_err(|e| e.to_string())?;
+                prop::ensure_eq(back, cur.clone(), "delta roundtrip")
+            },
+        );
+    }
+
+    #[test]
+    fn sparse_change_compresses_identity_does_not_grow() {
+        let base: Vec<u8> = (0..64 * 1024u32).map(|i| (i % 251) as u8).collect();
+        let mut cur = base.clone();
+        for i in (0..cur.len()).step_by(4096) {
+            cur[i] ^= 0x5A;
+        }
+        let wire = encode_delta(&base, &cur);
+        assert!(wire.len() < cur.len() / 10, "sparse delta too big: {}", wire.len());
+        // Unrelated payloads: the raw escape caps growth at one byte.
+        let other: Vec<u8> = (0..cur.len() as u32).map(|i| (i * 7 % 256) as u8).collect();
+        assert!(encode_delta(&base, &other).len() <= other.len() + 1);
+        // Identical payloads compress to a few header bytes.
+        assert!(encode_delta(&base, &base).len() < 16);
+    }
+
+    #[test]
+    fn malformed_wire_errors_not_panics() {
+        let base = vec![1u8; 100];
+        assert!(decode_delta(&base, &[]).is_err());
+        assert!(decode_delta(&base, &[0x77, 1, 2]).is_err()); // unknown marker
+        // Truncated group header / literal overrun.
+        assert!(decode_delta(&base, &[WIRE_XRLE, 4, 0, 0]).is_err());
+        let mut lying = vec![WIRE_XRLE];
+        lying.extend_from_slice(&0u32.to_le_bytes());
+        lying.extend_from_slice(&1000u32.to_le_bytes()); // promises 1000 literals
+        lying.push(9);
+        assert!(decode_delta(&base, &lying).is_err());
+    }
+
+    #[test]
+    fn q8_shrinks_and_roundtrips_deterministically() {
+        let mut rng = Rng::new(41);
+        let floats: Vec<u8> =
+            (0..4096).flat_map(|_| ((rng.f64() as f32) - 0.5).to_le_bytes()).collect();
+        let q = quantize_q8(&floats);
+        assert!(
+            q.len() * 3 < floats.len(),
+            "q8 not ~4x smaller: {} vs {}",
+            q.len(),
+            floats.len()
+        );
+        // Pure function: same input, same blob; dequantize is total on it.
+        assert_eq!(q, quantize_q8(&floats));
+        let deq = dequantize_q8(&q).unwrap();
+        assert_eq!(deq.len(), floats.len());
+        // Error bound: |v - deq(v)| <= scale/2 <= absmax/254 per block.
+        for i in 0..4096 {
+            let a = f32::from_le_bytes(floats[4 * i..4 * i + 4].try_into().unwrap());
+            let b = f32::from_le_bytes(deq[4 * i..4 * i + 4].try_into().unwrap());
+            assert!((a - b).abs() <= 0.5 / 127.0 + 1e-6, "value {i}: {a} vs {b}");
+        }
+        // Malformed blobs error cleanly.
+        assert!(dequantize_q8(&[]).is_err());
+        assert!(dequantize_q8(&q[..q.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn q8_carries_non_f32_tail() {
+        let mut payload: Vec<u8> = 1.5f32.to_le_bytes().to_vec();
+        payload.extend_from_slice(&[0xAA, 0xBB, 0xCC]); // 3 trailing bytes
+        let q = quantize_q8(&payload);
+        let deq = dequantize_q8(&q).unwrap();
+        assert_eq!(&deq[deq.len() - 3..], &[0xAA, 0xBB, 0xCC]);
+    }
+}

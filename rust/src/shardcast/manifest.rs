@@ -16,6 +16,15 @@ pub struct Manifest {
     /// Checksum of the assembled checkpoint, produced by the training
     /// nodes — the reference the workers compare against.
     pub assembled_sha256: [u8; 32],
+    /// Checkpoint version this publication also carries per-shard delta
+    /// wires against (`/delta` endpoint). `None` = full shards only.
+    /// Advisory: the digests above are always over the *decoded* full
+    /// shards, and any peer missing the base falls back to `/shard`.
+    pub base_step: Option<u64>,
+    /// Payload encoding of the published bytes: `"raw"` (plain weight
+    /// blob) or `"q8"` (block-quantized, [`super::encoding::quantize_q8`]
+    /// — consumers dequantize *after* checksum verification).
+    pub encoding: String,
 }
 
 impl Manifest {
@@ -32,8 +41,22 @@ impl Manifest {
             shard_bytes,
             shard_sha256: shards.iter().map(|s| Sha256::digest(s).into()).collect(),
             assembled_sha256: Sha256::digest(payload).into(),
+            base_step: None,
+            encoding: "raw".to_string(),
         };
         (manifest, shards)
+    }
+
+    /// Advertise per-shard delta availability against `base_step`.
+    pub fn with_base(mut self, base_step: u64) -> Manifest {
+        self.base_step = Some(base_step);
+        self
+    }
+
+    /// Tag the payload encoding (`"raw"` / `"q8"`).
+    pub fn with_encoding(mut self, encoding: &str) -> Manifest {
+        self.encoding = encoding.to_string();
+        self
     }
 
     /// Reassemble + verify (§2.2.3). Returns the payload or a description
@@ -54,13 +77,18 @@ impl Manifest {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("step", self.step.into()),
             ("total_bytes", self.total_bytes.into()),
             ("shard_bytes", self.shard_bytes.into()),
             ("shards", Json::Arr(self.shard_sha256.iter().map(|d| Json::Str(hex(d))).collect())),
             ("assembled", Json::Str(hex(&self.assembled_sha256))),
-        ])
+            ("encoding", self.encoding.clone().into()),
+        ];
+        if let Some(b) = self.base_step {
+            pairs.push(("base_step", b.into()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
@@ -79,6 +107,12 @@ impl Manifest {
             assembled_sha256: unhex(
                 j.get("assembled").and_then(Json::as_str).unwrap_or(""),
             )?,
+            base_step: j.get("base_step").and_then(Json::as_u64),
+            encoding: j
+                .get("encoding")
+                .and_then(Json::as_str)
+                .unwrap_or("raw")
+                .to_string(),
         })
     }
 }
@@ -129,6 +163,20 @@ mod tests {
         let j = m.to_json();
         let m2 = Manifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn json_roundtrip_with_encoding_metadata() {
+        let (m, _) = Manifest::build(8, &vec![4u8; 20_000], 4096);
+        let m = m.with_base(7).with_encoding("q8");
+        let m2 = Manifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(m2.base_step, Some(7));
+        assert_eq!(m2.encoding, "q8");
+        // Manifests from pre-delta publishers parse with defaults.
+        let (legacy, _) = Manifest::build(1, &[1, 2, 3], 2);
+        assert_eq!(legacy.base_step, None);
+        assert_eq!(legacy.encoding, "raw");
     }
 
     #[test]

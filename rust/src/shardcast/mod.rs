@@ -1,6 +1,55 @@
 //! SHARDCAST (paper §2.2): HTTP tree-topology broadcast of policy weights
 //! from the training node to decentralized inference workers — sharded,
-//! pipelined, checksummed, rate-limited and firewalled.
+//! pipelined, checksummed, rate-limited and firewalled. The tree is
+//! *self-organizing*: relays plan their parents from a gossiped membership
+//! view ([`tree::plan_tree`]) and re-form the topology under churn instead
+//! of relying on a hand-wired hub-and-spoke.
+//!
+//! # Parent selection
+//!
+//! Each relay scores candidate hubs by advertised uplink discounted by
+//! measured pull latency ([`tree::RelayPeer::score`]): the fattest,
+//! closest relays become the origin's direct children and everything else
+//! attaches under the shallowest hub with spare fan-out capacity. The
+//! resulting [`tree::TreePlan`] hands every relay an *ordered* candidate
+//! list in which each entry sits at strictly smaller depth than the relay
+//! itself, with the origin always last — so any rotation through the list
+//! is loop-free by construction, no cycle detection needed. A starved or
+//! distant relay is planned as a leaf and never becomes a hub.
+//!
+//! # Re-formation triggers
+//!
+//! Two mechanisms heal the tree, at different speeds:
+//!
+//! - **Local rotation (fast, autonomous)** — a [`Relay`] rotates to its
+//!   next candidate parent after [`server::REPARENT_AFTER`] consecutive
+//!   failed pull cycles (dead upstream, netsplit via
+//!   [`crate::http::Partition`], sustained 5xx). Costs a few poll
+//!   intervals; needs no coordination.
+//! - **Re-planning (global, gossip-driven)** — when the gossiped
+//!   membership view changes (peer TTL expiry, quarantine, joins), the
+//!   planner recomputes the tree over the survivors ([`tree::reform`])
+//!   and pushes fresh candidate lists via [`server::Relay::set_parents`].
+//!   Relays resume half-mirrored checkpoints shard-by-shard from their
+//!   new parent — only fully-complete steps are skipped by the puller.
+//!
+//! # Delta fallback ladder
+//!
+//! A publication may advertise `base_step` in its [`Manifest`]: per-shard
+//! XOR+RLE delta wires against that earlier checkpoint (optionally over a
+//! block-quantized payload — [`encoding`]). Every consumer walks the same
+//! ladder, per shard:
+//!
+//! 1. holds the base in full → try `GET /delta`, decode against the base
+//!    shard, verify against the manifest's per-shard digest;
+//! 2. any miss (404, decode error, digest mismatch, no base) → full
+//!    `GET /shard` pull, identical bytes guaranteed by the digests;
+//! 3. a relay that fell back still re-derives the wire locally (the codec
+//!    is pure), so its own subtree keeps its delta savings.
+//!
+//! Integrity is never delegated to the encoding: manifest digests are
+//! always over the *decoded full shards*, so the §2.2.3 checksum contract
+//! is the same on both paths and a corrupt wire can only cost bandwidth.
 //!
 //! # Failure model
 //!
@@ -14,14 +63,12 @@
 //!   that fails [`client::QUARANTINE_AFTER`] times in a row is quarantined
 //!   out of the sampling pool (it re-earns trust via the desperation probe
 //!   that fires when every relay is quarantined).
-//! - **Upstream death inside the tree** — a [`Relay`] started with
-//!   [`server::Relay::start_with_parents`] rotates to its next candidate
-//!   parent after [`server::REPARENT_AFTER`] consecutive failed pull
-//!   cycles, and resumes half-mirrored checkpoints shard-by-shard from the
-//!   new parent.
+//! - **Upstream death or partition inside the tree** — local rotation,
+//!   then gossip-driven re-planning, as above.
 //! - **Slow/streaming peers** — 503 "shard not yet available" responses
 //!   back off under the same retry policies (pipelining means a parent may
 //!   legitimately lag by a few shards).
+//! - **Missing delta base** — transparent fall-through to full shards.
 //!
 //! *Not* survivable by design: payload corruption. A checksum mismatch in
 //! [`Manifest::assemble`] fails the fetch outright — per §2.2.3 the worker
@@ -32,13 +79,17 @@
 //! [`crate::http::FaultPlan`] replay exactly.
 
 pub mod client;
+pub mod encoding;
 pub mod manifest;
 pub mod publisher;
 pub mod server;
 pub mod store;
+pub mod tree;
 
 pub use client::{DownloadReport, ShardcastClient};
+pub use encoding::{decode_delta, dequantize_q8, encode_delta, quantize_q8};
 pub use manifest::Manifest;
-pub use publisher::{BroadcastRecord, Broadcaster};
+pub use publisher::{BroadcastEncoding, BroadcastRecord, Broadcaster};
 pub use server::{Origin, Relay};
 pub use store::Store;
+pub use tree::{plan_tree, reform, RelayPeer, TreePlan};

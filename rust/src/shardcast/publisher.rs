@@ -5,12 +5,32 @@
 //! waits for the relay tier to finish mirroring, recording per-checkpoint
 //! timings so the pipeline's true overlap can be measured (Fig 6 / §4.2).
 
+//! Encoding-aware publishing: [`Broadcaster::start_with_encoding`] can
+//! quantize each checkpoint ([`super::encoding::quantize_q8`]) *before*
+//! sharding — so the published blob IS the quantized payload and every
+//! checksum in the manifest covers exactly what travels — and/or attach
+//! per-shard delta wires against the previously published step (INTELLECT-1
+//! style egress reduction: most weights barely move between RL steps).
+
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::encoding::{encode_delta, quantize_q8};
 use super::manifest::Manifest;
 use super::store::Store;
+
+/// What the broadcast thread does to each payload before publishing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BroadcastEncoding {
+    /// Attach per-shard delta wires against the previously published
+    /// checkpoint (manifest advertises `base_step`; children missing the
+    /// base transparently fall back to full shards).
+    pub delta: bool,
+    /// Block-quantize the payload (`"q8"`) before sharding. Consumers
+    /// dequantize after checksum verification.
+    pub quantize: bool,
+}
 
 /// Timing record for one broadcast, all timestamps in seconds relative to
 /// the broadcaster's epoch (`Broadcaster::start`).
@@ -66,6 +86,25 @@ impl Broadcaster {
         mirror_timeout: Duration,
         queue_depth: usize,
     ) -> anyhow::Result<Broadcaster> {
+        Broadcaster::start_with_encoding(
+            origin,
+            relays,
+            shard_bytes,
+            mirror_timeout,
+            queue_depth,
+            BroadcastEncoding::default(),
+        )
+    }
+
+    /// [`Broadcaster::start`] with a non-default payload encoding.
+    pub fn start_with_encoding(
+        origin: Store,
+        relays: Vec<Store>,
+        shard_bytes: usize,
+        mirror_timeout: Duration,
+        queue_depth: usize,
+        encoding: BroadcastEncoding,
+    ) -> anyhow::Result<Broadcaster> {
         let epoch = Instant::now();
         // The enqueue timestamp rides in the message, stamped on the
         // trainer's thread, so queue wait behind an in-flight broadcast is
@@ -73,11 +112,45 @@ impl Broadcaster {
         let (tx, rx) = sync_channel::<(u64, Vec<u8>, f64)>(queue_depth.max(1));
         let handle = std::thread::Builder::new().name("i2-broadcast".into()).spawn(move || {
             let mut records = Vec::new();
+            // Previously *published* payload (post-quantize) — the delta
+            // base the manifest will advertise.
+            let mut prev: Option<(u64, Vec<u8>)> = None;
             while let Ok((step, payload, enqueued_at)) = rx.recv() {
                 let started_at = epoch.elapsed().as_secs_f64();
                 let t0 = Instant::now();
-                let (manifest, shards) = Manifest::build(step, &payload, shard_bytes.max(1));
-                origin.publish_full(manifest, shards);
+                // Quantize BEFORE sharding: the published blob is the
+                // quantized payload, so the manifest digests cover exactly
+                // the bytes on the wire and the §2.2.3 checksum contract
+                // holds unchanged on both the delta and full paths.
+                let published =
+                    if encoding.quantize { quantize_q8(&payload) } else { payload };
+                let (mut manifest, shards) =
+                    Manifest::build(step, &published, shard_bytes.max(1));
+                if encoding.quantize {
+                    manifest = manifest.with_encoding("q8");
+                }
+                match prev.as_ref().filter(|_| encoding.delta) {
+                    Some((base_step, base_bytes)) => {
+                        let base_shards: Vec<&[u8]> =
+                            base_bytes.chunks(shard_bytes.max(1)).collect();
+                        let wires: Vec<Vec<u8>> = shards
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| {
+                                encode_delta(base_shards.get(i).copied().unwrap_or(&[]), s)
+                            })
+                            .collect();
+                        origin.publish_full_with_deltas(
+                            manifest.with_base(*base_step),
+                            shards,
+                            wires,
+                        );
+                    }
+                    None => origin.publish_full(manifest, shards),
+                }
+                if encoding.delta {
+                    prev = Some((step, published.clone()));
+                }
                 let publish_secs = t0.elapsed().as_secs_f64();
                 let deadline = Instant::now() + mirror_timeout;
                 let t1 = Instant::now();
@@ -91,7 +164,7 @@ impl Broadcaster {
                 }
                 records.push(BroadcastRecord {
                     step,
-                    bytes: payload.len(),
+                    bytes: published.len(),
                     enqueued_at,
                     started_at,
                     completed_at: epoch.elapsed().as_secs_f64(),
@@ -201,6 +274,68 @@ mod tests {
             assert!(r.started_at <= r.completed_at);
         }
         assert!(records[0].completed_at <= records[1].completed_at);
+    }
+
+    #[test]
+    fn delta_quantized_broadcast_publishes_wires_and_metadata() {
+        // f32-looking payloads, sparsely changed between steps, so both
+        // the quantizer and the delta encoder have realistic structure.
+        let floats1: Vec<u8> =
+            (0..1000u32).flat_map(|i| ((i % 97) as f32 * 0.01).to_le_bytes()).collect();
+        let mut floats2 = floats1.clone();
+        for chunk in [40usize, 2000] {
+            floats2[chunk..chunk + 4].copy_from_slice(&1.5f32.to_le_bytes());
+        }
+        let origin = Store::new();
+        let enc = BroadcastEncoding { delta: true, quantize: true };
+        let b = Broadcaster::start_with_encoding(
+            origin.clone(),
+            Vec::new(),
+            1024,
+            Duration::from_millis(100),
+            2,
+            enc,
+        )
+        .unwrap();
+        b.enqueue(1, floats1.clone()).unwrap();
+        b.enqueue(2, floats2.clone()).unwrap();
+        let records = b.finish();
+        assert_eq!(records.len(), 2);
+
+        // Step 1: quantized, no base (nothing to diff against).
+        let m1 = origin.manifest(1).unwrap();
+        assert_eq!(m1.encoding, "q8");
+        assert_eq!(m1.base_step, None);
+        // Step 2: quantized AND delta-advertised with wires stored.
+        let m2 = origin.manifest(2).unwrap();
+        assert_eq!(m2.encoding, "q8");
+        assert_eq!(m2.base_step, Some(1));
+        assert!(origin.delta(2, 0).is_some());
+
+        // The published blob is exactly quantize_q8(payload): checksums
+        // cover the wire bytes, and consumers dequantize after assemble.
+        let shards: Vec<Vec<u8>> =
+            (0..m2.n_shards()).map(|i| origin.shard(2, i).unwrap().as_ref().clone()).collect();
+        let assembled = m2.assemble(&shards).unwrap();
+        assert_eq!(assembled, quantize_q8(&floats2));
+        let deq = super::super::encoding::dequantize_q8(&assembled).unwrap();
+        assert_eq!(deq.len(), floats2.len());
+
+        // Every delta wire decodes back to the exact published shard.
+        let base_published = quantize_q8(&floats1);
+        let base_shards: Vec<&[u8]> = base_published.chunks(1024).collect();
+        for (i, shard) in shards.iter().enumerate() {
+            let wire = origin.delta(2, i).unwrap();
+            let decoded = super::super::encoding::decode_delta(
+                base_shards.get(i).copied().unwrap_or(&[]),
+                &wire,
+            )
+            .unwrap();
+            assert_eq!(&decoded, shard, "shard {i} delta wire corrupt");
+        }
+        // Sparse update: total wire bytes must be far below full size.
+        let wire_total: usize = (0..m2.n_shards()).map(|i| origin.delta(2, i).unwrap().len()).sum();
+        assert!(wire_total * 2 < assembled.len(), "{wire_total} vs {}", assembled.len());
     }
 
     #[test]

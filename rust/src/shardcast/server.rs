@@ -7,9 +7,13 @@
 //!   GET /versions              - JSON list of stored checkpoint steps
 //!   GET /manifest?step=N       - manifest (or latest when step omitted)
 //!   GET /shard?step=N&idx=I    - shard bytes (503 while still streaming in)
+//!   GET /delta?step=N&idx=I    - delta wire vs the manifest's base_step
+//!                                (404 when this publication has none)
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+use sha2::{Digest, Sha256};
 
 use super::manifest::Manifest;
 use super::store::Store;
@@ -55,6 +59,16 @@ fn handle(store: &Store, req: &Request) -> Response {
                 },
             }
         }
+        "/delta" => {
+            // Best-effort: a 404 here just sends the puller down the
+            // full-shard path, so absence is never an error condition.
+            let step = req.query_u64("step", u64::MAX);
+            let idx = req.query_u64("idx", u64::MAX) as usize;
+            match store.delta(step, idx) {
+                Some(wire) => Response::ok(wire.as_ref().clone()),
+                None => Response::error(404, "no delta for this shard"),
+            }
+        }
         _ => Response::error(404, "unknown endpoint"),
     }
 }
@@ -95,13 +109,19 @@ impl Origin {
 /// costs a few poll intervals, not the subtree. Partially-mirrored
 /// checkpoints are resumed from the new parent (only fully-complete steps
 /// are skipped by the puller).
+///
+/// The candidate list is *dynamic*: [`Relay::set_parents`] swaps in a
+/// fresh list mid-epoch, which is how the tree planner
+/// ([`super::tree::plan_tree`]) re-forms the topology after churn without
+/// restarting relays — the puller snapshots the list once per cycle and
+/// resumes half-mirrored checkpoints from whatever upstream it lands on.
 pub struct Relay {
     pub store: Store,
     pub server: HttpServer,
     pub name: String,
     stop: Arc<AtomicBool>,
     puller: Option<std::thread::JoinHandle<()>>,
-    parents: Vec<String>,
+    parents: Arc<Mutex<Vec<String>>>,
     parent_idx: Arc<AtomicUsize>,
     reparent_events: Arc<Counter>,
 }
@@ -131,10 +151,11 @@ impl Relay {
         let stop = Arc::new(AtomicBool::new(false));
         let parent_idx = Arc::new(AtomicUsize::new(0));
         let reparent_events = Arc::new(Counter::default());
+        let parents = Arc::new(Mutex::new(parents));
         let puller = {
             let store = store.clone();
             let stop = Arc::clone(&stop);
-            let parents = parents.clone();
+            let parents = Arc::clone(&parents);
             let parent_idx = Arc::clone(&parent_idx);
             let reparent_events = Arc::clone(&reparent_events);
             let client = HttpClient::new(&format!("relay-{name}"));
@@ -145,14 +166,20 @@ impl Relay {
                 let mut rng = Rng::new(seed);
                 let mut failures = 0u32;
                 while !stop.load(Ordering::SeqCst) {
-                    let parent = parents[parent_idx.load(Ordering::SeqCst) % parents.len()].clone();
+                    // Snapshot the candidate list (it can be swapped by
+                    // set_parents mid-epoch) and drop the guard before
+                    // any network or store work.
+                    let snapshot = parents.lock().unwrap().clone();
+                    let parent =
+                        snapshot[parent_idx.load(Ordering::SeqCst) % snapshot.len()].clone();
                     match pull_once(&client, &parent, &store, &mut rng) {
                         Ok(()) => failures = 0,
                         Err(e) => {
                             failures += 1;
                             crate::debug!("shardcast", "relay {name} pull from {parent}: {e}");
-                            if failures >= REPARENT_AFTER && parents.len() > 1 {
-                                let next = (parent_idx.load(Ordering::SeqCst) + 1) % parents.len();
+                            if failures >= REPARENT_AFTER && snapshot.len() > 1 {
+                                let next =
+                                    (parent_idx.load(Ordering::SeqCst) + 1) % snapshot.len();
                                 parent_idx.store(next, Ordering::SeqCst);
                                 reparent_events.inc();
                                 failures = 0;
@@ -160,7 +187,7 @@ impl Relay {
                                     "shardcast",
                                     "relay {name}: re-parenting {parent} -> {} after repeated \
                                      pull failures",
-                                    parents[next]
+                                    snapshot[next]
                                 );
                             }
                         }
@@ -187,7 +214,20 @@ impl Relay {
 
     /// The parent URL this relay is currently pulling from.
     pub fn current_parent(&self) -> String {
-        self.parents[self.parent_idx.load(Ordering::SeqCst) % self.parents.len()].clone()
+        let parents = self.parents.lock().unwrap();
+        parents[self.parent_idx.load(Ordering::SeqCst) % parents.len()].clone()
+    }
+
+    /// Swap in a fresh candidate-parent list (tree re-formation after
+    /// churn). Resets the rotation to the new preferred parent; the
+    /// puller picks the change up on its next cycle. Empty lists are
+    /// ignored — a relay must always have somewhere to pull from.
+    pub fn set_parents(&self, new_parents: Vec<String>) {
+        if new_parents.is_empty() {
+            return;
+        }
+        *self.parents.lock().unwrap() = new_parents;
+        self.parent_idx.store(0, Ordering::SeqCst);
     }
 
     /// How many times this relay abandoned a dead upstream.
@@ -216,6 +256,13 @@ impl Drop for Relay {
 /// Only *fully-mirrored* steps are skipped: a checkpoint left half-pulled
 /// by a dying parent is resumed (missing shards only) on the next cycle —
 /// possibly from a different parent after re-parenting.
+///
+/// Delta fallback ladder (per shard): when the manifest advertises a
+/// `base_step` this relay holds *complete*, try `/delta` first and verify
+/// the decoded shard against the manifest digest; on any failure (404,
+/// decode error, checksum mismatch) fall back to the full `/shard` pull.
+/// After a full-shard fallback the wire is recomputed locally — the codec
+/// is pure — so this relay keeps serving `/delta` to its own subtree.
 fn pull_once(
     client: &HttpClient,
     parent: &str,
@@ -243,10 +290,19 @@ fn pull_once(
                 m
             }
         };
+        let base = manifest.base_step.filter(|b| store.is_complete(*b));
         let policy = RetryPolicy::relay_pull();
         for idx in 0..manifest.n_shards() {
             if store.shard(step, idx).is_some() {
                 continue;
+            }
+            if let Some(b) = base {
+                if let Some((full, wire)) = try_delta_pull(client, parent, store, &manifest, b, idx)
+                {
+                    store.put_delta(step, idx, Arc::new(wire));
+                    store.put_shard(step, idx, Arc::new(full));
+                    continue;
+                }
             }
             // Parent may itself still be streaming this shard (503):
             // retry under the shared backoff policy instead of the old
@@ -256,10 +312,48 @@ fn pull_once(
                 anyhow::ensure!(r.status == 200, "status {}", r.status);
                 Ok(r.body)
             })?;
+            if let Some(b) = base {
+                let base_bytes =
+                    store.shard(b, idx).map(|a| a.as_ref().clone()).unwrap_or_default();
+                let wire = super::encoding::encode_delta(&base_bytes, &body);
+                store.put_delta(step, idx, Arc::new(wire));
+            }
             store.put_shard(step, idx, Arc::new(body));
         }
     }
     Ok(())
+}
+
+/// One delta attempt for shard `idx` of `manifest.step` against local base
+/// step `b`. Returns the verified full shard plus the wire, or `None` to
+/// send the caller down the full-shard path.
+fn try_delta_pull(
+    client: &HttpClient,
+    parent: &str,
+    store: &Store,
+    manifest: &Manifest,
+    base: u64,
+    idx: usize,
+) -> Option<(Vec<u8>, Vec<u8>)> {
+    let r = client.get(&format!("{parent}/delta?step={}&idx={idx}", manifest.step)).ok()?;
+    if r.status != 200 {
+        return None;
+    }
+    // Base may have fewer shards than the new step (payload grew): the
+    // encoder treats missing base bytes as zero, so an empty slice is the
+    // correct stand-in, not an error.
+    let base_bytes = store.shard(base, idx).map(|a| a.as_ref().clone()).unwrap_or_default();
+    let full = super::encoding::decode_delta(&base_bytes, &r.body).ok()?;
+    let digest: [u8; 32] = Sha256::digest(&full).into();
+    if digest != manifest.shard_sha256[idx] {
+        crate::warn!(
+            "shardcast",
+            "delta for shard {}/{idx} decoded to a checksum mismatch; falling back to full pull",
+            manifest.step
+        );
+        return None;
+    }
+    Some((full, r.body))
 }
 
 #[cfg(test)]
@@ -355,5 +449,109 @@ mod tests {
         }
         assert_eq!(tier2.current_parent(), origin.url());
         assert!(tier2.reparent_count() >= 1);
+    }
+
+    #[test]
+    fn relay_mirrors_delta_publication_and_reserves_it() {
+        // Origin publishes step 1 full, then step 2 as delta vs step 1.
+        // The relay must (a) assemble byte-identical shards for step 2 and
+        // (b) hold the delta wire itself so its own children can pull
+        // /delta — whether it arrived via the delta path or was recomputed
+        // after a full-shard fallback.
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        let base_payload: Vec<u8> = (0..60_000u32).map(|i| (i % 251) as u8).collect();
+        let mut cur_payload = base_payload.clone();
+        cur_payload[10_000] ^= 0x5A;
+        cur_payload[45_000] ^= 0x5A;
+        origin.publish(1, &base_payload, 8 * 1024);
+        let (m2, sh2) = Manifest::build(2, &cur_payload, 8 * 1024);
+        let base_shards: Vec<Vec<u8>> =
+            (0..sh2.len()).map(|i| origin.store.shard(1, i).unwrap().as_ref().clone()).collect();
+        let wires: Vec<Vec<u8>> = sh2
+            .iter()
+            .enumerate()
+            .map(|(i, s)| super::super::encoding::encode_delta(&base_shards[i], s))
+            .collect();
+        origin.store.publish_full_with_deltas(m2.clone().with_base(1), sh2, wires.clone());
+
+        // The origin serves /delta; unknown combos are 404 (not 5xx).
+        let c = HttpClient::new("probe");
+        assert_eq!(c.get(&format!("{}/delta?step=2&idx=0", origin.url())).unwrap().status, 200);
+        assert_eq!(c.get(&format!("{}/delta?step=1&idx=0", origin.url())).unwrap().status, 404);
+
+        let relay = Relay::start("rd", origin.url(), ServerConfig::default(),
+                                 Duration::from_millis(10)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !relay.store.is_complete(2) {
+            assert!(std::time::Instant::now() < deadline, "relay never mirrored delta step");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for i in 0..m2.n_shards() {
+            assert_eq!(
+                relay.store.delta(2, i).unwrap().as_ref(),
+                &wires[i],
+                "relay must re-serve the shard {i} delta wire to its subtree"
+            );
+        }
+        let shards: Vec<Vec<u8>> =
+            (0..m2.n_shards()).map(|i| relay.store.shard(2, i).unwrap().as_ref().clone()).collect();
+        assert_eq!(m2.assemble(&shards).unwrap(), cur_payload);
+    }
+
+    #[test]
+    fn partition_forces_reparent_then_set_parents_reforms_tree() {
+        // Satellite: a netsplit (http::Partition) between tier2 and its
+        // preferred parent forces rotation to the fallback; once the
+        // planner re-forms the tree, set_parents() moves it back.
+        let partition = crate::http::Partition::new();
+        let origin = Origin::start(ServerConfig::default()).unwrap();
+        origin.publish(1, &vec![4u8; 40_000], 8 * 1024);
+        let t1_cfg = ServerConfig {
+            partition: Some(Arc::clone(&partition)),
+            domain: "t1".to_string(),
+            ..ServerConfig::default()
+        };
+        let tier1 =
+            Relay::start("t1", origin.url(), t1_cfg, Duration::from_millis(10)).unwrap();
+        let tier2 = Relay::start_with_parents(
+            "t2",
+            vec![tier1.url(), origin.url()],
+            ServerConfig::default(),
+            Duration::from_millis(10),
+        )
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !tier2.store.is_complete(1) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never mirrored step 1");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // Sever tier2 -> tier1 only (tier1 still reaches the origin).
+        partition.cut("relay-t2", "t1", 1_000);
+        origin.publish(2, &vec![5u8; 40_000], 8 * 1024);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !tier2.store.is_complete(2) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never routed around the cut");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(tier2.current_parent(), origin.url());
+        assert!(tier2.reparent_count() >= 1);
+        assert!(partition.refused.get() >= 1, "the cut must have actually refused pulls");
+        assert!(tier1.store.is_complete(2), "tier1's own uplink must be unaffected");
+
+        // Partition heals; the planner pushes a fresh candidate list.
+        partition.advance_to(2_000);
+        assert_eq!(partition.live_cuts(), 0);
+        tier2.set_parents(vec![tier1.url(), origin.url()]);
+        assert_eq!(tier2.current_parent(), tier1.url());
+        origin.publish(3, &vec![6u8; 40_000], 8 * 1024);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !tier2.store.is_complete(3) {
+            assert!(std::time::Instant::now() < deadline, "tier2 never pulled via healed tier1");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Ignored: a relay must never be left parentless.
+        tier2.set_parents(Vec::new());
+        assert_eq!(tier2.current_parent(), tier1.url());
     }
 }

@@ -15,6 +15,11 @@ pub const MAX_VERSIONS: usize = 5;
 pub struct Checkpoint {
     pub manifest: Manifest,
     pub shards: Vec<Option<Arc<Vec<u8>>>>,
+    /// Per-shard delta wires against `manifest.base_step` (same indexing
+    /// as `shards`). Optional: populated on delta-encoded publications so
+    /// this server can offer `/delta` to its own children; absence only
+    /// costs bandwidth (children fall back to full shards).
+    pub deltas: Vec<Option<Arc<Vec<u8>>>>,
 }
 
 impl Checkpoint {
@@ -37,7 +42,10 @@ impl Store {
     pub fn publish_manifest(&self, manifest: Manifest) {
         let mut map = self.inner.write().unwrap();
         let n = manifest.n_shards();
-        map.insert(manifest.step, Checkpoint { manifest, shards: vec![None; n] });
+        map.insert(
+            manifest.step,
+            Checkpoint { manifest, shards: vec![None; n], deltas: vec![None; n] },
+        );
         while map.len() > MAX_VERSIONS {
             let oldest = *map.keys().next().unwrap();
             map.remove(&oldest);
@@ -53,11 +61,41 @@ impl Store {
         }
     }
 
+    /// Record the delta wire for `(step, idx)` so it can be served to
+    /// children over `/delta`. No-op for unknown steps / out-of-range
+    /// indices (mirrors `put_shard`).
+    pub fn put_delta(&self, step: u64, idx: usize, wire: Arc<Vec<u8>>) {
+        let mut map = self.inner.write().unwrap();
+        if let Some(cp) = map.get_mut(&step) {
+            if idx < cp.deltas.len() {
+                cp.deltas[idx] = Some(wire);
+            }
+        }
+    }
+
+    pub fn delta(&self, step: u64, idx: usize) -> Option<Arc<Vec<u8>>> {
+        self.inner.read().unwrap().get(&step).and_then(|c| c.deltas.get(idx).cloned().flatten())
+    }
+
     /// Publish a full checkpoint at once (origin side).
     pub fn publish_full(&self, manifest: Manifest, shards: Vec<Vec<u8>>) {
         self.publish_manifest(manifest.clone());
         for (i, s) in shards.into_iter().enumerate() {
             self.put_shard(manifest.step, i, Arc::new(s));
+        }
+    }
+
+    /// Publish a checkpoint together with its per-shard delta wires (the
+    /// delta-encoded origin path; `manifest.base_step` names the base).
+    pub fn publish_full_with_deltas(
+        &self,
+        manifest: Manifest,
+        shards: Vec<Vec<u8>>,
+        deltas: Vec<Vec<u8>>,
+    ) {
+        self.publish_full(manifest.clone(), shards);
+        for (i, w) in deltas.into_iter().enumerate() {
+            self.put_delta(manifest.step, i, Arc::new(w));
         }
     }
 
@@ -113,5 +151,31 @@ mod tests {
             s.put_shard(1, i, Arc::new(sh.clone()));
         }
         assert!(s.is_complete(1));
+    }
+
+    #[test]
+    fn delta_wires_stored_and_served_per_shard() {
+        let s = Store::new();
+        let base = vec![1u8; 1000];
+        let mut cur = base.clone();
+        cur[500] ^= 7;
+        let (m0, sh0) = Manifest::build(1, &base, 256);
+        s.publish_full(m0, sh0.clone());
+        let (m1, sh1) = Manifest::build(2, &cur, 256);
+        let wires: Vec<Vec<u8>> = sh1
+            .iter()
+            .enumerate()
+            .map(|(i, s1)| super::super::encoding::encode_delta(&sh0[i], s1))
+            .collect();
+        s.publish_full_with_deltas(m1.with_base(1), sh1.clone(), wires.clone());
+        assert!(s.is_complete(2));
+        for i in 0..sh1.len() {
+            assert_eq!(s.delta(2, i).unwrap().as_ref(), &wires[i]);
+        }
+        // Completeness never depends on deltas; unknown indices no-op.
+        assert!(s.delta(2, 99).is_none());
+        assert!(s.delta(1, 0).is_none());
+        s.put_delta(9, 0, Arc::new(vec![1]));
+        assert!(s.delta(9, 0).is_none());
     }
 }

@@ -1,0 +1,357 @@
+//! Self-organizing SHARDCAST tree (§2.2): plan the relay topology from a
+//! gossiped membership view instead of hand-wiring parent chains.
+//!
+//! [`plan_tree`] is a pure, deterministic function of the view: relays
+//! are ranked by a bandwidth score (advertised `uplink_mbps` discounted
+//! by measured pull latency), the best ones become the origin's direct
+//! children, and every later relay attaches under the shallowest placed
+//! node with spare fan-out capacity (ties broken by score, then name).
+//! Loop-freedom is *by construction*, not by cycle check: a child's depth
+//! is `parent depth + 1` and every fallback candidate a relay is given —
+//! the list fed to [`super::server::Relay::set_parents`] — sits at
+//! strictly smaller depth, with the origin (depth 0) always last. However
+//! the [`super::server::REPARENT_AFTER`] rotation walks that list, the
+//! pull graph stays acyclic and rooted at the origin.
+//!
+//! Churn re-formation is re-planning: drop dead or quarantined relays
+//! from the view, call [`plan_tree`] again, and push the fresh candidate
+//! lists to the survivors mid-epoch. Half-mirrored checkpoints survive
+//! re-parenting because the relay puller resumes missing shards from
+//! whichever parent it currently has (see `pull_once`).
+
+use std::collections::BTreeMap;
+
+/// One relay as seen through the gossiped membership view.
+#[derive(Clone, Debug)]
+pub struct RelayPeer {
+    pub name: String,
+    pub url: String,
+    /// Advertised uplink (gossiped hardware metadata, §2.4.1).
+    pub uplink_mbps: u64,
+    /// Measured pull latency toward this relay (0 = unmeasured).
+    pub pull_latency_ms: u64,
+}
+
+impl RelayPeer {
+    /// Parent-selection score: fat, close relays make good hubs.
+    pub fn score(&self) -> f64 {
+        self.uplink_mbps as f64 / (1.0 + self.pull_latency_ms as f64)
+    }
+}
+
+/// A planned topology over one membership view.
+#[derive(Clone, Debug, Default)]
+pub struct TreePlan {
+    /// Relay name -> tree depth (origin children are depth 1).
+    pub depth: BTreeMap<String, u32>,
+    /// Relay name -> ordered parent candidates (preferred first, origin
+    /// always last). Every candidate sits at strictly smaller depth.
+    pub parents: BTreeMap<String, Vec<String>>,
+    /// Hub name (`"@origin"` for the root) -> names of its children.
+    pub children: BTreeMap<String, Vec<String>>,
+    /// Relay name -> url (for mapping assertions back to servers).
+    pub urls: BTreeMap<String, String>,
+    origin_url: String,
+}
+
+/// Reserved hub key for the origin in [`TreePlan::children`].
+pub const ORIGIN_HUB: &str = "@origin";
+
+/// Extra lower-depth fallbacks handed to each relay besides its chosen
+/// parent and the origin.
+const EXTRA_FALLBACKS: usize = 2;
+
+/// Plan the relay tree for `peers` under a per-node fan-out bound.
+/// Deterministic in its inputs: same view, same tree (the view itself is
+/// what churn changes). `fanout` is clamped to >= 1.
+pub fn plan_tree(origin_url: &str, peers: &[RelayPeer], fanout: usize) -> TreePlan {
+    let fanout = fanout.max(1);
+    let mut ranked: Vec<&RelayPeer> = peers.iter().collect();
+    ranked.sort_by(|a, b| {
+        b.score().total_cmp(&a.score()).then_with(|| a.name.cmp(&b.name))
+    });
+
+    let mut plan = TreePlan { origin_url: origin_url.to_string(), ..TreePlan::default() };
+    // Placed nodes eligible as parents: (name, url, depth, score, used).
+    struct Placed {
+        name: String,
+        url: String,
+        depth: u32,
+        score: f64,
+        used: usize,
+    }
+    let mut placed: Vec<Placed> = vec![Placed {
+        name: ORIGIN_HUB.to_string(),
+        url: origin_url.to_string(),
+        depth: 0,
+        score: f64::INFINITY,
+        used: 0,
+    }];
+
+    for peer in ranked {
+        // Shallowest spare-capacity node wins; ties prefer the fatter
+        // hub, then name order. Total capacity always exceeds placed
+        // count (every node adds `fanout` slots), so a slot exists.
+        let parent_idx = (0..placed.len())
+            .filter(|&i| placed[i].used < fanout)
+            .min_by(|&i, &j| {
+                placed[i]
+                    .depth
+                    .cmp(&placed[j].depth)
+                    .then(placed[j].score.total_cmp(&placed[i].score))
+                    .then(placed[i].name.cmp(&placed[j].name))
+            })
+            .expect("capacity invariant: some placed node has a spare slot");
+        let depth = placed[parent_idx].depth + 1;
+        let parent_url = placed[parent_idx].url.clone();
+        let parent_name = placed[parent_idx].name.clone();
+        placed[parent_idx].used += 1;
+
+        // Candidate list: chosen parent, then the best other strictly-
+        // shallower nodes, then the origin as the fallback of last
+        // resort. Strictly-smaller depth everywhere keeps the
+        // REPARENT_AFTER rotation loop-free no matter which entry a
+        // relay lands on.
+        let mut candidates = vec![parent_url.clone()];
+        let mut extras: Vec<&Placed> = placed
+            .iter()
+            .filter(|p| p.depth < depth && p.url != parent_url && p.url != origin_url)
+            .collect();
+        extras.sort_by(|a, b| {
+            a.depth.cmp(&b.depth).then(b.score.total_cmp(&a.score)).then(a.name.cmp(&b.name))
+        });
+        for e in extras.into_iter().take(EXTRA_FALLBACKS) {
+            candidates.push(e.url.clone());
+        }
+        if !candidates.contains(&origin_url.to_string()) {
+            candidates.push(origin_url.to_string());
+        }
+
+        plan.depth.insert(peer.name.clone(), depth);
+        plan.parents.insert(peer.name.clone(), candidates);
+        plan.children.entry(parent_name).or_default().push(peer.name.clone());
+        plan.urls.insert(peer.name.clone(), peer.url.clone());
+        placed.push(Placed {
+            name: peer.name.clone(),
+            url: peer.url.clone(),
+            depth,
+            score: peer.score(),
+            used: 0,
+        });
+    }
+    plan
+}
+
+/// Re-form the tree after churn: plan over the survivors only. Callers
+/// push the fresh candidate lists via `Relay::set_parents`.
+pub fn reform(origin_url: &str, peers: &[RelayPeer], dead: &[String], fanout: usize) -> TreePlan {
+    let survivors: Vec<RelayPeer> =
+        peers.iter().filter(|p| !dead.contains(&p.name)).cloned().collect();
+    plan_tree(origin_url, &survivors, fanout)
+}
+
+impl TreePlan {
+    /// Children count of a hub (by relay name, or [`ORIGIN_HUB`]).
+    pub fn children_of(&self, hub: &str) -> usize {
+        self.children.get(hub).map_or(0, Vec::len)
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.depth.values().copied().max().unwrap_or(0)
+    }
+
+    /// Every parent candidate of every relay sits at strictly smaller
+    /// depth (origin = depth 0) — the by-construction loop-freedom
+    /// invariant, checkable over the whole plan.
+    pub fn is_loop_free(&self) -> bool {
+        let depth_of_url = |url: &str| -> Option<u32> {
+            if url == self.origin_url {
+                return Some(0);
+            }
+            self.urls.iter().find(|(_, u)| u.as_str() == url).and_then(|(n, _)| {
+                self.depth.get(n).copied()
+            })
+        };
+        self.parents.iter().all(|(name, candidates)| {
+            let d = self.depth.get(name).copied().unwrap_or(u32::MAX);
+            !candidates.is_empty()
+                && candidates.iter().all(|c| depth_of_url(c).is_some_and(|pd| pd < d))
+        })
+    }
+
+    /// Every planned relay reaches the origin along its preferred
+    /// parents (full connectivity).
+    pub fn all_reach_origin(&self) -> bool {
+        self.parents.iter().all(|(name, candidates)| {
+            let mut hops = 0u32;
+            let mut at = candidates.first().cloned().unwrap_or_default();
+            while at != self.origin_url {
+                hops += 1;
+                if hops > self.parents.len() as u32 + 1 {
+                    return false;
+                }
+                let Some((n, _)) = self.urls.iter().find(|(_, u)| **u == at) else {
+                    return false;
+                };
+                let Some(next) = self.parents.get(n).and_then(|c| c.first()).cloned() else {
+                    return false;
+                };
+                at = next;
+            }
+            self.depth.contains_key(name)
+        })
+    }
+
+    /// Fan-out bound holds for every hub (origin included).
+    pub fn respects_fanout(&self, fanout: usize) -> bool {
+        self.children.values().all(|c| c.len() <= fanout.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn view(specs: &[(&str, u64, u64)]) -> Vec<RelayPeer> {
+        specs
+            .iter()
+            .map(|(name, up, lat)| RelayPeer {
+                name: name.to_string(),
+                url: format!("http://{name}"),
+                uplink_mbps: *up,
+                pull_latency_ms: *lat,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fat_low_latency_relays_sit_next_to_the_origin() {
+        let peers = view(&[
+            ("thin", 50, 0),
+            ("fat-far", 900, 80),
+            ("fat-near", 900, 2),
+            ("mid", 300, 5),
+        ]);
+        let plan = plan_tree("http://origin", &peers, 2);
+        assert_eq!(plan.depth["fat-near"], 1);
+        assert!(plan.depth["thin"] >= 2, "thin uplink must not displace hubs");
+        assert!(plan.is_loop_free() && plan.all_reach_origin());
+        assert!(plan.respects_fanout(2));
+        // Deterministic: identical views produce identical plans.
+        let again = plan_tree("http://origin", &peers, 2);
+        assert_eq!(plan.parents, again.parents);
+        assert_eq!(plan.depth, again.depth);
+    }
+
+    #[test]
+    fn starved_uplink_relay_is_never_a_hub() {
+        // One starved relay among six healthy ones: it must end up a
+        // leaf — zero children — and the deepest rank it can hold.
+        let peers = view(&[
+            ("a", 800, 1),
+            ("b", 700, 1),
+            ("c", 600, 1),
+            ("d", 500, 1),
+            ("e", 400, 1),
+            ("starved", 1, 1),
+        ]);
+        for fanout in 1..=3usize {
+            let plan = plan_tree("http://origin", &peers, fanout);
+            assert_eq!(
+                plan.children_of("starved"),
+                0,
+                "fanout {fanout}: starved relay was made a hub: {:?}",
+                plan.children
+            );
+            assert_eq!(plan.depth["starved"], plan.max_depth());
+            assert!(plan.is_loop_free() && plan.all_reach_origin());
+        }
+        // Same for a fat-but-unreachable relay (latency swamps uplink).
+        let peers = view(&[("a", 500, 1), ("b", 500, 1), ("c", 500, 1), ("laggy", 900, 5000)]);
+        let plan = plan_tree("http://origin", &peers, 2);
+        assert_eq!(plan.children_of("laggy"), 0);
+    }
+
+    #[test]
+    fn planned_trees_are_loop_free_and_connected() {
+        // Property: over arbitrary seeded membership views (size, uplinks,
+        // latencies, fanout), the plan is loop-free, fully connected,
+        // fan-out bounded, and every candidate list ends at the origin.
+        prop::check(
+            "tree_invariants",
+            60,
+            |rng, size| {
+                let n = 1 + rng.usize(size.max(1) + 30);
+                let peers: Vec<RelayPeer> = (0..n)
+                    .map(|i| RelayPeer {
+                        name: format!("r{i:03}"),
+                        url: format!("http://r{i:03}"),
+                        uplink_mbps: 1 + rng.range(0, 1000),
+                        pull_latency_ms: rng.range(0, 300),
+                    })
+                    .collect();
+                (peers, 1 + rng.usize(4))
+            },
+            |(peers, fanout)| {
+                let plan = plan_tree("http://origin", peers, *fanout);
+                prop::ensure(plan.depth.len() == peers.len(), "every relay placed")?;
+                prop::ensure(plan.is_loop_free(), "loop-free")?;
+                prop::ensure(plan.all_reach_origin(), "fully connected")?;
+                prop::ensure(plan.respects_fanout(*fanout), "fan-out bound")?;
+                for c in plan.parents.values() {
+                    prop::ensure(
+                        c.last().map(String::as_str) == Some("http://origin"),
+                        "origin is the fallback of last resort",
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn reform_after_kill_reconnects_every_survivor() {
+        // Property: kill an arbitrary subset mid-epoch; the re-planned
+        // tree places every survivor and still satisfies the invariants —
+        // the convergence half of the re-parenting story.
+        prop::check(
+            "tree_reform",
+            60,
+            |rng, size| {
+                let n = 2 + rng.usize(size.max(1) + 20);
+                let peers: Vec<RelayPeer> = (0..n)
+                    .map(|i| RelayPeer {
+                        name: format!("r{i:03}"),
+                        url: format!("http://r{i:03}"),
+                        uplink_mbps: 1 + rng.range(0, 1000),
+                        pull_latency_ms: rng.range(0, 100),
+                    })
+                    .collect();
+                let dead: Vec<String> = (0..n)
+                    .filter(|_| rng.bool(0.3))
+                    .map(|i| format!("r{i:03}"))
+                    .collect();
+                (peers, dead, 1 + rng.usize(3))
+            },
+            |(peers, dead, fanout)| {
+                let plan = reform("http://origin", peers, dead, *fanout);
+                prop::ensure(
+                    plan.depth.len() == peers.len() - dead.len(),
+                    "every survivor placed",
+                )?;
+                for d in dead {
+                    prop::ensure(!plan.depth.contains_key(d), "dead relay planned back in")?;
+                    prop::ensure(
+                        !plan.parents.values().any(|c| c.contains(&format!("http://{d}"))),
+                        "dead relay left in a candidate list",
+                    )?;
+                }
+                prop::ensure(plan.is_loop_free(), "loop-free after reform")?;
+                prop::ensure(plan.all_reach_origin(), "connected after reform")?;
+                prop::ensure(plan.respects_fanout(*fanout), "fan-out after reform")?;
+                Ok(())
+            },
+        );
+    }
+}

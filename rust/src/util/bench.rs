@@ -198,14 +198,16 @@ pub struct BenchFigure {
 /// `*_per_s`/`*_per_sec` suffix is a throughput (rollouts_per_s_*), not a
 /// cost ratio, despite carrying the `_per_` marker. Serving latencies
 /// (`*_ms` wall milliseconds and the `*_p50`/`*_p99` percentile figures
-/// in `BENCH_serving.json`) shrink when serving gets better.
+/// in `BENCH_serving.json`) shrink when serving gets better, and so do
+/// byte counts (`origin_egress_bytes` in `BENCH_shardcast.json` — egress
+/// the swarm pays for).
 fn lower_is_better(key: &str) -> bool {
     if key.contains("_per_s") {
         return false;
     }
     [
         "_waste", "_fraction", "_frac", "_calls", "_overhead", "_ns", "_steps", "_prompts",
-        "_per_", "_ms", "_p50", "_p99",
+        "_per_", "_ms", "_p50", "_p99", "_bytes",
     ]
     .iter()
     .any(|marker| key.contains(marker))
@@ -396,6 +398,20 @@ mod tests {
             assert!(lower_is_better(key), "{key}");
         }
         for key in ["served_tokens_per_s", "rl_goodput_retention", "queries_served"] {
+            assert!(!lower_is_better(key), "{key}");
+        }
+    }
+
+    #[test]
+    fn shardcast_figures_have_directions() {
+        // BENCH_shardcast.json figures: the origin's egress and the tree's
+        // re-formation latency shrink when the broadcast layer improves;
+        // the delta savings fraction and delivery rate grow. `bytes_per_s`
+        // style throughputs must survive the new `_bytes` marker.
+        for key in ["origin_egress_bytes", "reform_latency_steps"] {
+            assert!(lower_is_better(key), "{key}");
+        }
+        for key in ["delta_egress_savings", "delivery_rate", "shard_bytes_per_s"] {
             assert!(!lower_is_better(key), "{key}");
         }
     }

@@ -14,6 +14,17 @@ pub mod retry;
 pub mod rng;
 pub mod wire;
 
+/// Injectable millisecond time source. Production wiring passes
+/// [`now_ms`]; tests and the churn harnesses pass a counter they advance
+/// by hand, so TTL expiry (discovery records, gossip peer records) is a
+/// deterministic function of the schedule instead of a sleep race.
+pub type Clock = std::sync::Arc<dyn Fn() -> u64 + Send + Sync>;
+
+/// The default [`Clock`]: monotonic process time.
+pub fn real_clock() -> Clock {
+    std::sync::Arc::new(now_ms)
+}
+
 /// Monotonic milliseconds since process start (cheap wall-clock for logs).
 pub fn now_ms() -> u64 {
     use std::sync::OnceLock;

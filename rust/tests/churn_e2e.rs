@@ -6,7 +6,7 @@
 
 use std::time::Duration;
 
-use intellect2::coordinator::{run_churn, ChurnConfig};
+use intellect2::coordinator::{run_churn, run_tree_churn, ChurnConfig, TreeChurnConfig};
 use intellect2::http::FaultSpec;
 
 #[test]
@@ -54,6 +54,35 @@ fn churn_torture_swarm_completes() {
     // quota above could not have completed).
     assert_eq!(report.audits_full + report.audits_skipped, report.tasks_completed, "{report:?}");
     assert!(report.audits_skipped > 0, "rate 0.25 never skipped an audit: {report:?}");
+}
+
+#[test]
+fn tree_churn_survives_relay_kill_and_partition() {
+    // The gossip-formed SHARDCAST tree, delta + q8 on, with a hub relay
+    // killed and a survivor partitioned from its new parent mid-epoch:
+    // every live worker still assembles a checksum-valid checkpoint on
+    // every step, membership converges by gossip alone (zero central
+    // list-endpoint calls), and nobody honest gets slashed.
+    let cfg = TreeChurnConfig { steps: 4, ..TreeChurnConfig::default() };
+    let report = run_tree_churn(&cfg).unwrap();
+
+    assert_eq!(report.steps_completed, cfg.steps, "{report:?}");
+    assert_eq!(report.delivery_rate, 1.0, "{report:?}");
+
+    // The fault schedule actually fired, and the tree routed around it.
+    assert_eq!(report.relays_killed, 1, "{report:?}");
+    assert_eq!(report.partitions_cut, 1, "{report:?}");
+    assert!(report.partition_refusals > 0, "{report:?}");
+    assert!(report.reparent_events >= 1, "{report:?}");
+
+    // Membership ran on gossip, not the central discovery list.
+    assert_eq!(report.list_calls, 0, "{report:?}");
+    assert!(report.invites_via_gossip > 0, "{report:?}");
+    assert!(report.gossip_converged, "{report:?}");
+
+    // The encoded wire actually carried deltas, and nobody honest paid.
+    assert!(report.delta_shards > 0, "{report:?}");
+    assert_eq!(report.honest_slashed, 0, "{report:?}");
 }
 
 #[test]
